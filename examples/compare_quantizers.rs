@@ -1,0 +1,75 @@
+//! Compare every shallow quantizer family on both synthetic descriptor
+//! families — a self-contained miniature of the paper's Table 2 that
+//! trains in-process (no cache, no artifacts) so it always runs.
+//!
+//! ```bash
+//! cargo run --release --example compare_quantizers
+//! ```
+
+use std::time::Instant;
+
+use unq::config::SearchConfig;
+use unq::data::{synthetic::Generator, Family};
+use unq::eval::{recall, Recall};
+use unq::gt;
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq, Quantizer};
+
+fn eval_one(q: &dyn Quantizer, base: &unq::data::Dataset,
+            queries: &unq::data::Dataset, truth: &gt::GroundTruth) -> Recall {
+    let index = CompressedIndex::build(q, base);
+    let engine = SearchEngine::new(q, &index, SearchConfig {
+        rerank_l: 200,
+        k: 100,
+        no_rerank: !q.supports_rerank(),
+        exhaustive_rerank: false,
+    });
+    let results: Vec<Vec<u32>> = (0..queries.len())
+        .map(|qi| engine.search(queries.row(qi)))
+        .collect();
+    recall(&results, truth)
+}
+
+fn main() -> unq::Result<()> {
+    let bytes = 8usize;
+    for family in [Family::SiftLike, Family::DeepLike] {
+        let gen = Generator::new(family, 7);
+        let train = gen.generate(0, 8_000);
+        let base = gen.generate(1, 20_000);
+        let queries = gen.generate(2, 200);
+        let truth = gt::brute_force(&base, &queries, 1);
+        println!("\n=== {family:?} (dim {}, {} base, {} B/vec) ===",
+                 base.dim, base.len(), bytes);
+        println!("{:<20} {:>6} {:>7} {:>7} {:>10}",
+                 "method", "R@1", "R@10", "R@100", "train(s)");
+
+        let mut report = |name: &str, q: &dyn Quantizer, secs: f64| {
+            let r = eval_one(q, &base, &queries, &truth);
+            println!("{:<20} {:>6.1} {:>7.1} {:>7.1} {:>10.1}",
+                     name, r.at1, r.at10, r.at100, secs);
+        };
+
+        let t = Instant::now();
+        let pq = Pq::train(&train.data, train.dim, bytes, 256, 0, 12);
+        report("PQ", &pq, t.elapsed().as_secs_f64());
+
+        let t = Instant::now();
+        let opq = Opq::train(&train.data, train.dim, bytes, 256, 0, 3, 10);
+        report("OPQ", &opq, t.elapsed().as_secs_f64());
+
+        let t = Instant::now();
+        let rvq = Additive::train_rvq(&train.data, train.dim, bytes - 1, 256,
+                                      0, 10, "RVQ");
+        report("RVQ", &rvq, t.elapsed().as_secs_f64());
+
+        let t = Instant::now();
+        let lsq = lsq::train_lsq(&train.data, train.dim, bytes - 1, 256,
+                                 &lsq::LsqConfig::default());
+        report("LSQ", &lsq, t.elapsed().as_secs_f64());
+
+        let t = Instant::now();
+        let lat = lattice::CatalystLattice::train(&train.data, train.dim, bytes);
+        report("Catalyst+Lattice", &lat, t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

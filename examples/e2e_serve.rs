@@ -1,0 +1,45 @@
+//! End-to-end driver (the DESIGN.md validation run): boots the FULL
+//! three-layer stack and serves batched requests, proving the layers
+//! compose:
+//!
+//!   L1/L2 — the trained UNQ model's Pallas-kernel graphs, AOT-lowered to
+//!           HLO text by `make artifacts`;
+//!   runtime — PJRT CPU client executing those graphs from Rust;
+//!   L3 — the coordinator: dynamic batcher, sharded ADC scan, decoder
+//!        rerank, metrics.
+//!
+//! Loads the `sift1m_8b` bundle (or the dataset named by UNQ_DATASET),
+//! encodes the base split through the AOT encoder, serves 2 000
+//! closed-loop queries from 4 clients, and reports throughput, latency
+//! and Recall@10 — the numbers recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serve
+//! ```
+
+use unq::config::{AppConfig, QuantizerKind};
+use unq::coordinator::demo::run_serve;
+
+fn main() -> unq::Result<()> {
+    let mut cfg = AppConfig::default().apply_env();
+    cfg.dataset = std::env::var("UNQ_DATASET").unwrap_or_else(|_| "sift1m".into());
+    cfg.quantizer = QuantizerKind::Unq;
+    cfg.bytes_per_vector = 8;
+    cfg.serve.max_batch = 16;
+    cfg.serve.max_delay_us = 2000;
+    cfg.serve.shards = 2;
+
+    let queries: usize = std::env::var("UNQ_E2E_QUERIES")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(2000);
+
+    println!("=== end-to-end serving: UNQ ({} B) on {} ===",
+             cfg.bytes_per_vector, cfg.dataset);
+    let report = run_serve(&cfg, queries)?;
+
+    // Sanity gates for the e2e claim: real answers at real throughput.
+    assert!(report.recall_at10 > 20.0,
+            "e2e recall collapsed: {}", report.recall_at10);
+    assert!(report.qps > 1.0, "no throughput: {}", report.qps);
+    println!("e2e OK — all three layers composed");
+    Ok(())
+}

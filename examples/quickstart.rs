@@ -1,0 +1,47 @@
+//! Quickstart: compress a synthetic corpus with a product quantizer and
+//! run compressed-domain search — no AOT artifacts needed.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use unq::config::SearchConfig;
+use unq::data::{synthetic::Generator, Family};
+use unq::gt;
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::quant::{pq::Pq, Quantizer};
+
+fn main() -> unq::Result<()> {
+    // 1. Data: a SIFT-like synthetic corpus (see DESIGN.md §3).
+    let gen = Generator::new(Family::SiftLike, 42);
+    let train = gen.generate(0, 10_000);
+    let base = gen.generate(1, 50_000);
+    let queries = gen.generate(2, 100);
+    println!("corpus: {} train / {} base / {} queries, dim {}",
+             train.len(), base.len(), queries.len(), base.dim);
+
+    // 2. Train an 8-byte product quantizer (K = 256 codewords/codebook).
+    let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 15);
+    println!("trained {} → {} bytes/vector", pq.name(), pq.code_bytes());
+
+    // 3. Compress the base set.
+    let index = CompressedIndex::build(&pq, &base);
+    println!("index: {} vectors, {} KB of codes",
+             index.n, index.storage_bytes() / 1024);
+
+    // 4. Two-stage search (ADC scan → decoder rerank), paper §3.3.
+    let engine = SearchEngine::new(&pq, &index, SearchConfig {
+        rerank_l: 500, k: 10, no_rerank: false, exhaustive_rerank: false,
+    });
+    let truth = gt::brute_force(&base, &queries, 10);
+    let mut hits = 0;
+    for qi in 0..queries.len() {
+        let result = engine.search(queries.row(qi));
+        if result.contains(&(truth.nn(qi) as u32)) {
+            hits += 1;
+        }
+    }
+    println!("Recall@10 over {} queries: {:.1}%",
+             queries.len(), 100.0 * hits as f32 / queries.len() as f32);
+    Ok(())
+}

@@ -1,0 +1,252 @@
+"""AOT export — train UNQ models and lower the inference graphs to HLO text.
+
+This is the single entry point of the build-time Python path
+(``make artifacts``).  For each named configuration it:
+
+1. reads the canonical training split (fvecs written by ``unq gen-data``),
+2. trains the UNQ model (``compile.train``),
+3. folds BatchNorm and bakes the trained weights into three fixed-shape
+   inference graphs — ``encode``, ``query_lut``, ``decode`` — each calling
+   the Pallas kernels of :mod:`compile.kernels`,
+4. lowers each graph to **HLO text** and writes
+   ``artifacts/<name>/{encode,lut,decode}.hlo.txt`` + ``manifest.json``.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Python never runs after this step: the Rust runtime loads the HLO text via
+``HloModuleProto::from_text_file`` and serves everything natively.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .vecs_io import read_fvecs
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+DATA_DIR = os.path.join(REPO_ROOT, "data")
+ARTIFACT_DIR = os.path.join(REPO_ROOT, "artifacts")
+
+# Scaled-down reproduction of the paper's training protocol (DESIGN.md §3):
+# hidden 256 (paper: 1024), dc 128 (paper: 256), ~2500 steps on a 20k train
+# subsample (paper: 500k) — knobs recorded in every manifest.
+TRAIN_SUBSET = int(os.environ.get("UNQ_TRAIN_SUBSET", "20000"))
+TRAIN_STEPS = int(os.environ.get("UNQ_TRAIN_STEPS", "2500"))
+ABLATION_STEPS = int(os.environ.get("UNQ_ABLATION_STEPS", "2000"))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExportConfig:
+    """One artifact bundle: a dataset + byte budget + training variant."""
+
+    name: str
+    dataset: str            # dataset directory under data/ (train.fvecs)
+    dim: int
+    m: int                  # bytes/vector at K=256
+    steps: int = TRAIN_STEPS
+    variant: str = "unq"    # Table 5 ablation variant name
+    hidden: int = 256
+    dc: int = 128
+
+    def model_config(self) -> M.ModelConfig:
+        return M.ModelConfig(dim=self.dim, m=self.m, k=256, dc=self.dc,
+                             hidden=self.hidden)
+
+    def train_config(self) -> T.TrainConfig:
+        v = self.variant
+        return T.TrainConfig(
+            steps=self.steps,
+            use_triplet=v not in ("no_triplet",),
+            recon_weight=0.0 if v == "triplet_only" else 1.0,
+            alpha=1.0 if v == "triplet_only" else 0.01,
+            use_hard=v != "wo_hard",
+            use_gumbel=v != "wo_gumbel",
+            use_cv_reg=v != "no_reg",
+            seed=hash(self.name) % (2 ** 31),
+        )
+
+
+MAIN_CONFIGS = [
+    ExportConfig("deep1m_8b", "deep1m", 96, 8),
+    ExportConfig("deep1m_16b", "deep1m", 96, 16),
+    ExportConfig("sift1m_8b", "sift1m", 128, 8),
+    ExportConfig("sift1m_16b", "sift1m", 128, 16),
+]
+
+# Table 5 ablation variants (BigANN1M ≈ sift1m-sim, 8 bytes). "unq",
+# "exhaustive rerank" and "no rerank" reuse the main sift1m_8b model —
+# they differ only in the Rust-side search procedure.
+ABLATION_CONFIGS = [
+    ExportConfig("abl_no_triplet", "sift1m", 128, 8, ABLATION_STEPS, "no_triplet"),
+    ExportConfig("abl_triplet_only", "sift1m", 128, 8, ABLATION_STEPS, "triplet_only"),
+    ExportConfig("abl_wo_hard", "sift1m", 128, 8, ABLATION_STEPS, "wo_hard"),
+    ExportConfig("abl_wo_gumbel", "sift1m", 128, 8, ABLATION_STEPS, "wo_gumbel"),
+    ExportConfig("abl_no_reg", "sift1m", 128, 8, ABLATION_STEPS, "no_reg"),
+]
+
+ALL_CONFIGS = {c.name: c for c in MAIN_CONFIGS + ABLATION_CONFIGS}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the trained weights are baked into the
+    # graph as dense literals; the default elides them as `constant({...})`
+    # which would NOT round-trip through the text parser.
+    return comp.as_hlo_text(True)
+
+
+def export_graph(fn, example_args, path: str) -> int:
+    """Lower ``fn`` at the example shapes and write HLO text; returns size."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def load_train_split(cfg: ExportConfig, allow_synth: bool) -> np.ndarray:
+    path = os.path.join(DATA_DIR, cfg.dataset, "train.fvecs")
+    if os.path.exists(path):
+        data = read_fvecs(path, limit=TRAIN_SUBSET)
+        assert data.shape[1] == cfg.dim, (
+            f"{path}: dim {data.shape[1]} != config dim {cfg.dim}")
+        return data
+    if not allow_synth:
+        sys.exit(f"error: missing canonical train split {path}; run "
+                 f"`make datasets` first (or pass --allow-synth for a "
+                 f"self-generated distributional stand-in)")
+    # Stand-in generator, used only for smoke runs. Mirrors the Rust
+    # generators' *family* (deep-like: normalized random-ReLU-net GMM;
+    # sift-like: non-negative heavy-tailed histograms).
+    rng = np.random.default_rng(0xC0FFEE)
+    n = TRAIN_SUBSET
+    if cfg.dataset.startswith("deep"):
+        lat = rng.normal(size=(n, 32)).astype(np.float32)
+        centers = rng.normal(size=(64, 32)).astype(np.float32) * 1.5
+        lat += centers[rng.integers(0, 64, n)]
+        w1 = rng.normal(size=(32, 128)).astype(np.float32) / np.sqrt(32)
+        w2 = rng.normal(size=(128, cfg.dim)).astype(np.float32) / np.sqrt(128)
+        x = np.maximum(lat @ w1, 0) @ w2
+        x /= np.linalg.norm(x, axis=1, keepdims=True) + 1e-9
+        return x.astype(np.float32)
+    scale = rng.gamma(2.0, 1.0, size=(n, cfg.dim // 8)).astype(np.float32)
+    x = rng.exponential(1.0, size=(n, cfg.dim)).astype(np.float32)
+    x *= np.repeat(scale, 8, axis=1)
+    return np.minimum(np.floor(x * 12.0), 218.0).astype(np.float32)
+
+
+def export_config(cfg: ExportConfig, allow_synth: bool, force: bool) -> None:
+    out_dir = os.path.join(ARTIFACT_DIR, cfg.name)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(manifest_path) and not force:
+        print(f"[aot] {cfg.name}: manifest exists, skipping (use --force)")
+        return
+    os.makedirs(out_dir, exist_ok=True)
+
+    mcfg = cfg.model_config()
+    tcfg = cfg.train_config()
+    data = load_train_split(cfg, allow_synth)
+    # Standardize per-dimension for training conditioning; the affine
+    # transform is folded back into the exported graphs, which therefore
+    # accept RAW vectors (critical for sift-like magnitudes ~0..218).
+    mu = data.mean(axis=0)
+    sigma = data.std(axis=0) + 1e-6
+    data_std = (data - mu) / sigma
+    print(f"[aot] {cfg.name}: training on {data.shape[0]}×{data.shape[1]} "
+          f"(M={cfg.m}, variant={cfg.variant}, steps={tcfg.steps})")
+    t0 = time.time()
+    params, bn_state, history = T.train_unq(data_std, mcfg, tcfg)
+    train_secs = time.time() - t0
+
+    files = {}
+    f32 = jnp.float32
+    enc_spec = jax.ShapeDtypeStruct((mcfg.encode_batch, cfg.dim), f32)
+    lut_spec = jax.ShapeDtypeStruct((mcfg.lut_batch, cfg.dim), f32)
+    dec_spec = jax.ShapeDtypeStruct((mcfg.decode_batch, cfg.m), jnp.int32)
+    for gname, fn, spec in [
+        ("encode", M.export_encode_fn(params, bn_state, mcfg, mu, sigma), enc_spec),
+        ("lut", M.export_lut_fn(params, bn_state, mcfg, mu, sigma), lut_spec),
+        ("decode", M.export_decode_fn(params, bn_state, mcfg, mu, sigma), dec_spec),
+    ]:
+        path = os.path.join(out_dir, f"{gname}.hlo.txt")
+        size = export_graph(fn, (spec,), path)
+        files[gname] = os.path.basename(path)
+        print(f"[aot]   wrote {path} ({size/1e6:.1f} MB)")
+
+    n_params = mcfg.param_count(params)
+    manifest = {
+        "name": cfg.name,
+        "dataset": cfg.dataset,
+        "variant": cfg.variant,
+        "dim": cfg.dim,
+        "m": cfg.m,
+        "k": mcfg.k,
+        "dc": cfg.dc,
+        "hidden": cfg.hidden,
+        "bytes_per_vector": mcfg.bytes_per_vector,
+        "encode_batch": mcfg.encode_batch,
+        "lut_batch": mcfg.lut_batch,
+        "decode_batch": mcfg.decode_batch,
+        "files": files,
+        "param_count": n_params,
+        "param_bytes": n_params * 4,
+        "train": {
+            "subset": int(data.shape[0]),
+            "steps": tcfg.steps,
+            "batch": tcfg.batch,
+            "alpha": tcfg.alpha,
+            "seconds": round(train_secs, 1),
+            "final_loss": history[-1]["loss"] if history else None,
+            "final_perplexity": history[-1]["perplexity"] if history else None,
+        },
+        "history": history,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] {cfg.name}: manifest written "
+          f"({n_params} params, {n_params * 4 / 1e6:.1f} MB fp32)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs", nargs="*", default=None,
+                    help="config names (default: the 4 main configs)")
+    ap.add_argument("--ablation", action="store_true",
+                    help="export the Table-5 ablation bundle instead")
+    ap.add_argument("--allow-synth", action="store_true",
+                    help="permit the in-python stand-in train split")
+    ap.add_argument("--force", action="store_true",
+                    help="re-train even if the manifest already exists")
+    args = ap.parse_args()
+
+    if args.configs:
+        configs = [ALL_CONFIGS[n] for n in args.configs]
+    elif args.ablation:
+        configs = ABLATION_CONFIGS
+    else:
+        configs = MAIN_CONFIGS
+    for cfg in configs:
+        export_config(cfg, args.allow_synth, args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""L1 — Pallas kernels for the UNQ compute hot spots.
+
+All kernels run under ``interpret=True`` on this CPU testbed (real-TPU
+Mosaic lowering cannot execute on the CPU PJRT plugin); each has a pure-jnp
+oracle in :mod:`compile.kernels.ref` and a hypothesis-swept pytest pinning
+the two together.
+"""
+
+from .encoder_block import linear_relu, mlp
+from .heads import assign, heads_logits
+from .scan import adc_scan
+from . import ref
+
+__all__ = [
+    "linear_relu",
+    "mlp",
+    "assign",
+    "heads_logits",
+    "adc_scan",
+    "ref",
+]

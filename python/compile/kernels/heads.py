@@ -1,0 +1,103 @@
+"""Pallas kernels: per-codebook head logits, hard assignment, and LUT build.
+
+These kernels implement the learned-space geometry of UNQ §3.2–3.3:
+
+* ``heads_logits``  — ``(B, M, dc) × (M, K, dc) → (B, M, K)`` dot products
+  ``⟨net(x)_m, c_mk⟩``.  Used both to *encode* database vectors (argmax over
+  K, eq. 4) and to build the per-query lookup table for the compressed-
+  domain distance ``d2`` (eq. 8).
+* ``assign``        — fused logits + argmax → ``(B, M)`` int32 codes.
+
+TPU mapping: the grid is ``(B/block_b, M)`` — one program per (batch tile,
+codebook).  Each program performs a ``(block_b, dc) @ (dc, K)`` MXU matmul;
+for the assignment variant the argmax reduction over K runs on the VPU in
+the same program, so codes never round-trip through HBM as full logits.
+VMEM per program: ``block_b*dc + dc*K + block_b*K`` f32 — for the default
+``block_b=128, dc=256, K=256`` that is ~0.4 MB.
+
+Interpret-mode only on this CPU testbed; oracles: ``ref_heads_logits``,
+``ref_assign``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .encoder_block import _pick_block
+
+
+def _logits_kernel(h_ref, c_ref, o_ref):
+    """One (batch-tile, codebook) program: ``o = h @ c^T``."""
+    h = h_ref[...].astype(jnp.float32)            # (bb, 1, dc)
+    c = c_ref[...].astype(jnp.float32)            # (1, K, dc)
+    o_ref[...] = jnp.einsum(
+        "bod,okd->bok", h, c, preferred_element_type=jnp.float32)
+
+
+def _assign_kernel(h_ref, c_ref, o_ref):
+    """Fused logits + argmax over K: ``o = argmax_k h @ c^T``."""
+    h = h_ref[...].astype(jnp.float32)            # (bb, 1, dc)
+    c = c_ref[...].astype(jnp.float32)            # (1, K, dc)
+    logits = jnp.einsum(
+        "bod,okd->bok", h, c, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def heads_logits(h: jnp.ndarray, codebooks: jnp.ndarray,
+                 block_b: int = 128) -> jnp.ndarray:
+    """Per-codebook dot products ``⟨h[b,m], c[m,k]⟩`` via Pallas.
+
+    Args:
+      h: ``(B, M, dc)`` encoder head outputs.
+      codebooks: ``(M, K, dc)`` codewords.
+    Returns:
+      ``(B, M, K)`` f32 logits — the per-query LUT when ``h = net(q)``.
+    """
+    bsz, m, dc = h.shape
+    m2, k, dc2 = codebooks.shape
+    assert m == m2 and dc == dc2
+    bb = _pick_block(bsz, block_b)
+    return pl.pallas_call(
+        _logits_kernel,
+        grid=(bsz // bb, m),
+        in_specs=[
+            pl.BlockSpec((bb, 1, dc), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, dc), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1, k), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m, k), jnp.float32),
+        interpret=True,
+    )(h, codebooks)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def assign(h: jnp.ndarray, codebooks: jnp.ndarray,
+           block_b: int = 128) -> jnp.ndarray:
+    """Hard codeword assignment (eq. 4) via a fused Pallas kernel.
+
+    Args:
+      h: ``(B, M, dc)`` encoder head outputs.
+      codebooks: ``(M, K, dc)`` codewords.
+    Returns:
+      ``(B, M)`` int32 codes in ``[0, K)``.
+    """
+    bsz, m, dc = h.shape
+    m2, k, dc2 = codebooks.shape
+    assert m == m2 and dc == dc2
+    bb = _pick_block(bsz, block_b)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(bsz // bb, m),
+        in_specs=[
+            pl.BlockSpec((bb, 1, dc), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, k, dc), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), jnp.int32),
+        interpret=True,
+    )(h, codebooks)

@@ -1,0 +1,85 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact functional twin here,
+written with plain ``jax.numpy`` ops only.  The pytest suite asserts
+``assert_allclose(kernel(...), ref(...))`` across a hypothesis-driven sweep
+of shapes and dtypes; these functions are the single source of truth for
+kernel semantics.
+
+They are also reused by the L2 model (``compile.model``) for the *training*
+graph, where interpret-mode Pallas would only slow things down: the exported
+inference graphs call the Pallas kernels, training calls the refs, and the
+test suite pins the two together.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_linear_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                    relu: bool = True) -> jnp.ndarray:
+    """Fused ``relu(x @ w + b)`` (the BN scale/shift is folded into w, b).
+
+    Args:
+      x: ``(B, D_in)`` activations.
+      w: ``(D_in, D_out)`` folded weight.
+      b: ``(D_out,)`` folded bias.
+      relu: apply the ReLU nonlinearity (False for the final head layer).
+    Returns:
+      ``(B, D_out)`` activations in f32.
+    """
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def ref_heads_logits(h: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Per-codebook dot products: the LUT / assignment scores.
+
+    Args:
+      h: ``(B, M, dc)`` encoder head outputs (one ``dc``-dim vector per
+        codebook).
+      codebooks: ``(M, K, dc)`` learned codewords.
+    Returns:
+      ``(B, M, K)`` logits ``⟨h[b,m], c[m,k]⟩``.
+    """
+    return jnp.einsum("bmd,mkd->bmk", h.astype(jnp.float32),
+                      codebooks.astype(jnp.float32))
+
+
+def ref_assign(h: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Hard codeword assignment: ``argmax_k ⟨h[b,m], c[m,k]⟩``.
+
+    Returns ``(B, M)`` int32 codes.
+    """
+    return jnp.argmax(ref_heads_logits(h, codebooks), axis=-1).astype(jnp.int32)
+
+
+def ref_adc_scan(codes: jnp.ndarray, lut: jnp.ndarray) -> jnp.ndarray:
+    """Asymmetric-distance scan over compressed codes.
+
+    ``score[n] = sum_m lut[m, codes[n, m]]`` — the compressed-domain
+    (negated) ``d2`` of the paper, eq. (8): larger score = closer.
+
+    Args:
+      codes: ``(N, M)`` int32 codes in ``[0, K)``.
+      lut: ``(M, K)`` per-query lookup table of dot products.
+    Returns:
+      ``(N,)`` f32 scores.
+    """
+    m_idx = jnp.arange(lut.shape[0])[None, :]  # (1, M)
+    return jnp.sum(lut[m_idx, codes], axis=-1).astype(jnp.float32)
+
+
+def ref_gather_codewords(codes: jnp.ndarray,
+                         codebooks: jnp.ndarray) -> jnp.ndarray:
+    """Gather the selected codewords and concatenate per vector.
+
+    This is the decoder's input construction: ``(B, M)`` codes →
+    ``(B, M*dc)`` concatenated codewords (the one-hot × codebook matmul).
+    """
+    b, m = codes.shape
+    _, _, dc = codebooks.shape
+    m_idx = jnp.arange(m)[None, :]
+    gathered = codebooks[m_idx, codes]  # (B, M, dc)
+    return gathered.reshape(b, m * dc).astype(jnp.float32)

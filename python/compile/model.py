@@ -1,0 +1,301 @@
+"""L2 — the UNQ model (paper §3.2–3.3) as a functional JAX program.
+
+The model is a pair of fully-connected networks plus M learned codebooks:
+
+* ``encoder``  x ∈ R^D → Linear→BN→ReLU ×2 → Linear head → (M, dc) — a point
+  in the product of M learned codebook spaces (Figure 1, left→middle).
+* ``codebooks`` C ∈ R^{M×K×dc} with learned per-codebook temperatures τ_m;
+  codeword probabilities follow eq. (2).
+* ``decoder``  concat of the M selected codewords → Linear→BN→ReLU ×2 →
+  Linear → x̃ ∈ R^D (Figure 1, middle→right).
+
+Everything is expressed over explicit parameter pytrees so the training
+step (``compile.train``) is a pure jitted function, and export
+(``compile.aot``) can fold BatchNorm into the linear layers and bake the
+trained weights into the AOT inference graphs.  The inference graphs call
+the Pallas kernels from :mod:`compile.kernels`; training uses the jnp
+oracles (same math, pinned by tests) for CPU speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.encoder_block import mlp as pallas_mlp
+from .kernels.heads import assign as pallas_assign
+from .kernels.heads import heads_logits as pallas_heads_logits
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape/architecture configuration of a UNQ model."""
+
+    dim: int              # D — input descriptor dimensionality
+    m: int                # number of codebooks (bytes per vector at K=256)
+    k: int = 256          # codewords per codebook
+    dc: int = 128         # codeword dimensionality (learned space)
+    hidden: int = 256     # width of the two hidden layers
+    encode_batch: int = 512   # fixed AOT batch for encode()
+    lut_batch: int = 16       # fixed AOT batch for query_lut()
+    decode_batch: int = 512   # fixed AOT batch for decode()
+
+    @property
+    def bytes_per_vector(self) -> int:
+        assert self.k <= 256
+        return self.m
+
+    def param_count(self, params: Dict[str, Any]) -> int:
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _init_linear(key, d_in: int, d_out: int) -> Dict[str, jnp.ndarray]:
+    """He-initialized linear layer."""
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / d_in)
+    return {
+        "w": jax.random.normal(wkey, (d_in, d_out), jnp.float32) * scale,
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def _init_bn(d: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "gamma": jnp.ones((d,), jnp.float32),
+        "beta": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_bn_state(d: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "mean": jnp.zeros((d,), jnp.float32),
+        "var": jnp.ones((d,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ModelConfig,
+                train_sample: jnp.ndarray | None = None):
+    """Initialize (params, bn_state).
+
+    If ``train_sample`` is given, codebooks are seeded from the encoder's
+    initial head outputs on a data sample (k-means++-free variant: random
+    data projections), which markedly speeds up convergence versus pure
+    Gaussian init — the same trick shallow MCQ methods get from k-means.
+    """
+    keys = jax.random.split(key, 8)
+    params = {
+        "enc": [
+            {**_init_linear(keys[0], cfg.dim, cfg.hidden), **_init_bn(cfg.hidden)},
+            {**_init_linear(keys[1], cfg.hidden, cfg.hidden), **_init_bn(cfg.hidden)},
+            _init_linear(keys[2], cfg.hidden, cfg.m * cfg.dc),
+        ],
+        "dec": [
+            {**_init_linear(keys[3], cfg.m * cfg.dc, cfg.hidden), **_init_bn(cfg.hidden)},
+            {**_init_linear(keys[4], cfg.hidden, cfg.hidden), **_init_bn(cfg.hidden)},
+            _init_linear(keys[5], cfg.hidden, cfg.dim),
+        ],
+        "codebooks": jax.random.normal(
+            keys[6], (cfg.m, cfg.k, cfg.dc), jnp.float32) / jnp.sqrt(cfg.dc),
+        # τ_m, parameterized in log space for positivity (paper treats τ as
+        # a regular trainable parameter).
+        "log_tau": jnp.zeros((cfg.m,), jnp.float32),
+    }
+    bn_state = {
+        "enc": [_init_bn_state(cfg.hidden), _init_bn_state(cfg.hidden)],
+        "dec": [_init_bn_state(cfg.hidden), _init_bn_state(cfg.hidden)],
+    }
+    if train_sample is not None:
+        h, _ = encoder_apply(params, bn_state, train_sample, train=False)
+        # Seed each codebook with head outputs of random training points.
+        n = h.shape[0]
+        idx = jax.random.randint(keys[7], (cfg.m, cfg.k), 0, n)
+        seeds = jnp.stack([h[idx[m_], m_, :] for m_ in range(cfg.m)])
+        noise = jax.random.normal(keys[7], seeds.shape, jnp.float32) * 0.05
+        params = {**params, "codebooks": seeds + noise}
+    return params, bn_state
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (training path: jnp refs; export path: Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _bn_apply(layer, state, x, train: bool):
+    """BatchNorm forward; returns (y, new_state)."""
+    if train:
+        mean = jnp.mean(x, axis=0)
+        var = jnp.var(x, axis=0)
+        new_state = {
+            "mean": BN_MOMENTUM * state["mean"] + (1 - BN_MOMENTUM) * mean,
+            "var": BN_MOMENTUM * state["var"] + (1 - BN_MOMENTUM) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + BN_EPS)
+    y = (x - mean) * inv * layer["gamma"] + layer["beta"]
+    return y, new_state
+
+
+def _mlp_apply(layers, states, x, train: bool):
+    """Linear→BN→ReLU ×(len-1) → Linear. Returns (y, new_states)."""
+    h = x
+    new_states: List[Dict[str, jnp.ndarray]] = []
+    for i, layer in enumerate(layers[:-1]):
+        h = ref.ref_linear_relu(h, layer["w"], layer["b"], relu=False)
+        h, ns = _bn_apply(layer, states[i], h, train)
+        new_states.append(ns)
+        h = jnp.maximum(h, 0.0)
+    out = layers[-1]
+    h = ref.ref_linear_relu(h, out["w"], out["b"], relu=False)
+    return h, new_states
+
+
+def encoder_apply(params, bn_state, x, train: bool):
+    """net(x): (B, D) → (B, M, dc) head outputs. Returns (h, new_bn)."""
+    h, new_enc = _mlp_apply(params["enc"], bn_state["enc"], x, train)
+    b = x.shape[0]
+    m_dc = h.shape[1]
+    m = params["codebooks"].shape[0]
+    h = h.reshape(b, m, m_dc // m)
+    return h, {**bn_state, "enc": new_enc}
+
+
+def decoder_apply(params, bn_state, gathered, train: bool):
+    """g(i): (B, M*dc) concatenated codewords → (B, D). Returns (x̃, bn)."""
+    y, new_dec = _mlp_apply(params["dec"], bn_state["dec"], gathered, train)
+    return y, {**bn_state, "dec": new_dec}
+
+
+def logits_from_heads(params, h):
+    """⟨net(x)_m, c_mk⟩ — the raw (un-tempered) scores of eq. (2)/(8)."""
+    return ref.ref_heads_logits(h, params["codebooks"])
+
+
+def encode(params, bn_state, x):
+    """Hard encode f(x) (eq. 4): (B, D) → (B, M) int32 codes."""
+    h, _ = encoder_apply(params, bn_state, x, train=False)
+    return ref.ref_assign(h, params["codebooks"])
+
+
+def decode_codes(params, bn_state, codes):
+    """Reconstruct x̃ from int codes: (B, M) → (B, D)."""
+    gathered = ref.ref_gather_codewords(codes, params["codebooks"])
+    y, _ = decoder_apply(params, bn_state, gathered, train=False)
+    return y
+
+
+def query_lut(params, bn_state, q):
+    """Per-query LUT for d2 (eq. 8): (B, D) → (B, M, K) dot products."""
+    h, _ = encoder_apply(params, bn_state, q, train=False)
+    return logits_from_heads(params, h)
+
+
+def d2_from_lut(lut, codes):
+    """d2(q, i) = -Σ_m lut[m, i_m] (the +const(q) term is rank-invariant)."""
+    m_idx = jnp.arange(lut.shape[0])[None, :]
+    return -jnp.sum(lut[m_idx, codes], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm folding + Pallas-kernel inference graphs (the AOT surface)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn(layers, states) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Fold inference-mode BN into the preceding linear layer.
+
+    ``y = ((x@w + b) - μ) · γ/√(σ²+ε) + β  =  x @ (w·s) + (b·s - μ·s + β)``
+    with ``s = γ/√(σ²+ε)``.  Returns a list of plain ``(w, b)`` pairs
+    consumable by the fused Pallas MLP kernel.
+    """
+    folded = []
+    for i, layer in enumerate(layers[:-1]):
+        s = layer["gamma"] * jax.lax.rsqrt(states[i]["var"] + BN_EPS)
+        w = layer["w"] * s[None, :]
+        b = (layer["b"] - states[i]["mean"]) * s + layer["beta"]
+        folded.append((w, b))
+    out = layers[-1]
+    folded.append((out["w"], out["b"]))
+    return folded
+
+
+def fold_standardize(enc_layers, mu, sigma):
+    """Fold input standardization ``x_std = (x − μ)/σ`` into the first
+    folded encoder layer, so the AOT graphs accept raw vectors."""
+    import jax.numpy as jnp
+    (w0, b0), rest = enc_layers[0], enc_layers[1:]
+    inv = 1.0 / jnp.asarray(sigma)
+    w = w0 * inv[:, None]
+    b = b0 - jnp.asarray(mu) @ w
+    return [(w, b)] + list(rest)
+
+
+def fold_unstandardize(dec_layers, mu, sigma):
+    """Fold output un-standardization ``x = x_std·σ + μ`` into the final
+    decoder layer."""
+    import jax.numpy as jnp
+    *rest, (wl, bl) = dec_layers
+    sig = jnp.asarray(sigma)
+    return list(rest) + [(wl * sig[None, :], bl * sig + jnp.asarray(mu))]
+
+
+def export_encode_fn(params, bn_state, cfg: ModelConfig, mu=None, sigma=None):
+    """Build the AOT ``encode`` graph: x (B,D) → codes (B,M) int32.
+
+    Uses the Pallas fused-MLP and fused assign kernels so the exported HLO
+    contains the L1 kernels.  ``mu``/``sigma`` fold train-time input
+    standardization into the first layer (raw vectors in).
+    """
+    enc_layers = fold_bn(params["enc"], bn_state["enc"])
+    if mu is not None:
+        enc_layers = fold_standardize(enc_layers, mu, sigma)
+    codebooks = params["codebooks"]
+
+    def fn(x):
+        h = pallas_mlp(x, enc_layers)
+        h = h.reshape(x.shape[0], cfg.m, cfg.dc)
+        return (pallas_assign(h, codebooks),)
+
+    return fn
+
+
+def export_lut_fn(params, bn_state, cfg: ModelConfig, mu=None, sigma=None):
+    """Build the AOT ``query_lut`` graph: q (B,D) → lut (B,M,K) f32."""
+    enc_layers = fold_bn(params["enc"], bn_state["enc"])
+    if mu is not None:
+        enc_layers = fold_standardize(enc_layers, mu, sigma)
+    codebooks = params["codebooks"]
+
+    def fn(q):
+        h = pallas_mlp(q, enc_layers)
+        h = h.reshape(q.shape[0], cfg.m, cfg.dc)
+        return (pallas_heads_logits(h, codebooks),)
+
+    return fn
+
+
+def export_decode_fn(params, bn_state, cfg: ModelConfig, mu=None, sigma=None):
+    """Build the AOT ``decode`` graph: codes (B,M) int32 → x̃ (B,D) f32."""
+    dec_layers = fold_bn(params["dec"], bn_state["dec"])
+    if mu is not None:
+        dec_layers = fold_unstandardize(dec_layers, mu, sigma)
+    codebooks = params["codebooks"]
+
+    def fn(codes):
+        gathered = ref.ref_gather_codewords(codes, codebooks)
+        return (pallas_mlp(gathered, dec_layers),)
+
+    return fn

@@ -1,0 +1,318 @@
+"""L2 — UNQ training (paper §3.4).
+
+Implements the full training protocol of the paper:
+
+* stochastic encoding with the **hard (straight-through) Gumbel-Softmax**
+  trick (eqs. 2–5) — with ablation switches for the soft variant
+  (``UNQ w/o hard``) and for the deterministic soft-to-hard annealing of
+  Agustsson et al. (``UNQ w/o Gumbel``);
+* reconstruction loss L1 (eq. 9), triplet loss L2 in the learned space
+  (eq. 10) with positives from the top-3 true neighbors and negatives from
+  ranks 100–200, resampled at every epoch start, and the squared
+  coefficient-of-variation codeword-balance regularizer (eq. 11);
+* the combined objective ``L = L1 + α·L2 + β·CV²`` (eq. 12) with β decayed
+  linearly 1.0 → 0.05;
+* **QHAdam** (Ma & Yarats 2018) with a **One-Cycle** learning-rate schedule
+  (Smith & Topin 2017).
+
+Training runs once, at build time, inside ``make artifacts``; nothing here
+is ever on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Hyper-parameters of a UNQ training run (paper §3.4 + §4.1)."""
+
+    steps: int = 3000
+    batch: int = 256
+    lr: float = 1e-3
+    alpha: float = 0.01        # triplet weight (paper grid {.1,.01,.001})
+    beta_start: float = 1.0    # CV² weight, linear 1.0 → 0.05
+    beta_end: float = 0.05
+    delta: float = 1.0         # triplet margin δ
+    seed: int = 0
+    # QHAdam (paper's recommended ν for QHAdam)
+    nu1: float = 0.7
+    nu2: float = 1.0
+    beta1: float = 0.95
+    beta2: float = 0.998
+    eps: float = 1e-8
+    # One-Cycle
+    warmup_frac: float = 0.3
+    div_factor: float = 10.0
+    final_div: float = 100.0
+    # ablation switches (Table 5)
+    use_triplet: bool = True       # False → "No triplet loss" (α = 0)
+    recon_weight: float = 1.0      # 0 → "Triplet only"
+    use_hard: bool = True          # False → "UNQ w/o hard"
+    use_gumbel: bool = True        # False → "UNQ w/o Gumbel" (soft-to-hard)
+    use_cv_reg: bool = True        # False → "No regularizer" (β = 0)
+
+
+# ---------------------------------------------------------------------------
+# Schedules & optimizer
+# ---------------------------------------------------------------------------
+
+
+def one_cycle_lr(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """One-Cycle: cosine warmup lr/div→lr, cosine anneal lr→lr/final_div."""
+    warm = cfg.warmup_frac * cfg.steps
+    lo, hi = cfg.lr / cfg.div_factor, cfg.lr
+    end = cfg.lr / cfg.final_div
+    t = jnp.asarray(step, jnp.float32)
+
+    def up(t):
+        frac = t / jnp.maximum(warm, 1.0)
+        return lo + (hi - lo) * 0.5 * (1 - jnp.cos(jnp.pi * frac))
+
+    def down(t):
+        frac = (t - warm) / jnp.maximum(cfg.steps - warm, 1.0)
+        return end + (hi - end) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+
+    return jnp.where(t < warm, up(t), down(t))
+
+
+def beta_schedule(cfg: TrainConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear β decay 1.0 → 0.05 over training (paper §3.4)."""
+    frac = jnp.asarray(step, jnp.float32) / max(cfg.steps - 1, 1)
+    return cfg.beta_start + (cfg.beta_end - cfg.beta_start) * frac
+
+
+def qhadam_init(params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def qhadam_update(cfg: TrainConfig, grads, opt_state, params, lr):
+    """One QHAdam step (Ma & Yarats 2018, alg. 1).
+
+    ``θ ← θ - lr · [(1-ν1)g + ν1·m̂] / (sqrt[(1-ν2)g² + ν2·v̂] + ε)``
+    with bias-corrected m̂, v̂.
+    """
+    t = opt_state["t"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** t.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+    new_m = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, opt_state["m"], grads)
+    new_v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, opt_state["v"], grads)
+
+    def upd(p, g, m, v):
+        m_hat = m / bc1
+        v_hat = v / bc2
+        num = (1 - cfg.nu1) * g + cfg.nu1 * m_hat
+        den = jnp.sqrt((1 - cfg.nu2) * g * g + cfg.nu2 * v_hat) + cfg.eps
+        return p - lr * num / den
+
+    new_params = jax.tree_util.tree_map(upd, params, grads, new_m, new_v)
+    return new_params, {"m": new_m, "v": new_v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Stochastic encoders (eq. 5 + ablation variants)
+# ---------------------------------------------------------------------------
+
+
+def gumbel_softmax_st(key, log_p, use_hard: bool, use_gumbel: bool):
+    """Relaxed one-hot sample over codewords, (B, M, K) → (B, M, K).
+
+    * ``use_gumbel & use_hard``  — paper's UNQ: Gumbel noise + hard argmax
+      with straight-through gradients.
+    * ``use_gumbel & !use_hard`` — plain Gumbel-Softmax (Jang et al.).
+    * ``!use_gumbel``            — deterministic softmax with ST hard
+      assignment (soft-to-hard à la Agustsson et al., fixed temperature).
+    """
+    if use_gumbel:
+        u = jax.random.uniform(key, log_p.shape, jnp.float32, 1e-20, 1.0)
+        z = -jnp.log(-jnp.log(u))
+        y_soft = jax.nn.softmax(log_p + z, axis=-1)
+    else:
+        y_soft = jax.nn.softmax(log_p, axis=-1)
+    if not use_hard:
+        return y_soft
+    idx = jnp.argmax(y_soft, axis=-1)
+    y_hard = jax.nn.one_hot(idx, log_p.shape[-1], dtype=jnp.float32)
+    # Straight-through: forward = hard, backward = soft.
+    return y_soft + jax.lax.stop_gradient(y_hard - y_soft)
+
+
+# ---------------------------------------------------------------------------
+# Loss (eq. 12)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, bn_state, key, x, x_pos, x_neg, beta, cfg: TrainConfig):
+    """Full UNQ objective on one minibatch.
+
+    Returns ``(loss, (new_bn_state, metrics))``.
+    """
+    b = x.shape[0]
+    h, bn1 = M.encoder_apply(params, bn_state, x, train=True)
+    logits = M.logits_from_heads(params, h)                  # (B, M, K)
+    tau = jnp.exp(params["log_tau"])[None, :, None]
+    log_p = jax.nn.log_softmax(logits / tau, axis=-1)        # eq. (2)
+
+    onehot = gumbel_softmax_st(key, log_p, cfg.use_hard, cfg.use_gumbel)
+    # Decoder input: soft/hard mixture over codewords, concatenated.
+    mixed = jnp.einsum("bmk,mkd->bmd", onehot, params["codebooks"])
+    gathered = mixed.reshape(b, -1)
+    x_rec, bn2 = M.decoder_apply(params, bn1, gathered, train=True)
+
+    l_rec = jnp.mean(jnp.sum((x - x_rec) ** 2, axis=-1))     # eq. (9)
+
+    # Triplet loss in the learned space (eq. 10): d2(x, f(x±)) with hard
+    # codes of the positive/negative (stop-grad through their assignment,
+    # as the paper encodes them with the current model).
+    if cfg.use_triplet:
+        h_pos, _ = M.encoder_apply(params, bn_state, x_pos, train=False)
+        h_neg, _ = M.encoder_apply(params, bn_state, x_neg, train=False)
+        codes_pos = jax.lax.stop_gradient(
+            ref.ref_assign(h_pos, params["codebooks"]))
+        codes_neg = jax.lax.stop_gradient(
+            ref.ref_assign(h_neg, params["codebooks"]))
+        m_idx = jnp.arange(logits.shape[1])[None, :]
+        d2_pos = -jnp.sum(logits[jnp.arange(b)[:, None], m_idx, codes_pos],
+                          axis=-1)
+        d2_neg = -jnp.sum(logits[jnp.arange(b)[:, None], m_idx, codes_neg],
+                          axis=-1)
+        l_trip = jnp.mean(jnp.maximum(0.0, cfg.delta + d2_pos - d2_neg))
+    else:
+        l_trip = jnp.zeros(())
+
+    # CV² balance regularizer (eq. 11) over batch-averaged probabilities.
+    p = jnp.exp(log_p)
+    p_avg = jnp.mean(p, axis=0)                              # (M, K)
+    mean = jnp.mean(p_avg, axis=-1)                          # (M,)
+    var = jnp.var(p_avg, axis=-1)
+    cv2 = jnp.mean(var / (mean ** 2 + 1e-10))
+    if not cfg.use_cv_reg:
+        cv2 = jax.lax.stop_gradient(cv2)
+
+    alpha = cfg.alpha if cfg.use_triplet else 0.0
+    beta_eff = beta if cfg.use_cv_reg else 0.0
+    loss = (cfg.recon_weight * l_rec + alpha * l_trip + beta_eff * cv2)
+
+    # Codeword usage entropy (monitoring; perplexity per codebook).
+    usage = jnp.mean(jax.nn.one_hot(jnp.argmax(logits, -1), logits.shape[-1]),
+                     axis=0)
+    ent = -jnp.sum(usage * jnp.log(usage + 1e-10), axis=-1)
+    metrics = {
+        "loss": loss, "recon": l_rec, "triplet": l_trip, "cv2": cv2,
+        "perplexity": jnp.mean(jnp.exp(ent)),
+    }
+    return loss, (bn2, metrics)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(params, bn_state, opt_state, key, x, x_pos, x_neg, step,
+               cfg: TrainConfig):
+    """One jitted SGD step; returns (params, bn, opt, metrics)."""
+    beta = beta_schedule(cfg, step)
+    lr = one_cycle_lr(cfg, step)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    (_, (new_bn, metrics)), grads = grad_fn(
+        params, bn_state, key, x, x_pos, x_neg, beta, cfg)
+    new_params, new_opt = qhadam_update(cfg, grads, opt_state, params, lr)
+    return new_params, new_bn, new_opt, metrics
+
+
+# ---------------------------------------------------------------------------
+# Triplet neighbor tables (paper: x⁺ ∈ top-3 NN, x⁻ ∈ ranks 100–200)
+# ---------------------------------------------------------------------------
+
+
+def neighbor_table(train: np.ndarray, pos_k: int = 3, neg_lo: int = 100,
+                   neg_hi: int = 200, block: int = 1024) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact neighbor ranks of the training set against itself.
+
+    Returns ``(pos, neg)``: ``pos[i]`` = indices of the top-``pos_k`` true
+    nearest neighbors of row i (self excluded); ``neg[i]`` = indices at
+    ranks ``[neg_lo, neg_hi)``.  Blocked BLAS distance computation keeps
+    memory at ``block × n`` floats.
+    """
+    n = train.shape[0]
+    sq = np.sum(train.astype(np.float32) ** 2, axis=1)
+    pos = np.empty((n, pos_k), np.int32)
+    neg = np.empty((n, neg_hi - neg_lo), np.int32)
+    need = neg_hi + 1
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        d = sq[lo:hi, None] - 2.0 * (train[lo:hi] @ train.T) + sq[None, :]
+        d[np.arange(hi - lo), np.arange(lo, hi)] = np.inf  # mask self
+        part = np.argpartition(d, need, axis=1)[:, :need]
+        order = np.argsort(np.take_along_axis(d, part, axis=1), axis=1)
+        ranked = np.take_along_axis(part, order, axis=1)
+        pos[lo:hi] = ranked[:, :pos_k]
+        neg[lo:hi] = ranked[:, neg_lo:neg_hi]
+    return pos, neg
+
+
+def sample_triplets(rng: np.random.Generator, train: np.ndarray,
+                    pos: np.ndarray, neg: np.ndarray, batch_idx: np.ndarray):
+    """Draw (x, x⁺, x⁻) for a batch of training-row indices."""
+    p_choice = pos[batch_idx, rng.integers(0, pos.shape[1], len(batch_idx))]
+    n_choice = neg[batch_idx, rng.integers(0, neg.shape[1], len(batch_idx))]
+    return train[batch_idx], train[p_choice], train[n_choice]
+
+
+# ---------------------------------------------------------------------------
+# Full training loop
+# ---------------------------------------------------------------------------
+
+
+def train_unq(train_data: np.ndarray, mcfg: M.ModelConfig, tcfg: TrainConfig,
+              log_every: int = 200, log=print):
+    """Train a UNQ model; returns (params, bn_state, history)."""
+    t0 = time.time()
+    rng = np.random.default_rng(tcfg.seed)
+    key = jax.random.PRNGKey(tcfg.seed)
+    train_data = np.ascontiguousarray(train_data, np.float32)
+    n = train_data.shape[0]
+
+    key, init_key = jax.random.split(key)
+    sample = jnp.asarray(train_data[rng.choice(n, min(n, 4096), replace=False)])
+    params, bn_state = M.init_params(init_key, mcfg, sample)
+    opt_state = qhadam_init(params)
+
+    if tcfg.use_triplet:
+        log(f"[train] building neighbor table for {n} vectors ...")
+        pos, neg = neighbor_table(train_data)
+    else:
+        pos = neg = np.zeros((n, 1), np.int32)
+
+    history = []
+    for step in range(tcfg.steps):
+        batch_idx = rng.integers(0, n, tcfg.batch)
+        x, xp, xn = sample_triplets(rng, train_data, pos, neg, batch_idx)
+        key, sk = jax.random.split(key)
+        params, bn_state, opt_state, metrics = train_step(
+            params, bn_state, opt_state, sk,
+            jnp.asarray(x), jnp.asarray(xp), jnp.asarray(xn),
+            jnp.asarray(step), tcfg)
+        if step % log_every == 0 or step == tcfg.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            log(f"[train] step {step:5d}  loss={m['loss']:.4f}  "
+                f"recon={m['recon']:.4f}  triplet={m['triplet']:.4f}  "
+                f"cv2={m['cv2']:.4f}  perp={m['perplexity']:.1f}")
+    log(f"[train] done in {time.time() - t0:.1f}s")
+    return params, bn_state, history

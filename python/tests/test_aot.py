@@ -1,0 +1,95 @@
+"""AOT export tests: fvecs I/O, config registry, HLO text emission."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile import train as T
+from compile.vecs_io import read_fvecs, read_ivecs, write_fvecs
+
+
+def test_fvecs_roundtrip(tmp_path):
+    x = np.random.default_rng(0).normal(size=(37, 12)).astype(np.float32)
+    p = str(tmp_path / "x.fvecs")
+    write_fvecs(p, x)
+    np.testing.assert_array_equal(read_fvecs(p), x)
+    np.testing.assert_array_equal(read_fvecs(p, limit=5), x[:5])
+
+
+def test_fvecs_empty(tmp_path):
+    p = str(tmp_path / "e.fvecs")
+    open(p, "wb").close()
+    assert read_fvecs(p).size == 0
+
+
+def test_ivecs_read(tmp_path):
+    gt = np.random.default_rng(1).integers(0, 1000, size=(9, 10)).astype(np.int32)
+    p = str(tmp_path / "g.ivecs")
+    out = np.empty((9, 11), np.int32)
+    out[:, 0] = 10
+    out[:, 1:] = gt
+    out.tofile(p)
+    np.testing.assert_array_equal(read_ivecs(p), gt)
+
+
+def test_config_registry_consistent():
+    assert len(aot.MAIN_CONFIGS) == 4
+    assert len(aot.ABLATION_CONFIGS) == 5
+    for c in aot.MAIN_CONFIGS + aot.ABLATION_CONFIGS:
+        assert c.name in aot.ALL_CONFIGS
+        mc = c.model_config()
+        assert mc.bytes_per_vector == c.m
+        tc = c.train_config()
+        assert tc.steps > 0
+
+
+def test_ablation_variant_switches():
+    by_name = {c.name: c.train_config() for c in aot.ABLATION_CONFIGS}
+    assert not by_name["abl_no_triplet"].use_triplet
+    assert by_name["abl_triplet_only"].recon_weight == 0.0
+    assert by_name["abl_triplet_only"].alpha == 1.0
+    assert not by_name["abl_wo_hard"].use_hard
+    assert not by_name["abl_wo_gumbel"].use_gumbel
+    assert not by_name["abl_no_reg"].use_cv_reg
+
+
+def test_hlo_text_contains_full_constants(tmp_path):
+    """Weights must appear as dense literals (no elided `{...}` blobs)."""
+    cfg = M.ModelConfig(dim=8, m=2, k=8, dc=4, hidden=8,
+                        encode_batch=8, lut_batch=2, decode_batch=8)
+    key = jax.random.PRNGKey(0)
+    params, bn = M.init_params(key, cfg)
+    path = str(tmp_path / "enc.hlo.txt")
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    aot.export_graph(M.export_encode_fn(params, bn, cfg), (spec,), path)
+    text = open(path).read()
+    assert "constant({...})" not in text
+    assert "ENTRY" in text
+    # entry signature: one f32[8,8] parameter, s32[8,2] tuple result
+    assert "f32[8,8]" in text and "s32[8,2]" in text
+
+
+def test_exported_manifest_smoke(tmp_path, monkeypatch):
+    """Full export_config run on a micro config with the synth fallback."""
+    monkeypatch.setattr(aot, "ARTIFACT_DIR", str(tmp_path))
+    monkeypatch.setattr(aot, "TRAIN_SUBSET", 400)
+    cfg = aot.ExportConfig("t_micro", "deep_micro", 16, 2, steps=20)
+    # micro model to keep the test fast
+    monkeypatch.setattr(
+        aot.ExportConfig, "model_config",
+        lambda self: M.ModelConfig(dim=self.dim, m=self.m, k=16, dc=8,
+                                   hidden=16, encode_batch=32, lut_batch=4,
+                                   decode_batch=32))
+    aot.export_config(cfg, allow_synth=True, force=True)
+    import json
+    man = json.load(open(tmp_path / "t_micro" / "manifest.json"))
+    assert man["m"] == 2 and man["dim"] == 16
+    for f in man["files"].values():
+        assert (tmp_path / "t_micro" / f).exists()
+    assert man["param_count"] > 0
+    assert man["train"]["final_loss"] is not None

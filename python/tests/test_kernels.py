@@ -1,0 +1,160 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (batch sizes that do and do not divide the block
+targets, odd dims, degenerate K/M) and dtypes; assert_allclose against
+ref.py is the core correctness signal of the build-time path.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adc_scan, assign, heads_logits, linear_relu, ref
+
+RTOL, ATOL = 1e-4, 1e-4
+
+
+def rng_for(*shape_bits):
+    return np.random.default_rng(abs(hash(shape_bits)) % (2**32))
+
+
+# ---------------------------------------------------------------------------
+# linear_relu
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 16, 50, 128, 200, 256]),
+    d=st.sampled_from([7, 32, 96, 128]),
+    n=st.sampled_from([1, 17, 64, 256]),
+    relu=st.booleans(),
+)
+def test_linear_relu_matches_ref(b, d, n, relu):
+    rng = rng_for(b, d, n, relu)
+    x = rng.normal(size=(b, d)).astype(np.float32)
+    w = rng.normal(size=(d, n)).astype(np.float32)
+    bias = rng.normal(size=(n,)).astype(np.float32)
+    got = np.asarray(linear_relu(x, w, bias, relu=relu))
+    want = np.asarray(ref.ref_linear_relu(x, w, bias, relu=relu))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from([np.float32, np.float16]))
+def test_linear_relu_dtypes(dtype):
+    rng = rng_for(str(dtype))
+    x = rng.normal(size=(32, 24)).astype(dtype)
+    w = rng.normal(size=(24, 48)).astype(dtype)
+    b = rng.normal(size=(48,)).astype(np.float32)
+    got = np.asarray(linear_relu(x, w, b))
+    want = np.asarray(ref.ref_linear_relu(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+def test_linear_relu_negative_clamped():
+    x = -np.ones((4, 4), np.float32)
+    w = np.eye(4, dtype=np.float32)
+    b = np.zeros(4, np.float32)
+    assert np.all(np.asarray(linear_relu(x, w, b)) == 0.0)
+    assert np.all(np.asarray(linear_relu(x, w, b, relu=False)) == -1.0)
+
+
+def test_linear_relu_shape_mismatch_raises():
+    x = np.zeros((4, 5), np.float32)
+    w = np.zeros((6, 7), np.float32)
+    b = np.zeros(7, np.float32)
+    with pytest.raises(AssertionError):
+        linear_relu(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# heads_logits / assign
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 5, 64, 130]),
+    m=st.sampled_from([1, 4, 8, 16]),
+    k=st.sampled_from([16, 256]),
+    dc=st.sampled_from([8, 64, 128]),
+)
+def test_heads_logits_matches_ref(b, m, k, dc):
+    rng = rng_for(b, m, k, dc)
+    h = rng.normal(size=(b, m, dc)).astype(np.float32)
+    c = rng.normal(size=(m, k, dc)).astype(np.float32)
+    got = np.asarray(heads_logits(h, c))
+    want = np.asarray(ref.ref_heads_logits(h, c))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 7, 64, 129]),
+    m=st.sampled_from([1, 8, 16]),
+    k=st.sampled_from([4, 256]),
+)
+def test_assign_matches_ref(b, m, k):
+    rng = rng_for(b, m, k, "assign")
+    h = rng.normal(size=(b, m, 32)).astype(np.float32)
+    c = rng.normal(size=(m, k, 32)).astype(np.float32)
+    got = np.asarray(assign(h, c))
+    want = np.asarray(ref.ref_assign(h, c))
+    np.testing.assert_array_equal(got, want)
+    assert got.dtype == np.int32
+    assert got.min() >= 0 and got.max() < k
+
+
+def test_assign_prefers_identical_codeword():
+    # If a head output equals one codeword exactly (and others are tiny),
+    # that codeword must win.
+    m, k, dc = 2, 8, 4
+    c = np.random.default_rng(3).normal(size=(m, k, dc)).astype(np.float32) * 0.01
+    c[0, 5] = np.array([10, 0, 0, 0], np.float32)
+    c[1, 2] = np.array([0, 10, 0, 0], np.float32)
+    h = np.zeros((1, m, dc), np.float32)
+    h[0, 0] = c[0, 5]
+    h[0, 1] = c[1, 2]
+    codes = np.asarray(assign(h, c))
+    assert codes[0, 0] == 5 and codes[0, 1] == 2
+
+
+# ---------------------------------------------------------------------------
+# adc_scan
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 100, 1024, 3000]),
+    m=st.sampled_from([1, 8, 16]),
+    k=st.sampled_from([4, 256]),
+    strategy=st.sampled_from(["gather", "onehot"]),
+)
+def test_adc_scan_matches_ref(n, m, k, strategy):
+    rng = rng_for(n, m, k, strategy)
+    codes = rng.integers(0, k, size=(n, m)).astype(np.int32)
+    lut = rng.normal(size=(m, k)).astype(np.float32)
+    got = np.asarray(adc_scan(codes, lut, strategy=strategy))
+    want = np.asarray(ref.ref_adc_scan(codes, lut))
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=1e-3)
+
+
+def test_adc_scan_identity_lut():
+    # With a one-hot LUT row, the scan counts how many codes hit that slot.
+    codes = np.array([[0, 1], [1, 1], [2, 1]], np.int32)
+    lut = np.zeros((2, 4), np.float32)
+    lut[0, 1] = 1.0
+    lut[1, 1] = 1.0
+    got = np.asarray(adc_scan(codes, lut))
+    np.testing.assert_allclose(got, [1.0, 2.0, 1.0])
+
+
+def test_adc_scan_strategies_agree_large():
+    rng = rng_for("agree")
+    codes = rng.integers(0, 256, size=(4096, 16)).astype(np.int32)
+    lut = rng.normal(size=(16, 256)).astype(np.float32)
+    a = np.asarray(adc_scan(codes, lut, strategy="gather"))
+    b = np.asarray(adc_scan(codes, lut, strategy="onehot"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-3)

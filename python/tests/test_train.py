@@ -1,0 +1,184 @@
+"""Training-protocol tests: schedules, optimizer, Gumbel-ST, loss, loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+def _tiny_data(n=600, d=24, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(8, d)).astype(np.float32) * 2
+    return (centers[rng.integers(0, 8, n)]
+            + 0.3 * rng.normal(size=(n, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def test_one_cycle_shape():
+    cfg = T.TrainConfig(steps=1000, lr=1e-3)
+    lrs = [float(T.one_cycle_lr(cfg, jnp.asarray(s)))
+           for s in [0, 150, 300, 650, 999]]
+    assert lrs[0] == pytest.approx(cfg.lr / cfg.div_factor, rel=1e-3)
+    assert lrs[2] == pytest.approx(cfg.lr, rel=1e-3)        # peak at warmup end
+    assert lrs[2] > lrs[1] > lrs[0]                          # warming up
+    assert lrs[2] > lrs[3] > lrs[4]                          # annealing
+    assert lrs[4] == pytest.approx(cfg.lr / cfg.final_div, rel=0.05)
+
+
+def test_beta_schedule_linear():
+    cfg = T.TrainConfig(steps=101)
+    assert float(T.beta_schedule(cfg, jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(T.beta_schedule(cfg, jnp.asarray(100))) == pytest.approx(0.05)
+    mid = float(T.beta_schedule(cfg, jnp.asarray(50)))
+    assert 0.05 < mid < 1.0
+
+
+# ---------------------------------------------------------------------------
+# QHAdam
+# ---------------------------------------------------------------------------
+
+
+def test_qhadam_descends_quadratic():
+    cfg = T.TrainConfig(lr=0.1)
+    params = {"x": jnp.asarray(5.0)}
+    opt = T.qhadam_init(params)
+    for _ in range(200):
+        grads = {"x": 2.0 * params["x"]}
+        params, opt = T.qhadam_update(cfg, grads, opt, params, 0.1)
+    assert abs(float(params["x"])) < 0.1
+
+
+def test_qhadam_nu1_zero_is_plain_sgd_direction():
+    # ν1=0, ν2=0 reduces the update to g / (|g| + eps): sign descent.
+    cfg = T.TrainConfig(nu1=0.0, nu2=0.0)
+    params = {"x": jnp.asarray(3.0)}
+    opt = T.qhadam_init(params)
+    new, _ = T.qhadam_update(cfg, {"x": jnp.asarray(4.0)}, opt, params, 0.5)
+    assert float(new["x"]) == pytest.approx(3.0 - 0.5, rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Gumbel-Softmax ST
+# ---------------------------------------------------------------------------
+
+
+def test_gumbel_st_hard_is_onehot():
+    key = jax.random.PRNGKey(0)
+    log_p = jax.nn.log_softmax(jax.random.normal(key, (6, 3, 10)), axis=-1)
+    y = T.gumbel_softmax_st(key, log_p, use_hard=True, use_gumbel=True)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, rtol=1e-5)
+    assert np.allclose(np.sort(np.asarray(y), axis=-1)[..., :-1], 0.0, atol=1e-6)
+
+
+def test_gumbel_st_soft_is_distribution():
+    key = jax.random.PRNGKey(1)
+    log_p = jax.nn.log_softmax(jax.random.normal(key, (4, 2, 8)), axis=-1)
+    y = T.gumbel_softmax_st(key, log_p, use_hard=False, use_gumbel=True)
+    np.testing.assert_allclose(np.asarray(y.sum(-1)), 1.0, rtol=1e-5)
+    assert float(y.max()) < 1.0  # genuinely soft with overwhelming prob.
+
+
+def test_no_gumbel_is_deterministic():
+    key = jax.random.PRNGKey(2)
+    log_p = jax.nn.log_softmax(jax.random.normal(key, (4, 2, 8)), axis=-1)
+    y1 = T.gumbel_softmax_st(jax.random.PRNGKey(3), log_p, True, False)
+    y2 = T.gumbel_softmax_st(jax.random.PRNGKey(4), log_p, True, False)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # hard assignment must equal plain argmax of log_p
+    np.testing.assert_array_equal(np.asarray(y1.argmax(-1)),
+                                  np.asarray(log_p.argmax(-1)))
+
+
+def test_gumbel_st_gradient_flows():
+    """Straight-through: d loss/d log_p must be nonzero despite hard fwd."""
+    key = jax.random.PRNGKey(5)
+    log_p = jax.nn.log_softmax(jax.random.normal(key, (2, 1, 6)), axis=-1)
+
+    def f(lp):
+        y = T.gumbel_softmax_st(key, lp, use_hard=True, use_gumbel=True)
+        return jnp.sum(y * jnp.arange(6.0))
+
+    g = jax.grad(f)(log_p)
+    assert float(jnp.abs(g).sum()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Neighbor tables / triplets
+# ---------------------------------------------------------------------------
+
+
+def test_neighbor_table_correctness():
+    data = _tiny_data(n=300, d=8)
+    pos, neg = T.neighbor_table(data, pos_k=3, neg_lo=50, neg_hi=60)
+    assert pos.shape == (300, 3) and neg.shape == (300, 10)
+    # Verify row 0 against a brute-force argsort.
+    d = np.sum((data - data[0]) ** 2, axis=1)
+    d[0] = np.inf
+    order = np.argsort(d, kind="stable")
+    got = set(pos[0].tolist())
+    want = set(order[:3].tolist())
+    # ties can permute equal-distance entries; compare distances instead
+    np.testing.assert_allclose(sorted(d[list(got)]), sorted(d[list(want)]),
+                               rtol=1e-5)
+    assert (pos[0] != 0).all()  # self excluded
+
+
+def test_neighbor_table_blocked_equals_unblocked():
+    data = _tiny_data(n=257, d=6, seed=3)
+    p1, n1 = T.neighbor_table(data, block=64)
+    p2, n2 = T.neighbor_table(data, block=257)
+    d = lambda i, idx: np.sum((data[idx] - data[i]) ** 2, -1)
+    for i in [0, 100, 256]:
+        np.testing.assert_allclose(sorted(d(i, p1[i])), sorted(d(i, p2[i])),
+                                   rtol=1e-5)
+
+
+def test_sample_triplets_shapes():
+    data = _tiny_data(n=400, d=8)
+    pos, neg = T.neighbor_table(data)
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 400, 32)
+    x, xp, xn = T.sample_triplets(rng, data, pos, neg, idx)
+    assert x.shape == xp.shape == xn.shape == (32, 8)
+    # positives must be nearer than negatives on average (true neighbors)
+    dp = np.sum((x - xp) ** 2, -1).mean()
+    dn = np.sum((x - xn) ** 2, -1).mean()
+    assert dp < dn
+
+
+# ---------------------------------------------------------------------------
+# End-to-end training behaviour
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["unq", "no_triplet", "wo_hard",
+                                     "wo_gumbel", "no_reg"])
+def test_training_reduces_loss(variant):
+    data = _tiny_data(n=500, d=24, seed=7)
+    mcfg = M.ModelConfig(dim=24, m=4, k=32, dc=16, hidden=32)
+    tcfg = T.TrainConfig(
+        steps=60, batch=64,
+        use_triplet=variant != "no_triplet",
+        use_hard=variant != "wo_hard",
+        use_gumbel=variant != "wo_gumbel",
+        use_cv_reg=variant != "no_reg",
+    )
+    _, _, hist = T.train_unq(data, mcfg, tcfg, log_every=59, log=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_training_balances_codes():
+    """The CV² regularizer should keep codeword perplexity well above 1."""
+    data = _tiny_data(n=500, d=16, seed=9)
+    mcfg = M.ModelConfig(dim=16, m=2, k=16, dc=8, hidden=32)
+    tcfg = T.TrainConfig(steps=80, batch=64)
+    _, _, hist = T.train_unq(data, mcfg, tcfg, log_every=79, log=lambda *_: None)
+    assert hist[-1]["perplexity"] > 2.0

@@ -1,0 +1,80 @@
+//! Hot-path micro-benchmarks (§Perf in EXPERIMENTS.md): the ADC scan,
+//! top-k selection, LUT construction and rerank — the components whose
+//! sum is the paper's §4.4 search cost.
+//!
+//! Run: `cargo bench --bench hotpath_micro`
+
+use unq::data::{synthetic::Generator, Family};
+use unq::index::{scan_topk, CompressedIndex};
+use unq::linalg::TopK;
+use unq::quant::{pq::Pq, Lut, Quantizer};
+use unq::util::bench::Bench;
+use unq::util::rng::SplitMix64;
+
+fn main() {
+    let mut b = Bench::default();
+
+    // --- raw ADC scan: n × m LUT adds, the innermost loop -------------
+    for (n, m) in [(100_000usize, 8usize), (100_000, 16), (1_000_000, 8)] {
+        let mut rng = SplitMix64::new(1);
+        let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let index = CompressedIndex::from_codes(n, m, codes);
+        let tables: Vec<f32> = (0..m * 256).map(|_| rng.next_f32()).collect();
+        let lut = Lut::Tables { m, k: 256, tables, bias: 0.0 };
+        b.run(&format!("adc_scan n={n} m={m} top500"), n as u64, || {
+            scan_topk(&lut, &index, 500)
+        });
+    }
+
+    // --- top-k push throughput ----------------------------------------
+    {
+        let mut rng = SplitMix64::new(2);
+        let scores: Vec<f32> = (0..1_000_000).map(|_| rng.next_f32()).collect();
+        b.run("topk_push 1M → 100", scores.len() as u64, || {
+            let mut t = TopK::new(100);
+            for (i, &s) in scores.iter().enumerate() {
+                t.push(s, i as u32);
+            }
+            t.into_sorted()
+        });
+    }
+
+    // --- LUT construction (PQ: m·k subspace distances) -----------------
+    {
+        let gen = Generator::new(Family::SiftLike, 3);
+        let train = gen.generate(0, 4000);
+        let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 8);
+        let q = gen.generate(2, 1);
+        b.run("pq_lut_build m=8 k=256", (8 * 256) as u64, || pq.lut(q.row(0)));
+    }
+
+    // --- rerank: decode + exact distance for 500 candidates -----------
+    {
+        let gen = Generator::new(Family::SiftLike, 4);
+        let train = gen.generate(0, 4000);
+        let base = gen.generate(1, 20_000);
+        let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 8);
+        let index = CompressedIndex::build(&pq, &base);
+        let q = gen.generate(2, 1);
+        let cands: Vec<u32> = (0..500u32).collect();
+        let engine = unq::index::SearchEngine::new(
+            &pq, &index, unq::config::SearchConfig::default());
+        b.run("rerank 500 candidates (PQ decode)", 500, || {
+            engine.rerank(q.row(0), &cands, 100)
+        });
+    }
+
+    // --- lattice direct scan (the non-LUT path) ------------------------
+    {
+        let gen = Generator::new(Family::DeepLike, 5);
+        let train = gen.generate(0, 3000);
+        let base = gen.generate(1, 100_000);
+        let lat = unq::quant::lattice::CatalystLattice::train(
+            &train.data, train.dim, 8);
+        let index = CompressedIndex::build(&lat, &base);
+        let lut = lat.lut(gen.generate(2, 1).row(0));
+        b.run("lattice_direct_scan n=100k d_out=24", index.n as u64, || {
+            scan_topk(&lut, &index, 500)
+        });
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate the paper's Table 2 (recall at 1M scale (sim: 100k)) and time the
+//! end-to-end evaluation. Heavy models/codes are cached under runs/, so
+//! the first invocation trains and later ones measure search only.
+//!
+//! Run: `cargo bench --bench table2_recall_1m`
+
+use unq::config::AppConfig;
+use unq::eval::tables::{recall_table, table2_methods};
+use unq::util::bench::Bench;
+
+fn main() {
+    let cfg = AppConfig::default().apply_env();
+    let mut b = Bench::e2e();
+    let mut rendered = String::new();
+    b.run("table2 full evaluation", 1, || {
+        let t = recall_table("Table 2 — 1M scale (sim: 100k)", &cfg, "sift1m", "deep1m",
+                             &table2_methods(), &[8, 16]);
+        rendered = t.render();
+    });
+    println!("{rendered}");
+}

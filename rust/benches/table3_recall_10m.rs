@@ -1,0 +1,21 @@
+//! Bench: regenerate the paper's Table 3 (recall at 10M scale (sim: 300k)) and time the
+//! end-to-end evaluation. Heavy models/codes are cached under runs/, so
+//! the first invocation trains and later ones measure search only.
+//!
+//! Run: `cargo bench --bench table3_recall_10m`
+
+use unq::config::AppConfig;
+use unq::eval::tables::{recall_table, table34_methods};
+use unq::util::bench::Bench;
+
+fn main() {
+    let cfg = AppConfig::default().apply_env();
+    let mut b = Bench::e2e();
+    let mut rendered = String::new();
+    b.run("table3 full evaluation", 1, || {
+        let t = recall_table("Table 3 — 10M scale (sim: 300k)", &cfg, "sift10m", "deep10m",
+                             &table34_methods(), &[8, 16]);
+        rendered = t.render();
+    });
+    println!("{rendered}");
+}

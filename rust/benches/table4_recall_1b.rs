@@ -1,0 +1,21 @@
+//! Bench: regenerate the paper's Table 4 (recall at 1B scale (sim: 1M)) and time the
+//! end-to-end evaluation. Heavy models/codes are cached under runs/, so
+//! the first invocation trains and later ones measure search only.
+//!
+//! Run: `cargo bench --bench table4_recall_1b`
+
+use unq::config::AppConfig;
+use unq::eval::tables::{recall_table, table34_methods};
+use unq::util::bench::Bench;
+
+fn main() {
+    let cfg = AppConfig::default().apply_env();
+    let mut b = Bench::e2e();
+    let mut rendered = String::new();
+    b.run("table4 full evaluation", 1, || {
+        let t = recall_table("Table 4 — 1B scale (sim: 1M)", &cfg, "sift1b", "deep1b",
+                             &table34_methods(), &[8, 16]);
+        rendered = t.render();
+    });
+    println!("{rendered}");
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's Table 5 (training/search ablations on
+//! BigANN1M-sim @ 8 bytes). Requires `make artifacts artifacts-ablation`.
+//!
+//! Run: `cargo bench --bench table5_ablation`
+
+use unq::config::AppConfig;
+use unq::eval::tables::table5_ablation;
+use unq::util::bench::Bench;
+
+fn main() {
+    let cfg = AppConfig::default().apply_env();
+    let mut b = Bench::e2e();
+    b.run("table5 ablation evaluation", 1, || {
+        if let Err(e) = table5_ablation(&cfg) {
+            eprintln!("table5 skipped: {e:#}");
+        }
+    });
+}

@@ -1,0 +1,37 @@
+//! Bench: the paper's §4.4 timing study (encode / LUT scan / rerank) plus
+//! Table 1's measured train/encode complexity, and the serving-loop
+//! throughput of the coordinator (§Perf e2e row).
+//!
+//! Run: `cargo bench --bench timings`
+
+use unq::config::{AppConfig, QuantizerKind};
+use unq::coordinator::demo::run_serve;
+use unq::eval::tables::{table1_timings, table_timings};
+use unq::util::bench::Bench;
+
+fn main() {
+    let cfg = AppConfig::default().apply_env();
+    let mut b = Bench::e2e();
+    b.run("table1 complexity measurements", 1, || {
+        if let Err(e) = table1_timings(&cfg) {
+            eprintln!("table1 skipped: {e:#}");
+        }
+    });
+    b.run("§4.4 timings", 1, || {
+        if let Err(e) = table_timings(&cfg) {
+            eprintln!("timings skipped: {e:#}");
+        }
+    });
+    // Coordinator serving loop (UNQ if artifacts exist, else PQ fallback).
+    let mut scfg = cfg.clone();
+    scfg.dataset = "sift1m".into();
+    scfg.quantizer = QuantizerKind::Unq;
+    b.run("serving loop 500 queries", 500, || {
+        if let Err(e) = run_serve(&scfg, 500) {
+            eprintln!("serve(UNQ) skipped: {e:#}");
+            let mut pq = scfg.clone();
+            pq.quantizer = QuantizerKind::Pq;
+            let _ = run_serve(&pq, 500);
+        }
+    });
+}

@@ -1,0 +1,324 @@
+//! Typed configuration system.
+//!
+//! Every binary (CLI, examples, benches) shares one [`AppConfig`],
+//! loadable from a JSON file with environment overrides — the usual
+//! launcher pattern: defaults ← config file ← env ← CLI flags.
+//! (Serialization runs over the in-crate [`crate::util::json`] substrate;
+//! serde/toml are unavailable on this offline testbed.)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Which quantizer a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantizerKind {
+    Pq,
+    Opq,
+    Rvq,
+    Lsq,
+    LsqRerank,
+    CatalystLattice,
+    CatalystOpq,
+    Unq,
+}
+
+impl QuantizerKind {
+    pub fn all() -> &'static [QuantizerKind] {
+        use QuantizerKind::*;
+        &[Pq, Opq, Rvq, Lsq, LsqRerank, CatalystLattice, CatalystOpq, Unq]
+    }
+
+    /// Paper row label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantizerKind::Pq => "PQ",
+            QuantizerKind::Opq => "OPQ",
+            QuantizerKind::Rvq => "RVQ",
+            QuantizerKind::Lsq => "LSQ",
+            QuantizerKind::LsqRerank => "LSQ+rerank",
+            QuantizerKind::CatalystLattice => "Catalyst+Lattice",
+            QuantizerKind::CatalystOpq => "Catalyst+OPQ",
+            QuantizerKind::Unq => "UNQ",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let norm = s.to_ascii_lowercase().replace(['-', '_', '+'], "");
+        Some(match norm.as_str() {
+            "pq" => QuantizerKind::Pq,
+            "opq" => QuantizerKind::Opq,
+            "rvq" => QuantizerKind::Rvq,
+            "lsq" => QuantizerKind::Lsq,
+            "lsqrerank" => QuantizerKind::LsqRerank,
+            "catalystlattice" | "lattice" => QuantizerKind::CatalystLattice,
+            "catalystopq" => QuantizerKind::CatalystOpq,
+            "unq" => QuantizerKind::Unq,
+            _ => return None,
+        })
+    }
+}
+
+/// Search-time parameters (paper §3.3/§4: two-stage search).
+#[derive(Clone, Copy, Debug)]
+pub struct SearchConfig {
+    /// Candidates taken from the ADC scan for reranking (paper: 500 at 1M
+    /// scale, 1000 at 1B scale).
+    pub rerank_l: usize,
+    /// Final neighbors returned.
+    pub k: usize,
+    /// Disable the rerank stage (Table 5 "No reranking").
+    pub no_rerank: bool,
+    /// Rerank *everything* with d1 (Table 5 "Exhaustive reranking").
+    pub exhaustive_rerank: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig { rerank_l: 500, k: 100, no_rerank: false,
+                       exhaustive_rerank: false }
+    }
+}
+
+/// Serving parameters for the coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Max queries coalesced into one LUT batch.
+    pub max_batch: usize,
+    /// Batching deadline in microseconds: a partial batch flushes after
+    /// this long even if not full.
+    pub max_delay_us: u64,
+    /// Bounded request-queue depth (backpressure boundary).
+    pub queue_depth: usize,
+    /// Number of scan workers (shards) the index is split across.
+    pub shards: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 16, max_delay_us: 2000, queue_depth: 1024,
+                      shards: 1 }
+    }
+}
+
+/// Root configuration.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// Dataset name from the catalog (deep1m, sift1m, ...).
+    pub dataset: String,
+    /// Quantizer under test.
+    pub quantizer: QuantizerKind,
+    /// Bytes per vector (8 or 16 in the paper).
+    pub bytes_per_vector: usize,
+    /// Codebook size K (paper: 256 everywhere).
+    pub k_codewords: usize,
+    pub search: SearchConfig,
+    pub serve: ServeConfig,
+    /// Directory roots (relative to CWD unless absolute).
+    pub data_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub runs_dir: PathBuf,
+    /// Dataset scale multiplier (UNQ_SCALE env for quick runs).
+    pub scale: f64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            dataset: "sift1m".into(),
+            quantizer: QuantizerKind::Unq,
+            bytes_per_vector: 8,
+            k_codewords: 256,
+            search: SearchConfig::default(),
+            serve: ServeConfig::default(),
+            data_dir: "data".into(),
+            artifacts_dir: "artifacts".into(),
+            runs_dir: "runs".into(),
+            scale: 1.0,
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("quantizer", Json::Str(self.quantizer.name().to_string())),
+            ("bytes_per_vector", Json::Num(self.bytes_per_vector as f64)),
+            ("k_codewords", Json::Num(self.k_codewords as f64)),
+            ("search", Json::obj(vec![
+                ("rerank_l", Json::Num(self.search.rerank_l as f64)),
+                ("k", Json::Num(self.search.k as f64)),
+                ("no_rerank", Json::Bool(self.search.no_rerank)),
+                ("exhaustive_rerank", Json::Bool(self.search.exhaustive_rerank)),
+            ])),
+            ("serve", Json::obj(vec![
+                ("max_batch", Json::Num(self.serve.max_batch as f64)),
+                ("max_delay_us", Json::Num(self.serve.max_delay_us as f64)),
+                ("queue_depth", Json::Num(self.serve.queue_depth as f64)),
+                ("shards", Json::Num(self.serve.shards as f64)),
+            ])),
+            ("data_dir", Json::Str(self.data_dir.display().to_string())),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
+            ("runs_dir", Json::Str(self.runs_dir.display().to_string())),
+            ("scale", Json::Num(self.scale)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = AppConfig::default();
+        if let Some(v) = j.get("dataset").and_then(Json::as_str) {
+            cfg.dataset = v.to_string();
+        }
+        if let Some(v) = j.get("quantizer").and_then(Json::as_str) {
+            cfg.quantizer = QuantizerKind::parse(v)
+                .with_context(|| format!("unknown quantizer {v:?}"))?;
+        }
+        if let Some(v) = j.get("bytes_per_vector").and_then(Json::as_usize) {
+            cfg.bytes_per_vector = v;
+        }
+        if let Some(v) = j.get("k_codewords").and_then(Json::as_usize) {
+            cfg.k_codewords = v;
+        }
+        if let Some(s) = j.get("search") {
+            if let Some(v) = s.get("rerank_l").and_then(Json::as_usize) {
+                cfg.search.rerank_l = v;
+            }
+            if let Some(v) = s.get("k").and_then(Json::as_usize) {
+                cfg.search.k = v;
+            }
+            if let Some(v) = s.get("no_rerank").and_then(Json::as_bool) {
+                cfg.search.no_rerank = v;
+            }
+            if let Some(v) = s.get("exhaustive_rerank").and_then(Json::as_bool) {
+                cfg.search.exhaustive_rerank = v;
+            }
+        }
+        if let Some(s) = j.get("serve") {
+            if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
+                cfg.serve.max_batch = v;
+            }
+            if let Some(v) = s.get("max_delay_us").and_then(Json::as_usize) {
+                cfg.serve.max_delay_us = v as u64;
+            }
+            if let Some(v) = s.get("queue_depth").and_then(Json::as_usize) {
+                cfg.serve.queue_depth = v;
+            }
+            if let Some(v) = s.get("shards").and_then(Json::as_usize) {
+                cfg.serve.shards = v;
+            }
+        }
+        if let Some(v) = j.get("data_dir").and_then(Json::as_str) {
+            cfg.data_dir = v.into();
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = v.into();
+        }
+        if let Some(v) = j.get("runs_dir").and_then(Json::as_str) {
+            cfg.runs_dir = v.into();
+        }
+        if let Some(v) = j.get("scale").and_then(Json::as_f64) {
+            cfg.scale = v;
+        }
+        if cfg.bytes_per_vector == 0 || cfg.k_codewords == 0 {
+            bail!("bytes_per_vector and k_codewords must be positive");
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Apply environment overrides (`UNQ_SCALE`, `UNQ_DATA_DIR`, ...).
+    pub fn apply_env(mut self) -> Self {
+        if let Ok(s) = std::env::var("UNQ_SCALE") {
+            if let Ok(v) = s.parse::<f64>() {
+                self.scale = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_DATA_DIR") {
+            self.data_dir = s.into();
+        }
+        if let Ok(s) = std::env::var("UNQ_ARTIFACTS_DIR") {
+            self.artifacts_dir = s.into();
+        }
+        if let Ok(s) = std::env::var("UNQ_RUNS_DIR") {
+            self.runs_dir = s.into();
+        }
+        self
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().render_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn default_is_sane() {
+        let c = AppConfig::default();
+        assert_eq!(c.k_codewords, 256);
+        assert_eq!(c.bytes_per_vector, 8);
+        assert_eq!(c.search.rerank_l, 500);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("c.json");
+        let mut c = AppConfig::default();
+        c.dataset = "deep1m".into();
+        c.quantizer = QuantizerKind::Lsq;
+        c.search.rerank_l = 123;
+        c.serve.max_batch = 99;
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.dataset, "deep1m");
+        assert_eq!(back.quantizer, QuantizerKind::Lsq);
+        assert_eq!(back.search.rerank_l, 123);
+        assert_eq!(back.serve.max_batch, 99);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"dataset": "sift10m"}"#).unwrap();
+        let c = AppConfig::from_json(&j).unwrap();
+        assert_eq!(c.dataset, "sift10m");
+        assert_eq!(c.k_codewords, 256);
+    }
+
+    #[test]
+    fn invalid_quantizer_rejected() {
+        let j = Json::parse(r#"{"quantizer": "nope"}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quantizer_parse_aliases() {
+        assert_eq!(QuantizerKind::parse("LSQ+rerank"),
+                   Some(QuantizerKind::LsqRerank));
+        assert_eq!(QuantizerKind::parse("catalyst-lattice"),
+                   Some(QuantizerKind::CatalystLattice));
+        assert_eq!(QuantizerKind::parse("unq"), Some(QuantizerKind::Unq));
+        assert_eq!(QuantizerKind::parse("wat"), None);
+    }
+
+    #[test]
+    fn names_match_paper_rows() {
+        assert_eq!(QuantizerKind::CatalystLattice.name(), "Catalyst+Lattice");
+        assert_eq!(QuantizerKind::LsqRerank.name(), "LSQ+rerank");
+    }
+}

@@ -1,0 +1,197 @@
+//! Dynamic batching policy — the pure decision core of the coordinator.
+//!
+//! Separated from the threading so the invariants are directly testable
+//! (and property-tested below): a batch flushes when it reaches
+//! `max_batch` items **or** when its oldest item has waited `max_delay`,
+//! whichever comes first; items never reorder within a batch; nothing is
+//! dropped or duplicated.
+
+use std::time::{Duration, Instant};
+
+/// Accumulates items and decides when to flush.
+pub struct BatchPolicy<T> {
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    items: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> BatchPolicy<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch > 0);
+        BatchPolicy { max_batch, max_delay, items: Vec::new(), oldest: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Add an item (arrival time `now`); returns a full batch if the size
+    /// bound was hit.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.items.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.items.push(item);
+        if self.items.len() >= self.max_batch {
+            return Some(self.take());
+        }
+        None
+    }
+
+    /// Deadline-driven flush: returns the batch if the oldest item has
+    /// waited at least `max_delay` by `now`.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.oldest {
+            Some(t0) if now.duration_since(t0) >= self.max_delay
+                && !self.items.is_empty() =>
+            {
+                Some(self.take())
+            }
+            _ => None,
+        }
+    }
+
+    /// How long the batcher may sleep before the next deadline.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest.map(|t0| {
+            self.max_delay
+                .saturating_sub(now.duration_since(t0))
+        })
+    }
+
+    /// Unconditional flush (shutdown path).
+    pub fn take(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::SplitMix64};
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_at_size_bound() {
+        let mut b = BatchPolicy::new(3, Duration::from_secs(10));
+        let now = t0();
+        assert!(b.push(1, now).is_none());
+        assert!(b.push(2, now).is_none());
+        let batch = b.push(3, now).expect("size flush");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_at_deadline() {
+        let mut b = BatchPolicy::new(100, Duration::from_millis(5));
+        let start = t0();
+        b.push(7, start);
+        assert!(b.poll(start).is_none());
+        assert!(b.poll(start + Duration::from_millis(4)).is_none());
+        let batch = b.poll(start + Duration::from_millis(5)).expect("deadline");
+        assert_eq!(batch, vec![7]);
+        // empty batcher never deadline-flushes
+        assert!(b.poll(start + Duration::from_secs(1)).is_none());
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_item() {
+        let mut b = BatchPolicy::new(100, Duration::from_millis(10));
+        let start = t0();
+        b.push(1, start);
+        b.push(2, start + Duration::from_millis(9));
+        // oldest is item 1: must flush at start+10 even though item 2 is fresh
+        let batch = b.poll(start + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn time_to_deadline_decreases() {
+        let mut b = BatchPolicy::new(10, Duration::from_millis(20));
+        let start = t0();
+        assert!(b.time_to_deadline(start).is_none());
+        b.push(1, start);
+        let d1 = b.time_to_deadline(start).unwrap();
+        let d2 = b.time_to_deadline(start + Duration::from_millis(15)).unwrap();
+        assert!(d2 < d1);
+        assert_eq!(b.time_to_deadline(start + Duration::from_millis(25)).unwrap(),
+                   Duration::ZERO);
+    }
+
+    #[test]
+    fn prop_no_loss_no_dup_no_reorder() {
+        // property: any interleaving of pushes and polls preserves the
+        // exact item sequence across concatenated flushed batches
+        prop::forall_ok(
+            7,
+            50,
+            |r: &mut SplitMix64| {
+                let n = 1 + r.below(200);
+                let max_batch = 1 + r.below(16);
+                let ops: Vec<u8> = (0..n).map(|_| r.below(4) as u8).collect();
+                (max_batch, ops)
+            },
+            |(max_batch, ops)| {
+                let mut b = BatchPolicy::new(*max_batch,
+                                             Duration::from_millis(3));
+                let start = t0();
+                let mut now = start;
+                let mut flushed: Vec<u32> = Vec::new();
+                let mut next = 0u32;
+                for &op in ops {
+                    match op {
+                        0..=2 => {
+                            if let Some(batch) = b.push(next, now) {
+                                flushed.extend(batch);
+                            }
+                            next += 1;
+                        }
+                        _ => {
+                            now += Duration::from_millis(2);
+                            if let Some(batch) = b.poll(now) {
+                                flushed.extend(batch);
+                            }
+                        }
+                    }
+                }
+                flushed.extend(b.take());
+                let want: Vec<u32> = (0..next).collect();
+                if flushed == want {
+                    Ok(())
+                } else {
+                    Err(format!("sequence broken: {flushed:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_batches_bounded_by_max() {
+        prop::forall(
+            8,
+            30,
+            |r: &mut SplitMix64| (1 + r.below(8), 1 + r.below(100)),
+            |&(max_batch, n)| {
+                let mut b = BatchPolicy::new(max_batch, Duration::from_secs(1));
+                let now = t0();
+                let mut ok = true;
+                for i in 0..n {
+                    if let Some(batch) = b.push(i, now) {
+                        ok &= batch.len() <= max_batch;
+                    }
+                }
+                ok
+            },
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! `unq serve` — closed-loop serving demo / load generator.
+//!
+//! Boots the full stack for the configured (dataset, quantizer): loads or
+//! trains the model, encodes the base set (cached), starts the
+//! coordinator, then drives it with a multi-client closed loop and prints
+//! the throughput/latency report — the measurement the e2e example and
+//! the timings bench reuse.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::AppConfig;
+use crate::eval::harness;
+use crate::Result;
+
+use super::pipeline::Server;
+
+/// Outcome of a serving run (consumed by benches/examples).
+pub struct ServeReport {
+    pub queries: usize,
+    pub wall_secs: f64,
+    pub qps: f64,
+    pub mean_latency_us: f64,
+    pub p95_latency_us: u64,
+    pub mean_batch: f64,
+    pub recall_at10: f32,
+}
+
+/// Boot the stack and run `total_queries` closed-loop queries from 4
+/// client threads. Returns the report (also printed).
+pub fn run_serve(cfg: &AppConfig, total_queries: usize) -> Result<ServeReport> {
+    let exp = harness::prepare(cfg, "")?;
+    let search = harness::paper_search_config(cfg.quantizer, &cfg.dataset, 100);
+
+    // Move the heavy pieces into Arcs for the server.
+    let harness::Experiment { quant, index, splits, gt, runtime, .. } = exp;
+    let quant: Arc<dyn crate::quant::Quantizer> = Arc::from(quant);
+    let index = Arc::new(index);
+    let server = Arc::new(Server::start(quant, index, search, cfg.serve));
+
+    let n_clients = 4usize;
+    let queries = Arc::new(splits.query);
+    let per_client = total_queries.div_ceil(n_clients);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    let results = Arc::new(std::sync::Mutex::new(vec![
+        Vec::new();
+        queries.len()
+    ]));
+    for c in 0..n_clients {
+        let server = server.clone();
+        let queries = queries.clone();
+        let results = results.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_client {
+                let qi = (c * per_client + i) % queries.len();
+                match server.search_blocking(queries.row(qi), 100) {
+                    Ok(resp) => {
+                        results.lock().unwrap()[qi] = resp.neighbors;
+                    }
+                    Err(e) => panic!("client {c}: {e:?}"),
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let metrics = server.metrics.clone();
+
+    // recall over the answered queries only (a closed loop shorter than
+    // the query set leaves some rows empty)
+    let all = results.lock().unwrap().clone();
+    let mut answered = Vec::new();
+    let mut answered_gt = Vec::new();
+    for (qi, r) in all.into_iter().enumerate() {
+        if !r.is_empty() {
+            answered.push(r);
+            answered_gt.push(gt.neighbors[qi].clone());
+        }
+    }
+    let rec = crate::eval::recall(&answered, &crate::gt::GroundTruth {
+        r: gt.r,
+        neighbors: answered_gt,
+    });
+
+    let report = ServeReport {
+        queries: n_clients * per_client,
+        wall_secs: wall,
+        qps: (n_clients * per_client) as f64 / wall,
+        mean_latency_us: metrics.search_latency.mean_us(),
+        p95_latency_us: metrics.search_latency.quantile_us(0.95),
+        mean_batch: metrics.mean_batch_size(),
+        recall_at10: rec.at10,
+    };
+    println!(
+        "[serve] {} on {} (n={}): {} queries in {:.2}s → {:.1} QPS\n\
+         [serve] latency mean {:.1} µs  p95 {} µs  mean batch {:.1}\n\
+         [serve] completed {}  rejected {}  Recall@10 {:.1}",
+        cfg.quantizer.name(), cfg.dataset, queries.len(), report.queries,
+        report.wall_secs, report.qps, report.mean_latency_us,
+        report.p95_latency_us, report.mean_batch,
+        metrics.completed.load(Ordering::Relaxed),
+        metrics.rejected.load(Ordering::Relaxed),
+        report.recall_at10,
+    );
+
+    Arc::try_unwrap(server)
+        .map_err(|_| anyhow::anyhow!("server still referenced"))?
+        .shutdown();
+    drop(runtime); // stop the PJRT thread last
+    Ok(report)
+}
+
+/// CLI wrapper.
+pub fn run_demo(cfg: &AppConfig, queries: usize) -> Result<()> {
+    run_serve(cfg, queries).map(|_| ())
+}

@@ -1,0 +1,87 @@
+//! The serving coordinator — L3's runtime contribution.
+//!
+//! A compressed-domain similarity-search service in the shape the paper's
+//! system implies (encode offline, LUT + scan + rerank online), built as a
+//! thread-per-stage pipeline over bounded channels (tokio is unavailable
+//! on this offline testbed; on one core a thread pipeline is also the
+//! honest design):
+//!
+//! ```text
+//! clients → Router (bounded queue, backpressure)
+//!             ├─ search → QueryBatcher (size/deadline) → LUT build
+//!             │            → sharded ADC scan → rerank → respond
+//!             └─ encode → EncodeBatcher → encoder → respond
+//! ```
+//!
+//! * [`batch::BatchPolicy`] — the pure flush-decision core (proptested);
+//! * [`pipeline`] — the worker threads and wiring;
+//! * [`metrics`] — lock-free counters + latency histogram;
+//! * [`demo`] — the `unq serve` closed-loop load generator.
+
+pub mod batch;
+pub mod demo;
+pub mod metrics;
+pub mod pipeline;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Client-visible request ids (unique per server lifetime).
+pub type RequestId = u64;
+
+/// A search request: find the top-k neighbors of `query`.
+pub struct SearchRequest {
+    pub id: RequestId,
+    pub query: Vec<f32>,
+    pub k: usize,
+    pub submitted: Instant,
+    pub resp: mpsc::SyncSender<SearchResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchResponse {
+    pub id: RequestId,
+    pub neighbors: Vec<u32>,
+    /// end-to-end latency observed inside the server
+    pub latency_us: u64,
+}
+
+/// An encode request: compress `vectors` (flat rows) into codes.
+pub struct EncodeRequest {
+    pub id: RequestId,
+    pub vectors: Vec<f32>,
+    pub rows: usize,
+    pub submitted: Instant,
+    pub resp: mpsc::SyncSender<EncodeResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct EncodeResponse {
+    pub id: RequestId,
+    pub codes: Vec<u8>,
+    pub latency_us: u64,
+}
+
+/// Typed ingress.
+pub enum Request {
+    Search(SearchRequest),
+    Encode(EncodeRequest),
+}
+
+impl Request {
+    pub fn id(&self) -> RequestId {
+        match self {
+            Request::Search(r) => r.id,
+            Request::Encode(r) => r.id,
+        }
+    }
+}
+
+/// Submission failure modes surfaced to clients.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// bounded queue full — backpressure; client should retry/shed
+    Overloaded,
+    /// server is shutting down
+    Closed,
+}

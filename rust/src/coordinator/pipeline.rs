@@ -1,0 +1,445 @@
+//! The serving pipeline: router + batchers + workers over bounded
+//! channels, with graceful shutdown.
+//!
+//! Thread layout (one thread per stage; see module docs in `mod.rs`):
+//! * **router** — drains the bounded ingress queue and fans requests out
+//!   to the per-type batcher queues (also bounded: backpressure
+//!   propagates to `try_submit`).
+//! * **search worker** — dynamic batcher ([`BatchPolicy`]) in front of the
+//!   LUT build; LUTs for a whole batch are built in one call (UNQ runs
+//!   them through one PJRT execution), then each query scans the sharded
+//!   index and reranks.
+//! * **encode worker** — batches encode requests into one
+//!   `encode_batch` call (one PJRT execution per AOT batch).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::{SearchConfig, ServeConfig};
+use crate::index::{scan, CompressedIndex, SearchEngine};
+use crate::quant::Quantizer;
+
+use super::batch::BatchPolicy;
+use super::metrics::Metrics;
+use super::{EncodeRequest, EncodeResponse, Request, SearchRequest,
+            SearchResponse, SubmitError};
+
+/// Shared immutable serving state.
+pub struct ServerState {
+    pub quant: Arc<dyn Quantizer>,
+    pub index: Arc<CompressedIndex>,
+    pub search_cfg: SearchConfig,
+    pub serve_cfg: ServeConfig,
+    pub metrics: Arc<Metrics>,
+}
+
+/// A running coordinator.
+pub struct Server {
+    ingress: mpsc::SyncSender<Request>,
+    pub metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spin up router + workers.
+    pub fn start(quant: Arc<dyn Quantizer>, index: Arc<CompressedIndex>,
+                 search_cfg: SearchConfig, serve_cfg: ServeConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let state = Arc::new(ServerState {
+            quant, index, search_cfg, serve_cfg,
+            metrics: metrics.clone(),
+        });
+
+        let (ingress_tx, ingress_rx) =
+            mpsc::sync_channel::<Request>(serve_cfg.queue_depth);
+        let (search_tx, search_rx) =
+            mpsc::sync_channel::<SearchRequest>(serve_cfg.queue_depth);
+        let (encode_tx, encode_rx) =
+            mpsc::sync_channel::<EncodeRequest>(serve_cfg.queue_depth);
+
+        let mut threads = Vec::new();
+        // router
+        threads.push(
+            std::thread::Builder::new()
+                .name("unq-router".into())
+                .spawn(move || router_main(ingress_rx, search_tx, encode_tx))
+                .expect("spawn router"),
+        );
+        // search worker
+        {
+            let state = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("unq-search".into())
+                    .spawn(move || search_worker(state, search_rx))
+                    .expect("spawn search worker"),
+            );
+        }
+        // encode worker
+        {
+            let state = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("unq-encode".into())
+                    .spawn(move || encode_worker(state, encode_rx))
+                    .expect("spawn encode worker"),
+            );
+        }
+
+        Server {
+            ingress: ingress_tx,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(1)),
+            threads,
+        }
+    }
+
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Non-blocking submit with backpressure.
+    pub fn try_submit(&self, req: Request) -> Result<(), SubmitError> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match self.ingress.try_send(req) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(SubmitError::Overloaded)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submit (demo clients).
+    pub fn submit(&self, req: Request) -> Result<(), SubmitError> {
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.ingress.send(req).map_err(|_| SubmitError::Closed)
+    }
+
+    /// Convenience: blocking round-trip search.
+    pub fn search_blocking(&self, query: &[f32], k: usize)
+                           -> Result<SearchResponse, SubmitError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = SearchRequest {
+            id: self.next_id(),
+            query: query.to_vec(),
+            k,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.submit(Request::Search(req))?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Convenience: blocking round-trip encode.
+    pub fn encode_blocking(&self, vectors: &[f32], rows: usize)
+                           -> Result<EncodeResponse, SubmitError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = EncodeRequest {
+            id: self.next_id(),
+            vectors: vectors.to_vec(),
+            rows,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.submit(Request::Encode(req))?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Graceful shutdown: close ingress, drain, join workers.
+    pub fn shutdown(mut self) {
+        drop(self.ingress);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn router_main(rx: mpsc::Receiver<Request>,
+               search_tx: mpsc::SyncSender<SearchRequest>,
+               encode_tx: mpsc::SyncSender<EncodeRequest>) {
+    // ends when ingress disconnects; downstream queues close on drop
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Search(r) => {
+                if search_tx.send(r).is_err() {
+                    break;
+                }
+            }
+            Request::Encode(r) => {
+                if encode_tx.send(r).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn search_worker(state: Arc<ServerState>, rx: mpsc::Receiver<SearchRequest>) {
+    let serve = state.serve_cfg;
+    let mut batcher = BatchPolicy::<SearchRequest>::new(
+        serve.max_batch, Duration::from_micros(serve.max_delay_us));
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    process_search_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    process_search_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let rest = batcher.take();
+                if !rest.is_empty() {
+                    process_search_batch(&state, rest);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn process_search_batch(state: &ServerState, batch: Vec<SearchRequest>) {
+    let m = &state.metrics;
+    m.batches.fetch_add(1, Ordering::Relaxed);
+    m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    // Stage A: build all LUTs in one call (UNQ: one PJRT batch per AOT
+    // lut_batch of queries; shallow methods: tight loop).
+    let queries: Vec<&[f32]> = batch.iter().map(|r| r.query.as_slice()).collect();
+    let luts = state.quant.lut_batch(&queries);
+
+    // Stage B+C: sharded scan + rerank per query.
+    let engine = SearchEngine::new(state.quant.as_ref(), &state.index,
+                                   state.search_cfg);
+    let shards = state.serve_cfg.shards.max(1);
+    let shard_len = state.index.n.div_ceil(shards);
+    for (req, lut) in batch.into_iter().zip(luts) {
+        let mut cfg = state.search_cfg;
+        cfg.k = req.k;
+        let neighbors = if cfg.no_rerank || !state.quant.supports_rerank() {
+            let parts: Vec<_> = (0..shards)
+                .map(|s| {
+                    let lo = s * shard_len;
+                    scan::scan_range_topk(&lut, &state.index, lo,
+                                          lo + shard_len, req.k)
+                })
+                .collect();
+            scan::merge_topk(parts, req.k)
+                .into_iter().map(|(_, id)| id).collect()
+        } else {
+            let l = cfg.rerank_l.max(req.k);
+            let parts: Vec<_> = (0..shards)
+                .map(|s| {
+                    let lo = s * shard_len;
+                    scan::scan_range_topk(&lut, &state.index, lo,
+                                          lo + shard_len, l)
+                })
+                .collect();
+            let cands: Vec<u32> = scan::merge_topk(parts, l)
+                .into_iter().map(|(_, id)| id).collect();
+            engine.rerank(&req.query, &cands, req.k)
+        };
+        let latency_us = req.submitted.elapsed().as_micros() as u64;
+        m.search_latency.record(latency_us);
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.resp.send(SearchResponse {
+            id: req.id, neighbors, latency_us,
+        });
+    }
+}
+
+fn encode_worker(state: Arc<ServerState>, rx: mpsc::Receiver<EncodeRequest>) {
+    let serve = state.serve_cfg;
+    let mut batcher = BatchPolicy::<EncodeRequest>::new(
+        serve.max_batch, Duration::from_micros(serve.max_delay_us));
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    process_encode_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    process_encode_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let rest = batcher.take();
+                if !rest.is_empty() {
+                    process_encode_batch(&state, rest);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn process_encode_batch(state: &ServerState, batch: Vec<EncodeRequest>) {
+    let m = &state.metrics;
+    m.batches.fetch_add(1, Ordering::Relaxed);
+    m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    // concatenate all rows, one encode_batch call, then split
+    let dim = state.quant.dim();
+    let cb = state.quant.code_bytes();
+    let total_rows: usize = batch.iter().map(|r| r.rows).sum();
+    let mut flat = Vec::with_capacity(total_rows * dim);
+    for req in &batch {
+        flat.extend_from_slice(&req.vectors);
+    }
+    let codes = state.quant.encode_batch(&flat);
+    let mut offset = 0usize;
+    for req in batch {
+        let take = req.rows * cb;
+        let slice = codes[offset..offset + take].to_vec();
+        offset += take;
+        let latency_us = req.submitted.elapsed().as_micros() as u64;
+        m.encode_latency.record(latency_us);
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.resp.send(EncodeResponse {
+            id: req.id, codes: slice, latency_us,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SearchConfig, ServeConfig};
+    use crate::data::{synthetic::Generator, Family};
+    use crate::quant::pq::Pq;
+
+    fn start_pq_server(max_batch: usize, queue_depth: usize) -> (Server, crate::data::Dataset) {
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let base = Generator::new(Family::SiftLike, 31).generate(1, 1500);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let index = CompressedIndex::build(&pq, &base);
+        let server = Server::start(
+            Arc::new(pq),
+            Arc::new(index),
+            SearchConfig { rerank_l: 64, k: 10, no_rerank: false,
+                           exhaustive_rerank: false },
+            ServeConfig { max_batch, max_delay_us: 500, queue_depth,
+                          shards: 3 },
+        );
+        (server, base)
+    }
+
+    #[test]
+    fn end_to_end_search_matches_direct_engine() {
+        let (server, base) = start_pq_server(4, 64);
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 8);
+        // direct reference
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let index = CompressedIndex::build(&pq, &base);
+        let engine = SearchEngine::new(&pq, &index, SearchConfig {
+            rerank_l: 64, k: 10, no_rerank: false, exhaustive_rerank: false,
+        });
+        for qi in 0..queries.len() {
+            let resp = server.search_blocking(queries.row(qi), 10).unwrap();
+            let want = engine.search(queries.row(qi));
+            assert_eq!(resp.neighbors, want, "query {qi}");
+            assert!(resp.latency_us > 0);
+        }
+        assert_eq!(server.metrics.completed.load(Ordering::Relaxed), 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn encode_roundtrip_matches_direct() {
+        let (server, base) = start_pq_server(4, 64);
+        let rows = 5;
+        let resp = server.encode_blocking(base.rows(0, rows), rows).unwrap();
+        assert_eq!(resp.codes.len(), rows * 8);
+        // direct
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let want = pq.encode_batch(base.rows(0, rows));
+        assert_eq!(resp.codes, want);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_coalesces_concurrent_clients() {
+        let (server, _) = start_pq_server(8, 256);
+        let server = Arc::new(server);
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 64);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = server.clone();
+            let q = queries.clone();
+            handles.push(std::thread::spawn(move || {
+                for qi in (t * 16)..(t * 16 + 16) {
+                    let r = s.search_blocking(q.row(qi), 5).unwrap();
+                    assert_eq!(r.neighbors.len(), 5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = &server.metrics;
+        assert_eq!(m.completed.load(Ordering::Relaxed), 64);
+        // at least some batches should hold >1 query (4 concurrent clients,
+        // 500 µs window)
+        assert!(m.mean_batch_size() >= 1.0);
+        Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn graceful_shutdown_drains() {
+        let (server, base) = start_pq_server(64, 64);
+        // single in-flight request then immediate shutdown
+        let (tx, rx) = mpsc::sync_channel(1);
+        server.submit(Request::Search(SearchRequest {
+            id: 1,
+            query: base.row(0).to_vec(),
+            k: 3,
+            submitted: Instant::now(),
+            resp: tx,
+        })).unwrap();
+        server.shutdown(); // must flush the partial batch
+        let resp = rx.try_recv().expect("drained response");
+        assert_eq!(resp.neighbors.len(), 3);
+    }
+
+    #[test]
+    fn sharded_scan_equals_unsharded() {
+        // start two servers differing only in shard count
+        let (s1, base) = start_pq_server(1, 64);
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let index = CompressedIndex::build(&pq, &base);
+        let s8 = Server::start(
+            Arc::new(pq), Arc::new(index),
+            SearchConfig { rerank_l: 64, k: 10, no_rerank: false,
+                           exhaustive_rerank: false },
+            ServeConfig { max_batch: 1, max_delay_us: 100, queue_depth: 64,
+                          shards: 8 },
+        );
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 5);
+        for qi in 0..queries.len() {
+            let a = s1.search_blocking(queries.row(qi), 10).unwrap();
+            let b = s8.search_blocking(queries.row(qi), 10).unwrap();
+            assert_eq!(a.neighbors, b.neighbors);
+        }
+        s1.shutdown();
+        s8.shutdown();
+    }
+}

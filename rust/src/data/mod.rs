@@ -1,0 +1,230 @@
+//! Dataset substrate: synthetic descriptor generators + *vecs file I/O.
+//!
+//! The paper evaluates on Deep1M/10M/1B (96-d CNN descriptors) and
+//! BigANN1M/10M/1B (128-d SIFT).  Neither corpus is available on this
+//! testbed, so we *simulate* them (DESIGN.md §3): generators that
+//! reproduce the statistical traits each method family is sensitive to,
+//! at scaled-down sizes.  Generation is fully deterministic given the
+//! catalog seed, and every split is cached to disk as standard fvecs so
+//! the build-time Python trainer reads byte-identical data.
+
+pub mod synthetic;
+pub mod vecs;
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// A dataset resident in memory: `n` rows of dimension `dim`, flat.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new(dim: usize, data: Vec<f32>) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0, "ragged dataset");
+        Dataset { dim, data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Borrow a contiguous range of rows `[lo, hi)` as a flat slice.
+    #[inline]
+    pub fn rows(&self, lo: usize, hi: usize) -> &[f32] {
+        &self.data[lo * self.dim..hi * self.dim]
+    }
+
+    /// First `n` rows as a new dataset (cheap prefix view for scale sweeps).
+    pub fn prefix(&self, n: usize) -> Dataset {
+        let n = n.min(self.len());
+        Dataset::new(self.dim, self.data[..n * self.dim].to_vec())
+    }
+}
+
+/// The descriptor family a synthetic dataset mimics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Deep1B-like: 96-d, L2-normalized outputs of a random ReLU net over
+    /// a GMM latent — low intrinsic dimension, strong coordinate coupling.
+    DeepLike,
+    /// BigANN-like: 128-d, non-negative heavy-tailed block-correlated
+    /// gradient-histogram integers in [0, 218].
+    SiftLike,
+}
+
+impl Family {
+    pub fn dim(&self) -> usize {
+        match self {
+            Family::DeepLike => 96,
+            Family::SiftLike => 128,
+        }
+    }
+}
+
+/// One named dataset in the catalog: a family plus split sizes.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: String,
+    pub family: Family,
+    pub n_base: usize,
+    pub n_train: usize,
+    pub n_query: usize,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn dim(&self) -> usize {
+        self.family.dim()
+    }
+}
+
+/// The standard catalog mirroring the paper's six evaluation corpora at
+/// testbed scale (DESIGN.md §3: "1M"→100k, "10M"→300k, "1B"→1M base
+/// vectors; 20k train is what the trainer subsamples from the 100k split).
+/// `scale` multiplies base sizes (UNQ_SCALE env, for quick runs use < 1).
+pub fn catalog(scale: f64) -> Vec<DatasetSpec> {
+    let s = |n: usize| ((n as f64 * scale) as usize).max(1000);
+    let mk = |name: &str, family: Family, n_base: usize, seed: u64| DatasetSpec {
+        name: name.to_string(),
+        family,
+        n_base: s(n_base),
+        n_train: s(100_000),
+        n_query: 1000.min(s(100_000)),
+        seed,
+    };
+    vec![
+        mk("deep1m", Family::DeepLike, 100_000, 11),
+        mk("sift1m", Family::SiftLike, 100_000, 12),
+        mk("deep10m", Family::DeepLike, 300_000, 13),
+        mk("sift10m", Family::SiftLike, 300_000, 14),
+        mk("deep1b", Family::DeepLike, 1_000_000, 15),
+        mk("sift1b", Family::SiftLike, 1_000_000, 16),
+    ]
+}
+
+/// Look up a catalog entry by name.
+pub fn spec_by_name(name: &str, scale: f64) -> Option<DatasetSpec> {
+    catalog(scale).into_iter().find(|s| s.name == name)
+}
+
+/// The three splits of a generated dataset.
+pub struct Splits {
+    pub train: Dataset,
+    pub base: Dataset,
+    pub query: Dataset,
+}
+
+/// Paths of the cached splits for a spec under `data_dir`.
+pub fn split_paths(data_dir: &Path, name: &str) -> (PathBuf, PathBuf, PathBuf) {
+    let d = data_dir.join(name);
+    (d.join("train.fvecs"), d.join("base.fvecs"), d.join("query.fvecs"))
+}
+
+/// Generate (or load from cache) all splits of a dataset spec.
+///
+/// Splits are generated from disjoint PRNG streams of the same seed, so
+/// train/base/query never overlap yet share the distribution — matching
+/// the paper's protocol of separate learn/base/query sets.
+pub fn load_or_generate(spec: &DatasetSpec, data_dir: &Path) -> Result<Splits> {
+    let (tp, bp, qp) = split_paths(data_dir, &spec.name);
+    if tp.exists() && bp.exists() && qp.exists() {
+        let train = vecs::read_fvecs(&tp, None)?;
+        let base = vecs::read_fvecs(&bp, None)?;
+        let query = vecs::read_fvecs(&qp, None)?;
+        if train.len() >= spec.n_train && base.len() >= spec.n_base
+            && query.len() >= spec.n_query
+        {
+            return Ok(Splits {
+                train: train.prefix(spec.n_train),
+                base: base.prefix(spec.n_base),
+                query: query.prefix(spec.n_query),
+            });
+        }
+        // cached files too small for this spec — regenerate below
+    }
+    std::fs::create_dir_all(data_dir.join(&spec.name))?;
+    let gen = synthetic::Generator::new(spec.family, spec.seed);
+    let train = gen.generate(0, spec.n_train);
+    let base = gen.generate(1, spec.n_base);
+    let query = gen.generate(2, spec.n_query);
+    vecs::write_fvecs(&tp, &train)?;
+    vecs::write_fvecs(&bp, &base)?;
+    vecs::write_fvecs(&qp, &query)?;
+    Ok(Splits { train, base, query })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_rows() {
+        let d = Dataset::new(3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.row(1), &[4., 5., 6.]);
+        assert_eq!(d.rows(0, 2).len(), 6);
+        assert_eq!(d.prefix(1).len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rejected() {
+        Dataset::new(4, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn catalog_names_unique_and_dims() {
+        let cat = catalog(1.0);
+        let mut names: Vec<_> = cat.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), cat.len());
+        for s in &cat {
+            assert!(s.dim() == 96 || s.dim() == 128);
+            assert!(s.n_base >= s.n_query);
+        }
+    }
+
+    #[test]
+    fn catalog_scale_shrinks() {
+        let full = spec_by_name("deep1m", 1.0).unwrap();
+        let tiny = spec_by_name("deep1m", 0.05).unwrap();
+        assert!(tiny.n_base < full.n_base);
+        assert!(tiny.n_base >= 1000);
+    }
+
+    #[test]
+    fn load_or_generate_roundtrip() {
+        let dir = crate::util::TempDir::new("data").unwrap();
+        let spec = DatasetSpec {
+            name: "t".into(),
+            family: Family::DeepLike,
+            n_base: 500,
+            n_train: 200,
+            n_query: 50,
+            seed: 7,
+        };
+        let s1 = load_or_generate(&spec, dir.path()).unwrap();
+        let s2 = load_or_generate(&spec, dir.path()).unwrap(); // from cache
+        assert_eq!(s1.base.data, s2.base.data);
+        assert_eq!(s1.train.len(), 200);
+        assert_eq!(s1.query.len(), 50);
+        // distinct splits
+        assert_ne!(s1.train.row(0), s1.base.row(0));
+    }
+}

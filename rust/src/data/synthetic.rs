@@ -1,0 +1,221 @@
+//! Synthetic descriptor generators (the data substrate, DESIGN.md §3).
+//!
+//! * **deep-like** — simulates Deep1B: a latent GMM in 32-d pushed through
+//!   a fixed random 2-layer ReLU net to 96-d, then L2-normalized.  This
+//!   reproduces the properties the paper's comparison hinges on: low
+//!   intrinsic dimensionality, strongly coupled coordinates (so orthogonal
+//!   decompositions like PQ lose accuracy and additive/learned models win)
+//!   and unit-norm vectors.
+//! * **sift-like** — simulates BigANN SIFT: non-negative, heavy-tailed
+//!   gradient-histogram integers with block-level correlation (16 blocks
+//!   of 8 bins sharing an orientation energy), saturated at 218 like real
+//!   SIFT.  Subspaces are nearly independent, the regime where (O)PQ/LSQ
+//!   are strongest.
+//!
+//! Determinism: every (family, seed, split, row) is generated from a
+//! counter-keyed SplitMix/ChaCha stream, so any prefix of any split is
+//! stable regardless of how many rows are requested.
+
+use super::{Dataset, Family};
+use crate::util::rng::SplitMix64;
+
+/// Number of GMM components in the deep-like latent space.
+const DEEP_COMPONENTS: usize = 64;
+/// Latent dimensionality of the deep-like generator.
+const DEEP_LATENT: usize = 32;
+/// Hidden width of the fixed random ReLU net.
+const DEEP_HIDDEN: usize = 128;
+/// SIFT-like histogram saturation (real SIFT clips at ~218 of 255).
+const SIFT_SATURATION: f32 = 218.0;
+/// SIFT block structure: 16 spatial cells × 8 orientation bins.
+const SIFT_BLOCKS: usize = 16;
+
+/// Deterministic generator for one (family, seed) pair.
+pub struct Generator {
+    family: Family,
+    seed: u64,
+    deep: Option<DeepNet>,
+}
+
+/// The fixed random network + mixture shared by all deep-like splits.
+struct DeepNet {
+    centers: Vec<f32>,        // (COMPONENTS, LATENT)
+    center_scale: Vec<f32>,   // per-component spread
+    w1: Vec<f32>,             // (LATENT, HIDDEN)
+    w2: Vec<f32>,             // (HIDDEN, 96)
+}
+
+impl Generator {
+    pub fn new(family: Family, seed: u64) -> Self {
+        let deep = match family {
+            Family::DeepLike => Some(DeepNet::new(seed)),
+            Family::SiftLike => None,
+        };
+        Generator { family, seed, deep }
+    }
+
+    /// Generate `n` rows of the given split (0=train, 1=base, 2=query).
+    pub fn generate(&self, split: u64, n: usize) -> Dataset {
+        let dim = self.family.dim();
+        let mut data = vec![0.0f32; n * dim];
+        for i in 0..n {
+            let mut rng = self.row_rng(split, i as u64);
+            let row = &mut data[i * dim..(i + 1) * dim];
+            match self.family {
+                Family::DeepLike => {
+                    self.deep.as_ref().unwrap().sample(&mut rng, row)
+                }
+                Family::SiftLike => sample_sift(&mut rng, row),
+            }
+        }
+        Dataset::new(dim, data)
+    }
+
+    fn row_rng(&self, split: u64, row: u64) -> SplitMix64 {
+        // counter-keyed: (seed, split, row) → independent stream
+        SplitMix64::from_key(&[self.seed, split, row, 0xD1B54A32D192ED03])
+    }
+}
+
+impl DeepNet {
+    fn new(seed: u64) -> Self {
+        let mut rng = SplitMix64::from_key(&[seed, 0xA5A5_5A5A]);
+        let centers: Vec<f32> = (0..DEEP_COMPONENTS * DEEP_LATENT)
+            .map(|_| 2.2 * rng.normal())
+            .collect();
+        let center_scale: Vec<f32> = (0..DEEP_COMPONENTS)
+            .map(|_| 0.12 + 0.3 * rng.next_f32())
+            .collect();
+        let s1 = (2.0 / DEEP_LATENT as f32).sqrt();
+        let w1: Vec<f32> = (0..DEEP_LATENT * DEEP_HIDDEN)
+            .map(|_| s1 * rng.normal())
+            .collect();
+        let s2 = (2.0 / DEEP_HIDDEN as f32).sqrt();
+        let w2: Vec<f32> = (0..DEEP_HIDDEN * 96)
+            .map(|_| s2 * rng.normal())
+            .collect();
+        DeepNet { centers, center_scale, w1, w2 }
+    }
+
+    fn sample(&self, rng: &mut SplitMix64, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), 96);
+        let comp = rng.below(DEEP_COMPONENTS);
+        let scale = self.center_scale[comp];
+        let center = &self.centers[comp * DEEP_LATENT..(comp + 1) * DEEP_LATENT];
+        // latent = center + scale * noise
+        let mut latent = [0.0f32; DEEP_LATENT];
+        for (l, c) in latent.iter_mut().zip(center) {
+            *l = c + scale * rng.normal();
+        }
+        // hidden = relu(latent @ w1)
+        let mut hidden = [0.0f32; DEEP_HIDDEN];
+        for (j, h) in hidden.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (i, l) in latent.iter().enumerate() {
+                acc += l * self.w1[i * DEEP_HIDDEN + j];
+            }
+            *h = acc.max(0.0);
+        }
+        // out = hidden @ w2, L2-normalized
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for (i, h) in hidden.iter().enumerate() {
+                if *h != 0.0 {
+                    acc += h * self.w2[i * 96 + j];
+                }
+            }
+            *o = acc;
+        }
+        let n: f32 = out.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9);
+        out.iter_mut().for_each(|v| *v /= n);
+    }
+}
+
+/// One sift-like histogram row: 16 blocks × 8 bins, exponential magnitudes
+/// modulated by a per-block gamma-ish energy, integer-quantized, saturated.
+fn sample_sift(rng: &mut SplitMix64, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), 128);
+    let bins = out.len() / SIFT_BLOCKS;
+    for b in 0..SIFT_BLOCKS {
+        // block energy: sum of two exponentials → gamma(2, ·) heavy tail
+        let energy = 6.0 * (rng.exponential() + rng.exponential());
+        // one dominant orientation per block, as in real gradient patches
+        let dominant = rng.below(bins);
+        for k in 0..bins {
+            let boost = if k == dominant { 3.0 } else { 1.0 };
+            let v = energy * boost * rng.exponential();
+            out[b * bins + k] = v.floor().min(SIFT_SATURATION);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    #[test]
+    fn deep_like_is_unit_norm() {
+        let g = Generator::new(Family::DeepLike, 3);
+        let d = g.generate(1, 50);
+        for i in 0..d.len() {
+            let n = linalg::norm(d.row(i));
+            assert!((n - 1.0).abs() < 1e-4, "row {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn sift_like_is_nonneg_saturated_ints() {
+        let g = Generator::new(Family::SiftLike, 3);
+        let d = g.generate(1, 50);
+        for v in &d.data {
+            assert!(*v >= 0.0 && *v <= SIFT_SATURATION);
+            assert_eq!(v.fract(), 0.0, "sift-like values are integers");
+        }
+        // heavy tail: some values should be large
+        assert!(d.data.iter().any(|v| *v > 50.0));
+    }
+
+    #[test]
+    fn deterministic_and_prefix_stable() {
+        let g1 = Generator::new(Family::DeepLike, 9);
+        let g2 = Generator::new(Family::DeepLike, 9);
+        let a = g1.generate(1, 20);
+        let b = g2.generate(1, 40);
+        assert_eq!(a.data[..], b.data[..20 * 96]);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let g = Generator::new(Family::SiftLike, 9);
+        let a = g.generate(0, 5);
+        let b = g.generate(1, 5);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let a = Generator::new(Family::DeepLike, 1).generate(1, 3);
+        let b = Generator::new(Family::DeepLike, 2).generate(1, 3);
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn deep_like_clustered() {
+        // GMM latent ⇒ some pairs are much closer than others.
+        let g = Generator::new(Family::DeepLike, 5);
+        let d = g.generate(1, 200);
+        let mut dists = Vec::new();
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                dists.push(linalg::sq_l2(d.row(i), d.row(j)));
+            }
+        }
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // ~1/64 of pairs share a GMM component; those are far closer than
+        // the cross-component median.
+        let lo = dists[dists.len() / 100];
+        let hi = dists[dists.len() / 2];
+        assert!(hi > 3.0 * lo, "expected clustered structure: {lo} vs {hi}");
+    }
+}

@@ -1,0 +1,159 @@
+//! fvecs / ivecs file I/O (the TEXMEX interchange formats).
+//!
+//! fvecs: per row, little-endian `i32` dim then `dim` `f32`s.
+//! ivecs: same with `i32` payloads.  These are the on-disk contract
+//! between the Rust generators/GT and the build-time Python trainer.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{ensure, Context};
+
+use super::Dataset;
+use crate::Result;
+
+/// Read an fvecs file; `limit` caps the number of rows.
+pub fn read_fvecs(path: &Path, limit: Option<usize>) -> Result<Dataset> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut dim_buf = [0u8; 4];
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    let mut rows = 0usize;
+    loop {
+        if let Some(l) = limit {
+            if rows >= l {
+                break;
+            }
+        }
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(dim_buf) as usize;
+        ensure!(d > 0 && d < 1 << 20, "bad fvecs dim {d} in {path:?}");
+        if dim == 0 {
+            dim = d;
+        }
+        ensure!(d == dim, "inconsistent dims in {path:?}: {d} vs {dim}");
+        let mut row = vec![0u8; d * 4];
+        r.read_exact(&mut row)
+            .with_context(|| format!("truncated row {rows} in {path:?}"))?;
+        data.extend(row.chunks_exact(4).map(|c| {
+            f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+        }));
+        rows += 1;
+    }
+    ensure!(rows > 0, "empty fvecs file {path:?}");
+    Ok(Dataset::new(dim, data))
+}
+
+/// Write a dataset as fvecs.
+pub fn write_fvecs(path: &Path, d: &Dataset) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    let dim_le = (d.dim as i32).to_le_bytes();
+    for i in 0..d.len() {
+        w.write_all(&dim_le)?;
+        for v in d.row(i) {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write int rows (e.g. ground-truth neighbor ids) as ivecs.
+pub fn write_ivecs(path: &Path, rows: &[Vec<i32>]) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(file);
+    for row in rows {
+        w.write_all(&(row.len() as i32).to_le_bytes())?;
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an ivecs file into row vectors.
+pub fn read_ivecs(path: &Path) -> Result<Vec<Vec<i32>>> {
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(file);
+    let mut dim_buf = [0u8; 4];
+    let mut out = Vec::new();
+    loop {
+        match r.read_exact(&mut dim_buf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(dim_buf) as usize;
+        ensure!(d < 1 << 20, "bad ivecs dim {d} in {path:?}");
+        let mut row = vec![0u8; d * 4];
+        r.read_exact(&mut row)?;
+        out.push(
+            row.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let dir = crate::util::TempDir::new("vecs").unwrap();
+        let p = dir.path().join("x.fvecs");
+        let d = Dataset::new(3, vec![1.5, -2.0, 0.0, 7.25, 8.0, -0.125]);
+        write_fvecs(&p, &d).unwrap();
+        let back = read_fvecs(&p, None).unwrap();
+        assert_eq!(back.dim, 3);
+        assert_eq!(back.data, d.data);
+    }
+
+    #[test]
+    fn fvecs_limit() {
+        let dir = crate::util::TempDir::new("vecs").unwrap();
+        let p = dir.path().join("x.fvecs");
+        let d = Dataset::new(2, (0..10).map(|i| i as f32).collect());
+        write_fvecs(&p, &d).unwrap();
+        let back = read_fvecs(&p, Some(2)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.data, vec![0., 1., 2., 3.]);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let dir = crate::util::TempDir::new("vecs").unwrap();
+        let p = dir.path().join("g.ivecs");
+        let rows = vec![vec![1, 2, 3], vec![-4, 5, 6]];
+        write_ivecs(&p, &rows).unwrap();
+        assert_eq!(read_ivecs(&p).unwrap(), rows);
+    }
+
+    #[test]
+    fn empty_fvecs_is_error() {
+        let dir = crate::util::TempDir::new("vecs").unwrap();
+        let p = dir.path().join("e.fvecs");
+        std::fs::write(&p, b"").unwrap();
+        assert!(read_fvecs(&p, None).is_err());
+    }
+
+    #[test]
+    fn truncated_fvecs_is_error() {
+        let dir = crate::util::TempDir::new("vecs").unwrap();
+        let p = dir.path().join("t.fvecs");
+        let mut bytes = (3i32).to_le_bytes().to_vec();
+        bytes.extend(1.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_fvecs(&p, None).is_err());
+    }
+}

@@ -1,0 +1,315 @@
+//! Experiment harness: train-or-load quantizers, build-or-load indexes,
+//! run the two-stage search over the query set, compute Recall@k.
+//!
+//! This is the shared engine behind `unq tables`, the per-table benches
+//! and the examples.  Heavy artifacts (trained baselines, encoded
+//! databases) are cached under `runs/` keyed by (dataset, method, bytes,
+//! base size), so regenerating a table re-uses everything that already
+//! exists.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::config::{AppConfig, QuantizerKind, SearchConfig};
+use crate::data::{self, Dataset};
+use crate::gt::GroundTruth;
+use crate::index::{CompressedIndex, SearchEngine};
+use crate::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq,
+                   unq::UnqQuantizer, Quantizer};
+use crate::runtime::UnqRuntime;
+use crate::store::Store;
+use crate::Result;
+
+use super::{recall, Recall};
+
+/// Everything needed to evaluate one (dataset, method, bytes) cell.
+pub struct Experiment {
+    pub cfg: AppConfig,
+    pub splits: data::Splits,
+    pub gt: GroundTruth,
+    /// kept alive for UNQ (owns the runtime thread)
+    pub runtime: Option<UnqRuntime>,
+    pub quant: Box<dyn Quantizer>,
+    pub index: CompressedIndex,
+    /// wall-clock seconds spent training (0 when loaded from cache)
+    pub train_secs: f64,
+    /// wall-clock seconds spent encoding the base set
+    pub encode_secs: f64,
+}
+
+impl Experiment {
+    /// Run the full query set and compute Recall@{1,10,100}.
+    pub fn run_recall(&self, search: SearchConfig) -> Recall {
+        let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
+        let results: Vec<Vec<u32>> = (0..self.splits.query.len())
+            .map(|qi| engine.search(self.splits.query.row(qi)))
+            .collect();
+        recall(&results, &self.gt)
+    }
+
+    /// Per-query mean latency of the two-stage search, in seconds.
+    pub fn measure_latency(&self, search: SearchConfig, queries: usize) -> f64 {
+        let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
+        let nq = queries.min(self.splits.query.len());
+        let t0 = Instant::now();
+        for qi in 0..nq {
+            std::hint::black_box(engine.search(self.splits.query.row(qi)));
+        }
+        t0.elapsed().as_secs_f64() / nq.max(1) as f64
+    }
+}
+
+fn model_cache_path(cfg: &AppConfig, kind: QuantizerKind) -> PathBuf {
+    cfg.runs_dir.join(format!(
+        "model_{}_{}_{}b.store",
+        cfg.dataset,
+        kind.name().replace(['+', ' '], "_"),
+        cfg.bytes_per_vector
+    ))
+}
+
+fn codes_cache_path(cfg: &AppConfig, kind: QuantizerKind, n_base: usize,
+                    variant: &str) -> PathBuf {
+    cfg.runs_dir.join(format!(
+        "codes_{}_{}_{}b_n{}{}.store",
+        cfg.dataset,
+        kind.name().replace(['+', ' '], "_"),
+        cfg.bytes_per_vector,
+        n_base,
+        if variant.is_empty() { String::new() } else { format!("_{variant}") }
+    ))
+}
+
+/// Train a shallow baseline or load it from the runs cache.
+pub fn train_or_load_shallow(cfg: &AppConfig, kind: QuantizerKind,
+                             train: &Dataset) -> Result<(Box<dyn Quantizer>, f64)> {
+    let path = model_cache_path(cfg, kind);
+    let dim = train.dim;
+    let m = cfg.bytes_per_vector;
+    let k = cfg.k_codewords;
+    // additive methods spend one byte on the norm (DESIGN.md): m-1 codebooks
+    let m_add = m.saturating_sub(1).max(1);
+
+    if path.exists() {
+        let store = Store::load(&path)?;
+        let q: Box<dyn Quantizer> = match kind {
+            QuantizerKind::Pq => Box::new(Pq::load(&store, "")?),
+            QuantizerKind::Opq => Box::new(Opq::load(&store, "")?),
+            QuantizerKind::Rvq | QuantizerKind::Lsq | QuantizerKind::LsqRerank =>
+                Box::new(Additive::load(&store, "")?),
+            QuantizerKind::CatalystLattice => {
+                let map = lattice::CatalystMap::load(&store, "")?;
+                let meta = store.get_meta("lattice").context("lattice meta")?;
+                let parts: Vec<i64> =
+                    meta.split(',').map(|p| p.parse().unwrap_or(0)).collect();
+                Box::new(lattice::CatalystLattice {
+                    map, r2: parts[0], nominal: parts[1] as usize,
+                })
+            }
+            QuantizerKind::CatalystOpq => {
+                let map = lattice::CatalystMap::load(&store, "cat_")?;
+                let opq = Opq::load(&store, "")?;
+                Box::new(lattice::CatalystOpq { map, opq })
+            }
+            QuantizerKind::Unq => bail!("UNQ is artifact-backed, not cached here"),
+        };
+        return Ok((q, 0.0));
+    }
+
+    let t0 = Instant::now();
+    eprintln!("[harness] training {} on {} ({} vectors, {}B budget)",
+              kind.name(), cfg.dataset, train.len(), m);
+    let mut store = Store::new();
+    let q: Box<dyn Quantizer> = match kind {
+        QuantizerKind::Pq => {
+            let q = Pq::train(&train.data, dim, m, k, 0, 15);
+            q.save(&mut store, "");
+            Box::new(q)
+        }
+        QuantizerKind::Opq => {
+            let q = Opq::train(&train.data, dim, m, k, 0, 4, 10);
+            q.save(&mut store, "");
+            Box::new(q)
+        }
+        QuantizerKind::Rvq => {
+            let q = Additive::train_rvq(&train.data, dim, m_add, k, 0, 12, "RVQ");
+            q.save(&mut store, "");
+            Box::new(q)
+        }
+        QuantizerKind::Lsq | QuantizerKind::LsqRerank => {
+            let q = lsq::train_lsq(&train.data, dim, m_add, k,
+                                   &lsq::LsqConfig::default());
+            q.save(&mut store, "");
+            Box::new(q)
+        }
+        QuantizerKind::CatalystLattice => {
+            let q = lattice::CatalystLattice::train(&train.data, dim, m);
+            q.map.save(&mut store, "");
+            store.put_meta("lattice", &format!("{},{}", q.r2, q.nominal));
+            Box::new(q)
+        }
+        QuantizerKind::CatalystOpq => {
+            let q = lattice::CatalystOpq::train(&train.data, dim, m, k, 0);
+            q.map.save(&mut store, "cat_");
+            q.opq.save(&mut store, "");
+            Box::new(q)
+        }
+        QuantizerKind::Unq => bail!("UNQ is artifact-backed; use load_unq"),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!("[harness] trained {} in {:.1}s", kind.name(), secs);
+    store.save(&path)?;
+    Ok((q, secs))
+}
+
+/// Resolve the UNQ artifact bundle name for a config (+ ablation variant).
+pub fn unq_artifact_name(cfg: &AppConfig, variant: &str) -> String {
+    if variant.is_empty() || variant == "unq" {
+        // main bundles are trained on the 1M-scale split of each family
+        let family = if cfg.dataset.starts_with("deep") { "deep1m" } else { "sift1m" };
+        format!("{}_{}b", family, cfg.bytes_per_vector)
+    } else {
+        format!("abl_{variant}")
+    }
+}
+
+/// Load the UNQ runtime + quantizer for a config. Returns an error whose
+/// message mentions `make artifacts` when the bundle is missing.
+pub fn load_unq(cfg: &AppConfig, variant: &str)
+                -> Result<(UnqRuntime, UnqQuantizer)> {
+    let name = unq_artifact_name(cfg, variant);
+    let dir = cfg.artifacts_dir.join(&name);
+    let rt = UnqRuntime::load(&dir)
+        .with_context(|| format!("load UNQ artifact {name:?} — run `make artifacts`"))?;
+    let q = UnqQuantizer::new(rt.handle.clone());
+    Ok((rt, q))
+}
+
+/// Prepare the full experiment for one (dataset, method, bytes) cell.
+/// `variant` selects a Table-5 ablation bundle for UNQ ("" for the paper
+/// configuration).
+pub fn prepare(cfg: &AppConfig, variant: &str) -> Result<Experiment> {
+    std::fs::create_dir_all(&cfg.runs_dir)?;
+    let spec = data::spec_by_name(&cfg.dataset, cfg.scale)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    let splits = data::load_or_generate(&spec, &cfg.data_dir)?;
+    let gt = crate::gt::load_or_compute(&cfg.data_dir, &spec.name,
+                                        &splits.base, &splits.query, 100)?;
+
+    let (runtime, quant, train_secs): (Option<UnqRuntime>, Box<dyn Quantizer>, f64) =
+        if cfg.quantizer == QuantizerKind::Unq {
+            let (rt, q) = load_unq(cfg, variant)?;
+            (Some(rt), Box::new(q), 0.0)
+        } else {
+            let (q, secs) = train_or_load_shallow(cfg, cfg.quantizer, &splits.train)?;
+            (None, q, secs)
+        };
+
+    // encode the base set (cached)
+    let codes_path = codes_cache_path(cfg, cfg.quantizer, splits.base.len(), variant);
+    let (index, encode_secs) = if codes_path.exists() {
+        let store = Store::load(&codes_path)?;
+        let (shape, codes) = store.get_u8("codes").context("codes blob")?;
+        (CompressedIndex::from_codes(shape[0], shape[1], codes.to_vec()), 0.0)
+    } else {
+        let t0 = Instant::now();
+        let index = CompressedIndex::build(quant.as_ref(), &splits.base);
+        let secs = t0.elapsed().as_secs_f64();
+        eprintln!("[harness] encoded {} vectors with {} in {:.1}s",
+                  index.n, quant.name(), secs);
+        let mut store = Store::new();
+        store.put_u8("codes", &[index.n, index.stride], index.codes.clone());
+        store.save(&codes_path)?;
+        (index, secs)
+    };
+
+    Ok(Experiment {
+        cfg: cfg.clone(), splits, gt, runtime, quant, index,
+        train_secs, encode_secs,
+    })
+}
+
+/// The default search config for a (method, dataset) cell, following the
+/// paper: rerank top-500 at "1M" scale, top-1000 at "1B" scale; LSQ-plain
+/// and Catalyst rows search without reranking.
+pub fn paper_search_config(kind: QuantizerKind, dataset: &str, k: usize)
+                           -> SearchConfig {
+    let rerank_l = if dataset.ends_with("1b") { 1000 } else { 500 };
+    let no_rerank = matches!(
+        kind,
+        QuantizerKind::Pq | QuantizerKind::Opq | QuantizerKind::Rvq
+            | QuantizerKind::Lsq | QuantizerKind::CatalystLattice
+            | QuantizerKind::CatalystOpq
+    );
+    SearchConfig { rerank_l, k, no_rerank, exhaustive_rerank: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn tiny_cfg(dir: &std::path::Path, kind: QuantizerKind) -> AppConfig {
+        let mut cfg = AppConfig::default();
+        cfg.dataset = "sift1m".into();
+        cfg.quantizer = kind;
+        cfg.bytes_per_vector = 8;
+        cfg.k_codewords = 64; // small codebooks keep the test fast
+        cfg.scale = 0.02;     // 2000 base vectors
+        cfg.data_dir = dir.join("data");
+        cfg.runs_dir = dir.join("runs");
+        cfg.artifacts_dir = dir.join("artifacts");
+        cfg
+    }
+
+    #[test]
+    fn end_to_end_pq_recall_beats_random() {
+        let dir = TempDir::new("harness").unwrap();
+        let cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
+        let exp = prepare(&cfg, "").unwrap();
+        let r = exp.run_recall(SearchConfig {
+            rerank_l: 100, k: 100, no_rerank: false, exhaustive_rerank: false,
+        });
+        // random top-100 of 2000 would give R@100 ≈ 5%
+        assert!(r.at100 > 30.0, "R@100 = {}", r.at100);
+        assert!(r.at1 > 1.0, "R@1 = {}", r.at1);
+        assert!(r.at1 <= r.at10 && r.at10 <= r.at100);
+    }
+
+    #[test]
+    fn cache_reuse_second_prepare_is_trainless() {
+        let dir = TempDir::new("harness").unwrap();
+        let cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
+        let first = prepare(&cfg, "").unwrap();
+        assert!(first.train_secs > 0.0);
+        let second = prepare(&cfg, "").unwrap();
+        assert_eq!(second.train_secs, 0.0);
+        assert_eq!(second.encode_secs, 0.0);
+        assert_eq!(first.index.codes, second.index.codes);
+    }
+
+    #[test]
+    fn paper_search_defaults() {
+        let s = paper_search_config(QuantizerKind::Lsq, "sift1m", 100);
+        assert!(s.no_rerank);
+        let s = paper_search_config(QuantizerKind::LsqRerank, "sift1b", 100);
+        assert!(!s.no_rerank);
+        assert_eq!(s.rerank_l, 1000);
+        let s = paper_search_config(QuantizerKind::Unq, "deep1m", 100);
+        assert!(!s.no_rerank);
+        assert_eq!(s.rerank_l, 500);
+    }
+
+    #[test]
+    fn unq_without_artifacts_gives_actionable_error() {
+        let dir = TempDir::new("harness").unwrap();
+        let cfg = tiny_cfg(dir.path(), QuantizerKind::Unq);
+        let err = match prepare(&cfg, "") {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("expected missing-artifact error"),
+        };
+        assert!(err.contains("make artifacts"), "err: {err}");
+    }
+}

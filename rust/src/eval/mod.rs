@@ -1,0 +1,188 @@
+//! Evaluation harness: Recall@k and paper-style table rendering.
+//!
+//! Recall@k here follows the paper (and the TEXMEX convention): the
+//! probability that the query's *true nearest neighbor* appears among the
+//! k results returned from the compressed index.
+
+pub mod harness;
+pub mod tables;
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::gt::GroundTruth;
+
+/// Recall@{1,10,100} triple, in percent.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Recall {
+    pub at1: f32,
+    pub at10: f32,
+    pub at100: f32,
+}
+
+impl Recall {
+    pub fn get(&self, k: usize) -> f32 {
+        match k {
+            1 => self.at1,
+            10 => self.at10,
+            100 => self.at100,
+            _ => panic!("recall tracked only at 1/10/100"),
+        }
+    }
+}
+
+/// Compute Recall@{1,10,100} of per-query result id lists against GT.
+///
+/// `results[q]` must be sorted best-first; missing entries count as miss.
+pub fn recall(results: &[Vec<u32>], gt: &GroundTruth) -> Recall {
+    assert_eq!(results.len(), gt.neighbors.len(), "query count mismatch");
+    let nq = results.len().max(1);
+    let mut hits = [0usize; 3];
+    for q in 0..results.len() {
+        let nn = gt.neighbors[q][0] as u32;
+        for (slot, k) in [1usize, 10, 100].iter().enumerate() {
+            if results[q].iter().take(*k).any(|&id| id == nn) {
+                hits[slot] += 1;
+            }
+        }
+    }
+    Recall {
+        at1: 100.0 * hits[0] as f32 / nq as f32,
+        at10: 100.0 * hits[1] as f32 / nq as f32,
+        at100: 100.0 * hits[2] as f32 / nq as f32,
+    }
+}
+
+/// One rendered table: method rows × (dataset, byte-budget) recall cells.
+#[derive(Default)]
+pub struct Table {
+    pub title: String,
+    /// (section label e.g. "8 bytes per vector") → rows
+    pub sections: BTreeMap<String, Vec<Row>>,
+    /// column group labels, e.g. ["BigANN1M-sim", "Deep1M-sim"]
+    pub datasets: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub method: String,
+    /// per dataset: Recall triple (None = not run)
+    pub cells: Vec<Option<Recall>>,
+}
+
+impl Table {
+    pub fn new(title: &str, datasets: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            sections: BTreeMap::new(),
+            datasets: datasets.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn push(&mut self, section: &str, row: Row) {
+        assert_eq!(row.cells.len(), self.datasets.len());
+        self.sections.entry(section.to_string()).or_default().push(row);
+    }
+
+    /// Render in the paper's layout (method | R@1 R@10 R@100 per dataset).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let mut header = format!("{:<20}", "Method");
+        for d in &self.datasets {
+            header.push_str(&format!(" | {:^23}", d));
+        }
+        let _ = writeln!(out, "{header}");
+        let mut sub = format!("{:<20}", "");
+        for _ in &self.datasets {
+            sub.push_str(&format!(" | {:>6} {:>7} {:>7}", "R@1", "R@10", "R@100"));
+        }
+        let _ = writeln!(out, "{sub}");
+        let _ = writeln!(out, "{}", "-".repeat(sub.len()));
+        for (section, rows) in &self.sections {
+            let _ = writeln!(out, "-- {section} --");
+            for row in rows {
+                let mut line = format!("{:<20}", row.method);
+                for cell in &row.cells {
+                    match cell {
+                        Some(r) => line.push_str(&format!(
+                            " | {:>6.1} {:>7.1} {:>7.1}", r.at1, r.at10, r.at100)),
+                        None => line.push_str(&format!(
+                            " | {:>6} {:>7} {:>7}", "-", "-", "-")),
+                    }
+                }
+                let _ = writeln!(out, "{line}");
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gt_of(nns: &[i32]) -> GroundTruth {
+        GroundTruth {
+            r: 1,
+            neighbors: nns.iter().map(|&n| vec![n]).collect(),
+        }
+    }
+
+    #[test]
+    fn perfect_results() {
+        let gt = gt_of(&[5, 7]);
+        let results = vec![vec![5, 1, 2], vec![7, 0, 3]];
+        let r = recall(&results, &gt);
+        assert_eq!(r.at1, 100.0);
+        assert_eq!(r.at10, 100.0);
+    }
+
+    #[test]
+    fn rank_sensitivity() {
+        let gt = gt_of(&[5, 7, 9, 11]);
+        // nn at ranks 1, 2, 11, missing
+        let results = vec![
+            vec![5],
+            (0..12).map(|i| if i == 1 { 7 } else { i }).collect(),
+            (0..20).map(|i| if i == 10 { 9 } else { i + 100 }).collect::<Vec<u32>>(),
+            vec![1, 2, 3],
+        ];
+        let r = recall(&results, &gt);
+        assert_eq!(r.at1, 25.0);
+        assert_eq!(r.at10, 50.0);
+        assert_eq!(r.at100, 75.0);
+    }
+
+    #[test]
+    fn empty_results_are_misses() {
+        let gt = gt_of(&[0]);
+        let r = recall(&[vec![]], &gt);
+        assert_eq!(r.at100, 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let mut t = Table::new("Table 2 (sim)", &["BigANN1M", "Deep1M"]);
+        t.push("8 bytes", Row {
+            method: "OPQ".into(),
+            cells: vec![
+                Some(Recall { at1: 20.8, at10: 64.3, at100: 95.3 }),
+                None,
+            ],
+        });
+        let s = t.render();
+        assert!(s.contains("OPQ"));
+        assert!(s.contains("20.8"));
+        assert!(s.contains("BigANN1M"));
+        assert!(s.contains("8 bytes"));
+        assert!(s.contains("R@100"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_cells_rejected() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push("s", Row { method: "m".into(), cells: vec![None] });
+    }
+}

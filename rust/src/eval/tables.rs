@@ -1,0 +1,286 @@
+//! Regenerate every table of the paper's evaluation (§4.1–§4.4) on the
+//! simulated corpora.  Shared by the CLI (`unq tables`) and the bench
+//! targets; rendered tables are persisted under `runs/tables/` so the
+//! EXPERIMENTS.md entries are reproducible.
+
+use anyhow::Context;
+
+use crate::config::{AppConfig, QuantizerKind};
+use crate::eval::harness::{self, paper_search_config};
+use crate::eval::{Recall, Row, Table};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Methods in each recall table, in the paper's row order.
+pub fn table2_methods() -> Vec<QuantizerKind> {
+    use QuantizerKind::*;
+    vec![Opq, CatalystOpq, CatalystLattice, Lsq, LsqRerank, Unq]
+}
+
+pub fn table34_methods() -> Vec<QuantizerKind> {
+    use QuantizerKind::*;
+    vec![CatalystLattice, Lsq, LsqRerank, Unq]
+}
+
+/// One recall cell; logs progress and tolerates missing UNQ artifacts by
+/// returning `None` (the table prints a dash).
+pub fn recall_cell(cfg: &AppConfig, kind: QuantizerKind, variant: &str)
+                   -> Option<Recall> {
+    let mut cfg = cfg.clone();
+    cfg.quantizer = kind;
+    match harness::prepare(&cfg, variant) {
+        Ok(exp) => {
+            let search = paper_search_config(kind, &cfg.dataset, 100);
+            let r = exp.run_recall(search);
+            eprintln!("[tables] {} / {} / {}B{}: R@1 {:.1} R@10 {:.1} R@100 {:.1}",
+                      cfg.dataset, kind.name(), cfg.bytes_per_vector,
+                      if variant.is_empty() { String::new() }
+                      else { format!(" [{variant}]") },
+                      r.at1, r.at10, r.at100);
+            Some(r)
+        }
+        Err(e) => {
+            eprintln!("[tables] {} / {} skipped: {e:#}", cfg.dataset, kind.name());
+            None
+        }
+    }
+}
+
+/// Build one of the paper's recall tables over (sift, deep) × budgets.
+pub fn recall_table(title: &str, base: &AppConfig, sift: &str, deep: &str,
+                    methods: &[QuantizerKind], budgets: &[usize]) -> Table {
+    let mut table = Table::new(title, &[&format!("BigANN-sim ({sift})"),
+                                        &format!("Deep-sim ({deep})")]);
+    for &bytes in budgets {
+        let section = format!("{bytes} bytes per vector");
+        for &kind in methods {
+            let mut cells = Vec::new();
+            for ds in [sift, deep] {
+                let mut cfg = base.clone();
+                cfg.dataset = ds.to_string();
+                cfg.bytes_per_vector = bytes;
+                cells.push(recall_cell(&cfg, kind, ""));
+            }
+            table.push(&section, Row { method: kind.name().into(), cells });
+        }
+    }
+    table
+}
+
+fn persist_table(cfg: &AppConfig, name: &str, rendered: &str) -> Result<()> {
+    let dir = cfg.runs_dir.join("tables");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join(format!("{name}.txt")), rendered)?;
+    Ok(())
+}
+
+/// Run the selected table(s): "1" | "2" | "3" | "4" | "5" | "mem" |
+/// "timings" | "all".
+pub fn run_tables(cfg: &AppConfig, which: &str) -> Result<()> {
+    let run =
+        |t: &str| which == "all" || which == t;
+
+    if run("1") {
+        table1_timings(&cfg)?;
+    }
+    if run("2") {
+        let t = recall_table("Table 2 — 1M scale (sim: 100k)", &cfg,
+                             "sift1m", "deep1m", &table2_methods(), &[8, 16]);
+        println!("{}", t.render());
+        persist_table(&cfg, "table2", &t.render())?;
+    }
+    if run("3") {
+        let t = recall_table("Table 3 — 10M scale (sim: 300k)", &cfg,
+                             "sift10m", "deep10m", &table34_methods(), &[8, 16]);
+        println!("{}", t.render());
+        persist_table(&cfg, "table3", &t.render())?;
+    }
+    if run("4") {
+        let t = recall_table("Table 4 — 1B scale (sim: 1M)", &cfg,
+                             "sift1b", "deep1b", &table34_methods(), &[8, 16]);
+        println!("{}", t.render());
+        persist_table(&cfg, "table4", &t.render())?;
+    }
+    if run("5") {
+        table5_ablation(&cfg)?;
+    }
+    if run("mem") {
+        table_memory(&cfg)?;
+    }
+    if run("timings") {
+        table_timings(&cfg)?;
+    }
+    Ok(())
+}
+
+/// Table 1 (qualitative in the paper) — measured train + encode cost per
+/// method, which substantiates the Low/High complexity labels.
+pub fn table1_timings(cfg: &AppConfig) -> Result<()> {
+    println!("== Table 1 — measured training/encoding complexity ==");
+    println!("{:<18} {:>12} {:>16}", "Method", "train (s)", "encode (µs/vec)");
+    for kind in [QuantizerKind::Opq, QuantizerKind::Lsq, QuantizerKind::Unq] {
+        let mut c = cfg.clone();
+        c.dataset = "sift1m".into();
+        c.quantizer = kind;
+        c.bytes_per_vector = 8;
+        match harness::prepare(&c, "") {
+            Ok(exp) => {
+                // measure encode on a slice of the base set
+                let n = exp.splits.base.len().min(2000);
+                let t0 = std::time::Instant::now();
+                let _ = exp.quant.encode_batch(exp.splits.base.rows(0, n));
+                let enc = t0.elapsed().as_secs_f64() / n as f64 * 1e6;
+                println!("{:<18} {:>12.1} {:>16.1}", kind.name(),
+                         exp.train_secs, enc);
+            }
+            Err(e) => println!("{:<18} skipped: {e:#}", kind.name()),
+        }
+    }
+    Ok(())
+}
+
+/// Table 5 — ablation on BigANN1M-sim @ 8 bytes.
+pub fn table5_ablation(cfg: &AppConfig) -> Result<()> {
+    let mut base = cfg.clone();
+    base.dataset = "sift1m".into();
+    base.bytes_per_vector = 8;
+    base.quantizer = QuantizerKind::Unq;
+
+    let mut table = Table::new("Table 5 — ablation (BigANN1M-sim, 8 bytes)",
+                               &["BigANN1M-sim"]);
+    // search-procedure ablations reuse the main model
+    let search_variants: Vec<(&str, Box<dyn Fn(&mut AppConfig)>)> = vec![
+        ("UNQ", Box::new(|_c: &mut AppConfig| {})),
+        ("Exhaustive reranking", Box::new(|c: &mut AppConfig| {
+            c.search.exhaustive_rerank = true;
+        })),
+        ("No reranking", Box::new(|c: &mut AppConfig| {
+            c.search.no_rerank = true;
+        })),
+    ];
+    for (label, tweak) in &search_variants {
+        let mut c = base.clone();
+        tweak(&mut c);
+        let cell = match harness::prepare(&c, "") {
+            Ok(exp) => {
+                let mut search = paper_search_config(QuantizerKind::Unq,
+                                                     &c.dataset, 100);
+                search.no_rerank = c.search.no_rerank;
+                search.exhaustive_rerank = c.search.exhaustive_rerank;
+                // cap exhaustive rerank cost: decode full base once
+                let r = exp.run_recall(search);
+                eprintln!("[tables] ablation {label}: R@1 {:.1} R@10 {:.1} \
+                           R@100 {:.1}", r.at1, r.at10, r.at100);
+                Some(r)
+            }
+            Err(e) => {
+                eprintln!("[tables] ablation {label} skipped: {e:#}");
+                None
+            }
+        };
+        table.push("ablation", Row { method: label.to_string(),
+                                     cells: vec![cell] });
+    }
+    // training-objective ablations use dedicated artifact bundles
+    for (label, variant) in [
+        ("No triplet loss", "no_triplet"),
+        ("Triplet only", "triplet_only"),
+        ("UNQ w/o hard", "wo_hard"),
+        ("UNQ w/o Gumbel", "wo_gumbel"),
+        ("No regularizer", "no_reg"),
+    ] {
+        let cell = recall_cell(&base, QuantizerKind::Unq, variant);
+        table.push("ablation", Row { method: label.to_string(),
+                                     cells: vec![cell] });
+    }
+    println!("{}", table.render());
+    persist_table(cfg, "table5", &table.render())?;
+    Ok(())
+}
+
+/// §4.2 — additional memory consumption of UNQ vs the shallow baselines.
+pub fn table_memory(cfg: &AppConfig) -> Result<()> {
+    println!("== §4.2 — auxiliary model memory ==");
+    println!("{:<16} {:>10} {:>14} {:>22}", "Budget", "params",
+             "model (MB)", "amortized (B/vec @1M)");
+    for bytes in [8usize, 16] {
+        let name = format!("sift1m_{bytes}b");
+        let dir = cfg.artifacts_dir.join(&name);
+        match crate::runtime::Manifest::load(&dir) {
+            Ok(m) => {
+                let mb = m.param_bytes as f64 / 1e6;
+                println!("{:<16} {:>10} {:>14.1} {:>22.4}",
+                         format!("{bytes} bytes"), m.param_count, mb,
+                         m.param_bytes as f64 / 1e6 / 1.0);
+                let j = Json::obj(vec![
+                    ("budget_bytes", Json::Num(bytes as f64)),
+                    ("param_bytes", Json::Num(m.param_bytes as f64)),
+                ]);
+                let dir = cfg.runs_dir.join("tables");
+                std::fs::create_dir_all(&dir)?;
+                std::fs::write(dir.join(format!("mem_{bytes}b.json")),
+                               j.render_pretty())
+                    .context("persist mem table")?;
+            }
+            Err(e) => println!("{bytes} bytes: skipped ({e:#})"),
+        }
+    }
+    Ok(())
+}
+
+/// §4.4 — encode / scan / rerank wall-clock timings.
+pub fn table_timings(cfg: &AppConfig) -> Result<()> {
+    println!("== §4.4 — timings (single CPU core; paper: GPU encode, CPU scan) ==");
+    let mut c = cfg.clone();
+    c.dataset = "deep1m".into();
+    c.bytes_per_vector = 8;
+    for kind in [QuantizerKind::Unq, QuantizerKind::CatalystLattice,
+                 QuantizerKind::Lsq] {
+        c.quantizer = kind;
+        match harness::prepare(&c, "") {
+            Ok(exp) => {
+                let n = exp.splits.base.len().min(5000);
+                let t0 = std::time::Instant::now();
+                let _ = exp.quant.encode_batch(exp.splits.base.rows(0, n));
+                let enc_per_m = t0.elapsed().as_secs_f64() / n as f64 * 1e6;
+                // scan timing
+                let lut = exp.quant.lut(exp.splits.query.row(0));
+                let t1 = std::time::Instant::now();
+                let reps = 20;
+                for _ in 0..reps {
+                    std::hint::black_box(crate::index::scan_topk(
+                        &lut, &exp.index, 500));
+                }
+                let scan_ms = t1.elapsed().as_secs_f64() / reps as f64 * 1e3;
+                // rerank timing (1000 candidates, as the paper's 1B setup)
+                let rer_ms = if exp.quant.supports_rerank() {
+                    let cands: Vec<u32> =
+                        (0..1000.min(exp.index.n as u32)).collect();
+                    let eng = crate::index::SearchEngine::new(
+                        exp.quant.as_ref(), &exp.index,
+                        paper_search_config(kind, &c.dataset, 100));
+                    let t2 = std::time::Instant::now();
+                    for _ in 0..5 {
+                        std::hint::black_box(
+                            eng.rerank(exp.splits.query.row(0), &cands, 100));
+                    }
+                    Some(t2.elapsed().as_secs_f64() / 5.0 * 1e3)
+                } else {
+                    None
+                };
+                println!(
+                    "{:<18} encode 1M-extrapolated {:>7.2} s   scan({} vecs) \
+                     {:>7.2} ms   rerank-1000 {}",
+                    kind.name(),
+                    enc_per_m,              // µs/vec == s per 1M vectors
+                    exp.index.n,
+                    scan_ms,
+                    rer_ms.map(|v| format!("{v:.1} ms"))
+                          .unwrap_or_else(|| "n/a".into())
+                );
+            }
+            Err(e) => println!("{:<18} skipped: {e:#}", kind.name()),
+        }
+    }
+    Ok(())
+}

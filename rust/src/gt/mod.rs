@@ -1,0 +1,127 @@
+//! Exact brute-force ground truth (the evaluation substrate).
+//!
+//! For every query, the true top-R nearest base rows under squared L2 —
+//! computed by blocked exhaustive scan and cached to disk as ivecs next to
+//! the dataset, keyed by (n_base, n_query, R) so scale sweeps reuse
+//! prefixes safely.
+
+use std::path::{Path, PathBuf};
+
+use crate::data::{vecs, Dataset};
+use crate::linalg::{sq_l2, TopK};
+use crate::Result;
+
+/// Ground truth: per query, the ids of its true top-R base neighbors,
+/// ascending by distance.
+pub struct GroundTruth {
+    pub r: usize,
+    pub neighbors: Vec<Vec<i32>>,
+}
+
+impl GroundTruth {
+    /// True nearest neighbor of query `q`.
+    pub fn nn(&self, q: usize) -> i32 {
+        self.neighbors[q][0]
+    }
+}
+
+/// Compute exact top-`r` neighbors of every query against the base set.
+pub fn brute_force(base: &Dataset, query: &Dataset, r: usize) -> GroundTruth {
+    assert_eq!(base.dim, query.dim, "dim mismatch");
+    let n = base.len();
+    let neighbors = (0..query.len())
+        .map(|qi| {
+            let q = query.row(qi);
+            let mut top = TopK::new(r.min(n));
+            for i in 0..n {
+                let d = sq_l2(q, base.row(i));
+                top.push(d, i as u32);
+            }
+            top.into_sorted().into_iter().map(|(_, id)| id as i32).collect()
+        })
+        .collect();
+    GroundTruth { r, neighbors }
+}
+
+fn cache_path(data_dir: &Path, name: &str, n_base: usize, n_query: usize,
+              r: usize) -> PathBuf {
+    data_dir
+        .join(name)
+        .join(format!("gt_b{n_base}_q{n_query}_r{r}.ivecs"))
+}
+
+/// Load the cached ground truth for (dataset, sizes, R) or compute + cache.
+pub fn load_or_compute(data_dir: &Path, name: &str, base: &Dataset,
+                       query: &Dataset, r: usize) -> Result<GroundTruth> {
+    let path = cache_path(data_dir, name, base.len(), query.len(), r);
+    if path.exists() {
+        let neighbors = vecs::read_ivecs(&path)?;
+        if neighbors.len() == query.len()
+            && neighbors.iter().all(|row| row.len() >= r.min(base.len()))
+        {
+            return Ok(GroundTruth { r, neighbors });
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let gt = brute_force(base, query, r);
+    eprintln!(
+        "[gt] {name}: exact top-{r} for {}q × {}b in {:.1}s",
+        query.len(), base.len(), t0.elapsed().as_secs_f32()
+    );
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    vecs::write_ivecs(&path, &gt.neighbors)?;
+    Ok(gt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_dataset() -> Dataset {
+        // base points at x = 0, 1, ..., 9 on a line
+        Dataset::new(2, (0..10).flat_map(|i| [i as f32, 0.0]).collect())
+    }
+
+    #[test]
+    fn exact_neighbors_on_line() {
+        let base = grid_dataset();
+        let query = Dataset::new(2, vec![3.2, 0.0]);
+        let gt = brute_force(&base, &query, 3);
+        assert_eq!(gt.neighbors[0], vec![3, 4, 2]);
+        assert_eq!(gt.nn(0), 3);
+    }
+
+    #[test]
+    fn r_capped_at_n() {
+        let base = Dataset::new(2, vec![0.0, 0.0, 1.0, 1.0]);
+        let query = Dataset::new(2, vec![0.1, 0.1]);
+        let gt = brute_force(&base, &query, 10);
+        assert_eq!(gt.neighbors[0].len(), 2);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = crate::util::TempDir::new("gt").unwrap();
+        let base = grid_dataset();
+        let query = Dataset::new(2, vec![7.9, 0.0, 0.2, 0.0]);
+        let g1 = load_or_compute(dir.path(), "t", &base, &query, 2).unwrap();
+        let g2 = load_or_compute(dir.path(), "t", &base, &query, 2).unwrap();
+        assert_eq!(g1.neighbors, g2.neighbors);
+        assert_eq!(g1.neighbors[0][0], 8);
+        assert_eq!(g1.neighbors[1][0], 0);
+    }
+
+    #[test]
+    fn distinct_sizes_distinct_caches() {
+        let dir = crate::util::TempDir::new("gt").unwrap();
+        let base = grid_dataset();
+        let q = Dataset::new(2, vec![0.2, 0.0]);
+        load_or_compute(dir.path(), "t", &base, &q, 2).unwrap();
+        let small = base.prefix(3);
+        let g = load_or_compute(dir.path(), "t", &small, &q, 2).unwrap();
+        assert_eq!(g.neighbors[0].len(), 2);
+        assert!(g.neighbors[0].iter().all(|&id| id < 3));
+    }
+}

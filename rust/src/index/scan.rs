@@ -1,0 +1,220 @@
+//! The ADC scan hot path.
+//!
+//! `scan_lut_topk` is the specialized LUT loop (the overwhelmingly common
+//! case: PQ/OPQ/RVQ/LSQ/UNQ all scan through `Lut::Tables`); `scan_topk`
+//! dispatches, falling back to the generic `Lut::score` for the lattice's
+//! direct dot scoring.
+//!
+//! Performance notes (see EXPERIMENTS.md §Perf for measurements):
+//! * the per-row loop over `stride` table lookups is unrolled by the
+//!   compiler for the fixed strides we exercise; table rows are laid out
+//!   contiguously (`j·K + code[j]`) so all lookups hit one small table
+//!   (8–17 rows × 256 × 4 B ≤ 17 KB, L1-resident);
+//! * the bounded heap makes the common case (candidate worse than the
+//!   current k-th best) a single compare-and-skip;
+//! * scores accumulate in plain f32 — identical to the paper's setup.
+
+use crate::linalg::TopK;
+use crate::quant::Lut;
+
+use super::CompressedIndex;
+
+/// Scan the whole index with a table LUT, returning the k smallest
+/// `(score, id)` pairs sorted ascending.
+pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
+                     index: &CompressedIndex, lo: usize, hi: usize,
+                     k: usize) -> Vec<(f32, u32)> {
+    let stride = index.stride;
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    let codes = &index.codes[lo * stride..hi * stride];
+    // 4-row software pipeline: the per-row table gathers are independent,
+    // so interleaving four rows gives the core 4× the memory-level
+    // parallelism on the (L2-missing) code stream — see EXPERIMENTS.md
+    // §Perf for the measured effect at n = 1M.
+    let n_rows = hi - lo;
+    let quads = n_rows / 4;
+    for qi in 0..quads {
+        let base0 = qi * 4 * stride;
+        let (mut a0, mut a1, mut a2, mut a3) = (bias, bias, bias, bias);
+        for j in 0..stride {
+            // safety: tables is (stride, k_width); code bytes < k_width by
+            // construction (encoders emit ids < K)
+            unsafe {
+                let t = tables.as_ptr().add(j * k_width);
+                a0 += *t.add(*codes.get_unchecked(base0 + j) as usize);
+                a1 += *t.add(*codes.get_unchecked(base0 + stride + j) as usize);
+                a2 += *t.add(*codes.get_unchecked(base0 + 2 * stride + j) as usize);
+                a3 += *t.add(*codes.get_unchecked(base0 + 3 * stride + j) as usize);
+            }
+        }
+        let row = lo + qi * 4;
+        if a0 < worst {
+            top.push(a0, row as u32);
+            worst = top.worst();
+        }
+        if a1 < worst {
+            top.push(a1, (row + 1) as u32);
+            worst = top.worst();
+        }
+        if a2 < worst {
+            top.push(a2, (row + 2) as u32);
+            worst = top.worst();
+        }
+        if a3 < worst {
+            top.push(a3, (row + 3) as u32);
+            worst = top.worst();
+        }
+    }
+    for row in quads * 4..n_rows {
+        let code = &codes[row * stride..(row + 1) * stride];
+        let mut acc = bias;
+        for (j, &c) in code.iter().enumerate() {
+            acc += unsafe { *tables.get_unchecked(j * k_width + c as usize) };
+        }
+        if acc < worst {
+            top.push(acc, (lo + row) as u32);
+            worst = top.worst();
+        }
+    }
+    top.into_sorted()
+}
+
+/// Generic scan via `Lut::score` (used by the lattice direct path).
+pub fn scan_generic_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
+                         hi: usize, k: usize) -> Vec<(f32, u32)> {
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    for i in lo..hi {
+        let s = lut.score(index.code(i));
+        if s < worst {
+            top.push(s, i as u32);
+            worst = top.worst();
+        }
+    }
+    top.into_sorted()
+}
+
+/// Dispatching scan over the full index.
+pub fn scan_topk(lut: &Lut, index: &CompressedIndex, k: usize)
+                 -> Vec<(f32, u32)> {
+    scan_range_topk(lut, index, 0, index.n, k)
+}
+
+/// Dispatching scan over `[lo, hi)` (shard work unit for the coordinator).
+pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
+                       hi: usize, k: usize) -> Vec<(f32, u32)> {
+    let hi = hi.min(index.n);
+    match lut {
+        Lut::Tables { m, k: kw, tables, bias } => {
+            debug_assert_eq!(*m, index.stride,
+                             "LUT rows must match index stride");
+            scan_lut_topk(tables, *kw, *bias, index, lo, hi, k)
+        }
+        Lut::Direct { .. } => scan_generic_topk(lut, index, lo, hi, k),
+    }
+}
+
+/// Merge several per-shard top-k lists into a global top-k.
+pub fn merge_topk(mut parts: Vec<Vec<(f32, u32)>>, k: usize) -> Vec<(f32, u32)> {
+    let mut top = TopK::new(k);
+    for part in parts.drain(..) {
+        for (s, id) in part {
+            top.push(s, id);
+        }
+    }
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::SplitMix64};
+
+    fn mk_index(n: usize, stride: usize, seed: u64) -> CompressedIndex {
+        let mut rng = SplitMix64::new(seed);
+        let codes: Vec<u8> = (0..n * stride).map(|_| rng.below(256) as u8).collect();
+        CompressedIndex::from_codes(n, stride, codes)
+    }
+
+    fn mk_lut(stride: usize, seed: u64) -> (Vec<f32>, Lut) {
+        let mut rng = SplitMix64::new(seed);
+        let tables: Vec<f32> =
+            (0..stride * 256).map(|_| rng.next_f32() * 10.0).collect();
+        let lut = Lut::Tables { m: stride, k: 256, tables: tables.clone(),
+                                bias: 1.5 };
+        (tables, lut)
+    }
+
+    #[test]
+    fn scan_matches_naive_argsort() {
+        let idx = mk_index(500, 8, 1);
+        let (_, lut) = mk_lut(8, 2);
+        let got = scan_topk(&lut, &idx, 10);
+        // naive
+        let mut all: Vec<(f32, u32)> = (0..500)
+            .map(|i| (lut.score(idx.code(i)), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let want: Vec<u32> = all[..10].iter().map(|p| p.1).collect();
+        let got_ids: Vec<u32> = got.iter().map(|p| p.1).collect();
+        assert_eq!(got_ids, want);
+    }
+
+    #[test]
+    fn sharded_scan_merge_equals_full_scan() {
+        let idx = mk_index(1000, 9, 3);
+        let (_, lut) = mk_lut(9, 4);
+        let full = scan_topk(&lut, &idx, 25);
+        let parts = vec![
+            scan_range_topk(&lut, &idx, 0, 400, 25),
+            scan_range_topk(&lut, &idx, 400, 700, 25),
+            scan_range_topk(&lut, &idx, 700, 1000, 25),
+        ];
+        let merged = merge_topk(parts, 25);
+        assert_eq!(full.iter().map(|p| p.1).collect::<Vec<_>>(),
+                   merged.iter().map(|p| p.1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_scan_is_exact_selection() {
+        // property over random tables/codes/sizes: scan == argsort prefix
+        prop::forall_ok(
+            99,
+            25,
+            |r: &mut SplitMix64| {
+                let n = 20 + r.below(300);
+                let stride = 1 + r.below(16);
+                let k = 1 + r.below(20);
+                (n, stride, k, r.next_u64())
+            },
+            |&(n, stride, k, seed)| {
+                let idx = mk_index(n, stride, seed);
+                let (_, lut) = mk_lut(stride, seed ^ 1);
+                let got: Vec<u32> = scan_topk(&lut, &idx, k)
+                    .iter().map(|p| p.1).collect();
+                let mut all: Vec<(f32, u32)> = (0..n)
+                    .map(|i| (lut.score(idx.code(i)), i as u32))
+                    .collect();
+                all.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                });
+                let want: Vec<u32> =
+                    all[..k.min(n)].iter().map(|p| p.1).collect();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("scan {got:?} != naive {want:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let idx = mk_index(5, 4, 7);
+        let (_, lut) = mk_lut(4, 8);
+        let got = scan_topk(&lut, &idx, 100);
+        assert_eq!(got.len(), 5);
+    }
+}

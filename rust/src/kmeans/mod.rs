@@ -1,0 +1,242 @@
+//! k-means (Lloyd's algorithm with k-means++ seeding).
+//!
+//! The workhorse behind every shallow quantizer in this crate: PQ/OPQ run
+//! it per subspace, RVQ per residual level, LSQ for codebook
+//! initialization.  Single-threaded but written so the inner distance
+//! loops autovectorize; empty clusters are repaired by stealing the point
+//! farthest from its centroid (the Faiss strategy).
+
+use crate::linalg::sq_l2;
+use crate::util::rng::SplitMix64;
+
+/// Configuration for one k-means run.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        KMeansConfig { k: 256, iters: 15, seed: 0 }
+    }
+}
+
+/// Result of a k-means run.
+pub struct KMeans {
+    pub dim: usize,
+    /// `(k, dim)` centroids, flat row-major.
+    pub centroids: Vec<f32>,
+    /// Final assignment of each training row.
+    pub assignments: Vec<u32>,
+    /// Final mean squared quantization error.
+    pub mse: f32,
+}
+
+impl KMeans {
+    #[inline]
+    pub fn centroid(&self, j: usize) -> &[f32] {
+        &self.centroids[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Index of the nearest centroid to `x`.
+    pub fn assign_one(&self, x: &[f32]) -> u32 {
+        nearest(x, &self.centroids, self.dim).0
+    }
+}
+
+/// Nearest centroid (id, distance) among `centroids` (flat, k rows).
+#[inline]
+pub fn nearest(x: &[f32], centroids: &[f32], dim: usize) -> (u32, f32) {
+    let k = centroids.len() / dim;
+    let mut best = (0u32, f32::INFINITY);
+    for j in 0..k {
+        let d = sq_l2(x, &centroids[j * dim..(j + 1) * dim]);
+        if d < best.1 {
+            best = (j as u32, d);
+        }
+    }
+    best
+}
+
+/// Run k-means over `n = data.len()/dim` rows.
+///
+/// If `n < k`, duplicates rows so every centroid is defined (the caller's
+/// codebook size contract is preserved).
+pub fn kmeans(data: &[f32], dim: usize, cfg: &KMeansConfig) -> KMeans {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let n = data.len() / dim;
+    assert!(n > 0, "kmeans on empty data");
+    let k = cfg.k;
+    let mut rng = SplitMix64::from_key(&[cfg.seed, 0x6B6D65616E73]);
+
+    let mut centroids = kmeanspp_init(data, dim, k, &mut rng);
+    let mut assignments = vec![0u32; n];
+    let mut dists = vec![0.0f32; n];
+    let mut mse = f32::INFINITY;
+
+    for _iter in 0..cfg.iters {
+        // assignment step
+        let mut sse = 0.0f64;
+        for i in 0..n {
+            let (a, d) = nearest(&data[i * dim..(i + 1) * dim], &centroids, dim);
+            assignments[i] = a;
+            dists[i] = d;
+            sse += d as f64;
+        }
+        mse = (sse / n as f64) as f32;
+
+        // update step
+        let mut counts = vec![0u32; k];
+        let mut sums = vec![0.0f32; k * dim];
+        for i in 0..n {
+            let a = assignments[i] as usize;
+            counts[a] += 1;
+            let row = &data[i * dim..(i + 1) * dim];
+            let s = &mut sums[a * dim..(a + 1) * dim];
+            for (sv, rv) in s.iter_mut().zip(row) {
+                *sv += rv;
+            }
+        }
+        // repair empty clusters: move them onto the currently worst-fit row
+        for j in 0..k {
+            if counts[j] == 0 {
+                let worst = (0..n)
+                    .max_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap())
+                    .unwrap();
+                sums[j * dim..(j + 1) * dim]
+                    .copy_from_slice(&data[worst * dim..(worst + 1) * dim]);
+                counts[j] = 1;
+                dists[worst] = 0.0; // don't steal the same row twice
+            }
+        }
+        for j in 0..k {
+            let inv = 1.0 / counts[j] as f32;
+            for v in &mut sums[j * dim..(j + 1) * dim] {
+                *v *= inv;
+            }
+        }
+        centroids = sums;
+    }
+
+    // final assignment against the last update
+    let mut sse = 0.0f64;
+    for i in 0..n {
+        let (a, d) = nearest(&data[i * dim..(i + 1) * dim], &centroids, dim);
+        assignments[i] = a;
+        sse += d as f64;
+    }
+    mse = mse.min((sse / n as f64) as f32);
+
+    KMeans { dim, centroids, assignments, mse }
+}
+
+/// k-means++ seeding (D² sampling).
+fn kmeanspp_init(data: &[f32], dim: usize, k: usize,
+                 rng: &mut SplitMix64) -> Vec<f32> {
+    let n = data.len() / dim;
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = rng.below(n);
+    centroids.extend_from_slice(&data[first * dim..(first + 1) * dim]);
+
+    let mut d2: Vec<f32> = (0..n)
+        .map(|i| sq_l2(&data[i * dim..(i + 1) * dim], &centroids[..dim]))
+        .collect();
+
+    while centroids.len() / dim < k {
+        let total: f64 = d2.iter().map(|&d| d as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.next_f64() * total;
+            let mut idx = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                target -= d as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        let new_c = &data[pick * dim..(pick + 1) * dim];
+        centroids.extend_from_slice(new_c);
+        for i in 0..n {
+            let d = sq_l2(&data[i * dim..(i + 1) * dim], new_c);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_blobs(n_per: usize) -> Vec<f32> {
+        // blobs at (0,0) and (10,10) with tiny deterministic jitter
+        let mut data = Vec::new();
+        for i in 0..n_per {
+            let j = (i % 7) as f32 * 0.01;
+            data.extend_from_slice(&[j, -j]);
+            data.extend_from_slice(&[10.0 + j, 10.0 - j]);
+        }
+        data
+    }
+
+    #[test]
+    fn finds_two_blobs() {
+        let data = two_blobs(50);
+        let km = kmeans(&data, 2, &KMeansConfig { k: 2, iters: 10, seed: 1 });
+        let mut cs: Vec<(f32, f32)> =
+            (0..2).map(|j| (km.centroid(j)[0], km.centroid(j)[1])).collect();
+        cs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert!(cs[0].0.abs() < 0.5 && cs[1].0 > 9.5);
+        assert!(km.mse < 0.1);
+    }
+
+    #[test]
+    fn mse_decreases_with_more_k() {
+        let mut data = Vec::new();
+        let mut seed = 7u64;
+        for _ in 0..400 {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            data.push((seed >> 33) as f32 / (1u64 << 31) as f32);
+            data.push((seed >> 17) as f32 / (1u64 << 47) as f32);
+        }
+        let m2 = kmeans(&data, 2, &KMeansConfig { k: 2, iters: 10, seed: 0 }).mse;
+        let m16 = kmeans(&data, 2, &KMeansConfig { k: 16, iters: 10, seed: 0 }).mse;
+        assert!(m16 < m2);
+    }
+
+    #[test]
+    fn handles_k_larger_than_n() {
+        let data = vec![0.0f32, 0.0, 1.0, 1.0];
+        let km = kmeans(&data, 2, &KMeansConfig { k: 8, iters: 5, seed: 0 });
+        assert_eq!(km.centroids.len(), 8 * 2);
+        for v in &km.centroids {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn assignments_are_nearest() {
+        let data = two_blobs(20);
+        let km = kmeans(&data, 2, &KMeansConfig { k: 2, iters: 10, seed: 3 });
+        for i in 0..km.assignments.len() {
+            let row = &data[i * 2..(i + 1) * 2];
+            assert_eq!(km.assignments[i], km.assign_one(row));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = two_blobs(30);
+        let a = kmeans(&data, 2, &KMeansConfig { k: 4, iters: 8, seed: 9 });
+        let b = kmeans(&data, 2, &KMeansConfig { k: 4, iters: 8, seed: 9 });
+        assert_eq!(a.centroids, b.centroids);
+    }
+}

@@ -1,0 +1,51 @@
+//! # unq — Unsupervised Neural Quantization, as a full retrieval system
+//!
+//! A production-shaped reproduction of *"Unsupervised Neural Quantization
+//! for Compressed-Domain Similarity Search"* (Morozov & Babenko, ICCV'19):
+//! a three-layer Rust + JAX + Pallas stack in which
+//!
+//! * **L1/L2 (build time)** — the UNQ model is trained in JAX and its
+//!   `encode` / `query_lut` / `decode` graphs (built on Pallas kernels) are
+//!   AOT-lowered to HLO text under `artifacts/`;
+//! * **L3 (this crate)** — owns everything at run time: synthetic dataset
+//!   substrates, every shallow baseline of the paper's evaluation (PQ, OPQ,
+//!   RVQ, LSQ, Catalyst-style spherical lattice), the compressed index with
+//!   its ADC-scan hot path, the two-stage (scan → rerank) search pipeline,
+//!   the PJRT runtime that executes the AOT artifacts, and an async serving
+//!   coordinator with dynamic batching and backpressure.
+//!
+//! Python never runs on the request path; after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | typed experiment/serving configuration |
+//! | [`linalg`] | dense math: distances, matmul, Jacobi eigen/SVD, top-k |
+//! | [`data`] | synthetic deep-like / sift-like generators, *vecs I/O |
+//! | [`kmeans`] | Lloyd + k-means++ (shared by all shallow quantizers) |
+//! | [`gt`] | exact brute-force ground truth (cached) |
+//! | [`quant`] | `Quantizer` trait + PQ/OPQ/RVQ/LSQ/lattice/UNQ |
+//! | [`index`] | compressed storage, ADC LUT scan, rerank, two-stage search |
+//! | [`runtime`] | PJRT engine: load + execute the AOT HLO artifacts |
+//! | [`coordinator`] | async serving: router, batcher, pipeline, metrics |
+//! | [`eval`] | Recall@k harness + paper-table formatting |
+//! | [`store`] | tiny binary tensor store for trained baseline models |
+//! | [`util`] | offline substrates: JSON, PRNG, bench harness, prop tests |
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gt;
+pub mod index;
+pub mod kmeans;
+pub mod linalg;
+pub mod quant;
+pub mod runtime;
+pub mod store;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich context in binaries).
+pub type Result<T> = anyhow::Result<T>;

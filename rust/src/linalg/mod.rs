@@ -1,0 +1,611 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the shallow quantizers and the ground-truth engine need,
+//! implemented natively (no BLAS dependency): squared-L2 / dot kernels
+//! written to autovectorize, a blocked GEMM, Jacobi eigendecomposition of
+//! symmetric matrices (powers PCA whitening and the OPQ Procrustes step),
+//! and branch-light bounded top-k selection used by every scan.
+
+mod topk;
+
+pub use topk::TopK;
+
+/// Squared Euclidean distance between two equal-length slices.
+///
+/// Written as a single fused loop over `f32`; LLVM autovectorizes this to
+/// SIMD on x86-64 (the GT engine and reranker both sit on it).
+#[inline]
+pub fn sq_l2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc0 += d0 * d0;
+        acc1 += d1 * d1;
+        acc2 += d2 * d2;
+        acc3 += d3 * d3;
+    }
+    for j in chunks * 4..a.len() {
+        let d = a[j] - b[j];
+        acc0 += d * d;
+    }
+    (acc0 + acc1) + (acc2 + acc3)
+}
+
+/// Dot product with 4-way unrolled accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] * b[j];
+        acc1 += a[j + 1] * b[j + 1];
+        acc2 += a[j + 2] * b[j + 2];
+        acc3 += a[j + 3] * b[j + 3];
+    }
+    for j in chunks * 4..a.len() {
+        acc0 += a[j] * b[j];
+    }
+    (acc0 + acc1) + (acc2 + acc3)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` via an i-k-j loop (cache friendly, autovectorizes the
+    /// inner j loop). Fine at the D ≤ a-few-hundred sizes we use.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a != 0.0 {
+                    let b_row = &other.data[k * other.cols..(k + 1) * other.cols];
+                    axpy(a, b_row, out_row);
+                }
+            }
+        }
+        out
+    }
+
+    /// Apply to a single vector: `self @ x`.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// Frobenius norm of `self - other`.
+    pub fn frob_dist(&self, other: &Mat) -> f32 {
+        sq_l2(&self.data, &other.data).sqrt()
+    }
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix.
+///
+/// Returns `(eigenvalues, eigenvectors)` with eigenvalues sorted in
+/// descending order and eigenvectors as *rows* of the returned matrix
+/// (i.e. `v.row(i)` is the unit eigenvector of `eigenvalues[i]`).
+/// Cyclic Jacobi with threshold sweeping — O(n³) per sweep, robust and
+/// dependency-free; plenty fast for n ≤ 256 (our descriptor dims).
+pub fn jacobi_eigen(a: &Mat, max_sweeps: usize) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols, "jacobi_eigen needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += (m.get(i, j) as f64).powi(2);
+            }
+        }
+        if off.sqrt() < 1e-9 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-12 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = 0.5 * (aqq - app) as f64 / apq as f64;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                let (c, s) = (c as f32, s as f32);
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // accumulate eigenvectors (as rows of v)
+                for k in 0..n {
+                    let vpk = v.get(p, k);
+                    let vqk = v.get(q, k);
+                    v.set(p, k, c * vpk - s * vqk);
+                    v.set(q, k, s * vpk + c * vqk);
+                }
+            }
+        }
+    }
+
+    let mut eig: Vec<(f32, usize)> =
+        (0..n).map(|i| (m.get(i, i), i)).collect();
+    eig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f32> = eig.iter().map(|&(l, _)| l).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (r, &(_, i)) in eig.iter().enumerate() {
+        vecs.row_mut(r).copy_from_slice(v.row(i));
+    }
+    (vals, vecs)
+}
+
+/// Orthogonal Procrustes: the rotation `R` (d×d, row-major) minimizing
+/// `‖X R - Y‖_F` over orthogonal matrices, given `C = Xᵀ Y`.
+///
+/// `R = U Vᵀ` for the SVD `C = U Σ Vᵀ`; computed here via two symmetric
+/// Jacobi eigendecompositions (`CᵀC = V Σ² Vᵀ`, `U = C V Σ⁻¹`), which is
+/// accurate enough for the well-conditioned covariance-like matrices OPQ
+/// produces.
+pub fn procrustes(c: &Mat) -> Mat {
+    assert_eq!(c.rows, c.cols);
+    let n = c.rows;
+    let ctc = c.transpose().matmul(c);
+    let (vals, vecs_rows) = jacobi_eigen(&ctc, 50); // rows are eigenvectors
+    // V: columns = eigenvectors → V = vecs_rows^T
+    let v = vecs_rows.transpose();
+    // U = C V Σ^{-1}, with rank-deficient columns repaired afterwards:
+    // directions with σ ≈ 0 are unconstrained by the data, so any choice
+    // completing U to an orthogonal matrix is optimal.
+    let cv = c.matmul(&v);
+    let sigma_max = vals[0].max(0.0).sqrt().max(1e-20);
+    let mut u = Mat::zeros(n, n);
+    let mut degenerate = Vec::new();
+    for j in 0..n {
+        let sigma = vals[j].max(0.0).sqrt();
+        if sigma > 1e-6 * sigma_max {
+            for i in 0..n {
+                u.set(i, j, cv.get(i, j) / sigma);
+            }
+        } else {
+            degenerate.push(j);
+        }
+    }
+    // Modified Gram–Schmidt over columns; degenerate columns get filled
+    // from the canonical basis and orthogonalized.
+    let mut basis_cursor = 0usize;
+    for j in 0..n {
+        if degenerate.contains(&j) {
+            // seed with the next canonical vector
+            for i in 0..n {
+                u.set(i, j, 0.0);
+            }
+            u.set(basis_cursor % n, j, 1.0);
+            basis_cursor += 1;
+        }
+        // orthogonalize against previous columns (twice for stability)
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut proj = 0.0f32;
+                for i in 0..n {
+                    proj += u.get(i, j) * u.get(i, p);
+                }
+                for i in 0..n {
+                    let v2 = u.get(i, j) - proj * u.get(i, p);
+                    u.set(i, j, v2);
+                }
+            }
+        }
+        let mut nrm = 0.0f32;
+        for i in 0..n {
+            nrm += u.get(i, j) * u.get(i, j);
+        }
+        let nrm = nrm.sqrt();
+        if nrm < 1e-6 {
+            // fully degenerate after projection: pick a fresh basis vector
+            for i in 0..n {
+                u.set(i, j, 0.0);
+            }
+            u.set(basis_cursor % n, j, 1.0);
+            basis_cursor += 1;
+            // re-orthogonalize once
+            for p in 0..j {
+                let mut proj = 0.0f32;
+                for i in 0..n {
+                    proj += u.get(i, j) * u.get(i, p);
+                }
+                for i in 0..n {
+                    let v2 = u.get(i, j) - proj * u.get(i, p);
+                    u.set(i, j, v2);
+                }
+            }
+            let mut n2 = 0.0f32;
+            for i in 0..n {
+                n2 += u.get(i, j) * u.get(i, j);
+            }
+            let n2 = n2.sqrt().max(1e-12);
+            for i in 0..n {
+                u.set(i, j, u.get(i, j) / n2);
+            }
+        } else {
+            for i in 0..n {
+                u.set(i, j, u.get(i, j) / nrm);
+            }
+        }
+    }
+    u.matmul(&v.transpose())
+}
+
+/// Solve `A X = B` for SPD `A` (n×n, flat row-major, **destroyed**) and
+/// multi-column `B` (n×d, flat row-major). Returns `X` (n×d) or `None` if
+/// the Cholesky factorization hits a non-positive pivot.
+///
+/// Used by the LSQ codebook update where `A = BᵀB + λI` (code
+/// co-occurrence) and `B = BᵀX`; n = m·k can reach a few thousand, so the
+/// inner loops are written over contiguous rows.
+pub fn cholesky_solve_multi(a: &mut [f32], n: usize, b: &[f32], d: usize)
+                            -> Option<Vec<f32>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n * d);
+    // In-place lower Cholesky: A = L Lᵀ (row-major, L in the lower part).
+    for i in 0..n {
+        for j in 0..=i {
+            // dot of row i and row j over [0, j)
+            let mut sum = 0.0f64;
+            let (ri, rj) = (i * n, j * n);
+            for t in 0..j {
+                sum += a[ri + t] as f64 * a[rj + t] as f64;
+            }
+            if i == j {
+                let diag = a[ri + i] as f64 - sum;
+                if diag <= 0.0 {
+                    return None;
+                }
+                a[ri + i] = diag.sqrt() as f32;
+            } else {
+                a[ri + j] = ((a[ri + j] as f64 - sum) / a[rj + j] as f64) as f32;
+            }
+        }
+    }
+    // Forward substitution: L Y = B
+    let mut x = b.to_vec();
+    for i in 0..n {
+        let ri = i * n;
+        for t in 0..i {
+            let l = a[ri + t];
+            if l != 0.0 {
+                let (head, tail) = x.split_at_mut(i * d);
+                let yi = &mut tail[..d];
+                let yt = &head[t * d..(t + 1) * d];
+                for (y, v) in yi.iter_mut().zip(yt) {
+                    *y -= l * v;
+                }
+            }
+        }
+        let inv = 1.0 / a[ri + i];
+        for y in &mut x[i * d..(i + 1) * d] {
+            *y *= inv;
+        }
+    }
+    // Back substitution: Lᵀ X = Y
+    for i in (0..n).rev() {
+        for t in (i + 1)..n {
+            let l = a[t * n + i]; // Lᵀ[i][t] = L[t][i]
+            if l != 0.0 {
+                let (head, tail) = x.split_at_mut(t * d);
+                let xi = &mut head[i * d..(i + 1) * d];
+                let xt = &tail[..d];
+                for (y, v) in xi.iter_mut().zip(xt) {
+                    *y -= l * v;
+                }
+            }
+        }
+        let inv = 1.0 / a[i * n + i];
+        for y in &mut x[i * d..(i + 1) * d] {
+            *y *= inv;
+        }
+    }
+    Some(x)
+}
+
+/// Mean of a set of row vectors stored flat.
+pub fn mean_rows(data: &[f32], dim: usize) -> Vec<f32> {
+    let n = data.len() / dim;
+    let mut mu = vec![0.0f32; dim];
+    for r in 0..n {
+        axpy(1.0, &data[r * dim..(r + 1) * dim], &mut mu);
+    }
+    let inv = 1.0 / n.max(1) as f32;
+    mu.iter_mut().for_each(|m| *m *= inv);
+    mu
+}
+
+/// Covariance matrix (biased) of rows stored flat.
+pub fn covariance(data: &[f32], dim: usize) -> Mat {
+    let n = data.len() / dim;
+    let mu = mean_rows(data, dim);
+    let mut cov = Mat::zeros(dim, dim);
+    let mut centered = vec![0.0f32; dim];
+    for r in 0..n {
+        let row = &data[r * dim..(r + 1) * dim];
+        for j in 0..dim {
+            centered[j] = row[j] - mu[j];
+        }
+        for i in 0..dim {
+            let ci = centered[i];
+            if ci != 0.0 {
+                axpy(ci, &centered, cov.row_mut(i));
+            }
+        }
+    }
+    let inv = 1.0 / n.max(1) as f32;
+    cov.data.iter_mut().for_each(|v| *v *= inv);
+    cov
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn sq_l2_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.3).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        approx(sq_l2(&a, &b), naive, 1e-3);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..101).map(|i| (i as f32).cos()).collect();
+        let b: Vec<f32> = (0..101).map(|i| (i as f32 * 0.7).sin()).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        approx(dot(&a, &b), naive, 1e-3);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let i3 = Mat::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_rows(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn jacobi_recovers_diagonal() {
+        let mut a = Mat::zeros(4, 4);
+        for (i, v) in [4.0, 3.0, 2.0, 1.0].iter().enumerate() {
+            a.set(i, i, *v);
+        }
+        let (vals, _) = jacobi_eigen(&a, 30);
+        for (got, want) in vals.iter().zip([4.0, 3.0, 2.0, 1.0]) {
+            approx(*got, want, 1e-5);
+        }
+    }
+
+    #[test]
+    fn jacobi_reconstructs_symmetric() {
+        // A = Q Λ Qᵀ reconstruction check on a random symmetric matrix.
+        let n = 8;
+        let mut a = Mat::zeros(n, n);
+        let mut seed = 1u64;
+        let mut rnd = || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        for i in 0..n {
+            for j in i..n {
+                let v = rnd();
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        let (vals, vecs) = jacobi_eigen(&a, 50);
+        // rebuild: sum_i λ_i v_i v_iᵀ
+        let mut rec = Mat::zeros(n, n);
+        for i in 0..n {
+            let v = vecs.row(i);
+            for r in 0..n {
+                for c in 0..n {
+                    rec.data[r * n + c] += vals[i] * v[r] * v[c];
+                }
+            }
+        }
+        assert!(a.frob_dist(&rec) < 1e-3, "dist {}", a.frob_dist(&rec));
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut a = Mat::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                a.set(i, j, 1.0 / (1.0 + (i + j) as f32));
+            }
+        }
+        let (_, vecs) = jacobi_eigen(&a, 50);
+        for i in 0..5 {
+            for j in 0..5 {
+                let d = dot(vecs.row(i), vecs.row(j));
+                approx(d, if i == j { 1.0 } else { 0.0 }, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // A = M Mᵀ + I (SPD), random-ish M
+        let n = 6;
+        let d = 3;
+        let mut seed = 5u64;
+        let mut rnd = || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let m = Mat::from_rows(n, n, (0..n * n).map(|_| rnd()).collect());
+        let mut a = m.matmul(&m.transpose());
+        for i in 0..n {
+            a.data[i * n + i] += 1.0;
+        }
+        let x_true: Vec<f32> = (0..n * d).map(|_| rnd()).collect();
+        // B = A X
+        let xm = Mat::from_rows(n, d, x_true.clone());
+        let b = a.matmul(&xm);
+        let mut a_work = a.data.clone();
+        let x = cholesky_solve_multi(&mut a_work, n, &b.data, d).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = vec![1.0, 0.0, 0.0, -1.0]; // indefinite
+        assert!(cholesky_solve_multi(&mut a, 2, &[1.0, 1.0], 1).is_none());
+    }
+
+    #[test]
+    fn procrustes_recovers_rotation() {
+        // Y = X R for a known rotation; C = XᵀY should give back R.
+        let theta = 0.6f32;
+        let r = Mat::from_rows(
+            2, 2, vec![theta.cos(), -theta.sin(), theta.sin(), theta.cos()]);
+        // X: some full-rank point set
+        let x = Mat::from_rows(4, 2, vec![1., 0., 0., 1., 2., 1., -1., 3.]);
+        let y = x.matmul(&r);
+        let c = x.transpose().matmul(&y);
+        let got = procrustes(&c);
+        assert!(got.frob_dist(&r) < 1e-3, "dist {}", got.frob_dist(&r));
+    }
+
+    #[test]
+    fn covariance_of_isotropic_cloud() {
+        // two points symmetric about the origin along x
+        let data = vec![1.0f32, 0.0, -1.0, 0.0];
+        let cov = covariance(&data, 2);
+        approx(cov.get(0, 0), 1.0, 1e-6);
+        approx(cov.get(1, 1), 0.0, 1e-6);
+        approx(cov.get(0, 1), 0.0, 1e-6);
+    }
+
+    #[test]
+    fn mean_rows_simple() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0];
+        assert_eq!(mean_rows(&data, 2), vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,232 @@
+//! `unq` — the launcher CLI.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! unq gen-data  [--datasets a,b] [--scale F]       generate synthetic corpora
+//! unq gt        [--datasets a,b] [--r N]           exact ground truth (cached)
+//! unq train     --quantizer Q --dataset D [--bytes B]   train + cache a baseline
+//! unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
+//! unq tables    [--table 1|2|3|4|5|mem|timings|all]    regenerate paper tables
+//! unq serve     --dataset D [--quantizer Q] [--queries N]  run the coordinator
+//! unq artifacts                                    list AOT bundles
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use unq::config::{AppConfig, QuantizerKind};
+use unq::coordinator;
+use unq::data;
+use unq::eval::harness;
+use unq::Result;
+
+mod tables;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` and boolean `--flag`.
+pub struct Flags {
+    cmd: String,
+    vals: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Result<Flags> {
+        let cmd = args.first().cloned().unwrap_or_else(|| "help".into());
+        let mut vals = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    vals.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    bools.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        Ok(Flags { cmd, vals, bools })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+pub fn base_config(f: &Flags) -> Result<AppConfig> {
+    let mut cfg = AppConfig::default().apply_env();
+    if let Some(d) = f.get("dataset") {
+        cfg.dataset = d.to_string();
+    }
+    if let Some(q) = f.get("quantizer") {
+        cfg.quantizer = QuantizerKind::parse(q)
+            .with_context(|| format!("unknown quantizer {q:?}"))?;
+    }
+    if let Some(b) = f.get("bytes") {
+        cfg.bytes_per_vector = b.parse().context("--bytes")?;
+    }
+    if let Some(s) = f.get("scale") {
+        cfg.scale = s.parse().context("--scale")?;
+    }
+    if let Some(l) = f.get("rerank-l") {
+        cfg.search.rerank_l = l.parse().context("--rerank-l")?;
+    }
+    cfg.search.no_rerank = f.has("no-rerank");
+    cfg.search.exhaustive_rerank = f.has("exhaustive");
+    Ok(cfg)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let f = Flags::parse(args)?;
+    match f.cmd.as_str() {
+        "gen-data" => cmd_gen_data(&f),
+        "gt" => cmd_gt(&f),
+        "train" => cmd_train(&f),
+        "eval" => cmd_eval(&f),
+        "tables" => tables::cmd_tables(&f),
+        "serve" => cmd_serve(&f),
+        "artifacts" => cmd_artifacts(&f),
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `unq help`)"),
+    }
+}
+
+const HELP: &str = "\
+unq — Unsupervised Neural Quantization retrieval system
+
+USAGE:
+  unq gen-data  [--datasets a,b] [--scale F]
+  unq gt        [--datasets a,b] [--r N]
+  unq train     --quantizer Q --dataset D [--bytes B]
+  unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
+  unq tables    [--table 1|2|3|4|5|mem|timings|all]
+  unq serve     --dataset D [--quantizer Q] [--queries N]
+  unq artifacts
+
+Quantizers: pq opq rvq lsq lsq+rerank catalyst-lattice catalyst-opq unq
+Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see DESIGN.md)
+";
+
+fn datasets_arg(f: &Flags, scale: f64) -> Vec<data::DatasetSpec> {
+    match f.get("datasets") {
+        Some(list) => list
+            .split(',')
+            .filter_map(|n| data::spec_by_name(n.trim(), scale))
+            .collect(),
+        None => data::catalog(scale),
+    }
+}
+
+fn cmd_gen_data(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    for spec in datasets_arg(f, cfg.scale) {
+        let t0 = std::time::Instant::now();
+        let splits = data::load_or_generate(&spec, &cfg.data_dir)?;
+        println!(
+            "[gen-data] {}: train {} base {} query {} (dim {}) in {:.1}s",
+            spec.name, splits.train.len(), splits.base.len(),
+            splits.query.len(), spec.dim(), t0.elapsed().as_secs_f32()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gt(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    let r: usize = f.get("r").map(|v| v.parse()).transpose()?.unwrap_or(100);
+    for spec in datasets_arg(f, cfg.scale) {
+        let splits = data::load_or_generate(&spec, &cfg.data_dir)?;
+        let gt = unq::gt::load_or_compute(&cfg.data_dir, &spec.name,
+                                          &splits.base, &splits.query, r)?;
+        println!("[gt] {}: {} queries × top-{}", spec.name,
+                 gt.neighbors.len(), gt.r);
+    }
+    Ok(())
+}
+
+fn cmd_train(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    if cfg.quantizer == QuantizerKind::Unq {
+        bail!("UNQ is trained at build time: run `make artifacts`");
+    }
+    let spec = data::spec_by_name(&cfg.dataset, cfg.scale)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    let splits = data::load_or_generate(&spec, &cfg.data_dir)?;
+    std::fs::create_dir_all(&cfg.runs_dir)?;
+    let (q, secs) = harness::train_or_load_shallow(&cfg, cfg.quantizer,
+                                                   &splits.train)?;
+    println!("[train] {} on {}: {:.1}s (cached if 0)", q.name(),
+             cfg.dataset, secs);
+    Ok(())
+}
+
+fn cmd_eval(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    let variant = f.get("variant").unwrap_or("");
+    let exp = harness::prepare(&cfg, variant)?;
+    let mut search = harness::paper_search_config(cfg.quantizer, &cfg.dataset,
+                                                  cfg.search.k);
+    search.no_rerank |= cfg.search.no_rerank;
+    search.exhaustive_rerank = cfg.search.exhaustive_rerank;
+    let t0 = std::time::Instant::now();
+    let rec = exp.run_recall(search);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[eval] {} on {} ({}B, n={}): R@1 {:.1}  R@10 {:.1}  R@100 {:.1}  \
+         ({:.2} ms/query)",
+        exp.quant.name(), cfg.dataset, cfg.bytes_per_vector, exp.index.n,
+        rec.at1, rec.at10, rec.at100,
+        1e3 * secs / exp.splits.query.len().max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    let queries: usize =
+        f.get("queries").map(|v| v.parse()).transpose()?.unwrap_or(1000);
+    coordinator::demo::run_demo(&cfg, queries)
+}
+
+fn cmd_artifacts(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    let names = unq::runtime::list_artifacts(&cfg.artifacts_dir);
+    if names.is_empty() {
+        println!("no artifacts under {:?} — run `make artifacts`",
+                 cfg.artifacts_dir);
+        return Ok(());
+    }
+    for n in names {
+        match unq::runtime::Manifest::load(&cfg.artifacts_dir.join(&n)) {
+            Ok(m) => println!(
+                "{:<18} dataset={:<8} M={:<3} K={} dc={} hidden={} \
+                 params={} ({:.1} MB)",
+                m.name, m.dataset, m.m, m.k, m.dc, m.hidden, m.param_count,
+                m.param_bytes as f64 / 1e6
+            ),
+            Err(e) => println!("{n:<18} (unreadable manifest: {e})"),
+        }
+    }
+    Ok(())
+}

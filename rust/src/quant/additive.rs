@@ -1,0 +1,415 @@
+//! Additive (non-orthogonal) quantization machinery, shared by RVQ and LSQ.
+//!
+//! A vector is approximated by a *sum* of M full-dimensional codewords
+//! (paper §2, "Non-orthogonal quantizations").  The ADC identity
+//!
+//! `‖q − x̂‖² = ‖q‖² − 2Σ_m⟨q, c_m⟩ + ‖x̂‖²`
+//!
+//! is LUT-decomposable except for `‖x̂‖²`, which additive methods quantize
+//! into one extra byte (a 256-level scalar codebook) — the standard
+//! budget split used by AQ/LSQ: an 8-byte code = 7 codebooks + 1 norm
+//! byte.  The norm byte is modeled here as an (M+1)-th LUT row, so the
+//! index scan stays one uniform `Σ tables[j][code[j]]` loop.
+//!
+//! Encoding strategies:
+//! * **greedy residual** (= RVQ): codebook m quantizes the residual after
+//!   m−1 levels.
+//! * **ICM refinement** (used by LSQ): iterated conditional modes over the
+//!   code tuple with a precomputed codeword Gram matrix.
+
+use crate::kmeans::{kmeans, KMeansConfig};
+use crate::linalg::{axpy, dot, sq_l2};
+use crate::store::Store;
+use crate::Result;
+
+use super::{Lut, Quantizer};
+
+/// Additive codebook model: `m` codebooks × `k` codewords × `dim`.
+pub struct Additive {
+    pub dim: usize,
+    pub m: usize,
+    pub k: usize,
+    /// `(m, k, dim)` flat codewords.
+    pub codebooks: Vec<f32>,
+    /// 256-level scalar codebook for `‖x̂‖²`.
+    pub norm_levels: Vec<f32>,
+    /// Gram matrix `⟨c_{m,k}, c_{m',k'}⟩`, `(m·k)²`, for ICM.
+    pub gram: Vec<f32>,
+    /// ICM sweeps at encode time (0 = pure greedy/RVQ).
+    pub icm_sweeps: usize,
+    /// Display name ("RVQ" or "LSQ").
+    pub label: String,
+}
+
+impl Additive {
+    #[inline]
+    pub fn codeword(&self, j: usize, c: usize) -> &[f32] {
+        let base = (j * self.k + c) * self.dim;
+        &self.codebooks[base..base + self.dim]
+    }
+
+    /// Train as a residual vector quantizer (greedy levels). This is both
+    /// the RVQ baseline and the LSQ initialization.
+    pub fn train_rvq(data: &[f32], dim: usize, m: usize, k: usize,
+                     seed: u64, kmeans_iters: usize, label: &str) -> Additive {
+        let n = data.len() / dim;
+        let mut residual = data.to_vec();
+        let mut codebooks = vec![0.0f32; m * k * dim];
+        for j in 0..m {
+            let km = kmeans(&residual, dim, &KMeansConfig {
+                k,
+                iters: kmeans_iters,
+                seed: seed.wrapping_add(j as u64 * 7919),
+            });
+            codebooks[j * k * dim..(j + 1) * k * dim]
+                .copy_from_slice(&km.centroids);
+            // subtract assigned centroids to form the next-level residual
+            for i in 0..n {
+                let a = km.assignments[i] as usize;
+                let c = &km.centroids[a * dim..(a + 1) * dim];
+                let r = &mut residual[i * dim..(i + 1) * dim];
+                for (rv, cv) in r.iter_mut().zip(c) {
+                    *rv -= cv;
+                }
+            }
+        }
+        let mut q = Additive {
+            dim, m, k, codebooks,
+            norm_levels: vec![0.0; 256],
+            gram: Vec::new(),
+            icm_sweeps: 0,
+            label: label.to_string(),
+        };
+        q.rebuild_gram();
+        q.fit_norm_levels(data);
+        q
+    }
+
+    /// Recompute the codeword Gram matrix (after any codebook update).
+    pub fn rebuild_gram(&mut self) {
+        let mk = self.m * self.k;
+        let mut gram = vec![0.0f32; mk * mk];
+        for a in 0..mk {
+            let ca = &self.codebooks[a * self.dim..(a + 1) * self.dim];
+            for b in a..mk {
+                let cb = &self.codebooks[b * self.dim..(b + 1) * self.dim];
+                let g = dot(ca, cb);
+                gram[a * mk + b] = g;
+                gram[b * mk + a] = g;
+            }
+        }
+        self.gram = gram;
+    }
+
+    /// Fit the 256-level scalar quantizer of reconstruction norms on a
+    /// training sample (1-d k-means via sorted Lloyd).
+    pub fn fit_norm_levels(&mut self, data: &[f32]) {
+        let n = data.len() / self.dim;
+        let sample = n.min(8192);
+        let mut norms = Vec::with_capacity(sample);
+        let mut codes = vec![0u8; self.m];
+        let mut rec = vec![0.0f32; self.dim];
+        let step = (n / sample).max(1);
+        for i in (0..n).step_by(step).take(sample) {
+            self.encode_codes(&data[i * self.dim..(i + 1) * self.dim],
+                              &mut codes);
+            self.sum_codewords(&codes, &mut rec);
+            norms.push(dot(&rec, &rec));
+        }
+        norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // quantile-spaced levels then 5 Lloyd sweeps in 1-d
+        let mut levels: Vec<f32> = (0..256)
+            .map(|i| {
+                let idx = (i * norms.len()) / 256 + norms.len() / 512;
+                norms[idx.min(norms.len() - 1)]
+            })
+            .collect();
+        for _ in 0..5 {
+            let mut sums = vec![0.0f64; 256];
+            let mut counts = vec![0u32; 256];
+            for &v in &norms {
+                let j = nearest_level(&levels, v);
+                sums[j] += v as f64;
+                counts[j] += 1;
+            }
+            for j in 0..256 {
+                if counts[j] > 0 {
+                    levels[j] = (sums[j] / counts[j] as f64) as f32;
+                }
+            }
+        }
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        self.norm_levels = levels;
+    }
+
+    /// Greedy residual encoding (RVQ path / ICM warm start): the code
+    /// bytes only — the norm byte is appended by `encode_one`.
+    pub fn encode_codes(&self, x: &[f32], codes: &mut [u8]) {
+        debug_assert_eq!(codes.len(), self.m);
+        let mut residual = x.to_vec();
+        for j in 0..self.m {
+            let mut best = (0usize, f32::INFINITY);
+            for c in 0..self.k {
+                let d = sq_l2(&residual, self.codeword(j, c));
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            codes[j] = best.0 as u8;
+            let cw = self.codeword(j, best.0);
+            for (rv, cv) in residual.iter_mut().zip(cw) {
+                *rv -= cv;
+            }
+        }
+        if self.icm_sweeps > 0 {
+            self.icm_refine(x, codes);
+        }
+    }
+
+    /// Iterated conditional modes: cyclically re-pick each codeword with
+    /// the others fixed, using precomputed ⟨x,c⟩ and the codeword Gram.
+    ///
+    /// Objective per (j, c):  −2⟨x,c⟩ + ‖c‖² + 2 Σ_{l≠j} ⟨c, c_l⟩.
+    fn icm_refine(&self, x: &[f32], codes: &mut [u8]) {
+        let mk = self.m * self.k;
+        // xdots[j*k + c] = ⟨x, c_{j,c}⟩
+        let mut xdots = vec![0.0f32; mk];
+        for a in 0..mk {
+            xdots[a] = dot(x, &self.codebooks[a * self.dim..(a + 1) * self.dim]);
+        }
+        for _sweep in 0..self.icm_sweeps {
+            let mut changed = false;
+            for j in 0..self.m {
+                let mut best = (codes[j] as usize, f32::INFINITY);
+                for c in 0..self.k {
+                    let a = j * self.k + c;
+                    let mut cost = -2.0 * xdots[a] + self.gram[a * mk + a];
+                    for l in 0..self.m {
+                        if l != j {
+                            let b = l * self.k + codes[l] as usize;
+                            cost += 2.0 * self.gram[a * mk + b];
+                        }
+                    }
+                    if cost < best.1 {
+                        best = (c, cost);
+                    }
+                }
+                if best.0 != codes[j] as usize {
+                    codes[j] = best.0 as u8;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// `out = Σ_j c_{j, codes[j]}`.
+    pub fn sum_codewords(&self, codes: &[u8], out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..self.m {
+            axpy(1.0, self.codeword(j, codes[j] as usize), out);
+        }
+    }
+
+    /// Reconstruction error of the *code* part (ignores the norm byte).
+    pub fn code_mse(&self, data: &[f32]) -> f32 {
+        let n = data.len() / self.dim;
+        let mut codes = vec![0u8; self.m];
+        let mut rec = vec![0.0f32; self.dim];
+        let mut sse = 0.0f64;
+        for i in 0..n {
+            let x = &data[i * self.dim..(i + 1) * self.dim];
+            self.encode_codes(x, &mut codes);
+            self.sum_codewords(&codes, &mut rec);
+            sse += sq_l2(x, &rec) as f64;
+        }
+        (sse / n.max(1) as f64) as f32
+    }
+
+    pub fn save(&self, store: &mut Store, prefix: &str) {
+        store.put_f32(&format!("{prefix}codebooks"),
+                      &[self.m, self.k, self.dim], self.codebooks.clone());
+        store.put_f32(&format!("{prefix}norm_levels"), &[256],
+                      self.norm_levels.clone());
+        store.put_meta(&format!("{prefix}additive"),
+                       &format!("{},{},{},{},{}", self.dim, self.m, self.k,
+                                self.icm_sweeps, self.label));
+    }
+
+    pub fn load(store: &Store, prefix: &str) -> Result<Additive> {
+        let meta = store.get_meta(&format!("{prefix}additive"))
+            .ok_or_else(|| anyhow::anyhow!("missing additive meta"))?;
+        let parts: Vec<&str> = meta.split(',').collect();
+        let (dim, m, k, icm): (usize, usize, usize, usize) = (
+            parts[0].parse()?, parts[1].parse()?, parts[2].parse()?,
+            parts[3].parse()?,
+        );
+        let label = parts.get(4).unwrap_or(&"RVQ").to_string();
+        let (_, cb) = store.get_f32(&format!("{prefix}codebooks"))
+            .ok_or_else(|| anyhow::anyhow!("missing additive codebooks"))?;
+        let (_, nl) = store.get_f32(&format!("{prefix}norm_levels"))
+            .ok_or_else(|| anyhow::anyhow!("missing norm levels"))?;
+        let mut q = Additive {
+            dim, m, k,
+            codebooks: cb.to_vec(),
+            norm_levels: nl.to_vec(),
+            gram: Vec::new(),
+            icm_sweeps: icm,
+            label,
+        };
+        q.rebuild_gram();
+        Ok(q)
+    }
+}
+
+#[inline]
+fn nearest_level(levels: &[f32], v: f32) -> usize {
+    // levels are sorted: binary search then compare neighbors
+    let idx = levels.partition_point(|&l| l < v);
+    let mut best = (idx.min(levels.len() - 1), f32::INFINITY);
+    for j in idx.saturating_sub(1)..=(idx.min(levels.len() - 1)) {
+        let d = (levels[j] - v).abs();
+        if d < best.1 {
+            best = (j, d);
+        }
+    }
+    best.0
+}
+
+impl Quantizer for Additive {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    /// m codebook bytes + 1 norm byte (the AQ/LSQ budget convention).
+    fn code_bytes(&self) -> usize {
+        self.m + 1
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        let (codes, norm_slot) = out.split_at_mut(self.m);
+        self.encode_codes(x, codes);
+        let mut rec = vec![0.0f32; self.dim];
+        self.sum_codewords(codes, &mut rec);
+        norm_slot[0] = nearest_level(&self.norm_levels, dot(&rec, &rec)) as u8;
+    }
+
+    fn lut(&self, q: &[f32]) -> Lut {
+        // rows 0..m: −2⟨q, c⟩ ; row m: quantized ‖x̂‖² levels.
+        let rows = self.m + 1;
+        let mut tables = vec![0.0f32; rows * self.k.max(256)];
+        let k = self.k.max(256);
+        for j in 0..self.m {
+            for c in 0..self.k {
+                tables[j * k + c] = -2.0 * dot(q, self.codeword(j, c));
+            }
+        }
+        tables[self.m * k..self.m * k + 256]
+            .copy_from_slice(&self.norm_levels);
+        Lut::Tables { m: rows, k, tables, bias: dot(q, q) }
+    }
+
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
+        self.sum_codewords(&code[..self.m], out);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic::Generator, Family};
+
+    fn toy() -> crate::data::Dataset {
+        Generator::new(Family::SiftLike, 3).generate(0, 600)
+    }
+
+    #[test]
+    fn rvq_residual_mse_decreases_per_level() {
+        let d = toy();
+        let a1 = Additive::train_rvq(&d.data, d.dim, 1, 32, 0, 6, "RVQ");
+        let a4 = Additive::train_rvq(&d.data, d.dim, 4, 32, 0, 6, "RVQ");
+        assert!(a4.code_mse(&d.data) < a1.code_mse(&d.data));
+    }
+
+    #[test]
+    fn icm_never_hurts_reconstruction() {
+        let d = toy();
+        let mut a = Additive::train_rvq(&d.data, d.dim, 4, 16, 0, 6, "t");
+        let greedy = a.code_mse(&d.data);
+        a.icm_sweeps = 3;
+        let icm = a.code_mse(&d.data);
+        assert!(icm <= greedy + 1e-3, "icm {icm} vs greedy {greedy}");
+    }
+
+    #[test]
+    fn adc_score_approximates_distance() {
+        let d = toy();
+        let a = Additive::train_rvq(&d.data, d.dim, 7, 32, 0, 6, "t");
+        let q = d.row(2);
+        let lut = a.lut(q);
+        let cb = a.code_bytes();
+        let mut code = vec![0u8; cb];
+        let mut rec = vec![0.0f32; d.dim];
+        // ADC error should be dominated by the norm-byte quantization:
+        // relative error well under 5%.
+        for i in 10..30 {
+            a.encode_one(d.row(i), &mut code);
+            a.reconstruct(&code, &mut rec);
+            let exact = sq_l2(q, &rec);
+            let adc = lut.score(&code);
+            assert!((exact - adc).abs() < 0.05 * exact.max(1.0),
+                    "row {i}: exact {exact} adc {adc}");
+        }
+    }
+
+    #[test]
+    fn norm_levels_sorted_and_finite() {
+        let d = toy();
+        let a = Additive::train_rvq(&d.data, d.dim, 4, 16, 0, 5, "t");
+        for w in a.norm_levels.windows(2) {
+            assert!(w[0] <= w[1]);
+            assert!(w[0].is_finite());
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_dot_table() {
+        let d = toy();
+        let a = Additive::train_rvq(&d.data, d.dim, 2, 8, 0, 4, "t");
+        let mk = a.m * a.k;
+        for x in 0..mk {
+            for y in 0..mk {
+                assert_eq!(a.gram[x * mk + y], a.gram[y * mk + x]);
+            }
+        }
+        let g01 = dot(a.codeword(0, 1), a.codeword(1, 3));
+        assert!((a.gram[(0 * 8 + 1) * mk + (8 + 3)] - g01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = toy();
+        let mut a = Additive::train_rvq(&d.data, d.dim, 3, 8, 0, 4, "LSQ");
+        a.icm_sweeps = 2;
+        let mut s = Store::new();
+        a.save(&mut s, "x_");
+        let dir = crate::util::TempDir::new("add").unwrap();
+        let p = dir.path().join("a.store");
+        s.save(&p).unwrap();
+        let back = Additive::load(&Store::load(&p).unwrap(), "x_").unwrap();
+        assert_eq!(back.icm_sweeps, 2);
+        assert_eq!(back.label, "LSQ");
+        let mut c1 = vec![0u8; a.code_bytes()];
+        let mut c2 = vec![0u8; a.code_bytes()];
+        a.encode_one(d.row(5), &mut c1);
+        back.encode_one(d.row(5), &mut c2);
+        assert_eq!(c1, c2);
+    }
+}

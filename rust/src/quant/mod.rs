@@ -1,0 +1,193 @@
+//! Multi-codebook quantizers: the paper's method and every baseline.
+//!
+//! All quantizers expose the two modules the paper identifies (§3.1): an
+//! *encoder* `f(x) → codes` and a *distance function* `d(q, code)` usable
+//! for exhaustive compressed-domain scan.  The scan contract is uniform:
+//! a per-query [`Lut`] whose entries are *distance contributions* (lower =
+//! closer), summed over code bytes by the index hot loop — exactly the
+//! paper's eq. (1)/(8) lookup structure.  The Catalyst lattice quantizer,
+//! which has no LUT decomposition, scores codes directly (the paper notes
+//! its scan is ~1.5× slower for the same reason).
+//!
+//! | impl | paper row | encoding | distance |
+//! |---|---|---|---|
+//! | [`pq::Pq`] | OPQ's ancestor (Table 1) | per-subspace NN | exact ADC |
+//! | [`opq::Opq`] | "OPQ" | rotate + PQ | exact ADC |
+//! | [`additive::Additive`] greedy | "RVQ" | residual greedy | ADC + norm byte |
+//! | [`lsq::Lsq`] | "LSQ" / "LSQ+rerank" | ICM + LS codebooks | ADC + norm byte |
+//! | [`lattice::CatalystLattice`] | "Catalyst+Lattice" | whiten→sphere→lattice | direct dot |
+//! | [`lattice::CatalystOpq`] | "Catalyst+OPQ" | whiten→sphere→OPQ | ADC in mapped space |
+//! | [`unq::UnqQuantizer`] | "UNQ" | AOT encoder (PJRT) | learned-space ADC + decoder rerank |
+
+pub mod additive;
+pub mod lattice;
+pub mod lsq;
+pub mod opq;
+pub mod pq;
+pub mod unq;
+
+use crate::data::Dataset;
+
+/// Per-query scoring structure handed to the index scan.
+pub enum Lut {
+    /// `tables[m * k + j]`: distance contribution of byte value `j` at code
+    /// position `m`; `bias` is the rank-invariant query constant (kept so
+    /// scores are interpretable as approximate squared distances).
+    Tables { m: usize, k: usize, tables: Vec<f32>, bias: f32 },
+    /// Direct scoring against a transformed query (lattice path).
+    Direct { q: Vec<f32>, bias: f32 },
+}
+
+impl Lut {
+    /// Score one code (lower = closer).
+    #[inline]
+    pub fn score(&self, code: &[u8]) -> f32 {
+        match self {
+            Lut::Tables { m, k, tables, bias } => {
+                debug_assert_eq!(code.len(), *m);
+                let mut acc = *bias;
+                for (j, &c) in code.iter().enumerate() {
+                    acc += tables[j * k + c as usize];
+                }
+                acc
+            }
+            Lut::Direct { q, bias } => {
+                // code holds i8 lattice coordinates
+                let mut dot = 0.0f32;
+                let mut nrm = 0.0f32;
+                for (qi, &c) in q.iter().zip(code) {
+                    let z = c as i8 as f32;
+                    dot += qi * z;
+                    nrm += z * z;
+                }
+                // cosine distance on the sphere (q is unit-norm)
+                bias - dot / nrm.sqrt().max(1e-12)
+            }
+        }
+    }
+}
+
+/// A trained quantizer: encoder + distance function (paper §3.1).
+pub trait Quantizer: Send + Sync {
+    /// Paper row label.
+    fn name(&self) -> String;
+
+    /// Bytes actually stored per vector (the index stride).
+    fn code_bytes(&self) -> usize;
+
+    /// Bytes charged against the paper's budget (= `code_bytes()` for all
+    /// LUT methods; the lattice stores `d_out` small ints but is *charged*
+    /// its nominal enumerative-coding budget — DESIGN.md §3).
+    fn nominal_bytes(&self) -> usize {
+        self.code_bytes()
+    }
+
+    /// Input dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Encode one vector into `code_bytes()` bytes.
+    fn encode_one(&self, x: &[f32], out: &mut [u8]);
+
+    /// Encode a flat batch (default: row loop; UNQ overrides to batch
+    /// through PJRT).
+    fn encode_batch(&self, data: &[f32]) -> Vec<u8> {
+        let dim = self.dim();
+        let n = data.len() / dim;
+        let cb = self.code_bytes();
+        let mut out = vec![0u8; n * cb];
+        for i in 0..n {
+            self.encode_one(&data[i * dim..(i + 1) * dim],
+                            &mut out[i * cb..(i + 1) * cb]);
+        }
+        out
+    }
+
+    /// Build the per-query scoring structure.
+    fn lut(&self, q: &[f32]) -> Lut;
+
+    /// Build LUTs for a batch of queries (default: loop; UNQ overrides to
+    /// push whole batches through one PJRT execution).
+    fn lut_batch(&self, queries: &[&[f32]]) -> Vec<Lut> {
+        queries.iter().map(|q| self.lut(q)).collect()
+    }
+
+    /// Reconstruct the (approximate) vector from a code, for reranking
+    /// with `d1(q, i) = ‖q − reconstruct(i)‖²`. Returns false if this
+    /// method has no meaningful decoder in the original space (lattice).
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool;
+
+    /// Batch reconstruction into a flat `rows × dim` buffer (default: row
+    /// loop; UNQ overrides to run its decoder graph in AOT batches).
+    fn reconstruct_batch(&self, codes: &[u8], out: &mut [f32]) -> bool {
+        let cb = self.code_bytes();
+        let dim = self.dim();
+        let rows = codes.len() / cb;
+        for i in 0..rows {
+            if !self.reconstruct(&codes[i * cb..(i + 1) * cb],
+                                 &mut out[i * dim..(i + 1) * dim]) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Whether the two-stage rerank is meaningful for this method.
+    fn supports_rerank(&self) -> bool {
+        true
+    }
+}
+
+/// Encode a whole dataset.
+pub fn encode_dataset(q: &dyn Quantizer, data: &Dataset) -> Vec<u8> {
+    assert_eq!(q.dim(), data.dim);
+    q.encode_batch(&data.data)
+}
+
+/// Mean squared reconstruction error over a dataset — the compression
+/// quality measure shallow methods optimize directly.
+pub fn reconstruction_mse(q: &dyn Quantizer, data: &Dataset) -> f32 {
+    let dim = data.dim;
+    let codes = encode_dataset(q, data);
+    let cb = q.code_bytes();
+    let mut rec = vec![0.0f32; dim];
+    let mut sse = 0.0f64;
+    let mut n_ok = 0usize;
+    for i in 0..data.len() {
+        if q.reconstruct(&codes[i * cb..(i + 1) * cb], &mut rec) {
+            sse += crate::linalg::sq_l2(data.row(i), &rec) as f64;
+            n_ok += 1;
+        }
+    }
+    if n_ok == 0 {
+        f32::NAN
+    } else {
+        (sse / n_ok as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_tables_scoring() {
+        let lut = Lut::Tables {
+            m: 2,
+            k: 4,
+            tables: vec![0., 1., 2., 3., 10., 20., 30., 40.],
+            bias: 5.0,
+        };
+        assert_eq!(lut.score(&[0, 0]), 5.0 + 0.0 + 10.0);
+        assert_eq!(lut.score(&[3, 2]), 5.0 + 3.0 + 30.0);
+    }
+
+    #[test]
+    fn lut_direct_prefers_aligned() {
+        let q = vec![1.0, 0.0];
+        let lut = Lut::Direct { q, bias: 0.0 };
+        let aligned = lut.score(&[5i8 as u8, 0]);
+        let anti = lut.score(&[(-5i8) as u8, 0]);
+        let ortho = lut.score(&[0, 5]);
+        assert!(aligned < ortho && ortho < anti);
+    }
+}

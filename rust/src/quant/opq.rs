@@ -1,0 +1,205 @@
+//! Optimized Product Quantization (Ge et al., CVPR 2013; Norouzi & Fleet's
+//! Cartesian k-means) — non-parametric variant.
+//!
+//! Alternates between (a) training a PQ on the rotated data `X R` and
+//! (b) updating the rotation by orthogonal Procrustes against the PQ
+//! reconstructions: `R ← procrustes(Xᵀ X̂)`.  Because `R` is orthogonal,
+//! distances in the rotated space equal distances in the original space,
+//! so the ADC scan remains exact and reconstructions can be rotated back.
+
+use crate::linalg::{procrustes, Mat};
+use crate::store::Store;
+use crate::Result;
+
+use super::pq::Pq;
+use super::{Lut, Quantizer};
+
+pub struct Opq {
+    pub pq: Pq,
+    /// `dim × dim` rotation, row-major. Applied as `x_rot = R · x`
+    /// (i.e. matvec with rows).
+    pub rotation: Mat,
+    /// number of alternations used in training (kept for reporting)
+    pub iters: usize,
+}
+
+impl Opq {
+    pub fn train(data: &[f32], dim: usize, m: usize, k: usize, seed: u64,
+                 opq_iters: usize, kmeans_iters: usize) -> Opq {
+        let n = data.len() / dim;
+        let mut rotation = Mat::eye(dim);
+        let mut rotated = data.to_vec();
+        let mut pq = Pq::train(&rotated, dim, m, k, seed, kmeans_iters);
+
+        let mut code = vec![0u8; m];
+        let mut rec = vec![0.0f32; dim];
+        for _it in 0..opq_iters {
+            // X̂ = reconstructions in the rotated space
+            // C = X_origᵀ · X̂   (dim × dim)
+            let mut c = Mat::zeros(dim, dim);
+            for i in 0..n {
+                pq.encode_one(&rotated[i * dim..(i + 1) * dim], &mut code);
+                pq.reconstruct(&code, &mut rec);
+                let orig = &data[i * dim..(i + 1) * dim];
+                for r in 0..dim {
+                    let o = orig[r];
+                    if o != 0.0 {
+                        let row = c.row_mut(r);
+                        for (rv, xv) in row.iter_mut().zip(&rec) {
+                            *rv += o * xv;
+                        }
+                    }
+                }
+            }
+            // R minimizing ‖X R − X̂‖ : note our apply convention is
+            // x_rot = R·x (rows), so store Rᵀ of the Procrustes solution.
+            let r_proc = procrustes(&c);
+            rotation = r_proc.transpose();
+            // re-rotate the data and retrain PQ (warm iterations)
+            for i in 0..n {
+                let x = &data[i * dim..(i + 1) * dim];
+                let xr = rotation.matvec(x);
+                rotated[i * dim..(i + 1) * dim].copy_from_slice(&xr);
+            }
+            pq = Pq::train(&rotated, dim, m, k, seed, kmeans_iters);
+        }
+        Opq { pq, rotation, iters: opq_iters }
+    }
+
+    #[inline]
+    fn rotate(&self, x: &[f32]) -> Vec<f32> {
+        self.rotation.matvec(x)
+    }
+
+    pub fn save(&self, store: &mut Store, prefix: &str) {
+        self.pq.save(store, &format!("{prefix}opq_"));
+        store.put_f32(&format!("{prefix}rotation"),
+                      &[self.rotation.rows, self.rotation.cols],
+                      self.rotation.data.clone());
+    }
+
+    pub fn load(store: &Store, prefix: &str) -> Result<Opq> {
+        let pq = Pq::load(store, &format!("{prefix}opq_"))?;
+        let (shape, data) = store.get_f32(&format!("{prefix}rotation"))
+            .ok_or_else(|| anyhow::anyhow!("missing opq rotation"))?;
+        let rotation = Mat::from_rows(shape[0], shape[1], data.to_vec());
+        Ok(Opq { pq, rotation, iters: 0 })
+    }
+}
+
+impl Quantizer for Opq {
+    fn name(&self) -> String {
+        "OPQ".into()
+    }
+
+    fn code_bytes(&self) -> usize {
+        self.pq.m
+    }
+
+    fn dim(&self) -> usize {
+        self.pq.dim
+    }
+
+    fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        let xr = self.rotate(x);
+        self.pq.encode_one(&xr, out);
+    }
+
+    fn lut(&self, q: &[f32]) -> Lut {
+        // rotation is orthogonal ⇒ ‖Rq − Rx‖ = ‖q − x‖
+        let qr = self.rotate(q);
+        self.pq.lut(&qr)
+    }
+
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
+        let mut rec_rot = vec![0.0f32; self.pq.dim];
+        self.pq.reconstruct(code, &mut rec_rot);
+        // rotate back: x = Rᵀ x_rot  (columns of R)
+        let dim = self.pq.dim;
+        for r in 0..dim {
+            out[r] = 0.0;
+        }
+        for (i, &v) in rec_rot.iter().enumerate() {
+            if v != 0.0 {
+                let row = self.rotation.row(i);
+                for r in 0..dim {
+                    out[r] += row[r] * v;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic::Generator, Family};
+    use crate::linalg::{dot, sq_l2};
+    use crate::quant::reconstruction_mse;
+
+    fn toy(family: Family, n: usize) -> crate::data::Dataset {
+        Generator::new(family, 2).generate(0, n)
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let d = toy(Family::DeepLike, 400);
+        let opq = Opq::train(&d.data, d.dim, 8, 16, 0, 3, 5);
+        let r = &opq.rotation;
+        for i in 0..4 {
+            for j in 0..4 {
+                let v = dot(r.row(i), r.row(j));
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-3, "({i},{j}) = {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn opq_not_worse_than_pq_on_correlated_data() {
+        // deep-like data has strongly coupled coordinates: rotation helps
+        let d = toy(Family::DeepLike, 1500);
+        let pq = super::super::pq::Pq::train(&d.data, d.dim, 8, 32, 0, 8);
+        let opq = Opq::train(&d.data, d.dim, 8, 32, 0, 4, 8);
+        let mse_pq = reconstruction_mse(&pq, &d);
+        let mse_opq = reconstruction_mse(&opq, &d);
+        assert!(mse_opq <= mse_pq * 1.02,
+                "OPQ {mse_opq} should beat PQ {mse_pq}");
+    }
+
+    #[test]
+    fn adc_matches_reconstruction_distance() {
+        let d = toy(Family::DeepLike, 500);
+        let opq = Opq::train(&d.data, d.dim, 8, 16, 0, 2, 5);
+        let q = d.row(7);
+        let lut = opq.lut(q);
+        let mut code = vec![0u8; 8];
+        let mut rec = vec![0.0f32; d.dim];
+        for i in 0..20 {
+            opq.encode_one(d.row(i), &mut code);
+            opq.reconstruct(&code, &mut rec);
+            let exact = sq_l2(q, &rec);
+            let adc = lut.score(&code);
+            assert!((exact - adc).abs() < 1e-2 * exact.max(0.1),
+                    "{exact} vs {adc}");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = toy(Family::DeepLike, 300);
+        let opq = Opq::train(&d.data, d.dim, 4, 8, 0, 2, 4);
+        let mut s = Store::new();
+        opq.save(&mut s, "");
+        let dir = crate::util::TempDir::new("opq").unwrap();
+        let p = dir.path().join("opq.store");
+        s.save(&p).unwrap();
+        let back = Opq::load(&Store::load(&p).unwrap(), "").unwrap();
+        let mut c1 = vec![0u8; 4];
+        let mut c2 = vec![0u8; 4];
+        opq.encode_one(d.row(0), &mut c1);
+        back.encode_one(d.row(0), &mut c2);
+        assert_eq!(c1, c2);
+    }
+}

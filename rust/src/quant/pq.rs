@@ -1,0 +1,227 @@
+//! Product Quantization (Jégou et al., TPAMI 2011) — the MCQ ancestor.
+//!
+//! Splits R^D into M orthogonal subspaces of D/M dims, runs k-means in
+//! each, and encodes a vector as the tuple of per-subspace centroid ids.
+//! The ADC lookup table holds exact per-subspace squared distances, so the
+//! scanned score equals `‖q − x̂‖²` exactly (eq. 1 of the paper).
+
+use crate::kmeans::{kmeans, nearest, KMeansConfig};
+use crate::linalg::sq_l2;
+use crate::store::Store;
+use crate::Result;
+
+use super::{Lut, Quantizer};
+
+/// A trained product quantizer.
+pub struct Pq {
+    pub dim: usize,
+    pub m: usize,
+    pub k: usize,
+    /// dsub = dim / m
+    pub dsub: usize,
+    /// `(m, k, dsub)` flat centroids.
+    pub centroids: Vec<f32>,
+}
+
+impl Pq {
+    /// Train on `data` (flat rows of `dim`).
+    pub fn train(data: &[f32], dim: usize, m: usize, k: usize, seed: u64,
+                 kmeans_iters: usize) -> Pq {
+        assert!(dim % m == 0, "PQ requires dim % m == 0 ({dim} % {m})");
+        assert!(k <= 256, "codes are single bytes");
+        let dsub = dim / m;
+        let n = data.len() / dim;
+        let mut centroids = vec![0.0f32; m * k * dsub];
+        let mut sub = vec![0.0f32; n * dsub];
+        for j in 0..m {
+            // gather the j-th subvector of every row
+            for i in 0..n {
+                sub[i * dsub..(i + 1) * dsub].copy_from_slice(
+                    &data[i * dim + j * dsub..i * dim + (j + 1) * dsub]);
+            }
+            let km = kmeans(&sub, dsub, &KMeansConfig {
+                k,
+                iters: kmeans_iters,
+                seed: seed.wrapping_add(j as u64),
+            });
+            centroids[j * k * dsub..(j + 1) * k * dsub]
+                .copy_from_slice(&km.centroids);
+        }
+        Pq { dim, m, k, dsub, centroids }
+    }
+
+    #[inline]
+    fn sub_centroids(&self, j: usize) -> &[f32] {
+        &self.centroids[j * self.k * self.dsub..(j + 1) * self.k * self.dsub]
+    }
+
+    #[inline]
+    pub fn centroid(&self, j: usize, c: usize) -> &[f32] {
+        let base = (j * self.k + c) * self.dsub;
+        &self.centroids[base..base + self.dsub]
+    }
+
+    pub fn save(&self, store: &mut Store, prefix: &str) {
+        store.put_f32(&format!("{prefix}centroids"),
+                      &[self.m, self.k, self.dsub], self.centroids.clone());
+        store.put_meta(&format!("{prefix}pq"),
+                       &format!("{},{},{}", self.dim, self.m, self.k));
+    }
+
+    pub fn load(store: &Store, prefix: &str) -> Result<Pq> {
+        let meta = store.get_meta(&format!("{prefix}pq"))
+            .ok_or_else(|| anyhow::anyhow!("missing pq meta {prefix:?}"))?;
+        let parts: Vec<usize> = meta.split(',')
+            .map(|p| p.parse().unwrap_or(0)).collect();
+        let (dim, m, k) = (parts[0], parts[1], parts[2]);
+        let (_, data) = store.get_f32(&format!("{prefix}centroids"))
+            .ok_or_else(|| anyhow::anyhow!("missing pq centroids"))?;
+        Ok(Pq { dim, m, k, dsub: dim / m, centroids: data.to_vec() })
+    }
+}
+
+impl Quantizer for Pq {
+    fn name(&self) -> String {
+        "PQ".into()
+    }
+
+    fn code_bytes(&self) -> usize {
+        self.m
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(x.len(), self.dim);
+        for j in 0..self.m {
+            let xs = &x[j * self.dsub..(j + 1) * self.dsub];
+            let (id, _) = nearest(xs, self.sub_centroids(j), self.dsub);
+            out[j] = id as u8;
+        }
+    }
+
+    fn lut(&self, q: &[f32]) -> Lut {
+        let mut tables = vec![0.0f32; self.m * self.k];
+        for j in 0..self.m {
+            let qs = &q[j * self.dsub..(j + 1) * self.dsub];
+            for c in 0..self.k {
+                tables[j * self.k + c] = sq_l2(qs, self.centroid(j, c));
+            }
+        }
+        Lut::Tables { m: self.m, k: self.k, tables, bias: 0.0 }
+    }
+
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
+        for j in 0..self.m {
+            out[j * self.dsub..(j + 1) * self.dsub]
+                .copy_from_slice(self.centroid(j, code[j] as usize));
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic::Generator, Family};
+    use crate::quant::reconstruction_mse;
+    use crate::util::{prop, rng::SplitMix64, TempDir};
+
+    fn toy_data() -> crate::data::Dataset {
+        Generator::new(Family::SiftLike, 1).generate(0, 800)
+    }
+
+    #[test]
+    fn adc_equals_exact_distance_to_reconstruction() {
+        let d = toy_data();
+        let pq = Pq::train(&d.data, d.dim, 8, 16, 0, 8);
+        let mut code = vec![0u8; 8];
+        let mut rec = vec![0.0f32; d.dim];
+        let q = d.row(5);
+        let lut = pq.lut(q);
+        for i in 0..20 {
+            pq.encode_one(d.row(i), &mut code);
+            pq.reconstruct(&code, &mut rec);
+            let exact = sq_l2(q, &rec);
+            let adc = lut.score(&code);
+            assert!((exact - adc).abs() < 1e-2 * exact.max(1.0),
+                    "row {i}: {exact} vs {adc}");
+        }
+    }
+
+    #[test]
+    fn encode_is_nearest_subcentroid() {
+        let d = toy_data();
+        let pq = Pq::train(&d.data, d.dim, 4, 8, 0, 6);
+        let mut code = vec![0u8; 4];
+        pq.encode_one(d.row(0), &mut code);
+        for j in 0..4 {
+            let xs = &d.row(0)[j * pq.dsub..(j + 1) * pq.dsub];
+            let chosen = sq_l2(xs, pq.centroid(j, code[j] as usize));
+            for c in 0..8 {
+                assert!(chosen <= sq_l2(xs, pq.centroid(j, c)) + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn more_codebooks_reduce_mse() {
+        let d = toy_data();
+        let pq4 = Pq::train(&d.data, d.dim, 4, 32, 0, 8);
+        let pq16 = Pq::train(&d.data, d.dim, 16, 32, 0, 8);
+        let mse4 = reconstruction_mse(&pq4, &d);
+        let mse16 = reconstruction_mse(&pq16, &d);
+        assert!(mse16 < mse4, "{mse16} !< {mse4}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = toy_data();
+        let pq = Pq::train(&d.data, d.dim, 8, 16, 0, 5);
+        let dir = TempDir::new("pq").unwrap();
+        let p = dir.path().join("pq.store");
+        let mut s = Store::new();
+        pq.save(&mut s, "");
+        s.save(&p).unwrap();
+        let back = Pq::load(&Store::load(&p).unwrap(), "").unwrap();
+        assert_eq!(back.centroids, pq.centroids);
+        assert_eq!(back.m, pq.m);
+        let mut c1 = vec![0u8; 8];
+        let mut c2 = vec![0u8; 8];
+        pq.encode_one(d.row(3), &mut c1);
+        back.encode_one(d.row(3), &mut c2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn prop_adc_consistency_random_vectors() {
+        // property: for random q and random codes, LUT score ==
+        // ‖q − reconstruct(code)‖² within float tolerance
+        let d = toy_data();
+        let pq = Pq::train(&d.data, d.dim, 8, 16, 0, 4);
+        prop::forall_ok(
+            42,
+            30,
+            |r: &mut SplitMix64| {
+                let q = prop::vec_f32(r, 128, 100.0);
+                let code: Vec<u8> =
+                    (0..8).map(|_| r.below(16) as u8).collect();
+                (q, code)
+            },
+            |(q, code)| {
+                let lut = pq.lut(q);
+                let mut rec = vec![0.0f32; 128];
+                pq.reconstruct(code, &mut rec);
+                let exact = sq_l2(q, &rec);
+                let adc = lut.score(code);
+                if (exact - adc).abs() <= 1e-2 * exact.max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("{exact} vs {adc}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,108 @@
+//! UNQ as a [`Quantizer`]: the paper's method, served from AOT artifacts.
+//!
+//! * `encode_batch` → the AOT `encode` graph (encoder MLP + fused
+//!   assignment Pallas kernel) through PJRT,
+//! * `lut` → the AOT `lut` graph; the raw dot products ⟨net(q)_m, c_mk⟩
+//!   are negated so the uniform scan convention (lower = closer) realizes
+//!   the paper's `d2` (eq. 8),
+//! * `reconstruct_batch` → the AOT `decode` graph, giving `d1` (eq. 7)
+//!   for the two-stage rerank.
+//!
+//! The struct holds only a [`RuntimeHandle`], so it is `Send + Sync` and
+//! plugs into the same index/search machinery as the shallow baselines.
+
+use crate::runtime::RuntimeHandle;
+
+use super::{Lut, Quantizer};
+
+pub struct UnqQuantizer {
+    pub rt: RuntimeHandle,
+}
+
+impl UnqQuantizer {
+    pub fn new(rt: RuntimeHandle) -> UnqQuantizer {
+        UnqQuantizer { rt }
+    }
+
+    pub fn m(&self) -> usize {
+        self.rt.manifest.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.rt.manifest.k
+    }
+}
+
+impl Quantizer for UnqQuantizer {
+    fn name(&self) -> String {
+        match self.rt.manifest.variant.as_str() {
+            "unq" => "UNQ".to_string(),
+            v => format!("UNQ[{v}]"),
+        }
+    }
+
+    fn code_bytes(&self) -> usize {
+        self.rt.manifest.m
+    }
+
+    fn dim(&self) -> usize {
+        self.rt.manifest.dim
+    }
+
+    fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        let codes = self.rt.encode(x, 1).expect("runtime encode");
+        out.copy_from_slice(&codes);
+    }
+
+    fn encode_batch(&self, data: &[f32]) -> Vec<u8> {
+        let rows = data.len() / self.dim();
+        self.rt.encode(data, rows).expect("runtime encode")
+    }
+
+    fn lut(&self, q: &[f32]) -> Lut {
+        let dots = self.rt.lut(q, 1).expect("runtime lut");
+        let (m, k) = (self.m(), self.k());
+        // d2(q, i) = −Σ_m ⟨net(q)_m, c_m i_m⟩ (+ rank-invariant const)
+        let tables: Vec<f32> = dots.iter().map(|&v| -v).collect();
+        Lut::Tables { m, k, tables, bias: 0.0 }
+    }
+
+    fn lut_batch(&self, queries: &[&[f32]]) -> Vec<Lut> {
+        let dim = self.dim();
+        let (m, k) = (self.m(), self.k());
+        let mut flat = Vec::with_capacity(queries.len() * dim);
+        for q in queries {
+            flat.extend_from_slice(q);
+        }
+        let dots = self.rt.lut(&flat, queries.len()).expect("runtime lut");
+        dots.chunks_exact(m * k)
+            .map(|chunk| Lut::Tables {
+                m,
+                k,
+                tables: chunk.iter().map(|&v| -v).collect(),
+                bias: 0.0,
+            })
+            .collect()
+    }
+
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
+        match self.rt.decode(code, 1) {
+            Ok(rec) => {
+                out.copy_from_slice(&rec);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn reconstruct_batch(&self, codes: &[u8], out: &mut [f32]) -> bool {
+        let rows = codes.len() / self.code_bytes();
+        match self.rt.decode(codes, rows) {
+            Ok(rec) => {
+                out.copy_from_slice(&rec);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+}

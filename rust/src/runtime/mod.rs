@@ -1,0 +1,398 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot path.
+//!
+//! `python/compile/aot.py` leaves, per model configuration, a directory
+//! `artifacts/<name>/` containing `manifest.json` plus three HLO-text
+//! graphs with the trained weights baked in as dense literals:
+//!
+//! * `encode.hlo.txt` — `f32[E, D] → s32[E, M]` hard codes (eq. 4),
+//! * `lut.hlo.txt`    — `f32[Q, D] → f32[Q, M, K]` per-query dot tables,
+//! * `decode.hlo.txt` — `s32[B, M] → f32[B, D]` reconstructions.
+//!
+//! This module compiles them once on the PJRT CPU client
+//! (`HloModuleProto::from_text_file` → `XlaComputation` → `compile`) and
+//! serves execution requests.  The `xla` crate's handles wrap raw
+//! pointers and are `!Send`, so a dedicated **runtime thread** owns the
+//! client and executables; [`RuntimeHandle`] is the cheap, cloneable,
+//! `Send + Sync` front door the quantizer and the serving coordinator
+//! use.  Fixed AOT batch shapes are honored by padding inside the thread.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Parsed `manifest.json` of one artifact bundle.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub dataset: String,
+    pub variant: String,
+    pub dim: usize,
+    pub m: usize,
+    pub k: usize,
+    pub dc: usize,
+    pub hidden: usize,
+    pub encode_batch: usize,
+    pub lut_batch: usize,
+    pub decode_batch: usize,
+    pub param_count: usize,
+    pub param_bytes: usize,
+    pub files: ManifestFiles,
+    pub dir: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestFiles {
+    pub encode: String,
+    pub lut: String,
+    pub decode: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let files = j.get("files").ok_or_else(|| anyhow!("manifest missing files"))?;
+        Ok(Manifest {
+            name: j.req_str("name")?.to_string(),
+            dataset: j.req_str("dataset")?.to_string(),
+            variant: j.get("variant").and_then(Json::as_str)
+                .unwrap_or("unq").to_string(),
+            dim: j.req_usize("dim")?,
+            m: j.req_usize("m")?,
+            k: j.req_usize("k")?,
+            dc: j.get("dc").and_then(Json::as_usize).unwrap_or(0),
+            hidden: j.get("hidden").and_then(Json::as_usize).unwrap_or(0),
+            encode_batch: j.req_usize("encode_batch")?,
+            lut_batch: j.req_usize("lut_batch")?,
+            decode_batch: j.req_usize("decode_batch")?,
+            param_count: j.get("param_count").and_then(Json::as_usize).unwrap_or(0),
+            param_bytes: j.get("param_bytes").and_then(Json::as_usize).unwrap_or(0),
+            files: ManifestFiles {
+                encode: files.req_str("encode")?.to_string(),
+                lut: files.req_str("lut")?.to_string(),
+                decode: files.req_str("decode")?.to_string(),
+            },
+            dir: dir.to_path_buf(),
+        })
+    }
+}
+
+enum Job {
+    /// rows of f32[dim] → codes (i32 flattened, rows × m)
+    Encode { data: Vec<f32>, rows: usize, resp: mpsc::SyncSender<Result<Vec<i32>>> },
+    /// rows of f32[dim] → luts (f32, rows × m × k)
+    Lut { data: Vec<f32>, rows: usize, resp: mpsc::SyncSender<Result<Vec<f32>>> },
+    /// rows of i32[m] codes → reconstructions (f32, rows × dim)
+    Decode { codes: Vec<i32>, rows: usize, resp: mpsc::SyncSender<Result<Vec<f32>>> },
+    /// orderly shutdown (also triggered by channel disconnect)
+    Stop,
+}
+
+/// Cheap cloneable handle to the runtime thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Job>,
+    pub manifest: Arc<Manifest>,
+}
+
+/// The runtime thread plus its handle; dropping this joins the thread.
+pub struct UnqRuntime {
+    pub handle: RuntimeHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+    stop_tx: mpsc::Sender<Job>,
+}
+
+impl UnqRuntime {
+    /// Load an artifact bundle and spin up its runtime thread.
+    pub fn load(artifact_dir: &Path) -> Result<UnqRuntime> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let (tx, rx) = mpsc::channel::<Job>();
+        // compile errors must surface at load time: report over a channel
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let m2 = manifest.clone();
+        let thread = std::thread::Builder::new()
+            .name(format!("unq-runtime-{}", manifest.name))
+            .spawn(move || runtime_main(m2, rx, ready_tx))
+            .context("spawn runtime thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("runtime thread died during startup"))??;
+        Ok(UnqRuntime {
+            handle: RuntimeHandle { tx: tx.clone(), manifest },
+            thread: Some(thread),
+            stop_tx: tx,
+        })
+    }
+}
+
+impl Drop for UnqRuntime {
+    fn drop(&mut self) {
+        let _ = self.stop_tx.send(Job::Stop);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl RuntimeHandle {
+    fn roundtrip<T>(&self, mk: impl FnOnce(mpsc::SyncSender<Result<T>>) -> Job)
+                    -> Result<T> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(mk(resp_tx))
+            .map_err(|_| anyhow!("runtime thread is gone"))?;
+        resp_rx.recv().map_err(|_| anyhow!("runtime thread dropped reply"))?
+    }
+
+    /// Encode `rows` vectors (flat `rows × dim`) into `rows × m` byte codes.
+    pub fn encode(&self, data: &[f32], rows: usize) -> Result<Vec<u8>> {
+        assert_eq!(data.len(), rows * self.manifest.dim);
+        let codes = self.roundtrip(|resp| Job::Encode {
+            data: data.to_vec(), rows, resp,
+        })?;
+        Ok(codes.into_iter().map(|c| c as u8).collect())
+    }
+
+    /// LUT for `rows` queries: `rows × m × k` raw dot products
+    /// ⟨net(q)_m, c_mk⟩ (larger = closer; the quantizer negates).
+    pub fn lut(&self, queries: &[f32], rows: usize) -> Result<Vec<f32>> {
+        assert_eq!(queries.len(), rows * self.manifest.dim);
+        self.roundtrip(|resp| Job::Lut { data: queries.to_vec(), rows, resp })
+    }
+
+    /// Decode `rows` codes (flat `rows × m`, byte values) to `rows × dim`.
+    pub fn decode(&self, codes: &[u8], rows: usize) -> Result<Vec<f32>> {
+        assert_eq!(codes.len(), rows * self.manifest.m);
+        let icodes: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+        self.roundtrip(|resp| Job::Decode { codes: icodes, rows, resp })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime thread internals
+// ---------------------------------------------------------------------------
+
+struct Graphs {
+    encode: xla::PjRtLoadedExecutable,
+    lut: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+}
+
+fn compile_graph(client: &xla::PjRtClient, path: &Path)
+                 -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| anyhow!("parse HLO {path:?}: {e:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compile {path:?}: {e:?}"))
+}
+
+fn runtime_main(manifest: Arc<Manifest>, rx: mpsc::Receiver<Job>,
+                ready_tx: mpsc::SyncSender<Result<()>>) {
+    let setup = (|| -> Result<(xla::PjRtClient, Graphs)> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let graphs = Graphs {
+            encode: compile_graph(&client, &manifest.dir.join(&manifest.files.encode))?,
+            lut: compile_graph(&client, &manifest.dir.join(&manifest.files.lut))?,
+            decode: compile_graph(&client, &manifest.dir.join(&manifest.files.decode))?,
+        };
+        Ok((client, graphs))
+    })();
+    let graphs = match setup {
+        Ok((_client, graphs)) => {
+            let _ = ready_tx.send(Ok(()));
+            graphs
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Stop => break,
+            Job::Encode { data, rows, resp } => {
+                let r = run_f32_to_i32(&graphs.encode, &data, rows,
+                                       manifest.dim, manifest.encode_batch,
+                                       manifest.m);
+                let _ = resp.send(r);
+            }
+            Job::Lut { data, rows, resp } => {
+                let r = run_f32_to_f32(&graphs.lut, &data, rows, manifest.dim,
+                                       manifest.lut_batch,
+                                       manifest.m * manifest.k);
+                let _ = resp.send(r);
+            }
+            Job::Decode { codes, rows, resp } => {
+                let r = run_i32_to_f32(&graphs.decode, &codes, rows,
+                                       manifest.m, manifest.decode_batch,
+                                       manifest.dim);
+                let _ = resp.send(r);
+            }
+        }
+    }
+}
+
+/// Run a fixed-batch `f32[B, in] → s32[B, out]` graph over `rows` rows,
+/// padding the tail chunk.
+fn run_f32_to_i32(exe: &xla::PjRtLoadedExecutable, data: &[f32], rows: usize,
+                  d_in: usize, batch: usize, d_out: usize) -> Result<Vec<i32>> {
+    let mut out = Vec::with_capacity(rows * d_out);
+    let mut chunk = vec![0.0f32; batch * d_in];
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + batch).min(rows);
+        let nrows = hi - lo;
+        chunk[..nrows * d_in].copy_from_slice(&data[lo * d_in..hi * d_in]);
+        chunk[nrows * d_in..].iter_mut().for_each(|v| *v = 0.0);
+        let lit = xla::Literal::vec1(&chunk)
+            .reshape(&[batch as i64, d_in as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe.execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let vals = result.to_tuple1()
+            .map_err(|e| anyhow!("tuple: {e:?}"))?
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("to_vec<i32>: {e:?}"))?;
+        out.extend_from_slice(&vals[..nrows * d_out]);
+        lo = hi;
+    }
+    Ok(out)
+}
+
+fn run_f32_to_f32(exe: &xla::PjRtLoadedExecutable, data: &[f32], rows: usize,
+                  d_in: usize, batch: usize, d_out: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(rows * d_out);
+    let mut chunk = vec![0.0f32; batch * d_in];
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + batch).min(rows);
+        let nrows = hi - lo;
+        chunk[..nrows * d_in].copy_from_slice(&data[lo * d_in..hi * d_in]);
+        chunk[nrows * d_in..].iter_mut().for_each(|v| *v = 0.0);
+        let lit = xla::Literal::vec1(&chunk)
+            .reshape(&[batch as i64, d_in as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe.execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let vals = result.to_tuple1()
+            .map_err(|e| anyhow!("tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
+        out.extend_from_slice(&vals[..nrows * d_out]);
+        lo = hi;
+    }
+    Ok(out)
+}
+
+fn run_i32_to_f32(exe: &xla::PjRtLoadedExecutable, data: &[i32], rows: usize,
+                  d_in: usize, batch: usize, d_out: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(rows * d_out);
+    let mut chunk = vec![0i32; batch * d_in];
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + batch).min(rows);
+        let nrows = hi - lo;
+        chunk[..nrows * d_in].copy_from_slice(&data[lo * d_in..hi * d_in]);
+        chunk[nrows * d_in..].iter_mut().for_each(|v| *v = 0);
+        let lit = xla::Literal::vec1(&chunk)
+            .reshape(&[batch as i64, d_in as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe.execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let vals = result.to_tuple1()
+            .map_err(|e| anyhow!("tuple: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec<f32>: {e:?}"))?;
+        out.extend_from_slice(&vals[..nrows * d_out]);
+        lo = hi;
+    }
+    Ok(out)
+}
+
+/// List available artifact bundles under an artifacts root.
+pub fn list_artifacts(root: &Path) -> Vec<String> {
+    let mut names = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for e in entries.flatten() {
+            if e.path().join("manifest.json").exists() {
+                if let Some(n) = e.file_name().to_str() {
+                    names.push(n.to_string());
+                }
+            }
+        }
+    }
+    names.sort();
+    names
+}
+
+/// Helper for tests/benches: locate an artifact dir, returning `None`
+/// (instead of an error) when artifacts have not been built.
+pub fn find_artifact(root: &Path, name: &str) -> Option<PathBuf> {
+    let dir = root.join(name);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn manifest_parses_aot_format() {
+        let dir = TempDir::new("manifest").unwrap();
+        std::fs::write(dir.path().join("manifest.json"), r#"{
+            "name": "t", "dataset": "sift1m", "variant": "unq",
+            "dim": 128, "m": 8, "k": 256, "dc": 128, "hidden": 256,
+            "encode_batch": 512, "lut_batch": 16, "decode_batch": 512,
+            "param_count": 1000, "param_bytes": 4000,
+            "files": {"encode": "e.hlo.txt", "lut": "l.hlo.txt",
+                      "decode": "d.hlo.txt"}
+        }"#).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.dim, 128);
+        assert_eq!(m.m, 8);
+        assert_eq!(m.files.lut, "l.hlo.txt");
+        assert_eq!(m.encode_batch, 512);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let dir = TempDir::new("manifest").unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+
+    #[test]
+    fn list_artifacts_finds_bundles() {
+        let dir = TempDir::new("arts").unwrap();
+        std::fs::create_dir_all(dir.path().join("a")).unwrap();
+        std::fs::create_dir_all(dir.path().join("b")).unwrap();
+        std::fs::write(dir.path().join("a/manifest.json"), "{}").unwrap();
+        assert_eq!(list_artifacts(dir.path()), vec!["a".to_string()]);
+        assert!(find_artifact(dir.path(), "a").is_some());
+        assert!(find_artifact(dir.path(), "b").is_none());
+    }
+}

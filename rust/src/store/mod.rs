@@ -1,0 +1,269 @@
+//! Tiny binary tensor store for trained baseline models and code blobs.
+//!
+//! A minimal, dependency-free container: a JSON header (name → shape,
+//! dtype, byte offset, rendered by [`crate::util::json`]) followed by raw
+//! little-endian payloads.  Used to cache trained quantizer codebooks and
+//! encoded databases under `runs/` so benches re-run instantly.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"UNQSTOR1";
+
+#[derive(Clone, Debug)]
+struct Entry {
+    dtype: String,
+    shape: Vec<usize>,
+    offset: u64,
+    nbytes: u64,
+}
+
+impl Entry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dtype", Json::Str(self.dtype.clone())),
+            ("shape", Json::Arr(self.shape.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ("offset", Json::Num(self.offset as f64)),
+            ("nbytes", Json::Num(self.nbytes as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Entry> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .context("entry missing shape")?
+            .iter()
+            .map(|v| v.as_usize().context("bad shape element"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Entry {
+            dtype: j.req_str("dtype")?.to_string(),
+            shape,
+            offset: j.req_usize("offset")? as u64,
+            nbytes: j.req_usize("nbytes")? as u64,
+        })
+    }
+}
+
+/// In-memory builder/reader of a tensor archive.
+#[derive(Default)]
+pub struct Store {
+    f32s: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    u8s: BTreeMap<String, (Vec<usize>, Vec<u8>)>,
+    metas: BTreeMap<String, String>,
+}
+
+impl Store {
+    pub fn new() -> Self {
+        Store::default()
+    }
+
+    pub fn put_f32(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.f32s.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
+    pub fn put_u8(&mut self, name: &str, shape: &[usize], data: Vec<u8>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.u8s.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
+    /// Attach a small string metadata value (JSON-encode structured data).
+    pub fn put_meta(&mut self, name: &str, value: &str) {
+        self.metas.insert(name.to_string(), value.to_string());
+    }
+
+    pub fn get_f32(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.f32s.get(name).map(|(s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    pub fn get_u8(&self, name: &str) -> Option<(&[usize], &[u8])> {
+        self.u8s.get(name).map(|(s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    pub fn get_meta(&self, name: &str) -> Option<&str> {
+        self.metas.get(name).map(|s| s.as_str())
+    }
+
+    pub fn take_f32(&mut self, name: &str) -> Option<(Vec<usize>, Vec<f32>)> {
+        self.f32s.remove(name)
+    }
+
+    pub fn take_u8(&mut self, name: &str) -> Option<(Vec<usize>, Vec<u8>)> {
+        self.u8s.remove(name)
+    }
+
+    /// Serialize to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut header: Vec<(String, Json)> = Vec::new();
+        let mut offset = 0u64;
+        for (name, (shape, data)) in &self.f32s {
+            let nbytes = (data.len() * 4) as u64;
+            header.push((name.clone(), Entry {
+                dtype: "f32".into(), shape: shape.clone(), offset, nbytes,
+            }.to_json()));
+            offset += nbytes;
+        }
+        for (name, (shape, data)) in &self.u8s {
+            let nbytes = data.len() as u64;
+            header.push((name.clone(), Entry {
+                dtype: "u8".into(), shape: shape.clone(), offset, nbytes,
+            }.to_json()));
+            offset += nbytes;
+        }
+        let header_json = Json::Obj(header).render().into_bytes();
+        let meta_json = Json::Obj(
+            self.metas.iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        ).render().into_bytes();
+
+        let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(MAGIC)?;
+        w.write_all(&(header_json.len() as u64).to_le_bytes())?;
+        w.write_all(&(meta_json.len() as u64).to_le_bytes())?;
+        w.write_all(&header_json)?;
+        w.write_all(&meta_json)?;
+        for (_, (_, data)) in &self.f32s {
+            // bulk little-endian write
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
+        for (_, (_, data)) in &self.u8s {
+            w.write_all(data)?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Load an archive fully into memory.
+    pub fn load(path: &Path) -> Result<Store> {
+        let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(file);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "bad store magic in {path:?}");
+        let mut len8 = [0u8; 8];
+        r.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        r.read_exact(&mut len8)?;
+        let mlen = u64::from_le_bytes(len8) as usize;
+        let mut hjson = vec![0u8; hlen];
+        r.read_exact(&mut hjson)?;
+        let mut mjson = vec![0u8; mlen];
+        r.read_exact(&mut mjson)?;
+        let header = Json::parse(std::str::from_utf8(&hjson)?)?;
+        let metas_json = Json::parse(std::str::from_utf8(&mjson)?)?;
+
+        let mut metas = BTreeMap::new();
+        if let Json::Obj(pairs) = &metas_json {
+            for (k, v) in pairs {
+                if let Some(s) = v.as_str() {
+                    metas.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+
+        let payload_start = (8 + 16 + hlen + mlen) as u64;
+        let mut store = Store { metas, ..Default::default() };
+        let Json::Obj(entries) = &header else {
+            bail!("store header is not an object in {path:?}");
+        };
+        for (name, ej) in entries {
+            let e = Entry::from_json(ej)?;
+            r.seek(SeekFrom::Start(payload_start + e.offset))?;
+            let mut raw = vec![0u8; e.nbytes as usize];
+            r.read_exact(&mut raw)?;
+            match e.dtype.as_str() {
+                "f32" => {
+                    let data: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    store.f32s.insert(name.clone(), (e.shape, data));
+                }
+                "u8" => {
+                    store.u8s.insert(name.clone(), (e.shape, raw));
+                }
+                other => bail!("unknown dtype {other} in {path:?}"),
+            }
+        }
+        Ok(store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    #[test]
+    fn roundtrip() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("m.store");
+        let mut s = Store::new();
+        s.put_f32("codebooks", &[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        s.put_u8("codes", &[4], vec![9, 8, 7, 6]);
+        s.put_meta("cfg", "{\"m\":8}");
+        s.save(&p).unwrap();
+
+        let back = Store::load(&p).unwrap();
+        let (shape, data) = back.get_f32("codebooks").unwrap();
+        assert_eq!(shape, &[2, 3]);
+        assert_eq!(data, &[1., 2., 3., 4., 5., 6.]);
+        let (ushape, udata) = back.get_u8("codes").unwrap();
+        assert_eq!(ushape, &[4]);
+        assert_eq!(udata, &[9, 8, 7, 6]);
+        assert_eq!(back.get_meta("cfg"), Some("{\"m\":8}"));
+        assert!(back.get_f32("nope").is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("bad.store");
+        std::fs::write(&p, b"NOTASTORE_____").unwrap();
+        assert!(Store::load(&p).is_err());
+    }
+
+    #[test]
+    fn multiple_tensors_order_independent() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("m.store");
+        let mut s = Store::new();
+        s.put_f32("z", &[1], vec![3.0]);
+        s.put_f32("a", &[1], vec![1.0]);
+        s.put_u8("m", &[2], vec![1, 2]);
+        s.save(&p).unwrap();
+        let back = Store::load(&p).unwrap();
+        assert_eq!(back.get_f32("a").unwrap().1, &[1.0]);
+        assert_eq!(back.get_f32("z").unwrap().1, &[3.0]);
+        assert_eq!(back.get_u8("m").unwrap().1, &[1, 2]);
+    }
+
+    #[test]
+    fn large_tensor_roundtrip() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("big.store");
+        let data: Vec<f32> = (0..100_000).map(|i| i as f32 * 0.5).collect();
+        let mut s = Store::new();
+        s.put_f32("big", &[100, 1000], data.clone());
+        s.save(&p).unwrap();
+        let back = Store::load(&p).unwrap();
+        assert_eq!(back.get_f32("big").unwrap().1, &data[..]);
+    }
+}

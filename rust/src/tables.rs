@@ -1,0 +1,11 @@
+//! `unq tables` CLI wrapper around [`unq::eval::tables`].
+
+use unq::eval::tables::run_tables;
+use unq::Result;
+
+use super::{base_config, Flags};
+
+pub fn cmd_tables(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    run_tables(&cfg, f.get("table").unwrap_or("all"))
+}

@@ -1,0 +1,172 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! The `rust/benches/*` targets are `harness = false` binaries built on
+//! this module: warmup, fixed-duration sampling, and a report line with
+//! median / mean / p95 and derived throughput.  Deliberately simple —
+//! single-threaded timing on a quiet box — but honest about variance.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples (seconds per iteration).
+pub struct Samples {
+    pub name: String,
+    pub secs: Vec<f64>,
+    /// work items per iteration (for throughput reporting)
+    pub items_per_iter: u64,
+}
+
+impl Samples {
+    pub fn median(&self) -> f64 {
+        percentile(&self.secs, 50.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.secs.iter().sum::<f64>() / self.secs.len().max(1) as f64
+    }
+
+    pub fn p95(&self) -> f64 {
+        percentile(&self.secs, 95.0)
+    }
+
+    /// Render a criterion-style report line.
+    pub fn report(&self) -> String {
+        let med = self.median();
+        let mut line = format!(
+            "{:<44} {:>12}  mean {:>12}  p95 {:>12}  ({} samples)",
+            self.name,
+            fmt_time(med),
+            fmt_time(self.mean()),
+            fmt_time(self.p95()),
+            self.secs.len()
+        );
+        if self.items_per_iter > 1 && med > 0.0 {
+            line.push_str(&format!(
+                "  [{:.2} Melem/s, {} per elem]",
+                self.items_per_iter as f64 / med / 1e6,
+                fmt_time(med / self.items_per_iter as f64)
+            ));
+        }
+        line
+    }
+}
+
+fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Bench runner with a time budget per benchmark.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    results: Vec<Samples>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(Duration::from_millis(300), Duration::from_secs(2), 200)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: Duration, measure: Duration, max_samples: usize) -> Self {
+        Bench { warmup, measure, max_samples, results: Vec::new() }
+    }
+
+    /// Quick preset for long-running end-to-end benches.
+    pub fn e2e() -> Self {
+        Bench::new(Duration::ZERO, Duration::from_secs(1), 5)
+    }
+
+    /// Time `f`, which performs `items` units of work per call.
+    /// The closure's return value is black-boxed to keep the work alive.
+    pub fn run<T>(&mut self, name: &str, items: u64, mut f: impl FnMut() -> T) {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // measure
+        let mut secs = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && secs.len() < self.max_samples {
+            let t0 = Instant::now();
+            black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        if secs.is_empty() {
+            // always record at least one sample
+            let t0 = Instant::now();
+            black_box(f());
+            secs.push(t0.elapsed().as_secs_f64());
+        }
+        let s = Samples { name: name.to_string(), secs, items_per_iter: items };
+        println!("{}", s.report());
+        self.results.push(s);
+    }
+
+    pub fn results(&self) -> &[Samples] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_reports() {
+        let mut b = Bench::new(Duration::ZERO, Duration::from_millis(50), 20);
+        let mut acc = 0u64;
+        b.run("spin", 100, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        let s = &b.results()[0];
+        assert!(!s.secs.is_empty());
+        assert!(s.median() > 0.0);
+        assert!(s.report().contains("spin"));
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 100.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 95.0) >= 4.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+    }
+}

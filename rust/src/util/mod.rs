@@ -1,0 +1,69 @@
+//! In-crate substrates for facilities unavailable on this offline testbed
+//! (no serde / rand / tokio / criterion / proptest in the vendored set):
+//!
+//! * [`json`] — minimal JSON parser/renderer (manifests, configs, reports)
+//! * [`rng`] — SplitMix64 PRNG with normal/exponential variates
+//! * [`bench`] — micro-benchmark harness used by `rust/benches/*`
+//! * [`prop`] — tiny randomized property-testing loop
+//! * [`tempdir`] — scoped temp directories for tests
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A temp directory removed on drop (tests + benches only).
+pub struct TempDir {
+    path: PathBuf,
+}
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl TempDir {
+    pub fn new(tag: &str) -> std::io::Result<TempDir> {
+        let id = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "unq-{tag}-{}-{id}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let t = TempDir::new("t").unwrap();
+            p = t.path().to_path_buf();
+            std::fs::write(p.join("f"), b"x").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn tempdirs_are_distinct() {
+        let a = TempDir::new("t").unwrap();
+        let b = TempDir::new("t").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

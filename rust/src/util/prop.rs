@@ -1,0 +1,94 @@
+//! Tiny randomized property-testing loop (proptest is unavailable
+//! offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it panics with the case index
+//! and seed so the exact failing input can be replayed deterministically.
+//! No shrinking — inputs are kept small by construction instead.
+
+use super::rng::SplitMix64;
+
+/// Run a property over `cases` randomly generated inputs.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let mut rng = SplitMix64::from_key(&[seed, case as u64]);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed})\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` with a reason.
+pub fn forall_ok<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let mut rng = SplitMix64::from_key(&[seed, case as u64]);
+        let input = gen(&mut rng);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {reason}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Generate a random f32 vector with entries in [-scale, scale].
+pub fn vec_f32(rng: &mut SplitMix64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 50, |r| r.below(100), |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_input() {
+        forall(2, 50, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        forall(3, 10, |r| r.below(1000), |&x| {
+            a.push(x);
+            true
+        });
+        forall(3, 10, |r| r.below(1000), |&x| {
+            b.push(x);
+            true
+        });
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vec_f32_in_range() {
+        let mut r = SplitMix64::new(4);
+        let v = vec_f32(&mut r, 100, 2.5);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|x| x.abs() <= 2.5));
+    }
+}

@@ -1,0 +1,224 @@
+//! Deterministic PRNG substrate (no external `rand` available offline).
+//!
+//! * [`SplitMix64`] — the classic 64-bit mixer; tiny state, passes BigCrush
+//!   on its output function, and is *counter-friendly*: seeding a fresh
+//!   instance per (seed, stream, row) key gives independent streams, which
+//!   the dataset generators rely on for prefix-stable output.
+//! * Gaussian variates via Box–Muller, exponential via inverse CDF.
+
+/// SplitMix64 PRNG (Steele, Lea, Flood 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+    /// cached second Box–Muller variate
+    spare_normal: Option<f32>,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed, spare_normal: None }
+    }
+
+    /// Key several values into one independent stream
+    /// (seed/stream/row-keyed generators all funnel through this).
+    pub fn from_key(parts: &[u64]) -> Self {
+        let mut h = 0x9E3779B97F4A7C15u64;
+        for &p in parts {
+            h ^= p.wrapping_add(0x9E3779B97F4A7C15)
+                .wrapping_add(h << 6)
+                .wrapping_add(h >> 2);
+            // run one mix round so each part diffuses fully
+            h = mix(h);
+        }
+        SplitMix64::new(h)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        mix(self.state)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // top 24 bits → exactly representable in f32
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        // multiply-shift bounded sampling (Lemire); bias < 2^-32 for our sizes
+        ((self.next_u64() >> 32).wrapping_mul(bound as u64) >> 32) as usize
+    }
+
+    /// Standard normal (Box–Muller with caching).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Exponential with rate 1 (inverse CDF).
+    #[inline]
+    pub fn exponential(&mut self) -> f32 {
+        let u = 1.0 - self.next_f32(); // (0, 1]
+        -u.ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (floyd's algorithm for
+    /// k ≪ n, fallback to shuffle otherwise).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        if k * 4 > n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn keyed_streams_differ() {
+        let a = SplitMix64::from_key(&[1, 2, 3]).clone().next_u64();
+        let b = SplitMix64::from_key(&[1, 2, 4]).clone().next_u64();
+        let c = SplitMix64::from_key(&[1, 3, 3]).clone().next_u64();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = SplitMix64::new(7);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = SplitMix64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(11);
+        let n = 50_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = r.normal() as f64;
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = SplitMix64::new(13);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = r.exponential();
+            assert!(v >= 0.0);
+            sum += v as f64;
+        }
+        assert!((sum / n as f64 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = SplitMix64::new(17);
+        let s = r.sample_indices(1000, 50);
+        assert_eq!(s.len(), 50);
+        let mut t = s.clone();
+        t.sort();
+        t.dedup();
+        assert_eq!(t.len(), 50);
+        let s2 = r.sample_indices(10, 10);
+        assert_eq!(s2.len(), 10);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(19);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,184 @@
+//! Cross-module integration tests: data → quantizer → index → search →
+//! recall, plus the serving coordinator, on in-process synthetic corpora.
+//! Runtime-backed (UNQ) paths are exercised in `runtime_unq.rs`, which
+//! skips gracefully when artifacts are missing.
+
+use std::sync::Arc;
+
+use unq::config::{SearchConfig, ServeConfig};
+use unq::data::{synthetic::Generator, Family};
+use unq::eval::recall;
+use unq::gt;
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::quant::{additive::Additive, lattice::CatalystLattice, lsq, opq::Opq,
+                 pq::Pq, Quantizer};
+
+struct Corpus {
+    train: unq::data::Dataset,
+    base: unq::data::Dataset,
+    query: unq::data::Dataset,
+    truth: gt::GroundTruth,
+}
+
+fn corpus(family: Family, n_base: usize) -> Corpus {
+    let gen = Generator::new(family, 77);
+    let train = gen.generate(0, 4000);
+    let base = gen.generate(1, n_base);
+    let query = gen.generate(2, 100);
+    let truth = gt::brute_force(&base, &query, 100);
+    Corpus { train, base, query, truth }
+}
+
+fn recall_of(q: &dyn Quantizer, c: &Corpus, rerank: bool) -> unq::eval::Recall {
+    let index = CompressedIndex::build(q, &c.base);
+    let engine = SearchEngine::new(q, &index, SearchConfig {
+        rerank_l: 200,
+        k: 100,
+        no_rerank: !rerank || !q.supports_rerank(),
+        exhaustive_rerank: false,
+    });
+    let results: Vec<Vec<u32>> = (0..c.query.len())
+        .map(|qi| engine.search(c.query.row(qi)))
+        .collect();
+    recall(&results, &c.truth)
+}
+
+#[test]
+fn full_stack_every_quantizer_beats_chance() {
+    let c = corpus(Family::SiftLike, 10_000);
+    // chance R@100 on 10k base = 1%
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
+    let opq = Opq::train(&c.train.data, c.train.dim, 8, 64, 0, 2, 6);
+    let rvq = Additive::train_rvq(&c.train.data, c.train.dim, 7, 64, 0, 8, "RVQ");
+    let lsq = lsq::train_lsq(&c.train.data, c.train.dim, 7, 64,
+                             &lsq::LsqConfig { iters: 2, ..Default::default() });
+    let lat = CatalystLattice::train(&c.train.data, c.train.dim, 8);
+    for (name, r) in [
+        ("PQ", recall_of(&pq, &c, true)),
+        ("OPQ", recall_of(&opq, &c, true)),
+        ("RVQ", recall_of(&rvq, &c, true)),
+        ("LSQ", recall_of(&lsq, &c, true)),
+        ("Lattice", recall_of(&lat, &c, false)),
+    ] {
+        assert!(r.at100 > 20.0, "{name}: R@100 = {}", r.at100);
+        assert!(r.at1 <= r.at10 && r.at10 <= r.at100, "{name} monotone");
+    }
+}
+
+#[test]
+fn rerank_does_not_hurt_recall_at_1() {
+    let c = corpus(Family::SiftLike, 8000);
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
+    let with = recall_of(&pq, &c, true);
+    let without = recall_of(&pq, &c, false);
+    // PQ ADC is exact wrt its reconstruction, so rerank should match or
+    // improve at R@1 (small fluctuations allowed at the tie margin)
+    assert!(with.at1 + 2.0 >= without.at1,
+            "rerank hurt: {} vs {}", with.at1, without.at1);
+}
+
+#[test]
+fn sixteen_bytes_beat_eight() {
+    // sift-like: quantization budget dominates (deep-like at this toy
+    // scale saturates into cluster noise)
+    let c = corpus(Family::SiftLike, 8000);
+    let pq8 = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
+    let pq16 = Pq::train(&c.train.data, c.train.dim, 16, 64, 0, 8);
+    let r8 = recall_of(&pq8, &c, true);
+    let r16 = recall_of(&pq16, &c, true);
+    assert!(r16.at10 > r8.at10,
+            "16B {} should beat 8B {}", r16.at10, r8.at10);
+    assert!(r16.at100 >= r8.at100 - 1.0,
+            "16B {} should beat 8B {} at R@100", r16.at100, r8.at100);
+}
+
+#[test]
+fn additive_beats_pq_on_correlated_deep_data() {
+    // the paper's core motivation: orthogonal decompositions lose on
+    // strongly-coupled descriptors
+    let c = corpus(Family::DeepLike, 8000);
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 10);
+    let lsq = lsq::train_lsq(&c.train.data, c.train.dim, 7, 64,
+                             &lsq::LsqConfig { iters: 3, ..Default::default() });
+    let mse_pq = unq::quant::reconstruction_mse(&pq, &c.base);
+    let mse_lsq = unq::quant::reconstruction_mse(&lsq, &c.base);
+    assert!(mse_lsq < mse_pq,
+            "LSQ mse {mse_lsq} should beat PQ {mse_pq} on deep-like");
+}
+
+#[test]
+fn coordinator_serves_same_results_as_offline_engine() {
+    let c = corpus(Family::SiftLike, 6000);
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
+    let index = CompressedIndex::build(&pq, &c.base);
+    let search = SearchConfig { rerank_l: 100, k: 10, no_rerank: false,
+                                exhaustive_rerank: false };
+    let offline = SearchEngine::new(&pq, &index, search);
+    let want: Vec<Vec<u32>> = (0..10)
+        .map(|qi| offline.search(c.query.row(qi)))
+        .collect();
+
+    let server = unq::coordinator::pipeline::Server::start(
+        Arc::new(Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8)),
+        Arc::new(CompressedIndex::build(&pq, &c.base)),
+        search,
+        ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
+                      shards: 2 },
+    );
+    for qi in 0..10 {
+        let resp = server.search_blocking(c.query.row(qi), 10).unwrap();
+        assert_eq!(resp.neighbors, want[qi], "query {qi}");
+    }
+    assert!(server.metrics.search_latency.count() >= 10);
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_overloaded() {
+    let c = corpus(Family::SiftLike, 2000);
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 16, 0, 4);
+    let index = CompressedIndex::build(&pq, &c.base);
+    let server = unq::coordinator::pipeline::Server::start(
+        Arc::new(pq),
+        Arc::new(index),
+        SearchConfig::default(),
+        // tiny queue to force rejection
+        ServeConfig { max_batch: 64, max_delay_us: 50_000, queue_depth: 1,
+                      shards: 1 },
+    );
+    let mut rejected = 0;
+    let mut channels = Vec::new();
+    for _ in 0..50 {
+        let (tx, rx) = std::sync::mpsc::sync_channel(1);
+        let req = unq::coordinator::Request::Search(
+            unq::coordinator::SearchRequest {
+                id: server.next_id(),
+                query: c.query.row(0).to_vec(),
+                k: 5,
+                submitted: std::time::Instant::now(),
+                resp: tx,
+            });
+        match server.try_submit(req) {
+            Err(unq::coordinator::SubmitError::Overloaded) => rejected += 1,
+            Ok(()) => channels.push(rx),
+            Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+    assert!(rejected > 0, "tiny queue must shed load");
+    // accepted requests still complete
+    for rx in channels {
+        let _ = rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+    }
+    server.shutdown();
+}
+
+#[test]
+fn catalyst_opq_handles_both_families() {
+    for family in [Family::SiftLike, Family::DeepLike] {
+        let c = corpus(family, 5000);
+        let q = unq::quant::lattice::CatalystOpq::train(
+            &c.train.data, c.train.dim, 8, 64, 0);
+        let r = recall_of(&q, &c, false);
+        assert!(r.at100 > 10.0, "{family:?}: {}", r.at100);
+    }
+}

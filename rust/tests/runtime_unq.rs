@@ -1,0 +1,176 @@
+//! Runtime-backed integration tests: the AOT artifacts executed through
+//! PJRT from the full Rust stack.  These are the cross-language
+//! correctness gate (python-trained weights → HLO text → Rust results).
+//!
+//! Skips (with a loud message) when `make artifacts` has not been run —
+//! the pure-Rust suite in `integration.rs` still covers everything else.
+
+use std::path::PathBuf;
+
+use unq::config::{AppConfig, QuantizerKind, SearchConfig};
+use unq::data;
+use unq::eval::harness;
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::quant::{unq::UnqQuantizer, Quantizer};
+use unq::runtime::UnqRuntime;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let root = PathBuf::from("artifacts");
+    unq::runtime::find_artifact(&root, "sift1m_8b")
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("SKIP: artifacts/sift1m_8b missing — run `make artifacts`");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn runtime_loads_and_reports_manifest() {
+    let dir = require_artifacts!();
+    let rt = UnqRuntime::load(&dir).expect("load artifact");
+    let m = &rt.handle.manifest;
+    assert_eq!(m.dim, 128);
+    assert_eq!(m.m, 8);
+    assert_eq!(m.k, 256);
+    assert!(m.param_count > 0);
+}
+
+#[test]
+fn encode_lut_decode_are_consistent() {
+    let dir = require_artifacts!();
+    let rt = UnqRuntime::load(&dir).expect("load artifact");
+    let q = UnqQuantizer::new(rt.handle.clone());
+
+    let spec = data::spec_by_name("sift1m", 1.0).unwrap();
+    let splits = data::load_or_generate(&spec, &PathBuf::from("data")).unwrap();
+    let x = splits.base.rows(0, 64);
+
+    // encode: valid codes, deterministic
+    let codes1 = q.encode_batch(x);
+    let codes2 = q.encode_batch(x);
+    assert_eq!(codes1, codes2, "encoding must be deterministic");
+    assert_eq!(codes1.len(), 64 * 8);
+
+    // d2 self-consistency: own code should score better than most others
+    let lut = q.lut(splits.base.row(0));
+    let own = lut.score(&codes1[..8]);
+    let mut better = 0;
+    for i in 1..64 {
+        if lut.score(&codes1[i * 8..(i + 1) * 8]) < own {
+            better += 1;
+        }
+    }
+    assert!(better < 32, "own code should rank in the top half ({better})");
+
+    // decode: reconstruction should be closer to the original than to a
+    // random other row, on average
+    let mut rec = vec![0.0f32; 64 * 128];
+    assert!(q.reconstruct_batch(&codes1, &mut rec));
+    let mut closer = 0;
+    for i in 0..64 {
+        let r = &rec[i * 128..(i + 1) * 128];
+        let d_self = unq::linalg::sq_l2(r, splits.base.row(i));
+        let d_other = unq::linalg::sq_l2(r, splits.base.row((i + 13) % 64));
+        if d_self < d_other {
+            closer += 1;
+        }
+    }
+    assert!(closer > 48, "decoder must reconstruct its own input ({closer}/64)");
+}
+
+#[test]
+fn lut_batch_matches_single_query_luts() {
+    let dir = require_artifacts!();
+    let rt = UnqRuntime::load(&dir).expect("load artifact");
+    let q = UnqQuantizer::new(rt.handle.clone());
+    let spec = data::spec_by_name("sift1m", 1.0).unwrap();
+    let splits = data::load_or_generate(&spec, &PathBuf::from("data")).unwrap();
+
+    let queries: Vec<&[f32]> = (0..5).map(|i| splits.query.row(i)).collect();
+    let batched = q.lut_batch(&queries);
+    for (i, lutb) in batched.iter().enumerate() {
+        let single = q.lut(queries[i]);
+        let code = q.encode_batch(queries[i]);
+        let (a, b) = (lutb.score(&code), single.score(&code));
+        assert!((a - b).abs() < 1e-3 * a.abs().max(1.0),
+                "query {i}: batched {a} vs single {b}");
+    }
+}
+
+#[test]
+fn unq_end_to_end_recall_is_sound_vs_opq() {
+    let dir = require_artifacts!();
+    let _ = dir;
+    // small slice of the canonical corpus for test speed
+    let mut cfg = AppConfig::default();
+    cfg.dataset = "sift1m".into();
+    cfg.quantizer = QuantizerKind::Unq;
+    cfg.bytes_per_vector = 8;
+    cfg.scale = 0.2; // 20k base
+    let unq_exp = match harness::prepare(&cfg, "") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("SKIP: {e:#}");
+            return;
+        }
+    };
+    let unq_r = unq_exp.run_recall(SearchConfig {
+        rerank_l: 500, k: 100, no_rerank: false, exhaustive_rerank: false,
+    });
+
+    cfg.quantizer = QuantizerKind::Opq;
+    let opq_exp = harness::prepare(&cfg, "").unwrap();
+    let opq_r = opq_exp.run_recall(SearchConfig {
+        rerank_l: 500, k: 100, no_rerank: true, exhaustive_rerank: false,
+    });
+
+    eprintln!("UNQ R@10 {:.1} vs OPQ R@10 {:.1}", unq_r.at10, opq_r.at10);
+    // At the paper's training budget UNQ overtakes OPQ here (Table 2);
+    // at this testbed's budget (EXPERIMENTS.md D2) we gate on the
+    // pipeline being *sound*: far above chance and within a bounded
+    // factor of the fully-trained shallow baseline.
+    assert!(unq_r.at100 > 10.0 * 100.0 * 100.0 / 20_000.0, // 10× chance
+            "UNQ R@100 {} is at chance level", unq_r.at100);
+    assert!(unq_r.at10 * 5.0 >= opq_r.at10,
+            "UNQ ({}) collapsed relative to OPQ ({})",
+            unq_r.at10, opq_r.at10);
+}
+
+#[test]
+fn unq_serves_through_coordinator() {
+    let dir = require_artifacts!();
+    let rt = UnqRuntime::load(&dir).expect("load artifact");
+    let q = UnqQuantizer::new(rt.handle.clone());
+
+    let spec = data::spec_by_name("sift1m", 0.05).unwrap();
+    let splits = data::load_or_generate(&spec, &PathBuf::from("data")).unwrap();
+    let index = CompressedIndex::build(&q, &splits.base);
+    let search = SearchConfig { rerank_l: 100, k: 10, no_rerank: false,
+                                exhaustive_rerank: false };
+
+    // offline reference
+    let engine = SearchEngine::new(&q, &index, search);
+    let want: Vec<Vec<u32>> = (0..4)
+        .map(|qi| engine.search(splits.query.row(qi)))
+        .collect();
+
+    let server = unq::coordinator::pipeline::Server::start(
+        std::sync::Arc::new(UnqQuantizer::new(rt.handle.clone())),
+        std::sync::Arc::new(index),
+        search,
+        unq::config::ServeConfig { max_batch: 4, max_delay_us: 500,
+                                   queue_depth: 32, shards: 2 },
+    );
+    for qi in 0..4 {
+        let resp = server.search_blocking(splits.query.row(qi), 10).unwrap();
+        assert_eq!(resp.neighbors, want[qi], "query {qi}");
+    }
+    server.shutdown();
+}
