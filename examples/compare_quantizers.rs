@@ -18,15 +18,18 @@ use unq::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq, Quantizer};
 fn eval_one(q: &dyn Quantizer, base: &unq::data::Dataset,
             queries: &unq::data::Dataset, truth: &gt::GroundTruth) -> Recall {
     let index = CompressedIndex::build(q, base);
+    // batch-first: all queries through one executor plan (2 workers)
     let engine = SearchEngine::new(q, &index, SearchConfig {
         rerank_l: 200,
         k: 100,
         no_rerank: !q.supports_rerank(),
-        exhaustive_rerank: false,
+        num_threads: 2,
+        shard_rows: 8192,
+        ..Default::default()
     });
-    let results: Vec<Vec<u32>> = (0..queries.len())
-        .map(|qi| engine.search(queries.row(qi)))
-        .collect();
+    let qrefs: Vec<&[f32]> =
+        (0..queries.len()).map(|qi| queries.row(qi)).collect();
+    let results = engine.search_batch(&qrefs);
     recall(&results, truth)
 }
 

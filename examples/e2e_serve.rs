@@ -1,4 +1,4 @@
-//! End-to-end driver (the DESIGN.md validation run): boots the FULL
+//! End-to-end driver (the rust/DESIGN.md §4 validation run): boots the FULL
 //! three-layer stack and serves batched requests, proving the layers
 //! compose:
 //!
@@ -11,7 +11,7 @@
 //! Loads the `sift1m_8b` bundle (or the dataset named by UNQ_DATASET),
 //! encodes the base split through the AOT encoder, serves 2 000
 //! closed-loop queries from 4 clients, and reports throughput, latency
-//! and Recall@10 — the numbers recorded in EXPERIMENTS.md §E2E.
+//! and Recall@10 — the numbers recorded in rust/DESIGN.md §4.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_serve
@@ -27,7 +27,8 @@ fn main() -> unq::Result<()> {
     cfg.bytes_per_vector = 8;
     cfg.serve.max_batch = 16;
     cfg.serve.max_delay_us = 2000;
-    cfg.serve.shards = 2;
+    cfg.serve.num_threads = 2;
+    cfg.serve.shard_rows = 16_384;
 
     let queries: usize = std::env::var("UNQ_E2E_QUERIES")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(2000);

@@ -29,18 +29,22 @@ fn main() -> unq::Result<()> {
     println!("index: {} vectors, {} KB of codes",
              index.n, index.storage_bytes() / 1024);
 
-    // 4. Two-stage search (ADC scan → decoder rerank), paper §3.3.
+    // 4. Batched two-stage search (ADC scan → decoder rerank), paper
+    //    §3.3 — the whole query set goes through one QueryBatch ×
+    //    IndexShard plan on a 2-thread executor.
     let engine = SearchEngine::new(&pq, &index, SearchConfig {
-        rerank_l: 500, k: 10, no_rerank: false, exhaustive_rerank: false,
+        rerank_l: 500, k: 10, num_threads: 2, shard_rows: 16_384,
+        ..Default::default()
     });
     let truth = gt::brute_force(&base, &queries, 10);
-    let mut hits = 0;
-    for qi in 0..queries.len() {
-        let result = engine.search(queries.row(qi));
-        if result.contains(&(truth.nn(qi) as u32)) {
-            hits += 1;
-        }
-    }
+    let qrefs: Vec<&[f32]> =
+        (0..queries.len()).map(|qi| queries.row(qi)).collect();
+    let results = engine.search_batch(&qrefs);
+    let hits = results
+        .iter()
+        .enumerate()
+        .filter(|(qi, result)| result.contains(&(truth.nn(*qi) as u32)))
+        .count();
     println!("Recall@10 over {} queries: {:.1}%",
              queries.len(), 100.0 * hits as f32 / queries.len() as f32);
     Ok(())

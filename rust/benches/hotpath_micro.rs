@@ -1,11 +1,13 @@
-//! Hot-path micro-benchmarks (§Perf in EXPERIMENTS.md): the ADC scan,
-//! top-k selection, LUT construction and rerank — the components whose
-//! sum is the paper's §4.4 search cost.
+//! Hot-path micro-benchmarks (rust/DESIGN.md §2): the ADC scan, top-k
+//! selection, LUT construction, rerank, and the batch-first search
+//! engine — the components whose sum is the paper's §4.4 search cost.
 //!
 //! Run: `cargo bench --bench hotpath_micro`
 
+use unq::config::SearchConfig;
 use unq::data::{synthetic::Generator, Family};
-use unq::index::{scan_topk, CompressedIndex};
+use unq::exec::Executor;
+use unq::index::{scan_topk, CompressedIndex, SearchEngine};
 use unq::linalg::TopK;
 use unq::quant::{pq::Pq, Lut, Quantizer};
 use unq::util::bench::Bench;
@@ -62,6 +64,31 @@ fn main() {
         b.run("rerank 500 candidates (PQ decode)", 500, || {
             engine.rerank(q.row(0), &cands, 100)
         });
+    }
+
+    // --- batch-first engine: QueryBatch × IndexShard execution ---------
+    {
+        let gen = Generator::new(Family::SiftLike, 6);
+        let train = gen.generate(0, 4000);
+        let base = gen.generate(1, 100_000);
+        let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 8);
+        let index = CompressedIndex::build(&pq, &base);
+        let queries = gen.generate(2, 64);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        for threads in [1usize, 2, 4] {
+            let cfg = SearchConfig {
+                rerank_l: 100, k: 10, num_threads: threads,
+                shard_rows: 16_384, ..Default::default()
+            };
+            let engine = SearchEngine::new(&pq, &index, cfg);
+            let exec = Executor::new(threads);
+            b.run(
+                &format!("search_batch 64q n=100k threads={threads}"),
+                queries.len() as u64,
+                || engine.search_batch_on(&exec, &qrefs),
+            );
+        }
     }
 
     // --- lattice direct scan (the non-LUT path) ------------------------

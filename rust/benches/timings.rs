@@ -1,13 +1,60 @@
 //! Bench: the paper's §4.4 timing study (encode / LUT scan / rerank) plus
-//! Table 1's measured train/encode complexity, and the serving-loop
-//! throughput of the coordinator (§Perf e2e row).
+//! Table 1's measured train/encode complexity, the serving-loop
+//! throughput of the coordinator, and the batch executor's scan
+//! throughput at 1/2/4/8 threads (written to `BENCH_scan.json` so the
+//! perf trajectory accumulates across PRs — see rust/DESIGN.md §2).
 //!
 //! Run: `cargo bench --bench timings`
 
 use unq::config::{AppConfig, QuantizerKind};
 use unq::coordinator::demo::run_serve;
 use unq::eval::tables::{table1_timings, table_timings};
+use unq::exec::Executor;
+use unq::index::CompressedIndex;
+use unq::quant::Lut;
 use unq::util::bench::Bench;
+use unq::util::json::Json;
+use unq::util::rng::SplitMix64;
+
+/// Sharded batch-scan throughput sweep over worker counts; returns the
+/// per-thread-count results as JSON entries.
+fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
+    let (n, m, nq) = (200_000usize, 8usize, 8usize);
+    let mut rng = SplitMix64::new(71);
+    let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
+    let index = CompressedIndex::from_codes(n, m, codes);
+    let luts: Vec<Lut> = (0..nq)
+        .map(|_| {
+            let tables: Vec<f32> =
+                (0..m * 256).map(|_| rng.next_f32()).collect();
+            Lut::Tables { m, k: 256, tables, bias: 0.0 }
+        })
+        .collect();
+    let ks = vec![100usize; nq];
+    let vectors_per_iter = (n * nq) as u64;
+
+    let mut entries = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let exec = Executor::new(threads);
+        b.run(
+            &format!("scan_batch {nq}q n={n} m={m} threads={threads}"),
+            vectors_per_iter,
+            || exec.scan_batch(&luts, &index, &ks, 16_384),
+        );
+        let s = b.results().last().expect("bench just ran");
+        let med = s.median();
+        entries.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("queries", Json::Num(nq as f64)),
+            ("rows", Json::Num(n as f64)),
+            ("code_bytes", Json::Num(m as f64)),
+            ("shard_rows", Json::Num(16_384.0)),
+            ("secs_per_batch", Json::Num(med)),
+            ("vectors_per_sec", Json::Num(vectors_per_iter as f64 / med)),
+        ]));
+    }
+    entries
+}
 
 fn main() {
     let cfg = AppConfig::default().apply_env();
@@ -22,10 +69,28 @@ fn main() {
             eprintln!("timings skipped: {e:#}");
         }
     });
-    // Coordinator serving loop (UNQ if artifacts exist, else PQ fallback).
+
+    // Batch executor scan throughput at 1/2/4/8 threads.
+    let entries = scan_thread_sweep(&mut b);
+    let report = Json::obj(vec![
+        ("bench", Json::Str("scan_batch_thread_sweep".into())),
+        ("results", Json::Arr(entries)),
+    ]);
+    match std::fs::write("BENCH_scan.json", report.render_pretty()) {
+        Ok(()) => println!("[timings] wrote BENCH_scan.json"),
+        Err(e) => eprintln!("[timings] BENCH_scan.json not written: {e}"),
+    }
+
+    // Coordinator serving loop (UNQ if artifacts exist, else PQ fallback),
+    // driving the pooled batch executor end to end.
     let mut scfg = cfg.clone();
     scfg.dataset = "sift1m".into();
     scfg.quantizer = QuantizerKind::Unq;
+    // default to a pooled serving loop, but let an explicit UNQ_THREADS
+    // (already applied by apply_env) pick the inline path too
+    if std::env::var("UNQ_THREADS").is_err() && scfg.serve.num_threads <= 1 {
+        scfg.serve.num_threads = 2;
+    }
     b.run("serving loop 500 queries", 500, || {
         if let Err(e) = run_serve(&scfg, 500) {
             eprintln!("serve(UNQ) skipped: {e:#}");

@@ -74,12 +74,19 @@ pub struct SearchConfig {
     pub no_rerank: bool,
     /// Rerank *everything* with d1 (Table 5 "Exhaustive reranking").
     pub exhaustive_rerank: bool,
+    /// Scan worker threads for `SearchEngine::search_batch`; 1 runs the
+    /// plan inline on the calling thread (the classic path).
+    pub num_threads: usize,
+    /// Rows per index shard in the executor's scan plan; 0 = auto (whole
+    /// index inline, ~4 shards per worker on a pool).
+    pub shard_rows: usize,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig { rerank_l: 500, k: 100, no_rerank: false,
-                       exhaustive_rerank: false }
+                       exhaustive_rerank: false, num_threads: 1,
+                       shard_rows: 0 }
     }
 }
 
@@ -93,14 +100,16 @@ pub struct ServeConfig {
     pub max_delay_us: u64,
     /// Bounded request-queue depth (backpressure boundary).
     pub queue_depth: usize,
-    /// Number of scan workers (shards) the index is split across.
-    pub shards: usize,
+    /// Executor pool size for the coordinator's batch scan (1 = inline).
+    pub num_threads: usize,
+    /// Rows per scan shard handed to the executor (0 = auto).
+    pub shard_rows: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig { max_batch: 16, max_delay_us: 2000, queue_depth: 1024,
-                      shards: 1 }
+                      num_threads: 1, shard_rows: 0 }
     }
 }
 
@@ -154,12 +163,15 @@ impl AppConfig {
                 ("k", Json::Num(self.search.k as f64)),
                 ("no_rerank", Json::Bool(self.search.no_rerank)),
                 ("exhaustive_rerank", Json::Bool(self.search.exhaustive_rerank)),
+                ("num_threads", Json::Num(self.search.num_threads as f64)),
+                ("shard_rows", Json::Num(self.search.shard_rows as f64)),
             ])),
             ("serve", Json::obj(vec![
                 ("max_batch", Json::Num(self.serve.max_batch as f64)),
                 ("max_delay_us", Json::Num(self.serve.max_delay_us as f64)),
                 ("queue_depth", Json::Num(self.serve.queue_depth as f64)),
-                ("shards", Json::Num(self.serve.shards as f64)),
+                ("num_threads", Json::Num(self.serve.num_threads as f64)),
+                ("shard_rows", Json::Num(self.serve.shard_rows as f64)),
             ])),
             ("data_dir", Json::Str(self.data_dir.display().to_string())),
             ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
@@ -196,6 +208,12 @@ impl AppConfig {
             if let Some(v) = s.get("exhaustive_rerank").and_then(Json::as_bool) {
                 cfg.search.exhaustive_rerank = v;
             }
+            if let Some(v) = s.get("num_threads").and_then(Json::as_usize) {
+                cfg.search.num_threads = v;
+            }
+            if let Some(v) = s.get("shard_rows").and_then(Json::as_usize) {
+                cfg.search.shard_rows = v;
+            }
         }
         if let Some(s) = j.get("serve") {
             if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
@@ -207,8 +225,16 @@ impl AppConfig {
             if let Some(v) = s.get("queue_depth").and_then(Json::as_usize) {
                 cfg.serve.queue_depth = v;
             }
+            // legacy pre-executor key: `shards` named the scan parallelism,
+            // so map it onto the pool size (explicit num_threads wins)
             if let Some(v) = s.get("shards").and_then(Json::as_usize) {
-                cfg.serve.shards = v;
+                cfg.serve.num_threads = v;
+            }
+            if let Some(v) = s.get("num_threads").and_then(Json::as_usize) {
+                cfg.serve.num_threads = v;
+            }
+            if let Some(v) = s.get("shard_rows").and_then(Json::as_usize) {
+                cfg.serve.shard_rows = v;
             }
         }
         if let Some(v) = j.get("data_dir").and_then(Json::as_str) {
@@ -237,11 +263,23 @@ impl AppConfig {
         Self::from_json(&j)
     }
 
-    /// Apply environment overrides (`UNQ_SCALE`, `UNQ_DATA_DIR`, ...).
+    /// Apply environment overrides (`UNQ_SCALE`, `UNQ_THREADS`, ...).
     pub fn apply_env(mut self) -> Self {
         if let Ok(s) = std::env::var("UNQ_SCALE") {
             if let Ok(v) = s.parse::<f64>() {
                 self.scale = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_THREADS") {
+            if let Ok(v) = s.parse::<usize>() {
+                self.search.num_threads = v;
+                self.serve.num_threads = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_SHARD_ROWS") {
+            if let Ok(v) = s.parse::<usize>() {
+                self.search.shard_rows = v;
+                self.serve.shard_rows = v;
             }
         }
         if let Ok(s) = std::env::var("UNQ_DATA_DIR") {
@@ -283,13 +321,17 @@ mod tests {
         c.dataset = "deep1m".into();
         c.quantizer = QuantizerKind::Lsq;
         c.search.rerank_l = 123;
+        c.search.num_threads = 4;
         c.serve.max_batch = 99;
+        c.serve.shard_rows = 4096;
         c.save(&p).unwrap();
         let back = AppConfig::from_file(&p).unwrap();
         assert_eq!(back.dataset, "deep1m");
         assert_eq!(back.quantizer, QuantizerKind::Lsq);
         assert_eq!(back.search.rerank_l, 123);
+        assert_eq!(back.search.num_threads, 4);
         assert_eq!(back.serve.max_batch, 99);
+        assert_eq!(back.serve.shard_rows, 4096);
     }
 
     #[test]
@@ -298,6 +340,18 @@ mod tests {
         let c = AppConfig::from_json(&j).unwrap();
         assert_eq!(c.dataset, "sift10m");
         assert_eq!(c.k_codewords, 256);
+    }
+
+    #[test]
+    fn legacy_shards_key_maps_to_pool_size() {
+        let j = Json::parse(r#"{"serve": {"shards": 8}}"#).unwrap();
+        let c = AppConfig::from_json(&j).unwrap();
+        assert_eq!(c.serve.num_threads, 8);
+        // an explicit num_threads wins over the legacy alias
+        let j = Json::parse(r#"{"serve": {"shards": 8, "num_threads": 2}}"#)
+            .unwrap();
+        let c = AppConfig::from_json(&j).unwrap();
+        assert_eq!(c.serve.num_threads, 2);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!
 //! ```text
 //! clients → Router (bounded queue, backpressure)
-//!             ├─ search → QueryBatcher (size/deadline) → LUT build
-//!             │            → sharded ADC scan → rerank → respond
+//!             ├─ search → QueryBatcher (size/deadline) → batched LUT build
+//!             │            → exec pool: QueryBatch × IndexShard scan plan
+//!             │            → batched decode rerank → respond
 //!             └─ encode → EncodeBatcher → encoder → respond
 //! ```
 //!

@@ -5,10 +5,11 @@
 //! * **router** — drains the bounded ingress queue and fans requests out
 //!   to the per-type batcher queues (also bounded: backpressure
 //!   propagates to `try_submit`).
-//! * **search worker** — dynamic batcher ([`BatchPolicy`]) in front of the
-//!   LUT build; LUTs for a whole batch are built in one call (UNQ runs
-//!   them through one PJRT execution), then each query scans the sharded
-//!   index and reranks.
+//! * **search worker** — dynamic batcher ([`BatchPolicy`]) in front of
+//!   the batch engine: every flushed batch is handed *whole* to the
+//!   [`Executor`] — one `lut_batch` call (one PJRT execution for UNQ),
+//!   one `QueryBatch × IndexShard` scan plan on the persistent
+//!   `unq-exec-*` pool, one batched gather + decode rerank.
 //! * **encode worker** — batches encode requests into one
 //!   `encode_batch` call (one PJRT execution per AOT batch).
 
@@ -18,7 +19,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::config::{SearchConfig, ServeConfig};
-use crate::index::{scan, CompressedIndex, SearchEngine};
+use crate::exec::Executor;
+use crate::index::{CompressedIndex, SearchEngine};
 use crate::quant::Quantizer;
 
 use super::batch::BatchPolicy;
@@ -181,6 +183,9 @@ fn router_main(rx: mpsc::Receiver<Request>,
 
 fn search_worker(state: Arc<ServerState>, rx: mpsc::Receiver<SearchRequest>) {
     let serve = state.serve_cfg;
+    // the persistent executor: spawned once, reused for every flushed
+    // batch, joined on shutdown when this worker returns
+    let exec = Executor::new(serve.num_threads);
     let mut batcher = BatchPolicy::<SearchRequest>::new(
         serve.max_batch, Duration::from_micros(serve.max_delay_us));
     loop {
@@ -190,18 +195,18 @@ fn search_worker(state: Arc<ServerState>, rx: mpsc::Receiver<SearchRequest>) {
         match rx.recv_timeout(wait) {
             Ok(req) => {
                 if let Some(batch) = batcher.push(req, Instant::now()) {
-                    process_search_batch(&state, batch);
+                    process_search_batch(&state, &exec, batch);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll(Instant::now()) {
-                    process_search_batch(&state, batch);
+                    process_search_batch(&state, &exec, batch);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 let rest = batcher.take();
                 if !rest.is_empty() {
-                    process_search_batch(&state, rest);
+                    process_search_batch(&state, &exec, rest);
                 }
                 break;
             }
@@ -209,47 +214,32 @@ fn search_worker(state: Arc<ServerState>, rx: mpsc::Receiver<SearchRequest>) {
     }
 }
 
-fn process_search_batch(state: &ServerState, batch: Vec<SearchRequest>) {
+fn process_search_batch(state: &ServerState, exec: &Executor,
+                        batch: Vec<SearchRequest>) {
     let m = &state.metrics;
     m.batches.fetch_add(1, Ordering::Relaxed);
     m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
     // Stage A: build all LUTs in one call (UNQ: one PJRT batch per AOT
     // lut_batch of queries; shallow methods: tight loop).
-    let queries: Vec<&[f32]> = batch.iter().map(|r| r.query.as_slice()).collect();
+    let queries: Vec<&[f32]> =
+        batch.iter().map(|r| r.query.as_slice()).collect();
     let luts = state.quant.lut_batch(&queries);
 
-    // Stage B+C: sharded scan + rerank per query.
-    let engine = SearchEngine::new(state.quant.as_ref(), &state.index,
-                                   state.search_cfg);
-    let shards = state.serve_cfg.shards.max(1);
-    let shard_len = state.index.n.div_ceil(shards);
-    for (req, lut) in batch.into_iter().zip(luts) {
-        let mut cfg = state.search_cfg;
-        cfg.k = req.k;
-        let neighbors = if cfg.no_rerank || !state.quant.supports_rerank() {
-            let parts: Vec<_> = (0..shards)
-                .map(|s| {
-                    let lo = s * shard_len;
-                    scan::scan_range_topk(&lut, &state.index, lo,
-                                          lo + shard_len, req.k)
-                })
-                .collect();
-            scan::merge_topk(parts, req.k)
-                .into_iter().map(|(_, id)| id).collect()
-        } else {
-            let l = cfg.rerank_l.max(req.k);
-            let parts: Vec<_> = (0..shards)
-                .map(|s| {
-                    let lo = s * shard_len;
-                    scan::scan_range_topk(&lut, &state.index, lo,
-                                          lo + shard_len, l)
-                })
-                .collect();
-            let cands: Vec<u32> = scan::merge_topk(parts, l)
-                .into_iter().map(|(_, id)| id).collect();
-            engine.rerank(&req.query, &cands, req.k)
-        };
+    // Stage B+C: the whole flushed batch goes to the executor as one
+    // QueryBatch × IndexShard plan — per-(query, shard) scan tasks on the
+    // pool, shard-ordered merge, one batched gather + decode rerank.
+    // (Pool size is fixed by the Executor built at worker startup; only
+    // the serve-level shard knob flows through the engine config.)
+    let mut cfg = state.search_cfg;
+    cfg.shard_rows = state.serve_cfg.shard_rows;
+    let engine =
+        SearchEngine::new(state.quant.as_ref(), &state.index, cfg);
+    let ks: Vec<usize> = batch.iter().map(|r| r.k).collect();
+    let results = engine.search_batch_with_luts_on(exec, &queries, &luts, &ks);
+    drop(queries);
+
+    for (req, neighbors) in batch.into_iter().zip(results) {
         let latency_us = req.submitted.elapsed().as_micros() as u64;
         m.search_latency.record(latency_us);
         m.completed.fetch_add(1, Ordering::Relaxed);
@@ -332,10 +322,9 @@ mod tests {
         let server = Server::start(
             Arc::new(pq),
             Arc::new(index),
-            SearchConfig { rerank_l: 64, k: 10, no_rerank: false,
-                           exhaustive_rerank: false },
+            SearchConfig { rerank_l: 64, k: 10, ..Default::default() },
             ServeConfig { max_batch, max_delay_us: 500, queue_depth,
-                          shards: 3 },
+                          num_threads: 2, shard_rows: 512 },
         );
         (server, base)
     }
@@ -349,7 +338,7 @@ mod tests {
         let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
         let index = CompressedIndex::build(&pq, &base);
         let engine = SearchEngine::new(&pq, &index, SearchConfig {
-            rerank_l: 64, k: 10, no_rerank: false, exhaustive_rerank: false,
+            rerank_l: 64, k: 10, ..Default::default()
         });
         for qi in 0..queries.len() {
             let resp = server.search_blocking(queries.row(qi), 10).unwrap();
@@ -420,26 +409,61 @@ mod tests {
     }
 
     #[test]
-    fn sharded_scan_equals_unsharded() {
-        // start two servers differing only in shard count
-        let (s1, base) = start_pq_server(1, 64);
+    fn pooled_scan_equals_inline() {
+        // two servers differing only in executor configuration must agree
+        let (s_pool, base) = start_pq_server(1, 64);
         let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
         let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
         let index = CompressedIndex::build(&pq, &base);
-        let s8 = Server::start(
+        let s_inline = Server::start(
             Arc::new(pq), Arc::new(index),
-            SearchConfig { rerank_l: 64, k: 10, no_rerank: false,
-                           exhaustive_rerank: false },
+            SearchConfig { rerank_l: 64, k: 10, ..Default::default() },
             ServeConfig { max_batch: 1, max_delay_us: 100, queue_depth: 64,
-                          shards: 8 },
+                          num_threads: 1, shard_rows: 0 },
         );
         let queries = Generator::new(Family::SiftLike, 31).generate(2, 5);
         for qi in 0..queries.len() {
-            let a = s1.search_blocking(queries.row(qi), 10).unwrap();
-            let b = s8.search_blocking(queries.row(qi), 10).unwrap();
+            let a = s_pool.search_blocking(queries.row(qi), 10).unwrap();
+            let b = s_inline.search_blocking(queries.row(qi), 10).unwrap();
             assert_eq!(a.neighbors, b.neighbors);
         }
-        s1.shutdown();
-        s8.shutdown();
+        s_pool.shutdown();
+        s_inline.shutdown();
+    }
+
+    #[test]
+    fn flushed_batches_under_load_match_direct_engine() {
+        // many concurrent clients force multi-query flushes through the
+        // executor; every response must equal the classic offline engine
+        let (server, base) = start_pq_server(8, 256);
+        let server = Arc::new(server);
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 32);
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let index = CompressedIndex::build(&pq, &base);
+        let engine = SearchEngine::new(&pq, &index, SearchConfig {
+            rerank_l: 64, k: 10, ..Default::default()
+        });
+        let want: Vec<Vec<u32>> = (0..queries.len())
+            .map(|qi| engine.search(queries.row(qi)))
+            .collect();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let s = server.clone();
+            let q = queries.clone();
+            let want = want.clone();
+            handles.push(std::thread::spawn(move || {
+                for qi in (t * 8)..(t * 8 + 8) {
+                    let r = s.search_blocking(q.row(qi), 10).unwrap();
+                    assert_eq!(r.neighbors, want[qi], "query {qi}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = &server.metrics;
+        assert_eq!(m.completed.load(Ordering::Relaxed), 32);
+        Arc::try_unwrap(server).ok().map(|s| s.shutdown());
     }
 }

@@ -14,6 +14,7 @@ use anyhow::{bail, Context};
 
 use crate::config::{AppConfig, QuantizerKind, SearchConfig};
 use crate::data::{self, Dataset};
+use crate::exec::Executor;
 use crate::gt::GroundTruth;
 use crate::index::{CompressedIndex, SearchEngine};
 use crate::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq,
@@ -39,23 +40,38 @@ pub struct Experiment {
     pub encode_secs: f64,
 }
 
+/// Queries per `search_batch` call in the harness: large enough to
+/// amortize batched LUT build and decode, small enough to bound the
+/// rerank working set (~batch × rerank_l × dim floats).
+const EVAL_BATCH: usize = 128;
+
 impl Experiment {
-    /// Run the full query set and compute Recall@{1,10,100}.
+    /// Run the full query set through the batch engine (the same
+    /// `search_batch` plan the serving path executes, in bounded
+    /// batches) and compute Recall@{1,10,100}.
     pub fn run_recall(&self, search: SearchConfig) -> Recall {
         let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
-        let results: Vec<Vec<u32>> = (0..self.splits.query.len())
-            .map(|qi| engine.search(self.splits.query.row(qi)))
+        let exec = Executor::new(search.num_threads);
+        let queries: Vec<&[f32]> = (0..self.splits.query.len())
+            .map(|qi| self.splits.query.row(qi))
             .collect();
+        let mut results = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(EVAL_BATCH) {
+            results.extend(engine.search_batch_on(&exec, chunk));
+        }
         recall(&results, &self.gt)
     }
 
-    /// Per-query mean latency of the two-stage search, in seconds.
+    /// Per-query mean latency of the two-stage batch search, in seconds.
     pub fn measure_latency(&self, search: SearchConfig, queries: usize) -> f64 {
         let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
+        let exec = Executor::new(search.num_threads);
         let nq = queries.min(self.splits.query.len());
+        let queries: Vec<&[f32]> =
+            (0..nq).map(|qi| self.splits.query.row(qi)).collect();
         let t0 = Instant::now();
-        for qi in 0..nq {
-            std::hint::black_box(engine.search(self.splits.query.row(qi)));
+        for chunk in queries.chunks(EVAL_BATCH) {
+            std::hint::black_box(engine.search_batch_on(&exec, chunk));
         }
         t0.elapsed().as_secs_f64() / nq.max(1) as f64
     }
@@ -243,7 +259,7 @@ pub fn paper_search_config(kind: QuantizerKind, dataset: &str, k: usize)
             | QuantizerKind::Lsq | QuantizerKind::CatalystLattice
             | QuantizerKind::CatalystOpq
     );
-    SearchConfig { rerank_l, k, no_rerank, exhaustive_rerank: false }
+    SearchConfig { rerank_l, k, no_rerank, ..SearchConfig::default() }
 }
 
 #[cfg(test)]
@@ -270,7 +286,7 @@ mod tests {
         let cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
         let exp = prepare(&cfg, "").unwrap();
         let r = exp.run_recall(SearchConfig {
-            rerank_l: 100, k: 100, no_rerank: false, exhaustive_rerank: false,
+            rerank_l: 100, k: 100, ..Default::default()
         });
         // random top-100 of 2000 would give R@100 ≈ 5%
         assert!(r.at100 > 30.0, "R@100 = {}", r.at100);

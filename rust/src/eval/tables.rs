@@ -1,7 +1,7 @@
 //! Regenerate every table of the paper's evaluation (§4.1–§4.4) on the
 //! simulated corpora.  Shared by the CLI (`unq tables`) and the bench
 //! targets; rendered tables are persisted under `runs/tables/` so the
-//! EXPERIMENTS.md entries are reproducible.
+//! rust/DESIGN.md §4 entries are reproducible.
 
 use anyhow::Context;
 

@@ -1,0 +1,24 @@
+//! The batch-first query execution engine.
+//!
+//! Everything between "a batch of LUTs" and "per-query neighbor lists"
+//! lives here, shared by the offline [`crate::index::SearchEngine`] and
+//! the serving [`crate::coordinator`]:
+//!
+//! * [`pool`] — persistent named worker threads over a bounded job queue,
+//!   with scoped (borrowing) batch submission and graceful shutdown;
+//! * [`plan`] — the `QueryBatch × IndexShard` scan plan (one task per
+//!   (query, shard) pair, [`plan::shard_ranges`] partitioning,
+//!   shard-ordered `merge_topk` reduction) and the batched
+//!   gather → `reconstruct_batch` rerank.
+//!
+//! The execution contract is strict determinism: for any
+//! `(num_threads, shard_rows)` the results are bit-identical to the
+//! single-threaded, single-shard scan — parallelism changes wall-clock,
+//! never answers.  `rust/DESIGN.md` §2 records the scan-path performance
+//! notes behind the sharding defaults.
+
+pub mod plan;
+pub mod pool;
+
+pub use plan::{rerank_batch, shard_ranges, Executor};
+pub use pool::WorkerPool;

@@ -1,0 +1,270 @@
+//! Batch execution plans: `QueryBatch × IndexShard` scan fan-out and the
+//! batched gather → decode rerank reduction.
+//!
+//! The planner turns a batch of per-query LUTs into one task per
+//! `(query, shard)` pair, runs them on an [`Executor`], and reduces each
+//! query's per-shard top-k lists with [`merge_topk`] **in shard order**,
+//! which makes the result bit-identical to a sequential full-index scan
+//! regardless of thread count or shard size (ties are broken by the
+//! strict-less heap test plus ascending-id push order — see
+//! `index::scan`).  The rerank stage gathers the candidate codes of the
+//! *whole* query batch into one contiguous buffer and decodes them with a
+//! single `reconstruct_batch` call, so UNQ's AOT decoder runs once per
+//! batch instead of once per query.
+
+use std::sync::mpsc;
+
+use crate::index::scan::{merge_topk, scan_range_topk};
+use crate::index::CompressedIndex;
+use crate::linalg::{sq_l2, TopK};
+use crate::quant::{Lut, Quantizer};
+
+use super::pool::WorkerPool;
+
+/// Where a plan's tasks run.
+pub enum Executor {
+    /// On the calling thread (`num_threads <= 1`): no pool, no overhead —
+    /// the single-query `SearchEngine::search` path.
+    Inline,
+    /// On a persistent [`WorkerPool`].
+    Pool(WorkerPool),
+}
+
+impl Executor {
+    /// Inline for `num_threads <= 1`, a pool of that many workers above.
+    pub fn new(num_threads: usize) -> Executor {
+        if num_threads <= 1 {
+            Executor::Inline
+        } else {
+            Executor::Pool(WorkerPool::new(num_threads))
+        }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        match self {
+            Executor::Inline => 1,
+            Executor::Pool(p) => p.num_threads(),
+        }
+    }
+
+    /// Resolve the `shard_rows` knob: 0 means "auto" — the whole index as
+    /// one shard inline, ~4 shards per worker on a pool (enough slack for
+    /// load balance without drowning in merge work).
+    fn effective_shard_rows(&self, n: usize, shard_rows: usize) -> usize {
+        if shard_rows != 0 {
+            return shard_rows;
+        }
+        match self {
+            Executor::Inline => 0,
+            Executor::Pool(p) => n.div_ceil(p.num_threads() * 4).max(1024),
+        }
+    }
+
+    /// Execute a `QueryBatch × IndexShard` scan plan: for every query `i`
+    /// the global top-`ks[i]` `(score, id)` pairs sorted ascending,
+    /// bit-identical to `scan_topk` over the full index.
+    pub fn scan_batch(&self, luts: &[Lut], index: &CompressedIndex,
+                      ks: &[usize], shard_rows: usize)
+                      -> Vec<Vec<(f32, u32)>> {
+        assert_eq!(luts.len(), ks.len(), "one k per query LUT");
+        if luts.is_empty() {
+            return Vec::new();
+        }
+        let shards =
+            shard_ranges(index.n, self.effective_shard_rows(index.n, shard_rows));
+        match self {
+            Executor::Inline => luts
+                .iter()
+                .zip(ks)
+                .map(|(lut, &k)| {
+                    let parts: Vec<_> = shards
+                        .iter()
+                        .map(|&(lo, hi)| scan_range_topk(lut, index, lo, hi, k))
+                        .collect();
+                    merge_topk(parts, k)
+                })
+                .collect(),
+            Executor::Pool(pool) => {
+                let (nq, ns) = (luts.len(), shards.len());
+                // full-capacity result channel: task sends never block
+                let (tx, rx) = mpsc::sync_channel(nq * ns);
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(nq * ns);
+                for (qi, lut) in luts.iter().enumerate() {
+                    let k = ks[qi];
+                    for (si, &(lo, hi)) in shards.iter().enumerate() {
+                        let tx = tx.clone();
+                        tasks.push(Box::new(move || {
+                            let part = scan_range_topk(lut, index, lo, hi, k);
+                            let _ = tx.send((qi, si, part));
+                        }));
+                    }
+                }
+                drop(tx);
+                pool.run_scoped(tasks);
+                // reassemble the grid so each query merges its shards in
+                // ascending-row order — the determinism requirement
+                let mut grid: Vec<Vec<Option<Vec<(f32, u32)>>>> =
+                    (0..nq).map(|_| (0..ns).map(|_| None).collect()).collect();
+                while let Ok((qi, si, part)) = rx.try_recv() {
+                    grid[qi][si] = Some(part);
+                }
+                grid.into_iter()
+                    .zip(ks)
+                    .map(|(parts, &k)| {
+                        let parts: Vec<_> = parts
+                            .into_iter()
+                            .map(|p| p.expect("every shard task reported"))
+                            .collect();
+                        merge_topk(parts, k)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Partition `[0, n)` into contiguous shards of at most `shard_rows` rows
+/// (`shard_rows == 0`: one shard spanning the whole index).
+pub fn shard_ranges(n: usize, shard_rows: usize) -> Vec<(usize, usize)> {
+    if n == 0 || shard_rows == 0 || shard_rows >= n {
+        return vec![(0, n)];
+    }
+    let mut out = Vec::with_capacity(n.div_ceil(shard_rows));
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + shard_rows).min(n);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Batched second stage: gather every query's candidate codes into one
+/// contiguous buffer, decode them with a **single** `reconstruct_batch`
+/// call (one AOT execution for UNQ), then rank each query's candidates by
+/// exact `d1(q, i) = ‖q − reconstruct(i)‖²`.  Per query the result is
+/// identical to the classic one-query rerank; quantizers without a
+/// decoder keep scan order.
+pub fn rerank_batch(quant: &dyn Quantizer, index: &CompressedIndex,
+                    queries: &[&[f32]], candidates: &[Vec<u32>],
+                    ks: &[usize]) -> Vec<Vec<u32>> {
+    assert_eq!(queries.len(), candidates.len());
+    assert_eq!(queries.len(), ks.len());
+    let dim = quant.dim();
+    let cb = index.stride;
+    let total: usize = candidates.iter().map(|c| c.len()).sum();
+    let mut codes = Vec::with_capacity(total * cb);
+    for cands in candidates {
+        for &id in cands {
+            codes.extend_from_slice(index.code(id as usize));
+        }
+    }
+    let mut recons = vec![0.0f32; total * dim];
+    if !quant.reconstruct_batch(&codes, &mut recons) {
+        // no decoder: keep scan order
+        return candidates
+            .iter()
+            .zip(ks)
+            .map(|(cands, &k)| cands.iter().take(k).copied().collect())
+            .collect();
+    }
+    let mut out = Vec::with_capacity(queries.len());
+    let mut off = 0usize;
+    for ((&q, cands), &k) in queries.iter().zip(candidates).zip(ks) {
+        let mut top = TopK::new(k.min(cands.len()));
+        for (ci, &id) in cands.iter().enumerate() {
+            let row = off + ci;
+            let d = sq_l2(q, &recons[row * dim..(row + 1) * dim]);
+            top.push(d, id);
+        }
+        off += cands.len();
+        out.push(top.into_sorted().into_iter().map(|(_, id)| id).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::scan_topk;
+    use crate::util::{prop, rng::SplitMix64};
+
+    fn mk_index(n: usize, stride: usize, seed: u64) -> CompressedIndex {
+        let mut rng = SplitMix64::new(seed);
+        let codes: Vec<u8> =
+            (0..n * stride).map(|_| rng.below(256) as u8).collect();
+        CompressedIndex::from_codes(n, stride, codes)
+    }
+
+    fn mk_lut(stride: usize, seed: u64) -> Lut {
+        let mut rng = SplitMix64::new(seed);
+        let tables: Vec<f32> =
+            (0..stride * 256).map(|_| rng.next_f32() * 10.0).collect();
+        Lut::Tables { m: stride, k: 256, tables, bias: 0.5 }
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_once() {
+        assert_eq!(shard_ranges(10, 0), vec![(0, 10)]);
+        assert_eq!(shard_ranges(10, 100), vec![(0, 10)]);
+        assert_eq!(shard_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(shard_ranges(0, 4), vec![(0, 0)]);
+        let r = shard_ranges(1000, 1);
+        assert_eq!(r.len(), 1000);
+        assert_eq!(r[999], (999, 1000));
+    }
+
+    #[test]
+    fn inline_scan_batch_matches_full_scan() {
+        let idx = mk_index(777, 8, 1);
+        let luts: Vec<Lut> = (0..3).map(|i| mk_lut(8, 10 + i)).collect();
+        let ks = [7usize, 20, 100];
+        let exec = Executor::new(1);
+        let got = exec.scan_batch(&luts, &idx, &ks, 50);
+        for (qi, lut) in luts.iter().enumerate() {
+            assert_eq!(got[qi], scan_topk(lut, &idx, ks[qi]), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn prop_pool_scan_equals_inline_over_thread_and_shard_grid() {
+        // the acceptance property: any (num_threads, shard_rows) returns
+        // bit-identical ids AND scores to the sequential full scan
+        prop::forall_ok(
+            1234,
+            12,
+            |r: &mut SplitMix64| {
+                let n = 50 + r.below(900);
+                let stride = 1 + r.below(10);
+                let threads = 2 + r.below(3);
+                let shard_rows = [0usize, 1, 13, 64, 300][r.below(5)];
+                let k = 1 + r.below(40);
+                (n, stride, threads, shard_rows, k, r.next_u64())
+            },
+            |&(n, stride, threads, shard_rows, k, seed)| {
+                let idx = mk_index(n, stride, seed);
+                let luts: Vec<Lut> =
+                    (0..4).map(|i| mk_lut(stride, seed ^ (i + 1))).collect();
+                let ks = vec![k; luts.len()];
+                let pool = Executor::new(threads);
+                let got = pool.scan_batch(&luts, &idx, &ks, shard_rows);
+                let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 0);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "threads={threads} shard_rows={shard_rows} diverged"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let idx = mk_index(10, 4, 3);
+        let exec = Executor::new(2);
+        assert!(exec.scan_batch(&[], &idx, &[], 0).is_empty());
+    }
+}

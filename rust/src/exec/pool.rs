@@ -1,0 +1,226 @@
+//! Persistent worker pool: the thread substrate of the batch executor.
+//!
+//! A fixed set of named threads (`unq-exec-0..`) pulls jobs from one
+//! bounded queue (crossbeam is unavailable offline, so the queue is a
+//! `std::sync::mpsc::sync_channel` behind a mutex-shared receiver — on the
+//! coarse-grained tasks the planner emits, queue contention is
+//! unmeasurable).  Two submission modes:
+//!
+//! * [`WorkerPool::spawn`] — fire-and-forget `'static` jobs;
+//! * [`WorkerPool::run_scoped`] — a batch of *borrowing* tasks run to
+//!   completion before the call returns, which is what lets scan tasks
+//!   borrow the index and LUTs directly instead of cloning them behind
+//!   `Arc`s.
+//!
+//! Shutdown is graceful: dropping the pool closes the queue, every worker
+//! drains its backlog and exits, and `Drop` joins them all.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// A unit of work executed on a pool thread.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Jobs of queue slack per worker: enough to keep every thread busy while
+/// the submitter is still enqueueing, small enough to bound memory when a
+/// producer runs far ahead (backpressure via the bounded channel).
+const QUEUE_SLACK_PER_WORKER: usize = 4;
+
+/// Fixed-size pool of persistent, named worker threads.
+pub struct WorkerPool {
+    /// `None` only during `Drop`, which closes the queue before joining.
+    tx: Option<mpsc::SyncSender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `num_threads` workers (clamped to at least 1).
+    pub fn new(num_threads: usize) -> WorkerPool {
+        let n = num_threads.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Job>(n * QUEUE_SLACK_PER_WORKER);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("unq-exec-{i}"))
+                    .spawn(move || worker_main(rx))
+                    .expect("spawn exec worker"),
+            );
+        }
+        WorkerPool { tx: Some(tx), workers }
+    }
+
+    pub fn num_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit one `'static` job; blocks when the bounded queue is full.
+    pub fn spawn(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool is shut down")
+            .send(job)
+            .expect("exec workers exited");
+    }
+
+    /// Run a batch of tasks that may borrow from the caller's stack, and
+    /// block until every one of them has finished executing.
+    ///
+    /// Panics if any task panicked on a worker (the worker itself
+    /// survives; see [`worker_main`]).
+    pub fn run_scoped<'env>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        let n = tasks.len();
+        let (done_tx, done_rx) = mpsc::sync_channel::<()>(n.max(1));
+        for task in tasks {
+            let done = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                task();
+                let _ = done.send(());
+            });
+            // SAFETY: the job runs strictly before this function returns —
+            // the receive loop below blocks until every job either sent a
+            // completion token or was dropped by its worker (each job owns
+            // a `done_tx` clone, so the channel only disconnects once all
+            // jobs are consumed) — so the 'env borrows outlive every use.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            self.spawn(job);
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            if done_rx.recv().is_err() {
+                // disconnection before n tokens: some task was dropped
+                // without completing, i.e. it panicked on its worker
+                panic!("scoped task panicked on an exec worker");
+            }
+        }
+    }
+
+    /// Explicit graceful shutdown (identical to dropping the pool): close
+    /// the queue, let workers drain, join them.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue: workers finish the backlog and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+    loop {
+        let job = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                // a peer panicked while holding the lock; the receiver
+                // itself is still sound
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.recv()
+        };
+        match job {
+            // A panicking task must not take the worker down with it: the
+            // submitting scope observes the failure through its completion
+            // channel; the pool thread lives on to serve later batches.
+            Ok(job) => {
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+            Err(_) => break, // queue closed: graceful shutdown
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn spawn_runs_static_jobs_on_named_threads() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.num_threads(), 3);
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..10 {
+            let tx = tx.clone();
+            pool.spawn(Box::new(move || {
+                let name = std::thread::current()
+                    .name()
+                    .unwrap_or("")
+                    .to_string();
+                tx.send(name).unwrap();
+            }));
+        }
+        drop(tx);
+        let names: Vec<String> = rx.iter().collect();
+        assert_eq!(names.len(), 10);
+        assert!(names.iter().all(|n| n.starts_with("unq-exec-")));
+    }
+
+    #[test]
+    fn run_scoped_borrows_caller_data_and_blocks_for_completion() {
+        let pool = WorkerPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let partials: Vec<AtomicUsize> =
+            (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|t| {
+                let data = &data;
+                let partials = &partials;
+                Box::new(move || {
+                    let sum: u64 =
+                        data.iter().skip(t).step_by(8).copied().sum();
+                    partials[t].store(sum as usize, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        // the call returned, so every partial must already be in place
+        let total: usize =
+            partials.iter().map(|p| p.load(Ordering::Relaxed)).sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_scoped_task() {
+        let pool = WorkerPool::new(2);
+        let boom: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("task boom"))];
+        let r = catch_unwind(AssertUnwindSafe(|| pool.run_scoped(boom)));
+        assert!(r.is_err(), "scoped panic must propagate to the submitter");
+        // the workers are still alive and serve the next batch
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let counter = &counter;
+                Box::new(move || {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn shutdown_drains_backlog() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(1);
+        for _ in 0..16 {
+            let counter = counter.clone();
+            pool.spawn(Box::new(move || {
+                counter.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.shutdown(); // joins: every queued job must have run
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+}

@@ -7,12 +7,18 @@
 //! fixed-stride row iteration and a branch-light bounded heap, processing
 //! ~1 code byte per table lookup per vector — the same lookup structure
 //! whose cost the paper reports as 3 s per 10⁹ × 8-byte scan.
+//!
+//! Search is **batch-first**: [`SearchEngine::search_batch`] plans one
+//! `QueryBatch × IndexShard` execution through [`crate::exec`] (sharded
+//! scan on a worker pool, one batched decode for the rerank stage), and
+//! the single-query [`SearchEngine::search`] is literally a batch of one.
+//! Results are bit-identical for every `(num_threads, shard_rows)`.
 
 pub mod scan;
 
 use crate::config::SearchConfig;
 use crate::data::Dataset;
-use crate::linalg::{sq_l2, TopK};
+use crate::exec::{plan, Executor};
 use crate::quant::{Lut, Quantizer};
 
 pub use scan::{scan_lut_topk, scan_topk};
@@ -81,49 +87,101 @@ impl<'a> SearchEngine<'a> {
         scan_topk(lut, self.index, l)
     }
 
-    /// Full two-stage search: returns the final top-k ids, best first.
+    /// Full two-stage search: a batch of one, always on the inline
+    /// executor — a single query gains nothing from a pool, and spawning
+    /// threads per call would dominate the microsecond-scale scan.
+    /// (`cfg.num_threads` applies to [`Self::search_batch`].)
     pub fn search(&self, q: &[f32]) -> Vec<u32> {
-        let lut = self.quant.lut(q);
-        self.search_with_lut(q, &lut)
+        self.search_batch_on(&Executor::Inline, &[q])
+            .pop()
+            .expect("one query in, one result out")
     }
 
-    /// Search with a precomputed LUT (the serving path computes LUTs in
-    /// batches through PJRT and hands them over individually).
+    /// Search with a precomputed LUT (callers that build LUTs themselves,
+    /// e.g. across repeated sweeps over the same query); inline for the
+    /// same reason as [`Self::search`].
     pub fn search_with_lut(&self, q: &[f32], lut: &Lut) -> Vec<u32> {
-        let k = self.cfg.k;
+        self.search_batch_with_luts_on(&Executor::Inline, &[q],
+                                       std::slice::from_ref(lut),
+                                       &[self.cfg.k])
+            .pop()
+            .expect("one query in, one result out")
+    }
+
+    /// Batch-first two-stage search on a transient executor sized by
+    /// `cfg.num_threads`.  Serving paths that amortize thread spawn
+    /// should hold an [`Executor`] and call [`Self::search_batch_on`].
+    pub fn search_batch(&self, queries: &[&[f32]]) -> Vec<Vec<u32>> {
+        let exec = Executor::new(self.cfg.num_threads);
+        self.search_batch_on(&exec, queries)
+    }
+
+    /// Batch search on a caller-owned executor: builds all LUTs in one
+    /// `lut_batch` call (one PJRT execution for UNQ), then runs the
+    /// `QueryBatch × IndexShard` plan.
+    pub fn search_batch_on(&self, exec: &Executor, queries: &[&[f32]])
+                           -> Vec<Vec<u32>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let luts = self.quant.lut_batch(queries);
+        let ks = vec![self.cfg.k; queries.len()];
+        self.search_batch_with_luts_on(exec, queries, &luts, &ks)
+    }
+
+    /// The full plan with precomputed LUTs and a per-query `k` (the
+    /// coordinator's entry point: its clients ask for different `k`s
+    /// within one flushed batch).
+    pub fn search_batch_with_luts_on(&self, exec: &Executor,
+                                     queries: &[&[f32]], luts: &[Lut],
+                                     ks: &[usize]) -> Vec<Vec<u32>> {
+        assert_eq!(queries.len(), luts.len(), "one LUT per query");
+        assert_eq!(queries.len(), ks.len(), "one k per query");
+        let ids = |pairs: Vec<(f32, u32)>| -> Vec<u32> {
+            pairs.into_iter().map(|(_, id)| id).collect()
+        };
         let do_rerank = !self.cfg.no_rerank && self.quant.supports_rerank();
         if !do_rerank {
-            return self.scan(lut, k).into_iter().map(|(_, id)| id).collect();
+            return exec
+                .scan_batch(luts, self.index, ks, self.cfg.shard_rows)
+                .into_iter()
+                .map(ids)
+                .collect();
         }
-        let candidates: Vec<u32> = if self.cfg.exhaustive_rerank {
-            (0..self.index.n as u32).collect()
-        } else {
-            let l = self.cfg.rerank_l.max(k);
-            self.scan(lut, l).into_iter().map(|(_, id)| id).collect()
-        };
-        self.rerank(q, &candidates, k)
+        if self.cfg.exhaustive_rerank {
+            // exhaustive d1 decodes the WHOLE index per query (~n×dim
+            // floats each) — batching those reconstructions across
+            // queries would multiply that working set by the batch size,
+            // so this path stays one query at a time
+            let all = vec![(0..self.index.n as u32).collect::<Vec<u32>>()];
+            return queries
+                .iter()
+                .zip(ks)
+                .map(|(&q, &k)| {
+                    plan::rerank_batch(self.quant, self.index, &[q], &all,
+                                       &[k])
+                        .pop()
+                        .expect("one query in, one result out")
+                })
+                .collect();
+        }
+        let ls: Vec<usize> =
+            ks.iter().map(|&k| self.cfg.rerank_l.max(k)).collect();
+        let candidates: Vec<Vec<u32>> =
+            exec.scan_batch(luts, self.index, &ls, self.cfg.shard_rows)
+                .into_iter()
+                .map(ids)
+                .collect();
+        plan::rerank_batch(self.quant, self.index, queries, &candidates, ks)
     }
 
-    /// Stage 2: decode candidates and rank by exact `d1` (eq. 7).
+    /// Stage 2: decode candidates and rank by exact `d1` (eq. 7) — a
+    /// batch of one through the shared batched-rerank reduction.
     pub fn rerank(&self, q: &[f32], candidates: &[u32], k: usize) -> Vec<u32> {
-        let dim = self.quant.dim();
-        let cb = self.index.stride;
-        // gather candidate codes into one contiguous batch
-        let mut codes = Vec::with_capacity(candidates.len() * cb);
-        for &id in candidates {
-            codes.extend_from_slice(self.index.code(id as usize));
-        }
-        let mut recons = vec![0.0f32; candidates.len() * dim];
-        if !self.quant.reconstruct_batch(&codes, &mut recons) {
-            // no decoder: keep scan order
-            return candidates.iter().take(k).copied().collect();
-        }
-        let mut top = TopK::new(k.min(candidates.len()));
-        for (ci, &id) in candidates.iter().enumerate() {
-            let d = sq_l2(q, &recons[ci * dim..(ci + 1) * dim]);
-            top.push(d, id);
-        }
-        top.into_sorted().into_iter().map(|(_, id)| id).collect()
+        let cands = vec![candidates.to_vec()];
+        plan::rerank_batch(self.quant, self.index, &[q], &cands, &[k])
+            .pop()
+            .expect("one query in, one result out")
     }
 }
 
@@ -131,6 +189,7 @@ impl<'a> SearchEngine<'a> {
 mod tests {
     use super::*;
     use crate::data::{synthetic::Generator, Family};
+    use crate::linalg::sq_l2;
     use crate::quant::pq::Pq;
 
     fn setup() -> (crate::data::Dataset, Pq) {
@@ -156,10 +215,10 @@ mod tests {
         let idx = CompressedIndex::build(&pq, &d);
         let q = Generator::new(Family::SiftLike, 21).generate(2, 1);
         let full = SearchEngine::new(&pq, &idx, SearchConfig {
-            rerank_l: idx.n, k: 10, no_rerank: false, exhaustive_rerank: false,
+            rerank_l: idx.n, k: 10, ..Default::default()
         });
         let exh = SearchEngine::new(&pq, &idx, SearchConfig {
-            rerank_l: 10, k: 10, no_rerank: false, exhaustive_rerank: true,
+            rerank_l: 10, k: 10, exhaustive_rerank: true, ..Default::default()
         });
         assert_eq!(full.search(q.row(0)), exh.search(q.row(0)));
     }
@@ -173,10 +232,10 @@ mod tests {
         for qi in 0..queries.len() {
             let q = queries.row(qi);
             let scan_only = SearchEngine::new(&pq, &idx, SearchConfig {
-                rerank_l: 100, k: 5, no_rerank: true, exhaustive_rerank: false,
+                rerank_l: 100, k: 5, no_rerank: true, ..Default::default()
             }).search(q);
             let two_stage = SearchEngine::new(&pq, &idx, SearchConfig {
-                rerank_l: 100, k: 5, no_rerank: false, exhaustive_rerank: false,
+                rerank_l: 100, k: 5, ..Default::default()
             }).search(q);
             let d1 = |id: u32| {
                 let mut rec = vec![0.0; d.dim];
@@ -193,7 +252,7 @@ mod tests {
         let idx = CompressedIndex::build(&pq, &d);
         let q = Generator::new(Family::SiftLike, 21).generate(2, 1);
         let eng = SearchEngine::new(&pq, &idx, SearchConfig {
-            rerank_l: 50, k: 7, no_rerank: true, exhaustive_rerank: false,
+            rerank_l: 50, k: 7, no_rerank: true, ..Default::default()
         });
         let lut = pq.lut(q.row(0));
         let scan: Vec<u32> = eng.scan(&lut, 7).into_iter().map(|p| p.1).collect();
@@ -207,5 +266,68 @@ mod tests {
         let s = idx.shard(1500, 99999);
         assert_eq!(s.hi, 2000);
         assert_eq!(s.lo, 1500);
+    }
+
+    #[test]
+    fn prop_search_batch_matches_sequential_over_thread_grid() {
+        // the acceptance property at engine level: for any
+        // (num_threads, shard_rows) the batch engine returns exactly the
+        // classic one-query-at-a-time results, rerank included
+        let (d, pq) = setup();
+        let idx = CompressedIndex::build(&pq, &d);
+        let queries = Generator::new(Family::SiftLike, 21).generate(3, 8);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let seq_cfg = SearchConfig {
+            rerank_l: 50, k: 10, ..Default::default()
+        };
+        let want: Vec<Vec<u32>> = qrefs
+            .iter()
+            .map(|q| SearchEngine::new(&pq, &idx, seq_cfg).search(q))
+            .collect();
+        crate::util::prop::forall_ok(
+            2024,
+            10,
+            |r: &mut crate::util::rng::SplitMix64| {
+                let threads = 1 + r.below(4);
+                let shard_rows = [0usize, 64, 300, 1024, 5000][r.below(5)];
+                (threads, shard_rows)
+            },
+            |&(threads, shard_rows)| {
+                let cfg = SearchConfig {
+                    num_threads: threads, shard_rows, ..seq_cfg
+                };
+                let got =
+                    SearchEngine::new(&pq, &idx, cfg).search_batch(&qrefs);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "threads={threads} shard_rows={shard_rows} diverged \
+                         from sequential search"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn search_batch_no_rerank_matches_scan_order_per_query() {
+        let (d, pq) = setup();
+        let idx = CompressedIndex::build(&pq, &d);
+        let queries = Generator::new(Family::SiftLike, 21).generate(2, 4);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let eng = SearchEngine::new(&pq, &idx, SearchConfig {
+            rerank_l: 50, k: 7, no_rerank: true, num_threads: 2,
+            shard_rows: 256, ..Default::default()
+        });
+        let got = eng.search_batch(&qrefs);
+        for (qi, q) in qrefs.iter().enumerate() {
+            let lut = pq.lut(q);
+            let want: Vec<u32> =
+                eng.scan(&lut, 7).into_iter().map(|p| p.1).collect();
+            assert_eq!(got[qi], want, "query {qi}");
+        }
     }
 }

@@ -5,10 +5,11 @@
 //! dispatches, falling back to the generic `Lut::score` for the lattice's
 //! direct dot scoring.
 //!
-//! Performance notes (see EXPERIMENTS.md §Perf for measurements):
+//! Performance notes (see `rust/DESIGN.md` §2 for measurements):
 //! * the per-row loop over `stride` table lookups is unrolled by the
-//!   compiler for the fixed strides we exercise; table rows are laid out
-//!   contiguously (`j·K + code[j]`) so all lookups hit one small table
+//!   compiler for the fixed strides we exercise; the LUT layout is
+//!   position-major (`tables[j·K + code[j]]`, the contract documented on
+//!   [`Lut::Tables`]) so all lookups hit one small table
 //!   (8–17 rows × 256 × 4 B ≤ 17 KB, L1-resident);
 //! * the bounded heap makes the common case (candidate worse than the
 //!   current k-th best) a single compare-and-skip;
@@ -30,8 +31,8 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
     let codes = &index.codes[lo * stride..hi * stride];
     // 4-row software pipeline: the per-row table gathers are independent,
     // so interleaving four rows gives the core 4× the memory-level
-    // parallelism on the (L2-missing) code stream — see EXPERIMENTS.md
-    // §Perf for the measured effect at n = 1M.
+    // parallelism on the (L2-missing) code stream — see rust/DESIGN.md §2
+    // for the measured effect at n = 1M.
     let n_rows = hi - lo;
     let quads = n_rows / 4;
     for qi in 0..quads {
@@ -101,7 +102,8 @@ pub fn scan_topk(lut: &Lut, index: &CompressedIndex, k: usize)
     scan_range_topk(lut, index, 0, index.n, k)
 }
 
-/// Dispatching scan over `[lo, hi)` (shard work unit for the coordinator).
+/// Dispatching scan over `[lo, hi)` — the shard work unit the batch
+/// executor (`exec::plan`) fans out as one task per `(query, shard)`.
 pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
                        hi: usize, k: usize) -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);

@@ -28,6 +28,7 @@
 //! | [`gt`] | exact brute-force ground truth (cached) |
 //! | [`quant`] | `Quantizer` trait + PQ/OPQ/RVQ/LSQ/lattice/UNQ |
 //! | [`index`] | compressed storage, ADC LUT scan, rerank, two-stage search |
+//! | [`exec`] | batch executor: worker pool + query×shard scan plans |
 //! | [`runtime`] | PJRT engine: load + execute the AOT HLO artifacts |
 //! | [`coordinator`] | async serving: router, batcher, pipeline, metrics |
 //! | [`eval`] | Recall@k harness + paper-table formatting |
@@ -38,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod exec;
 pub mod gt;
 pub mod index;
 pub mod kmeans;

@@ -89,6 +89,16 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
     if let Some(l) = f.get("rerank-l") {
         cfg.search.rerank_l = l.parse().context("--rerank-l")?;
     }
+    if let Some(t) = f.get("threads") {
+        let t: usize = t.parse().context("--threads")?;
+        cfg.search.num_threads = t;
+        cfg.serve.num_threads = t;
+    }
+    if let Some(s) = f.get("shard-rows") {
+        let s: usize = s.parse().context("--shard-rows")?;
+        cfg.search.shard_rows = s;
+        cfg.serve.shard_rows = s;
+    }
     cfg.search.no_rerank = f.has("no-rerank");
     cfg.search.exhaustive_rerank = f.has("exhaustive");
     Ok(cfg)
@@ -124,8 +134,11 @@ USAGE:
   unq serve     --dataset D [--quantizer Q] [--queries N]
   unq artifacts
 
+Execution:  [--threads N] [--shard-rows R] size the batch scan executor
+            (also via UNQ_THREADS / UNQ_SHARD_ROWS; defaults: inline)
 Quantizers: pq opq rvq lsq lsq+rerank catalyst-lattice catalyst-opq unq
-Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see DESIGN.md)
+Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see
+            rust/DESIGN.md)
 ";
 
 fn datasets_arg(f: &Flags, scale: f64) -> Vec<data::DatasetSpec> {
@@ -189,6 +202,8 @@ fn cmd_eval(f: &Flags) -> Result<()> {
                                                   cfg.search.k);
     search.no_rerank |= cfg.search.no_rerank;
     search.exhaustive_rerank = cfg.search.exhaustive_rerank;
+    search.num_threads = cfg.search.num_threads;
+    search.shard_rows = cfg.search.shard_rows;
     let t0 = std::time::Instant::now();
     let rec = exp.run_recall(search);
     let secs = t0.elapsed().as_secs_f64();

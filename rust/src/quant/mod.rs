@@ -30,9 +30,13 @@ use crate::data::Dataset;
 
 /// Per-query scoring structure handed to the index scan.
 pub enum Lut {
-    /// `tables[m * k + j]`: distance contribution of byte value `j` at code
-    /// position `m`; `bias` is the rank-invariant query constant (kept so
-    /// scores are interpretable as approximate squared distances).
+    /// Position-major lookup tables, the one layout every scan path
+    /// relies on (`Lut::score` here and the `index::scan` hot loop):
+    /// `tables[j * k + c]` is the distance contribution of byte value `c`
+    /// at code position `j`, i.e. position `j`'s table row occupies
+    /// `tables[j*k .. (j+1)*k]` contiguously.  `bias` is the
+    /// rank-invariant query constant (kept so scores are interpretable as
+    /// approximate squared distances).
     Tables { m: usize, k: usize, tables: Vec<f32>, bias: f32 },
     /// Direct scoring against a transformed query (lattice path).
     Direct { q: Vec<f32>, bias: f32 },

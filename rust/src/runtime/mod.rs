@@ -25,6 +25,20 @@ use anyhow::{anyhow, Context};
 use crate::util::json::Json;
 use crate::Result;
 
+// All builds currently compile against the in-tree API stub (this image
+// ships no PJRT library); the `pjrt` feature marks the seam where the
+// real `xla` bindings plug in — see xla_stub.rs.
+mod xla_stub;
+use self::xla_stub as xla;
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "feature `pjrt` is a wiring placeholder: add the real `xla` crate to \
+     rust/Cargo.toml, replace the `use self::xla_stub as xla` alias above \
+     with the extern crate, and remove this guard (src/runtime/xla_stub.rs \
+     documents the API surface the bindings must provide)"
+);
+
 /// Parsed `manifest.json` of one artifact bundle.
 #[derive(Clone, Debug)]
 pub struct Manifest {

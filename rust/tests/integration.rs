@@ -35,11 +35,11 @@ fn recall_of(q: &dyn Quantizer, c: &Corpus, rerank: bool) -> unq::eval::Recall {
         rerank_l: 200,
         k: 100,
         no_rerank: !rerank || !q.supports_rerank(),
-        exhaustive_rerank: false,
+        ..Default::default()
     });
-    let results: Vec<Vec<u32>> = (0..c.query.len())
-        .map(|qi| engine.search(c.query.row(qi)))
-        .collect();
+    let qrefs: Vec<&[f32]> =
+        (0..c.query.len()).map(|qi| c.query.row(qi)).collect();
+    let results = engine.search_batch(&qrefs);
     recall(&results, &c.truth)
 }
 
@@ -111,8 +111,8 @@ fn coordinator_serves_same_results_as_offline_engine() {
     let c = corpus(Family::SiftLike, 6000);
     let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
     let index = CompressedIndex::build(&pq, &c.base);
-    let search = SearchConfig { rerank_l: 100, k: 10, no_rerank: false,
-                                exhaustive_rerank: false };
+    let search = SearchConfig { rerank_l: 100, k: 10,
+                                ..Default::default() };
     let offline = SearchEngine::new(&pq, &index, search);
     let want: Vec<Vec<u32>> = (0..10)
         .map(|qi| offline.search(c.query.row(qi)))
@@ -123,7 +123,7 @@ fn coordinator_serves_same_results_as_offline_engine() {
         Arc::new(CompressedIndex::build(&pq, &c.base)),
         search,
         ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
-                      shards: 2 },
+                      num_threads: 2, shard_rows: 1000 },
     );
     for qi in 0..10 {
         let resp = server.search_blocking(c.query.row(qi), 10).unwrap();
@@ -144,7 +144,7 @@ fn backpressure_rejects_when_overloaded() {
         SearchConfig::default(),
         // tiny queue to force rejection
         ServeConfig { max_batch: 64, max_delay_us: 50_000, queue_depth: 1,
-                      shards: 1 },
+                      num_threads: 1, shard_rows: 0 },
     );
     let mut rejected = 0;
     let mut channels = Vec::new();

@@ -122,18 +122,18 @@ fn unq_end_to_end_recall_is_sound_vs_opq() {
         }
     };
     let unq_r = unq_exp.run_recall(SearchConfig {
-        rerank_l: 500, k: 100, no_rerank: false, exhaustive_rerank: false,
+        rerank_l: 500, k: 100, ..Default::default()
     });
 
     cfg.quantizer = QuantizerKind::Opq;
     let opq_exp = harness::prepare(&cfg, "").unwrap();
     let opq_r = opq_exp.run_recall(SearchConfig {
-        rerank_l: 500, k: 100, no_rerank: true, exhaustive_rerank: false,
+        rerank_l: 500, k: 100, no_rerank: true, ..Default::default()
     });
 
     eprintln!("UNQ R@10 {:.1} vs OPQ R@10 {:.1}", unq_r.at10, opq_r.at10);
     // At the paper's training budget UNQ overtakes OPQ here (Table 2);
-    // at this testbed's budget (EXPERIMENTS.md D2) we gate on the
+    // at this testbed's budget (rust/DESIGN.md §4) we gate on the
     // pipeline being *sound*: far above chance and within a bounded
     // factor of the fully-trained shallow baseline.
     assert!(unq_r.at100 > 10.0 * 100.0 * 100.0 / 20_000.0, // 10× chance
@@ -152,8 +152,8 @@ fn unq_serves_through_coordinator() {
     let spec = data::spec_by_name("sift1m", 0.05).unwrap();
     let splits = data::load_or_generate(&spec, &PathBuf::from("data")).unwrap();
     let index = CompressedIndex::build(&q, &splits.base);
-    let search = SearchConfig { rerank_l: 100, k: 10, no_rerank: false,
-                                exhaustive_rerank: false };
+    let search = SearchConfig { rerank_l: 100, k: 10,
+                                ..Default::default() };
 
     // offline reference
     let engine = SearchEngine::new(&q, &index, search);
@@ -166,7 +166,8 @@ fn unq_serves_through_coordinator() {
         std::sync::Arc::new(index),
         search,
         unq::config::ServeConfig { max_batch: 4, max_delay_us: 500,
-                                   queue_depth: 32, shards: 2 },
+                                   queue_depth: 32, num_threads: 2,
+                                   shard_rows: 1024 },
     );
     for qi in 0..4 {
         let resp = server.search_blocking(splits.query.row(qi), 10).unwrap();
