@@ -1,20 +1,31 @@
 //! Bench: the paper's §4.4 timing study (encode / LUT scan / rerank) plus
 //! Table 1's measured train/encode complexity, the serving-loop
-//! throughput of the coordinator, and the batch executor's scan
-//! throughput at 1/2/4/8 threads (written to `BENCH_scan.json` so the
-//! perf trajectory accumulates across PRs — see rust/DESIGN.md §2).
+//! throughput of the coordinator, the batch executor's scan throughput
+//! at 1/2/4/8 threads (written to `BENCH_scan.json`), and the IVF
+//! nprobe throughput/recall sweep (written to `BENCH_ivf.json`).  Both
+//! trajectory files land at the *repository root* regardless of CWD so
+//! the numbers accumulate across PRs — see rust/DESIGN.md §2 and §5.
 //!
 //! Run: `cargo bench --bench timings`
 
-use unq::config::{AppConfig, QuantizerKind};
+use unq::config::{AppConfig, QuantizerKind, SearchConfig};
 use unq::coordinator::demo::run_serve;
+use unq::data::{synthetic::Generator, Family};
 use unq::eval::tables::{table1_timings, table_timings};
 use unq::exec::Executor;
-use unq::index::CompressedIndex;
-use unq::quant::Lut;
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::ivf::{CoarseQuantizer, IvfIndex};
+use unq::quant::{pq::Pq, Lut};
 use unq::util::bench::Bench;
 use unq::util::json::Json;
 use unq::util::rng::SplitMix64;
+
+/// Trajectory files accumulate at the repo root, not wherever the bench
+/// happens to run (the old CWD-relative path silently dropped them into
+/// `rust/` or `target/`).
+fn repo_root_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
 
 /// Sharded batch-scan throughput sweep over worker counts; returns the
 /// per-thread-count results as JSON entries.
@@ -56,6 +67,73 @@ fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
     entries
 }
 
+/// IVF nprobe sweep on the 100k synthetic set: scan-stage throughput and
+/// recall@10 against the flat exhaustive engine at nprobe ∈ {1, 4, 16,
+/// all} — the sub-linear trade-off record (acceptance: ≥ 4× throughput
+/// at nprobe ≤ num_lists / 8).
+fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
+    let (n, num_lists, nq) = (100_000usize, 64usize, 64usize);
+    let gen = Generator::new(Family::SiftLike, 203);
+    let train = gen.generate(0, 20_000);
+    let base = gen.generate(1, n);
+    let queries = gen.generate(2, nq);
+    let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 10);
+    let coarse = CoarseQuantizer::train(&train.data, train.dim,
+                                        num_lists, 0, 10);
+    let ivf = IvfIndex::build(&pq, &base, coarse, false);
+    let flat = CompressedIndex::build(&pq, &base);
+    let qs: Vec<&[f32]> = (0..nq).map(|qi| queries.row(qi)).collect();
+    let ks = vec![10usize; nq];
+
+    // scan-stage only (no_rerank) isolates the sub-linear effect; the
+    // flat reference runs through the same executor
+    let mut cfg = SearchConfig {
+        k: 10, no_rerank: true, num_threads: 4, shard_rows: 8192,
+        ..Default::default()
+    };
+    let exec = Executor::new(cfg.num_threads);
+    b.run(&format!("flat scan {nq}q n={n}"), (n * nq) as u64, || {
+        SearchEngine::new(&pq, &flat, cfg).search_batch_on(&exec, &qs)
+    });
+    let flat_secs = b.results().last().expect("bench just ran").median();
+    let flat_results =
+        SearchEngine::new(&pq, &flat, cfg).search_batch_on(&exec, &qs);
+
+    let mut entries = Vec::new();
+    for nprobe in [1usize, 4, 16, num_lists] {
+        cfg.nprobe = nprobe;
+        b.run(
+            &format!("ivf scan {nq}q n={n} L={num_lists} nprobe={nprobe}"),
+            (n * nq) as u64 * nprobe as u64 / num_lists as u64,
+            || ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg),
+        );
+        let secs = b.results().last().expect("bench just ran").median();
+        let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        let overlap: usize = got
+            .iter()
+            .zip(&flat_results)
+            .map(|(g, w)| g.iter().filter(|&id| w.contains(id)).count())
+            .sum();
+        let recall10 = 100.0 * overlap as f64 / (10 * nq) as f64;
+        entries.push(Json::obj(vec![
+            ("nprobe", Json::Num(nprobe as f64)),
+            ("num_lists", Json::Num(num_lists as f64)),
+            ("rows", Json::Num(n as f64)),
+            ("queries", Json::Num(nq as f64)),
+            ("threads", Json::Num(cfg.num_threads as f64)),
+            ("secs_per_batch", Json::Num(secs)),
+            ("queries_per_sec", Json::Num(nq as f64 / secs)),
+            ("speedup_vs_flat", Json::Num(flat_secs / secs)),
+            ("recall10_vs_flat_pct", Json::Num(recall10)),
+        ]));
+    }
+    entries.push(Json::obj(vec![
+        ("flat_secs_per_batch", Json::Num(flat_secs)),
+        ("flat_queries_per_sec", Json::Num(nq as f64 / flat_secs)),
+    ]));
+    entries
+}
+
 fn main() {
     let cfg = AppConfig::default().apply_env();
     let mut b = Bench::e2e();
@@ -76,9 +154,24 @@ fn main() {
         ("bench", Json::Str("scan_batch_thread_sweep".into())),
         ("results", Json::Arr(entries)),
     ]);
-    match std::fs::write("BENCH_scan.json", report.render_pretty()) {
-        Ok(()) => println!("[timings] wrote BENCH_scan.json"),
-        Err(e) => eprintln!("[timings] BENCH_scan.json not written: {e}"),
+    let scan_path = repo_root_path("BENCH_scan.json");
+    match std::fs::write(&scan_path, report.render_pretty()) {
+        Ok(()) => println!("[timings] wrote {}", scan_path.display()),
+        Err(e) => eprintln!("[timings] {} not written: {e}",
+                            scan_path.display()),
+    }
+
+    // IVF nprobe throughput/recall sweep on the 100k synthetic set.
+    let entries = ivf_nprobe_sweep(&mut b);
+    let report = Json::obj(vec![
+        ("bench", Json::Str("ivf_nprobe_sweep".into())),
+        ("results", Json::Arr(entries)),
+    ]);
+    let ivf_path = repo_root_path("BENCH_ivf.json");
+    match std::fs::write(&ivf_path, report.render_pretty()) {
+        Ok(()) => println!("[timings] wrote {}", ivf_path.display()),
+        Err(e) => eprintln!("[timings] {} not written: {e}",
+                            ivf_path.display()),
     }
 
     // Coordinator serving loop (UNQ if artifacts exist, else PQ fallback),

@@ -80,13 +80,67 @@ pub struct SearchConfig {
     /// Rows per index shard in the executor's scan plan; 0 = auto (whole
     /// index inline, ~4 shards per worker on a pool).
     pub shard_rows: usize,
+    /// Inverted lists probed per query on the IVF backend; 0 = probe all
+    /// lists (the flat-equivalent degenerate case).  Ignored by the flat
+    /// backend.
+    pub nprobe: usize,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig { rerank_l: 500, k: 100, no_rerank: false,
                        exhaustive_rerank: false, num_threads: 1,
-                       shard_rows: 0 }
+                       shard_rows: 0, nprobe: 0 }
+    }
+}
+
+/// Which index organization serves queries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexBackendKind {
+    /// Exhaustive ADC scan over one flat code matrix.
+    Flat,
+    /// IVF: coarse k-means partition, scan only the `nprobe` nearest
+    /// inverted lists per query.
+    Ivf,
+}
+
+impl IndexBackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexBackendKind::Flat => "flat",
+            IndexBackendKind::Ivf => "ivf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Some(IndexBackendKind::Flat),
+            "ivf" => Some(IndexBackendKind::Ivf),
+            _ => None,
+        }
+    }
+}
+
+/// IVF index-construction parameters (build-time; `nprobe` in
+/// [`SearchConfig`] is the query-time knob).
+#[derive(Clone, Copy, Debug)]
+pub struct IvfConfig {
+    /// Which backend `unq eval` / `unq serve` build and query.
+    pub backend: IndexBackendKind,
+    /// Coarse codebook size (number of inverted lists).
+    pub num_lists: usize,
+    /// Encode `x − centroid(x)` instead of `x` (classic IVFADC; any
+    /// `quant` backend plugs in unchanged).  Off by default: the stock
+    /// harness trains fine quantizers on *raw* vectors, and residual
+    /// codes only pay off with a residual-trained quantizer
+    /// (rust/DESIGN.md §5) — opt in via `--residual` / `UNQ_RESIDUAL=1`.
+    pub residual: bool,
+}
+
+impl Default for IvfConfig {
+    fn default() -> Self {
+        IvfConfig { backend: IndexBackendKind::Flat, num_lists: 64,
+                    residual: false }
     }
 }
 
@@ -126,6 +180,7 @@ pub struct AppConfig {
     pub k_codewords: usize,
     pub search: SearchConfig,
     pub serve: ServeConfig,
+    pub ivf: IvfConfig,
     /// Directory roots (relative to CWD unless absolute).
     pub data_dir: PathBuf,
     pub artifacts_dir: PathBuf,
@@ -143,6 +198,7 @@ impl Default for AppConfig {
             k_codewords: 256,
             search: SearchConfig::default(),
             serve: ServeConfig::default(),
+            ivf: IvfConfig::default(),
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
             runs_dir: "runs".into(),
@@ -165,6 +221,12 @@ impl AppConfig {
                 ("exhaustive_rerank", Json::Bool(self.search.exhaustive_rerank)),
                 ("num_threads", Json::Num(self.search.num_threads as f64)),
                 ("shard_rows", Json::Num(self.search.shard_rows as f64)),
+                ("nprobe", Json::Num(self.search.nprobe as f64)),
+            ])),
+            ("ivf", Json::obj(vec![
+                ("backend", Json::Str(self.ivf.backend.name().to_string())),
+                ("num_lists", Json::Num(self.ivf.num_lists as f64)),
+                ("residual", Json::Bool(self.ivf.residual)),
             ])),
             ("serve", Json::obj(vec![
                 ("max_batch", Json::Num(self.serve.max_batch as f64)),
@@ -214,6 +276,21 @@ impl AppConfig {
             if let Some(v) = s.get("shard_rows").and_then(Json::as_usize) {
                 cfg.search.shard_rows = v;
             }
+            if let Some(v) = s.get("nprobe").and_then(Json::as_usize) {
+                cfg.search.nprobe = v;
+            }
+        }
+        if let Some(s) = j.get("ivf") {
+            if let Some(v) = s.get("backend").and_then(Json::as_str) {
+                cfg.ivf.backend = IndexBackendKind::parse(v)
+                    .with_context(|| format!("unknown index backend {v:?}"))?;
+            }
+            if let Some(v) = s.get("num_lists").and_then(Json::as_usize) {
+                cfg.ivf.num_lists = v;
+            }
+            if let Some(v) = s.get("residual").and_then(Json::as_bool) {
+                cfg.ivf.residual = v;
+            }
         }
         if let Some(s) = j.get("serve") {
             if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
@@ -252,6 +329,9 @@ impl AppConfig {
         if cfg.bytes_per_vector == 0 || cfg.k_codewords == 0 {
             bail!("bytes_per_vector and k_codewords must be positive");
         }
+        if cfg.ivf.num_lists == 0 {
+            bail!("ivf.num_lists must be positive");
+        }
         Ok(cfg)
     }
 
@@ -280,6 +360,30 @@ impl AppConfig {
             if let Ok(v) = s.parse::<usize>() {
                 self.search.shard_rows = v;
                 self.serve.shard_rows = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NPROBE") {
+            if let Ok(v) = s.parse::<usize>() {
+                self.search.nprobe = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_LISTS") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.ivf.num_lists = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_RESIDUAL") {
+            match s.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.ivf.residual = true,
+                "0" | "false" | "no" => self.ivf.residual = false,
+                _ => {}
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_BACKEND") {
+            if let Some(b) = IndexBackendKind::parse(&s) {
+                self.ivf.backend = b;
             }
         }
         if let Ok(s) = std::env::var("UNQ_DATA_DIR") {
@@ -352,6 +456,43 @@ mod tests {
             .unwrap();
         let c = AppConfig::from_json(&j).unwrap();
         assert_eq!(c.serve.num_threads, 2);
+    }
+
+    #[test]
+    fn ivf_section_roundtrip_and_defaults() {
+        let mut c = AppConfig::default();
+        assert_eq!(c.ivf.backend, IndexBackendKind::Flat);
+        assert!(!c.ivf.residual, "residual is opt-in");
+        assert_eq!(c.search.nprobe, 0);
+        c.ivf.backend = IndexBackendKind::Ivf;
+        c.ivf.num_lists = 128;
+        c.ivf.residual = true;
+        c.search.nprobe = 9;
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("ivf.json");
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.ivf.backend, IndexBackendKind::Ivf);
+        assert_eq!(back.ivf.num_lists, 128);
+        assert!(back.ivf.residual);
+        assert_eq!(back.search.nprobe, 9);
+    }
+
+    #[test]
+    fn ivf_invalid_rejected() {
+        let j = Json::parse(r#"{"ivf": {"backend": "nope"}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"ivf": {"num_lists": 0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn backend_kind_parse_names() {
+        assert_eq!(IndexBackendKind::parse("IVF"), Some(IndexBackendKind::Ivf));
+        assert_eq!(IndexBackendKind::parse("flat"),
+                   Some(IndexBackendKind::Flat));
+        assert_eq!(IndexBackendKind::parse("hnsw"), None);
+        assert_eq!(IndexBackendKind::Ivf.name(), "ivf");
     }
 
     #[test]

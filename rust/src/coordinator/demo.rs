@@ -10,8 +10,9 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::AppConfig;
+use crate::config::{AppConfig, IndexBackendKind};
 use crate::eval::harness;
+use crate::ivf::IndexBackend;
 use crate::Result;
 
 use super::pipeline::Server;
@@ -31,13 +32,25 @@ pub struct ServeReport {
 /// client threads. Returns the report (also printed).
 pub fn run_serve(cfg: &AppConfig, total_queries: usize) -> Result<ServeReport> {
     let exp = harness::prepare(cfg, "")?;
-    let search = harness::paper_search_config(cfg.quantizer, &cfg.dataset, 100);
+    let mut search =
+        harness::paper_search_config(cfg.quantizer, &cfg.dataset, 100);
+    search.nprobe = cfg.search.nprobe;
 
-    // Move the heavy pieces into Arcs for the server.
+    // Move the heavy pieces into Arcs for the server, building the
+    // configured index backend (flat exhaustive scan, or IVF with the
+    // runs-cached coarse partition).
     let harness::Experiment { quant, index, splits, gt, runtime, .. } = exp;
+    let backend = match cfg.ivf.backend {
+        IndexBackendKind::Flat => IndexBackend::Flat(Arc::new(index)),
+        IndexBackendKind::Ivf => {
+            let ivf = harness::build_or_load_ivf(
+                cfg, quant.as_ref(), &splits.train, &splits.base, "")?;
+            IndexBackend::Ivf(Arc::new(ivf))
+        }
+    };
     let quant: Arc<dyn crate::quant::Quantizer> = Arc::from(quant);
-    let index = Arc::new(index);
-    let server = Arc::new(Server::start(quant, index, search, cfg.serve));
+    let server = Arc::new(
+        Server::start_with_backend(quant, backend, search, cfg.serve));
 
     let n_clients = 4usize;
     let queries = Arc::new(splits.query);

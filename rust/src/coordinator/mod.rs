@@ -8,8 +8,10 @@
 //!
 //! ```text
 //! clients → Router (bounded queue, backpressure)
-//!             ├─ search → QueryBatcher (size/deadline) → batched LUT build
-//!             │            → exec pool: QueryBatch × IndexShard scan plan
+//!             ├─ search → QueryBatcher (size/deadline)
+//!             │            → IndexBackend (Flat | Ivf) batch plan on the
+//!             │              exec pool (flat: QueryBatch × IndexShard;
+//!             │              ivf: one slot per (query, probed list))
 //!             │            → batched decode rerank → respond
 //!             └─ encode → EncodeBatcher → encoder → respond
 //! ```

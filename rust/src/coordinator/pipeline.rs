@@ -20,7 +20,8 @@ use std::time::{Duration, Instant};
 
 use crate::config::{SearchConfig, ServeConfig};
 use crate::exec::Executor;
-use crate::index::{CompressedIndex, SearchEngine};
+use crate::index::CompressedIndex;
+use crate::ivf::IndexBackend;
 use crate::quant::Quantizer;
 
 use super::batch::BatchPolicy;
@@ -31,7 +32,9 @@ use super::{EncodeRequest, EncodeResponse, Request, SearchRequest,
 /// Shared immutable serving state.
 pub struct ServerState {
     pub quant: Arc<dyn Quantizer>,
-    pub index: Arc<CompressedIndex>,
+    /// The index organization behind the search worker — flat exhaustive
+    /// scan or IVF nprobe search; the worker is backend-agnostic.
+    pub backend: IndexBackend,
     pub search_cfg: SearchConfig,
     pub serve_cfg: ServeConfig,
     pub metrics: Arc<Metrics>,
@@ -46,12 +49,22 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spin up router + workers.
+    /// Spin up router + workers over a flat index (the classic
+    /// entry point; delegates to [`Self::start_with_backend`]).
     pub fn start(quant: Arc<dyn Quantizer>, index: Arc<CompressedIndex>,
                  search_cfg: SearchConfig, serve_cfg: ServeConfig) -> Server {
+        Self::start_with_backend(quant, IndexBackend::Flat(index),
+                                 search_cfg, serve_cfg)
+    }
+
+    /// Spin up router + workers over any [`IndexBackend`].
+    pub fn start_with_backend(quant: Arc<dyn Quantizer>,
+                              backend: IndexBackend,
+                              search_cfg: SearchConfig,
+                              serve_cfg: ServeConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
         let state = Arc::new(ServerState {
-            quant, index, search_cfg, serve_cfg,
+            quant, backend, search_cfg, serve_cfg,
             metrics: metrics.clone(),
         });
 
@@ -220,23 +233,19 @@ fn process_search_batch(state: &ServerState, exec: &Executor,
     m.batches.fetch_add(1, Ordering::Relaxed);
     m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-    // Stage A: build all LUTs in one call (UNQ: one PJRT batch per AOT
-    // lut_batch of queries; shallow methods: tight loop).
+    // The whole flushed batch goes to the backend as one plan: the flat
+    // arm builds all LUTs in one call (one PJRT batch for UNQ) and runs
+    // the QueryBatch × IndexShard plan; the IVF arm plans one slot per
+    // (query, probed list) through the same executor.  (Pool size is
+    // fixed by the Executor built at worker startup; only the
+    // serve-level shard knob flows through the search config.)
     let queries: Vec<&[f32]> =
         batch.iter().map(|r| r.query.as_slice()).collect();
-    let luts = state.quant.lut_batch(&queries);
-
-    // Stage B+C: the whole flushed batch goes to the executor as one
-    // QueryBatch × IndexShard plan — per-(query, shard) scan tasks on the
-    // pool, shard-ordered merge, one batched gather + decode rerank.
-    // (Pool size is fixed by the Executor built at worker startup; only
-    // the serve-level shard knob flows through the engine config.)
     let mut cfg = state.search_cfg;
     cfg.shard_rows = state.serve_cfg.shard_rows;
-    let engine =
-        SearchEngine::new(state.quant.as_ref(), &state.index, cfg);
     let ks: Vec<usize> = batch.iter().map(|r| r.k).collect();
-    let results = engine.search_batch_with_luts_on(exec, &queries, &luts, &ks);
+    let results = state.backend.search_batch_on(
+        state.quant.as_ref(), exec, &queries, &ks, &cfg);
     drop(queries);
 
     for (req, neighbors) in batch.into_iter().zip(results) {
@@ -312,6 +321,8 @@ mod tests {
     use super::*;
     use crate::config::{SearchConfig, ServeConfig};
     use crate::data::{synthetic::Generator, Family};
+    use crate::index::SearchEngine;
+    use crate::ivf::{CoarseQuantizer, IvfIndex};
     use crate::quant::pq::Pq;
 
     fn start_pq_server(max_batch: usize, queue_depth: usize) -> (Server, crate::data::Dataset) {
@@ -465,5 +476,32 @@ mod tests {
         let m = &server.metrics;
         assert_eq!(m.completed.load(Ordering::Relaxed), 32);
         Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn ivf_backend_serves_same_results_as_direct_ivf_search() {
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let base = Generator::new(Family::SiftLike, 31).generate(1, 2000);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 0, 6);
+        let ivf = Arc::new(IvfIndex::build(&pq, &base, coarse, true));
+        let search = SearchConfig { rerank_l: 64, k: 10, nprobe: 3,
+                                    ..Default::default() };
+        let server = Server::start_with_backend(
+            Arc::new(Pq::train(&train.data, train.dim, 8, 32, 0, 6)),
+            IndexBackend::Ivf(ivf.clone()),
+            search,
+            ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
+                          num_threads: 2, shard_rows: 256 },
+        );
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 8);
+        let mut cfg = search;
+        cfg.shard_rows = 256; // what the serve worker threads through
+        for qi in 0..queries.len() {
+            let resp = server.search_blocking(queries.row(qi), 10).unwrap();
+            let want = ivf.search(&pq, queries.row(qi), &cfg);
+            assert_eq!(resp.neighbors, want, "query {qi}");
+        }
+        server.shutdown();
     }
 }

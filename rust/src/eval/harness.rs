@@ -17,6 +17,7 @@ use crate::data::{self, Dataset};
 use crate::exec::Executor;
 use crate::gt::GroundTruth;
 use crate::index::{CompressedIndex, SearchEngine};
+use crate::ivf::{CoarseQuantizer, IvfIndex};
 use crate::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq,
                    unq::UnqQuantizer, Quantizer};
 use crate::runtime::UnqRuntime;
@@ -62,6 +63,45 @@ impl Experiment {
         recall(&results, &self.gt)
     }
 
+    /// One point of the recall-vs-nprobe trade-off curve.
+    pub fn sweep_point(&self, ivf: &IvfIndex, search: SearchConfig)
+                       -> NprobePoint {
+        let exec = Executor::new(search.num_threads);
+        let queries: Vec<&[f32]> = (0..self.splits.query.len())
+            .map(|qi| self.splits.query.row(qi))
+            .collect();
+        let mut results = Vec::with_capacity(queries.len());
+        let t0 = Instant::now();
+        for chunk in queries.chunks(EVAL_BATCH) {
+            let ks = vec![search.k; chunk.len()];
+            results.extend(ivf.search_batch_on(
+                self.quant.as_ref(), &exec, chunk, &ks, &search));
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        NprobePoint {
+            nprobe: if search.nprobe == 0 { ivf.num_lists() }
+                    else { search.nprobe.min(ivf.num_lists()) },
+            recall: recall(&results, &self.gt),
+            secs_per_query: secs / queries.len().max(1) as f64,
+        }
+    }
+
+    /// The recall@R-vs-nprobe sweep: run the full query set through the
+    /// IVF backend at each `nprobe` and report recall + per-query time
+    /// (the sub-linear trade-off curve `unq ivf-sweep` and the bench
+    /// record).
+    pub fn run_ivf_nprobe_sweep(&self, ivf: &IvfIndex, search: SearchConfig,
+                                nprobes: &[usize]) -> Vec<NprobePoint> {
+        nprobes
+            .iter()
+            .map(|&np| {
+                let mut s = search;
+                s.nprobe = np;
+                self.sweep_point(ivf, s)
+            })
+            .collect()
+    }
+
     /// Per-query mean latency of the two-stage batch search, in seconds.
     pub fn measure_latency(&self, search: SearchConfig, queries: usize) -> f64 {
         let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
@@ -75,6 +115,14 @@ impl Experiment {
         }
         t0.elapsed().as_secs_f64() / nq.max(1) as f64
     }
+}
+
+/// One measured point of the recall-vs-nprobe curve.
+#[derive(Clone, Copy, Debug)]
+pub struct NprobePoint {
+    pub nprobe: usize,
+    pub recall: Recall,
+    pub secs_per_query: f64,
 }
 
 fn model_cache_path(cfg: &AppConfig, kind: QuantizerKind) -> PathBuf {
@@ -96,6 +144,49 @@ fn codes_cache_path(cfg: &AppConfig, kind: QuantizerKind, n_base: usize,
         n_base,
         if variant.is_empty() { String::new() } else { format!("_{variant}") }
     ))
+}
+
+fn ivf_cache_path(cfg: &AppConfig, kind: QuantizerKind, n_base: usize,
+                  variant: &str) -> PathBuf {
+    cfg.runs_dir.join(format!(
+        "ivf_{}_{}_{}b_n{}_L{}{}{}.store",
+        cfg.dataset,
+        kind.name().replace(['+', ' '], "_"),
+        cfg.bytes_per_vector,
+        n_base,
+        cfg.ivf.num_lists,
+        if cfg.ivf.residual { "_res" } else { "" },
+        if variant.is_empty() { String::new() } else { format!("_{variant}") }
+    ))
+}
+
+/// Build the IVF index for a prepared experiment, or load it from the
+/// runs cache (coarse centroids + list layout + codes persist through
+/// [`crate::store`]).
+///
+/// The coarse codebook trains on the training split; with
+/// `cfg.ivf.residual` the *fine* quantizer is used as-is (the residual
+/// contract: its LUT estimates squared distance in whatever space it was
+/// trained on — see rust/DESIGN.md §5).
+pub fn build_or_load_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
+                         train: &Dataset, base: &Dataset, variant: &str)
+                         -> Result<IvfIndex> {
+    std::fs::create_dir_all(&cfg.runs_dir)?;
+    let path = ivf_cache_path(cfg, cfg.quantizer, base.len(), variant);
+    if path.exists() {
+        return IvfIndex::load(&Store::load(&path)?);
+    }
+    let t0 = Instant::now();
+    eprintln!("[harness] building IVF (L={} residual={}) over {} vectors",
+              cfg.ivf.num_lists, cfg.ivf.residual, base.len());
+    let coarse = CoarseQuantizer::train(&train.data, train.dim,
+                                        cfg.ivf.num_lists, 0, 15);
+    let ivf = IvfIndex::build(quant, base, coarse, cfg.ivf.residual);
+    eprintln!("[harness] built IVF in {:.1}s", t0.elapsed().as_secs_f64());
+    let mut store = Store::new();
+    ivf.save(&mut store);
+    store.save(&path)?;
+    Ok(ivf)
 }
 
 /// Train a shallow baseline or load it from the runs cache.
@@ -304,6 +395,37 @@ mod tests {
         assert_eq!(second.train_secs, 0.0);
         assert_eq!(second.encode_secs, 0.0);
         assert_eq!(first.index.codes, second.index.codes);
+    }
+
+    #[test]
+    fn ivf_sweep_recall_approaches_flat_and_caches() {
+        let dir = TempDir::new("harness").unwrap();
+        let mut cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
+        cfg.ivf.num_lists = 8;
+        cfg.ivf.residual = false;
+        let exp = prepare(&cfg, "").unwrap();
+        let ivf = build_or_load_ivf(&cfg, exp.quant.as_ref(),
+                                    &exp.splits.train, &exp.splits.base, "")
+            .unwrap();
+        assert_eq!(ivf.n(), exp.index.n);
+        let search = SearchConfig { rerank_l: 100, k: 100,
+                                    ..Default::default() };
+        let flat = exp.run_recall(search);
+        let pts = exp.run_ivf_nprobe_sweep(&ivf, search, &[1, 8]);
+        assert_eq!(pts[0].nprobe, 1);
+        assert_eq!(pts[1].nprobe, 8);
+        // nprobe = all lists (non-residual) is flat-identical, recall
+        // included
+        assert_eq!(pts[1].recall, flat);
+        assert!(pts[1].recall.at100 + 1.0 >= pts[0].recall.at100,
+                "more probes lost recall: {} vs {}",
+                pts[1].recall.at100, pts[0].recall.at100);
+        // second build hits the archive cache and searches identically
+        let again = build_or_load_ivf(&cfg, exp.quant.as_ref(),
+                                      &exp.splits.train, &exp.splits.base,
+                                      "").unwrap();
+        assert_eq!(again.remap, ivf.remap);
+        assert_eq!(again.codes.codes, ivf.codes.codes);
     }
 
     #[test]

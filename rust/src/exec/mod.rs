@@ -6,10 +6,12 @@
 //!
 //! * [`pool`] — persistent named worker threads over a bounded job queue,
 //!   with scoped (borrowing) batch submission and graceful shutdown;
-//! * [`plan`] — the `QueryBatch × IndexShard` scan plan (one task per
-//!   (query, shard) pair, [`plan::shard_ranges`] partitioning,
-//!   shard-ordered `merge_topk` reduction) and the batched
-//!   gather → `reconstruct_batch` rerank.
+//! * [`plan`] — the generic [`plan::ScanTask`] fan-out (slot-merged,
+//!   submission-ordered `merge_topk` reduction), the flat
+//!   `QueryBatch × IndexShard` plan built on it, and the batched
+//!   gather → `reconstruct_batch` rerank.  The IVF subsystem
+//!   ([`crate::ivf`]) plans per-(query, probed-list) tasks through the
+//!   same executor so mixed-list batches fill the pool.
 //!
 //! The execution contract is strict determinism: for any
 //! `(num_threads, shard_rows)` the results are bit-identical to the
@@ -20,5 +22,6 @@
 pub mod plan;
 pub mod pool;
 
-pub use plan::{rerank_batch, shard_ranges, Executor};
+pub use plan::{rerank_batch, shard_ranges, shard_ranges_in, Executor,
+               ScanTask};
 pub use pool::WorkerPool;

@@ -1,16 +1,21 @@
-//! Batch execution plans: `QueryBatch × IndexShard` scan fan-out and the
-//! batched gather → decode rerank reduction.
+//! Batch execution plans: generic `ScanTask` fan-out (the substrate under
+//! both the flat `QueryBatch × IndexShard` plan and the IVF per-list
+//! plans) and the batched gather → decode rerank reduction.
 //!
-//! The planner turns a batch of per-query LUTs into one task per
-//! `(query, shard)` pair, runs them on an [`Executor`], and reduces each
-//! query's per-shard top-k lists with [`merge_topk`] **in shard order**,
-//! which makes the result bit-identical to a sequential full-index scan
-//! regardless of thread count or shard size (ties are broken by the
-//! strict-less heap test plus ascending-id push order — see
-//! `index::scan`).  The rerank stage gathers the candidate codes of the
-//! *whole* query batch into one contiguous buffer and decodes them with a
-//! single `reconstruct_batch` call, so UNQ's AOT decoder runs once per
-//! batch instead of once per query.
+//! The general unit is a [`ScanTask`]: score a contiguous row range of
+//! one index with one LUT and merge the partial top-k into an output
+//! *slot*.  The flat plan emits one task per `(query, shard)` pair with
+//! slot = query; the IVF plan (`crate::ivf`) emits one slot per
+//! `(query, probed list)` pair so a small batch probing many lists still
+//! fills the worker pool.  Per slot, partial results are reduced with
+//! [`merge_topk`] **in task-submission order**, which for the flat plan
+//! means ascending shard order — bit-identical to a sequential
+//! full-index scan regardless of thread count or shard size (ties are
+//! broken by the strict-less heap test plus ascending-id push order —
+//! see `index::scan`).  The rerank stage gathers the candidate codes of
+//! the *whole* query batch into one contiguous buffer and decodes them
+//! with a single `reconstruct_batch` call, so UNQ's AOT decoder runs
+//! once per batch instead of once per query.
 
 use std::sync::mpsc;
 
@@ -49,8 +54,10 @@ impl Executor {
 
     /// Resolve the `shard_rows` knob: 0 means "auto" — the whole index as
     /// one shard inline, ~4 shards per worker on a pool (enough slack for
-    /// load balance without drowning in merge work).
-    fn effective_shard_rows(&self, n: usize, shard_rows: usize) -> usize {
+    /// load balance without drowning in merge work).  `n` is the total
+    /// row count the plan will scan (planners over sub-ranges, like IVF,
+    /// pass their whole index so shard size is stable across lists).
+    pub fn effective_shard_rows(&self, n: usize, shard_rows: usize) -> usize {
         if shard_rows != 0 {
             return shard_rows;
         }
@@ -62,7 +69,9 @@ impl Executor {
 
     /// Execute a `QueryBatch × IndexShard` scan plan: for every query `i`
     /// the global top-`ks[i]` `(score, id)` pairs sorted ascending,
-    /// bit-identical to `scan_topk` over the full index.
+    /// bit-identical to `scan_topk` over the full index.  (A thin planner
+    /// over [`Self::run_scan_tasks`]: slot = query, tasks in ascending
+    /// shard order.)
     pub fn scan_batch(&self, luts: &[Lut], index: &CompressedIndex,
                       ks: &[usize], shard_rows: usize)
                       -> Vec<Vec<(f32, u32)>> {
@@ -72,49 +81,84 @@ impl Executor {
         }
         let shards =
             shard_ranges(index.n, self.effective_shard_rows(index.n, shard_rows));
+        let mut tasks = Vec::with_capacity(luts.len() * shards.len());
+        for qi in 0..luts.len() {
+            for &(lo, hi) in &shards {
+                tasks.push(ScanTask { slot: qi, lut: qi, lo, hi });
+            }
+        }
+        self.run_scan_tasks(luts, index, ks, &tasks)
+    }
+
+    /// Execute an arbitrary [`ScanTask`] plan: for every slot `s`, the
+    /// merged top-`ks[s]` `(score, id)` pairs over that slot's tasks,
+    /// sorted ascending.
+    ///
+    /// Determinism contract: per slot, partial results merge in
+    /// task-submission order on every executor, so a plan whose tasks
+    /// cover ascending row ranges reproduces the sequential scan's
+    /// tie-breaking exactly.  Slots with no tasks yield empty results.
+    pub fn run_scan_tasks(&self, luts: &[Lut], index: &CompressedIndex,
+                          ks: &[usize], tasks: &[ScanTask])
+                          -> Vec<Vec<(f32, u32)>> {
+        let nslots = ks.len();
+        // per-slot ordinal of each task: its merge position within the slot
+        let mut counts = vec![0usize; nslots];
+        let ords: Vec<usize> = tasks
+            .iter()
+            .map(|t| {
+                let o = counts[t.slot];
+                counts[t.slot] += 1;
+                o
+            })
+            .collect();
         match self {
-            Executor::Inline => luts
-                .iter()
-                .zip(ks)
-                .map(|(lut, &k)| {
-                    let parts: Vec<_> = shards
-                        .iter()
-                        .map(|&(lo, hi)| scan_range_topk(lut, index, lo, hi, k))
-                        .collect();
-                    merge_topk(parts, k)
-                })
-                .collect(),
+            Executor::Inline => {
+                let mut parts: Vec<Vec<Vec<(f32, u32)>>> =
+                    counts.iter().map(|&c| Vec::with_capacity(c)).collect();
+                for t in tasks {
+                    parts[t.slot].push(scan_range_topk(
+                        &luts[t.lut], index, t.lo, t.hi, ks[t.slot]));
+                }
+                parts
+                    .into_iter()
+                    .zip(ks)
+                    .map(|(p, &k)| merge_topk(p, k))
+                    .collect()
+            }
             Executor::Pool(pool) => {
-                let (nq, ns) = (luts.len(), shards.len());
                 // full-capacity result channel: task sends never block
-                let (tx, rx) = mpsc::sync_channel(nq * ns);
-                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                    Vec::with_capacity(nq * ns);
-                for (qi, lut) in luts.iter().enumerate() {
-                    let k = ks[qi];
-                    for (si, &(lo, hi)) in shards.iter().enumerate() {
-                        let tx = tx.clone();
-                        tasks.push(Box::new(move || {
-                            let part = scan_range_topk(lut, index, lo, hi, k);
-                            let _ = tx.send((qi, si, part));
-                        }));
-                    }
+                let (tx, rx) = mpsc::sync_channel(tasks.len().max(1));
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(tasks.len());
+                for (ti, t) in tasks.iter().enumerate() {
+                    let tx = tx.clone();
+                    let lut = &luts[t.lut];
+                    let k = ks[t.slot];
+                    let (slot, ord) = (t.slot, ords[ti]);
+                    let (lo, hi) = (t.lo, t.hi);
+                    jobs.push(Box::new(move || {
+                        let part = scan_range_topk(lut, index, lo, hi, k);
+                        let _ = tx.send((slot, ord, part));
+                    }));
                 }
                 drop(tx);
-                pool.run_scoped(tasks);
-                // reassemble the grid so each query merges its shards in
-                // ascending-row order — the determinism requirement
-                let mut grid: Vec<Vec<Option<Vec<(f32, u32)>>>> =
-                    (0..nq).map(|_| (0..ns).map(|_| None).collect()).collect();
-                while let Ok((qi, si, part)) = rx.try_recv() {
-                    grid[qi][si] = Some(part);
+                pool.run_scoped(jobs);
+                // reassemble the grid so each slot merges its parts in
+                // submission order — the determinism requirement
+                let mut grid: Vec<Vec<Option<Vec<(f32, u32)>>>> = counts
+                    .iter()
+                    .map(|&c| (0..c).map(|_| None).collect())
+                    .collect();
+                while let Ok((slot, ord, part)) = rx.try_recv() {
+                    grid[slot][ord] = Some(part);
                 }
                 grid.into_iter()
                     .zip(ks)
                     .map(|(parts, &k)| {
                         let parts: Vec<_> = parts
                             .into_iter()
-                            .map(|p| p.expect("every shard task reported"))
+                            .map(|p| p.expect("every scan task reported"))
                             .collect();
                         merge_topk(parts, k)
                     })
@@ -124,18 +168,38 @@ impl Executor {
     }
 }
 
+/// One unit of scan work: score rows `[lo, hi)` of the plan's index with
+/// `luts[lut]`, keep the top `ks[slot]`, and merge into output slot
+/// `slot` (merge order across a slot's tasks = submission order).
+#[derive(Clone, Copy, Debug)]
+pub struct ScanTask {
+    pub slot: usize,
+    pub lut: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
 /// Partition `[0, n)` into contiguous shards of at most `shard_rows` rows
 /// (`shard_rows == 0`: one shard spanning the whole index).
 pub fn shard_ranges(n: usize, shard_rows: usize) -> Vec<(usize, usize)> {
-    if n == 0 || shard_rows == 0 || shard_rows >= n {
-        return vec![(0, n)];
+    shard_ranges_in(0, n, shard_rows)
+}
+
+/// Partition an arbitrary row range `[lo, hi)` into contiguous shards of
+/// at most `shard_rows` rows (`shard_rows == 0`: the whole range as one
+/// shard) — the per-list variant the IVF planner shards with.
+pub fn shard_ranges_in(lo: usize, hi: usize, shard_rows: usize)
+                       -> Vec<(usize, usize)> {
+    let len = hi.saturating_sub(lo);
+    if len == 0 || shard_rows == 0 || shard_rows >= len {
+        return vec![(lo, hi.max(lo))];
     }
-    let mut out = Vec::with_capacity(n.div_ceil(shard_rows));
-    let mut lo = 0;
-    while lo < n {
-        let hi = (lo + shard_rows).min(n);
-        out.push((lo, hi));
-        lo = hi;
+    let mut out = Vec::with_capacity(len.div_ceil(shard_rows));
+    let mut cur = lo;
+    while cur < hi {
+        let next = (cur + shard_rows).min(hi);
+        out.push((cur, next));
+        cur = next;
     }
     out
 }
@@ -266,5 +330,39 @@ mod tests {
         let idx = mk_index(10, 4, 3);
         let exec = Executor::new(2);
         assert!(exec.scan_batch(&[], &idx, &[], 0).is_empty());
+    }
+
+    #[test]
+    fn shard_ranges_in_covers_subrange_exactly_once() {
+        assert_eq!(shard_ranges_in(5, 5, 4), vec![(5, 5)]);
+        assert_eq!(shard_ranges_in(5, 20, 0), vec![(5, 20)]);
+        assert_eq!(shard_ranges_in(5, 20, 100), vec![(5, 20)]);
+        assert_eq!(shard_ranges_in(5, 17, 5),
+                   vec![(5, 10), (10, 15), (15, 17)]);
+    }
+
+    #[test]
+    fn scan_tasks_slot_merge_matches_direct_range_scans() {
+        // a hand-built plan: slot 0 scans [0,300)+[300,500) with lut 0,
+        // slot 1 scans only [100,400) with lut 1, slot 2 has no tasks
+        let idx = mk_index(500, 6, 9);
+        let luts: Vec<Lut> = (0..2).map(|i| mk_lut(6, 40 + i)).collect();
+        let tasks = vec![
+            ScanTask { slot: 0, lut: 0, lo: 0, hi: 300 },
+            ScanTask { slot: 1, lut: 1, lo: 100, hi: 400 },
+            ScanTask { slot: 0, lut: 0, lo: 300, hi: 500 },
+        ];
+        let ks = [9usize, 14, 5];
+        for threads in [1usize, 3] {
+            let exec = Executor::new(threads);
+            let got = exec.run_scan_tasks(&luts, &idx, &ks, &tasks);
+            assert_eq!(got[0], scan_topk(&luts[0], &idx, 9),
+                       "threads={threads} slot 0");
+            assert_eq!(got[1],
+                       crate::index::scan::scan_range_topk(
+                           &luts[1], &idx, 100, 400, 14),
+                       "threads={threads} slot 1");
+            assert!(got[2].is_empty(), "threads={threads} empty slot");
+        }
     }
 }

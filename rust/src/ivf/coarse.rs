@@ -1,0 +1,117 @@
+//! The coarse quantizer: a small k-means codebook whose cells are the
+//! inverted lists.
+//!
+//! Unlike the fine quantizers in [`crate::quant`], the coarse codebook is
+//! tiny (tens to thousands of centroids) and is consulted once per
+//! database vector at build time and `num_lists` times per query at
+//! search time — it never touches the scan hot path.  Training reuses
+//! [`crate::kmeans`] (Lloyd + k-means++), the same workhorse behind every
+//! shallow quantizer.
+
+use crate::kmeans::{kmeans, nearest, KMeansConfig};
+use crate::linalg::{sq_l2, TopK};
+
+/// A trained coarse codebook: `num_lists` centroids of `dim` floats.
+#[derive(Clone, Debug)]
+pub struct CoarseQuantizer {
+    pub dim: usize,
+    /// `(num_lists, dim)` flat row-major centroids.
+    pub centroids: Vec<f32>,
+}
+
+impl CoarseQuantizer {
+    /// Train on flat rows (k-means over the training split).
+    pub fn train(data: &[f32], dim: usize, num_lists: usize, seed: u64,
+                 iters: usize) -> CoarseQuantizer {
+        assert!(num_lists > 0, "at least one inverted list");
+        let km = kmeans(data, dim, &KMeansConfig {
+            k: num_lists,
+            iters,
+            seed,
+        });
+        CoarseQuantizer { dim, centroids: km.centroids }
+    }
+
+    /// Construct from explicit centroids (tests, loaded archives).
+    pub fn from_centroids(dim: usize, centroids: Vec<f32>) -> CoarseQuantizer {
+        assert!(dim > 0 && !centroids.is_empty()
+                && centroids.len() % dim == 0,
+                "centroids must be a non-empty (num_lists, dim) matrix");
+        CoarseQuantizer { dim, centroids }
+    }
+
+    #[inline]
+    pub fn num_lists(&self) -> usize {
+        self.centroids.len() / self.dim
+    }
+
+    #[inline]
+    pub fn centroid(&self, l: usize) -> &[f32] {
+        &self.centroids[l * self.dim..(l + 1) * self.dim]
+    }
+
+    /// The list a vector belongs to (nearest centroid; ties resolve to
+    /// the lowest list id — `kmeans::nearest` keeps the first strict
+    /// minimum).
+    #[inline]
+    pub fn assign(&self, x: &[f32]) -> u32 {
+        nearest(x, &self.centroids, self.dim).0
+    }
+
+    /// The `nprobe` nearest lists to a query, ordered by ascending
+    /// `(distance, list id)` — deterministic under centroid-distance ties.
+    pub fn nearest_lists(&self, q: &[f32], nprobe: usize) -> Vec<u32> {
+        let nl = self.num_lists();
+        let mut top = TopK::new(nprobe.min(nl).max(1));
+        for l in 0..nl {
+            top.push(sq_l2(q, self.centroid(l)), l as u32);
+        }
+        top.into_sorted().into_iter().map(|(_, l)| l).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_coarse() -> CoarseQuantizer {
+        // four 2-d centroids on a line
+        CoarseQuantizer::from_centroids(
+            2, vec![0.0, 0.0, 10.0, 0.0, 20.0, 0.0, 30.0, 0.0])
+    }
+
+    #[test]
+    fn assign_picks_nearest_centroid() {
+        let c = grid_coarse();
+        assert_eq!(c.num_lists(), 4);
+        assert_eq!(c.assign(&[1.0, 0.5]), 0);
+        assert_eq!(c.assign(&[19.0, 0.0]), 2);
+        // exactly between centroids 0 and 1: strict-less keeps list 0
+        assert_eq!(c.assign(&[5.0, 0.0]), 0);
+    }
+
+    #[test]
+    fn nearest_lists_orders_by_distance_then_id() {
+        let c = grid_coarse();
+        assert_eq!(c.nearest_lists(&[11.0, 0.0], 3), vec![1, 2, 0]);
+        // nprobe clamps to num_lists
+        assert_eq!(c.nearest_lists(&[0.0, 0.0], 99).len(), 4);
+        // equidistant lists break ties by ascending id
+        assert_eq!(c.nearest_lists(&[15.0, 0.0], 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn train_on_blobs_separates_them() {
+        let mut data = Vec::new();
+        for i in 0..60 {
+            let j = (i % 5) as f32 * 0.01;
+            data.extend_from_slice(&[j, j]);
+            data.extend_from_slice(&[8.0 + j, 8.0 - j]);
+        }
+        let c = CoarseQuantizer::train(&data, 2, 2, 3, 10);
+        assert_eq!(c.num_lists(), 2);
+        let a = c.assign(&[0.0, 0.0]);
+        let b = c.assign(&[8.0, 8.0]);
+        assert_ne!(a, b, "blobs must land in different lists");
+    }
+}

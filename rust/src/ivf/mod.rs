@@ -1,0 +1,182 @@
+//! IVF: coarse-partitioned inverted-file index for sub-linear
+//! compressed-domain search.
+//!
+//! The flat index scans every code per query — the paper's "3 s per
+//! 10⁹ × 8-byte scan" exhaustive regime.  This subsystem puts a coarse
+//! k-means codebook ([`coarse::CoarseQuantizer`]) in front of the LUT
+//! scan: the database is partitioned into `num_lists` inverted lists,
+//! each stored *contiguously* inside one code matrix, and a query scans
+//! only its `nprobe` nearest lists — the coarse+fine decomposition that
+//! lets IVFADC-style systems search billion-scale corpora.
+//!
+//! Layout (`rust/DESIGN.md` §5):
+//!
+//! ```text
+//! codes   row:  0 ……… off[1] ……… off[2] ………………… off[L] = n
+//!               └ list 0 ┘└ list 1 ┘   …   └ list L−1 ┘
+//! remap[row] = original id   (ascending within each list)
+//! ```
+//!
+//! * **Residual encoding** (optional): codes quantize `x − centroid(x)`,
+//!   so any existing [`crate::quant`] backend plugs in unchanged — its
+//!   LUT just gets the *residual query* `q − centroid(list)` per probed
+//!   list.
+//! * **Execution**: search plans one [`crate::exec::ScanTask`] slot per
+//!   `(query, probed list)` pair through the shared executor pool, so a
+//!   batch of queries probing different lists still fills every worker.
+//! * **Degenerate-case contract**: with `nprobe = num_lists` and
+//!   non-residual encoding, results are bit-identical to the flat
+//!   [`crate::index::SearchEngine::search_batch`] for every
+//!   `(num_threads, shard_rows)` — pinned by property tests in
+//!   [`search`].
+
+pub mod coarse;
+pub mod persist;
+pub mod search;
+
+use std::sync::Arc;
+
+use crate::config::SearchConfig;
+use crate::data::Dataset;
+use crate::exec::Executor;
+use crate::index::{CompressedIndex, SearchEngine};
+use crate::quant::Quantizer;
+
+pub use coarse::CoarseQuantizer;
+
+/// A coarse-partitioned compressed index: per-list contiguous code
+/// storage + id-remap table over one [`CompressedIndex`].
+pub struct IvfIndex {
+    pub coarse: CoarseQuantizer,
+    /// Whether codes quantize `x − centroid(x)` (residual) or `x` raw.
+    pub residual: bool,
+    /// List `l` occupies code rows `[offsets[l], offsets[l + 1])`;
+    /// `offsets.len() == num_lists + 1`, `offsets[num_lists] == n`.
+    pub offsets: Vec<usize>,
+    /// `remap[row]` = original database id of stored row `row`
+    /// (ascending within each list — the tie-break invariant the
+    /// flat-equivalence guarantee rests on).
+    pub remap: Vec<u32>,
+    /// The per-list contiguous code storage (n rows total).
+    pub codes: CompressedIndex,
+}
+
+impl IvfIndex {
+    /// Partition, (residual-)encode and lay out a dataset.
+    ///
+    /// Rows are appended to their list in ascending original-id order,
+    /// and encoding happens in one `encode_batch` call over the gathered
+    /// (optionally residualized) rows — one PJRT execution for UNQ.
+    pub fn build(quant: &dyn Quantizer, data: &Dataset,
+                 coarse: CoarseQuantizer, residual: bool) -> IvfIndex {
+        assert_eq!(coarse.dim, data.dim, "coarse codebook dim mismatch");
+        assert_eq!(quant.dim(), data.dim, "quantizer dim mismatch");
+        let n = data.len();
+        let nl = coarse.num_lists();
+        let dim = data.dim;
+
+        let assign: Vec<u32> =
+            (0..n).map(|i| coarse.assign(data.row(i))).collect();
+        let mut offsets = vec![0usize; nl + 1];
+        for &a in &assign {
+            offsets[a as usize + 1] += 1;
+        }
+        for l in 0..nl {
+            offsets[l + 1] += offsets[l];
+        }
+
+        // gather rows into list order (stable: ascending id within list)
+        let mut cursor: Vec<usize> = offsets[..nl].to_vec();
+        let mut remap = vec![0u32; n];
+        let mut gathered = vec![0.0f32; n * dim];
+        for id in 0..n {
+            let l = assign[id] as usize;
+            let row = cursor[l];
+            cursor[l] += 1;
+            remap[row] = id as u32;
+            let dst = &mut gathered[row * dim..(row + 1) * dim];
+            dst.copy_from_slice(data.row(id));
+            if residual {
+                for (d, c) in dst.iter_mut().zip(coarse.centroid(l)) {
+                    *d -= c;
+                }
+            }
+        }
+
+        let code_bytes = quant.code_bytes();
+        let codes = quant.encode_batch(&gathered);
+        IvfIndex {
+            coarse,
+            residual,
+            offsets,
+            remap,
+            codes: CompressedIndex::from_codes(n, code_bytes, codes),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.codes.n
+    }
+
+    #[inline]
+    pub fn num_lists(&self) -> usize {
+        self.coarse.num_lists()
+    }
+
+    /// Rows stored in list `l`.
+    #[inline]
+    pub fn list_len(&self, l: usize) -> usize {
+        self.offsets[l + 1] - self.offsets[l]
+    }
+
+    /// Code storage bytes (same accounting as the flat index).
+    pub fn storage_bytes(&self) -> usize {
+        self.codes.storage_bytes()
+    }
+}
+
+/// The serving coordinator's index dispatch: one enum, two index
+/// organizations, identical request-path semantics.
+pub enum IndexBackend {
+    /// Exhaustive ADC scan over a flat code matrix.
+    Flat(Arc<CompressedIndex>),
+    /// Coarse-partitioned `nprobe` search.
+    Ivf(Arc<IvfIndex>),
+}
+
+impl IndexBackend {
+    pub fn n(&self) -> usize {
+        match self {
+            IndexBackend::Flat(ix) => ix.n,
+            IndexBackend::Ivf(ix) => ix.n(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            IndexBackend::Flat(_) => "flat",
+            IndexBackend::Ivf(_) => "ivf",
+        }
+    }
+
+    /// Backend-agnostic batched two-stage search with a per-query `k` —
+    /// the coordinator's entry point.  The flat arm reproduces the
+    /// classic `SearchEngine` path (one `lut_batch`, one
+    /// `QueryBatch × IndexShard` plan); the IVF arm plans per-probed-list
+    /// tasks through the same executor.
+    pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
+                           queries: &[&[f32]], ks: &[usize],
+                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+        match self {
+            IndexBackend::Flat(ix) => {
+                let luts = quant.lut_batch(queries);
+                SearchEngine::new(quant, ix, *cfg)
+                    .search_batch_with_luts_on(exec, queries, &luts, ks)
+            }
+            IndexBackend::Ivf(ix) => {
+                ix.search_batch_on(quant, exec, queries, ks, cfg)
+            }
+        }
+    }
+}

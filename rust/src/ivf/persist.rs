@@ -1,0 +1,157 @@
+//! IVF persistence: trained coarse centroids + list layout + codes +
+//! id-remap table in one [`Store`] archive.
+//!
+//! Entry names are prefixed `ivf_` so an IVF bundle can share an archive
+//! with other tensors (e.g. the fine quantizer's codebooks).  The
+//! id-remap and offset tables use the store's `u32` dtype; structural
+//! scalars travel in a JSON meta entry.
+
+use anyhow::{ensure, Context};
+
+use crate::index::CompressedIndex;
+use crate::store::Store;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::{CoarseQuantizer, IvfIndex};
+
+impl IvfIndex {
+    /// Write all index tensors + layout meta into `store`.
+    pub fn save(&self, store: &mut Store) {
+        let nl = self.num_lists();
+        let dim = self.coarse.dim;
+        store.put_f32("ivf_centroids", &[nl, dim],
+                      self.coarse.centroids.clone());
+        store.put_u8("ivf_codes", &[self.codes.n, self.codes.stride],
+                     self.codes.codes.clone());
+        store.put_u32("ivf_remap", &[self.remap.len()], self.remap.clone());
+        let offsets32: Vec<u32> =
+            self.offsets.iter().map(|&o| o as u32).collect();
+        store.put_u32("ivf_offsets", &[offsets32.len()], offsets32);
+        let meta = Json::obj(vec![
+            ("residual", Json::Bool(self.residual)),
+            ("num_lists", Json::Num(nl as f64)),
+            ("dim", Json::Num(dim as f64)),
+        ]);
+        store.put_meta("ivf", &meta.render());
+    }
+
+    /// Reconstruct an index from an archive written by [`Self::save`].
+    pub fn load(store: &Store) -> Result<IvfIndex> {
+        let meta = store.get_meta("ivf").context("missing ivf meta")?;
+        let meta = Json::parse(meta).context("parse ivf meta")?;
+        let residual = meta
+            .get("residual")
+            .and_then(Json::as_bool)
+            .context("ivf meta missing residual")?;
+        let num_lists = meta.req_usize("num_lists")?;
+        let dim = meta.req_usize("dim")?;
+
+        let (cshape, cents) =
+            store.get_f32("ivf_centroids").context("missing ivf_centroids")?;
+        ensure!(cshape == [num_lists, dim],
+                "ivf_centroids shape {cshape:?} != ({num_lists}, {dim})");
+        let coarse = CoarseQuantizer::from_centroids(dim, cents.to_vec());
+
+        let (kshape, codes) =
+            store.get_u8("ivf_codes").context("missing ivf_codes")?;
+        ensure!(kshape.len() == 2, "ivf_codes must be (n, stride)");
+        let (n, stride) = (kshape[0], kshape[1]);
+
+        let (_, remap) =
+            store.get_u32("ivf_remap").context("missing ivf_remap")?;
+        ensure!(remap.len() == n, "ivf_remap length {} != n {n}",
+                remap.len());
+        ensure!(remap.iter().all(|&id| (id as usize) < n),
+                "ivf_remap has out-of-range ids (n = {n})");
+
+        let (_, offsets32) =
+            store.get_u32("ivf_offsets").context("missing ivf_offsets")?;
+        ensure!(offsets32.len() == num_lists + 1,
+                "ivf_offsets length {} != num_lists + 1", offsets32.len());
+        let offsets: Vec<usize> =
+            offsets32.iter().map(|&o| o as usize).collect();
+        ensure!(offsets.first() == Some(&0),
+                "ivf_offsets must start at 0");
+        ensure!(offsets.last() == Some(&n),
+                "ivf_offsets must end at n = {n}");
+        // a corrupt layout must fail here, not panic rows-out-of-range
+        // deep inside a scan worker
+        ensure!(offsets.windows(2).all(|w| w[0] <= w[1] && w[1] <= n),
+                "ivf_offsets must be non-decreasing and bounded by n");
+
+        Ok(IvfIndex {
+            coarse,
+            residual,
+            offsets,
+            remap: remap.to_vec(),
+            codes: CompressedIndex::from_codes(n, stride, codes.to_vec()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchConfig;
+    use crate::data::{synthetic::Generator, Family};
+    use crate::exec::Executor;
+    use crate::quant::pq::Pq;
+    use crate::util::TempDir;
+
+    #[test]
+    fn ivf_archive_roundtrip_preserves_search_results() {
+        let gen = Generator::new(Family::SiftLike, 91);
+        let train = gen.generate(0, 900);
+        let base = gen.generate(1, 1500);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 1, 6);
+        let ivf = IvfIndex::build(&pq, &base, coarse, true);
+
+        let dir = TempDir::new("ivf").unwrap();
+        let path = dir.path().join("ivf.store");
+        let mut store = Store::new();
+        ivf.save(&mut store);
+        store.save(&path).unwrap();
+
+        let back = IvfIndex::load(&Store::load(&path).unwrap()).unwrap();
+        assert_eq!(back.n(), ivf.n());
+        assert_eq!(back.num_lists(), ivf.num_lists());
+        assert_eq!(back.residual, ivf.residual);
+        assert_eq!(back.offsets, ivf.offsets);
+        assert_eq!(back.remap, ivf.remap);
+        assert_eq!(back.codes.codes, ivf.codes.codes);
+
+        let queries = gen.generate(2, 5);
+        let qs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 3,
+                                 ..Default::default() };
+        let a = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
+                                    &[10; 5], &cfg);
+        let b = back.search_batch_on(&pq, &Executor::Inline, &qs,
+                                     &[10; 5], &cfg);
+        assert_eq!(a, b, "loaded index must search identically");
+    }
+
+    #[test]
+    fn load_rejects_torn_layout() {
+        let gen = Generator::new(Family::SiftLike, 92);
+        let train = gen.generate(0, 600);
+        let base = gen.generate(1, 800);
+        let pq = Pq::train(&train.data, train.dim, 8, 16, 0, 4);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 4, 2, 4);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let mut store = Store::new();
+        ivf.save(&mut store);
+        // a non-monotone offsets table must fail at load, not panic
+        // rows-out-of-range inside a later scan
+        let (shape, mut offs) = store.take_u32("ivf_offsets").unwrap();
+        offs[1] = ivf.n() as u32 + 999;
+        store.put_u32("ivf_offsets", &shape, offs);
+        assert!(IvfIndex::load(&store).is_err());
+        // drop the remap table: load must fail loudly, not mis-map ids
+        store.take_u32("ivf_remap").unwrap();
+        assert!(IvfIndex::load(&store).is_err());
+    }
+}

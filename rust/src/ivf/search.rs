@@ -1,0 +1,494 @@
+//! `nprobe` search over an [`IvfIndex`]: coarse list selection, per-list
+//! scan plans on the shared executor, deterministic cross-list merge,
+//! and the (residual-aware) batched decode rerank.
+//!
+//! Determinism is the load-bearing property.  Stage 1 selects, per
+//! query, the top-`l` candidates under the total order
+//! `(ADC score, original id)`:
+//!
+//! * each `(query, probed list)` pair is one executor *slot*, its list
+//!   range sharded into [`crate::exec::ScanTask`]s merged in ascending
+//!   row order — within a list, stored rows ascend in original id, so
+//!   per-list ties keep the smallest id exactly like the flat scan;
+//! * per-list winners are remapped to original ids and reduced with one
+//!   sort by `(score, id)` — the same total order the flat scan's
+//!   strict-less heap + ascending push order implements.
+//!
+//! Hence `nprobe = num_lists` with non-residual codes returns results
+//! bit-identical to [`crate::index::SearchEngine::search_batch`]: every
+//! code contributes the same f32 score through the same LUT, and the
+//! selection order is identical.  The property tests below pin this over
+//! the `(num_threads, shard_rows)` grid.
+
+use crate::config::SearchConfig;
+use crate::exec::{shard_ranges_in, Executor, ScanTask};
+use crate::linalg::{sq_l2, TopK};
+use crate::quant::{Lut, Quantizer};
+
+use super::IvfIndex;
+
+/// One stage-1 candidate: `(ADC score, original id, stored row, list)`.
+type Candidate = (f32, u32, u32, u32);
+
+impl IvfIndex {
+    /// Single-query convenience: a batch of one on the inline executor
+    /// (mirrors `SearchEngine::search`).
+    pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
+                  cfg: &SearchConfig) -> Vec<u32> {
+        self.search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)
+            .pop()
+            .expect("one query in, one result out")
+    }
+
+    /// Batched two-stage `nprobe` search with per-query `k`.
+    ///
+    /// `cfg.nprobe == 0` (or ≥ `num_lists`) probes every list — the
+    /// flat-equivalent degenerate case.  `cfg.exhaustive_rerank` is a
+    /// flat-index diagnostic and is treated as the normal two-stage path
+    /// here (reranking rows outside the probed lists would defeat the
+    /// point of probing).
+    pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
+                           queries: &[&[f32]], ks: &[usize],
+                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+        assert_eq!(queries.len(), ks.len(), "one k per query");
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let nl = self.num_lists();
+        let nprobe = if cfg.nprobe == 0 { nl } else { cfg.nprobe.min(nl) };
+        let do_rerank = !cfg.no_rerank && quant.supports_rerank();
+        // stage-1 candidate count per query (≥ 1 keeps TopK happy even
+        // for degenerate configs)
+        let ls: Vec<usize> = ks
+            .iter()
+            .map(|&k| {
+                let l = if do_rerank { cfg.rerank_l.max(k) } else { k };
+                l.max(1)
+            })
+            .collect();
+
+        // coarse selection
+        let probes: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|q| self.coarse.nearest_lists(q, nprobe))
+            .collect();
+
+        // one slot per non-empty (query, probed list); LUTs are shared
+        // per query (non-residual) or built per slot from the residual
+        // query `q − centroid(list)` in one lut_batch call
+        let mut slot_query: Vec<usize> = Vec::new();
+        let mut slot_list: Vec<usize> = Vec::new();
+        let mut slot_ks: Vec<usize> = Vec::new();
+        let mut slot_lut: Vec<usize> = Vec::new();
+        let mut residual_qs: Vec<Vec<f32>> = Vec::new();
+        for (qi, probe) in probes.iter().enumerate() {
+            for &l in probe {
+                let l = l as usize;
+                if self.list_len(l) == 0 {
+                    continue;
+                }
+                slot_lut.push(if self.residual {
+                    let c = self.coarse.centroid(l);
+                    residual_qs.push(
+                        queries[qi].iter().zip(c).map(|(a, b)| a - b).collect());
+                    residual_qs.len() - 1
+                } else {
+                    qi
+                });
+                slot_query.push(qi);
+                slot_list.push(l);
+                slot_ks.push(ls[qi]);
+            }
+        }
+        let luts: Vec<Lut> = if self.residual {
+            let refs: Vec<&[f32]> =
+                residual_qs.iter().map(|v| v.as_slice()).collect();
+            quant.lut_batch(&refs)
+        } else {
+            quant.lut_batch(queries)
+        };
+
+        // shard each slot's list range; shard size derives from the whole
+        // index so long lists split across workers and short ones don't
+        let es = exec.effective_shard_rows(self.codes.n.max(1),
+                                           cfg.shard_rows);
+        let mut tasks: Vec<ScanTask> = Vec::new();
+        for (slot, &l) in slot_list.iter().enumerate() {
+            for (lo, hi) in
+                shard_ranges_in(self.offsets[l], self.offsets[l + 1], es)
+            {
+                tasks.push(ScanTask { slot, lut: slot_lut[slot], lo, hi });
+            }
+        }
+        let parts = exec.run_scan_tasks(&luts, &self.codes, &slot_ks, &tasks);
+
+        // cross-list reduce per query under the (score, original id)
+        // total order
+        let mut cands: Vec<Vec<Candidate>> =
+            (0..queries.len()).map(|_| Vec::new()).collect();
+        for (slot, part) in parts.into_iter().enumerate() {
+            let (qi, l) = (slot_query[slot], slot_list[slot] as u32);
+            for (score, row) in part {
+                cands[qi].push((score, self.remap[row as usize], row, l));
+            }
+        }
+        for (qi, c) in cands.iter_mut().enumerate() {
+            c.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).expect("ADC scores are not NaN")
+                    .then(a.1.cmp(&b.1))
+            });
+            c.truncate(ls[qi]);
+        }
+
+        if !do_rerank {
+            return cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect();
+        }
+        self.rerank_batch(quant, queries, &cands, ks)
+    }
+
+    /// Stage 2: gather every query's candidate codes into one contiguous
+    /// buffer, decode with a **single** `reconstruct_batch` call, add the
+    /// list centroid back when codes are residual, and rank by exact
+    /// `d1(q, i) = ‖q − x̂_i‖²`.  Mirrors `exec::plan::rerank_batch`
+    /// (identical ordering for non-residual codes); quantizers without a
+    /// decoder keep scan order.
+    fn rerank_batch(&self, quant: &dyn Quantizer, queries: &[&[f32]],
+                    cands: &[Vec<Candidate>], ks: &[usize]) -> Vec<Vec<u32>> {
+        let dim = quant.dim();
+        let cb = self.codes.stride;
+        let total: usize = cands.iter().map(|c| c.len()).sum();
+        let mut codes = Vec::with_capacity(total * cb);
+        for c in cands {
+            for &(_, _, row, _) in c {
+                codes.extend_from_slice(self.codes.code(row as usize));
+            }
+        }
+        let mut recons = vec![0.0f32; total * dim];
+        if !quant.reconstruct_batch(&codes, &mut recons) {
+            // no decoder: keep scan order
+            return cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect();
+        }
+        let mut out = Vec::with_capacity(queries.len());
+        let mut off = 0usize;
+        for ((&q, c), &k) in queries.iter().zip(cands).zip(ks) {
+            if c.is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            let mut top = TopK::new(k.min(c.len()));
+            for (ci, &(_, id, _, l)) in c.iter().enumerate() {
+                let rec = &recons[(off + ci) * dim..(off + ci + 1) * dim];
+                let d = if self.residual {
+                    d1_residual(q, rec, self.coarse.centroid(l as usize))
+                } else {
+                    sq_l2(q, rec)
+                };
+                top.push(d, id);
+            }
+            off += c.len();
+            out.push(top.into_sorted().into_iter().map(|(_, id)| id).collect());
+        }
+        out
+    }
+}
+
+/// `‖q − (centroid + recon)‖²` without materializing the sum.
+#[inline]
+fn d1_residual(q: &[f32], recon: &[f32], centroid: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for ((&qv, &rv), &cv) in q.iter().zip(recon).zip(centroid) {
+        let d = qv - (rv + cv);
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchConfig;
+    use crate::data::{synthetic::Generator, Dataset, Family};
+    use crate::index::{CompressedIndex, SearchEngine};
+    use crate::ivf::CoarseQuantizer;
+    use crate::quant::pq::Pq;
+    use crate::util::{prop, rng::SplitMix64};
+
+    fn setup(n_base: usize) -> (Dataset, Dataset, Pq) {
+        let gen = Generator::new(Family::SiftLike, 55);
+        let train = gen.generate(0, 1200);
+        let base = gen.generate(1, n_base);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 8);
+        (train, base, pq)
+    }
+
+    fn qrefs(d: &Dataset) -> Vec<&[f32]> {
+        (0..d.len()).map(|qi| d.row(qi)).collect()
+    }
+
+    #[test]
+    fn partition_layout_invariants() {
+        let (train, base, pq) = setup(3000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 16, 1, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        assert_eq!(ivf.n(), 3000);
+        assert_eq!(ivf.offsets.len(), 17);
+        assert_eq!(*ivf.offsets.last().unwrap(), 3000);
+        // remap is a permutation of 0..n, ascending within each list
+        let mut seen = vec![false; 3000];
+        for l in 0..16 {
+            let rows = &ivf.remap[ivf.offsets[l]..ivf.offsets[l + 1]];
+            for w in rows.windows(2) {
+                assert!(w[0] < w[1], "ids ascend within list {l}");
+            }
+            for &id in rows {
+                assert!(!seen[id as usize], "id {id} appears twice");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every id stored exactly once");
+        // stored codes match per-row flat encoding (non-residual)
+        let flat = CompressedIndex::build(&pq, &base);
+        for row in 0..ivf.n() {
+            let id = ivf.remap[row] as usize;
+            assert_eq!(ivf.codes.code(row), flat.code(id), "row {row}");
+        }
+    }
+
+    #[test]
+    fn prop_nprobe_all_non_residual_is_bit_identical_to_flat() {
+        // THE acceptance property: IvfIndex with nprobe = num_lists and
+        // non-residual codes returns exactly SearchEngine::search_batch
+        // for every (num_threads, shard_rows) grid point, rerank included
+        let (train, base, pq) = setup(2500);
+        let flat = CompressedIndex::build(&pq, &base);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 12, 2, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 8);
+        let qs = qrefs(&queries);
+        prop::forall_ok(
+            777,
+            10,
+            |r: &mut SplitMix64| {
+                let threads = 1 + r.below(4);
+                let shard_rows = [0usize, 1, 37, 128, 1000][r.below(5)];
+                let no_rerank = r.below(2) == 0;
+                (threads, shard_rows, no_rerank)
+            },
+            |&(threads, shard_rows, no_rerank)| {
+                let cfg = SearchConfig {
+                    rerank_l: 60, k: 10, no_rerank, num_threads: threads,
+                    shard_rows, nprobe: ivf.num_lists(),
+                    ..Default::default()
+                };
+                let exec = Executor::new(threads);
+                let want = SearchEngine::new(&pq, &flat, cfg)
+                    .search_batch_on(&exec, &qs);
+                let ks = vec![cfg.k; qs.len()];
+                let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "threads={threads} shard_rows={shard_rows} \
+                         no_rerank={no_rerank} diverged from flat"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn nprobe_zero_means_all_lists() {
+        let (train, base, pq) = setup(1500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 3, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 4);
+        let qs = qrefs(&queries);
+        let mut cfg = SearchConfig { rerank_l: 40, k: 10,
+                                     ..Default::default() };
+        let ks = vec![10usize; qs.len()];
+        cfg.nprobe = 0;
+        let all = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        cfg.nprobe = ivf.num_lists();
+        let explicit =
+            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert_eq!(all, explicit);
+    }
+
+    #[test]
+    fn residual_encoding_recall_sane_and_roundtrips_through_lists() {
+        // residual IVF at nprobe = all must rank the true NN of an
+        // in-database query first: d1 through centroid + residual decode
+        // is a faithful reconstruction
+        let (train, base, pq_raw) = setup(2000);
+        let coarse =
+            CoarseQuantizer::train(&train.data, train.dim, 10, 4, 8);
+        // train the fine quantizer on residuals, as a residual deployment
+        // would
+        let mut res_train = train.data.clone();
+        for i in 0..train.len() {
+            let l = coarse.assign(train.row(i)) as usize;
+            let c = coarse.centroid(l);
+            for (v, cv) in res_train[i * train.dim..(i + 1) * train.dim]
+                .iter_mut()
+                .zip(c)
+            {
+                *v -= cv;
+            }
+        }
+        let pq_res = Pq::train(&res_train, train.dim, 8, 32, 0, 8);
+        let ivf = IvfIndex::build(&pq_res, &base, coarse.clone(), true);
+        let flat = CompressedIndex::build(&pq_raw, &base);
+        let cfg = SearchConfig { rerank_l: 100, k: 10, nprobe: 0,
+                                 ..Default::default() };
+        let mut hits_res = 0;
+        let mut hits_raw = 0;
+        for qi in 0..50 {
+            let q = base.row(qi);
+            let got = ivf.search(&pq_res, q, &cfg);
+            hits_res += (got.first() == Some(&(qi as u32))) as usize;
+            let raw = SearchEngine::new(&pq_raw, &flat, cfg).search(q);
+            hits_raw += (raw.first() == Some(&(qi as u32))) as usize;
+        }
+        // self-retrieval through the residual path must work in the same
+        // league as the raw flat quantizer (residuals are easier to
+        // code, so a collapse here means the centroid add-back is wrong)
+        assert!(hits_res + 5 >= hits_raw,
+                "residual {hits_res} vs raw {hits_raw}");
+        assert!(hits_res >= 25, "residual self-retrieval collapsed: \
+                                 {hits_res}/50");
+    }
+
+    #[test]
+    fn recall_grows_monotonically_with_nprobe() {
+        let (train, base, pq) = setup(4000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 16, 5, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let flat = CompressedIndex::build(&pq, &base);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 40);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let mut cfg = SearchConfig { rerank_l: 50, k: 10,
+                                     ..Default::default() };
+        let want = SearchEngine::new(&pq, &flat, cfg).search_batch(&qs);
+        let mut prev_overlap = 0usize;
+        for nprobe in [1usize, 4, 16] {
+            cfg.nprobe = nprobe;
+            let got =
+                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let overlap: usize = got
+                .iter()
+                .zip(&want)
+                .map(|(g, w)| g.iter().filter(|&id| w.contains(id)).count())
+                .sum();
+            // near-monotone: probing more lists can only widen the
+            // stage-1 candidate pool (small slack: rerank can reshuffle
+            // the tail)
+            assert!(overlap + 5 >= prev_overlap,
+                    "nprobe={nprobe}: overlap {overlap} < {prev_overlap}");
+            prev_overlap = overlap;
+        }
+        // probing everything recovers the flat result set exactly
+        assert_eq!(prev_overlap, 10 * qs.len());
+    }
+
+    #[test]
+    fn degenerate_empty_lists_are_skipped() {
+        // hand-built coarse codebook: centroid 3 is far from all data, so
+        // its list is empty; searches (including ones probing it) work
+        let (_, base, pq) = setup(800);
+        let dim = base.dim;
+        let mut cents = Vec::new();
+        for off in [0.0f32, 50.0, 100.0, 1.0e6] {
+            cents.extend((0..dim).map(|d| off + d as f32));
+        }
+        let coarse = CoarseQuantizer::from_centroids(dim, cents);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        assert!((0..4).any(|l| ivf.list_len(l) == 0),
+                "expected at least one empty list");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 3);
+        let qs = qrefs(&queries);
+        let cfg = SearchConfig { rerank_l: 30, k: 5, nprobe: 4,
+                                 ..Default::default() };
+        let got = ivf.search_batch_on(&pq, &Executor::new(2), &qs,
+                                      &[5, 5, 5], &cfg);
+        for r in &got {
+            assert_eq!(r.len(), 5);
+        }
+    }
+
+    #[test]
+    fn degenerate_fewer_rows_than_lists() {
+        let (train, base, pq) = setup(1000);
+        let tiny = base.prefix(7); // n = 7 < num_lists = 32
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 32, 6, 5);
+        let ivf = IvfIndex::build(&pq, &tiny, coarse, false);
+        assert_eq!(ivf.n(), 7);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 2);
+        let qs = qrefs(&queries);
+        for nprobe in [1usize, 5, 32] {
+            let cfg = SearchConfig { rerank_l: 10, k: 3, nprobe,
+                                     ..Default::default() };
+            let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
+                                          &[3, 3], &cfg);
+            for r in &got {
+                assert!(r.len() <= 3);
+                for &id in r {
+                    assert!((id as usize) < 7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_whole_batch_probes_one_list() {
+        // every query is (near-)identical → nprobe = 1 sends the whole
+        // batch into the same list; the per-slot plan must still fan out
+        // and merge correctly on a pool
+        let (train, base, pq) = setup(3000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 7, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let q0 = base.row(0).to_vec();
+        let qs: Vec<&[f32]> = (0..6).map(|_| q0.as_slice()).collect();
+        let cfg = SearchConfig { rerank_l: 40, k: 8, nprobe: 1,
+                                 num_threads: 3, shard_rows: 64,
+                                 ..Default::default() };
+        let pool = Executor::new(3);
+        let got = ivf.search_batch_on(&pq, &pool, &qs, &[8; 6], &cfg);
+        let want =
+            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &[8; 6], &cfg);
+        assert_eq!(got, want, "pool and inline must agree");
+        for r in &got[1..] {
+            assert_eq!(r, &got[0], "identical queries, identical results");
+        }
+    }
+
+    #[test]
+    fn degenerate_k_larger_than_n() {
+        let (train, base, pq) = setup(1000);
+        let tiny = base.prefix(12);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 4, 8, 5);
+        let ivf = IvfIndex::build(&pq, &tiny, coarse, false);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 2);
+        let qs = qrefs(&queries);
+        let cfg = SearchConfig { rerank_l: 500, k: 100, nprobe: 0,
+                                 ..Default::default() };
+        let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
+                                      &[100, 100], &cfg);
+        for r in &got {
+            assert_eq!(r.len(), 12, "k > n returns all rows");
+            let mut ids = r.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 12, "no duplicate ids");
+        }
+    }
+}

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context};
 
-use unq::config::{AppConfig, QuantizerKind};
+use unq::config::{AppConfig, IndexBackendKind, QuantizerKind};
 use unq::coordinator;
 use unq::data;
 use unq::eval::harness;
@@ -99,6 +99,24 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
         cfg.search.shard_rows = s;
         cfg.serve.shard_rows = s;
     }
+    if let Some(b) = f.get("backend") {
+        cfg.ivf.backend = IndexBackendKind::parse(b)
+            .with_context(|| format!("unknown backend {b:?}"))?;
+    }
+    if let Some(l) = f.get("lists") {
+        let l: usize = l.parse().context("--lists")?;
+        anyhow::ensure!(l > 0, "--lists must be positive");
+        cfg.ivf.num_lists = l;
+    }
+    if let Some(n) = f.get("nprobe") {
+        cfg.search.nprobe = n.parse().context("--nprobe")?;
+    }
+    if f.has("residual") {
+        cfg.ivf.residual = true;
+    }
+    if f.has("no-residual") {
+        cfg.ivf.residual = false;
+    }
     cfg.search.no_rerank = f.has("no-rerank");
     cfg.search.exhaustive_rerank = f.has("exhaustive");
     Ok(cfg)
@@ -111,6 +129,7 @@ fn run(args: &[String]) -> Result<()> {
         "gt" => cmd_gt(&f),
         "train" => cmd_train(&f),
         "eval" => cmd_eval(&f),
+        "ivf-sweep" => cmd_ivf_sweep(&f),
         "tables" => tables::cmd_tables(&f),
         "serve" => cmd_serve(&f),
         "artifacts" => cmd_artifacts(&f),
@@ -130,12 +149,17 @@ USAGE:
   unq gt        [--datasets a,b] [--r N]
   unq train     --quantizer Q --dataset D [--bytes B]
   unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
+  unq ivf-sweep --quantizer Q --dataset D [--nprobes 1,4,16] [--lists N]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
   unq serve     --dataset D [--quantizer Q] [--queries N]
   unq artifacts
 
 Execution:  [--threads N] [--shard-rows R] size the batch scan executor
             (also via UNQ_THREADS / UNQ_SHARD_ROWS; defaults: inline)
+Index:      [--backend flat|ivf] [--lists N] [--nprobe P] [--residual]
+            pick the index organization for eval/serve (env UNQ_BACKEND /
+            UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe 0 = all lists;
+            residual wants a residual-trained quantizer, DESIGN.md §5)
 Quantizers: pq opq rvq lsq lsq+rerank catalyst-lattice catalyst-opq unq
 Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see
             rust/DESIGN.md)
@@ -204,6 +228,23 @@ fn cmd_eval(f: &Flags) -> Result<()> {
     search.exhaustive_rerank = cfg.search.exhaustive_rerank;
     search.num_threads = cfg.search.num_threads;
     search.shard_rows = cfg.search.shard_rows;
+    search.nprobe = cfg.search.nprobe;
+    if cfg.ivf.backend == IndexBackendKind::Ivf {
+        let ivf = harness::build_or_load_ivf(
+            &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
+            variant)?;
+        let pt = exp.sweep_point(&ivf, search);
+        println!(
+            "[eval] {} on {} ({}B, n={}, ivf L={} nprobe={}{}): R@1 {:.1}  \
+             R@10 {:.1}  R@100 {:.1}  ({:.2} ms/query)",
+            exp.quant.name(), cfg.dataset, cfg.bytes_per_vector, ivf.n(),
+            ivf.num_lists(), pt.nprobe,
+            if ivf.residual { " res" } else { "" },
+            pt.recall.at1, pt.recall.at10, pt.recall.at100,
+            1e3 * pt.secs_per_query
+        );
+        return Ok(());
+    }
     let t0 = std::time::Instant::now();
     let rec = exp.run_recall(search);
     let secs = t0.elapsed().as_secs_f64();
@@ -214,6 +255,51 @@ fn cmd_eval(f: &Flags) -> Result<()> {
         rec.at1, rec.at10, rec.at100,
         1e3 * secs / exp.splits.query.len().max(1) as f64
     );
+    Ok(())
+}
+
+/// `unq ivf-sweep` — the recall@R-vs-nprobe trade-off table.
+fn cmd_ivf_sweep(f: &Flags) -> Result<()> {
+    let mut cfg = base_config(f)?;
+    cfg.ivf.backend = IndexBackendKind::Ivf;
+    let variant = f.get("variant").unwrap_or("");
+    let exp = harness::prepare(&cfg, variant)?;
+    let ivf = harness::build_or_load_ivf(
+        &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
+        variant)?;
+    let mut search = harness::paper_search_config(cfg.quantizer, &cfg.dataset,
+                                                  cfg.search.k);
+    search.no_rerank |= cfg.search.no_rerank;
+    search.exhaustive_rerank = cfg.search.exhaustive_rerank;
+    search.num_threads = cfg.search.num_threads;
+    search.shard_rows = cfg.search.shard_rows;
+    let nprobes: Vec<usize> = match f.get("nprobes") {
+        Some(list) => list
+            .split(',')
+            .map(|p| p.trim().parse().context("--nprobes"))
+            .collect::<Result<_>>()?,
+        None => {
+            let nl = ivf.num_lists();
+            let mut v: Vec<usize> = [1usize, 4, 16, nl]
+                .into_iter()
+                .filter(|&p| p <= nl)
+                .collect();
+            v.dedup();
+            v
+        }
+    };
+    println!(
+        "[ivf-sweep] {} on {} ({}B, n={}, L={}{})",
+        exp.quant.name(), cfg.dataset, cfg.bytes_per_vector, ivf.n(),
+        ivf.num_lists(), if ivf.residual { ", residual" } else { "" }
+    );
+    println!("{:>8} {:>8} {:>8} {:>8} {:>12}",
+             "nprobe", "R@1", "R@10", "R@100", "ms/query");
+    for pt in exp.run_ivf_nprobe_sweep(&ivf, search, &nprobes) {
+        println!("{:>8} {:>8.1} {:>8.1} {:>8.1} {:>12.3}",
+                 pt.nprobe, pt.recall.at1, pt.recall.at10, pt.recall.at100,
+                 1e3 * pt.secs_per_query);
+    }
     Ok(())
 }
 

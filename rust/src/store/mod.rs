@@ -17,6 +17,13 @@ use crate::Result;
 
 const MAGIC: &[u8; 8] = b"UNQSTOR1";
 
+/// The staging path `save` writes before renaming into place.
+fn tmp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
 #[derive(Clone, Debug)]
 struct Entry {
     dtype: String,
@@ -57,6 +64,7 @@ impl Entry {
 pub struct Store {
     f32s: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
     u8s: BTreeMap<String, (Vec<usize>, Vec<u8>)>,
+    u32s: BTreeMap<String, (Vec<usize>, Vec<u32>)>,
     metas: BTreeMap<String, String>,
 }
 
@@ -75,6 +83,12 @@ impl Store {
         self.u8s.insert(name.to_string(), (shape.to_vec(), data));
     }
 
+    /// u32 tensors (inverted-list id-remap tables, list offsets).
+    pub fn put_u32(&mut self, name: &str, shape: &[usize], data: Vec<u32>) {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.u32s.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
     /// Attach a small string metadata value (JSON-encode structured data).
     pub fn put_meta(&mut self, name: &str, value: &str) {
         self.metas.insert(name.to_string(), value.to_string());
@@ -86,6 +100,10 @@ impl Store {
 
     pub fn get_u8(&self, name: &str) -> Option<(&[usize], &[u8])> {
         self.u8s.get(name).map(|(s, d)| (s.as_slice(), d.as_slice()))
+    }
+
+    pub fn get_u32(&self, name: &str) -> Option<(&[usize], &[u32])> {
+        self.u32s.get(name).map(|(s, d)| (s.as_slice(), d.as_slice()))
     }
 
     pub fn get_meta(&self, name: &str) -> Option<&str> {
@@ -100,7 +118,14 @@ impl Store {
         self.u8s.remove(name)
     }
 
-    /// Serialize to disk.
+    pub fn take_u32(&mut self, name: &str) -> Option<(Vec<usize>, Vec<u32>)> {
+        self.u32s.remove(name)
+    }
+
+    /// Serialize to disk, atomically: the archive is written to a `.tmp`
+    /// sibling and `rename`d into place, so a crash mid-save can never
+    /// leave a torn file at `path` (the old archive, if any, survives
+    /// intact until the rename commits).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
@@ -121,6 +146,13 @@ impl Store {
             }.to_json()));
             offset += nbytes;
         }
+        for (name, (shape, data)) in &self.u32s {
+            let nbytes = (data.len() * 4) as u64;
+            header.push((name.clone(), Entry {
+                dtype: "u32".into(), shape: shape.clone(), offset, nbytes,
+            }.to_json()));
+            offset += nbytes;
+        }
         let header_json = Json::Obj(header).render().into_bytes();
         let meta_json = Json::Obj(
             self.metas.iter()
@@ -128,7 +160,9 @@ impl Store {
                 .collect(),
         ).render().into_bytes();
 
-        let file = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let tmp = tmp_sibling(path);
+        let file =
+            File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
         let mut w = BufWriter::new(file);
         w.write_all(MAGIC)?;
         w.write_all(&(header_json.len() as u64).to_le_bytes())?;
@@ -146,7 +180,21 @@ impl Store {
         for (_, (_, data)) in &self.u8s {
             w.write_all(data)?;
         }
+        for (_, (_, data)) in &self.u32s {
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&buf)?;
+        }
         w.flush()?;
+        // durability before the commit point: the rename must not land a
+        // file whose pages were never pushed to the OS
+        w.into_inner()
+            .map_err(|e| anyhow::anyhow!("flush {tmp:?}: {e}"))?
+            .sync_all()?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("commit {tmp:?} -> {path:?}"))?;
         Ok(())
     }
 
@@ -198,6 +246,13 @@ impl Store {
                 }
                 "u8" => {
                     store.u8s.insert(name.clone(), (e.shape, raw));
+                }
+                "u32" => {
+                    let data: Vec<u32> = raw
+                        .chunks_exact(4)
+                        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    store.u32s.insert(name.clone(), (e.shape, data));
                 }
                 other => bail!("unknown dtype {other} in {path:?}"),
             }
@@ -253,6 +308,49 @@ mod tests {
         assert_eq!(back.get_f32("a").unwrap().1, &[1.0]);
         assert_eq!(back.get_f32("z").unwrap().1, &[3.0]);
         assert_eq!(back.get_u8("m").unwrap().1, &[1, 2]);
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("u.store");
+        let mut s = Store::new();
+        s.put_u32("remap", &[2, 3], vec![0, 7, u32::MAX, 42, 1, 2]);
+        s.put_f32("c", &[1], vec![0.5]);
+        s.put_u8("b", &[1], vec![3]);
+        s.save(&p).unwrap();
+        let back = Store::load(&p).unwrap();
+        let (shape, data) = back.get_u32("remap").unwrap();
+        assert_eq!(shape, &[2, 3]);
+        assert_eq!(data, &[0, 7, u32::MAX, 42, 1, 2]);
+        assert!(back.get_u32("nope").is_none());
+        // mixed dtypes coexist with correct payload offsets
+        assert_eq!(back.get_f32("c").unwrap().1, &[0.5]);
+        assert_eq!(back.get_u8("b").unwrap().1, &[3]);
+        let mut owned = back;
+        assert_eq!(owned.take_u32("remap").unwrap().1[2], u32::MAX);
+        assert!(owned.get_u32("remap").is_none());
+    }
+
+    #[test]
+    fn save_is_atomic_no_tmp_left_and_overwrite_safe() {
+        let dir = TempDir::new("store").unwrap();
+        let p = dir.path().join("a.store");
+        let mut s = Store::new();
+        s.put_f32("x", &[1], vec![1.0]);
+        s.save(&p).unwrap();
+        // a stale .tmp from a simulated crashed save must not break a
+        // later save, and the commit must consume the staging file
+        std::fs::write(tmp_sibling(&p), b"torn partial write").unwrap();
+        let mut s2 = Store::new();
+        s2.put_f32("x", &[1], vec![2.0]);
+        s2.save(&p).unwrap();
+        assert!(!tmp_sibling(&p).exists(), "staging file must be renamed");
+        assert_eq!(Store::load(&p).unwrap().get_f32("x").unwrap().1, &[2.0]);
+        // and a crash *before* the rename leaves the old archive intact:
+        // a fresh torn .tmp alongside never affects loads of `p`
+        std::fs::write(tmp_sibling(&p), b"torn").unwrap();
+        assert_eq!(Store::load(&p).unwrap().get_f32("x").unwrap().1, &[2.0]);
     }
 
     #[test]
