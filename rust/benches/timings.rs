@@ -1,14 +1,20 @@
 //! Bench: the paper's §4.4 timing study (encode / LUT scan / rerank) plus
 //! Table 1's measured train/encode complexity, the serving-loop
 //! throughput of the coordinator, the batch executor's scan throughput
-//! at 1/2/4/8 threads (written to `BENCH_scan.json`), and the IVF
-//! nprobe throughput/recall sweep (written to `BENCH_ivf.json`).  Both
-//! trajectory files land at the *repository root* regardless of CWD so
-//! the numbers accumulate across PRs — see rust/DESIGN.md §2 and §5.
+//! at 1/2/4/8 threads, the scan-precision (f32/u16/u8) sweep (both
+//! written to `BENCH_scan.json`), and the IVF nprobe throughput/recall
+//! sweep (written to `BENCH_ivf.json`).  Trajectory files land at the
+//! *repository root* regardless of CWD so the numbers accumulate across
+//! PRs — see rust/DESIGN.md §2, §5 and §6.
 //!
 //! Run: `cargo bench --bench timings`
+//!
+//! `UNQ_BENCH_SMOKE=1` caps every sweep to tiny sizes and writes
+//! `BENCH_*.smoke.json` instead (never clobbering measured numbers) —
+//! the CI smoke job uses this to exercise the release-mode kernels and
+//! keep the committed JSON schemas from rotting.
 
-use unq::config::{AppConfig, QuantizerKind, SearchConfig};
+use unq::config::{AppConfig, QuantizerKind, ScanPrecision, SearchConfig};
 use unq::coordinator::demo::run_serve;
 use unq::data::{synthetic::Generator, Family};
 use unq::eval::tables::{table1_timings, table_timings};
@@ -20,17 +26,41 @@ use unq::util::bench::Bench;
 use unq::util::json::Json;
 use unq::util::rng::SplitMix64;
 
+/// Tiny-size mode for the CI schema/kernel smoke job.
+fn smoke() -> bool {
+    std::env::var("UNQ_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false)
+}
+
 /// Trajectory files accumulate at the repo root, not wherever the bench
 /// happens to run (the old CWD-relative path silently dropped them into
-/// `rust/` or `target/`).
+/// `rust/` or `target/`).  Smoke runs write a `.smoke.json` sibling so
+/// capped numbers never overwrite measured ones.
 fn repo_root_path(name: &str) -> std::path::PathBuf {
+    let name = if smoke() {
+        name.replace(".json", ".smoke.json")
+    } else {
+        name.to_string()
+    };
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+fn write_report(name: &str, report: &Json) {
+    let path = repo_root_path(name);
+    match std::fs::write(&path, report.render_pretty()) {
+        Ok(()) => println!("[timings] wrote {}", path.display()),
+        Err(e) => eprintln!("[timings] {} not written: {e}", path.display()),
+    }
 }
 
 /// Sharded batch-scan throughput sweep over worker counts; returns the
 /// per-thread-count results as JSON entries.
 fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
-    let (n, m, nq) = (200_000usize, 8usize, 8usize);
+    let (n, m, nq) = if smoke() {
+        (4_000usize, 8usize, 4usize)
+    } else {
+        (200_000, 8, 8)
+    };
     let mut rng = SplitMix64::new(71);
     let codes: Vec<u8> = (0..n * m).map(|_| rng.below(256) as u8).collect();
     let index = CompressedIndex::from_codes(n, m, codes);
@@ -44,8 +74,9 @@ fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
     let ks = vec![100usize; nq];
     let vectors_per_iter = (n * nq) as u64;
 
+    let threads_grid: &[usize] = if smoke() { &[1, 2] } else { &[1, 2, 4, 8] };
     let mut entries = Vec::new();
-    for threads in [1usize, 2, 4, 8] {
+    for &threads in threads_grid {
         let exec = Executor::new(threads);
         b.run(
             &format!("scan_batch {nq}q n={n} m={m} threads={threads}"),
@@ -67,17 +98,94 @@ fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
     entries
 }
 
-/// IVF nprobe sweep on the 100k synthetic set: scan-stage throughput and
+/// Scan-precision sweep: f32 vs u16 vs u8 kernels over the packed layout
+/// at the ISSUE grid n ∈ {100k, 1M} × m ∈ {8, 16}, recording throughput
+/// and recall@10 against the f32 scan (acceptance: u16 ≥ 2× f32 at
+/// n = 1M, m = 8, or the measured ratio documented in DESIGN.md §6).
+fn scan_precision_sweep(b: &mut Bench) -> Vec<Json> {
+    let sizes: &[(usize, usize)] = if smoke() {
+        &[(4_000, 8)]
+    } else {
+        &[(100_000, 8), (100_000, 16), (1_000_000, 8), (1_000_000, 16)]
+    };
+    let (nq, k, threads, shard_rows) = (8usize, 10usize, 4usize, 16_384usize);
+    let mut entries = Vec::new();
+    for &(n, m) in sizes {
+        let mut rng = SplitMix64::new(97);
+        let codes: Vec<u8> =
+            (0..n * m).map(|_| rng.below(256) as u8).collect();
+        let mut index = CompressedIndex::from_codes(n, m, codes);
+        index.ensure_packed();
+        let luts: Vec<Lut> = (0..nq)
+            .map(|_| {
+                let tables: Vec<f32> =
+                    (0..m * 256).map(|_| rng.next_f32()).collect();
+                Lut::Tables { m, k: 256, tables, bias: 0.0 }
+            })
+            .collect();
+        let ks = vec![k; nq];
+        let exec = Executor::new(threads);
+        let vectors_per_iter = (n * nq) as u64;
+        let f32_ref =
+            exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
+                                 ScanPrecision::F32);
+        let mut f32_secs = f64::NAN;
+        for &prec in ScanPrecision::all() {
+            b.run(
+                &format!("scan {nq}q n={n} m={m} prec={}", prec.name()),
+                vectors_per_iter,
+                || exec.scan_batch_prec(&luts, &index, &ks, shard_rows, prec),
+            );
+            let secs = b.results().last().expect("bench just ran").median();
+            if prec == ScanPrecision::F32 {
+                f32_secs = secs;
+            }
+            let got = exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
+                                           prec);
+            let overlap: usize = got
+                .iter()
+                .zip(&f32_ref)
+                .map(|(g, w)| {
+                    g.iter()
+                        .filter(|p| w.iter().any(|q| q.1 == p.1))
+                        .count()
+                })
+                .sum();
+            let recall10 = 100.0 * overlap as f64 / (k * nq) as f64;
+            entries.push(Json::obj(vec![
+                ("precision", Json::Str(prec.name().to_string())),
+                ("rows", Json::Num(n as f64)),
+                ("code_bytes", Json::Num(m as f64)),
+                ("queries", Json::Num(nq as f64)),
+                ("k", Json::Num(k as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("shard_rows", Json::Num(shard_rows as f64)),
+                ("secs_per_batch", Json::Num(secs)),
+                ("vectors_per_sec",
+                 Json::Num(vectors_per_iter as f64 / secs)),
+                ("speedup_vs_f32", Json::Num(f32_secs / secs)),
+                ("recall10_vs_f32_pct", Json::Num(recall10)),
+            ]));
+        }
+    }
+    entries
+}
+
+/// IVF nprobe sweep on the synthetic set: scan-stage throughput and
 /// recall@10 against the flat exhaustive engine at nprobe ∈ {1, 4, 16,
 /// all} — the sub-linear trade-off record (acceptance: ≥ 4× throughput
 /// at nprobe ≤ num_lists / 8).
 fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
-    let (n, num_lists, nq) = (100_000usize, 64usize, 64usize);
+    let (n, num_lists, nq, n_train, kw) = if smoke() {
+        (8_000usize, 16usize, 16usize, 4_000usize, 64usize)
+    } else {
+        (100_000, 64, 64, 20_000, 256)
+    };
     let gen = Generator::new(Family::SiftLike, 203);
-    let train = gen.generate(0, 20_000);
+    let train = gen.generate(0, n_train);
     let base = gen.generate(1, n);
     let queries = gen.generate(2, nq);
-    let pq = Pq::train(&train.data, train.dim, 8, 256, 0, 10);
+    let pq = Pq::train(&train.data, train.dim, 8, kw, 0, 10);
     let coarse = CoarseQuantizer::train(&train.data, train.dim,
                                         num_lists, 0, 10);
     let ivf = IvfIndex::build(&pq, &base, coarse, false);
@@ -100,7 +208,10 @@ fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
         SearchEngine::new(&pq, &flat, cfg).search_batch_on(&exec, &qs);
 
     let mut entries = Vec::new();
-    for nprobe in [1usize, 4, 16, num_lists] {
+    let mut nprobes = vec![1usize, 4, 16, num_lists];
+    nprobes.retain(|&p| p <= num_lists);
+    nprobes.dedup();
+    for nprobe in nprobes {
         cfg.nprobe = nprobe;
         b.run(
             &format!("ivf scan {nq}q n={n} L={num_lists} nprobe={nprobe}"),
@@ -137,41 +248,41 @@ fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
 fn main() {
     let cfg = AppConfig::default().apply_env();
     let mut b = Bench::e2e();
-    b.run("table1 complexity measurements", 1, || {
-        if let Err(e) = table1_timings(&cfg) {
-            eprintln!("table1 skipped: {e:#}");
-        }
-    });
-    b.run("§4.4 timings", 1, || {
-        if let Err(e) = table_timings(&cfg) {
-            eprintln!("timings skipped: {e:#}");
-        }
-    });
-
-    // Batch executor scan throughput at 1/2/4/8 threads.
-    let entries = scan_thread_sweep(&mut b);
-    let report = Json::obj(vec![
-        ("bench", Json::Str("scan_batch_thread_sweep".into())),
-        ("results", Json::Arr(entries)),
-    ]);
-    let scan_path = repo_root_path("BENCH_scan.json");
-    match std::fs::write(&scan_path, report.render_pretty()) {
-        Ok(()) => println!("[timings] wrote {}", scan_path.display()),
-        Err(e) => eprintln!("[timings] {} not written: {e}",
-                            scan_path.display()),
+    if !smoke() {
+        b.run("table1 complexity measurements", 1, || {
+            if let Err(e) = table1_timings(&cfg) {
+                eprintln!("table1 skipped: {e:#}");
+            }
+        });
+        b.run("§4.4 timings", 1, || {
+            if let Err(e) = table_timings(&cfg) {
+                eprintln!("timings skipped: {e:#}");
+            }
+        });
     }
 
-    // IVF nprobe throughput/recall sweep on the 100k synthetic set.
+    // Batch executor scan throughput at 1/2/4/8 threads, plus the
+    // scan-precision (f32/u16/u8) sweep — one BENCH_scan.json suite.
+    let thread_entries = scan_thread_sweep(&mut b);
+    let precision_entries = scan_precision_sweep(&mut b);
+    let report = Json::obj(vec![
+        ("bench", Json::Str("scan_suite".into())),
+        ("thread_sweep", Json::Arr(thread_entries)),
+        ("precision_sweep", Json::Arr(precision_entries)),
+    ]);
+    write_report("BENCH_scan.json", &report);
+
+    // IVF nprobe throughput/recall sweep on the synthetic set.
     let entries = ivf_nprobe_sweep(&mut b);
     let report = Json::obj(vec![
         ("bench", Json::Str("ivf_nprobe_sweep".into())),
         ("results", Json::Arr(entries)),
     ]);
-    let ivf_path = repo_root_path("BENCH_ivf.json");
-    match std::fs::write(&ivf_path, report.render_pretty()) {
-        Ok(()) => println!("[timings] wrote {}", ivf_path.display()),
-        Err(e) => eprintln!("[timings] {} not written: {e}",
-                            ivf_path.display()),
+    write_report("BENCH_ivf.json", &report);
+
+    if smoke() {
+        println!("[timings] smoke mode: coordinator serving loop skipped");
+        return;
     }
 
     // Coordinator serving loop (UNQ if artifacts exist, else PQ fallback),

@@ -62,6 +62,52 @@ impl QuantizerKind {
     }
 }
 
+/// Arithmetic of the ADC scan stage (rust/DESIGN.md §6).
+///
+/// `F32` is the exact reference kernel (the paper's setup).  `U16`/`U8`
+/// quantize each per-query LUT to integer entries, select candidates
+/// with a blocked integer kernel over the packed code layout, and
+/// exactly re-score the survivors in f32 — returned rankings match the
+/// f32 kernel whenever score margins exceed the quantization step, at a
+/// multiple of its scan throughput.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScanPrecision {
+    /// Exact f32 table gathers (the default: the unchanged scan
+    /// kernel; results are `(num_threads, shard_rows)`-invariant, with
+    /// exact score ties anywhere in the engine resolving to the
+    /// smallest id — see `linalg::TopK`).
+    #[default]
+    F32,
+    /// 16-bit LUT entries, u32 accumulation: near-lossless selection.
+    U16,
+    /// 8-bit LUT entries: coarsest, fastest; boundary swaps are bounded
+    /// by `stride · step / 2` in score units.
+    U8,
+}
+
+impl ScanPrecision {
+    pub fn all() -> &'static [ScanPrecision] {
+        &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScanPrecision::F32 => "f32",
+            ScanPrecision::U16 => "u16",
+            ScanPrecision::U8 => "u8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float" | "exact" => Some(ScanPrecision::F32),
+            "u16" | "uint16" | "16" => Some(ScanPrecision::U16),
+            "u8" | "uint8" | "8" => Some(ScanPrecision::U8),
+            _ => None,
+        }
+    }
+}
+
 /// Search-time parameters (paper §3.3/§4: two-stage search).
 #[derive(Clone, Copy, Debug)]
 pub struct SearchConfig {
@@ -84,13 +130,18 @@ pub struct SearchConfig {
     /// lists (the flat-equivalent degenerate case).  Ignored by the flat
     /// backend.
     pub nprobe: usize,
+    /// ADC scan kernel arithmetic: exact f32 (default) or blocked
+    /// integer fast-scan at u16/u8 LUT entries with exact rescoring
+    /// (rust/DESIGN.md §6; env `UNQ_SCAN_PRECISION`, CLI `--precision`).
+    pub scan_precision: ScanPrecision,
 }
 
 impl Default for SearchConfig {
     fn default() -> Self {
         SearchConfig { rerank_l: 500, k: 100, no_rerank: false,
                        exhaustive_rerank: false, num_threads: 1,
-                       shard_rows: 0, nprobe: 0 }
+                       shard_rows: 0, nprobe: 0,
+                       scan_precision: ScanPrecision::F32 }
     }
 }
 
@@ -222,6 +273,8 @@ impl AppConfig {
                 ("num_threads", Json::Num(self.search.num_threads as f64)),
                 ("shard_rows", Json::Num(self.search.shard_rows as f64)),
                 ("nprobe", Json::Num(self.search.nprobe as f64)),
+                ("scan_precision",
+                 Json::Str(self.search.scan_precision.name().to_string())),
             ])),
             ("ivf", Json::obj(vec![
                 ("backend", Json::Str(self.ivf.backend.name().to_string())),
@@ -278,6 +331,10 @@ impl AppConfig {
             }
             if let Some(v) = s.get("nprobe").and_then(Json::as_usize) {
                 cfg.search.nprobe = v;
+            }
+            if let Some(v) = s.get("scan_precision").and_then(Json::as_str) {
+                cfg.search.scan_precision = ScanPrecision::parse(v)
+                    .with_context(|| format!("unknown scan precision {v:?}"))?;
             }
         }
         if let Some(s) = j.get("ivf") {
@@ -365,6 +422,11 @@ impl AppConfig {
         if let Ok(s) = std::env::var("UNQ_NPROBE") {
             if let Ok(v) = s.parse::<usize>() {
                 self.search.nprobe = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_SCAN_PRECISION") {
+            if let Some(p) = ScanPrecision::parse(&s) {
+                self.search.scan_precision = p;
             }
         }
         if let Ok(s) = std::env::var("UNQ_LISTS") {
@@ -493,6 +555,37 @@ mod tests {
                    Some(IndexBackendKind::Flat));
         assert_eq!(IndexBackendKind::parse("hnsw"), None);
         assert_eq!(IndexBackendKind::Ivf.name(), "ivf");
+    }
+
+    #[test]
+    fn scan_precision_roundtrip_defaults_and_rejects() {
+        let c = AppConfig::default();
+        assert_eq!(c.search.scan_precision, ScanPrecision::F32,
+                   "f32 must stay the unchanged default");
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("prec.json");
+        let mut c = AppConfig::default();
+        c.search.scan_precision = ScanPrecision::U16;
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.search.scan_precision, ScanPrecision::U16);
+        let j = Json::parse(r#"{"search": {"scan_precision": "u8"}}"#).unwrap();
+        assert_eq!(AppConfig::from_json(&j).unwrap().search.scan_precision,
+                   ScanPrecision::U8);
+        let j = Json::parse(r#"{"search": {"scan_precision": "f64"}}"#)
+            .unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn scan_precision_parse_aliases() {
+        assert_eq!(ScanPrecision::parse("F32"), Some(ScanPrecision::F32));
+        assert_eq!(ScanPrecision::parse("exact"), Some(ScanPrecision::F32));
+        assert_eq!(ScanPrecision::parse("uint16"), Some(ScanPrecision::U16));
+        assert_eq!(ScanPrecision::parse("8"), Some(ScanPrecision::U8));
+        assert_eq!(ScanPrecision::parse("i4"), None);
+        assert_eq!(ScanPrecision::U16.name(), "u16");
+        assert_eq!(ScanPrecision::all().len(), 3);
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub fn run_serve(cfg: &AppConfig, total_queries: usize) -> Result<ServeReport> {
     let mut search =
         harness::paper_search_config(cfg.quantizer, &cfg.dataset, 100);
     search.nprobe = cfg.search.nprobe;
+    search.scan_precision = cfg.search.scan_precision;
 
     // Move the heavy pieces into Arcs for the server, building the
     // configured index backend (flat exhaustive scan, or IVF with the

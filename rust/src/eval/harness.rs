@@ -12,7 +12,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context};
 
-use crate::config::{AppConfig, QuantizerKind, SearchConfig};
+use crate::config::{AppConfig, QuantizerKind, ScanPrecision, SearchConfig};
 use crate::data::{self, Dataset};
 use crate::exec::Executor;
 use crate::gt::GroundTruth;
@@ -102,6 +102,48 @@ impl Experiment {
             .collect()
     }
 
+    /// One measured point of the scan-precision trade-off: run the full
+    /// query set at `search.scan_precision` and report recall + per-query
+    /// latency.
+    pub fn precision_point(&self, search: SearchConfig) -> PrecisionPoint {
+        let queries: Vec<&[f32]> = (0..self.splits.query.len())
+            .map(|qi| self.splits.query.row(qi))
+            .collect();
+        let engine =
+            SearchEngine::new(self.quant.as_ref(), &self.index, search);
+        let exec = Executor::new(search.num_threads);
+        let t0 = Instant::now();
+        let mut results = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(EVAL_BATCH) {
+            results.extend(engine.search_batch_on(&exec, chunk));
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        PrecisionPoint {
+            precision: search.scan_precision,
+            recall: recall(&results, &self.gt),
+            secs_per_query: secs / queries.len().max(1) as f64,
+        }
+    }
+
+    /// The throughput × recall sweep over scan precisions (`unq
+    /// precision-sweep`, and the bench record in `BENCH_scan.json`).
+    /// Packs the index once when any integer precision is requested.
+    pub fn run_precision_sweep(&mut self, search: SearchConfig,
+                               precisions: &[ScanPrecision])
+                               -> Vec<PrecisionPoint> {
+        if precisions.iter().any(|&p| p != ScanPrecision::F32) {
+            self.index.ensure_packed();
+        }
+        precisions
+            .iter()
+            .map(|&p| {
+                let mut s = search;
+                s.scan_precision = p;
+                self.precision_point(s)
+            })
+            .collect()
+    }
+
     /// Per-query mean latency of the two-stage batch search, in seconds.
     pub fn measure_latency(&self, search: SearchConfig, queries: usize) -> f64 {
         let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
@@ -121,6 +163,14 @@ impl Experiment {
 #[derive(Clone, Copy, Debug)]
 pub struct NprobePoint {
     pub nprobe: usize,
+    pub recall: Recall,
+    pub secs_per_query: f64,
+}
+
+/// One measured point of the recall-vs-scan-precision curve.
+#[derive(Clone, Copy, Debug)]
+pub struct PrecisionPoint {
+    pub precision: ScanPrecision,
     pub recall: Recall,
     pub secs_per_query: f64,
 }
@@ -173,19 +223,26 @@ pub fn build_or_load_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
                          -> Result<IvfIndex> {
     std::fs::create_dir_all(&cfg.runs_dir)?;
     let path = ivf_cache_path(cfg, cfg.quantizer, base.len(), variant);
-    if path.exists() {
-        return IvfIndex::load(&Store::load(&path)?);
+    let mut ivf = if path.exists() {
+        IvfIndex::load(&Store::load(&path)?)?
+    } else {
+        let t0 = Instant::now();
+        eprintln!("[harness] building IVF (L={} residual={}) over {} vectors",
+                  cfg.ivf.num_lists, cfg.ivf.residual, base.len());
+        let coarse = CoarseQuantizer::train(&train.data, train.dim,
+                                            cfg.ivf.num_lists, 0, 15);
+        let ivf = IvfIndex::build(quant, base, coarse, cfg.ivf.residual);
+        eprintln!("[harness] built IVF in {:.1}s", t0.elapsed().as_secs_f64());
+        let mut store = Store::new();
+        ivf.save(&mut store);
+        store.save(&path)?;
+        ivf
+    };
+    // the integer scan precisions read the blocked mirror; build it once
+    // here rather than per search
+    if cfg.search.scan_precision != ScanPrecision::F32 {
+        ivf.ensure_packed();
     }
-    let t0 = Instant::now();
-    eprintln!("[harness] building IVF (L={} residual={}) over {} vectors",
-              cfg.ivf.num_lists, cfg.ivf.residual, base.len());
-    let coarse = CoarseQuantizer::train(&train.data, train.dim,
-                                        cfg.ivf.num_lists, 0, 15);
-    let ivf = IvfIndex::build(quant, base, coarse, cfg.ivf.residual);
-    eprintln!("[harness] built IVF in {:.1}s", t0.elapsed().as_secs_f64());
-    let mut store = Store::new();
-    ivf.save(&mut store);
-    store.save(&path)?;
     Ok(ivf)
 }
 
@@ -316,7 +373,7 @@ pub fn prepare(cfg: &AppConfig, variant: &str) -> Result<Experiment> {
 
     // encode the base set (cached)
     let codes_path = codes_cache_path(cfg, cfg.quantizer, splits.base.len(), variant);
-    let (index, encode_secs) = if codes_path.exists() {
+    let (mut index, encode_secs) = if codes_path.exists() {
         let store = Store::load(&codes_path)?;
         let (shape, codes) = store.get_u8("codes").context("codes blob")?;
         (CompressedIndex::from_codes(shape[0], shape[1], codes.to_vec()), 0.0)
@@ -331,6 +388,16 @@ pub fn prepare(cfg: &AppConfig, variant: &str) -> Result<Experiment> {
         store.save(&codes_path)?;
         (index, secs)
     };
+    // integer scan precisions read the blocked mirror; build it up front
+    // so serving/eval paths never pay the on-the-fly transpose.  Only
+    // for the flat backend — the IVF path packs its own per-list code
+    // matrix in build_or_load_ivf, and mirroring the flat codes too
+    // would hold ~n × stride dead bytes.
+    if cfg.search.scan_precision != ScanPrecision::F32
+        && cfg.ivf.backend == crate::config::IndexBackendKind::Flat
+    {
+        index.ensure_packed();
+    }
 
     Ok(Experiment {
         cfg: cfg.clone(), splits, gt, runtime, quant, index,
@@ -426,6 +493,30 @@ mod tests {
                                       "").unwrap();
         assert_eq!(again.remap, ivf.remap);
         assert_eq!(again.codes.codes, ivf.codes.codes);
+    }
+
+    #[test]
+    fn precision_sweep_recall_tracks_f32_and_packs_once() {
+        let dir = TempDir::new("harness").unwrap();
+        let mut cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
+        cfg.search.scan_precision = ScanPrecision::U16;
+        let mut exp = prepare(&cfg, "").unwrap();
+        assert!(exp.index.is_packed(),
+                "prepare must pack for integer precisions");
+        let search = SearchConfig { rerank_l: 100, k: 100,
+                                    ..Default::default() };
+        let pts = exp.run_precision_sweep(
+            search, &[ScanPrecision::F32, ScanPrecision::U16,
+                      ScanPrecision::U8]);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].precision, ScanPrecision::F32);
+        // with rerank on, integer selection feeds the same exact d1
+        // rerank — recall must stay in the same league as f32
+        for pt in &pts[1..] {
+            assert!(pt.recall.at100 + 10.0 >= pts[0].recall.at100,
+                    "{:?} recall collapsed: {} vs f32 {}",
+                    pt.precision, pt.recall.at100, pts[0].recall.at100);
+        }
     }
 
     #[test]

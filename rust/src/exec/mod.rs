@@ -13,11 +13,20 @@
 //!   ([`crate::ivf`]) plans per-(query, probed-list) tasks through the
 //!   same executor so mixed-list batches fill the pool.
 //!
-//! The execution contract is strict determinism: for any
-//! `(num_threads, shard_rows)` the results are bit-identical to the
-//! single-threaded, single-shard scan — parallelism changes wall-clock,
-//! never answers.  `rust/DESIGN.md` §2 records the scan-path performance
-//! notes behind the sharding defaults.
+//! The execution contract is strict determinism: at the default
+//! `ScanPrecision::F32`, for any `(num_threads, shard_rows)` the results
+//! are bit-identical to the single-threaded, single-shard scan —
+//! parallelism changes wall-clock, never answers.  The integer scan
+//! precisions (`U16`/`U8`, selected per plan via
+//! `Executor::scan_batch_prec` / `run_scan_tasks_prec`) are
+//! deterministic **per shard decomposition**: results are identical
+//! across executors for a fixed `shard_rows`, but per-shard integer
+//! selection can swap candidates inside the LUT quantization margin
+//! when the decomposition itself changes — which includes the `0 = auto`
+//! setting, whose shard size derives from the pool size.  Pin an
+//! explicit `shard_rows` when integer-precision results must reproduce
+//! across different pool sizes (`rust/DESIGN.md` §6).  §2 records the
+//! scan-path performance notes behind the sharding defaults.
 
 pub mod plan;
 pub mod pool;

@@ -10,21 +10,36 @@
 //! fills the worker pool.  Per slot, partial results are reduced with
 //! [`merge_topk`] **in task-submission order**, which for the flat plan
 //! means ascending shard order — bit-identical to a sequential
-//! full-index scan regardless of thread count or shard size (ties are
-//! broken by the strict-less heap test plus ascending-id push order —
-//! see `index::scan`).  The rerank stage gathers the candidate codes of
+//! full-index scan regardless of thread count or shard size (the
+//! bounded heap orders candidates lexicographically on `(score, id)`,
+//! so ties are decomposition-invariant — see `linalg::TopK`).  The
+//! rerank stage gathers the candidate codes of
 //! the *whole* query batch into one contiguous buffer and decodes them
 //! with a single `reconstruct_batch` call, so UNQ's AOT decoder runs
 //! once per batch instead of once per query.
 
 use std::sync::mpsc;
 
-use crate::index::scan::{merge_topk, scan_range_topk};
+use crate::config::ScanPrecision;
+use crate::index::scan::{merge_topk, scan_range_topk_prec};
 use crate::index::CompressedIndex;
 use crate::linalg::{sq_l2, TopK};
-use crate::quant::{Lut, Quantizer};
+use crate::quant::{Lut, Quantizer, QuantizedLut};
 
 use super::pool::WorkerPool;
+
+/// Quantize the batch's LUTs once per plan (not per task): `None` marks
+/// a LUT that scans through the exact f32 kernel — every LUT at
+/// `ScanPrecision::F32`, and direct-scored (lattice) LUTs at any
+/// precision, which have no table decomposition to quantize.
+fn quantize_luts(luts: &[Lut], precision: ScanPrecision)
+                 -> Vec<Option<QuantizedLut>> {
+    match precision {
+        ScanPrecision::F32 => vec![None; luts.len()],
+        ScanPrecision::U16 => luts.iter().map(QuantizedLut::u16_from).collect(),
+        ScanPrecision::U8 => luts.iter().map(QuantizedLut::u8_from).collect(),
+    }
+}
 
 /// Where a plan's tasks run.
 pub enum Executor {
@@ -75,6 +90,17 @@ impl Executor {
     pub fn scan_batch(&self, luts: &[Lut], index: &CompressedIndex,
                       ks: &[usize], shard_rows: usize)
                       -> Vec<Vec<(f32, u32)>> {
+        self.scan_batch_prec(luts, index, ks, shard_rows, ScanPrecision::F32)
+    }
+
+    /// [`Self::scan_batch`] with a scan-precision knob: `F32` runs the
+    /// exact kernel; `U16`/`U8` quantize each LUT once and run the
+    /// blocked integer kernels with exact f32 re-scoring per shard
+    /// (DESIGN.md §6).
+    pub fn scan_batch_prec(&self, luts: &[Lut], index: &CompressedIndex,
+                           ks: &[usize], shard_rows: usize,
+                           precision: ScanPrecision)
+                           -> Vec<Vec<(f32, u32)>> {
         assert_eq!(luts.len(), ks.len(), "one k per query LUT");
         if luts.is_empty() {
             return Vec::new();
@@ -87,7 +113,7 @@ impl Executor {
                 tasks.push(ScanTask { slot: qi, lut: qi, lo, hi });
             }
         }
-        self.run_scan_tasks(luts, index, ks, &tasks)
+        self.run_scan_tasks_prec(luts, index, ks, &tasks, precision)
     }
 
     /// Execute an arbitrary [`ScanTask`] plan: for every slot `s`, the
@@ -101,6 +127,20 @@ impl Executor {
     pub fn run_scan_tasks(&self, luts: &[Lut], index: &CompressedIndex,
                           ks: &[usize], tasks: &[ScanTask])
                           -> Vec<Vec<(f32, u32)>> {
+        self.run_scan_tasks_prec(luts, index, ks, tasks, ScanPrecision::F32)
+    }
+
+    /// [`Self::run_scan_tasks`] with a scan-precision knob.  LUTs are
+    /// quantized **once per plan** (per-query for the flat plan, per
+    /// probed-list slot for IVF residual plans) and shared by every task
+    /// referencing that LUT; each task selects with integer scores and
+    /// re-scores its survivors exactly, so the per-slot merge still
+    /// compares exact f32 scores under the `(score, id)` total order.
+    pub fn run_scan_tasks_prec(&self, luts: &[Lut], index: &CompressedIndex,
+                               ks: &[usize], tasks: &[ScanTask],
+                               precision: ScanPrecision)
+                               -> Vec<Vec<(f32, u32)>> {
+        let qluts = quantize_luts(luts, precision);
         let nslots = ks.len();
         // per-slot ordinal of each task: its merge position within the slot
         let mut counts = vec![0usize; nslots];
@@ -117,8 +157,9 @@ impl Executor {
                 let mut parts: Vec<Vec<Vec<(f32, u32)>>> =
                     counts.iter().map(|&c| Vec::with_capacity(c)).collect();
                 for t in tasks {
-                    parts[t.slot].push(scan_range_topk(
-                        &luts[t.lut], index, t.lo, t.hi, ks[t.slot]));
+                    parts[t.slot].push(scan_range_topk_prec(
+                        &luts[t.lut], qluts[t.lut].as_ref(), index, t.lo,
+                        t.hi, ks[t.slot]));
                 }
                 parts
                     .into_iter()
@@ -134,11 +175,13 @@ impl Executor {
                 for (ti, t) in tasks.iter().enumerate() {
                     let tx = tx.clone();
                     let lut = &luts[t.lut];
+                    let qlut = qluts[t.lut].as_ref();
                     let k = ks[t.slot];
                     let (slot, ord) = (t.slot, ords[ti]);
                     let (lo, hi) = (t.lo, t.hi);
                     jobs.push(Box::new(move || {
-                        let part = scan_range_topk(lut, index, lo, hi, k);
+                        let part = scan_range_topk_prec(lut, qlut, index,
+                                                        lo, hi, k);
                         let _ = tx.send((slot, ord, part));
                     }));
                 }
@@ -319,6 +362,58 @@ mod tests {
                 } else {
                     Err(format!(
                         "threads={threads} shard_rows={shard_rows} diverged"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_pool_scan_equals_inline_at_every_precision() {
+        // the precision axis composes with the executor: for each of
+        // f32/u16/u8, a pool of any size returns results bit-identical
+        // to the inline executor at the SAME shard decomposition.  (At
+        // f32 shard size doesn't matter either — the existing grid
+        // property — but at u16/u8 per-shard integer selection may
+        // legitimately swap candidates *inside the quantization margin*
+        // when the decomposition changes, and `shard_rows = 0` auto-
+        // sizes from the pool, so this property pins an explicit
+        // shard_rows and varies only the executor — see DESIGN.md §6.)
+        prop::forall_ok(
+            5150,
+            10,
+            |r: &mut SplitMix64| {
+                let n = 50 + r.below(700);
+                let stride = 1 + r.below(10);
+                let threads = 2 + r.below(3);
+                let shard_rows = [0usize, 1, 13, 64, 300][r.below(5)];
+                let k = 1 + r.below(30);
+                let prec = [ScanPrecision::F32, ScanPrecision::U16,
+                            ScanPrecision::U8][r.below(3)];
+                (n, stride, threads, shard_rows, k, prec, r.next_u64())
+            },
+            |&(n, stride, threads, shard_rows, k, prec, seed)| {
+                let mut idx = mk_index(n, stride, seed);
+                if seed % 2 == 0 {
+                    idx.ensure_packed();
+                }
+                let luts: Vec<Lut> =
+                    (0..3).map(|i| mk_lut(stride, seed ^ (i + 9))).collect();
+                let ks = vec![k; luts.len()];
+                let pool = Executor::new(threads);
+                // same explicit shard size on both sides: auto-sizing
+                // differs between pool and inline by design
+                let rows = if shard_rows == 0 { n } else { shard_rows };
+                let got = pool.scan_batch_prec(&luts, &idx, &ks, rows, prec);
+                let want =
+                    Executor::new(1).scan_batch_prec(&luts, &idx, &ks, rows,
+                                                     prec);
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "{prec:?} threads={threads} shard_rows={rows} \
+                         pool diverged from inline"
                     ))
                 }
             },

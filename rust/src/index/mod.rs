@@ -13,7 +13,14 @@
 //! scan on a worker pool, one batched decode for the rerank stage), and
 //! the single-query [`SearchEngine::search`] is literally a batch of one.
 //! Results are bit-identical for every `(num_threads, shard_rows)`.
+//!
+//! The scan stage has a **precision axis** (`SearchConfig::scan_precision`,
+//! DESIGN.md §6): `F32` is the exact reference kernel; `U16`/`U8` select
+//! candidates with integer-quantized LUTs over the blocked [`packed`]
+//! layout and exactly re-score the survivors in f32, trading a bounded
+//! boundary error for scan throughput.
 
+pub mod packed;
 pub mod scan;
 
 use crate::config::SearchConfig;
@@ -21,13 +28,21 @@ use crate::data::Dataset;
 use crate::exec::{plan, Executor};
 use crate::quant::{Lut, Quantizer};
 
-pub use scan::{scan_lut_topk, scan_topk};
+pub use packed::{PackedIndex, BLOCK};
+pub use scan::{scan_lut_topk, scan_lut_topk_u16, scan_lut_topk_u8,
+               scan_topk};
 
 /// Flat compressed database.
 pub struct CompressedIndex {
     pub n: usize,
     pub stride: usize,
     pub codes: Vec<u8>,
+    /// Optional blocked position-major mirror of `codes` for the integer
+    /// fast-scan kernels ([`packed::PackedIndex`], DESIGN.md §6).  The
+    /// u16/u8 kernels transpose 32-row blocks on the fly when absent
+    /// (identical results, more memory traffic); [`Self::ensure_packed`]
+    /// builds it once for hot read paths.
+    pub packed: Option<PackedIndex>,
 }
 
 impl CompressedIndex {
@@ -38,12 +53,27 @@ impl CompressedIndex {
             n: data.len(),
             stride: q.code_bytes(),
             codes,
+            packed: None,
         }
     }
 
     pub fn from_codes(n: usize, stride: usize, codes: Vec<u8>) -> Self {
         assert_eq!(codes.len(), n * stride);
-        CompressedIndex { n, stride, codes }
+        CompressedIndex { n, stride, codes, packed: None }
+    }
+
+    /// Build the blocked fast-scan mirror if it doesn't exist yet (cheap:
+    /// one pass over the codes; ~2× code storage while held).
+    pub fn ensure_packed(&mut self) {
+        if self.packed.is_none() {
+            let p = PackedIndex::pack(self.n, self.stride, &self.codes);
+            self.packed = Some(p);
+        }
+    }
+
+    #[inline]
+    pub fn is_packed(&self) -> bool {
+        self.packed.is_some()
     }
 
     #[inline]
@@ -143,7 +173,8 @@ impl<'a> SearchEngine<'a> {
         let do_rerank = !self.cfg.no_rerank && self.quant.supports_rerank();
         if !do_rerank {
             return exec
-                .scan_batch(luts, self.index, ks, self.cfg.shard_rows)
+                .scan_batch_prec(luts, self.index, ks, self.cfg.shard_rows,
+                                 self.cfg.scan_precision)
                 .into_iter()
                 .map(ids)
                 .collect();
@@ -168,7 +199,8 @@ impl<'a> SearchEngine<'a> {
         let ls: Vec<usize> =
             ks.iter().map(|&k| self.cfg.rerank_l.max(k)).collect();
         let candidates: Vec<Vec<u32>> =
-            exec.scan_batch(luts, self.index, &ls, self.cfg.shard_rows)
+            exec.scan_batch_prec(luts, self.index, &ls, self.cfg.shard_rows,
+                                 self.cfg.scan_precision)
                 .into_iter()
                 .map(ids)
                 .collect();
@@ -309,6 +341,58 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn precision_with_full_rerank_matches_f32_exactly() {
+        // with rerank_l = n the stage-1 candidate set is the whole index
+        // at every precision, so the exact d1 rerank must return results
+        // identical to the f32 engine — packed or not
+        use crate::config::ScanPrecision;
+        let (d, pq) = setup();
+        let idx = CompressedIndex::build(&pq, &d);
+        let mut packed_idx = CompressedIndex::build(&pq, &d);
+        packed_idx.ensure_packed();
+        let queries = Generator::new(Family::SiftLike, 21).generate(4, 6);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let base = SearchConfig { rerank_l: idx.n, k: 10,
+                                  ..Default::default() };
+        let want = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
+        for precision in [ScanPrecision::U16, ScanPrecision::U8] {
+            for ix in [&idx, &packed_idx] {
+                let cfg = SearchConfig { scan_precision: precision, ..base };
+                let got = SearchEngine::new(&pq, ix, cfg).search_batch(&qrefs);
+                assert_eq!(got, want,
+                           "{precision:?} packed={}", ix.is_packed());
+            }
+        }
+    }
+
+    #[test]
+    fn u16_no_rerank_recall_tracks_f32_closely() {
+        // real PQ tables: the u16 step is tiny relative to distance
+        // margins, so the selected top-10 overlaps f32's almost entirely
+        use crate::config::ScanPrecision;
+        let (d, pq) = setup();
+        let mut idx = CompressedIndex::build(&pq, &d);
+        idx.ensure_packed();
+        let queries = Generator::new(Family::SiftLike, 21).generate(5, 20);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let base = SearchConfig { rerank_l: 50, k: 10, no_rerank: true,
+                                  ..Default::default() };
+        let f32_res = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
+        let cfg = SearchConfig { scan_precision: ScanPrecision::U16, ..base };
+        let u16_res = SearchEngine::new(&pq, &idx, cfg).search_batch(&qrefs);
+        let overlap: usize = f32_res
+            .iter()
+            .zip(&u16_res)
+            .map(|(a, b)| a.iter().filter(|&id| b.contains(id)).count())
+            .sum();
+        let total = 10 * qrefs.len();
+        assert!(overlap * 10 >= total * 9,
+                "u16 overlap {overlap}/{total} collapsed");
     }
 
     #[test]

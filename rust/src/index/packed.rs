@@ -1,0 +1,146 @@
+//! Blocked code layout for the integer fast-scan kernels.
+//!
+//! The flat `CompressedIndex` stores codes row-major: scanning walks one
+//! row's `stride` bytes, gathers `stride` table entries, moves on — one
+//! dependent gather chain per row.  [`PackedIndex`] interleaves blocks of
+//! [`BLOCK`] = 32 rows *position-major*:
+//!
+//! ```text
+//! block b = rows [b·32, b·32 + 32)
+//! data[(b·stride + j)·32 + r] = code byte of row b·32 + r at position j
+//!
+//!        ┌ lane r → 0 … 31 ┐
+//! j = 0  │ c₀ c₁ c₂ … c₃₁  │   ← 32 sequential bytes, one table row
+//! j = 1  │ c₀ c₁ c₂ … c₃₁  │
+//!  ⋮     │        ⋮        │
+//! ```
+//!
+//! so the inner scan loop fixes position `j`, reads 32 *sequential* code
+//! bytes, and accumulates into 32 independent integer lanes — every load
+//! on the (cache-missing) code stream is sequential and every table
+//! access pattern is shared by the whole block.  The tail block pads
+//! missing lanes with byte 0 (a valid codeword id; padded lanes are
+//! computed but never emitted).  See rust/DESIGN.md §6.
+
+use super::CompressedIndex;
+
+/// Rows interleaved per block.  32 lanes × u32 accumulators fit
+/// comfortably in registers/L1 and divide every power-of-two shard size.
+pub const BLOCK: usize = 32;
+
+/// Position-major blocked mirror of a code matrix (same `n × stride`
+/// logical content as the flat layout it was packed from).
+#[derive(Clone, Debug)]
+pub struct PackedIndex {
+    pub n: usize,
+    pub stride: usize,
+    /// `ceil(n / 32) · stride · 32` bytes, laid out as documented above.
+    pub data: Vec<u8>,
+}
+
+impl PackedIndex {
+    /// Pack a flat row-major code matrix.
+    pub fn pack(n: usize, stride: usize, codes: &[u8]) -> PackedIndex {
+        assert_eq!(codes.len(), n * stride, "codes must be n × stride");
+        assert!(stride > 0, "stride must be positive");
+        let nb = n.div_ceil(BLOCK);
+        let mut data = vec![0u8; nb * stride * BLOCK];
+        for row in 0..n {
+            let (b, r) = (row / BLOCK, row % BLOCK);
+            let src = &codes[row * stride..(row + 1) * stride];
+            let base = b * stride * BLOCK;
+            for (j, &c) in src.iter().enumerate() {
+                data[base + j * BLOCK + r] = c;
+            }
+        }
+        PackedIndex { n, stride, data }
+    }
+
+    /// Pack an existing flat index.
+    pub fn from_index(index: &CompressedIndex) -> PackedIndex {
+        Self::pack(index.n, index.stride, &index.codes)
+    }
+
+    /// Number of 32-row blocks (the tail block may be partial).
+    #[inline]
+    pub fn num_blocks(&self) -> usize {
+        self.n.div_ceil(BLOCK)
+    }
+
+    /// The `stride × 32` byte slab of block `b`.
+    #[inline]
+    pub fn block(&self, b: usize) -> &[u8] {
+        let span = self.stride * BLOCK;
+        &self.data[b * span..(b + 1) * span]
+    }
+
+    /// Read one logical row back out of the blocked layout (test and
+    /// verification path; the scan kernels never call this).
+    pub fn unpack_row(&self, row: usize, out: &mut [u8]) {
+        assert!(row < self.n);
+        assert_eq!(out.len(), self.stride);
+        let blk = self.block(row / BLOCK);
+        let r = row % BLOCK;
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = blk[j * BLOCK + r];
+        }
+    }
+
+    /// Bytes of packed storage (layout overhead is only tail padding).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn mk_codes(n: usize, stride: usize, seed: u64) -> Vec<u8> {
+        let mut rng = SplitMix64::new(seed);
+        (0..n * stride).map(|_| rng.below(256) as u8).collect()
+    }
+
+    #[test]
+    fn pack_roundtrips_every_row_for_ragged_sizes() {
+        // exact multiples, ragged tails, and n < BLOCK
+        for n in [0usize, 1, 5, 31, 32, 33, 64, 100, 257] {
+            for stride in [1usize, 3, 8, 16] {
+                let codes = mk_codes(n, stride, (n * 31 + stride) as u64);
+                let p = PackedIndex::pack(n, stride, &codes);
+                assert_eq!(p.num_blocks(), n.div_ceil(BLOCK));
+                assert_eq!(p.data.len(), p.num_blocks() * stride * BLOCK);
+                let mut row = vec![0u8; stride];
+                for i in 0..n {
+                    p.unpack_row(i, &mut row);
+                    assert_eq!(row, codes[i * stride..(i + 1) * stride],
+                               "n={n} stride={stride} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tail_lanes_are_zero_padded() {
+        let codes = mk_codes(33, 4, 7);
+        let p = PackedIndex::pack(33, 4, &codes);
+        let tail = p.block(1);
+        for j in 0..4 {
+            for r in 1..BLOCK {
+                assert_eq!(tail[j * BLOCK + r], 0,
+                           "pad lane j={j} r={r} must be zero");
+            }
+        }
+    }
+
+    #[test]
+    fn block_is_position_major() {
+        // hand-built 2×3 matrix: rows [1,2,3] and [4,5,6]
+        let p = PackedIndex::pack(2, 3, &[1, 2, 3, 4, 5, 6]);
+        let b = p.block(0);
+        assert_eq!(&b[0..2], &[1, 4], "position 0 lanes");
+        assert_eq!(&b[BLOCK..BLOCK + 2], &[2, 5], "position 1 lanes");
+        assert_eq!(&b[2 * BLOCK..2 * BLOCK + 2], &[3, 6], "position 2 lanes");
+    }
+}

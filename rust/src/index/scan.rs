@@ -1,23 +1,30 @@
 //! The ADC scan hot path.
 //!
-//! `scan_lut_topk` is the specialized LUT loop (the overwhelmingly common
-//! case: PQ/OPQ/RVQ/LSQ/UNQ all scan through `Lut::Tables`); `scan_topk`
-//! dispatches, falling back to the generic `Lut::score` for the lattice's
-//! direct dot scoring.
+//! `scan_lut_topk` is the specialized f32 LUT loop (the overwhelmingly
+//! common case: PQ/OPQ/RVQ/LSQ/UNQ all scan through `Lut::Tables`);
+//! `scan_lut_topk_u16` / `scan_lut_topk_u8` are the blocked integer
+//! fast-scan kernels (select with quantized-LUT integer scores over the
+//! [`super::packed`] layout, then exactly re-score the survivors in
+//! f32 — rust/DESIGN.md §6); `scan_topk` dispatches, falling back to the
+//! generic `Lut::score` for the lattice's direct dot scoring.
 //!
-//! Performance notes (see `rust/DESIGN.md` §2 for measurements):
+//! Performance notes (see `rust/DESIGN.md` §2/§6 for measurements):
 //! * the per-row loop over `stride` table lookups is unrolled by the
 //!   compiler for the fixed strides we exercise; the LUT layout is
 //!   position-major (`tables[j·K + code[j]]`, the contract documented on
 //!   [`Lut::Tables`]) so all lookups hit one small table
-//!   (8–17 rows × 256 × 4 B ≤ 17 KB, L1-resident);
+//!   (8–17 rows × 256 × 4 B ≤ 17 KB, L1-resident — half that at u16,
+//!   a quarter at u8);
 //! * the bounded heap makes the common case (candidate worse than the
 //!   current k-th best) a single compare-and-skip;
-//! * scores accumulate in plain f32 — identical to the paper's setup.
+//! * the f32 kernel accumulates in plain f32 — identical to the paper's
+//!   setup; the integer kernels accumulate u32 lanes over 32-row blocks
+//!   and re-score the surviving candidate set exactly.
 
 use crate::linalg::TopK;
-use crate::quant::Lut;
+use crate::quant::{Lut, QuantizedLut};
 
+use super::packed::BLOCK;
 use super::CompressedIndex;
 
 /// Scan the whole index with a table LUT, returning the k smallest
@@ -81,6 +88,134 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
     top.into_sorted()
 }
 
+/// Blocked u16 fast-scan over `[lo, hi)`: integer candidate selection
+/// with `qlut`, exact f32 re-score of the survivors with `lut`.
+///
+/// Returned pairs carry **exact f32 scores** (so cross-shard merges
+/// compare in the same domain as the f32 kernel), sorted ascending by
+/// `(score, id)`.  The returned ids equal [`scan_lut_topk`]'s whenever
+/// the f32 margin at the k-th boundary exceeds twice the quantization
+/// error bound `stride · step / 2` (DESIGN.md §6); inside that margin
+/// the integer selection may swap boundary candidates.
+pub fn scan_lut_topk_u16(qlut: &QuantizedLut, lut: &Lut,
+                         index: &CompressedIndex, lo: usize, hi: usize,
+                         k: usize) -> Vec<(f32, u32)> {
+    match qlut {
+        QuantizedLut::U16 { m, k: kw, tables, .. } => {
+            scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+        }
+        QuantizedLut::U8 { .. } => {
+            panic!("scan_lut_topk_u16 requires a u16-quantized LUT")
+        }
+    }
+}
+
+/// Blocked u8 fast-scan over `[lo, hi)` — same contract as
+/// [`scan_lut_topk_u16`] with a coarser (one-byte) entry width.
+pub fn scan_lut_topk_u8(qlut: &QuantizedLut, lut: &Lut,
+                        index: &CompressedIndex, lo: usize, hi: usize,
+                        k: usize) -> Vec<(f32, u32)> {
+    match qlut {
+        QuantizedLut::U8 { m, k: kw, tables, .. } => {
+            scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+        }
+        QuantizedLut::U16 { .. } => {
+            panic!("scan_lut_topk_u8 requires a u8-quantized LUT")
+        }
+    }
+}
+
+/// The shared blocked integer kernel: 32 u32 accumulator lanes walk one
+/// quantized table row across a whole block per step, so every load on
+/// the code stream is sequential (the packed layout) and the table row
+/// is register/L1-hot.  Integer scores are ≤ `stride · (2¹⁶ − 1) < 2²⁴`,
+/// hence exactly representable as f32 — the shared lexicographic [`TopK`]
+/// selects under `(int score, id)` without a second heap type.  Falls
+/// back to an on-the-fly 32-row transpose when the index carries no
+/// packed mirror (identical results, more memory traffic).
+fn scan_blocked_int<T: Copy + Into<u32>>(
+    qtables: &[T], m: usize, kw: usize, lut: &Lut, index: &CompressedIndex,
+    lo: usize, hi: usize, k: usize) -> Vec<(f32, u32)> {
+    let hi = hi.min(index.n);
+    if lo >= hi {
+        return Vec::new();
+    }
+    let stride = index.stride;
+    debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
+    debug_assert_eq!(qtables.len(), m * kw);
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    // transpose buffer for the unpacked fallback, allocated only when
+    // that path actually runs — the packed fast path stays allocation-free
+    let mut scratch = Vec::new();
+    let b0 = lo / BLOCK;
+    let b1 = hi.div_ceil(BLOCK);
+    for b in b0..b1 {
+        let row0 = b * BLOCK;
+        let blk: &[u8] = match &index.packed {
+            Some(p) => {
+                debug_assert_eq!(p.n, index.n);
+                p.block(b)
+            }
+            None => {
+                // gather this block position-major on the fly; pad lanes
+                // with byte 0 (a valid codeword — padded scores are
+                // computed but never emitted)
+                if scratch.is_empty() {
+                    scratch.resize(stride * BLOCK, 0u8);
+                }
+                let rows = (index.n - row0).min(BLOCK);
+                for j in 0..stride {
+                    for r in 0..rows {
+                        scratch[j * BLOCK + r] =
+                            index.codes[(row0 + r) * stride + j];
+                    }
+                    for r in rows..BLOCK {
+                        scratch[j * BLOCK + r] = 0;
+                    }
+                }
+                &scratch[..]
+            }
+        };
+        let mut acc = [0u32; BLOCK];
+        for j in 0..stride {
+            // safety: qtables is (stride, k_width); code bytes < k_width
+            // by construction (encoders emit ids < K, pad lanes are 0)
+            unsafe {
+                let t = qtables.as_ptr().add(j * kw);
+                let lane = blk.as_ptr().add(j * BLOCK);
+                for (r, a) in acc.iter_mut().enumerate() {
+                    *a += <T as Into<u32>>::into(
+                        *t.add(*lane.add(r) as usize));
+                }
+            }
+        }
+        let rlo = lo.max(row0) - row0;
+        let rhi = hi.min(row0 + BLOCK) - row0;
+        for (r, &a) in acc.iter().enumerate().take(rhi).skip(rlo) {
+            let s = a as f32;
+            // <= admits k-th-boundary score ties so the lexicographic
+            // heap can keep the smaller id deterministically
+            if s <= worst {
+                top.push(s, (row0 + r) as u32);
+                worst = top.worst();
+            }
+        }
+    }
+    // exact re-score: replace integer scores with the f32 LUT scores of
+    // the surviving candidate set and re-rank under (score, id)
+    let mut out: Vec<(f32, u32)> = top
+        .into_sorted()
+        .into_iter()
+        .map(|(_, id)| (lut.score(index.code(id as usize)), id))
+        .collect();
+    out.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("ADC scores are not NaN")
+            .then(a.1.cmp(&b.1))
+    });
+    out
+}
+
 /// Generic scan via `Lut::score` (used by the lattice direct path).
 pub fn scan_generic_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
                          hi: usize, k: usize) -> Vec<(f32, u32)> {
@@ -114,6 +249,24 @@ pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
             scan_lut_topk(tables, *kw, *bias, index, lo, hi, k)
         }
         Lut::Direct { .. } => scan_generic_topk(lut, index, lo, hi, k),
+    }
+}
+
+/// Precision-dispatching range scan: the blocked integer kernel when a
+/// quantized LUT is supplied (only `Lut::Tables` quantizes — the
+/// executor passes `None` for `ScanPrecision::F32` and for direct-scored
+/// LUTs, which fall back to the exact f32 path).
+pub fn scan_range_topk_prec(lut: &Lut, qlut: Option<&QuantizedLut>,
+                            index: &CompressedIndex, lo: usize, hi: usize,
+                            k: usize) -> Vec<(f32, u32)> {
+    match qlut {
+        Some(q @ QuantizedLut::U16 { .. }) => {
+            scan_lut_topk_u16(q, lut, index, lo, hi, k)
+        }
+        Some(q @ QuantizedLut::U8 { .. }) => {
+            scan_lut_topk_u8(q, lut, index, lo, hi, k)
+        }
+        None => scan_range_topk(lut, index, lo, hi, k),
     }
 }
 
@@ -218,5 +371,158 @@ mod tests {
         let (_, lut) = mk_lut(4, 8);
         let got = scan_topk(&lut, &idx, 100);
         assert_eq!(got.len(), 5);
+    }
+
+    fn quantize(lut: &Lut, bits: u32) -> QuantizedLut {
+        match bits {
+            16 => QuantizedLut::u16_from(lut).expect("tables quantize"),
+            8 => QuantizedLut::u8_from(lut).expect("tables quantize"),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn prop_packed_scan_equals_unpacked_scan_over_ragged_grid() {
+        // pack → scan == flat (on-the-fly transpose) scan, bit-identical,
+        // across ragged tails (n % 32 ≠ 0), n < 32, sub-ranges, and both
+        // entry widths
+        prop::forall_ok(
+            4242,
+            30,
+            |r: &mut SplitMix64| {
+                let n = match r.below(4) {
+                    0 => 1 + r.below(31),            // n < BLOCK
+                    1 => 32 * (1 + r.below(8)),      // exact blocks
+                    _ => 1 + r.below(400),           // ragged
+                };
+                let stride = 1 + r.below(16);
+                let k = 1 + r.below(25);
+                let bits = if r.below(2) == 0 { 16u32 } else { 8 };
+                // sub-range, occasionally empty (lo == hi)
+                let lo = r.below(n + 1);
+                let hi = lo + r.below(n + 1 - lo);
+                (n, stride, k, bits, lo, hi, r.next_u64())
+            },
+            |&(n, stride, k, bits, lo, hi, seed)| {
+                let flat = mk_index(n, stride, seed);
+                let mut packed = mk_index(n, stride, seed);
+                packed.ensure_packed();
+                let (_, lut) = mk_lut(stride, seed ^ 3);
+                let q = quantize(&lut, bits);
+                let a = scan_range_topk_prec(&lut, Some(&q), &flat, lo, hi, k);
+                let b = scan_range_topk_prec(&lut, Some(&q), &packed, lo,
+                                             hi, k);
+                if a == b {
+                    Ok(())
+                } else {
+                    Err(format!("packed {b:?} != unpacked {a:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_int_scan_matches_f32_scan_outside_margin() {
+        // the exact-rescore contract: whenever the f32 margin at the k-th
+        // boundary exceeds twice the quantization error bound, the
+        // integer kernels return exactly the f32 kernel's ids (and, being
+        // exactly re-scored, the same scores)
+        let mut gated = 0usize;
+        let mut checked = 0usize;
+        prop::forall_ok(
+            1717,
+            40,
+            |r: &mut SplitMix64| {
+                let n = 20 + r.below(300);
+                let stride = 1 + r.below(16);
+                let k = 1 + r.below(15);
+                let bits = if r.below(2) == 0 { 16u32 } else { 8 };
+                (n, stride, k, bits, r.next_u64())
+            },
+            |&(n, stride, k, bits, seed)| {
+                let mut idx = mk_index(n, stride, seed);
+                if seed % 2 == 0 {
+                    idx.ensure_packed();
+                }
+                let (_, lut) = mk_lut(stride, seed ^ 5);
+                let q = quantize(&lut, bits);
+                // full f32 ranking, for the margin gate
+                let mut all: Vec<(f32, u32)> = (0..n)
+                    .map(|i| (lut.score(idx.code(i)), i as u32))
+                    .collect();
+                all.sort_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                });
+                checked += 1;
+                if k >= n {
+                    return Ok(());
+                }
+                let margin = all[k].0 - all[k - 1].0;
+                // small multiplicative slack over the analytic bound
+                // absorbs f32 accumulation fuzz at the gate boundary
+                if margin <= 2.0 * q.max_score_error() * 1.001 + 1e-5 {
+                    return Ok(()); // inside the quantization margin
+                }
+                gated += 1;
+                let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, n, k);
+                let want = &all[..k];
+                if got.iter().map(|p| p.1).eq(want.iter().map(|p| p.1)) {
+                    Ok(())
+                } else {
+                    Err(format!("bits={bits} got {got:?} want {want:?} \
+                                 (margin {margin})"))
+                }
+            },
+        );
+        // u8 cases at wide strides legitimately fall inside the margin;
+        // the u16 half of the grid must keep the property non-vacuous
+        assert!(gated * 5 >= checked,
+                "margin gate left the property vacuous: {gated}/{checked}");
+    }
+
+    #[test]
+    fn int_scan_exact_ties_keep_smallest_ids() {
+        // duplicate rows: every copy scores identically in both domains;
+        // the k smallest ids must win in scan output
+        let stride = 6;
+        let row: Vec<u8> = (0..stride as u8).collect();
+        let codes: Vec<u8> = row.iter().copied().cycle().take(stride * 50)
+            .collect();
+        let idx = CompressedIndex::from_codes(50, stride, codes);
+        let (_, lut) = mk_lut(stride, 11);
+        for bits in [16u32, 8] {
+            let q = quantize(&lut, bits);
+            let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, 50, 7);
+            let ids: Vec<u32> = got.iter().map(|p| p.1).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6], "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn sharded_int_scan_merge_equals_full_scan_on_exact_tables() {
+        // tables[c] = c quantizes *exactly* at both widths (u8: identity,
+        // u16: ×257), so integer selection is lossless and the sharded
+        // int scan must merge to exactly the full f32 scan — ragged
+        // shard boundaries that straddle 32-row blocks included
+        let mut rng = SplitMix64::new(33);
+        let mut vals: Vec<u8> = (0..=255).collect();
+        // deterministic shuffle so scores aren't in storage order
+        for i in (1..vals.len()).rev() {
+            vals.swap(i, rng.below(i + 1));
+        }
+        let idx = CompressedIndex::from_codes(256, 1, vals);
+        let tables: Vec<f32> = (0..256).map(|c| c as f32).collect();
+        let lut = Lut::Tables { m: 1, k: 256, tables, bias: 0.5 };
+        let full_f32 = scan_topk(&lut, &idx, 25);
+        for bits in [16u32, 8] {
+            let q = quantize(&lut, bits);
+            let parts = vec![
+                scan_range_topk_prec(&lut, Some(&q), &idx, 0, 37, 25),
+                scan_range_topk_prec(&lut, Some(&q), &idx, 37, 150, 25),
+                scan_range_topk_prec(&lut, Some(&q), &idx, 150, 256, 25),
+            ];
+            let merged = merge_topk(parts, 25);
+            assert_eq!(merged, full_f32, "bits={bits}");
+        }
     }
 }

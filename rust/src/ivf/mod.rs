@@ -29,6 +29,11 @@
 //!   [`crate::index::SearchEngine::search_batch`] for every
 //!   `(num_threads, shard_rows)` — pinned by property tests in
 //!   [`search`].
+//! * **Scan precision**: `SearchConfig::scan_precision` selects the
+//!   per-list scan kernel exactly as on the flat path (f32 exact, or
+//!   u16/u8 blocked integer selection + exact rescore over one shared
+//!   packed layout — [`IvfIndex::ensure_packed`], DESIGN.md §6);
+//!   residual LUTs quantize per probed slot like any other LUT.
 
 pub mod coarse;
 pub mod persist;
@@ -133,6 +138,14 @@ impl IvfIndex {
     /// Code storage bytes (same accounting as the flat index).
     pub fn storage_bytes(&self) -> usize {
         self.codes.storage_bytes()
+    }
+
+    /// Build the blocked fast-scan mirror of the per-list code matrix
+    /// for the integer scan precisions (one packed layout serves every
+    /// list: per-list scans walk the blocks covering `[offsets[l],
+    /// offsets[l+1])` and skip out-of-range lanes — DESIGN.md §6).
+    pub fn ensure_packed(&mut self) {
+        self.codes.ensure_packed();
     }
 }
 

@@ -10,18 +10,28 @@
 //!   range sharded into [`crate::exec::ScanTask`]s merged in ascending
 //!   row order — within a list, stored rows ascend in original id, so
 //!   per-list ties keep the smallest id exactly like the flat scan;
-//! * per-list winners are remapped to original ids and reduced with one
-//!   sort by `(score, id)` — the same total order the flat scan's
-//!   strict-less heap + ascending push order implements.
+//! * per-list winners are remapped to original ids and reduced through
+//!   the shared [`merge_topk`], whose bounded heap orders candidates
+//!   lexicographically on `(score, id)` — decomposition-invariant by
+//!   construction, so no list interleaving can change the survivors.
 //!
 //! Hence `nprobe = num_lists` with non-residual codes returns results
 //! bit-identical to [`crate::index::SearchEngine::search_batch`]: every
 //! code contributes the same f32 score through the same LUT, and the
 //! selection order is identical.  The property tests below pin this over
 //! the `(num_threads, shard_rows)` grid.
+//!
+//! The scan-precision knob (`SearchConfig::scan_precision`) applies
+//! per-list exactly as on the flat path: residual LUTs quantize
+//! identically (one `QuantizedLut` per slot LUT), integer selection runs
+//! over the shared per-list blocked layout, and survivors are re-scored
+//! in exact f32 before the cross-list merge (rust/DESIGN.md §6).
+
+use std::collections::HashMap;
 
 use crate::config::SearchConfig;
 use crate::exec::{shard_ranges_in, Executor, ScanTask};
+use crate::index::scan::merge_topk;
 use crate::linalg::{sq_l2, TopK};
 use crate::quant::{Lut, Quantizer};
 
@@ -120,25 +130,46 @@ impl IvfIndex {
                 tasks.push(ScanTask { slot, lut: slot_lut[slot], lo, hi });
             }
         }
-        let parts = exec.run_scan_tasks(&luts, &self.codes, &slot_ks, &tasks);
+        let parts = exec.run_scan_tasks_prec(&luts, &self.codes, &slot_ks,
+                                             &tasks, cfg.scan_precision);
 
-        // cross-list reduce per query under the (score, original id)
-        // total order
-        let mut cands: Vec<Vec<Candidate>> =
+        // cross-list reduce per query: remap each slot's winners to
+        // original ids and fold the per-slot lists through the shared
+        // lexicographic `merge_topk` — the (score, id)-ordered heap makes
+        // the reduction decomposition-invariant by construction, so the
+        // hand-rolled total-order sort this used to compensate with is
+        // gone.  (row, list) context for the rerank gather rides in a
+        // per-query side map keyed by original id (unique per query: an
+        // id lives in exactly one list).
+        let mut parts_by_q: Vec<Vec<Vec<(f32, u32)>>> =
             (0..queries.len()).map(|_| Vec::new()).collect();
+        let mut aux: Vec<HashMap<u32, (u32, u32)>> =
+            (0..queries.len()).map(|_| HashMap::new()).collect();
         for (slot, part) in parts.into_iter().enumerate() {
             let (qi, l) = (slot_query[slot], slot_list[slot] as u32);
-            for (score, row) in part {
-                cands[qi].push((score, self.remap[row as usize], row, l));
-            }
+            let mapped: Vec<(f32, u32)> = part
+                .into_iter()
+                .map(|(score, row)| {
+                    let id = self.remap[row as usize];
+                    aux[qi].insert(id, (row, l));
+                    (score, id)
+                })
+                .collect();
+            parts_by_q[qi].push(mapped);
         }
-        for (qi, c) in cands.iter_mut().enumerate() {
-            c.sort_by(|a, b| {
-                a.0.partial_cmp(&b.0).expect("ADC scores are not NaN")
-                    .then(a.1.cmp(&b.1))
-            });
-            c.truncate(ls[qi]);
-        }
+        let cands: Vec<Vec<Candidate>> = parts_by_q
+            .into_iter()
+            .enumerate()
+            .map(|(qi, q_parts)| {
+                merge_topk(q_parts, ls[qi])
+                    .into_iter()
+                    .map(|(score, id)| {
+                        let (row, l) = aux[qi][&id];
+                        (score, id, row, l)
+                    })
+                    .collect()
+            })
+            .collect();
 
         if !do_rerank {
             return cands
@@ -303,6 +334,61 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn precision_full_rerank_at_nprobe_all_matches_f32() {
+        // with rerank_l ≥ n and every list probed, the stage-1 candidate
+        // pool is the whole database at any scan precision, so the exact
+        // rerank must return f32-identical results — packed per-list
+        // layout included
+        use crate::config::ScanPrecision;
+        let (train, base, pq) = setup(1500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 9, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 5);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let base_cfg = SearchConfig { rerank_l: 1500, k: 10, nprobe: 0,
+                                      ..Default::default() };
+        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                       &base_cfg);
+        ivf.ensure_packed();
+        for precision in [ScanPrecision::U16, ScanPrecision::U8] {
+            let cfg = SearchConfig { scan_precision: precision, ..base_cfg };
+            let got = ivf.search_batch_on(&pq, &Executor::new(2), &qs, &ks,
+                                          &cfg);
+            assert_eq!(got, want, "{precision:?}");
+        }
+    }
+
+    #[test]
+    fn u16_precision_nprobe_recall_stays_sane() {
+        // integer selection at nprobe < num_lists: results must stay in
+        // the same league as the f32 scan (overwhelming id overlap)
+        use crate::config::ScanPrecision;
+        let (train, base, pq) = setup(3000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 12, 3, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        ivf.ensure_packed();
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 10);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let f32_cfg = SearchConfig { rerank_l: 60, k: 10, nprobe: 4,
+                                     ..Default::default() };
+        let u16_cfg = SearchConfig { scan_precision: ScanPrecision::U16,
+                                     ..f32_cfg };
+        let a = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                    &f32_cfg);
+        let b = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                    &u16_cfg);
+        let overlap: usize = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| x.iter().filter(|&id| y.contains(id)).count())
+            .sum();
+        assert!(overlap * 10 >= 10 * qs.len() * 9,
+                "u16 IVF overlap collapsed: {overlap}/{}", 10 * qs.len());
     }
 
     #[test]

@@ -1,18 +1,33 @@
 //! Bounded top-k selection (smallest distances win).
 //!
-//! A fixed-capacity binary max-heap keyed on distance: the root is the
-//! *worst* retained candidate, so the scan hot loop is a single branch
-//! (`d < root`) in the common reject case.  Used by the ADC scan, the
+//! A fixed-capacity binary max-heap keyed on the **lexicographic
+//! `(distance, id)` total order**: the root is the *worst* retained
+//! candidate, so the scan hot loop is a single branch (`d < root`) in
+//! the common reject case.  Ordering ties by id — not by arrival — makes
+//! every bounded selection *decomposition-invariant by construction*:
+//! pushing the same multiset in any order (full scan, per-shard scans
+//! merged in any interleaving, per-list IVF parts) retains exactly the
+//! same `k` pairs.  Used by the ADC scan, the shard/list merges, the
 //! ground-truth engine and the reranker.
+
+/// Strict "worse than" under the lexicographic `(distance, id)` order —
+/// the heap key.  Equal distances rank the larger id worse, so among
+/// score ties the smallest ids always survive, matching the ascending-id
+/// tie-break of a sequential scan regardless of push order.
+#[inline]
+fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 > b.1)
+}
 
 /// Fixed-capacity top-k accumulator over `(distance, id)` pairs.
 ///
-/// Keeps the `k` smallest distances seen; `push` is O(log k) only when the
-/// candidate beats the current worst, O(1) otherwise.
+/// Keeps the `k` smallest pairs under `(distance, id)`; `push` is
+/// O(log k) only when the candidate beats the current worst, O(1)
+/// otherwise.
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
-    /// max-heap on distance: `heap[0]` is the worst retained pair.
+    /// max-heap on `(distance, id)`: `heap[0]` is the worst retained pair.
     heap: Vec<(f32, u32)>,
 }
 
@@ -49,7 +64,7 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push((dist, id));
             self.sift_up(self.heap.len() - 1);
-        } else if dist < self.heap[0].0 {
+        } else if worse(self.heap[0], (dist, id)) {
             self.heap[0] = (dist, id);
             self.sift_down(0);
         }
@@ -58,7 +73,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 > self.heap[parent].0 {
+            if worse(self.heap[i], self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -73,10 +88,10 @@ impl TopK {
             let l = 2 * i + 1;
             let r = 2 * i + 2;
             let mut largest = i;
-            if l < n && self.heap[l].0 > self.heap[largest].0 {
+            if l < n && worse(self.heap[l], self.heap[largest]) {
                 largest = l;
             }
-            if r < n && self.heap[r].0 > self.heap[largest].0 {
+            if r < n && worse(self.heap[r], self.heap[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -140,11 +155,45 @@ mod tests {
         t.push(1.0, 5);
         t.push(1.0, 3);
         t.push(1.0, 4);
-        let out = t.into_sorted();
-        // among equal distances the smallest ids win deterministically in
-        // sorted output ordering
-        assert_eq!(out[0].0, 1.0);
-        assert!(out[0].1 <= out[1].1);
+        // among equal distances the smallest ids win, regardless of
+        // arrival order (the lexicographic (distance, id) heap order)
+        assert_eq!(t.into_sorted(), vec![(1.0, 3), (1.0, 4)]);
+    }
+
+    #[test]
+    fn ties_at_boundary_are_push_order_invariant() {
+        // the decomposition-invariance contract: any permutation of the
+        // same candidate multiset retains exactly the same pairs, even
+        // with score ties straddling the k-th boundary
+        let base: Vec<(f32, u32)> = vec![
+            (2.0, 9), (1.0, 7), (1.0, 2), (1.0, 5), (0.5, 1), (2.0, 0),
+            (1.0, 3),
+        ];
+        let mut want: Option<Vec<(f32, u32)>> = None;
+        // a few deterministic permutations (rotations + reversal)
+        for rot in 0..base.len() {
+            for rev in [false, true] {
+                let mut perm = base.clone();
+                perm.rotate_left(rot);
+                if rev {
+                    perm.reverse();
+                }
+                let mut t = TopK::new(4);
+                for (d, id) in perm {
+                    t.push(d, id);
+                }
+                let got = t.into_sorted();
+                match &want {
+                    None => {
+                        assert_eq!(got,
+                                   vec![(0.5, 1), (1.0, 2), (1.0, 3),
+                                        (1.0, 5)]);
+                        want = Some(got);
+                    }
+                    Some(w) => assert_eq!(&got, w, "rot={rot} rev={rev}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context};
 
-use unq::config::{AppConfig, IndexBackendKind, QuantizerKind};
+use unq::config::{AppConfig, IndexBackendKind, QuantizerKind, ScanPrecision};
 use unq::coordinator;
 use unq::data;
 use unq::eval::harness;
@@ -111,6 +111,11 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
     if let Some(n) = f.get("nprobe") {
         cfg.search.nprobe = n.parse().context("--nprobe")?;
     }
+    if let Some(p) = f.get("precision") {
+        cfg.search.scan_precision = ScanPrecision::parse(p)
+            .with_context(|| format!("unknown scan precision {p:?} \
+                                      (f32|u16|u8)"))?;
+    }
     if f.has("residual") {
         cfg.ivf.residual = true;
     }
@@ -130,6 +135,7 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&f),
         "eval" => cmd_eval(&f),
         "ivf-sweep" => cmd_ivf_sweep(&f),
+        "precision-sweep" => cmd_precision_sweep(&f),
         "tables" => tables::cmd_tables(&f),
         "serve" => cmd_serve(&f),
         "artifacts" => cmd_artifacts(&f),
@@ -150,12 +156,16 @@ USAGE:
   unq train     --quantizer Q --dataset D [--bytes B]
   unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
   unq ivf-sweep --quantizer Q --dataset D [--nprobes 1,4,16] [--lists N]
+  unq precision-sweep --quantizer Q --dataset D [--precisions f32,u16,u8]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
   unq serve     --dataset D [--quantizer Q] [--queries N]
   unq artifacts
 
 Execution:  [--threads N] [--shard-rows R] size the batch scan executor
-            (also via UNQ_THREADS / UNQ_SHARD_ROWS; defaults: inline)
+            (also via UNQ_THREADS / UNQ_SHARD_ROWS; defaults: inline);
+            [--precision f32|u16|u8] picks the ADC scan kernel (env
+            UNQ_SCAN_PRECISION; u16/u8 = blocked integer fast-scan with
+            exact f32 rescore, rust/DESIGN.md §6; default f32)
 Index:      [--backend flat|ivf] [--lists N] [--nprobe P] [--residual]
             pick the index organization for eval/serve (env UNQ_BACKEND /
             UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe 0 = all lists;
@@ -229,6 +239,7 @@ fn cmd_eval(f: &Flags) -> Result<()> {
     search.num_threads = cfg.search.num_threads;
     search.shard_rows = cfg.search.shard_rows;
     search.nprobe = cfg.search.nprobe;
+    search.scan_precision = cfg.search.scan_precision;
     if cfg.ivf.backend == IndexBackendKind::Ivf {
         let ivf = harness::build_or_load_ivf(
             &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
@@ -273,6 +284,7 @@ fn cmd_ivf_sweep(f: &Flags) -> Result<()> {
     search.exhaustive_rerank = cfg.search.exhaustive_rerank;
     search.num_threads = cfg.search.num_threads;
     search.shard_rows = cfg.search.shard_rows;
+    search.scan_precision = cfg.search.scan_precision;
     let nprobes: Vec<usize> = match f.get("nprobes") {
         Some(list) => list
             .split(',')
@@ -299,6 +311,48 @@ fn cmd_ivf_sweep(f: &Flags) -> Result<()> {
         println!("{:>8} {:>8.1} {:>8.1} {:>8.1} {:>12.3}",
                  pt.nprobe, pt.recall.at1, pt.recall.at10, pt.recall.at100,
                  1e3 * pt.secs_per_query);
+    }
+    Ok(())
+}
+
+/// `unq precision-sweep` — recall × latency across scan precisions (the
+/// throughput/accuracy trade-off of the blocked integer kernels).
+fn cmd_precision_sweep(f: &Flags) -> Result<()> {
+    let cfg = base_config(f)?;
+    anyhow::ensure!(
+        cfg.ivf.backend == IndexBackendKind::Flat,
+        "precision-sweep measures the flat exhaustive engine; drop \
+         `--backend ivf` (combine --precision with `unq eval` or \
+         `unq ivf-sweep` to measure IVF at a given precision)"
+    );
+    let variant = f.get("variant").unwrap_or("");
+    let mut exp = harness::prepare(&cfg, variant)?;
+    let mut search = harness::paper_search_config(cfg.quantizer, &cfg.dataset,
+                                                  cfg.search.k);
+    search.no_rerank |= cfg.search.no_rerank;
+    search.exhaustive_rerank = cfg.search.exhaustive_rerank;
+    search.num_threads = cfg.search.num_threads;
+    search.shard_rows = cfg.search.shard_rows;
+    let precisions: Vec<ScanPrecision> = match f.get("precisions") {
+        Some(list) => list
+            .split(',')
+            .map(|p| {
+                ScanPrecision::parse(p.trim())
+                    .with_context(|| format!("unknown precision {p:?}"))
+            })
+            .collect::<Result<_>>()?,
+        None => ScanPrecision::all().to_vec(),
+    };
+    println!(
+        "[precision-sweep] {} on {} ({}B, n={})",
+        exp.quant.name(), cfg.dataset, cfg.bytes_per_vector, exp.index.n
+    );
+    println!("{:>10} {:>8} {:>8} {:>8} {:>12}",
+             "precision", "R@1", "R@10", "R@100", "ms/query");
+    for pt in exp.run_precision_sweep(search, &precisions) {
+        println!("{:>10} {:>8.1} {:>8.1} {:>8.1} {:>12.3}",
+                 pt.precision.name(), pt.recall.at1, pt.recall.at10,
+                 pt.recall.at100, 1e3 * pt.secs_per_query);
     }
     Ok(())
 }

@@ -71,6 +71,157 @@ impl Lut {
     }
 }
 
+/// Integer-quantized mirror of a [`Lut::Tables`], the scan-precision
+/// axis of the blocked fast-scan kernels
+/// (`index::scan::scan_lut_topk_{u16,u8}` — rust/DESIGN.md §6).
+///
+/// Per query, every table row `j` is shifted by its own minimum `lo_j`
+/// and scaled by one shared `step`, so integer scores from different
+/// positions stay comparable:
+///
+/// ```text
+/// qtables[j·K + c] = clamp(round((tables[j·K + c] − lo_j) / step), 0, 2ʷ−1)
+/// step             = max_j (hi_j − lo_j) / (2ʷ − 1)
+/// f32 score        ≈ bias + step · Σ_j qtables[j·K + code[j]]
+/// bias             = lut bias + Σ_j lo_j
+/// ```
+///
+/// With `step` derived from the per-position min/max, no entry genuinely
+/// saturates — the clamp only guards float rounding at the tails (a
+/// narrower, outlier-trimmed `step` would trade tail saturation for
+/// resolution; see DESIGN.md §6 on when u8 saturation matters).  The
+/// per-entry rounding error is ≤ `step/2`, so an integer score deviates
+/// from the exact f32 score by at most [`Self::max_score_error`] =
+/// `m · step / 2`.
+#[derive(Clone, Debug)]
+pub enum QuantizedLut {
+    /// 16-bit entries: integer scores ≤ `m · 65535` (< 2²⁴ for every
+    /// stride we store, so they are also exactly representable as f32).
+    U16 { m: usize, k: usize, tables: Vec<u16>, step: f32, bias: f32 },
+    /// 8-bit entries: coarser (bigger `step`), faster (quarter the table
+    /// bytes of f32, denser in L1).
+    U8 { m: usize, k: usize, tables: Vec<u8>, step: f32, bias: f32 },
+}
+
+impl QuantizedLut {
+    /// Quantize a [`Lut::Tables`] to u16 entries (`None` for the
+    /// lattice's `Direct` scoring, which has no table decomposition).
+    pub fn u16_from(lut: &Lut) -> Option<QuantizedLut> {
+        let (m, k, vals, step, bias) = Self::quantize(lut, 16)?;
+        let tables = vals.into_iter().map(|v| v as u16).collect();
+        Some(QuantizedLut::U16 { m, k, tables, step, bias })
+    }
+
+    /// Quantize a [`Lut::Tables`] to u8 entries.
+    pub fn u8_from(lut: &Lut) -> Option<QuantizedLut> {
+        let (m, k, vals, step, bias) = Self::quantize(lut, 8)?;
+        let tables = vals.into_iter().map(|v| v as u8).collect();
+        Some(QuantizedLut::U8 { m, k, tables, step, bias })
+    }
+
+    /// The width-independent core shared by both constructors: derive
+    /// the affine map (per-position minima, one step over the widest
+    /// range, bias absorbing the minima) and quantize every entry into
+    /// `[0, 2^bits − 1]` — the clamp saturates the tails against
+    /// rounding fuzz.  Entries come back as u32 and are narrowed by the
+    /// callers (every value fits their width by construction).
+    fn quantize(lut: &Lut, bits: u32)
+                -> Option<(usize, usize, Vec<u32>, f32, f32)> {
+        let (m, k, tables, bias) = match lut {
+            Lut::Tables { m, k, tables, bias } => (*m, *k, tables, *bias),
+            Lut::Direct { .. } => return None,
+        };
+        let max_code = (1u32 << bits) - 1;
+        let mut lows = Vec::with_capacity(m);
+        let mut step = 0.0f32;
+        for j in 0..m {
+            let row = &tables[j * k..(j + 1) * k];
+            let lo = row.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            lows.push(lo);
+            step = step.max((hi - lo) / max_code as f32);
+        }
+        let lo_sum: f32 = lows.iter().sum();
+        if !step.is_finite() || !lo_sum.is_finite() {
+            return None;
+        }
+        if step <= 0.0 {
+            // constant tables: every entry quantizes to 0 and the exact
+            // rescore settles any ordering
+            step = 1.0;
+        }
+        let mut vals = Vec::with_capacity(m * k);
+        for j in 0..m {
+            for c in 0..k {
+                let v = ((tables[j * k + c] - lows[j]) / step).round();
+                vals.push(if v >= max_code as f32 {
+                    max_code
+                } else if v > 0.0 {
+                    v as u32
+                } else {
+                    0
+                });
+            }
+        }
+        Some((m, k, vals, step, bias + lo_sum))
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        match self {
+            QuantizedLut::U16 { m, .. } | QuantizedLut::U8 { m, .. } => *m,
+        }
+    }
+
+    /// The shared score step: one integer unit ≈ this many f32 units.
+    #[inline]
+    pub fn step(&self) -> f32 {
+        match self {
+            QuantizedLut::U16 { step, .. }
+            | QuantizedLut::U8 { step, .. } => *step,
+        }
+    }
+
+    /// Upper bound on `|approx(score_int(code)) − lut.score(code)|`:
+    /// `m · step / 2` (per-entry round-to-nearest error, summed).
+    #[inline]
+    pub fn max_score_error(&self) -> f32 {
+        self.m() as f32 * self.step() * 0.5
+    }
+
+    /// Integer ADC score of one code row (the reference path mirrored by
+    /// the blocked kernels; lower = closer).
+    #[inline]
+    pub fn score_int(&self, code: &[u8]) -> u32 {
+        fn sum_entries<T: Copy + Into<u32>>(tables: &[T], k: usize,
+                                            code: &[u8]) -> u32 {
+            code.iter()
+                .enumerate()
+                .map(|(j, &c)| tables[j * k + c as usize].into())
+                .sum()
+        }
+        match self {
+            QuantizedLut::U16 { m, k, tables, .. } => {
+                debug_assert_eq!(code.len(), *m);
+                sum_entries(tables, *k, code)
+            }
+            QuantizedLut::U8 { m, k, tables, .. } => {
+                debug_assert_eq!(code.len(), *m);
+                sum_entries(tables, *k, code)
+            }
+        }
+    }
+
+    /// Map an integer score back into the f32 score domain.
+    #[inline]
+    pub fn approx(&self, score: u32) -> f32 {
+        match self {
+            QuantizedLut::U16 { step, bias, .. }
+            | QuantizedLut::U8 { step, bias, .. } => bias + step * score as f32,
+        }
+    }
+}
+
 /// A trained quantizer: encoder + distance function (paper §3.1).
 pub trait Quantizer: Send + Sync {
     /// Paper row label.
@@ -183,6 +334,74 @@ mod tests {
         };
         assert_eq!(lut.score(&[0, 0]), 5.0 + 0.0 + 10.0);
         assert_eq!(lut.score(&[3, 2]), 5.0 + 3.0 + 30.0);
+    }
+
+    #[test]
+    fn quantized_lut_error_within_bound() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(9);
+        let (m, k) = (8usize, 64usize);
+        let tables: Vec<f32> =
+            (0..m * k).map(|_| rng.next_f32() * 7.0 - 2.0).collect();
+        let lut = Lut::Tables { m, k, tables, bias: 3.25 };
+        for q in [QuantizedLut::u16_from(&lut).unwrap(),
+                  QuantizedLut::u8_from(&lut).unwrap()] {
+            let bound = q.max_score_error() + 1e-4;
+            for _ in 0..200 {
+                let code: Vec<u8> =
+                    (0..m).map(|_| rng.below(k) as u8).collect();
+                let exact = lut.score(&code);
+                let approx = q.approx(q.score_int(&code));
+                assert!((approx - exact).abs() <= bound,
+                        "|{approx} - {exact}| > {bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_lut_u16_ranks_like_f32_on_wide_margins() {
+        // entries 0/1000/2000…: margins dwarf the u16 step, so integer
+        // scores must rank codes exactly like the f32 tables
+        let tables: Vec<f32> = (0..2 * 4).map(|i| (i * 1000) as f32).collect();
+        let lut = Lut::Tables { m: 2, k: 4, tables, bias: 0.0 };
+        let q = QuantizedLut::u16_from(&lut).unwrap();
+        let codes: Vec<[u8; 2]> = (0..4u8)
+            .flat_map(|a| (0..4u8).map(move |b| [a, b]))
+            .collect();
+        let mut by_f32 = codes.clone();
+        by_f32.sort_by(|a, b| lut.score(a).partial_cmp(&lut.score(b)).unwrap());
+        let mut by_int = codes;
+        by_int.sort_by_key(|c| q.score_int(c));
+        assert_eq!(by_f32, by_int);
+    }
+
+    #[test]
+    fn quantized_lut_saturates_instead_of_wrapping() {
+        // a huge outlier entry must clamp at the top of the entry range,
+        // not wrap around
+        let tables = vec![0.0, 1.0, 2.0, 1.0e9];
+        let lut = Lut::Tables { m: 1, k: 4, tables, bias: 0.0 };
+        let q = QuantizedLut::u8_from(&lut).unwrap();
+        assert_eq!(q.score_int(&[3]), 255);
+        assert_eq!(q.score_int(&[0]), 0);
+        assert!(q.score_int(&[2]) <= q.score_int(&[3]));
+    }
+
+    #[test]
+    fn quantized_lut_constant_tables_degenerate() {
+        let lut = Lut::Tables { m: 2, k: 3,
+                                tables: vec![5.0; 6], bias: 1.0 };
+        let q = QuantizedLut::u16_from(&lut).unwrap();
+        assert_eq!(q.score_int(&[0, 2]), 0);
+        // bias absorbs the per-position minima: approx is still exact
+        assert!((q.approx(0) - lut.score(&[1, 1])).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantized_lut_rejects_direct_scoring() {
+        let lut = Lut::Direct { q: vec![1.0, 0.0], bias: 0.0 };
+        assert!(QuantizedLut::u16_from(&lut).is_none());
+        assert!(QuantizedLut::u8_from(&lut).is_none());
     }
 
     #[test]

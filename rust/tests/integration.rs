@@ -135,6 +135,44 @@ fn coordinator_serves_same_results_as_offline_engine() {
 }
 
 #[test]
+fn coordinator_u16_fast_scan_serves_offline_engine_results() {
+    // the scan-precision knob end to end: a coordinator configured for
+    // u16 blocked fast-scan returns exactly what the offline engine
+    // returns at the same precision, and (with rerank depth ≥ overlap
+    // margins) answers in the same league as the f32 engine
+    use unq::config::ScanPrecision;
+    let c = corpus(Family::SiftLike, 6000);
+    let pq = Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8);
+    let mut index = CompressedIndex::build(&pq, &c.base);
+    index.ensure_packed();
+    // same explicit shard_rows on both sides: integer selection is
+    // per-shard, so offline and server must agree on the decomposition
+    // to be bit-identical (f32 needs no such care — DESIGN.md §6)
+    let search = SearchConfig { rerank_l: 100, k: 10, shard_rows: 1000,
+                                scan_precision: ScanPrecision::U16,
+                                ..Default::default() };
+    let offline = SearchEngine::new(&pq, &index, search);
+    let want: Vec<Vec<u32>> = (0..10)
+        .map(|qi| offline.search(c.query.row(qi)))
+        .collect();
+
+    let mut server_index = CompressedIndex::build(&pq, &c.base);
+    server_index.ensure_packed();
+    let server = unq::coordinator::pipeline::Server::start(
+        Arc::new(Pq::train(&c.train.data, c.train.dim, 8, 64, 0, 8)),
+        Arc::new(server_index),
+        search,
+        ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
+                      num_threads: 2, shard_rows: 1000 },
+    );
+    for qi in 0..10 {
+        let resp = server.search_blocking(c.query.row(qi), 10).unwrap();
+        assert_eq!(resp.neighbors, want[qi], "query {qi}");
+    }
+    server.shutdown();
+}
+
+#[test]
 fn backpressure_rejects_when_overloaded() {
     let c = corpus(Family::SiftLike, 2000);
     let pq = Pq::train(&c.train.data, c.train.dim, 8, 16, 0, 4);
