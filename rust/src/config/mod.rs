@@ -195,6 +195,30 @@ impl Default for IvfConfig {
     }
 }
 
+/// Mutable streaming-index parameters (build/write-path knobs; the
+/// read path keeps using [`SearchConfig`]).  See `rust/DESIGN.md` §7.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Active-segment seal threshold: once the tail holds this many
+    /// rows it is packed and frozen (env `UNQ_SEGMENT_ROWS`,
+    /// CLI `--segment-rows`).
+    pub segment_rows: usize,
+    /// Sealed-segment count that triggers online compaction (merge +
+    /// tombstone drop + repack; env `UNQ_COMPACT_SEGMENTS`,
+    /// CLI `--compact-segments`).
+    pub compact_segments: usize,
+    /// WAL records per fsync batch; 1 syncs every record
+    /// (env `UNQ_WAL_SYNC`).
+    pub wal_sync: usize,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { segment_rows: 4096, compact_segments: 4,
+                       wal_sync: 64 }
+    }
+}
+
 /// Serving parameters for the coordinator.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -232,6 +256,7 @@ pub struct AppConfig {
     pub search: SearchConfig,
     pub serve: ServeConfig,
     pub ivf: IvfConfig,
+    pub stream: StreamConfig,
     /// Directory roots (relative to CWD unless absolute).
     pub data_dir: PathBuf,
     pub artifacts_dir: PathBuf,
@@ -250,6 +275,7 @@ impl Default for AppConfig {
             search: SearchConfig::default(),
             serve: ServeConfig::default(),
             ivf: IvfConfig::default(),
+            stream: StreamConfig::default(),
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
             runs_dir: "runs".into(),
@@ -280,6 +306,12 @@ impl AppConfig {
                 ("backend", Json::Str(self.ivf.backend.name().to_string())),
                 ("num_lists", Json::Num(self.ivf.num_lists as f64)),
                 ("residual", Json::Bool(self.ivf.residual)),
+            ])),
+            ("stream", Json::obj(vec![
+                ("segment_rows", Json::Num(self.stream.segment_rows as f64)),
+                ("compact_segments",
+                 Json::Num(self.stream.compact_segments as f64)),
+                ("wal_sync", Json::Num(self.stream.wal_sync as f64)),
             ])),
             ("serve", Json::obj(vec![
                 ("max_batch", Json::Num(self.serve.max_batch as f64)),
@@ -349,6 +381,19 @@ impl AppConfig {
                 cfg.ivf.residual = v;
             }
         }
+        if let Some(s) = j.get("stream") {
+            if let Some(v) = s.get("segment_rows").and_then(Json::as_usize) {
+                cfg.stream.segment_rows = v;
+            }
+            if let Some(v) =
+                s.get("compact_segments").and_then(Json::as_usize)
+            {
+                cfg.stream.compact_segments = v;
+            }
+            if let Some(v) = s.get("wal_sync").and_then(Json::as_usize) {
+                cfg.stream.wal_sync = v;
+            }
+        }
         if let Some(s) = j.get("serve") {
             if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
                 cfg.serve.max_batch = v;
@@ -388,6 +433,10 @@ impl AppConfig {
         }
         if cfg.ivf.num_lists == 0 {
             bail!("ivf.num_lists must be positive");
+        }
+        if cfg.stream.segment_rows == 0 || cfg.stream.compact_segments == 0 {
+            bail!("stream.segment_rows and stream.compact_segments must \
+                   be positive");
         }
         Ok(cfg)
     }
@@ -441,6 +490,27 @@ impl AppConfig {
                 "1" | "true" | "yes" => self.ivf.residual = true,
                 "0" | "false" | "no" => self.ivf.residual = false,
                 _ => {}
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_SEGMENT_ROWS") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.stream.segment_rows = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_COMPACT_SEGMENTS") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.stream.compact_segments = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_WAL_SYNC") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.stream.wal_sync = v;
+                }
             }
         }
         if let Ok(s) = std::env::var("UNQ_BACKEND") {
@@ -538,6 +608,27 @@ mod tests {
         assert_eq!(back.ivf.num_lists, 128);
         assert!(back.ivf.residual);
         assert_eq!(back.search.nprobe, 9);
+    }
+
+    #[test]
+    fn stream_section_roundtrip_defaults_and_rejects() {
+        let c = AppConfig::default();
+        assert_eq!(c.stream.segment_rows, 4096);
+        assert_eq!(c.stream.compact_segments, 4);
+        assert_eq!(c.stream.wal_sync, 64);
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("stream.json");
+        let mut c = AppConfig::default();
+        c.stream.segment_rows = 128;
+        c.stream.compact_segments = 2;
+        c.stream.wal_sync = 1;
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.stream.segment_rows, 128);
+        assert_eq!(back.stream.compact_segments, 2);
+        assert_eq!(back.stream.wal_sync, 1);
+        let j = Json::parse(r#"{"stream": {"segment_rows": 0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -9,10 +9,14 @@
 //! ```text
 //! clients → Router (bounded queue, backpressure)
 //!             ├─ search → QueryBatcher (size/deadline)
-//!             │            → IndexBackend (Flat | Ivf) batch plan on the
-//!             │              exec pool (flat: QueryBatch × IndexShard;
-//!             │              ivf: one slot per (query, probed list))
+//!             │            → IndexBackend (Flat | Ivf | Streaming)
+//!             │              batch plan on the exec pool (flat:
+//!             │              QueryBatch × IndexShard; ivf/stream: one
+//!             │              slot per (query, probed list[, segment]))
 //!             │            → batched decode rerank → respond
+//!             ├─ ingest → IngestBatcher → StreamingIndex insert/delete
+//!             │            (contiguous runs coalesce into one
+//!             │             encode-on-insert + WAL fsync batch each)
 //!             └─ encode → EncodeBatcher → encoder → respond
 //! ```
 //!
@@ -65,10 +69,49 @@ pub struct EncodeResponse {
     pub latency_us: u64,
 }
 
+/// An insert request: encode `vectors` (flat rows) into the streaming
+/// index and assign external ids.  Rejected (empty `ids`, `accepted =
+/// false`) on non-streaming backends.
+pub struct InsertRequest {
+    pub id: RequestId,
+    pub vectors: Vec<f32>,
+    pub rows: usize,
+    pub submitted: Instant,
+    pub resp: mpsc::SyncSender<InsertResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct InsertResponse {
+    pub id: RequestId,
+    /// external ids assigned to the rows, in order
+    pub ids: Vec<u32>,
+    pub accepted: bool,
+    pub latency_us: u64,
+}
+
+/// A delete request: tombstone external ids in the streaming index.
+pub struct DeleteRequest {
+    pub id: RequestId,
+    pub keys: Vec<u32>,
+    pub submitted: Instant,
+    pub resp: mpsc::SyncSender<DeleteResponse>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeleteResponse {
+    pub id: RequestId,
+    /// rows actually tombstoned (unknown ids are ignored)
+    pub removed: usize,
+    pub accepted: bool,
+    pub latency_us: u64,
+}
+
 /// Typed ingress.
 pub enum Request {
     Search(SearchRequest),
     Encode(EncodeRequest),
+    Insert(InsertRequest),
+    Delete(DeleteRequest),
 }
 
 impl Request {
@@ -76,6 +119,8 @@ impl Request {
         match self {
             Request::Search(r) => r.id,
             Request::Encode(r) => r.id,
+            Request::Insert(r) => r.id,
+            Request::Delete(r) => r.id,
         }
     }
 }

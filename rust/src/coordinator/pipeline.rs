@@ -26,8 +26,16 @@ use crate::quant::Quantizer;
 
 use super::batch::BatchPolicy;
 use super::metrics::Metrics;
-use super::{EncodeRequest, EncodeResponse, Request, SearchRequest,
+use super::{DeleteRequest, DeleteResponse, EncodeRequest, EncodeResponse,
+            InsertRequest, InsertResponse, Request, SearchRequest,
             SearchResponse, SubmitError};
+
+/// One item in the ingest worker's batcher: inserts and deletes share a
+/// queue so their relative order is preserved end to end.
+enum IngestRequest {
+    Insert(InsertRequest),
+    Delete(DeleteRequest),
+}
 
 /// Shared immutable serving state.
 pub struct ServerState {
@@ -74,13 +82,17 @@ impl Server {
             mpsc::sync_channel::<SearchRequest>(serve_cfg.queue_depth);
         let (encode_tx, encode_rx) =
             mpsc::sync_channel::<EncodeRequest>(serve_cfg.queue_depth);
+        let (ingest_tx, ingest_rx) =
+            mpsc::sync_channel::<IngestRequest>(serve_cfg.queue_depth);
 
         let mut threads = Vec::new();
         // router
         threads.push(
             std::thread::Builder::new()
                 .name("unq-router".into())
-                .spawn(move || router_main(ingress_rx, search_tx, encode_tx))
+                .spawn(move || {
+                    router_main(ingress_rx, search_tx, encode_tx, ingest_tx)
+                })
                 .expect("spawn router"),
         );
         // search worker
@@ -101,6 +113,16 @@ impl Server {
                     .name("unq-encode".into())
                     .spawn(move || encode_worker(state, encode_rx))
                     .expect("spawn encode worker"),
+            );
+        }
+        // ingest worker (streaming-backend insert/delete batches)
+        {
+            let state = state.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("unq-ingest".into())
+                    .spawn(move || ingest_worker(state, ingest_rx))
+                    .expect("spawn ingest worker"),
             );
         }
 
@@ -165,6 +187,36 @@ impl Server {
         rx.recv().map_err(|_| SubmitError::Closed)
     }
 
+    /// Convenience: blocking round-trip insert into a streaming backend
+    /// (`accepted = false` on frozen backends).
+    pub fn insert_blocking(&self, vectors: &[f32], rows: usize)
+                           -> Result<InsertResponse, SubmitError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = InsertRequest {
+            id: self.next_id(),
+            vectors: vectors.to_vec(),
+            rows,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.submit(Request::Insert(req))?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Convenience: blocking round-trip delete of external ids.
+    pub fn delete_blocking(&self, keys: &[u32])
+                           -> Result<DeleteResponse, SubmitError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = DeleteRequest {
+            id: self.next_id(),
+            keys: keys.to_vec(),
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        self.submit(Request::Delete(req))?;
+        rx.recv().map_err(|_| SubmitError::Closed)
+    }
+
     /// Graceful shutdown: close ingress, drain, join workers.
     pub fn shutdown(mut self) {
         drop(self.ingress);
@@ -176,7 +228,8 @@ impl Server {
 
 fn router_main(rx: mpsc::Receiver<Request>,
                search_tx: mpsc::SyncSender<SearchRequest>,
-               encode_tx: mpsc::SyncSender<EncodeRequest>) {
+               encode_tx: mpsc::SyncSender<EncodeRequest>,
+               ingest_tx: mpsc::SyncSender<IngestRequest>) {
     // ends when ingress disconnects; downstream queues close on drop
     while let Ok(req) = rx.recv() {
         match req {
@@ -187,6 +240,16 @@ fn router_main(rx: mpsc::Receiver<Request>,
             }
             Request::Encode(r) => {
                 if encode_tx.send(r).is_err() {
+                    break;
+                }
+            }
+            Request::Insert(r) => {
+                if ingest_tx.send(IngestRequest::Insert(r)).is_err() {
+                    break;
+                }
+            }
+            Request::Delete(r) => {
+                if ingest_tx.send(IngestRequest::Delete(r)).is_err() {
                     break;
                 }
             }
@@ -313,6 +376,140 @@ fn process_encode_batch(state: &ServerState, batch: Vec<EncodeRequest>) {
         let _ = req.resp.send(EncodeResponse {
             id: req.id, codes: slice, latency_us,
         });
+    }
+}
+
+fn ingest_worker(state: Arc<ServerState>, rx: mpsc::Receiver<IngestRequest>) {
+    let serve = state.serve_cfg;
+    let mut batcher = BatchPolicy::<IngestRequest>::new(
+        serve.max_batch, Duration::from_micros(serve.max_delay_us));
+    loop {
+        let wait = batcher
+            .time_to_deadline(Instant::now())
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(wait) {
+            Ok(req) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    process_ingest_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    process_ingest_batch(&state, batch);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let rest = batcher.take();
+                if !rest.is_empty() {
+                    process_ingest_batch(&state, rest);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Apply one flushed ingest batch in arrival order, coalescing each
+/// contiguous run of inserts into a single `insert_batch` call (one
+/// `encode_batch`, one WAL fsync) and each run of deletes into one
+/// `delete_batch` — same-id insert→delete sequences keep their meaning.
+/// On non-streaming backends every request is answered `accepted =
+/// false` instead of silently dropped.
+fn process_ingest_batch(state: &ServerState, batch: Vec<IngestRequest>) {
+    let m = &state.metrics;
+    m.batches.fetch_add(1, Ordering::Relaxed);
+    m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    let ix = match &state.backend {
+        crate::ivf::IndexBackend::Streaming(ix) => Some(ix.clone()),
+        _ => None,
+    };
+
+    let reply_insert = |req: InsertRequest, ids: Vec<u32>, ok: bool| {
+        let latency_us = req.submitted.elapsed().as_micros() as u64;
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.resp.send(InsertResponse {
+            id: req.id, ids, accepted: ok, latency_us,
+        });
+    };
+    let reply_delete = |req: DeleteRequest, removed: usize, ok: bool| {
+        let latency_us = req.submitted.elapsed().as_micros() as u64;
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.resp.send(DeleteResponse {
+            id: req.id, removed, accepted: ok, latency_us,
+        });
+    };
+
+    let mut it = batch.into_iter().peekable();
+    while let Some(head) = it.next() {
+        match head {
+            IngestRequest::Insert(first) => {
+                let mut run = vec![first];
+                while let Some(IngestRequest::Insert(r)) =
+                    it.next_if(|x| matches!(x, IngestRequest::Insert(_)))
+                {
+                    run.push(r);
+                }
+                let Some(ix) = &ix else {
+                    for req in run {
+                        reply_insert(req, Vec::new(), false);
+                    }
+                    continue;
+                };
+                // validate shapes before coalescing: `rows` is a public
+                // field, and a mismatch would misalign the id split for
+                // every later request in the run (or panic the worker)
+                let dim = state.quant.dim();
+                let mut valid = Vec::with_capacity(run.len());
+                for req in run {
+                    if req.rows * dim == req.vectors.len() {
+                        valid.push(req);
+                    } else {
+                        reply_insert(req, Vec::new(), false);
+                    }
+                }
+                let run = valid;
+                if run.is_empty() {
+                    continue;
+                }
+                let mut flat = Vec::new();
+                for req in &run {
+                    flat.extend_from_slice(&req.vectors);
+                }
+                match ix.insert_batch(state.quant.as_ref(), &flat) {
+                    Ok(ids) => {
+                        let mut off = 0usize;
+                        for req in run {
+                            let take = req.rows;
+                            let slice = ids[off..off + take].to_vec();
+                            off += take;
+                            reply_insert(req, slice, true);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("[coordinator] insert batch failed: {e:#}");
+                        for req in run {
+                            reply_insert(req, Vec::new(), false);
+                        }
+                    }
+                }
+            }
+            IngestRequest::Delete(req) => {
+                // deletes are cheap (no encode, one snapshot swap), and
+                // per-request `removed` accounting wants per-request
+                // calls — no coalescing needed
+                let Some(ix) = &ix else {
+                    reply_delete(req, 0, false);
+                    continue;
+                };
+                match ix.delete_batch(&req.keys) {
+                    Ok(removed) => reply_delete(req, removed, true),
+                    Err(e) => {
+                        eprintln!("[coordinator] delete batch failed: {e:#}");
+                        reply_delete(req, 0, false);
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -476,6 +673,72 @@ mod tests {
         let m = &server.metrics;
         assert_eq!(m.completed.load(Ordering::Relaxed), 32);
         Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    }
+
+    #[test]
+    fn streaming_backend_insert_search_delete_roundtrip() {
+        use crate::config::StreamConfig;
+        use crate::index::StreamingIndex;
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let base = Generator::new(Family::SiftLike, 31).generate(1, 1200);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let ix = Arc::new(StreamingIndex::new(
+            8, None,
+            StreamConfig { segment_rows: 256, ..Default::default() }));
+        let search = SearchConfig { rerank_l: 64, k: 10,
+                                    ..Default::default() };
+        let server = Server::start_with_backend(
+            Arc::new(Pq::train(&train.data, train.dim, 8, 32, 0, 6)),
+            IndexBackend::Streaming(ix.clone()),
+            search,
+            ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
+                          num_threads: 2, shard_rows: 256 },
+        );
+        // ingest the whole base through the coordinator in chunks
+        let mut all_ids = Vec::new();
+        for chunk in (0..base.len()).step_by(200) {
+            let hi = (chunk + 200).min(base.len());
+            let resp = server
+                .insert_blocking(base.rows(chunk, hi), hi - chunk)
+                .unwrap();
+            assert!(resp.accepted);
+            assert_eq!(resp.ids.len(), hi - chunk);
+            all_ids.extend(resp.ids);
+        }
+        // ids are the monotonic insert order = dataset row order
+        assert_eq!(all_ids, (0..base.len() as u32).collect::<Vec<_>>());
+        // served results equal the direct streaming search
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 6);
+        let mut cfg = search;
+        cfg.shard_rows = 256;
+        for qi in 0..queries.len() {
+            let resp = server.search_blocking(queries.row(qi), 10).unwrap();
+            let want = ix.search(&pq, queries.row(qi), &cfg);
+            assert_eq!(resp.neighbors, want, "query {qi}");
+        }
+        // delete a served neighbor and make sure it stops being served
+        let victim = server
+            .search_blocking(queries.row(0), 1)
+            .unwrap()
+            .neighbors[0];
+        let del = server.delete_blocking(&[victim, 4_000_000]).unwrap();
+        assert!(del.accepted);
+        assert_eq!(del.removed, 1, "unknown ids are ignored");
+        let after = server.search_blocking(queries.row(0), 10).unwrap();
+        assert!(!after.neighbors.contains(&victim));
+        server.shutdown();
+    }
+
+    #[test]
+    fn frozen_backend_rejects_ingest() {
+        let (server, base) = start_pq_server(4, 64);
+        let resp = server.insert_blocking(base.rows(0, 3), 3).unwrap();
+        assert!(!resp.accepted);
+        assert!(resp.ids.is_empty());
+        let del = server.delete_blocking(&[1, 2]).unwrap();
+        assert!(!del.accepted);
+        assert_eq!(del.removed, 0);
+        server.shutdown();
     }
 
     #[test]

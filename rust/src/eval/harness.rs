@@ -246,6 +246,24 @@ pub fn build_or_load_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
     Ok(ivf)
 }
 
+/// Build an in-memory streaming index by inserting `base` in fixed-size
+/// batches — the write path the recall gate and `unq ingest` verify
+/// against the frozen engines.  External ids come out as `0..n` in row
+/// order, so recall against the standard ground truth needs no remap.
+pub fn stream_ingest(quant: &dyn Quantizer, base: &Dataset,
+                     routing: Option<crate::index::Routing>,
+                     scfg: crate::config::StreamConfig, batch: usize)
+                     -> Result<crate::index::StreamingIndex> {
+    let ix = crate::index::StreamingIndex::new(quant.code_bytes(), routing,
+                                               scfg);
+    let step = batch.max(1);
+    for lo in (0..base.len()).step_by(step) {
+        let hi = (lo + step).min(base.len());
+        ix.insert_batch(quant, base.rows(lo, hi))?;
+    }
+    Ok(ix)
+}
+
 /// Train a shallow baseline or load it from the runs cache.
 pub fn train_or_load_shallow(cfg: &AppConfig, kind: QuantizerKind,
                              train: &Dataset) -> Result<(Box<dyn Quantizer>, f64)> {

@@ -32,5 +32,5 @@ pub mod plan;
 pub mod pool;
 
 pub use plan::{rerank_batch, shard_ranges, shard_ranges_in, Executor,
-               ScanTask};
+               IndexedScanTask, ScanTask};
 pub use pool::WorkerPool;

@@ -136,10 +136,37 @@ impl Executor {
     /// referencing that LUT; each task selects with integer scores and
     /// re-scores its survivors exactly, so the per-slot merge still
     /// compares exact f32 scores under the `(score, id)` total order.
+    /// (A single-index plan over [`Self::run_scan_tasks_multi_prec`].)
     pub fn run_scan_tasks_prec(&self, luts: &[Lut], index: &CompressedIndex,
                                ks: &[usize], tasks: &[ScanTask],
                                precision: ScanPrecision)
                                -> Vec<Vec<(f32, u32)>> {
+        let mapped: Vec<IndexedScanTask> = tasks
+            .iter()
+            .map(|t| IndexedScanTask {
+                index: 0, slot: t.slot, lut: t.lut, lo: t.lo, hi: t.hi,
+            })
+            .collect();
+        self.run_scan_tasks_multi_prec(luts, &[index], ks, &mapped, precision)
+    }
+
+    /// The most general plan: every task names the index it scans, so one
+    /// plan can fan out over several code matrices at once — the
+    /// streaming path plans `(query, segment[, list])` slots across all
+    /// sealed segments plus the active tail in a single submission
+    /// (`index::segment`), keeping the worker pool full even when the
+    /// row count is spread over many small segments.  Returned row ids
+    /// are **local to each task's index**; keep slots index-pure if the
+    /// caller needs to map them back (the streaming reduce does).
+    /// Same determinism contract as [`Self::run_scan_tasks`]: per slot,
+    /// parts merge in task-submission order, and quantized LUTs are
+    /// built once per plan and shared across all indexes.
+    pub fn run_scan_tasks_multi_prec(&self, luts: &[Lut],
+                                     indexes: &[&CompressedIndex],
+                                     ks: &[usize],
+                                     tasks: &[IndexedScanTask],
+                                     precision: ScanPrecision)
+                                     -> Vec<Vec<(f32, u32)>> {
         let qluts = quantize_luts(luts, precision);
         let nslots = ks.len();
         // per-slot ordinal of each task: its merge position within the slot
@@ -158,8 +185,8 @@ impl Executor {
                     counts.iter().map(|&c| Vec::with_capacity(c)).collect();
                 for t in tasks {
                     parts[t.slot].push(scan_range_topk_prec(
-                        &luts[t.lut], qluts[t.lut].as_ref(), index, t.lo,
-                        t.hi, ks[t.slot]));
+                        &luts[t.lut], qluts[t.lut].as_ref(),
+                        indexes[t.index], t.lo, t.hi, ks[t.slot]));
                 }
                 parts
                     .into_iter()
@@ -176,11 +203,12 @@ impl Executor {
                     let tx = tx.clone();
                     let lut = &luts[t.lut];
                     let qlut = qluts[t.lut].as_ref();
+                    let ix = indexes[t.index];
                     let k = ks[t.slot];
                     let (slot, ord) = (t.slot, ords[ti]);
                     let (lo, hi) = (t.lo, t.hi);
                     jobs.push(Box::new(move || {
-                        let part = scan_range_topk_prec(lut, qlut, index,
+                        let part = scan_range_topk_prec(lut, qlut, ix,
                                                         lo, hi, k);
                         let _ = tx.send((slot, ord, part));
                     }));
@@ -216,6 +244,18 @@ impl Executor {
 /// `slot` (merge order across a slot's tasks = submission order).
 #[derive(Clone, Copy, Debug)]
 pub struct ScanTask {
+    pub slot: usize,
+    pub lut: usize,
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// One unit of scan work in a multi-index plan: score rows `[lo, hi)` of
+/// `indexes[index]` with `luts[lut]` and merge into slot `slot` (row ids
+/// in the slot's results are local to that index).
+#[derive(Clone, Copy, Debug)]
+pub struct IndexedScanTask {
+    pub index: usize,
     pub slot: usize,
     pub lut: usize,
     pub lo: usize,
@@ -418,6 +458,39 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn multi_index_tasks_match_per_index_scans_merged() {
+        // two indexes, slots spanning both: slot 0 covers the whole of
+        // index 0 AND index 1 with lut 0 (row ids collide across indexes
+        // by design — the caller keeps slots index-pure when it needs to
+        // map rows back; here we only check the merged score multiset),
+        // slot 1 covers index 1 only with lut 1
+        use crate::config::ScanPrecision;
+        let ix0 = mk_index(300, 5, 21);
+        let ix1 = mk_index(170, 5, 22);
+        let luts: Vec<Lut> = (0..2).map(|i| mk_lut(5, 60 + i)).collect();
+        let tasks = vec![
+            IndexedScanTask { index: 0, slot: 0, lut: 0, lo: 0, hi: 300 },
+            IndexedScanTask { index: 1, slot: 0, lut: 0, lo: 0, hi: 170 },
+            IndexedScanTask { index: 1, slot: 1, lut: 1, lo: 40, hi: 160 },
+        ];
+        let ks = [12usize, 6];
+        for threads in [1usize, 3] {
+            let exec = Executor::new(threads);
+            let got = exec.run_scan_tasks_multi_prec(
+                &luts, &[&ix0, &ix1], &ks, &tasks, ScanPrecision::F32);
+            // slot 0: merge of both full scans under (score, id)
+            let want0 = merge_topk(vec![
+                scan_topk(&luts[0], &ix0, 12),
+                scan_topk(&luts[0], &ix1, 12),
+            ], 12);
+            assert_eq!(got[0], want0, "threads={threads} slot 0");
+            let want1 = crate::index::scan::scan_range_topk(
+                &luts[1], &ix1, 40, 160, 6);
+            assert_eq!(got[1], want1, "threads={threads} slot 1");
+        }
     }
 
     #[test]

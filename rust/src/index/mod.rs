@@ -22,6 +22,7 @@
 
 pub mod packed;
 pub mod scan;
+pub mod segment;
 
 use crate::config::SearchConfig;
 use crate::data::Dataset;
@@ -31,6 +32,7 @@ use crate::quant::{Lut, Quantizer};
 pub use packed::{PackedIndex, BLOCK};
 pub use scan::{scan_lut_topk, scan_lut_topk_u16, scan_lut_topk_u8,
                scan_topk};
+pub use segment::{Routing, StreamStats, StreamingIndex};
 
 /// Flat compressed database.
 pub struct CompressedIndex {

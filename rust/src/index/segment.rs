@@ -1,0 +1,1562 @@
+//! Mutable streaming index: WAL-backed segments with online compaction.
+//!
+//! The paper's system (and PRs 1–3) assume a frozen database: encode
+//! once, search forever.  This module opens the streaming workload —
+//! continuous inserts and deletes that keep the read path hot — with a
+//! log-structured design (`rust/DESIGN.md` §7):
+//!
+//! ```text
+//!            inserts (encode-on-insert)          deletes
+//!                     │                             │
+//!                     ▼                             ▼
+//!   WAL ──fsync──► active segment           tombstone bitmaps
+//!                     │ seal at segment_rows        │
+//!                     ▼                             │
+//!        sealed segments (packed, immutable) ◄──────┘
+//!                     │ compactor: drop dead rows, repack
+//!                     ▼
+//!            one merged sealed segment
+//! ```
+//!
+//! * **Segments** — every segment is an immutable `(codes, ids, offsets,
+//!   tombstones)` quadruple.  Sealed segments carry the BLOCK=32 packed
+//!   mirror for the integer fast-scan kernels; the active tail stays
+//!   flat (its blocked scan transposes on the fly — identical results).
+//!   With a [`Routing`], rows are grouped per coarse list inside every
+//!   segment (the IVF write path: inserts route through the coarse
+//!   quantizer, optionally encoding residuals).
+//! * **Epoch guard** — readers take an [`Arc`] snapshot of the whole
+//!   [`SegmentSet`]; every mutation builds a *new* set (sharing
+//!   untouched segments) and swaps it in under a short write lock,
+//!   bumping `generation`.  In-flight `run_scan_tasks_multi_prec` plans
+//!   keep their snapshot alive, so a concurrent seal/compact can never
+//!   tear an index out from under a scan.
+//! * **Durability** — when opened on a directory, every mutation is
+//!   logged through [`crate::store::wal`] and fsync'd before it becomes
+//!   visible; sealed state is checkpointed into [`crate::store::Store`]
+//!   archives (atomic save) at compaction, and recovery = load archives
+//!   + replay the WAL tail through the same apply paths the live
+//!   operations use.
+//! * **Search** — exactly the two-stage pipeline of the frozen indexes:
+//!   one executor plan fans out over `(query, segment[, probed list])`
+//!   slots at all three scan precisions, per-slot winners are remapped
+//!   to external ids, tombstones filtered (each slot over-fetches by its
+//!   segment's dead count so filtering can never starve the top-k), and
+//!   the lexicographic `merge_topk` reduce plus the batched decode
+//!   rerank finish per query.  With no deletes pending the results are
+//!   bit-identical to a flat [`super::SearchEngine`] over the same rows
+//!   — pinned by the equivalence property tests below.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{ensure, Context};
+
+use crate::config::{SearchConfig, StreamConfig};
+use crate::exec::{shard_ranges_in, Executor, IndexedScanTask};
+use crate::index::scan::merge_topk;
+use crate::index::CompressedIndex;
+use crate::ivf::CoarseQuantizer;
+use crate::linalg::{sq_l2, TopK};
+use crate::quant::{Lut, Quantizer};
+use crate::store::wal::{replay, Wal, WalRecord};
+use crate::store::{atomic_write, Store};
+use crate::util::json::Json;
+use crate::Result;
+
+/// Coarse routing of the write path: inserts are assigned to inverted
+/// lists via `coarse` and grouped per list inside every segment;
+/// `residual` encodes `x − centroid(x)` (classic IVFADC — searches then
+/// build residual-query LUTs per probed list, exactly like
+/// [`crate::ivf::IvfIndex`]).  The codebook must stay stable for the
+/// lifetime of a durable index (it is not persisted here).
+#[derive(Clone)]
+pub struct Routing {
+    pub coarse: Arc<CoarseQuantizer>,
+    pub residual: bool,
+}
+
+/// The immutable payload of a segment, shared by copy-on-write clones.
+struct SegmentBody {
+    codes: CompressedIndex,
+    /// external id of each stored row (ascending within every list)
+    ids: Vec<u32>,
+    /// list `l` occupies rows `[offsets[l], offsets[l+1])`; unrouted
+    /// indexes are a single list, `offsets == [0, n]`
+    offsets: Vec<usize>,
+}
+
+/// One segment: an immutable code matrix + row ids + tombstone bitmap.
+/// Cloning for a delete shares the body and copies only the bitmap.
+pub struct Segment {
+    pub seg_id: u64,
+    body: Arc<SegmentBody>,
+    /// tombstone bitmap, one bit per row
+    dead: Vec<u64>,
+    pub n_dead: usize,
+}
+
+impl Segment {
+    fn empty(seg_id: u64, stride: usize, num_lists: usize) -> Segment {
+        Segment {
+            seg_id,
+            body: Arc::new(SegmentBody {
+                codes: CompressedIndex::from_codes(0, stride, Vec::new()),
+                ids: Vec::new(),
+                offsets: vec![0; num_lists + 1],
+            }),
+            dead: Vec::new(),
+            n_dead: 0,
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.body.codes.n
+    }
+
+    #[inline]
+    pub fn live(&self) -> usize {
+        self.n() - self.n_dead
+    }
+
+    #[inline]
+    pub fn codes(&self) -> &CompressedIndex {
+        &self.body.codes
+    }
+
+    #[inline]
+    pub fn row_ids(&self) -> &[u32] {
+        &self.body.ids
+    }
+
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.body.offsets
+    }
+
+    #[inline]
+    pub fn is_dead(&self, row: usize) -> bool {
+        self.dead
+            .get(row / 64)
+            .is_some_and(|w| (w >> (row % 64)) & 1 == 1)
+    }
+
+    /// The list a stored row belongs to.
+    fn list_of(&self, row: usize) -> u32 {
+        (self.body.offsets.partition_point(|&o| o <= row) - 1) as u32
+    }
+
+    /// Copy-on-write tombstoning: same body, `rows` newly dead.
+    fn with_dead(&self, rows: &[u32]) -> Segment {
+        let mut dead = self.dead.clone();
+        dead.resize(self.n().div_ceil(64), 0);
+        for &row in rows {
+            dead[row as usize / 64] |= 1 << (row as usize % 64);
+        }
+        Segment {
+            seg_id: self.seg_id,
+            body: self.body.clone(),
+            dead,
+            n_dead: self.n_dead + rows.len(),
+        }
+    }
+
+    /// Persist into a [`Store`] archive (checkpoint path).
+    fn save(&self, store: &mut Store) {
+        let n = self.n();
+        let stride = self.body.codes.stride;
+        store.put_u8("seg_codes", &[n, stride], self.body.codes.codes.clone());
+        store.put_u32("seg_ids", &[n], self.body.ids.clone());
+        let offs: Vec<u32> =
+            self.body.offsets.iter().map(|&o| o as u32).collect();
+        store.put_u32("seg_offsets", &[offs.len()], offs);
+        let dead_rows: Vec<u32> = (0..n)
+            .filter(|&r| self.is_dead(r))
+            .map(|r| r as u32)
+            .collect();
+        store.put_u32("seg_dead", &[dead_rows.len()], dead_rows);
+        let meta = Json::obj(vec![
+            ("seg_id", Json::Num(self.seg_id as f64)),
+            ("n", Json::Num(n as f64)),
+            ("stride", Json::Num(stride as f64)),
+        ]);
+        store.put_meta("seg", &meta.render());
+    }
+
+    /// Load an archive written by [`Self::save`], validating the layout
+    /// so a corrupt file fails here instead of panicking inside a scan.
+    fn load(store: &Store, stride: usize, num_lists: usize)
+            -> Result<Segment> {
+        let meta = store.get_meta("seg").context("missing seg meta")?;
+        let meta = Json::parse(meta).context("parse seg meta")?;
+        let seg_id = meta.req_usize("seg_id")? as u64;
+        let n = meta.req_usize("n")?;
+        ensure!(meta.req_usize("stride")? == stride,
+                "segment stride mismatch");
+        let (cshape, codes) =
+            store.get_u8("seg_codes").context("missing seg_codes")?;
+        ensure!(cshape == [n, stride], "seg_codes shape {cshape:?}");
+        let (_, ids) = store.get_u32("seg_ids").context("missing seg_ids")?;
+        ensure!(ids.len() == n, "seg_ids length {}", ids.len());
+        let (_, offs) =
+            store.get_u32("seg_offsets").context("missing seg_offsets")?;
+        ensure!(offs.len() == num_lists + 1,
+                "seg_offsets length {} != num_lists + 1", offs.len());
+        let offsets: Vec<usize> = offs.iter().map(|&o| o as usize).collect();
+        ensure!(offsets.first() == Some(&0) && offsets.last() == Some(&n)
+                    && offsets.windows(2).all(|w| w[0] <= w[1]),
+                "seg_offsets must be non-decreasing over [0, {n}]");
+        let (_, dead_rows) =
+            store.get_u32("seg_dead").context("missing seg_dead")?;
+        ensure!(dead_rows.iter().all(|&r| (r as usize) < n),
+                "seg_dead has out-of-range rows");
+        let mut codes_ix =
+            CompressedIndex::from_codes(n, stride, codes.to_vec());
+        codes_ix.ensure_packed();
+        let seg = Segment {
+            seg_id,
+            body: Arc::new(SegmentBody {
+                codes: codes_ix,
+                ids: ids.to_vec(),
+                offsets,
+            }),
+            dead: Vec::new(),
+            n_dead: 0,
+        };
+        Ok(seg.with_dead(dead_rows))
+    }
+}
+
+/// An immutable snapshot of the whole index at one generation — what a
+/// search plans against, and what every mutation atomically replaces.
+pub struct SegmentSet {
+    pub generation: u64,
+    /// sealed segments, oldest first (ids ascend segment-to-segment)
+    pub sealed: Vec<Arc<Segment>>,
+    /// the append-only tail
+    pub active: Arc<Segment>,
+}
+
+impl SegmentSet {
+    pub fn total_rows(&self) -> usize {
+        self.sealed.iter().map(|s| s.n()).sum::<usize>() + self.active.n()
+    }
+
+    pub fn live_rows(&self) -> usize {
+        self.sealed.iter().map(|s| s.live()).sum::<usize>()
+            + self.active.live()
+    }
+}
+
+/// Writer-side state, serialized under one mutex (single-writer,
+/// snapshot-reader discipline).
+struct Writer {
+    /// next external id (monotonic for the index lifetime; u32 so ids
+    /// flow through the shared `(f32, u32)` scan/merge plumbing)
+    next_id: u32,
+    next_seg: u64,
+    /// external id → (segment id, stored row); pruned on delete
+    locate: HashMap<u32, (u64, u32)>,
+    durable: Option<Durable>,
+}
+
+struct Durable {
+    dir: PathBuf,
+    wal: Wal,
+    wal_epoch: u64,
+}
+
+/// Point-in-time counters for operators and tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamStats {
+    pub generation: u64,
+    pub sealed_segments: usize,
+    pub total_rows: usize,
+    pub live_rows: usize,
+    pub dead_rows: usize,
+}
+
+/// The mutable streaming index.  Shared-reference API throughout:
+/// searches never block behind writers (they clone the current snapshot
+/// Arc), and writers serialize under an internal mutex.
+pub struct StreamingIndex {
+    pub stride: usize,
+    pub routing: Option<Routing>,
+    cfg: StreamConfig,
+    snap: RwLock<Arc<SegmentSet>>,
+    writer: Mutex<Writer>,
+}
+
+impl StreamingIndex {
+    /// In-memory index (no durability) — benches, tests, and callers
+    /// that checkpoint some other way.
+    pub fn new(stride: usize, routing: Option<Routing>, cfg: StreamConfig)
+               -> StreamingIndex {
+        assert!(stride > 0, "stride must be positive");
+        assert!(cfg.segment_rows > 0, "segment_rows must be positive");
+        let nl = routing.as_ref().map_or(1, |r| r.coarse.num_lists());
+        let active = Arc::new(Segment::empty(0, stride, nl));
+        StreamingIndex {
+            stride,
+            routing,
+            cfg,
+            snap: RwLock::new(Arc::new(SegmentSet {
+                generation: 0,
+                sealed: Vec::new(),
+                active,
+            })),
+            writer: Mutex::new(Writer {
+                next_id: 0,
+                next_seg: 1,
+                locate: HashMap::new(),
+                durable: None,
+            }),
+        }
+    }
+
+    /// Durable index rooted at `dir`: creates the directory on first
+    /// open; afterwards recovers by loading the checkpointed segment
+    /// archives and replaying the WAL tail (torn tails are truncated —
+    /// see [`crate::store::wal`]).  `routing` must match what the index
+    /// was created with (the coarse codebook itself is the caller's to
+    /// persist; only its shape is validated here).
+    pub fn open(dir: &Path, stride: usize, routing: Option<Routing>,
+                cfg: StreamConfig) -> Result<StreamingIndex> {
+        std::fs::create_dir_all(dir)?;
+        let index = Self::new(stride, routing, cfg);
+        let nl = index.num_lists();
+        let sync = index.cfg.wal_sync.max(1);
+        let manifest_path = dir.join("manifest.json");
+        let mut w = index.writer.lock().expect("writer lock");
+
+        if !manifest_path.exists() {
+            let wal = Wal::create(&dir.join("wal_0.log"), stride, sync)?;
+            w.durable = Some(Durable {
+                dir: dir.to_path_buf(),
+                wal,
+                wal_epoch: 0,
+            });
+            let set = index.snapshot();
+            index.write_manifest(&w, &set)?;
+            drop(w);
+            return Ok(index);
+        }
+
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?}"))?;
+        let m = Json::parse(&text)
+            .with_context(|| format!("parse {manifest_path:?}"))?;
+        ensure!(m.req_usize("stride")? == stride,
+                "manifest stride != index stride {stride}");
+        ensure!(m.req_usize("num_lists")? == nl,
+                "manifest num_lists != routing num_lists {nl}");
+        let next_id = m.req_usize("next_id")? as u32;
+        let next_seg = m.req_usize("next_seg")? as u64;
+        let active_seg = m.req_usize("active_seg")? as u64;
+        let wal_epoch = m.req_usize("wal_epoch")? as u64;
+        let seg_ids: Vec<u64> = m
+            .get("segments")
+            .and_then(Json::as_arr)
+            .context("manifest missing segments")?
+            .iter()
+            .map(|v| v.as_usize().map(|s| s as u64)
+                .context("bad segment id"))
+            .collect::<Result<_>>()?;
+
+        let mut sealed = Vec::with_capacity(seg_ids.len());
+        for id in seg_ids {
+            let path = dir.join(format!("seg_{id}.store"));
+            let seg = Segment::load(&Store::load(&path)?, stride, nl)
+                .with_context(|| format!("load segment {path:?}"))?;
+            ensure!(seg.seg_id == id, "segment {path:?} carries id {}",
+                    seg.seg_id);
+            sealed.push(Arc::new(seg));
+        }
+        w.next_id = next_id;
+        w.next_seg = next_seg;
+        for seg in &sealed {
+            for (row, &id) in seg.row_ids().iter().enumerate() {
+                if seg.is_dead(row) {
+                    continue;
+                }
+                ensure!(
+                    w.locate.insert(id, (seg.seg_id, row as u32)).is_none(),
+                    "external id {id} stored twice across segments"
+                );
+            }
+        }
+        index.install(SegmentSet {
+            generation: 1,
+            sealed,
+            active: Arc::new(Segment::empty(active_seg, stride, nl)),
+        });
+
+        // replay the WAL tail through the live apply paths (durable is
+        // still None here, so replay never re-logs)
+        let wal_path = dir.join(format!("wal_{wal_epoch}.log"));
+        let wal = if wal_path.exists() {
+            let (records, good) = replay(&wal_path, stride)?;
+            index.apply_records(&mut w, &records)?;
+            Wal::open_append(&wal_path, stride, good, sync)?
+        } else {
+            Wal::create(&wal_path, stride, sync)?
+        };
+        w.durable = Some(Durable {
+            dir: dir.to_path_buf(),
+            wal,
+            wal_epoch,
+        });
+        drop(w);
+        Ok(index)
+    }
+
+    #[inline]
+    pub fn num_lists(&self) -> usize {
+        self.routing.as_ref().map_or(1, |r| r.coarse.num_lists())
+    }
+
+    /// The current immutable snapshot (cheap: one Arc clone).
+    pub fn snapshot(&self) -> Arc<SegmentSet> {
+        self.snap.read().expect("snapshot lock").clone()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.snapshot().generation
+    }
+
+    /// Live (non-tombstoned) rows.
+    pub fn len(&self) -> usize {
+        self.snapshot().live_rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> StreamStats {
+        let s = self.snapshot();
+        let total = s.total_rows();
+        let live = s.live_rows();
+        StreamStats {
+            generation: s.generation,
+            sealed_segments: s.sealed.len(),
+            total_rows: total,
+            live_rows: live,
+            dead_rows: total - live,
+        }
+    }
+
+    fn install(&self, set: SegmentSet) {
+        *self.snap.write().expect("snapshot lock") = Arc::new(set);
+    }
+
+    // -- write path --------------------------------------------------------
+
+    /// Encode-on-insert: assign fresh external ids to `vectors` (flat
+    /// `rows × dim`), route + encode them in one `encode_batch` call,
+    /// log + fsync, then publish a new snapshot.  Seals the active
+    /// segment at `segment_rows` and compacts when enough sealed
+    /// segments accumulate.  Returns the assigned ids.
+    pub fn insert_batch(&self, quant: &dyn Quantizer, vectors: &[f32])
+                        -> Result<Vec<u32>> {
+        let dim = quant.dim();
+        ensure!(quant.code_bytes() == self.stride,
+                "quantizer code_bytes {} != index stride {}",
+                quant.code_bytes(), self.stride);
+        ensure!(dim > 0 && vectors.len() % dim == 0,
+                "vectors must be rows × dim = {dim}");
+        let rows = vectors.len() / dim;
+        if rows == 0 {
+            return Ok(Vec::new());
+        }
+        let mut w = self.writer.lock().expect("writer lock");
+        ensure!(
+            (w.next_id as u64) + (rows as u64) < u32::MAX as u64,
+            "external id space exhausted"
+        );
+
+        let lists: Vec<u32> = match &self.routing {
+            Some(r) => (0..rows)
+                .map(|i| r.coarse.assign(&vectors[i * dim..(i + 1) * dim]))
+                .collect(),
+            None => vec![0; rows],
+        };
+        let residual = self.routing.as_ref().is_some_and(|r| r.residual);
+        let codes = if residual {
+            let r = self.routing.as_ref().expect("residual implies routing");
+            let mut shifted = vectors.to_vec();
+            for i in 0..rows {
+                let c = r.coarse.centroid(lists[i] as usize);
+                for (v, cv) in shifted[i * dim..(i + 1) * dim]
+                    .iter_mut()
+                    .zip(c)
+                {
+                    *v -= cv;
+                }
+            }
+            quant.encode_batch(&shifted)
+        } else {
+            quant.encode_batch(vectors)
+        };
+        let ids: Vec<u32> =
+            (w.next_id..w.next_id + rows as u32).collect();
+        // reserve the ids up front: even if the WAL lands only part of
+        // this batch (fsync failure mid-batch at large `wal_sync`), the
+        // ids are consumed and can never be re-issued — recovery may
+        // resurrect a prefix of a failed batch, never a duplicate id
+        w.next_id += rows as u32;
+
+        if let Some(d) = &mut w.durable {
+            let mut failed = None;
+            for i in 0..rows {
+                let rec = WalRecord::Insert {
+                    id: ids[i],
+                    list: lists[i],
+                    code: codes[i * self.stride..(i + 1) * self.stride]
+                        .to_vec(),
+                };
+                if let Err(e) = d.wal.append(&rec) {
+                    failed = Some(e);
+                    break;
+                }
+            }
+            if failed.is_none() {
+                failed = d.wal.commit().err();
+            }
+            if let Some(e) = failed {
+                d.wal.abort_batch();
+                return Err(e);
+            }
+        }
+        self.apply_insert(&mut w, &ids, &lists, &codes)?;
+
+        if self.snapshot().active.n() >= self.cfg.segment_rows {
+            self.seal(&mut w)?;
+            if self.snapshot().sealed.len() >= self.cfg.compact_segments {
+                self.compact_locked(&mut w)?;
+            }
+        }
+        Ok(ids)
+    }
+
+    /// Tombstone external ids; unknown or already-deleted ids are
+    /// ignored.  Returns how many rows were actually tombstoned.
+    pub fn delete_batch(&self, ids: &[u32]) -> Result<usize> {
+        let mut w = self.writer.lock().expect("writer lock");
+        // resolve first, mutate nothing until the WAL batch is durable —
+        // a failed log write must leave the rows deletable (locate
+        // intact), not silently undead
+        let mut hits: HashMap<u64, Vec<u32>> = HashMap::new();
+        let mut removed: Vec<u32> = Vec::new();
+        let mut seen: HashSet<u32> = HashSet::with_capacity(ids.len());
+        for &id in ids {
+            if !seen.insert(id) {
+                continue; // duplicate id within one batch
+            }
+            if let Some(&(seg, row)) = w.locate.get(&id) {
+                hits.entry(seg).or_default().push(row);
+                removed.push(id);
+            }
+        }
+        if removed.is_empty() {
+            return Ok(0);
+        }
+        if let Some(d) = &mut w.durable {
+            let mut failed = None;
+            for &id in &removed {
+                if let Err(e) = d.wal.append(&WalRecord::Delete { id }) {
+                    failed = Some(e);
+                    break;
+                }
+            }
+            if failed.is_none() {
+                failed = d.wal.commit().err();
+            }
+            if let Some(e) = failed {
+                d.wal.abort_batch();
+                return Err(e);
+            }
+        }
+        for id in &removed {
+            w.locate.remove(id);
+        }
+        self.apply_delete(&w, &hits);
+        Ok(removed.len())
+    }
+
+    /// Merge all sealed segments into one, dropping tombstoned rows and
+    /// repacking into the BLOCK=32 fast-scan layout, then atomically
+    /// swap the new set in.  On a durable index this is also the
+    /// checkpoint: merged archives are saved (atomic rename), the WAL
+    /// rotates to a fresh epoch carrying only the re-logged active tail,
+    /// and the manifest commits the whole transition in one rename.
+    /// Returns whether a merge actually happened.
+    pub fn compact(&self) -> Result<bool> {
+        let mut w = self.writer.lock().expect("writer lock");
+        self.compact_locked(&mut w)
+    }
+
+    // Shared apply paths: the live operations call these after logging,
+    // and WAL replay calls them directly — recovery is the same code.
+
+    fn apply_insert(&self, w: &mut Writer, ids: &[u32], lists: &[u32],
+                    codes: &[u8]) -> Result<()> {
+        let nl = self.num_lists();
+        let stride = self.stride;
+        let rows = ids.len();
+        ensure!(lists.len() == rows && codes.len() == rows * stride,
+                "insert batch shape mismatch");
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nl];
+        for (i, &l) in lists.iter().enumerate() {
+            ensure!((l as usize) < nl, "routed list {l} out of range");
+            buckets[l as usize].push(i);
+        }
+
+        let snap = self.snapshot();
+        let act = &snap.active;
+        let n = act.n() + rows;
+        let mut codes_out = Vec::with_capacity(n * stride);
+        let mut ids_out: Vec<u32> = Vec::with_capacity(n);
+        let mut offsets = Vec::with_capacity(nl + 1);
+        offsets.push(0usize);
+        let mut dead = vec![0u64; n.div_ceil(64)];
+        let mut n_dead = act.n_dead;
+        if nl == 1 {
+            // unrouted fast path: rows never shift, so bulk-copy the
+            // tail, keep its bitmap, and touch `locate` only for the
+            // appended rows — O(batch + memcpy) instead of a per-row
+            // rebuild of the whole active segment
+            codes_out.extend_from_slice(&act.codes().codes);
+            ids_out.extend_from_slice(act.row_ids());
+            dead[..act.dead.len()].copy_from_slice(&act.dead);
+            for (i, &id) in ids.iter().enumerate() {
+                w.locate.insert(id, (act.seg_id, (act.n() + i) as u32));
+                ids_out.push(id);
+            }
+            codes_out.extend_from_slice(codes);
+            offsets.push(n);
+        } else {
+            n_dead = 0;
+            for l in 0..nl {
+                for row in act.offsets()[l]..act.offsets()[l + 1] {
+                    let new_row = ids_out.len();
+                    let id = act.row_ids()[row];
+                    if act.is_dead(row) {
+                        dead[new_row / 64] |= 1 << (new_row % 64);
+                        n_dead += 1;
+                    } else {
+                        w.locate.insert(id, (act.seg_id, new_row as u32));
+                    }
+                    ids_out.push(id);
+                    codes_out.extend_from_slice(act.codes().code(row));
+                }
+                for &i in &buckets[l] {
+                    let new_row = ids_out.len();
+                    w.locate.insert(ids[i], (act.seg_id, new_row as u32));
+                    ids_out.push(ids[i]);
+                    codes_out.extend_from_slice(
+                        &codes[i * stride..(i + 1) * stride]);
+                }
+                offsets.push(ids_out.len());
+            }
+        }
+        let max_id = *ids.iter().max().expect("rows > 0");
+        w.next_id = w.next_id.max(max_id + 1);
+
+        self.install(SegmentSet {
+            generation: snap.generation + 1,
+            sealed: snap.sealed.clone(),
+            active: Arc::new(Segment {
+                seg_id: act.seg_id,
+                body: Arc::new(SegmentBody {
+                    codes: CompressedIndex::from_codes(n, stride, codes_out),
+                    ids: ids_out,
+                    offsets,
+                }),
+                dead,
+                n_dead,
+            }),
+        });
+        Ok(())
+    }
+
+    fn apply_delete(&self, _w: &Writer, hits: &HashMap<u64, Vec<u32>>) {
+        let snap = self.snapshot();
+        let sealed: Vec<Arc<Segment>> = snap
+            .sealed
+            .iter()
+            .map(|s| match hits.get(&s.seg_id) {
+                Some(rows) => Arc::new(s.with_dead(rows)),
+                None => s.clone(),
+            })
+            .collect();
+        let active = match hits.get(&snap.active.seg_id) {
+            Some(rows) => Arc::new(snap.active.with_dead(rows)),
+            None => snap.active.clone(),
+        };
+        self.install(SegmentSet {
+            generation: snap.generation + 1,
+            sealed,
+            active,
+        });
+    }
+
+    /// Convert the active tail into a packed sealed segment and start a
+    /// fresh one.  Row numbering is unchanged, so the id map needs no
+    /// update (the sealed segment keeps its `seg_id`).
+    fn seal(&self, w: &mut Writer) -> Result<()> {
+        let snap = self.snapshot();
+        let act = &snap.active;
+        if act.n() == 0 {
+            return Ok(());
+        }
+        if let Some(d) = &mut w.durable {
+            d.wal.append(&WalRecord::Seal { seg_id: act.seg_id })?;
+            d.wal.commit()?;
+        }
+        let mut codes_ix = CompressedIndex::from_codes(
+            act.n(), self.stride, act.codes().codes.clone());
+        codes_ix.ensure_packed();
+        let mut sealed = snap.sealed.clone();
+        sealed.push(Arc::new(Segment {
+            seg_id: act.seg_id,
+            body: Arc::new(SegmentBody {
+                codes: codes_ix,
+                ids: act.row_ids().to_vec(),
+                offsets: act.offsets().to_vec(),
+            }),
+            dead: act.dead.clone(),
+            n_dead: act.n_dead,
+        }));
+        let next = w.next_seg;
+        w.next_seg += 1;
+        self.install(SegmentSet {
+            generation: snap.generation + 1,
+            sealed,
+            active: Arc::new(Segment::empty(next, self.stride,
+                                            self.num_lists())),
+        });
+        Ok(())
+    }
+
+    fn compact_locked(&self, w: &mut Writer) -> Result<bool> {
+        let snap = self.snapshot();
+        let sealed_dead: usize =
+            snap.sealed.iter().map(|s| s.n_dead).sum();
+        let needs_merge = snap.sealed.len() > 1
+            || (snap.sealed.len() == 1 && sealed_dead > 0);
+        if !needs_merge {
+            // nothing to merge; still checkpoint durable state so an
+            // explicit compact() bounds WAL growth
+            if w.durable.is_some() {
+                self.checkpoint(w, &self.snapshot())?;
+            }
+            return Ok(false);
+        }
+
+        let nl = self.num_lists();
+        let stride = self.stride;
+        let live: usize = snap.sealed.iter().map(|s| s.live()).sum();
+        let mut codes_out = Vec::with_capacity(live * stride);
+        let mut ids_out: Vec<u32> = Vec::with_capacity(live);
+        let mut offsets = Vec::with_capacity(nl + 1);
+        offsets.push(0usize);
+        for l in 0..nl {
+            // oldest-first keeps ids ascending within the merged list
+            // (ids ascend segment-to-segment by construction)
+            for seg in &snap.sealed {
+                for row in seg.offsets()[l]..seg.offsets()[l + 1] {
+                    if seg.is_dead(row) {
+                        continue;
+                    }
+                    ids_out.push(seg.row_ids()[row]);
+                    codes_out.extend_from_slice(seg.codes().code(row));
+                }
+            }
+            offsets.push(ids_out.len());
+        }
+
+        let sealed = if ids_out.is_empty() {
+            Vec::new() // every sealed row was dead — drop them all
+        } else {
+            let seg_id = w.next_seg;
+            w.next_seg += 1;
+            for (row, &id) in ids_out.iter().enumerate() {
+                w.locate.insert(id, (seg_id, row as u32));
+            }
+            let mut codes_ix =
+                CompressedIndex::from_codes(ids_out.len(), stride, codes_out);
+            codes_ix.ensure_packed();
+            vec![Arc::new(Segment {
+                seg_id,
+                body: Arc::new(SegmentBody {
+                    codes: codes_ix,
+                    ids: ids_out,
+                    offsets,
+                }),
+                dead: Vec::new(),
+                n_dead: 0,
+            })]
+        };
+        self.install(SegmentSet {
+            generation: snap.generation + 1,
+            sealed,
+            active: snap.active.clone(),
+        });
+        if w.durable.is_some() {
+            self.checkpoint(w, &self.snapshot())?;
+        }
+        Ok(true)
+    }
+
+    /// Durable checkpoint: archive every sealed segment, write a fresh
+    /// WAL epoch re-logging the active tail, then commit the manifest —
+    /// the single atomic rename that makes the transition real.  A crash
+    /// anywhere before that rename recovers the previous checkpoint +
+    /// previous WAL instead; nothing is ever half-applied.
+    fn checkpoint(&self, w: &mut Writer, set: &SegmentSet) -> Result<()> {
+        let (dir, old_epoch) = {
+            let d = w.durable.as_ref().expect("checkpoint needs durability");
+            (d.dir.clone(), d.wal_epoch)
+        };
+        for seg in &set.sealed {
+            let mut store = Store::new();
+            seg.save(&mut store);
+            store.save(&dir.join(format!("seg_{}.store", seg.seg_id)))?;
+        }
+        let new_epoch = old_epoch + 1;
+        let wal_path = dir.join(format!("wal_{new_epoch}.log"));
+        let mut wal =
+            Wal::create(&wal_path, self.stride, self.cfg.wal_sync.max(1))?;
+        let act = &set.active;
+        for row in 0..act.n() {
+            wal.append(&WalRecord::Insert {
+                id: act.row_ids()[row],
+                list: act.list_of(row),
+                code: act.codes().code(row).to_vec(),
+            })?;
+        }
+        for row in 0..act.n() {
+            if act.is_dead(row) {
+                wal.append(&WalRecord::Delete { id: act.row_ids()[row] })?;
+            }
+        }
+        wal.commit()?;
+        // the manifest rename is the commit point; swap the live handle
+        // only after it lands, so a failed checkpoint leaves the old
+        // epoch (and its intact WAL) in charge
+        w.durable.as_mut().expect("still durable").wal_epoch = new_epoch;
+        if let Err(e) = self.write_manifest(w, set) {
+            w.durable.as_mut().expect("still durable").wal_epoch = old_epoch;
+            return Err(e);
+        }
+        let d = w.durable.as_mut().expect("still durable");
+        d.wal = wal;
+        if let Ok(entries) = std::fs::read_dir(&d.dir) {
+            let keep: Vec<String> = set
+                .sealed
+                .iter()
+                .map(|s| format!("seg_{}.store", s.seg_id))
+                .collect();
+            let live_wal = format!("wal_{new_epoch}.log");
+            for e in entries.flatten() {
+                let name = e.file_name().to_string_lossy().into_owned();
+                let stale_seg = name.starts_with("seg_")
+                    && name.ends_with(".store")
+                    && !keep.contains(&name);
+                // also reap wal epochs orphaned by earlier crashes
+                // between a checkpoint's commit point and its cleanup
+                let stale_wal = name.starts_with("wal_")
+                    && name.ends_with(".log")
+                    && name != live_wal;
+                if stale_seg || stale_wal {
+                    let _ = std::fs::remove_file(e.path());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn write_manifest(&self, w: &Writer, set: &SegmentSet) -> Result<()> {
+        let d = w.durable.as_ref().expect("manifest needs durability");
+        let manifest = Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("stride", Json::Num(self.stride as f64)),
+            ("num_lists", Json::Num(self.num_lists() as f64)),
+            ("next_id", Json::Num(w.next_id as f64)),
+            ("next_seg", Json::Num(w.next_seg as f64)),
+            ("active_seg", Json::Num(set.active.seg_id as f64)),
+            ("wal_epoch", Json::Num(d.wal_epoch as f64)),
+            ("segments", Json::Arr(
+                set.sealed
+                    .iter()
+                    .map(|s| Json::Num(s.seg_id as f64))
+                    .collect(),
+            )),
+        ]);
+        atomic_write(&d.dir.join("manifest.json"),
+                     manifest.render_pretty().as_bytes())
+    }
+
+    /// Replay a WAL tail through the live apply paths (recovery).
+    fn apply_records(&self, w: &mut Writer, records: &[WalRecord])
+                     -> Result<()> {
+        let mut i = 0usize;
+        while i < records.len() {
+            match &records[i] {
+                WalRecord::Insert { .. } => {
+                    let mut ids = Vec::new();
+                    let mut lists = Vec::new();
+                    let mut codes = Vec::new();
+                    while let Some(WalRecord::Insert { id, list, code }) =
+                        records.get(i)
+                    {
+                        ids.push(*id);
+                        lists.push(*list);
+                        codes.extend_from_slice(code);
+                        i += 1;
+                    }
+                    self.apply_insert(w, &ids, &lists, &codes)?;
+                }
+                WalRecord::Delete { .. } => {
+                    let mut hits: HashMap<u64, Vec<u32>> = HashMap::new();
+                    while let Some(WalRecord::Delete { id }) = records.get(i)
+                    {
+                        if let Some((seg, row)) = w.locate.remove(id) {
+                            hits.entry(seg).or_default().push(row);
+                        }
+                        i += 1;
+                    }
+                    if !hits.is_empty() {
+                        self.apply_delete(w, &hits);
+                    }
+                }
+                WalRecord::Seal { seg_id } => {
+                    ensure!(self.snapshot().active.seg_id == *seg_id,
+                            "wal seal of segment {seg_id} does not match \
+                             the active segment");
+                    self.seal_replayed(w)?;
+                    i += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// [`Self::seal`] without the WAL append (the record being replayed
+    /// *is* the seal).
+    fn seal_replayed(&self, w: &mut Writer) -> Result<()> {
+        let durable = w.durable.take();
+        let r = self.seal(w);
+        w.durable = durable;
+        r
+    }
+
+    // -- read path ---------------------------------------------------------
+
+    /// Single query on the inline executor (mirrors
+    /// [`super::SearchEngine::search`]).
+    pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
+                  cfg: &SearchConfig) -> Vec<u32> {
+        self.search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)
+            .pop()
+            .expect("one query in, one result out")
+    }
+
+    /// Batched two-stage search over the current snapshot, returning
+    /// external ids.  `cfg.nprobe` applies when routed (0 = all lists);
+    /// `cfg.scan_precision` selects the per-segment kernel exactly as on
+    /// the frozen paths.
+    pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
+                           queries: &[&[f32]], ks: &[usize],
+                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+        assert_eq!(queries.len(), ks.len(), "one k per query");
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        let snap = self.snapshot();
+        let segs: Vec<&Segment> = snap
+            .sealed
+            .iter()
+            .map(|s| s.as_ref())
+            .chain(std::iter::once(snap.active.as_ref()))
+            .collect();
+        let nl = self.num_lists();
+        let routed = self.routing.is_some();
+        let residual = self.routing.as_ref().is_some_and(|r| r.residual);
+        let nprobe = if !routed || cfg.nprobe == 0 {
+            nl
+        } else {
+            cfg.nprobe.min(nl)
+        };
+        let do_rerank = !cfg.no_rerank && quant.supports_rerank();
+        let ls: Vec<usize> = ks
+            .iter()
+            .map(|&k| {
+                let l = if do_rerank { cfg.rerank_l.max(k) } else { k };
+                l.max(1)
+            })
+            .collect();
+
+        // coarse selection + one LUT per query (flat / non-residual) or
+        // per (query, probed list) (residual), shared across segments
+        let probes: Vec<Vec<u32>> = match (&self.routing, nprobe == nl) {
+            (Some(r), false) => queries
+                .iter()
+                .map(|q| r.coarse.nearest_lists(q, nprobe))
+                .collect(),
+            _ => queries
+                .iter()
+                .map(|_| (0..nl as u32).collect())
+                .collect(),
+        };
+        let mut lut_of: Vec<Vec<usize>> = Vec::with_capacity(queries.len());
+        let mut residual_qs: Vec<Vec<f32>> = Vec::new();
+        for (qi, probe) in probes.iter().enumerate() {
+            let mut per = Vec::with_capacity(probe.len());
+            for &l in probe {
+                per.push(if residual {
+                    let r = self.routing.as_ref().expect("routed");
+                    let c = r.coarse.centroid(l as usize);
+                    residual_qs.push(
+                        queries[qi].iter().zip(c).map(|(a, b)| a - b)
+                            .collect());
+                    residual_qs.len() - 1
+                } else {
+                    qi
+                });
+            }
+            lut_of.push(per);
+        }
+        let luts: Vec<Lut> = if residual {
+            let refs: Vec<&[f32]> =
+                residual_qs.iter().map(|v| v.as_slice()).collect();
+            quant.lut_batch(&refs)
+        } else {
+            quant.lut_batch(queries)
+        };
+
+        // one slot per (query, probed list, segment) with live rows; the
+        // slot over-fetches by the segment's dead count so tombstone
+        // filtering can never starve the merged top-k
+        let total = snap.total_rows();
+        let es = exec.effective_shard_rows(total.max(1), cfg.shard_rows);
+        let mut slot_query: Vec<usize> = Vec::new();
+        let mut slot_list: Vec<u32> = Vec::new();
+        let mut slot_seg: Vec<usize> = Vec::new();
+        let mut slot_ks: Vec<usize> = Vec::new();
+        let mut tasks: Vec<IndexedScanTask> = Vec::new();
+        for (qi, probe) in probes.iter().enumerate() {
+            for (pi, &l) in probe.iter().enumerate() {
+                for (si, seg) in segs.iter().enumerate() {
+                    let (lo, hi) = (seg.offsets()[l as usize],
+                                    seg.offsets()[l as usize + 1]);
+                    if lo == hi {
+                        continue;
+                    }
+                    let slot = slot_ks.len();
+                    slot_query.push(qi);
+                    slot_list.push(l);
+                    slot_seg.push(si);
+                    // the range can hold at most min(n_dead, hi - lo)
+                    // tombstones, so this over-fetch stays lossless while
+                    // bounding heap work when lists are much smaller than
+                    // the segment's total dead count
+                    slot_ks.push(ls[qi] + seg.n_dead.min(hi - lo));
+                    for (a, b) in shard_ranges_in(lo, hi, es) {
+                        tasks.push(IndexedScanTask {
+                            index: si,
+                            slot,
+                            lut: lut_of[qi][pi],
+                            lo: a,
+                            hi: b,
+                        });
+                    }
+                }
+            }
+        }
+        let indexes: Vec<&CompressedIndex> =
+            segs.iter().map(|s| s.codes()).collect();
+        let parts = exec.run_scan_tasks_multi_prec(
+            &luts, &indexes, &slot_ks, &tasks, cfg.scan_precision);
+
+        // per-query reduce: drop tombstones, remap rows to external ids,
+        // fold through the lexicographic merge (decomposition-invariant)
+        let mut parts_by_q: Vec<Vec<Vec<(f32, u32)>>> =
+            (0..queries.len()).map(|_| Vec::new()).collect();
+        let mut aux: Vec<HashMap<u32, (u32, u32, u32)>> =
+            (0..queries.len()).map(|_| HashMap::new()).collect();
+        for (slot, part) in parts.into_iter().enumerate() {
+            let (qi, si) = (slot_query[slot], slot_seg[slot]);
+            let seg = segs[si];
+            let mapped: Vec<(f32, u32)> = part
+                .into_iter()
+                .filter(|&(_, row)| !seg.is_dead(row as usize))
+                .map(|(score, row)| {
+                    let id = seg.row_ids()[row as usize];
+                    aux[qi].insert(id, (si as u32, row, slot_list[slot]));
+                    (score, id)
+                })
+                .collect();
+            parts_by_q[qi].push(mapped);
+        }
+        let cands: Vec<Vec<(f32, u32)>> = parts_by_q
+            .into_iter()
+            .enumerate()
+            .map(|(qi, q_parts)| merge_topk(q_parts, ls[qi]))
+            .collect();
+
+        if !do_rerank {
+            return cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect();
+        }
+        self.rerank_batch(quant, &segs, queries, &cands, &aux, ks)
+    }
+
+    /// Stage 2 over segments: gather candidate codes, decode them with
+    /// one `reconstruct_batch` call, add the list centroid back for
+    /// residual codes, rank by exact `d1` (mirrors the IVF reranker).
+    #[allow(clippy::type_complexity)]
+    fn rerank_batch(&self, quant: &dyn Quantizer, segs: &[&Segment],
+                    queries: &[&[f32]], cands: &[Vec<(f32, u32)>],
+                    aux: &[HashMap<u32, (u32, u32, u32)>], ks: &[usize])
+                    -> Vec<Vec<u32>> {
+        let dim = quant.dim();
+        let total: usize = cands.iter().map(|c| c.len()).sum();
+        let mut codes = Vec::with_capacity(total * self.stride);
+        for (qi, c) in cands.iter().enumerate() {
+            for &(_, id) in c {
+                let (si, row, _) = aux[qi][&id];
+                codes.extend_from_slice(
+                    segs[si as usize].codes().code(row as usize));
+            }
+        }
+        let mut recons = vec![0.0f32; total * dim];
+        if !quant.reconstruct_batch(&codes, &mut recons) {
+            // no decoder: keep scan order
+            return cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect();
+        }
+        let residual = self.routing.as_ref().is_some_and(|r| r.residual);
+        let mut out = Vec::with_capacity(queries.len());
+        let mut off = 0usize;
+        for (qi, (&q, c)) in queries.iter().zip(cands).enumerate() {
+            let k = ks[qi];
+            if c.is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            let mut top = TopK::new(k.min(c.len()));
+            for (ci, &(_, id)) in c.iter().enumerate() {
+                let rec = &recons[(off + ci) * dim..(off + ci + 1) * dim];
+                let d = if residual {
+                    let (_, _, l) = aux[qi][&id];
+                    let r = self.routing.as_ref().expect("routed");
+                    d1_residual(q, rec, r.coarse.centroid(l as usize))
+                } else {
+                    sq_l2(q, rec)
+                };
+                top.push(d, id);
+            }
+            off += c.len();
+            out.push(
+                top.into_sorted().into_iter().map(|(_, id)| id).collect());
+        }
+        out
+    }
+}
+
+/// `‖q − (centroid + recon)‖²` without materializing the sum.
+#[inline]
+fn d1_residual(q: &[f32], recon: &[f32], centroid: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for ((&qv, &rv), &cv) in q.iter().zip(recon).zip(centroid) {
+        let d = qv - (rv + cv);
+        acc += d * d;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScanPrecision;
+    use crate::data::{synthetic::Generator, Dataset, Family};
+    use crate::index::SearchEngine;
+    use crate::ivf::IvfIndex;
+    use crate::quant::pq::Pq;
+    use crate::util::{prop, rng::SplitMix64};
+
+    fn setup(n_base: usize) -> (Dataset, Dataset, Dataset, Pq) {
+        let gen = Generator::new(Family::SiftLike, 77);
+        let train = gen.generate(0, 1000);
+        let base = gen.generate(1, n_base);
+        let queries = gen.generate(2, 8);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 8);
+        (train, base, queries, pq)
+    }
+
+    fn qrefs(d: &Dataset) -> Vec<&[f32]> {
+        (0..d.len()).map(|qi| d.row(qi)).collect()
+    }
+
+    fn scfg(segment_rows: usize) -> StreamConfig {
+        StreamConfig { segment_rows, compact_segments: 1000, wal_sync: 8 }
+    }
+
+    /// Flat rebuild of the surviving rows, ordered by ascending external
+    /// id, plus the row → external-id map.
+    fn rebuild(pq: &Pq, base: &Dataset, survivors: &[u32])
+               -> (CompressedIndex, Vec<u32>) {
+        let mut kept = Vec::with_capacity(survivors.len() * base.dim);
+        for &id in survivors {
+            kept.extend_from_slice(base.row(id as usize));
+        }
+        let kept = Dataset::new(base.dim, kept);
+        (CompressedIndex::build(pq, &kept), survivors.to_vec())
+    }
+
+    fn map_rows(results: Vec<Vec<u32>>, to_ext: &[u32]) -> Vec<Vec<u32>> {
+        results
+            .into_iter()
+            .map(|r| r.into_iter().map(|row| to_ext[row as usize]).collect())
+            .collect()
+    }
+
+    #[test]
+    fn insert_only_is_bit_identical_to_flat_engine() {
+        // fresh inserts assign ids 0..n in dataset order, so the
+        // streaming search must equal the frozen engine exactly —
+        // across seal boundaries, with and without rerank
+        let (_, base, queries, pq) = setup(1700);
+        let ix = StreamingIndex::new(8, None, scfg(300));
+        // chunked inserts so several seal boundaries actually fire (a
+        // single oversized batch seals as one big segment)
+        for lo in (0..base.len()).step_by(257) {
+            let hi = (lo + 257).min(base.len());
+            ix.insert_batch(&pq, base.rows(lo, hi)).unwrap();
+        }
+        assert!(ix.snapshot().sealed.len() >= 4, "seals must have fired");
+        assert_eq!(ix.len(), 1700);
+        let flat = CompressedIndex::build(&pq, &base);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        for no_rerank in [false, true] {
+            let cfg = SearchConfig { rerank_l: 60, k: 10, no_rerank,
+                                     ..Default::default() };
+            let want =
+                SearchEngine::new(&pq, &flat, cfg).search_batch(&qs);
+            let got = ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                         &cfg);
+            assert_eq!(got, want, "no_rerank={no_rerank}");
+        }
+    }
+
+    #[test]
+    fn empty_and_fully_deleted_index_return_empty_results() {
+        let (_, base, queries, pq) = setup(300);
+        let ix = StreamingIndex::new(8, None, scfg(100));
+        let qs = qrefs(&queries);
+        let ks = vec![5usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 20, k: 5, ..Default::default() };
+        let empty =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert!(empty.iter().all(|r| r.is_empty()));
+        let ids = ix.insert_batch(&pq, &base.data).unwrap();
+        assert_eq!(ix.delete_batch(&ids).unwrap(), 300);
+        assert_eq!(ix.len(), 0);
+        let gone =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert!(gone.iter().all(|r| r.is_empty()));
+        // compaction drops every sealed tombstone
+        assert!(ix.compact().unwrap());
+        let st = ix.stats();
+        assert_eq!(st.total_rows - st.live_rows, ix.snapshot().active.n_dead,
+                   "sealed segments must hold no tombstones after compact");
+    }
+
+    #[test]
+    fn deletes_pull_in_the_next_best_exactly() {
+        let (_, base, queries, pq) = setup(1200);
+        let ix = StreamingIndex::new(8, None, scfg(250));
+        ix.insert_batch(&pq, &base.data).unwrap();
+        let cfg = SearchConfig { rerank_l: 50, k: 5, num_threads: 2,
+                                 shard_rows: 128, ..Default::default() };
+        let q = queries.row(0);
+        let before = ix.search(&pq, q, &cfg);
+        assert_eq!(ix.delete_batch(&before).unwrap(), 5);
+        let after = ix.search(&pq, q, &cfg);
+        for id in &before {
+            assert!(!after.contains(id), "deleted id {id} served");
+        }
+        // equals the flat rebuild of the survivors
+        let survivors: Vec<u32> = (0..1200u32)
+            .filter(|id| !before.contains(id))
+            .collect();
+        let (flat, to_ext) = rebuild(&pq, &base, &survivors);
+        let want = map_rows(
+            vec![SearchEngine::new(&pq, &flat, cfg).search(q)], &to_ext);
+        assert_eq!(after, want[0]);
+    }
+
+    #[test]
+    fn seal_and_compact_preserve_results_and_bump_generation() {
+        let (_, base, queries, pq) = setup(1500);
+        let ix = StreamingIndex::new(8, None, scfg(200));
+        let mut ids = Vec::new();
+        for lo in (0..base.len()).step_by(220) {
+            let hi = (lo + 220).min(base.len());
+            ids.extend(ix.insert_batch(&pq, base.rows(lo, hi)).unwrap());
+        }
+        let victims: Vec<u32> = ids.iter().copied().step_by(7).collect();
+        ix.delete_batch(&victims).unwrap();
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 40, k: 10, ..Default::default() };
+        let before =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let st = ix.stats();
+        assert!(st.sealed_segments > 1);
+        assert!(ix.compact().unwrap());
+        let st2 = ix.stats();
+        assert!(st2.generation > st.generation, "epoch must advance");
+        assert_eq!(st2.sealed_segments, 1, "merged into one segment");
+        assert!(st2.total_rows < st.total_rows, "tombstones dropped");
+        assert_eq!(st2.live_rows, st.live_rows, "no live row lost");
+        let after =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert_eq!(after, before, "compaction must not change results");
+        // the merged segment is packed for the integer kernels
+        assert!(ix.snapshot().sealed[0].codes().is_packed());
+    }
+
+    #[test]
+    fn prop_interleaved_ops_match_flat_rebuild_at_all_precisions() {
+        // THE acceptance property: after any interleaving of batch
+        // inserts, deletes, and compactions, the segmented search equals
+        // a flat rebuild of the surviving rows — exactly at f32, and
+        // exactly at u16/u8 under a full rerank (integer selection may
+        // swap candidates inside the quantization margin, so the int
+        // precisions are pinned through the exact d1 stage like the
+        // engine's own precision tests)
+        let (_, base, queries, pq) = setup(2000);
+        let qs = qrefs(&queries);
+        prop::forall_ok(
+            4321,
+            6,
+            |r: &mut SplitMix64| {
+                (r.next_u64(), 1 + r.below(3), [120usize, 256, 4096][r.below(3)])
+            },
+            |&(seed, threads, segment_rows)| {
+                let mut r = SplitMix64::new(seed);
+                let ix = StreamingIndex::new(8, None, scfg(segment_rows));
+                let mut cursor = 0usize; // next unused base row
+                let mut live: Vec<u32> = Vec::new();
+                for _ in 0..6 {
+                    match r.below(4) {
+                        0 | 1 => {
+                            // insert a fresh chunk
+                            let take = (50 + r.below(300))
+                                .min(base.len() - cursor);
+                            if take == 0 {
+                                continue;
+                            }
+                            let got = ix
+                                .insert_batch(
+                                    &pq,
+                                    base.rows(cursor, cursor + take))
+                                .map_err(|e| format!("insert: {e:#}"))?;
+                            live.extend(&got);
+                            cursor += take;
+                        }
+                        2 => {
+                            // delete a random slice of live ids
+                            if live.is_empty() {
+                                continue;
+                            }
+                            let k = 1 + r.below(live.len().min(120));
+                            let mut dead = Vec::with_capacity(k);
+                            for _ in 0..k {
+                                dead.push(live.remove(r.below(live.len())));
+                                if live.is_empty() {
+                                    break;
+                                }
+                            }
+                            ix.delete_batch(&dead)
+                                .map_err(|e| format!("delete: {e:#}"))?;
+                        }
+                        _ => {
+                            ix.compact()
+                                .map_err(|e| format!("compact: {e:#}"))?;
+                        }
+                    }
+                }
+                live.sort_unstable();
+                if ix.len() != live.len() {
+                    return Err(format!("live {} != expected {}",
+                                       ix.len(), live.len()));
+                }
+                if live.is_empty() {
+                    return Ok(());
+                }
+                let (flat, to_ext) = rebuild(&pq, &base, &live);
+                let exec = Executor::new(threads);
+                let ks = vec![10usize; qs.len()];
+                // exact f32 equality at a scan-selective rerank_l
+                let f32_cfg = SearchConfig {
+                    rerank_l: 50, k: 10, num_threads: threads,
+                    shard_rows: 64, ..Default::default()
+                };
+                let want = map_rows(
+                    SearchEngine::new(&pq, &flat, f32_cfg)
+                        .search_batch_on(&exec, &qs),
+                    &to_ext);
+                let got = ix.search_batch_on(&pq, &exec, &qs, &ks, &f32_cfg);
+                if got != want {
+                    return Err(format!(
+                        "f32 diverged (threads={threads}, \
+                         segment_rows={segment_rows})"));
+                }
+                // integer precisions under full rerank
+                for precision in [ScanPrecision::U16, ScanPrecision::U8] {
+                    let cfg = SearchConfig {
+                        rerank_l: flat.n, scan_precision: precision,
+                        ..f32_cfg
+                    };
+                    let want = map_rows(
+                        SearchEngine::new(&pq, &flat, cfg)
+                            .search_batch_on(&exec, &qs),
+                        &to_ext);
+                    let got =
+                        ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                    if got != want {
+                        return Err(format!("{precision:?} diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn routed_non_residual_nprobe_all_matches_flat_rebuild() {
+        let (train, base, queries, pq) = setup(1800);
+        let coarse =
+            CoarseQuantizer::train(&train.data, train.dim, 8, 3, 8);
+        let routing = Routing { coarse: Arc::new(coarse), residual: false };
+        let ix = StreamingIndex::new(8, Some(routing), scfg(300));
+        let ids = ix.insert_batch(&pq, &base.data).unwrap();
+        let victims: Vec<u32> = ids.iter().copied().step_by(9).collect();
+        ix.delete_batch(&victims).unwrap();
+        let survivors: Vec<u32> = ids
+            .iter()
+            .copied()
+            .filter(|id| victims.binary_search(id).is_err())
+            .collect();
+        let (flat, to_ext) = rebuild(&pq, &base, &survivors);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 60, k: 10, nprobe: 0,
+                                 ..Default::default() };
+        let want = map_rows(
+            SearchEngine::new(&pq, &flat, cfg).search_batch(&qs), &to_ext);
+        let got = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks, &cfg);
+        assert_eq!(got, want, "nprobe=all must equal the flat rebuild");
+        // sub-linear probing stays in the same league (overlap, not
+        // equality: fewer lists genuinely prune candidates)
+        let cfg4 = SearchConfig { nprobe: 4, ..cfg };
+        let got4 =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg4);
+        let overlap: usize = got4
+            .iter()
+            .zip(&want)
+            .map(|(g, w)| g.iter().filter(|id| w.contains(id)).count())
+            .sum();
+        assert!(overlap * 2 >= 10 * qs.len(),
+                "nprobe=4 overlap collapsed: {overlap}/{}", 10 * qs.len());
+    }
+
+    #[test]
+    fn routed_residual_matches_frozen_ivf_rebuild() {
+        // streaming residual inserts vs IvfIndex::build over the same
+        // surviving rows with the same coarse codebook: identical codes,
+        // identical nprobe=all searches (ids mapped through the rebuild)
+        let (train, base, queries, _) = setup(1400);
+        let coarse =
+            CoarseQuantizer::train(&train.data, train.dim, 6, 4, 8);
+        // a residual deployment trains the fine quantizer on residuals
+        let mut res_train = train.data.clone();
+        for i in 0..train.len() {
+            let c = coarse.centroid(coarse.assign(train.row(i)) as usize);
+            for (v, cv) in res_train[i * train.dim..(i + 1) * train.dim]
+                .iter_mut()
+                .zip(c)
+            {
+                *v -= cv;
+            }
+        }
+        let pq = Pq::train(&res_train, train.dim, 8, 32, 0, 8);
+        let routing =
+            Routing { coarse: Arc::new(coarse.clone()), residual: true };
+        let ix = StreamingIndex::new(8, Some(routing), scfg(250));
+        let ids = ix.insert_batch(&pq, &base.data).unwrap();
+        let victims: Vec<u32> = ids.iter().copied().step_by(5).collect();
+        ix.delete_batch(&victims).unwrap();
+        ix.compact().unwrap();
+        let survivors: Vec<u32> = ids
+            .iter()
+            .copied()
+            .filter(|id| victims.binary_search(id).is_err())
+            .collect();
+        let mut kept = Vec::with_capacity(survivors.len() * base.dim);
+        for &id in &survivors {
+            kept.extend_from_slice(base.row(id as usize));
+        }
+        let kept = Dataset::new(base.dim, kept);
+        let ivf = IvfIndex::build(&pq, &kept, coarse, true);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 60, k: 10, nprobe: 0,
+                                 ..Default::default() };
+        let want = map_rows(
+            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg),
+            &survivors);
+        let got =
+            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn snapshot_survives_concurrent_compaction() {
+        // the epoch guard: a snapshot taken before compaction keeps
+        // serving the old segment set unchanged while the index moves on
+        let (_, base, queries, pq) = setup(900);
+        let ix = StreamingIndex::new(8, None, scfg(150));
+        let ids = ix.insert_batch(&pq, &base.data).unwrap();
+        let old = ix.snapshot();
+        let old_segs = old.sealed.len();
+        ix.delete_batch(&ids[..300]).unwrap();
+        ix.compact().unwrap();
+        assert_eq!(old.sealed.len(), old_segs,
+                   "in-flight snapshot must be frozen");
+        assert_eq!(old.live_rows(), 900,
+                   "old epoch still sees every pre-delete row");
+        assert!(ix.snapshot().generation > old.generation);
+        // and the live index serves the post-delete truth
+        let got = ix.search(&pq, queries.row(0),
+                            &SearchConfig { rerank_l: 40, k: 5,
+                                            ..Default::default() });
+        for id in got {
+            assert!(ids[..300].binary_search(&id).is_err(),
+                    "deleted id {id} served after compaction");
+        }
+    }
+}

@@ -149,13 +149,16 @@ impl IvfIndex {
     }
 }
 
-/// The serving coordinator's index dispatch: one enum, two index
+/// The serving coordinator's index dispatch: one enum, three index
 /// organizations, identical request-path semantics.
 pub enum IndexBackend {
     /// Exhaustive ADC scan over a flat code matrix.
     Flat(Arc<CompressedIndex>),
     /// Coarse-partitioned `nprobe` search.
     Ivf(Arc<IvfIndex>),
+    /// Mutable streaming index (WAL-backed segments): the only backend
+    /// the coordinator's insert/delete ops accept.
+    Streaming(Arc<crate::index::StreamingIndex>),
 }
 
 impl IndexBackend {
@@ -163,6 +166,7 @@ impl IndexBackend {
         match self {
             IndexBackend::Flat(ix) => ix.n,
             IndexBackend::Ivf(ix) => ix.n(),
+            IndexBackend::Streaming(ix) => ix.len(),
         }
     }
 
@@ -170,6 +174,7 @@ impl IndexBackend {
         match self {
             IndexBackend::Flat(_) => "flat",
             IndexBackend::Ivf(_) => "ivf",
+            IndexBackend::Streaming(_) => "stream",
         }
     }
 
@@ -188,6 +193,9 @@ impl IndexBackend {
                     .search_batch_with_luts_on(exec, queries, &luts, ks)
             }
             IndexBackend::Ivf(ix) => {
+                ix.search_batch_on(quant, exec, queries, ks, cfg)
+            }
+            IndexBackend::Streaming(ix) => {
                 ix.search_batch_on(quant, exec, queries, ks, cfg)
             }
         }

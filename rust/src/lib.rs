@@ -27,13 +27,13 @@
 //! | [`kmeans`] | Lloyd + k-means++ (shared by all shallow quantizers) |
 //! | [`gt`] | exact brute-force ground truth (cached) |
 //! | [`quant`] | `Quantizer` trait + PQ/OPQ/RVQ/LSQ/lattice/UNQ |
-//! | [`index`] | compressed storage, ADC LUT scan, rerank, two-stage search |
+//! | [`index`] | compressed storage, ADC LUT scan, rerank, two-stage search; mutable streaming segments ([`index::segment`]) |
 //! | [`ivf`] | coarse-partitioned inverted lists: sub-linear nprobe search |
 //! | [`exec`] | batch executor: worker pool + generic scan-task plans |
 //! | [`runtime`] | PJRT engine: load + execute the AOT HLO artifacts |
 //! | [`coordinator`] | async serving: router, batcher, pipeline, metrics |
 //! | [`eval`] | Recall@k harness + paper-table formatting |
-//! | [`store`] | tiny binary tensor store for trained baseline models |
+//! | [`store`] | tiny binary tensor store for trained baseline models; write-ahead log ([`store::wal`]) |
 //! | [`util`] | offline substrates: JSON, PRNG, bench harness, prop tests |
 
 // Style allowances for the CI clippy gate (-D warnings): indexed loops

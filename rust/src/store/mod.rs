@@ -5,6 +5,8 @@
 //! little-endian payloads.  Used to cache trained quantizer codebooks and
 //! encoded databases under `runs/` so benches re-run instantly.
 
+pub mod wal;
+
 use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
@@ -22,6 +24,41 @@ fn tmp_sibling(path: &Path) -> std::path::PathBuf {
     let mut name = path.file_name().unwrap_or_default().to_os_string();
     name.push(".tmp");
     path.with_file_name(name)
+}
+
+/// Atomically replace `path` with `bytes`: write a `.tmp` sibling, fsync
+/// it, and `rename` into place — the same crash contract as
+/// [`Store::save`], shared by everything that commits small control
+/// files (the streaming index's segment manifest, fresh WAL epochs).  A
+/// crash at any point leaves either the old file or the new one, never a
+/// torn mix.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = tmp_sibling(path);
+    let mut f =
+        File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("commit {tmp:?} -> {path:?}"))?;
+    sync_parent_dir(path)?;
+    Ok(())
+}
+
+/// Fsync the directory holding `path`, so a just-committed rename (or
+/// file creation) cannot be reordered after later operations by a
+/// crash — the other half of the rename-commit contract.  Skipped on
+/// platforms where directories cannot be opened as files.
+fn sync_parent_dir(path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = File::open(parent) {
+            d.sync_all()
+                .with_context(|| format!("fsync dir {parent:?}"))?;
+        }
+    }
+    Ok(())
 }
 
 #[derive(Clone, Debug)]
@@ -195,6 +232,7 @@ impl Store {
             .sync_all()?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("commit {tmp:?} -> {path:?}"))?;
+        sync_parent_dir(path)?;
         Ok(())
     }
 

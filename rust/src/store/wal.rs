@@ -1,0 +1,461 @@
+//! Write-ahead log for the mutable streaming index.
+//!
+//! An append-only file of CRC-framed records describing every mutation
+//! since the last checkpoint (`rust/DESIGN.md` §7):
+//!
+//! ```text
+//! file   := header record*
+//! header := "UNQWAL01" stride:u32le flags:u32le          (16 bytes)
+//! record := len:u32le crc32:u32le payload[len]
+//! payload:= 0x01 id:u32le list:u32le code[stride]        insert
+//!         | 0x02 id:u32le                                delete
+//!         | 0x03 seg_id:u64le                            seal
+//! ```
+//!
+//! Appends are buffered and fsync'd in batches: [`Wal::append`] syncs
+//! after `sync_every` pending records, and [`Wal::commit`] forces the
+//! batch down before a write operation reports success to its caller.
+//!
+//! Crash contract: a torn tail (incomplete frame, short payload, CRC
+//! mismatch) marks the end of the committed prefix — [`replay`] returns
+//! every record before the tear plus the byte length of the valid
+//! prefix, and [`Wal::open_append`] truncates the tear away before new
+//! appends, so one crash can never corrupt the records that follow it.
+//! The recovery property test in `index::segment` drives a truncation
+//! through every byte boundary of the final record and checks the
+//! recovered index equals the pre-crash prefix.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::Result;
+
+const MAGIC: &[u8; 8] = b"UNQWAL01";
+/// Header length: magic + stride + flags.
+pub const HEADER_LEN: u64 = 16;
+/// Upper bound on one record's payload — far above any real record
+/// (1 + 8 + stride bytes), so a corrupt length field can't trigger a
+/// giant allocation during replay.
+const MAX_RECORD: usize = 1 << 20;
+
+const KIND_INSERT: u8 = 1;
+const KIND_DELETE: u8 = 2;
+const KIND_SEAL: u8 = 3;
+
+/// One logged mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WalRecord {
+    /// A row was appended to the active segment: external id, routed
+    /// list (0 for unrouted indexes), and its encoded code bytes —
+    /// replay never re-encodes, so recovery needs no quantizer.
+    Insert { id: u32, list: u32, code: Vec<u8> },
+    /// An external id was tombstoned.
+    Delete { id: u32 },
+    /// The active segment was sealed as `seg_id`; replay seals at the
+    /// same point so (segment, row) locations reproduce exactly.
+    Seal { seg_id: u64 },
+}
+
+impl WalRecord {
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            WalRecord::Insert { id, list, code } => {
+                let mut p = Vec::with_capacity(9 + code.len());
+                p.push(KIND_INSERT);
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&list.to_le_bytes());
+                p.extend_from_slice(code);
+                p
+            }
+            WalRecord::Delete { id } => {
+                let mut p = Vec::with_capacity(5);
+                p.push(KIND_DELETE);
+                p.extend_from_slice(&id.to_le_bytes());
+                p
+            }
+            WalRecord::Seal { seg_id } => {
+                let mut p = Vec::with_capacity(9);
+                p.push(KIND_SEAL);
+                p.extend_from_slice(&seg_id.to_le_bytes());
+                p
+            }
+        }
+    }
+
+    /// Parse one payload; `None` marks corruption (unknown kind or a
+    /// size that doesn't match it), which replay treats as a tear.
+    fn parse(payload: &[u8], stride: usize) -> Option<WalRecord> {
+        match payload.first()? {
+            &KIND_INSERT if payload.len() == 9 + stride => {
+                Some(WalRecord::Insert {
+                    id: u32::from_le_bytes(payload[1..5].try_into().ok()?),
+                    list: u32::from_le_bytes(payload[5..9].try_into().ok()?),
+                    code: payload[9..].to_vec(),
+                })
+            }
+            &KIND_DELETE if payload.len() == 5 => {
+                Some(WalRecord::Delete {
+                    id: u32::from_le_bytes(payload[1..5].try_into().ok()?),
+                })
+            }
+            &KIND_SEAL if payload.len() == 9 => {
+                Some(WalRecord::Seal {
+                    seg_id: u64::from_le_bytes(payload[1..9].try_into().ok()?),
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// CRC-32 (IEEE, reflected — the zlib polynomial), bitwise: the log is
+/// control-plane traffic, simplicity beats a table here.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// An open log accepting appends.
+///
+/// Batching is an explicit in-memory buffer (not a `BufWriter`): until
+/// [`Wal::commit`] succeeds, buffered records have touched nothing on
+/// disk, and a failed commit rolls the file back to the last durable
+/// frontier and drops the batch — so a write error can never leave
+/// phantom records that a *later* flush would resurrect.  If even the
+/// rollback fails the log poisons itself and refuses further appends.
+pub struct Wal {
+    file: File,
+    stride: usize,
+    /// encoded records appended since the last successful commit
+    buf: Vec<u8>,
+    /// records currently in `buf`
+    pending: usize,
+    /// fsync after this many buffered records (1 = every record)
+    sync_every: usize,
+    /// durable, committed file length
+    synced_len: u64,
+    poisoned: bool,
+}
+
+impl Wal {
+    /// Create a fresh log at `path` (truncating anything there), write
+    /// and sync the header.
+    pub fn create(path: &Path, stride: usize, sync_every: usize)
+                  -> Result<Wal> {
+        ensure!(stride > 0, "wal stride must be positive");
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = File::create(path)
+            .with_context(|| format!("create wal {path:?}"))?;
+        file.write_all(MAGIC)?;
+        file.write_all(&(stride as u32).to_le_bytes())?;
+        file.write_all(&0u32.to_le_bytes())?;
+        file.sync_all()?;
+        Ok(Wal {
+            file,
+            stride,
+            buf: Vec::new(),
+            pending: 0,
+            sync_every: sync_every.max(1),
+            synced_len: HEADER_LEN,
+            poisoned: false,
+        })
+    }
+
+    /// Reopen an existing log for appending after [`replay`] validated
+    /// its prefix: the torn tail (if any) past `good_len` is truncated
+    /// away so new records can never land behind garbage.
+    pub fn open_append(path: &Path, stride: usize, good_len: u64,
+                       sync_every: usize) -> Result<Wal> {
+        ensure!(good_len >= HEADER_LEN,
+                "wal prefix {good_len} shorter than the header");
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open wal {path:?}"))?;
+        file.set_len(good_len)?;
+        file.sync_all()?;
+        file.seek(SeekFrom::Start(good_len))?;
+        Ok(Wal {
+            file,
+            stride,
+            buf: Vec::new(),
+            pending: 0,
+            sync_every: sync_every.max(1),
+            synced_len: good_len,
+            poisoned: false,
+        })
+    }
+
+    /// Append one record (buffered; syncs when the batch fills).
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        ensure!(!self.poisoned, "wal is poisoned after a failed rollback");
+        if let WalRecord::Insert { code, .. } = rec {
+            ensure!(code.len() == self.stride,
+                    "insert code length {} != wal stride {}",
+                    code.len(), self.stride);
+        }
+        let payload = rec.payload();
+        self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        self.buf.extend_from_slice(&payload);
+        self.pending += 1;
+        if self.pending >= self.sync_every {
+            self.commit()?;
+        }
+        Ok(())
+    }
+
+    /// Force the pending batch to stable storage (the durability point a
+    /// write operation reports success behind).  On failure the batch is
+    /// DROPPED and the file rolled back to the previous durable frontier
+    /// — the caller's operation fails as a unit, nothing half-lands.
+    pub fn commit(&mut self) -> Result<()> {
+        ensure!(!self.poisoned, "wal is poisoned after a failed rollback");
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        let res = self
+            .file
+            .write_all(&self.buf)
+            .and_then(|()| self.file.sync_data());
+        match res {
+            Ok(()) => {
+                self.synced_len += self.buf.len() as u64;
+                self.buf.clear();
+                self.pending = 0;
+                Ok(())
+            }
+            Err(e) => {
+                // drop the batch and truncate whatever partially landed
+                self.buf.clear();
+                self.pending = 0;
+                let rollback = self
+                    .file
+                    .set_len(self.synced_len)
+                    .and_then(|()| {
+                        self.file.seek(SeekFrom::Start(self.synced_len))
+                    });
+                if rollback.is_err() {
+                    self.poisoned = true;
+                }
+                Err(e).context("wal commit (batch dropped)")
+            }
+        }
+    }
+
+    /// Discard the records buffered since the last commit (successful or
+    /// failed) without touching the file — callers drop a half-appended
+    /// batch with this so no later commit can flush its remains.  (Every
+    /// operation ends in `commit`, so the buffer only ever holds the
+    /// current operation's records.)
+    pub fn abort_batch(&mut self) {
+        self.buf.clear();
+        self.pending = 0;
+    }
+
+    /// Records appended but not yet durable.
+    pub fn uncommitted(&self) -> usize {
+        self.pending
+    }
+
+    /// Logical length in bytes (committed + buffered).
+    pub fn len(&self) -> u64 {
+        self.synced_len + self.buf.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() <= HEADER_LEN
+    }
+}
+
+/// Read a log back: every record of the valid prefix, plus that prefix's
+/// byte length (pass it to [`Wal::open_append`]).  A torn or corrupt
+/// tail ends the prefix silently — that is the crash contract, not an
+/// error; only a missing/foreign header or a stride mismatch errors.
+pub fn replay(path: &Path, stride: usize) -> Result<(Vec<WalRecord>, u64)> {
+    let mut f =
+        File::open(path).with_context(|| format!("open wal {path:?}"))?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    ensure!(bytes.len() >= HEADER_LEN as usize && &bytes[..8] == MAGIC,
+            "wal {path:?} has no valid header");
+    let got_stride =
+        u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes")) as usize;
+    if got_stride != stride {
+        bail!("wal {path:?} stride {got_stride} != index stride {stride}");
+    }
+    let mut records = Vec::new();
+    let mut pos = HEADER_LEN as usize;
+    loop {
+        let Some(frame) = bytes.get(pos..pos + 8) else { break };
+        let len =
+            u32::from_le_bytes(frame[0..4].try_into().expect("4 bytes"))
+                as usize;
+        let crc = u32::from_le_bytes(frame[4..8].try_into().expect("4 bytes"));
+        if len == 0 || len > MAX_RECORD {
+            break;
+        }
+        let Some(payload) = bytes.get(pos + 8..pos + 8 + len) else { break };
+        if crc32(payload) != crc {
+            break;
+        }
+        let Some(rec) = WalRecord::parse(payload, stride) else { break };
+        records.push(rec);
+        pos += 8 + len;
+    }
+    Ok((records, pos as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn sample_records(stride: usize) -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert {
+                id: 0,
+                list: 0,
+                code: (0..stride as u8).collect(),
+            },
+            WalRecord::Insert {
+                id: 1,
+                list: 3,
+                code: vec![0xAB; stride],
+            },
+            WalRecord::Delete { id: 0 },
+            WalRecord::Seal { seg_id: 7 },
+            WalRecord::Insert {
+                id: 2,
+                list: u32::MAX,
+                code: vec![0x11; stride],
+            },
+        ]
+    }
+
+    #[test]
+    fn crc32_known_answer() {
+        // the standard CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_all_record_kinds() {
+        let dir = TempDir::new("wal").unwrap();
+        let p = dir.path().join("w.log");
+        let recs = sample_records(6);
+        let mut wal = Wal::create(&p, 6, 2).unwrap();
+        for r in &recs {
+            wal.append(r).unwrap();
+        }
+        wal.commit().unwrap();
+        let (back, good) = replay(&p, 6).unwrap();
+        assert_eq!(back, recs);
+        assert_eq!(good, wal.len());
+        assert_eq!(good, std::fs::metadata(&p).unwrap().len());
+    }
+
+    #[test]
+    fn replay_rejects_header_problems() {
+        let dir = TempDir::new("wal").unwrap();
+        let p = dir.path().join("w.log");
+        std::fs::write(&p, b"NOTAWAL!").unwrap();
+        assert!(replay(&p, 4).is_err(), "foreign magic");
+        let mut wal = Wal::create(&p, 4, 1).unwrap();
+        wal.append(&WalRecord::Delete { id: 9 }).unwrap();
+        wal.commit().unwrap();
+        assert!(replay(&p, 8).is_err(), "stride mismatch");
+    }
+
+    #[test]
+    fn prop_truncation_at_every_byte_recovers_the_prefix() {
+        // record byte offsets, then chop the file at EVERY byte length
+        // and check replay returns exactly the records that fully fit
+        let dir = TempDir::new("wal").unwrap();
+        let p = dir.path().join("w.log");
+        let recs = sample_records(5);
+        let mut wal = Wal::create(&p, 5, 1).unwrap();
+        let mut ends = vec![wal.len()]; // ends[i] = length after i records
+        for r in &recs {
+            wal.append(r).unwrap();
+            wal.commit().unwrap();
+            ends.push(wal.len());
+        }
+        let full = std::fs::read(&p).unwrap();
+        assert_eq!(full.len() as u64, *ends.last().unwrap());
+        let cut_path = dir.path().join("cut.log");
+        for cut in 0..=full.len() {
+            std::fs::write(&cut_path, &full[..cut]).unwrap();
+            if (cut as u64) < HEADER_LEN {
+                assert!(replay(&cut_path, 5).is_err(),
+                        "cut {cut} inside the header must error");
+                continue;
+            }
+            let n_fit =
+                ends.iter().filter(|&&e| e <= cut as u64).count() - 1;
+            let (back, good) = replay(&cut_path, 5).unwrap();
+            assert_eq!(back, recs[..n_fit], "cut at byte {cut}");
+            assert_eq!(good, ends[n_fit], "cut at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_crc_ends_the_prefix_and_open_append_truncates_it() {
+        let dir = TempDir::new("wal").unwrap();
+        let p = dir.path().join("w.log");
+        let recs = sample_records(3);
+        let mut wal = Wal::create(&p, 3, 1).unwrap();
+        let mut ends = vec![wal.len()];
+        for r in &recs {
+            wal.append(r).unwrap();
+            wal.commit().unwrap();
+            ends.push(wal.len());
+        }
+        // flip one payload byte of record 3 (its CRC now mismatches):
+        // replay keeps records 0..3 and cuts there, even though record 4
+        // is intact after it
+        let mut bytes = std::fs::read(&p).unwrap();
+        let idx = ends[3] as usize + 8;
+        bytes[idx] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let (back, good) = replay(&p, 3).unwrap();
+        assert_eq!(back, recs[..3]);
+        assert_eq!(good, ends[3]);
+        // reopening for append truncates the garbage and new appends
+        // extend the valid prefix
+        let mut wal = Wal::open_append(&p, 3, good, 1).unwrap();
+        wal.append(&WalRecord::Delete { id: 42 }).unwrap();
+        wal.commit().unwrap();
+        let (back, _) = replay(&p, 3).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[3], WalRecord::Delete { id: 42 });
+    }
+
+    #[test]
+    fn sync_every_batches_but_commit_always_lands() {
+        let dir = TempDir::new("wal").unwrap();
+        let p = dir.path().join("w.log");
+        let mut wal = Wal::create(&p, 2, 100).unwrap();
+        wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        // buffered: on-disk file may still be header-only (don't assert
+        // that — flush timing is the writer's business), but after
+        // commit() the record must be durable and visible
+        wal.commit().unwrap();
+        let (back, _) = replay(&p, 2).unwrap();
+        assert_eq!(back, vec![WalRecord::Delete { id: 1 }]);
+    }
+}

@@ -1,0 +1,242 @@
+//! Durability integration tests for the mutable streaming index: WAL
+//! crash-recovery at every byte boundary of the final record, and full
+//! reopen-equals-live roundtrips through checkpoints (rust/DESIGN.md §7).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use unq::config::{SearchConfig, StreamConfig};
+use unq::data::{synthetic::Generator, Family};
+use unq::index::{Routing, StreamingIndex};
+use unq::ivf::CoarseQuantizer;
+use unq::quant::pq::Pq;
+use unq::util::TempDir;
+
+fn scfg(segment_rows: usize) -> StreamConfig {
+    StreamConfig { segment_rows, compact_segments: 1000, wal_sync: 1 }
+}
+
+fn setup(n_base: usize)
+         -> (unq::data::Dataset, unq::data::Dataset, unq::data::Dataset, Pq)
+{
+    let gen = Generator::new(Family::SiftLike, 88);
+    let train = gen.generate(0, 900);
+    let base = gen.generate(1, n_base);
+    let queries = gen.generate(2, 5);
+    let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+    (train, base, queries, pq)
+}
+
+/// Structural fingerprint of every segment (sealed, oldest first, then
+/// the active tail): id, codes, row ids, list offsets, dead rows.
+type SegPrint = (u64, Vec<u8>, Vec<u32>, Vec<usize>, Vec<usize>);
+
+fn fingerprint(ix: &StreamingIndex) -> Vec<SegPrint> {
+    let s = ix.snapshot();
+    s.sealed
+        .iter()
+        .map(|a| a.as_ref())
+        .chain(std::iter::once(s.active.as_ref()))
+        .map(|g| {
+            (
+                g.seg_id,
+                g.codes().codes.clone(),
+                g.row_ids().to_vec(),
+                g.offsets().to_vec(),
+                (0..g.n()).filter(|&r| g.is_dead(r)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// The single `wal_<epoch>.log` in a durable index directory.
+fn wal_path(dir: &Path) -> std::path::PathBuf {
+    let mut wals: Vec<_> = std::fs::read_dir(dir)
+        .unwrap()
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("wal_") && n.ends_with(".log"))
+        })
+        .collect();
+    assert_eq!(wals.len(), 1, "exactly one live wal epoch: {wals:?}");
+    wals.pop().unwrap()
+}
+
+/// Copy a durable index directory, truncating its WAL to `cut` bytes —
+/// a simulated crash image.
+fn crash_image(src: &Path, dst: &Path, cut: u64) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap().flatten() {
+        std::fs::copy(e.path(), dst.join(e.file_name())).unwrap();
+    }
+    let wal = wal_path(dst);
+    let bytes = std::fs::read(&wal).unwrap();
+    std::fs::write(&wal, &bytes[..cut as usize]).unwrap();
+}
+
+#[test]
+fn reopen_equals_live_through_seals_and_checkpoint() {
+    let (_, base, queries, pq) = setup(1400);
+    let dir = TempDir::new("stream").unwrap();
+    let root = dir.path().join("ix");
+    let ix = StreamingIndex::open(&root, 8, None, scfg(250)).unwrap();
+    let mut ids = Vec::new();
+    for lo in (0..1000).step_by(230) {
+        let hi = (lo + 230).min(1000);
+        ids.extend(ix.insert_batch(&pq, base.rows(lo, hi)).unwrap());
+    }
+    let victims: Vec<u32> = ids.iter().copied().step_by(6).collect();
+    ix.delete_batch(&victims).unwrap();
+    assert!(ix.compact().unwrap(), "several sealed segments must merge");
+    // post-checkpoint tail: more inserts + deletes live only in the WAL
+    ids.extend(ix.insert_batch(&pq, base.rows(1000, 1300)).unwrap());
+    ix.delete_batch(&ids[ids.len() - 7..]).unwrap();
+    let want_print = fingerprint(&ix);
+    let want_len = ix.len();
+    let cfg = SearchConfig { rerank_l: 50, k: 10, ..Default::default() };
+    let want_results: Vec<Vec<u32>> = (0..queries.len())
+        .map(|qi| ix.search(&pq, queries.row(qi), &cfg))
+        .collect();
+    let next_id = *ids.last().unwrap() + 1;
+    drop(ix);
+
+    let back = StreamingIndex::open(&root, 8, None, scfg(250)).unwrap();
+    assert_eq!(fingerprint(&back), want_print,
+               "recovered state must equal the live state");
+    assert_eq!(back.len(), want_len);
+    for (qi, want) in want_results.iter().enumerate() {
+        assert_eq!(&back.search(&pq, queries.row(qi), &cfg), want,
+                   "query {qi}");
+    }
+    // the id counter survives recovery: the next insert continues the
+    // monotonic sequence
+    let got = back.insert_batch(&pq, base.rows(1300, 1301)).unwrap();
+    assert_eq!(got, vec![next_id]);
+}
+
+#[test]
+fn crash_recovery_at_every_byte_of_the_final_record() {
+    // the ISSUE acceptance property: write a batch through the WAL,
+    // truncate the log at every byte boundary of the final record,
+    // replay, and the recovered index equals the pre-crash prefix
+    let (_, base, _, pq) = setup(700);
+    let dir = TempDir::new("stream").unwrap();
+    let root = dir.path().join("ix");
+    let ix = StreamingIndex::open(&root, 8, None, scfg(200)).unwrap();
+    let ids = ix.insert_batch(&pq, base.rows(0, 420)).unwrap();
+    ix.delete_batch(&ids[..30]).unwrap();
+    ix.compact().unwrap(); // checkpoint: archives + fresh wal epoch
+    ix.insert_batch(&pq, base.rows(420, 500)).unwrap();
+
+    // penultimate state, then ONE final single-record operation
+    let len_before = std::fs::metadata(wal_path(&root)).unwrap().len();
+    let print_before = fingerprint(&ix);
+    ix.insert_batch(&pq, base.rows(500, 501)).unwrap();
+    let len_after = std::fs::metadata(wal_path(&root)).unwrap().len();
+    let print_after = fingerprint(&ix);
+    assert!(len_after > len_before, "final insert must hit the wal");
+    drop(ix);
+
+    for cut in len_before..=len_after {
+        let img = dir.path().join(format!("crash_{cut}"));
+        crash_image(&root, &img, cut);
+        let rec = StreamingIndex::open(&img, 8, None, scfg(200)).unwrap();
+        let want = if cut < len_after { &print_before } else { &print_after };
+        assert_eq!(&fingerprint(&rec), want,
+                   "cut at byte {cut} of [{len_before}, {len_after}]");
+        drop(rec);
+        std::fs::remove_dir_all(&img).unwrap();
+    }
+}
+
+#[test]
+fn crash_recovery_mid_delete_record_keeps_the_row_alive() {
+    // same property with a delete as the final record: a torn delete
+    // never half-applies — the row stays alive until the record is
+    // fully durable
+    let (_, base, _, pq) = setup(300);
+    let dir = TempDir::new("stream").unwrap();
+    let root = dir.path().join("ix");
+    let ix = StreamingIndex::open(&root, 8, None, scfg(1000)).unwrap();
+    let ids = ix.insert_batch(&pq, base.rows(0, 200)).unwrap();
+    let len_before = std::fs::metadata(wal_path(&root)).unwrap().len();
+    let print_before = fingerprint(&ix);
+    ix.delete_batch(&ids[5..6]).unwrap();
+    let len_after = std::fs::metadata(wal_path(&root)).unwrap().len();
+    let print_after = fingerprint(&ix);
+    drop(ix);
+
+    for cut in len_before..=len_after {
+        let img = dir.path().join(format!("crash_{cut}"));
+        crash_image(&root, &img, cut);
+        let rec = StreamingIndex::open(&img, 8, None, scfg(1000)).unwrap();
+        let want = if cut < len_after { &print_before } else { &print_after };
+        assert_eq!(&fingerprint(&rec), want, "cut at byte {cut}");
+        let alive = rec.len();
+        if cut < len_after {
+            assert_eq!(alive, 200, "torn delete must not apply");
+        } else {
+            assert_eq!(alive, 199);
+        }
+        drop(rec);
+        std::fs::remove_dir_all(&img).unwrap();
+    }
+}
+
+#[test]
+fn routed_durable_recovery_preserves_results() {
+    let (train, base, queries, _) = setup(900);
+    let coarse = CoarseQuantizer::train(&train.data, train.dim, 6, 2, 6);
+    // residual deployment: fine quantizer trained on residuals
+    let mut res_train = train.data.clone();
+    for i in 0..train.len() {
+        let c = coarse.centroid(coarse.assign(train.row(i)) as usize);
+        for (v, cv) in res_train[i * train.dim..(i + 1) * train.dim]
+            .iter_mut()
+            .zip(c)
+        {
+            *v -= cv;
+        }
+    }
+    let pq = Pq::train(&res_train, train.dim, 8, 32, 0, 6);
+    let routing = || Routing {
+        coarse: Arc::new(coarse.clone()),
+        residual: true,
+    };
+    let dir = TempDir::new("stream").unwrap();
+    let root = dir.path().join("ix");
+    let ix =
+        StreamingIndex::open(&root, 8, Some(routing()), scfg(200)).unwrap();
+    let mut ids = Vec::new();
+    for lo in (0..800).step_by(180) {
+        let hi = (lo + 180).min(800);
+        ids.extend(ix.insert_batch(&pq, base.rows(lo, hi)).unwrap());
+    }
+    let victims: Vec<u32> = ids.iter().copied().step_by(4).collect();
+    ix.delete_batch(&victims).unwrap();
+    let want_print = fingerprint(&ix);
+    let cfg = SearchConfig { rerank_l: 40, k: 8, nprobe: 3,
+                             ..Default::default() };
+    let want: Vec<Vec<u32>> = (0..queries.len())
+        .map(|qi| ix.search(&pq, queries.row(qi), &cfg))
+        .collect();
+    drop(ix);
+    let back =
+        StreamingIndex::open(&root, 8, Some(routing()), scfg(200)).unwrap();
+    assert_eq!(fingerprint(&back), want_print);
+    for (qi, w) in want.iter().enumerate() {
+        assert_eq!(&back.search(&pq, queries.row(qi), &cfg), w,
+                   "query {qi}");
+    }
+    // a mismatched routing shape must be rejected, not mis-searched
+    let wrong = CoarseQuantizer::train(&train.data, train.dim, 12, 2, 4);
+    assert!(StreamingIndex::open(
+        &root, 8,
+        Some(Routing { coarse: Arc::new(wrong), residual: true }),
+        scfg(200)
+    )
+    .is_err());
+}
