@@ -1,0 +1,253 @@
+//! CI recall gate: run the harness at smoke sizes across
+//! {f32, u16, u8} × {flat, ivf} (+ the streaming write path), write the
+//! measured recall@10 to `BENCH_recall.smoke.json`, and FAIL (non-zero
+//! exit) when
+//!
+//! * a combination drops more than `tolerance_pct` below the floor
+//!   committed in `BENCH_baseline.json` (null floors are skipped with a
+//!   warning — populate them from the smoke report's numbers once a
+//!   toolchain has measured them), or
+//! * an *exactness invariant* breaks — these need no baseline and gate
+//!   every merge from the first CI run:
+//!     - IVF at `nprobe = all` (non-residual) must equal the flat
+//!       engine's recall exactly at f32 (bit-identical results);
+//!     - the streaming index over freshly inserted rows must equal the
+//!       flat engine's recall exactly at f32 (same codes, same ids);
+//!     - u16/u8 must stay within the tolerance of their f32 siblings
+//!       (integer selection feeds the same exact d1 rerank).
+//!
+//! Run: `cargo bench --bench recall_gate` (tiny fixed sizes; caches
+//! land under `target/ci-gate/` so reruns are warm).
+
+use std::path::{Path, PathBuf};
+
+use unq::config::{AppConfig, QuantizerKind, ScanPrecision, SearchConfig,
+                  StreamConfig};
+use unq::eval::{harness, recall};
+use unq::exec::Executor;
+use unq::util::json::Json;
+
+fn repo_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+/// One measured cell of the gate grid.
+struct Cell {
+    key: &'static str,
+    recall_at10: f64,
+}
+
+fn main() {
+    let mut cfg = AppConfig::default();
+    cfg.dataset = "sift1m".into();
+    cfg.quantizer = QuantizerKind::Pq;
+    cfg.bytes_per_vector = 8;
+    cfg.k_codewords = 64;
+    cfg.scale = 0.02; // ~2000 base vectors: seconds, not minutes
+    cfg.ivf.num_lists = 8;
+    cfg.ivf.residual = false;
+    cfg.data_dir = "target/ci-gate/data".into();
+    cfg.runs_dir = "target/ci-gate/runs".into();
+    cfg.artifacts_dir = "target/ci-gate/artifacts".into();
+
+    let mut exp = match harness::prepare(&cfg, "") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[recall-gate] harness prepare failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    // rerank on for every cell (the integer precisions are defined by
+    // their exact-rescore contract; gate them through it)
+    let search = SearchConfig { rerank_l: 100, k: 100,
+                                ..Default::default() };
+    let nprobe_real = 4usize;
+
+    let mut cells: Vec<Cell> = Vec::new();
+
+    // flat × {f32, u16, u8}
+    let flat_pts =
+        exp.run_precision_sweep(search, ScanPrecision::all());
+    for pt in &flat_pts {
+        let key = match pt.precision {
+            ScanPrecision::F32 => "flat_f32",
+            ScanPrecision::U16 => "flat_u16",
+            ScanPrecision::U8 => "flat_u8",
+        };
+        cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
+    }
+
+    // ivf × {f32, u16, u8} at the realistic sub-linear nprobe, plus the
+    // f32 nprobe=all exactness point
+    let mut ivf = match harness::build_or_load_ivf(
+        &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base, "")
+    {
+        Ok(ivf) => ivf,
+        Err(e) => {
+            eprintln!("[recall-gate] ivf build failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    ivf.ensure_packed();
+    for &prec in ScanPrecision::all() {
+        let mut s = search;
+        s.scan_precision = prec;
+        s.nprobe = nprobe_real;
+        let pt = exp.sweep_point(&ivf, s);
+        let key = match prec {
+            ScanPrecision::F32 => "ivf_f32",
+            ScanPrecision::U16 => "ivf_u16",
+            ScanPrecision::U8 => "ivf_u8",
+        };
+        cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
+    }
+    let ivf_all = {
+        let mut s = search;
+        s.nprobe = 0; // all lists: bit-identical to flat (non-residual)
+        exp.sweep_point(&ivf, s).recall.at10 as f64
+    };
+
+    // streaming write path: fresh inserts must serve flat-identical
+    // results (ids 0..n in row order — recall needs no remap)
+    let stream = match harness::stream_ingest(
+        exp.quant.as_ref(), &exp.splits.base, None,
+        StreamConfig { segment_rows: 512, ..Default::default() }, 300)
+    {
+        Ok(ix) => ix,
+        Err(e) => {
+            eprintln!("[recall-gate] stream ingest failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let exec = Executor::new(search.num_threads);
+    let queries: Vec<&[f32]> = (0..exp.splits.query.len())
+        .map(|qi| exp.splits.query.row(qi))
+        .collect();
+    let mut results = Vec::with_capacity(queries.len());
+    for chunk in queries.chunks(128) {
+        let ks = vec![search.k; chunk.len()];
+        results.extend(stream.search_batch_on(
+            exp.quant.as_ref(), &exec, chunk, &ks, &search));
+    }
+    let stream_f32 = recall(&results, &exp.gt).at10 as f64;
+    cells.push(Cell { key: "stream_f32", recall_at10: stream_f32 });
+
+    // ---- write the smoke report (uploaded as a CI artifact) -------------
+    let report = Json::obj(vec![
+        ("bench", Json::Str("recall_gate".into())),
+        ("dataset", Json::Str(cfg.dataset.clone())),
+        ("quantizer", Json::Str(cfg.quantizer.name().into())),
+        ("scale", Json::Num(cfg.scale)),
+        ("rows", Json::Num(exp.index.n as f64)),
+        ("queries", Json::Num(exp.splits.query.len() as f64)),
+        ("num_lists", Json::Num(cfg.ivf.num_lists as f64)),
+        ("nprobe", Json::Num(nprobe_real as f64)),
+        ("ivf_all_f32_recall_at10", Json::Num(ivf_all)),
+        ("recall_at10", Json::Obj(
+            cells
+                .iter()
+                .map(|c| (c.key.to_string(), Json::Num(c.recall_at10)))
+                .collect(),
+        )),
+    ]);
+    let out = repo_root("BENCH_recall.smoke.json");
+    match std::fs::write(&out, report.render_pretty()) {
+        Ok(()) => println!("[recall-gate] wrote {}", out.display()),
+        Err(e) => {
+            eprintln!("[recall-gate] cannot write {}: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
+
+    // ---- gate ------------------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    let lookup = |key: &str| -> Option<f64> {
+        cells.iter().find(|c| c.key == key).map(|c| c.recall_at10)
+    };
+    let get = |key: &str| -> f64 {
+        lookup(key).expect("gate-internal keys are always measured")
+    };
+
+    let baseline_path = repo_root("BENCH_baseline.json");
+    let tolerance = match std::fs::read_to_string(&baseline_path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+    {
+        Some(b) => {
+            let tol =
+                b.get("tolerance_pct").and_then(Json::as_f64).unwrap_or(2.0);
+            if let Some(Json::Obj(floors)) = b.get("recall_at10") {
+                for (key, floor) in floors {
+                    // a baseline key the gate does not measure is a
+                    // config mistake, not a panic: surface and continue
+                    let Some(got) = lookup(key) else {
+                        failures.push(format!(
+                            "baseline key {key:?} is not a measured gate \
+                             cell — fix BENCH_baseline.json"));
+                        continue;
+                    };
+                    let Some(floor) = floor.as_f64() else {
+                        eprintln!(
+                            "[recall-gate] no committed floor for \
+                             {key:?} yet — measured {got:.2} (populate \
+                             BENCH_baseline.json from the smoke report)");
+                        continue;
+                    };
+                    if got + tol < floor {
+                        failures.push(format!(
+                            "{key}: recall@10 {got:.2} dropped more than \
+                             {tol:.2} below the committed floor {floor:.2}"
+                        ));
+                    }
+                }
+            }
+            tol
+        }
+        None => {
+            failures.push(format!(
+                "baseline file {} missing or unparsable",
+                baseline_path.display()));
+            2.0
+        }
+    };
+
+    // exactness invariants (baseline-free)
+    let flat_f32 = get("flat_f32");
+    if (ivf_all - flat_f32).abs() > 1e-6 {
+        failures.push(format!(
+            "ivf nprobe=all f32 recall {ivf_all:.4} != flat {flat_f32:.4} \
+             (must be bit-identical)"));
+    }
+    if (stream_f32 - flat_f32).abs() > 1e-6 {
+        failures.push(format!(
+            "streaming f32 recall {stream_f32:.4} != flat {flat_f32:.4} \
+             (fresh inserts must be flat-identical)"));
+    }
+    for (int_key, base_key, slack) in [
+        ("flat_u16", "flat_f32", tolerance),
+        ("flat_u8", "flat_f32", 2.0 * tolerance),
+        ("ivf_u16", "ivf_f32", tolerance),
+        ("ivf_u8", "ivf_f32", 2.0 * tolerance),
+    ] {
+        let (got, base) = (get(int_key), get(base_key));
+        if got + slack < base {
+            failures.push(format!(
+                "{int_key}: recall@10 {got:.2} fell more than {slack:.2} \
+                 below its f32 sibling {base:.2}"));
+        }
+    }
+
+    println!("[recall-gate] recall@10:");
+    for c in &cells {
+        println!("  {:<12} {:>6.2}", c.key, c.recall_at10);
+    }
+    println!("  {:<12} {:>6.2}", "ivf_all_f32", ivf_all);
+    if failures.is_empty() {
+        println!("[recall-gate] PASS");
+    } else {
+        for f in &failures {
+            eprintln!("[recall-gate] FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

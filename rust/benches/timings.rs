@@ -248,6 +248,21 @@ fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
 fn main() {
     let cfg = AppConfig::default().apply_env();
     let mut b = Bench::e2e();
+    if smoke() {
+        // the CI smoke job reads BOTH trajectory files afterwards; emit
+        // placeholder shapes up front so a panic or write failure in one
+        // sweep can never leave the other file missing (smoke files are
+        // disposable — measured `.json` files are never pre-clobbered)
+        for (name, label) in [("BENCH_scan.json", "scan_suite"),
+                              ("BENCH_ivf.json", "ivf_nprobe_sweep")] {
+            let placeholder = Json::obj(vec![
+                ("bench", Json::Str(label.into())),
+                ("status", Json::Str("incomplete: smoke run died before \
+                                      this sweep finished".into())),
+            ]);
+            write_report(name, &placeholder);
+        }
+    }
     if !smoke() {
         b.run("table1 complexity measurements", 1, || {
             if let Err(e) = table1_timings(&cfg) {
