@@ -1,7 +1,7 @@
 //! CI recall gate: run the harness at smoke sizes across
-//! {f32, u16, u8} × {flat, ivf} (+ the streaming write path), write the
-//! measured recall@10 to `BENCH_recall.smoke.json`, and FAIL (non-zero
-//! exit) when
+//! {f32, u16, u8} × {flat, ivf} (+ the streaming write path, + the
+//! natively trained UNQ across {flat, ivf}), write the measured
+//! recall@10 to `BENCH_recall.smoke.json`, and FAIL (non-zero exit) when
 //!
 //! * a combination drops more than `tolerance_pct` below the floor
 //!   committed in `BENCH_baseline.json` (null floors are skipped with a
@@ -132,6 +132,46 @@ fn main() {
     let stream_f32 = recall(&results, &exp.gt).at10 as f64;
     cells.push(Cell { key: "stream_f32", recall_at10: stream_f32 });
 
+    // native UNQ (pure-Rust trained, quant::unq_native): flat + ivf
+    // recall@10 at the same smoke sizes, with a tiny training budget.
+    // The model retrains EVERY run (its runs dir is wiped first):
+    // CI restores target/ from the actions cache, and gating a stale
+    // cached model would let a training regression slip through — the
+    // deeper training-quality gate lives in train_smoke.rs.
+    let mut ncfg = cfg.clone();
+    ncfg.quantizer = QuantizerKind::UnqNative;
+    ncfg.runs_dir = "target/ci-gate/runs-native".into();
+    let _ = std::fs::remove_dir_all(&ncfg.runs_dir);
+    ncfg.unq_native.hidden = 48;
+    ncfg.unq_native.epochs = 6;
+    ncfg.unq_native.batch = 128;
+    ncfg.unq_native.seed = 7;
+    let nexp = match harness::prepare(&ncfg, "") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[recall-gate] native-unq prepare failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let native_flat = nexp.run_recall(search).at10 as f64;
+    cells.push(Cell { key: "unq_native_flat", recall_at10: native_flat });
+    let nivf = match harness::build_or_load_ivf(
+        &ncfg, nexp.quant.as_ref(), &nexp.splits.train, &nexp.splits.base,
+        "")
+    {
+        Ok(ivf) => ivf,
+        Err(e) => {
+            eprintln!("[recall-gate] native-unq ivf build failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let native_ivf = {
+        let mut s = search;
+        s.nprobe = nprobe_real;
+        nexp.sweep_point(&nivf, s).recall.at10 as f64
+    };
+    cells.push(Cell { key: "unq_native_ivf", recall_at10: native_ivf });
+
     // ---- write the smoke report (uploaded as a CI artifact) -------------
     let report = Json::obj(vec![
         ("bench", Json::Str("recall_gate".into())),
@@ -222,6 +262,16 @@ fn main() {
         failures.push(format!(
             "streaming f32 recall {stream_f32:.4} != flat {flat_f32:.4} \
              (fresh inserts must be flat-identical)"));
+    }
+    // native UNQ sanity (baseline-free until its floors are measured):
+    // both cells must sit far above chance (random R@10 ≈ 0.5 here)
+    for key in ["unq_native_flat", "unq_native_ivf"] {
+        let got = get(key);
+        if got < 1.0 {
+            failures.push(format!(
+                "{key}: recall@10 {got:.2} is indistinguishable from \
+                 random — native UNQ training collapsed"));
+        }
     }
     for (int_key, base_key, slack) in [
         ("flat_u16", "flat_f32", tolerance),

@@ -1,0 +1,206 @@
+//! CI train-smoke gate: train a tiny [`NativeUnq`] **from scratch, in
+//! pure Rust** on synthetic data, train an OPQ baseline on the same
+//! split, and FAIL (non-zero exit) when the native model's recall@10
+//! lands more than `tolerance` below OPQ's — the merge gate that keeps
+//! the paper's headline quantizer actually trainable, not just
+//! compilable.  The per-epoch loss curve and both recall triples go to
+//! `BENCH_train.smoke.json` (uploaded as a workflow artifact).
+//!
+//! Sizes are smoke-tiny by default and env-tunable, `UNQ_BENCH_SMOKE`
+//! style:
+//!
+//! * `UNQ_TRAIN_SMOKE_SCALE` — dataset scale multiplier (default 0.05 ≈
+//!   5000 base/train vectors),
+//! * `UNQ_NATIVE_EPOCHS` / `UNQ_NATIVE_HIDDEN` / `UNQ_NATIVE_BATCH` /
+//!   `UNQ_NATIVE_LR` / `UNQ_NATIVE_SEED` — training caps,
+//! * `UNQ_TRAIN_SMOKE_TOL` — recall@10 tolerance vs OPQ in percentage
+//!   points (default 2.0, matching the recall-gate tolerance).
+//!
+//! Run: `cargo bench --bench train_smoke` (caches land under
+//! `target/ci-train/` so reruns are warm for data/GT, while both models
+//! always retrain — training determinism itself is under test).
+
+use std::path::{Path, PathBuf};
+
+use unq::config::{SearchConfig, UnqNativeConfig};
+use unq::data;
+use unq::eval::{recall, Recall};
+use unq::index::{CompressedIndex, SearchEngine};
+use unq::quant::{opq::Opq, unq_native::NativeUnq, Quantizer};
+use unq::util::json::Json;
+
+fn repo_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn measure_recall(q: &dyn Quantizer, splits: &data::Splits,
+                  gt: &unq::gt::GroundTruth) -> Recall {
+    let index = CompressedIndex::build(q, &splits.base);
+    let search = SearchConfig { rerank_l: 100, k: 100,
+                                ..Default::default() };
+    let engine = SearchEngine::new(q, &index, search);
+    let queries: Vec<&[f32]> = (0..splits.query.len())
+        .map(|qi| splits.query.row(qi))
+        .collect();
+    let mut results = Vec::with_capacity(queries.len());
+    for chunk in queries.chunks(128) {
+        results.extend(engine.search_batch(chunk));
+    }
+    recall(&results, gt)
+}
+
+fn main() {
+    let scale = env_f64("UNQ_TRAIN_SMOKE_SCALE", 0.05);
+    let tol = env_f64("UNQ_TRAIN_SMOKE_TOL", 2.0);
+    let (m, k) = (8usize, 64usize);
+    let ncfg = UnqNativeConfig {
+        hidden: env_usize("UNQ_NATIVE_HIDDEN", 64),
+        epochs: env_usize("UNQ_NATIVE_EPOCHS", 10),
+        batch: env_usize("UNQ_NATIVE_BATCH", 128),
+        lr: env_f64("UNQ_NATIVE_LR", 1e-3) as f32,
+        seed: env_usize("UNQ_NATIVE_SEED", 0) as u64,
+        ..Default::default()
+    };
+
+    let data_dir = PathBuf::from("target/ci-train/data");
+    let spec = data::spec_by_name("sift1m", scale).expect("catalog entry");
+    let splits = match data::load_or_generate(&spec, &data_dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[train-smoke] dataset generation failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let gt = match unq::gt::load_or_compute(&data_dir, &spec.name,
+                                            &splits.base, &splits.query,
+                                            100) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("[train-smoke] ground truth failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let dim = splits.train.dim;
+    println!(
+        "[train-smoke] sift1m @ scale {scale}: train {} base {} query {} \
+         (dim {dim}, {m}B, K={k})",
+        splits.train.len(), splits.base.len(), splits.query.len()
+    );
+
+    // the gate's subject: native UNQ trained from scratch
+    let t0 = std::time::Instant::now();
+    let native = NativeUnq::train(&splits.train.data, dim, m, k, &ncfg);
+    let native_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "[train-smoke] trained NativeUnq ({} params, {} epochs) in {:.1}s",
+        native.param_count(), ncfg.epochs, native_secs
+    );
+
+    // the baseline: OPQ with the harness's stock hyperparameters
+    let t1 = std::time::Instant::now();
+    let opq = Opq::train(&splits.train.data, dim, m, k, 0, 4, 10);
+    let opq_secs = t1.elapsed().as_secs_f64();
+    println!("[train-smoke] trained OPQ baseline in {:.1}s", opq_secs);
+
+    let r_native = measure_recall(&native, &splits, &gt);
+    let r_opq = measure_recall(&opq, &splits, &gt);
+    println!(
+        "[train-smoke] recall@10: unq-native {:.2} vs OPQ {:.2} \
+         (tolerance {tol:.2})",
+        r_native.at10, r_opq.at10
+    );
+
+    // ---- loss-curve report (uploaded as a CI artifact) ------------------
+    let curve: Vec<Json> = native
+        .history
+        .iter()
+        .map(|s| Json::obj(vec![
+            ("epoch", Json::Num(s.epoch as f64)),
+            ("tau", Json::Num(s.tau as f64)),
+            ("rec_loss", Json::Num(s.rec_loss)),
+            ("cons_loss", Json::Num(s.cons_loss)),
+        ]))
+        .collect();
+    let triple = |r: &Recall| {
+        Json::obj(vec![
+            ("at1", Json::Num(r.at1 as f64)),
+            ("at10", Json::Num(r.at10 as f64)),
+            ("at100", Json::Num(r.at100 as f64)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::Str("train_smoke".into())),
+        ("dataset", Json::Str(spec.name.clone())),
+        ("scale", Json::Num(scale)),
+        ("m", Json::Num(m as f64)),
+        ("k", Json::Num(k as f64)),
+        ("hidden", Json::Num(ncfg.hidden as f64)),
+        ("epochs", Json::Num(ncfg.epochs as f64)),
+        ("seed", Json::Num(ncfg.seed as f64)),
+        ("tolerance_pct", Json::Num(tol)),
+        ("native_train_secs", Json::Num(native_secs)),
+        ("opq_train_secs", Json::Num(opq_secs)),
+        ("loss_curve", Json::Arr(curve)),
+        ("recall_unq_native", triple(&r_native)),
+        ("recall_opq", triple(&r_opq)),
+    ]);
+    let out = repo_root("BENCH_train.smoke.json");
+    match std::fs::write(&out, report.render_pretty()) {
+        Ok(()) => println!("[train-smoke] wrote {}", out.display()),
+        Err(e) => {
+            eprintln!("[train-smoke] cannot write {}: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
+
+    // ---- gate -----------------------------------------------------------
+    let mut failures: Vec<String> = Vec::new();
+    if (r_native.at10 as f64) + tol < r_opq.at10 as f64 {
+        failures.push(format!(
+            "native UNQ recall@10 {:.2} dropped more than {tol:.2} below \
+             the OPQ baseline {:.2}",
+            r_native.at10, r_opq.at10
+        ));
+    }
+    // the loss curve must be finite and non-exploding: the last epoch's
+    // reconstruction term may not exceed the first epoch's by 10%
+    if let (Some(first), Some(last)) =
+        (native.history.first(), native.history.last())
+    {
+        if !last.rec_loss.is_finite() || !first.rec_loss.is_finite() {
+            failures.push("non-finite training loss".into());
+        } else if last.rec_loss > first.rec_loss * 1.10 {
+            failures.push(format!(
+                "training diverged: rec loss {:.5} (first epoch) → {:.5} \
+                 (last epoch)",
+                first.rec_loss, last.rec_loss
+            ));
+        }
+    } else {
+        failures.push("empty loss curve (0 epochs trained?)".into());
+    }
+    // absolute sanity floor: far above chance (random R@10 of n base
+    // rows ≈ 1000/n percent), far below anything a trained model scores
+    if r_native.at10 < 5.0 {
+        failures.push(format!(
+            "native UNQ recall@10 {:.2} is below the 5.0 sanity floor",
+            r_native.at10
+        ));
+    }
+    if failures.is_empty() {
+        println!("[train-smoke] PASS");
+    } else {
+        for f in &failures {
+            eprintln!("[train-smoke] FAIL: {f}");
+        }
+        std::process::exit(1);
+    }
+}

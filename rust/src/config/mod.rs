@@ -24,12 +24,16 @@ pub enum QuantizerKind {
     CatalystLattice,
     CatalystOpq,
     Unq,
+    /// The paper's method trained natively in Rust (`quant::unq_native`)
+    /// — no PJRT runtime or AOT artifacts involved.
+    UnqNative,
 }
 
 impl QuantizerKind {
     pub fn all() -> &'static [QuantizerKind] {
         use QuantizerKind::*;
-        &[Pq, Opq, Rvq, Lsq, LsqRerank, CatalystLattice, CatalystOpq, Unq]
+        &[Pq, Opq, Rvq, Lsq, LsqRerank, CatalystLattice, CatalystOpq, Unq,
+          UnqNative]
     }
 
     /// Paper row label.
@@ -43,6 +47,7 @@ impl QuantizerKind {
             QuantizerKind::CatalystLattice => "Catalyst+Lattice",
             QuantizerKind::CatalystOpq => "Catalyst+OPQ",
             QuantizerKind::Unq => "UNQ",
+            QuantizerKind::UnqNative => "UNQ-native",
         }
     }
 
@@ -57,6 +62,7 @@ impl QuantizerKind {
             "catalystlattice" | "lattice" => QuantizerKind::CatalystLattice,
             "catalystopq" => QuantizerKind::CatalystOpq,
             "unq" => QuantizerKind::Unq,
+            "unqnative" | "nativeunq" | "native" => QuantizerKind::UnqNative,
             _ => return None,
         })
     }
@@ -219,6 +225,48 @@ impl Default for StreamConfig {
     }
 }
 
+/// Training hyperparameters of the native (pure-Rust) UNQ quantizer
+/// (`quant::unq_native`, rust/DESIGN.md §8).  These are *build-time*
+/// knobs: they key nothing in the runs cache, so changing them without
+/// clearing `runs/` reuses the previously trained model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct UnqNativeConfig {
+    /// Hidden width of the encoder/decoder correction MLPs.
+    pub hidden: usize,
+    /// Per-codebook code sub-dimension; 0 = `dim / m` (the PQ-aligned
+    /// default, requires `dim % m == 0`).
+    pub ds: usize,
+    /// Training epochs over the train split (0 = keep the k-means
+    /// initialized, PQ-equivalent starting point).
+    pub epochs: usize,
+    /// Minibatch rows.
+    pub batch: usize,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Gumbel-softmax temperature, annealed linearly `tau0 → tau1`.
+    pub tau0: f32,
+    pub tau1: f32,
+    /// Weight of the compressed-domain consistency term
+    /// `‖net(x)_m − c_m‖²` against the reconstruction MSE.
+    pub lambda_cons: f32,
+    /// Gumbel exploration-noise scale (0 disables the noise; assignment
+    /// becomes plain softmax straight-through).
+    pub gumbel: f32,
+    /// Lloyd iterations for the codebook initialization k-means.
+    pub kmeans_iters: usize,
+    /// Seed for init, shuffling and Gumbel noise (full determinism).
+    pub seed: u64,
+}
+
+impl Default for UnqNativeConfig {
+    fn default() -> Self {
+        UnqNativeConfig { hidden: 128, ds: 0, epochs: 8, batch: 128,
+                          lr: 1e-3, tau0: 1.0, tau1: 0.25,
+                          lambda_cons: 0.25, gumbel: 1.0, kmeans_iters: 10,
+                          seed: 0 }
+    }
+}
+
 /// Serving parameters for the coordinator.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -257,6 +305,7 @@ pub struct AppConfig {
     pub serve: ServeConfig,
     pub ivf: IvfConfig,
     pub stream: StreamConfig,
+    pub unq_native: UnqNativeConfig,
     /// Directory roots (relative to CWD unless absolute).
     pub data_dir: PathBuf,
     pub artifacts_dir: PathBuf,
@@ -276,6 +325,7 @@ impl Default for AppConfig {
             serve: ServeConfig::default(),
             ivf: IvfConfig::default(),
             stream: StreamConfig::default(),
+            unq_native: UnqNativeConfig::default(),
             data_dir: "data".into(),
             artifacts_dir: "artifacts".into(),
             runs_dir: "runs".into(),
@@ -312,6 +362,20 @@ impl AppConfig {
                 ("compact_segments",
                  Json::Num(self.stream.compact_segments as f64)),
                 ("wal_sync", Json::Num(self.stream.wal_sync as f64)),
+            ])),
+            ("unq_native", Json::obj(vec![
+                ("hidden", Json::Num(self.unq_native.hidden as f64)),
+                ("ds", Json::Num(self.unq_native.ds as f64)),
+                ("epochs", Json::Num(self.unq_native.epochs as f64)),
+                ("batch", Json::Num(self.unq_native.batch as f64)),
+                ("lr", Json::Num(self.unq_native.lr as f64)),
+                ("tau0", Json::Num(self.unq_native.tau0 as f64)),
+                ("tau1", Json::Num(self.unq_native.tau1 as f64)),
+                ("lambda_cons", Json::Num(self.unq_native.lambda_cons as f64)),
+                ("gumbel", Json::Num(self.unq_native.gumbel as f64)),
+                ("kmeans_iters",
+                 Json::Num(self.unq_native.kmeans_iters as f64)),
+                ("seed", Json::Num(self.unq_native.seed as f64)),
             ])),
             ("serve", Json::obj(vec![
                 ("max_batch", Json::Num(self.serve.max_batch as f64)),
@@ -394,6 +458,41 @@ impl AppConfig {
                 cfg.stream.wal_sync = v;
             }
         }
+        if let Some(s) = j.get("unq_native") {
+            if let Some(v) = s.get("hidden").and_then(Json::as_usize) {
+                cfg.unq_native.hidden = v;
+            }
+            if let Some(v) = s.get("ds").and_then(Json::as_usize) {
+                cfg.unq_native.ds = v;
+            }
+            if let Some(v) = s.get("epochs").and_then(Json::as_usize) {
+                cfg.unq_native.epochs = v;
+            }
+            if let Some(v) = s.get("batch").and_then(Json::as_usize) {
+                cfg.unq_native.batch = v;
+            }
+            if let Some(v) = s.get("lr").and_then(Json::as_f64) {
+                cfg.unq_native.lr = v as f32;
+            }
+            if let Some(v) = s.get("tau0").and_then(Json::as_f64) {
+                cfg.unq_native.tau0 = v as f32;
+            }
+            if let Some(v) = s.get("tau1").and_then(Json::as_f64) {
+                cfg.unq_native.tau1 = v as f32;
+            }
+            if let Some(v) = s.get("lambda_cons").and_then(Json::as_f64) {
+                cfg.unq_native.lambda_cons = v as f32;
+            }
+            if let Some(v) = s.get("gumbel").and_then(Json::as_f64) {
+                cfg.unq_native.gumbel = v as f32;
+            }
+            if let Some(v) = s.get("kmeans_iters").and_then(Json::as_usize) {
+                cfg.unq_native.kmeans_iters = v;
+            }
+            if let Some(v) = s.get("seed").and_then(Json::as_usize) {
+                cfg.unq_native.seed = v as u64;
+            }
+        }
         if let Some(s) = j.get("serve") {
             if let Some(v) = s.get("max_batch").and_then(Json::as_usize) {
                 cfg.serve.max_batch = v;
@@ -438,6 +537,19 @@ impl AppConfig {
             bail!("stream.segment_rows and stream.compact_segments must \
                    be positive");
         }
+        if cfg.unq_native.hidden == 0 || cfg.unq_native.batch == 0 {
+            bail!("unq_native.hidden and unq_native.batch must be positive");
+        }
+        if cfg.unq_native.tau0 <= 0.0 || cfg.unq_native.tau1 <= 0.0 {
+            bail!("unq_native temperatures must be positive");
+        }
+        if cfg.unq_native.lr <= 0.0 || !cfg.unq_native.lr.is_finite() {
+            bail!("unq_native.lr must be positive and finite");
+        }
+        if cfg.unq_native.lambda_cons < 0.0 || cfg.unq_native.gumbel < 0.0 {
+            bail!("unq_native.lambda_cons and unq_native.gumbel must be \
+                   non-negative");
+        }
         Ok(cfg)
     }
 
@@ -451,6 +563,42 @@ impl AppConfig {
 
     /// Apply environment overrides (`UNQ_SCALE`, `UNQ_THREADS`, ...).
     pub fn apply_env(mut self) -> Self {
+        if let Ok(s) = std::env::var("UNQ_QUANTIZER") {
+            if let Some(q) = QuantizerKind::parse(&s) {
+                self.quantizer = q;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NATIVE_EPOCHS") {
+            if let Ok(v) = s.parse::<usize>() {
+                self.unq_native.epochs = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NATIVE_HIDDEN") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.unq_native.hidden = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NATIVE_BATCH") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.unq_native.batch = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NATIVE_LR") {
+            if let Ok(v) = s.parse::<f32>() {
+                if v > 0.0 {
+                    self.unq_native.lr = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NATIVE_SEED") {
+            if let Ok(v) = s.parse::<u64>() {
+                self.unq_native.seed = v;
+            }
+        }
         if let Ok(s) = std::env::var("UNQ_SCALE") {
             if let Ok(v) = s.parse::<f64>() {
                 self.scale = v;
@@ -677,6 +825,51 @@ mod tests {
         assert_eq!(ScanPrecision::parse("i4"), None);
         assert_eq!(ScanPrecision::U16.name(), "u16");
         assert_eq!(ScanPrecision::all().len(), 3);
+    }
+
+    #[test]
+    fn unq_native_section_roundtrip_defaults_and_rejects() {
+        let c = AppConfig::default();
+        assert_eq!(c.unq_native, UnqNativeConfig::default());
+        assert_eq!(c.unq_native.hidden, 128);
+        assert_eq!(c.unq_native.ds, 0, "ds 0 = dim/m default");
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("native.json");
+        let mut c = AppConfig::default();
+        c.quantizer = QuantizerKind::UnqNative;
+        c.unq_native.hidden = 32;
+        c.unq_native.epochs = 3;
+        c.unq_native.batch = 64;
+        c.unq_native.lr = 0.005;
+        c.unq_native.seed = 9;
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.quantizer, QuantizerKind::UnqNative);
+        assert_eq!(back.unq_native.hidden, 32);
+        assert_eq!(back.unq_native.epochs, 3);
+        assert_eq!(back.unq_native.batch, 64);
+        assert!((back.unq_native.lr - 0.005).abs() < 1e-9);
+        assert_eq!(back.unq_native.seed, 9);
+        let j = Json::parse(r#"{"unq_native": {"hidden": 0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"unq_native": {"tau1": 0.0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"unq_native": {"lr": -0.001}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"unq_native": {"gumbel": -1.0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unq_native_parse_aliases() {
+        assert_eq!(QuantizerKind::parse("unq-native"),
+                   Some(QuantizerKind::UnqNative));
+        assert_eq!(QuantizerKind::parse("UNQ_NATIVE"),
+                   Some(QuantizerKind::UnqNative));
+        assert_eq!(QuantizerKind::parse("native"),
+                   Some(QuantizerKind::UnqNative));
+        assert_eq!(QuantizerKind::UnqNative.name(), "UNQ-native");
+        assert!(QuantizerKind::all().contains(&QuantizerKind::UnqNative));
     }
 
     #[test]

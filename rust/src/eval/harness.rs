@@ -19,7 +19,7 @@ use crate::gt::GroundTruth;
 use crate::index::{CompressedIndex, SearchEngine};
 use crate::ivf::{CoarseQuantizer, IvfIndex};
 use crate::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq,
-                   unq::UnqQuantizer, Quantizer};
+                   unq::UnqQuantizer, unq_native::NativeUnq, Quantizer};
 use crate::runtime::UnqRuntime;
 use crate::store::Store;
 use crate::Result;
@@ -295,6 +295,8 @@ pub fn train_or_load_shallow(cfg: &AppConfig, kind: QuantizerKind,
                 let opq = Opq::load(&store, "")?;
                 Box::new(lattice::CatalystOpq { map, opq })
             }
+            QuantizerKind::UnqNative =>
+                Box::new(NativeUnq::load(&store, "")?),
             QuantizerKind::Unq => bail!("UNQ is artifact-backed, not cached here"),
         };
         return Ok((q, 0.0));
@@ -338,6 +340,16 @@ pub fn train_or_load_shallow(cfg: &AppConfig, kind: QuantizerKind,
             q.opq.save(&mut store, "");
             Box::new(q)
         }
+        QuantizerKind::UnqNative => {
+            // the paper's DNN quantizer, trained from scratch in-process
+            // (quant::unq_native; hyperparameters from cfg.unq_native —
+            // note they do not key the cache path, so clear `runs/` to
+            // retrain with different settings)
+            let q = NativeUnq::train(&train.data, dim, m, k,
+                                     &cfg.unq_native);
+            q.save(&mut store, "");
+            Box::new(q)
+        }
         QuantizerKind::Unq => bail!("UNQ is artifact-backed; use load_unq"),
     };
     let secs = t0.elapsed().as_secs_f64();
@@ -365,7 +377,11 @@ pub fn load_unq(cfg: &AppConfig, variant: &str)
     let dir = cfg.artifacts_dir.join(&name);
     let rt = UnqRuntime::load(&dir)
         .with_context(|| format!("load UNQ artifact {name:?} — run `make artifacts`"))?;
-    let q = UnqQuantizer::new(rt.handle.clone());
+    // probe all three graphs now: a broken runtime is a clean error at
+    // load time, never a panic mid-scan (quant::unq failure contract)
+    let q = UnqQuantizer::try_new(rt.handle.clone())
+        .with_context(|| format!("UNQ artifact {name:?} failed its \
+                                  construction probe"))?;
     Ok((rt, q))
 }
 
@@ -535,6 +551,63 @@ mod tests {
                     "{:?} recall collapsed: {} vs f32 {}",
                     pt.precision, pt.recall.at100, pts[0].recall.at100);
         }
+    }
+
+    #[test]
+    fn end_to_end_native_unq_trains_caches_and_searches() {
+        let dir = TempDir::new("harness").unwrap();
+        let mut cfg = tiny_cfg(dir.path(), QuantizerKind::UnqNative);
+        cfg.k_codewords = 16;
+        cfg.scale = 0.01; // 1000 base vectors: keep the debug test fast
+        // tiny training budget: the PQ-equivalent init does the heavy
+        // lifting, two epochs exercise the full optimization path
+        cfg.unq_native.hidden = 16;
+        cfg.unq_native.epochs = 2;
+        cfg.unq_native.batch = 256;
+        cfg.unq_native.kmeans_iters = 6;
+        let exp = prepare(&cfg, "").unwrap();
+        assert!(exp.train_secs > 0.0, "first prepare must train");
+        assert_eq!(exp.quant.name(), "UNQ-native");
+        // small rerank depth: the decoder MLP dominates debug-mode time
+        let search = SearchConfig { rerank_l: 20, k: 20,
+                                    ..Default::default() };
+        let r = exp.run_recall(search);
+        // random top-10 of 1000 would give R@10 ≈ 1%
+        assert!(r.at10 > 20.0, "R@10 = {}", r.at10);
+        assert!(r.at1 <= r.at10 && r.at10 <= r.at100);
+        // second prepare loads the trained model from the runs cache and
+        // reproduces the identical index
+        let again = prepare(&cfg, "").unwrap();
+        assert_eq!(again.train_secs, 0.0, "second prepare must hit cache");
+        assert_eq!(again.index.codes, exp.index.codes);
+        // the trait object plugs into the IVF read path unchanged:
+        // nprobe = all lists (non-residual) is flat-identical
+        let mut icfg = cfg.clone();
+        icfg.ivf.num_lists = 8;
+        let ivf = build_or_load_ivf(&icfg, exp.quant.as_ref(),
+                                    &exp.splits.train, &exp.splits.base,
+                                    "").unwrap();
+        let pts = exp.run_ivf_nprobe_sweep(&ivf, search, &[8]);
+        assert_eq!(pts[0].recall, r, "ivf@all must equal flat");
+        // ... and into the streaming write path: fresh inserts serve
+        // flat-identical ids
+        let stream = stream_ingest(
+            exp.quant.as_ref(), &exp.splits.base, None,
+            crate::config::StreamConfig { segment_rows: 256,
+                                          ..Default::default() },
+            300).unwrap();
+        let exec = Executor::new(search.num_threads);
+        let queries: Vec<&[f32]> = (0..exp.splits.query.len())
+            .map(|qi| exp.splits.query.row(qi))
+            .collect();
+        let mut results = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(128) {
+            let ks = vec![search.k; chunk.len()];
+            results.extend(stream.search_batch_on(
+                exp.quant.as_ref(), &exec, chunk, &ks, &search));
+        }
+        assert_eq!(super::recall(&results, &exp.gt), r,
+                   "streaming must equal flat for fresh inserts");
     }
 
     #[test]

@@ -26,7 +26,8 @@
 //! | [`data`] | synthetic deep-like / sift-like generators, *vecs I/O |
 //! | [`kmeans`] | Lloyd + k-means++ (shared by all shallow quantizers) |
 //! | [`gt`] | exact brute-force ground truth (cached) |
-//! | [`quant`] | `Quantizer` trait + PQ/OPQ/RVQ/LSQ/lattice/UNQ |
+//! | [`nn`] | hand-rolled reverse-mode layers + Adam (native UNQ training) |
+//! | [`quant`] | `Quantizer` trait + PQ/OPQ/RVQ/LSQ/lattice/UNQ (AOT + native) |
 //! | [`index`] | compressed storage, ADC LUT scan, rerank, two-stage search; mutable streaming segments ([`index::segment`]) |
 //! | [`ivf`] | coarse-partitioned inverted lists: sub-linear nprobe search |
 //! | [`exec`] | batch executor: worker pool + generic scan-task plans |
@@ -53,6 +54,7 @@ pub mod index;
 pub mod ivf;
 pub mod kmeans;
 pub mod linalg;
+pub mod nn;
 pub mod quant;
 pub mod runtime;
 pub mod store;

@@ -121,6 +121,17 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
         anyhow::ensure!(c > 0, "--compact-segments must be positive");
         cfg.stream.compact_segments = c;
     }
+    if let Some(e) = f.get("native-epochs") {
+        cfg.unq_native.epochs = e.parse().context("--native-epochs")?;
+    }
+    if let Some(h) = f.get("native-hidden") {
+        let h: usize = h.parse().context("--native-hidden")?;
+        anyhow::ensure!(h > 0, "--native-hidden must be positive");
+        cfg.unq_native.hidden = h;
+    }
+    if let Some(s) = f.get("native-seed") {
+        cfg.unq_native.seed = s.parse().context("--native-seed")?;
+    }
     if let Some(p) = f.get("precision") {
         cfg.search.scan_precision = ScanPrecision::parse(p)
             .with_context(|| format!("unknown scan precision {p:?} \
@@ -189,6 +200,13 @@ Streaming:  [--segment-rows R] [--compact-segments S] size the mutable
             UNQ_WAL_SYNC; WAL-backed segments, DESIGN.md §7; --backend
             ivf routes inserts through a coarse codebook)
 Quantizers: pq opq rvq lsq lsq+rerank catalyst-lattice catalyst-opq unq
+            unq-native (also via env UNQ_QUANTIZER).  `unq` runs AOT
+            artifacts through PJRT; `unq-native` trains the paper's DNN
+            quantizer in pure Rust (`unq train --quantizer unq-native`;
+            knobs: [--native-epochs N] [--native-hidden H]
+            [--native-seed S], env UNQ_NATIVE_EPOCHS / UNQ_NATIVE_HIDDEN
+            / UNQ_NATIVE_BATCH / UNQ_NATIVE_LR / UNQ_NATIVE_SEED, or the
+            `unq_native` config section; rust/DESIGN.md §8)
 Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see
             rust/DESIGN.md)
 ";

@@ -1,0 +1,624 @@
+//! The layer zoo: Linear, BatchNorm-lite, ReLU, softmax-with-temperature.
+//!
+//! Every layer is a plain struct over flat row-major `f32` buffers with an
+//! explicit `forward` / `backward` pair — no autograd tape, no graph; the
+//! caller (e.g. [`super::Mlp`], `quant::unq_native`) owns the wiring and
+//! threads the forward caches back into the backward pass by hand.
+//! Gradients accumulate into the layer's own `g*` buffers (zeroed via
+//! `zero_grad`) so one minibatch can sum contributions from several loss
+//! terms before the optimizer step.  Each backward is finite-difference
+//! checked in this module's tests.
+
+use crate::store::Store;
+use crate::util::rng::SplitMix64;
+use crate::Result;
+
+/// Weight initialization scheme for [`Linear::new`].
+#[derive(Clone, Copy, Debug)]
+pub enum Init {
+    /// He/Kaiming: `w ~ N(0, 2/in_dim)` — the ReLU-era default.
+    He,
+    /// All zeros — used for the last layer of a residual correction
+    /// branch so the branch starts as the identity-preserving no-op.
+    Zero,
+    /// Partial identity: `w[o][i] = [o == i]` on the leading square block
+    /// (exact identity when `in_dim == out_dim`) — used for skip paths so
+    /// a freshly initialized network starts as a (projection of the)
+    /// identity map.
+    Identity,
+}
+
+/// Fully connected layer `y = x Wᵀ + b` over a flat `n × in_dim` batch.
+pub struct Linear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// `out_dim × in_dim`, row-major (`w[o * in_dim + i]`).
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    /// accumulated gradients (same layouts as `w` / `b`)
+    pub gw: Vec<f32>,
+    pub gb: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(in_dim: usize, out_dim: usize, init: Init,
+               rng: &mut SplitMix64) -> Linear {
+        let mut w = vec![0.0f32; out_dim * in_dim];
+        match init {
+            Init::He => {
+                let scale = (2.0 / in_dim as f32).sqrt();
+                for v in w.iter_mut() {
+                    *v = rng.normal() * scale;
+                }
+            }
+            Init::Zero => {}
+            Init::Identity => {
+                for o in 0..out_dim.min(in_dim) {
+                    w[o * in_dim + o] = 1.0;
+                }
+            }
+        }
+        Linear {
+            in_dim,
+            out_dim,
+            w,
+            b: vec![0.0; out_dim],
+            gw: vec![0.0; out_dim * in_dim],
+            gb: vec![0.0; out_dim],
+        }
+    }
+
+    /// `y[n × out_dim] = x Wᵀ + b`.
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), n * self.in_dim);
+        let mut y = vec![0.0f32; n * self.out_dim];
+        for r in 0..n {
+            let xr = &x[r * self.in_dim..(r + 1) * self.in_dim];
+            let yr = &mut y[r * self.out_dim..(r + 1) * self.out_dim];
+            for (o, yv) in yr.iter_mut().enumerate() {
+                let wrow = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                *yv = self.b[o] + crate::linalg::dot(xr, wrow);
+            }
+        }
+        y
+    }
+
+    /// Accumulate `gw += dyᵀ x`, `gb += Σ dy`, return `dx = dy W`.
+    pub fn backward(&mut self, x: &[f32], dy: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), n * self.in_dim);
+        debug_assert_eq!(dy.len(), n * self.out_dim);
+        let mut dx = vec![0.0f32; n * self.in_dim];
+        for r in 0..n {
+            let xr = &x[r * self.in_dim..(r + 1) * self.in_dim];
+            let dyr = &dy[r * self.out_dim..(r + 1) * self.out_dim];
+            let dxr = &mut dx[r * self.in_dim..(r + 1) * self.in_dim];
+            for (o, &g) in dyr.iter().enumerate() {
+                if g == 0.0 {
+                    continue;
+                }
+                self.gb[o] += g;
+                let wrow = &self.w[o * self.in_dim..(o + 1) * self.in_dim];
+                let gwrow =
+                    &mut self.gw[o * self.in_dim..(o + 1) * self.in_dim];
+                for i in 0..self.in_dim {
+                    gwrow[i] += g * xr[i];
+                    dxr[i] += g * wrow[i];
+                }
+            }
+        }
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gw.iter_mut().for_each(|v| *v = 0.0);
+        self.gb.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+
+    pub fn save(&self, store: &mut Store, name: &str) {
+        store.put_f32(&format!("{name}_w"), &[self.out_dim, self.in_dim],
+                      self.w.clone());
+        store.put_f32(&format!("{name}_b"), &[self.out_dim], self.b.clone());
+    }
+
+    pub fn load(store: &Store, name: &str) -> Result<Linear> {
+        let (shape, w) = store
+            .get_f32(&format!("{name}_w"))
+            .ok_or_else(|| anyhow::anyhow!("missing linear {name}_w"))?;
+        let (_, b) = store
+            .get_f32(&format!("{name}_b"))
+            .ok_or_else(|| anyhow::anyhow!("missing linear {name}_b"))?;
+        let (out_dim, in_dim) = (shape[0], shape[1]);
+        Ok(Linear {
+            in_dim,
+            out_dim,
+            w: w.to_vec(),
+            b: b.to_vec(),
+            gw: vec![0.0; out_dim * in_dim],
+            gb: vec![0.0; out_dim],
+        })
+    }
+}
+
+/// Forward caches [`BatchNormLite::forward`] hands back for the backward
+/// pass: the normalized activations and the inverse std actually used.
+pub struct BnCache {
+    pub xhat: Vec<f32>,
+    pub inv_std: Vec<f32>,
+}
+
+/// Per-feature normalization with learnable scale/shift — the "lite" cut
+/// of batch norm: the backward pass treats the normalization statistics
+/// as constants (no Jacobian through the batch mean/var), which keeps the
+/// layer finite-difference checkable in frozen-stats mode and is accurate
+/// enough for the shallow stacks this crate trains.  In training mode the
+/// batch statistics are used and folded into running EMAs; in eval mode
+/// the running statistics apply (so inference is deterministic and
+/// batch-size independent).
+pub struct BatchNormLite {
+    pub dim: usize,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub ggamma: Vec<f32>,
+    pub gbeta: Vec<f32>,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    pub eps: f32,
+}
+
+impl BatchNormLite {
+    pub fn new(dim: usize) -> BatchNormLite {
+        BatchNormLite {
+            dim,
+            gamma: vec![1.0; dim],
+            beta: vec![0.0; dim],
+            ggamma: vec![0.0; dim],
+            gbeta: vec![0.0; dim],
+            running_mean: vec![0.0; dim],
+            running_var: vec![1.0; dim],
+            momentum: 0.1,
+            eps: 1e-5,
+        }
+    }
+
+    /// Normalize a flat `n × dim` batch.  With `update_stats` the batch
+    /// mean/var normalize (and refresh the running EMAs); without it the
+    /// running statistics normalize — the deterministic, fd-checkable
+    /// mode (`infer` is the cache-free shorthand).
+    pub fn forward(&mut self, x: &[f32], n: usize, update_stats: bool)
+                   -> (Vec<f32>, BnCache) {
+        debug_assert_eq!(x.len(), n * self.dim);
+        let d = self.dim;
+        let (mean, var) = if update_stats {
+            let mut mean = vec![0.0f32; d];
+            let mut var = vec![0.0f32; d];
+            for r in 0..n {
+                for (f, &v) in x[r * d..(r + 1) * d].iter().enumerate() {
+                    mean[f] += v;
+                }
+            }
+            let inv_n = 1.0 / n.max(1) as f32;
+            mean.iter_mut().for_each(|v| *v *= inv_n);
+            for r in 0..n {
+                for (f, &v) in x[r * d..(r + 1) * d].iter().enumerate() {
+                    let c = v - mean[f];
+                    var[f] += c * c;
+                }
+            }
+            var.iter_mut().for_each(|v| *v *= inv_n);
+            for f in 0..d {
+                self.running_mean[f] = (1.0 - self.momentum)
+                    * self.running_mean[f]
+                    + self.momentum * mean[f];
+                self.running_var[f] = (1.0 - self.momentum)
+                    * self.running_var[f]
+                    + self.momentum * var[f];
+            }
+            (mean, var)
+        } else {
+            (self.running_mean.clone(), self.running_var.clone())
+        };
+        let inv_std: Vec<f32> =
+            var.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
+        let mut xhat = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n * d];
+        for r in 0..n {
+            for f in 0..d {
+                let h = (x[r * d + f] - mean[f]) * inv_std[f];
+                xhat[r * d + f] = h;
+                y[r * d + f] = self.gamma[f] * h + self.beta[f];
+            }
+        }
+        (y, BnCache { xhat, inv_std })
+    }
+
+    /// Eval-mode forward without caches (running statistics, `&self`).
+    pub fn infer(&self, x: &[f32], n: usize) -> Vec<f32> {
+        debug_assert_eq!(x.len(), n * self.dim);
+        let d = self.dim;
+        let inv_std: Vec<f32> = self
+            .running_var
+            .iter()
+            .map(|&v| 1.0 / (v + self.eps).sqrt())
+            .collect();
+        let mut y = vec![0.0f32; n * d];
+        for r in 0..n {
+            for f in 0..d {
+                let h = (x[r * d + f] - self.running_mean[f]) * inv_std[f];
+                y[r * d + f] = self.gamma[f] * h + self.beta[f];
+            }
+        }
+        y
+    }
+
+    /// `dx = dy · γ · inv_std` (statistics treated as constants),
+    /// accumulating `gγ += Σ dy ⊙ x̂`, `gβ += Σ dy`.
+    pub fn backward(&mut self, cache: &BnCache, dy: &[f32], n: usize)
+                    -> Vec<f32> {
+        let d = self.dim;
+        debug_assert_eq!(dy.len(), n * d);
+        let mut dx = vec![0.0f32; n * d];
+        for r in 0..n {
+            for f in 0..d {
+                let g = dy[r * d + f];
+                self.ggamma[f] += g * cache.xhat[r * d + f];
+                self.gbeta[f] += g;
+                dx[r * d + f] = g * self.gamma[f] * cache.inv_std[f];
+            }
+        }
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.ggamma.iter_mut().for_each(|v| *v = 0.0);
+        self.gbeta.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.gamma.len() + self.beta.len()
+    }
+
+    pub fn save(&self, store: &mut Store, name: &str) {
+        store.put_f32(&format!("{name}_gamma"), &[self.dim],
+                      self.gamma.clone());
+        store.put_f32(&format!("{name}_beta"), &[self.dim],
+                      self.beta.clone());
+        store.put_f32(&format!("{name}_rmean"), &[self.dim],
+                      self.running_mean.clone());
+        store.put_f32(&format!("{name}_rvar"), &[self.dim],
+                      self.running_var.clone());
+    }
+
+    pub fn load(store: &Store, name: &str) -> Result<BatchNormLite> {
+        let get = |suffix: &str| -> Result<Vec<f32>> {
+            store
+                .get_f32(&format!("{name}_{suffix}"))
+                .map(|(_, d)| d.to_vec())
+                .ok_or_else(|| anyhow::anyhow!("missing bn {name}_{suffix}"))
+        };
+        let gamma = get("gamma")?;
+        let dim = gamma.len();
+        Ok(BatchNormLite {
+            dim,
+            gamma,
+            beta: get("beta")?,
+            ggamma: vec![0.0; dim],
+            gbeta: vec![0.0; dim],
+            running_mean: get("rmean")?,
+            running_var: get("rvar")?,
+            momentum: 0.1,
+            eps: 1e-5,
+        })
+    }
+}
+
+/// Elementwise `max(0, x)`.
+pub fn relu(x: &[f32]) -> Vec<f32> {
+    x.iter().map(|&v| v.max(0.0)).collect()
+}
+
+/// ReLU backward from the cached *pre-activation*: `dx = dy ⊙ [x > 0]`.
+pub fn relu_backward(x_pre: &[f32], dy: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x_pre.len(), dy.len());
+    x_pre
+        .iter()
+        .zip(dy)
+        .map(|(&x, &g)| if x > 0.0 { g } else { 0.0 })
+        .collect()
+}
+
+/// Row-wise softmax with temperature: `p = softmax(logits / τ)` over each
+/// contiguous row of `k` entries (max-subtracted for stability).
+pub fn softmax_t_rows(logits: &[f32], rows: usize, k: usize, tau: f32)
+                      -> Vec<f32> {
+    debug_assert_eq!(logits.len(), rows * k);
+    debug_assert!(tau > 0.0);
+    let mut p = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        let lr = &logits[r * k..(r + 1) * k];
+        let pr = &mut p[r * k..(r + 1) * k];
+        let hi = lr.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for (pv, &l) in pr.iter_mut().zip(lr) {
+            let e = ((l - hi) / tau).exp();
+            *pv = e;
+            z += e;
+        }
+        let inv = 1.0 / z.max(1e-30);
+        pr.iter_mut().for_each(|v| *v *= inv);
+    }
+    p
+}
+
+/// Softmax-with-temperature backward: given `p` from
+/// [`softmax_t_rows`] and upstream `dp`, returns
+/// `dlogits_j = p_j (dp_j − Σ_i dp_i p_i) / τ`.
+pub fn softmax_t_backward(p: &[f32], dp: &[f32], rows: usize, k: usize,
+                          tau: f32) -> Vec<f32> {
+    debug_assert_eq!(p.len(), rows * k);
+    debug_assert_eq!(dp.len(), rows * k);
+    let mut dl = vec![0.0f32; rows * k];
+    let inv_tau = 1.0 / tau;
+    for r in 0..rows {
+        let pr = &p[r * k..(r + 1) * k];
+        let dpr = &dp[r * k..(r + 1) * k];
+        let dlr = &mut dl[r * k..(r + 1) * k];
+        let mean: f32 = pr.iter().zip(dpr).map(|(&a, &b)| a * b).sum();
+        for j in 0..k {
+            dlr[j] = pr[j] * (dpr[j] - mean) * inv_tau;
+        }
+    }
+    dl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::grads_close;
+    use crate::util::prop;
+    use crate::util::rng::SplitMix64;
+
+    const EPS: f32 = 1e-3;
+    const TOL: f32 = 2e-2;
+
+    /// Scalar probe loss `L = Σ coef ⊙ forward(x)` — linear in the
+    /// output, so `dy = coef` and central differences are accurate.
+    fn coef(rng: &mut SplitMix64, len: usize) -> Vec<f32> {
+        prop::vec_f32(rng, len, 1.0)
+    }
+
+    #[test]
+    fn linear_grads_match_finite_differences() {
+        let mut rng = SplitMix64::new(3);
+        let (n, din, dout) = (4usize, 5usize, 3usize);
+        let mut l = Linear::new(din, dout, Init::He, &mut rng);
+        let x = prop::vec_f32(&mut rng, n * din, 1.0);
+        let dy = coef(&mut rng, n * dout);
+        let loss = |l: &Linear, x: &[f32]| -> f32 {
+            l.forward(x, n).iter().zip(&dy).map(|(&y, &c)| y * c).sum()
+        };
+        l.zero_grad();
+        let dx = l.backward(&x, &dy, n);
+        // weights
+        for idx in 0..l.w.len() {
+            let old = l.w[idx];
+            l.w[idx] = old + EPS;
+            let lp = loss(&l, &x);
+            l.w[idx] = old - EPS;
+            let lm = loss(&l, &x);
+            l.w[idx] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(l.gw[idx], fd, TOL),
+                    "gw[{idx}]: {} vs fd {fd}", l.gw[idx]);
+        }
+        // bias
+        for idx in 0..l.b.len() {
+            let old = l.b[idx];
+            l.b[idx] = old + EPS;
+            let lp = loss(&l, &x);
+            l.b[idx] = old - EPS;
+            let lm = loss(&l, &x);
+            l.b[idx] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(l.gb[idx], fd, TOL),
+                    "gb[{idx}]: {} vs fd {fd}", l.gb[idx]);
+        }
+        // input
+        let mut xm = x.clone();
+        for idx in 0..xm.len() {
+            let old = xm[idx];
+            xm[idx] = old + EPS;
+            let lp = loss(&l, &xm);
+            xm[idx] = old - EPS;
+            let lm = loss(&l, &xm);
+            xm[idx] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(dx[idx], fd, TOL),
+                    "dx[{idx}]: {} vs fd {fd}", dx[idx]);
+        }
+    }
+
+    #[test]
+    fn batchnorm_lite_grads_match_finite_differences() {
+        // frozen-stats mode: the statistics are constants, so the lite
+        // backward is the exact gradient and fd must agree
+        let mut rng = SplitMix64::new(5);
+        let (n, d) = (6usize, 4usize);
+        let mut bn = BatchNormLite::new(d);
+        for f in 0..d {
+            bn.running_mean[f] = rng.normal();
+            bn.running_var[f] = 0.5 + rng.next_f32();
+            bn.gamma[f] = 0.5 + rng.next_f32();
+            bn.beta[f] = rng.normal();
+        }
+        let x = prop::vec_f32(&mut rng, n * d, 2.0);
+        let dy = coef(&mut rng, n * d);
+        let loss = |bn: &BatchNormLite, x: &[f32]| -> f32 {
+            bn.infer(x, n).iter().zip(&dy).map(|(&y, &c)| y * c).sum()
+        };
+        bn.zero_grad();
+        let (_, cache) = bn.forward(&x, n, false);
+        let dx = bn.backward(&cache, &dy, n);
+        for f in 0..d {
+            let old = bn.gamma[f];
+            bn.gamma[f] = old + EPS;
+            let lp = loss(&bn, &x);
+            bn.gamma[f] = old - EPS;
+            let lm = loss(&bn, &x);
+            bn.gamma[f] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(bn.ggamma[f], fd, TOL),
+                    "ggamma[{f}]: {} vs fd {fd}", bn.ggamma[f]);
+
+            let old = bn.beta[f];
+            bn.beta[f] = old + EPS;
+            let lp = loss(&bn, &x);
+            bn.beta[f] = old - EPS;
+            let lm = loss(&bn, &x);
+            bn.beta[f] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(bn.gbeta[f], fd, TOL),
+                    "gbeta[{f}]: {} vs fd {fd}", bn.gbeta[f]);
+        }
+        let mut xm = x.clone();
+        for idx in 0..xm.len() {
+            let old = xm[idx];
+            xm[idx] = old + EPS;
+            let lp = loss(&bn, &xm);
+            xm[idx] = old - EPS;
+            let lm = loss(&bn, &xm);
+            xm[idx] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            assert!(grads_close(dx[idx], fd, TOL),
+                    "dx[{idx}]: {} vs fd {fd}", dx[idx]);
+        }
+    }
+
+    #[test]
+    fn batchnorm_train_mode_normalizes_and_tracks_stats() {
+        let mut rng = SplitMix64::new(8);
+        let (n, d) = (64usize, 3usize);
+        let x: Vec<f32> =
+            (0..n * d).map(|i| rng.normal() * 3.0 + (i % d) as f32).collect();
+        let mut bn = BatchNormLite::new(d);
+        bn.momentum = 1.0; // running stats = this batch's stats
+        let (y, _) = bn.forward(&x, n, true);
+        // normalized output: per-feature mean ≈ 0, var ≈ 1
+        for f in 0..d {
+            let mean: f32 =
+                (0..n).map(|r| y[r * d + f]).sum::<f32>() / n as f32;
+            let var: f32 = (0..n)
+                .map(|r| (y[r * d + f] - mean).powi(2))
+                .sum::<f32>()
+                / n as f32;
+            assert!(mean.abs() < 1e-3, "mean[{f}] = {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var[{f}] = {var}");
+            assert!((bn.running_mean[f] - (f as f32 + 0.0)).abs() < 2.0);
+        }
+        // eval mode now reproduces the same normalization
+        let y2 = bn.infer(&x, n);
+        for (a, b) in y.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn relu_backward_masks_negative_preactivations() {
+        let x = vec![-1.0, 0.0, 2.0, -0.5, 3.0];
+        let dy = vec![1.0, 1.0, 1.0, 1.0, 2.0];
+        assert_eq!(relu(&x), vec![0.0, 0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(relu_backward(&x, &dy), vec![0.0, 0.0, 1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn softmax_t_rows_is_a_distribution_and_sharpens() {
+        let logits = vec![1.0, 2.0, 4.0, 0.0, 0.0, 0.0];
+        let p1 = softmax_t_rows(&logits, 2, 3, 1.0);
+        let p_cold = softmax_t_rows(&logits, 2, 3, 0.1);
+        for r in 0..2 {
+            let s: f32 = p1[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        // lower temperature concentrates mass on the argmax
+        assert!(p_cold[2] > p1[2]);
+        assert!(p_cold[2] > 0.99);
+        // uniform logits stay uniform at any temperature
+        assert!((p_cold[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_t_backward_matches_finite_differences() {
+        let mut rng = SplitMix64::new(11);
+        let (rows, k) = (3usize, 5usize);
+        for &tau in &[1.0f32, 0.5, 2.0] {
+            let mut logits = prop::vec_f32(&mut rng, rows * k, 2.0);
+            let dp = coef(&mut rng, rows * k);
+            let loss = |l: &[f32]| -> f32 {
+                softmax_t_rows(l, rows, k, tau)
+                    .iter()
+                    .zip(&dp)
+                    .map(|(&p, &c)| p * c)
+                    .sum()
+            };
+            let p = softmax_t_rows(&logits, rows, k, tau);
+            let dl = softmax_t_backward(&p, &dp, rows, k, tau);
+            for idx in 0..logits.len() {
+                let old = logits[idx];
+                logits[idx] = old + EPS;
+                let lp = loss(&logits);
+                logits[idx] = old - EPS;
+                let lm = loss(&logits);
+                logits[idx] = old;
+                let fd = (lp - lm) / (2.0 * EPS);
+                assert!(grads_close(dl[idx], fd, TOL),
+                        "tau {tau} dl[{idx}]: {} vs fd {fd}", dl[idx]);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_identity_and_zero_inits() {
+        let mut rng = SplitMix64::new(1);
+        let id = Linear::new(3, 3, Init::Identity, &mut rng);
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(id.forward(&x, 1), x);
+        let z = Linear::new(3, 2, Init::Zero, &mut rng);
+        assert_eq!(z.forward(&x, 1), vec![0.0, 0.0]);
+        // partial identity projects the leading block
+        let proj = Linear::new(3, 2, Init::Identity, &mut rng);
+        assert_eq!(proj.forward(&x, 1), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn linear_save_load_roundtrip() {
+        let mut rng = SplitMix64::new(2);
+        let l = Linear::new(4, 3, Init::He, &mut rng);
+        let mut s = Store::new();
+        l.save(&mut s, "t");
+        let back = Linear::load(&s, "t").unwrap();
+        assert_eq!(back.w, l.w);
+        assert_eq!(back.b, l.b);
+        assert_eq!(back.in_dim, 4);
+        assert_eq!(back.out_dim, 3);
+        assert!(Linear::load(&s, "missing").is_err());
+    }
+
+    #[test]
+    fn batchnorm_save_load_roundtrip() {
+        let mut bn = BatchNormLite::new(3);
+        bn.running_mean = vec![1.0, 2.0, 3.0];
+        bn.running_var = vec![0.5, 1.5, 2.5];
+        bn.gamma = vec![0.9, 1.1, 1.2];
+        let mut s = Store::new();
+        bn.save(&mut s, "bn");
+        let back = BatchNormLite::load(&s, "bn").unwrap();
+        assert_eq!(back.running_mean, bn.running_mean);
+        assert_eq!(back.running_var, bn.running_var);
+        assert_eq!(back.gamma, bn.gamma);
+        assert_eq!(back.dim, 3);
+    }
+}

@@ -1,0 +1,316 @@
+//! Hand-rolled reverse-mode neural-network substrate (no autograd, no
+//! external ML crates — the offline testbed bakes in nothing beyond std).
+//!
+//! This is the training half of the native UNQ quantizer
+//! (`quant::unq_native`): a small library of layers with explicit
+//! forward/backward pairs, an [`Adam`] optimizer, and the [`Mlp`]
+//! composite both the encoder and the decoder instantiate.  Design
+//! choices, in order of importance:
+//!
+//! * **Explicit caches, no tape.**  Each `forward` returns whatever its
+//!   `backward` needs; the composite threads them by hand.  Control flow
+//!   is plain Rust, so the straight-through estimator of the quantizer
+//!   (hard forward, soft backward) is just two code paths, not a graph
+//!   rewrite.
+//! * **Finite-difference-checked gradients.**  Every layer's backward and
+//!   the full encoder→quantize→decoder stack are pinned against central
+//!   differences in tests ([`grads_close`] is the shared tolerance rule).
+//! * **Deterministic, seeded initialization** via [`crate::util::rng`] —
+//!   the same seed reproduces the same trained model bit-for-bit on one
+//!   platform (training is single-threaded by construction).
+//! * **Skip-connected MLPs.**  [`Mlp`] computes
+//!   `skip(x) + l2(relu(bn(l1(x))))` with the skip initialized to the
+//!   (partial) identity and `l2` to zero, so a fresh network starts as
+//!   the identity map and training learns a *correction* — which is what
+//!   lets the native UNQ start from an exactly-PQ operating point and
+//!   improve from there (DESIGN.md §8).
+
+pub mod layers;
+pub mod opt;
+
+pub use layers::{relu, relu_backward, softmax_t_backward, softmax_t_rows,
+                 BatchNormLite, BnCache, Init, Linear};
+pub use opt::Adam;
+
+use crate::store::Store;
+use crate::util::rng::SplitMix64;
+use crate::Result;
+
+/// Relative-tolerance comparison used by all finite-difference gradient
+/// checks: `|a − n| ≤ tol · max(1, |a|, |n|)`.
+pub fn grads_close(analytic: f32, numeric: f32, tol: f32) -> bool {
+    let scale = 1.0f32.max(analytic.abs()).max(numeric.abs());
+    (analytic - numeric).abs() <= tol * scale
+}
+
+/// Two-layer perceptron with a linear skip path:
+/// `y = skip(x) + l2(relu(bn(l1(x))))`.
+///
+/// `skip` initializes to the (partial) identity and `l2` to zero, so the
+/// fresh network *is* the identity projection; `l1` uses He init so the
+/// correction branch has gradient signal from step one.
+pub struct Mlp {
+    pub in_dim: usize,
+    pub hidden: usize,
+    pub out_dim: usize,
+    pub skip: Linear,
+    pub l1: Linear,
+    pub bn: BatchNormLite,
+    pub l2: Linear,
+}
+
+/// Forward activations [`Mlp::forward`] caches for [`Mlp::backward`].
+pub struct MlpCache {
+    x: Vec<f32>,
+    /// post-bn pre-relu activations (the relu mask source)
+    hbn: Vec<f32>,
+    /// post-relu activations (input of `l2`)
+    hr: Vec<f32>,
+    bn: BnCache,
+}
+
+impl Mlp {
+    pub fn new(in_dim: usize, hidden: usize, out_dim: usize,
+               rng: &mut SplitMix64) -> Mlp {
+        Mlp {
+            in_dim,
+            hidden,
+            out_dim,
+            skip: Linear::new(in_dim, out_dim, Init::Identity, rng),
+            l1: Linear::new(in_dim, hidden, Init::He, rng),
+            bn: BatchNormLite::new(hidden),
+            l2: Linear::new(hidden, out_dim, Init::Zero, rng),
+        }
+    }
+
+    /// Training-path forward over a flat `n × in_dim` batch; returns the
+    /// output and the caches `backward` consumes.  `update_stats` selects
+    /// batch statistics (and refreshes the EMAs) for the norm layer;
+    /// pass `false` for the frozen, finite-difference-checkable mode.
+    pub fn forward(&mut self, x: &[f32], n: usize, update_stats: bool)
+                   -> (Vec<f32>, MlpCache) {
+        let h1 = self.l1.forward(x, n);
+        let (hbn, bnc) = self.bn.forward(&h1, n, update_stats);
+        let hr = relu(&hbn);
+        let mut out = self.l2.forward(&hr, n);
+        let sk = self.skip.forward(x, n);
+        for (o, s) in out.iter_mut().zip(&sk) {
+            *o += s;
+        }
+        (out, MlpCache { x: x.to_vec(), hbn, hr, bn: bnc })
+    }
+
+    /// Inference forward: running statistics, no caches, `&self` (safe
+    /// from the `Send + Sync` quantizer trait methods).
+    pub fn infer(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let h1 = self.l1.forward(x, n);
+        let hbn = self.bn.infer(&h1, n);
+        let hr = relu(&hbn);
+        let mut out = self.l2.forward(&hr, n);
+        let sk = self.skip.forward(x, n);
+        for (o, s) in out.iter_mut().zip(&sk) {
+            *o += s;
+        }
+        out
+    }
+
+    /// Accumulate parameter gradients from upstream `dout`, return `dx`.
+    pub fn backward(&mut self, cache: &MlpCache, dout: &[f32], n: usize)
+                    -> Vec<f32> {
+        let mut dx = self.skip.backward(&cache.x, dout, n);
+        let dhr = self.l2.backward(&cache.hr, dout, n);
+        let dhbn = relu_backward(&cache.hbn, &dhr);
+        let dh1 = self.bn.backward(&cache.bn, &dhbn, n);
+        let dx1 = self.l1.backward(&cache.x, &dh1, n);
+        for (a, b) in dx.iter_mut().zip(&dx1) {
+            *a += b;
+        }
+        dx
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.skip.zero_grad();
+        self.l1.zero_grad();
+        self.bn.zero_grad();
+        self.l2.zero_grad();
+    }
+
+    /// Apply one Adam update to every parameter tensor, consuming slot
+    /// ids from `slot` (callers chain several modules off one counter).
+    pub fn adam_step(&mut self, opt: &mut Adam, slot: &mut usize) {
+        for (p, g) in [(&mut self.skip.w, &self.skip.gw),
+                       (&mut self.skip.b, &self.skip.gb),
+                       (&mut self.l1.w, &self.l1.gw),
+                       (&mut self.l1.b, &self.l1.gb),
+                       (&mut self.bn.gamma, &self.bn.ggamma),
+                       (&mut self.bn.beta, &self.bn.gbeta),
+                       (&mut self.l2.w, &self.l2.gw),
+                       (&mut self.l2.b, &self.l2.gb)] {
+            opt.update(*slot, p, g);
+            *slot += 1;
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.skip.param_count() + self.l1.param_count()
+            + self.bn.param_count() + self.l2.param_count()
+    }
+
+    pub fn save(&self, store: &mut Store, prefix: &str) {
+        self.skip.save(store, &format!("{prefix}skip"));
+        self.l1.save(store, &format!("{prefix}l1"));
+        self.bn.save(store, &format!("{prefix}bn"));
+        self.l2.save(store, &format!("{prefix}l2"));
+    }
+
+    pub fn load(store: &Store, prefix: &str) -> Result<Mlp> {
+        let skip = Linear::load(store, &format!("{prefix}skip"))?;
+        let l1 = Linear::load(store, &format!("{prefix}l1"))?;
+        let bn = BatchNormLite::load(store, &format!("{prefix}bn"))?;
+        let l2 = Linear::load(store, &format!("{prefix}l2"))?;
+        Ok(Mlp {
+            in_dim: skip.in_dim,
+            hidden: l1.out_dim,
+            out_dim: skip.out_dim,
+            skip,
+            l1,
+            bn,
+            l2,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const EPS: f32 = 1e-3;
+    const TOL: f32 = 2e-2;
+
+    #[test]
+    fn fresh_mlp_is_the_identity_projection() {
+        let mut rng = SplitMix64::new(7);
+        let mlp = Mlp::new(4, 8, 4, &mut rng);
+        let x = vec![1.0, -2.0, 3.0, 0.5, 0.0, 1.0, 2.0, -1.0];
+        let y = mlp.infer(&x, 2);
+        assert_eq!(y, x, "zero-init correction branch must vanish");
+    }
+
+    #[test]
+    fn mlp_full_stack_grads_match_finite_differences() {
+        let mut rng = SplitMix64::new(13);
+        let (n, din, hid, dout) = (5usize, 4usize, 6usize, 3usize);
+        let mut mlp = Mlp::new(din, hid, dout, &mut rng);
+        // give every branch signal: non-zero l2, shifted bn stats
+        for v in mlp.l2.w.iter_mut() {
+            *v = rng.normal() * 0.3;
+        }
+        for f in 0..hid {
+            mlp.bn.running_mean[f] = rng.normal() * 0.2;
+            mlp.bn.running_var[f] = 0.5 + rng.next_f32();
+        }
+        let x = prop::vec_f32(&mut rng, n * din, 1.0);
+        let dy = prop::vec_f32(&mut rng, n * dout, 1.0);
+        let loss = |mlp: &Mlp, x: &[f32]| -> f32 {
+            mlp.infer(x, n).iter().zip(&dy).map(|(&y, &c)| y * c).sum()
+        };
+        mlp.zero_grad();
+        let (_, cache) = mlp.forward(&x, n, false);
+        let dx = mlp.backward(&cache, &dy, n);
+
+        // spot-check a slice of every parameter tensor plus the input
+        let mut checks: Vec<(String, f32, f32)> = Vec::new();
+        macro_rules! fd_tensor {
+            ($name:expr, $tensor:expr, $grad:expr) => {
+                for idx in 0..$tensor.len() {
+                    let old = $tensor[idx];
+                    $tensor[idx] = old + EPS;
+                    let lp = loss(&mlp, &x);
+                    $tensor[idx] = old - EPS;
+                    let lm = loss(&mlp, &x);
+                    $tensor[idx] = old;
+                    let fd = (lp - lm) / (2.0 * EPS);
+                    checks.push((format!("{}[{idx}]", $name), $grad[idx],
+                                 fd));
+                }
+            };
+        }
+        let gw_skip = mlp.skip.gw.clone();
+        let gw1 = mlp.l1.gw.clone();
+        let gb1 = mlp.l1.gb.clone();
+        let ggamma = mlp.bn.ggamma.clone();
+        let gbeta = mlp.bn.gbeta.clone();
+        let gw2 = mlp.l2.gw.clone();
+        let gb2 = mlp.l2.gb.clone();
+        fd_tensor!("skip.w", mlp.skip.w, gw_skip);
+        fd_tensor!("l1.w", mlp.l1.w, gw1);
+        fd_tensor!("l1.b", mlp.l1.b, gb1);
+        fd_tensor!("bn.gamma", mlp.bn.gamma, ggamma);
+        fd_tensor!("bn.beta", mlp.bn.beta, gbeta);
+        fd_tensor!("l2.w", mlp.l2.w, gw2);
+        fd_tensor!("l2.b", mlp.l2.b, gb2);
+        let mut xm = x.clone();
+        for idx in 0..xm.len() {
+            let old = xm[idx];
+            xm[idx] = old + EPS;
+            let lp = loss(&mlp, &xm);
+            xm[idx] = old - EPS;
+            let lm = loss(&mlp, &xm);
+            xm[idx] = old;
+            let fd = (lp - lm) / (2.0 * EPS);
+            checks.push((format!("x[{idx}]"), dx[idx], fd));
+        }
+        for (label, analytic, fd) in checks {
+            assert!(grads_close(analytic, fd, TOL),
+                    "{label}: analytic {analytic} vs fd {fd}");
+        }
+    }
+
+    #[test]
+    fn mlp_save_load_roundtrip_preserves_inference() {
+        let mut rng = SplitMix64::new(21);
+        let mut mlp = Mlp::new(5, 7, 5, &mut rng);
+        for v in mlp.l2.w.iter_mut() {
+            *v = rng.normal() * 0.2;
+        }
+        let mut s = Store::new();
+        mlp.save(&mut s, "enc_");
+        let back = Mlp::load(&s, "enc_").unwrap();
+        assert_eq!(back.in_dim, 5);
+        assert_eq!(back.hidden, 7);
+        assert_eq!(back.out_dim, 5);
+        let x = prop::vec_f32(&mut rng, 10, 1.0);
+        assert_eq!(mlp.infer(&x, 2), back.infer(&x, 2));
+        assert_eq!(mlp.param_count(), back.param_count());
+    }
+
+    #[test]
+    fn adam_trains_mlp_to_fit_a_linear_map() {
+        // sanity e2e: fit y = 2x on scalars through the full stack
+        let mut rng = SplitMix64::new(33);
+        let mut mlp = Mlp::new(1, 4, 1, &mut rng);
+        let mut opt = Adam::new(0.01);
+        let n = 16usize;
+        for _ in 0..400 {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let target: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            let (y, cache) = mlp.forward(&x, n, true);
+            let dy: Vec<f32> = y
+                .iter()
+                .zip(&target)
+                .map(|(&a, &t)| 2.0 * (a - t) / n as f32)
+                .collect();
+            mlp.zero_grad();
+            mlp.backward(&cache, &dy, n);
+            opt.begin_step();
+            let mut slot = 0;
+            mlp.adam_step(&mut opt, &mut slot);
+            assert_eq!(slot, 8);
+        }
+        let x = vec![0.5f32, -1.0];
+        let y = mlp.infer(&x, 2);
+        assert!((y[0] - 1.0).abs() < 0.2, "y(0.5) = {}", y[0]);
+        assert!((y[1] + 2.0).abs() < 0.4, "y(-1) = {}", y[1]);
+    }
+}

@@ -18,6 +18,7 @@
 //! | [`lattice::CatalystLattice`] | "Catalyst+Lattice" | whiten→sphere→lattice | direct dot |
 //! | [`lattice::CatalystOpq`] | "Catalyst+OPQ" | whiten→sphere→OPQ | ADC in mapped space |
 //! | [`unq::UnqQuantizer`] | "UNQ" | AOT encoder (PJRT) | learned-space ADC + decoder rerank |
+//! | [`unq_native::NativeUnq`] | "UNQ-native" | trained in-process (`nn`) | learned-space ADC (`d2`) + decoder rerank (`d1`) |
 
 pub mod additive;
 pub mod lattice;
@@ -25,6 +26,7 @@ pub mod lsq;
 pub mod opq;
 pub mod pq;
 pub mod unq;
+pub mod unq_native;
 
 use crate::data::Dataset;
 

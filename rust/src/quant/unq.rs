@@ -10,8 +10,21 @@
 //!
 //! The struct holds only a [`RuntimeHandle`], so it is `Send + Sync` and
 //! plugs into the same index/search machinery as the shallow baselines.
+//!
+//! **Failure contract.**  The `Quantizer` trait methods cannot return
+//! errors, so a runtime failure mid-scan is unrecoverable; construct
+//! through [`UnqQuantizer::try_new`], which probes all three graphs and
+//! surfaces a broken runtime as a clean `Err` at construction/first-use
+//! instead.  After a successful probe the remaining failure mode is the
+//! runtime thread dying mid-run, which encode/lut report as a
+//! descriptive panic; both reconstruct paths degrade to `false` (the
+//! engine then skips the rerank, same as for decoders that don't exist).
+//! The fully native training path lives in [`super::unq_native`].
+
+use anyhow::Context;
 
 use crate::runtime::RuntimeHandle;
+use crate::Result;
 
 use super::{Lut, Quantizer};
 
@@ -20,8 +33,28 @@ pub struct UnqQuantizer {
 }
 
 impl UnqQuantizer {
+    /// Wrap a handle without probing it (callers that already ran their
+    /// own health check, e.g. tests against a known-live runtime).
     pub fn new(rt: RuntimeHandle) -> UnqQuantizer {
         UnqQuantizer { rt }
+    }
+
+    /// Wrap a handle and probe the encode/lut/decode graphs with one
+    /// dummy row, so a broken runtime (missing PJRT, bad artifact,
+    /// dead thread) is a clean error here — at construction — rather
+    /// than a panic in the middle of a scan.
+    pub fn try_new(rt: RuntimeHandle) -> Result<UnqQuantizer> {
+        let q = UnqQuantizer { rt };
+        let probe = vec![0.0f32; q.dim()];
+        q.rt
+            .encode(&probe, 1)
+            .context("UNQ runtime probe: encode graph")?;
+        q.rt.lut(&probe, 1).context("UNQ runtime probe: lut graph")?;
+        let code = vec![0u8; q.code_bytes()];
+        q.rt
+            .decode(&code, 1)
+            .context("UNQ runtime probe: decode graph")?;
+        Ok(q)
     }
 
     pub fn m(&self) -> usize {
@@ -30,6 +63,15 @@ impl UnqQuantizer {
 
     pub fn k(&self) -> usize {
         self.rt.manifest.k
+    }
+
+    /// The one place the infallible trait methods give up: a runtime
+    /// that passed its construction probe stopped serving mid-run.
+    fn runtime_died(&self, what: &str, e: anyhow::Error) -> ! {
+        panic!(
+            "UNQ runtime {what} failed after a successful construction \
+             probe (runtime thread died?): {e:#}"
+        );
     }
 }
 
@@ -50,17 +92,25 @@ impl Quantizer for UnqQuantizer {
     }
 
     fn encode_one(&self, x: &[f32], out: &mut [u8]) {
-        let codes = self.rt.encode(x, 1).expect("runtime encode");
+        let codes = self
+            .rt
+            .encode(x, 1)
+            .unwrap_or_else(|e| self.runtime_died("encode", e));
         out.copy_from_slice(&codes);
     }
 
     fn encode_batch(&self, data: &[f32]) -> Vec<u8> {
         let rows = data.len() / self.dim();
-        self.rt.encode(data, rows).expect("runtime encode")
+        self.rt
+            .encode(data, rows)
+            .unwrap_or_else(|e| self.runtime_died("encode", e))
     }
 
     fn lut(&self, q: &[f32]) -> Lut {
-        let dots = self.rt.lut(q, 1).expect("runtime lut");
+        let dots = self
+            .rt
+            .lut(q, 1)
+            .unwrap_or_else(|e| self.runtime_died("lut", e));
         let (m, k) = (self.m(), self.k());
         // d2(q, i) = −Σ_m ⟨net(q)_m, c_m i_m⟩ (+ rank-invariant const)
         let tables: Vec<f32> = dots.iter().map(|&v| -v).collect();
@@ -74,7 +124,10 @@ impl Quantizer for UnqQuantizer {
         for q in queries {
             flat.extend_from_slice(q);
         }
-        let dots = self.rt.lut(&flat, queries.len()).expect("runtime lut");
+        let dots = self
+            .rt
+            .lut(&flat, queries.len())
+            .unwrap_or_else(|e| self.runtime_died("lut", e));
         dots.chunks_exact(m * k)
             .map(|chunk| Lut::Tables {
                 m,
@@ -87,22 +140,22 @@ impl Quantizer for UnqQuantizer {
 
     fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
         match self.rt.decode(code, 1) {
-            Ok(rec) => {
+            Ok(rec) if rec.len() == out.len() => {
                 out.copy_from_slice(&rec);
                 true
             }
-            Err(_) => false,
+            _ => false,
         }
     }
 
     fn reconstruct_batch(&self, codes: &[u8], out: &mut [f32]) -> bool {
         let rows = codes.len() / self.code_bytes();
         match self.rt.decode(codes, rows) {
-            Ok(rec) => {
+            Ok(rec) if rec.len() == out.len() => {
                 out.copy_from_slice(&rec);
                 true
             }
-            Err(_) => false,
+            _ => false,
         }
     }
 }

@@ -1,0 +1,851 @@
+//! Native UNQ: the paper's DNN quantizer trained **in pure Rust** — no
+//! PJRT, no AOT artifacts, no Python (the AOT-backed [`super::unq`] path
+//! stays as the accelerator seam; rust/DESIGN.md §8 discusses the seam).
+//!
+//! Architecture (paper §3.1–3.2, eq. 4–8), built on [`crate::nn`]:
+//!
+//! * **Encoder** `net(x)`: a skip-connected MLP `R^D → R^{M·ds}` whose
+//!   output splits into M per-codebook chunks `net(x)_m ∈ R^{ds}`.
+//! * **Codebooks** `C ∈ R^{M × K × ds}`, learnable, initialized by
+//!   k-means in the *initial* encoder space.  Because the fresh encoder
+//!   is the identity projection (zero-init correction branch), the
+//!   untrained model is **exactly PQ** — same codes, same ADC scores,
+//!   same reconstructions (pinned by a test) — for training sets up to
+//!   [`KMEANS_INIT_CAP`] rows; above the cap the init k-means runs on a
+//!   seeded subsample (PQ-*quality*, not PQ-identical).  Either way
+//!   training starts from a strong, known-good operating point.
+//! * **Assignment** (eq. 4): hard `i_m = argmin_k ‖net(x)_m − c_mk‖²`,
+//!   relaxed during training by Gumbel-softmax over the negated squared
+//!   distances with temperature τ, straight-through style: the forward
+//!   pass uses the hard one-hot selection, the backward pass uses the
+//!   soft probabilities (the `hard` flag of [`NativeUnq::step`]; soft
+//!   mode is fully differentiable and finite-difference checked).
+//! * **Decoder**: a mirror-image skip-connected MLP `R^{M·ds} → R^D`
+//!   over the concatenated selected codewords, giving `d1` (eq. 7) for
+//!   the two-stage rerank.
+//! * **Objective** (unsupervised, eq. 5–6 flavor): reconstruction MSE
+//!   `‖dec(ĉ(x)) − x‖²` plus the compressed-domain *consistency* term
+//!   `λ · ‖net(x)_m − c_m i_m‖²` that keeps the learned-space ADC scores
+//!   (`d2`, eq. 8) faithful to the encoder geometry — without it the
+//!   scan-stage distances and the decoder could drift apart.
+//!
+//! The scan contract: [`NativeUnq::lut`] emits per-position tables
+//! `‖c_mk‖² − 2⟨net(q)_m, c_mk⟩` with bias `‖net(q)‖²`, so the scanned
+//! score **equals** `d2(q, i) = ‖net(q) − ĉ(i)‖²` exactly — the negated
+//! dot products of the AOT convention, completed with the rank-relevant
+//! codeword-norm term so lower = closer holds in the repo's uniform
+//! sense.  This plugs into every read path (flat, IVF, streaming,
+//! packed integer kernels) through the ordinary [`Quantizer`] trait.
+
+use crate::config::UnqNativeConfig;
+use crate::linalg::dot;
+use crate::nn::{softmax_t_backward, softmax_t_rows, Adam, Mlp};
+use crate::store::Store;
+use crate::util::rng::SplitMix64;
+use crate::Result;
+
+use super::{Lut, Quantizer};
+
+/// Per-epoch training record (the loss curve `train-smoke` uploads).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub tau: f32,
+    /// mean reconstruction MSE term over the epoch
+    pub rec_loss: f64,
+    /// mean (unweighted) consistency term over the epoch
+    pub cons_loss: f64,
+}
+
+/// The trained native UNQ model (encoder + codebooks + decoder).
+pub struct NativeUnq {
+    pub dim: usize,
+    pub m: usize,
+    pub k: usize,
+    /// per-codebook code-space sub-dimension (`dc = m · ds`)
+    pub ds: usize,
+    pub enc: Mlp,
+    pub dec: Mlp,
+    /// `m × k × ds` flat codewords
+    pub codebooks: Vec<f32>,
+    /// codebook gradient accumulator (same layout)
+    pub gcode: Vec<f32>,
+    /// loss curve of the `fit` that produced this model (empty when
+    /// loaded from a store archive)
+    pub history: Vec<EpochStats>,
+}
+
+/// Rows used for the k-means codebook initialization (full data below
+/// this, a seeded subsample above — keeps init O(cap · K · ds) while
+/// staying deterministic).
+pub const KMEANS_INIT_CAP: usize = 20_000;
+
+impl NativeUnq {
+    /// Build the untrained model: seeded-init networks (identity skip,
+    /// zero correction) + codebooks from k-means in the initial encoder
+    /// space.  With `ds = dim/m` and up to [`KMEANS_INIT_CAP`] training
+    /// rows this starting point is exactly PQ (subsampled k-means
+    /// above the cap: PQ-quality, not bit-identical to `Pq::train`).
+    pub fn init(data: &[f32], dim: usize, m: usize, k: usize,
+                cfg: &UnqNativeConfig) -> NativeUnq {
+        assert!(dim > 0 && m > 0, "degenerate shape");
+        assert!((1..=256).contains(&k), "codes are single bytes");
+        let ds = if cfg.ds > 0 {
+            cfg.ds
+        } else {
+            assert!(dim % m == 0,
+                    "native UNQ default needs dim % m == 0 ({dim} % {m}); \
+                     set unq_native.ds explicitly otherwise");
+            dim / m
+        };
+        let dc = m * ds;
+        let mut rng = SplitMix64::from_key(&[cfg.seed, 0x4e51_494e]);
+        let enc = Mlp::new(dim, cfg.hidden, dc, &mut rng);
+        let dec = Mlp::new(dc, cfg.hidden, dim, &mut rng);
+        let mut model = NativeUnq {
+            dim,
+            m,
+            k,
+            ds,
+            enc,
+            dec,
+            codebooks: vec![0.0; m * k * ds],
+            gcode: vec![0.0; m * k * ds],
+            history: Vec::new(),
+        };
+
+        // k-means per codebook over the initial encoder outputs
+        let n = data.len() / dim;
+        let h0: Vec<f32> = if n > KMEANS_INIT_CAP {
+            let idx = rng.sample_indices(n, KMEANS_INIT_CAP);
+            let mut sub = Vec::with_capacity(idx.len() * dim);
+            for &i in &idx {
+                sub.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+            }
+            model.enc.infer(&sub, idx.len())
+        } else {
+            model.enc.infer(data, n)
+        };
+        // delegate the per-book subvector k-means to Pq::train over the
+        // encoder outputs: same seed schedule, same (m, k, ds) centroid
+        // layout — the "untrained model == PQ" invariant holds by
+        // construction instead of by two hand-synced loops
+        let pq = super::pq::Pq::train(&h0, dc, m, k, cfg.seed,
+                                      cfg.kmeans_iters);
+        model.codebooks.copy_from_slice(&pq.centroids);
+        model
+    }
+
+    /// Train from scratch: [`NativeUnq::init`] + [`NativeUnq::fit`].
+    pub fn train(data: &[f32], dim: usize, m: usize, k: usize,
+                 cfg: &UnqNativeConfig) -> NativeUnq {
+        let mut model = Self::init(data, dim, m, k, cfg);
+        model.fit(data, cfg);
+        model
+    }
+
+    /// Run `cfg.epochs` of minibatch Adam on the unsupervised objective
+    /// over `data` (flat rows of `self.dim`).  Fully deterministic given
+    /// `cfg.seed`: shuffling and Gumbel noise come from one seeded
+    /// stream, and execution is single-threaded.
+    pub fn fit(&mut self, data: &[f32], cfg: &UnqNativeConfig) {
+        let dim = self.dim;
+        let n = data.len() / dim;
+        if cfg.epochs == 0 || n == 0 {
+            return;
+        }
+        let (m, k) = (self.m, self.k);
+        let mut rng = SplitMix64::from_key(&[cfg.seed, 0x7472_4149]);
+        let mut opt = Adam::new(cfg.lr);
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut xb: Vec<f32> = Vec::new();
+        for epoch in 0..cfg.epochs {
+            let tau = if cfg.epochs <= 1 {
+                cfg.tau0
+            } else {
+                let f = epoch as f32 / (cfg.epochs - 1) as f32;
+                cfg.tau0 + (cfg.tau1 - cfg.tau0) * f
+            };
+            rng.shuffle(&mut perm);
+            let mut sum_rec = 0.0f64;
+            let mut sum_cons = 0.0f64;
+            for chunk in perm.chunks(cfg.batch.max(1)) {
+                let nb = chunk.len();
+                xb.clear();
+                for &i in chunk {
+                    xb.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+                }
+                let noise: Option<Vec<f32>> = if cfg.gumbel > 0.0 {
+                    Some((0..nb * m * k)
+                        .map(|_| {
+                            let u = rng.next_f32().max(1e-7);
+                            -(-(u.ln())).ln() * cfg.gumbel
+                        })
+                        .collect())
+                } else {
+                    None
+                };
+                self.zero_grad();
+                let (lr_, lc_) = self.step(&xb, nb, tau, cfg.lambda_cons,
+                                           true, true, noise.as_deref());
+                opt.begin_step();
+                self.adam_step(&mut opt);
+                sum_rec += lr_ * nb as f64;
+                sum_cons += lc_ * nb as f64;
+            }
+            let stats = EpochStats {
+                epoch,
+                tau,
+                rec_loss: sum_rec / n as f64,
+                cons_loss: sum_cons / n as f64,
+            };
+            eprintln!(
+                "[unq-native] epoch {:>3}/{} tau {:.3} rec {:.5} cons {:.5}",
+                epoch + 1, cfg.epochs, tau, stats.rec_loss, stats.cons_loss
+            );
+            self.history.push(stats);
+        }
+    }
+
+    /// One forward/backward pass over a flat `nb × dim` minibatch,
+    /// accumulating parameter gradients; returns the (reconstruction,
+    /// consistency) loss terms — the optimized scalar is
+    /// `rec + λ · cons`.
+    ///
+    /// * `hard = true` — training mode: hard one-hot selection forward,
+    ///   soft (Gumbel-softmax) gradients backward (straight-through).
+    /// * `hard = false` — the fully differentiable relaxation (decoder
+    ///   sees `Σ_k p_k c_k`): exact gradients, used by the
+    ///   finite-difference checks.
+    /// * `update_stats = false` freezes the norm-layer statistics so the
+    ///   loss is a deterministic pure function of the parameters.
+    pub fn step(&mut self, xb: &[f32], nb: usize, tau: f32, lambda: f32,
+                hard: bool, update_stats: bool, noise: Option<&[f32]>)
+                -> (f64, f64) {
+        let (dim, m, k, ds) = (self.dim, self.m, self.k, self.ds);
+        let dc = m * ds;
+        debug_assert_eq!(xb.len(), nb * dim);
+
+        // ---- forward ----------------------------------------------------
+        let (h, enc_cache) = self.enc.forward(xb, nb, update_stats);
+        let mut logits = vec![0.0f32; nb * m * k];
+        for b in 0..nb {
+            for j in 0..m {
+                let hv = &h[b * dc + j * ds..b * dc + (j + 1) * ds];
+                let row = &mut logits[(b * m + j) * k..(b * m + j + 1) * k];
+                for (c, l) in row.iter_mut().enumerate() {
+                    let cw = &self.codebooks[(j * k + c) * ds
+                                             ..(j * k + c + 1) * ds];
+                    *l = -crate::linalg::sq_l2(hv, cw);
+                }
+            }
+        }
+        if let Some(ns) = noise {
+            debug_assert_eq!(ns.len(), logits.len());
+            for (l, g) in logits.iter_mut().zip(ns) {
+                *l += g;
+            }
+        }
+        let p = softmax_t_rows(&logits, nb * m, k, tau);
+        // decoder input: hard one-hot selection or the soft mixture
+        let mut bvec = vec![0.0f32; nb * dc];
+        for b in 0..nb {
+            for j in 0..m {
+                let row = &p[(b * m + j) * k..(b * m + j + 1) * k];
+                let out = &mut bvec[b * dc + j * ds..b * dc + (j + 1) * ds];
+                if hard {
+                    let mut best = 0usize;
+                    for (c, &pv) in row.iter().enumerate() {
+                        if pv > row[best] {
+                            best = c;
+                        }
+                    }
+                    out.copy_from_slice(
+                        &self.codebooks[(j * k + best) * ds
+                                        ..(j * k + best + 1) * ds]);
+                } else {
+                    for (c, &pv) in row.iter().enumerate() {
+                        if pv > 1e-12 {
+                            let cw = &self.codebooks[(j * k + c) * ds
+                                                     ..(j * k + c + 1) * ds];
+                            for (o, &w) in out.iter_mut().zip(cw) {
+                                *o += pv * w;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let (recon, dec_cache) = self.dec.forward(&bvec, nb, update_stats);
+
+        // ---- losses -----------------------------------------------------
+        let inv_rec = 1.0 / (nb * dim) as f32;
+        let inv_cons = 1.0 / (nb * dc) as f32;
+        let mut l_rec = 0.0f64;
+        for (r, x) in recon.iter().zip(xb) {
+            let d = (r - x) as f64;
+            l_rec += d * d;
+        }
+        l_rec *= inv_rec as f64;
+        let mut l_cons = 0.0f64;
+        for (a, b) in h.iter().zip(&bvec) {
+            let d = (a - b) as f64;
+            l_cons += d * d;
+        }
+        l_cons *= inv_cons as f64;
+
+        // ---- backward ---------------------------------------------------
+        let drecon: Vec<f32> = recon
+            .iter()
+            .zip(xb)
+            .map(|(&r, &x)| 2.0 * (r - x) * inv_rec)
+            .collect();
+        let mut dbvec = self.dec.backward(&dec_cache, &drecon, nb);
+        // consistency: ∂/∂h directly, ∂/∂bvec through the shared path
+        let mut dh = vec![0.0f32; nb * dc];
+        for i in 0..nb * dc {
+            let d = 2.0 * lambda * (h[i] - bvec[i]) * inv_cons;
+            dh[i] += d;
+            dbvec[i] -= d;
+        }
+        // soft-assignment backward (straight-through when `hard`):
+        // bvec_m = Σ_k p_k c_k ⇒ dC += p · dbvec, dp_k = ⟨dbvec, c_k⟩
+        let mut dp = vec![0.0f32; nb * m * k];
+        {
+            let code = &self.codebooks;
+            let gcode = &mut self.gcode;
+            for b in 0..nb {
+                for j in 0..m {
+                    let dbv = &dbvec[b * dc + j * ds..b * dc + (j + 1) * ds];
+                    for c in 0..k {
+                        let pv = p[(b * m + j) * k + c];
+                        let cw = &code[(j * k + c) * ds
+                                       ..(j * k + c + 1) * ds];
+                        dp[(b * m + j) * k + c] = dot(dbv, cw);
+                        if pv > 1e-12 {
+                            let gw = &mut gcode[(j * k + c) * ds
+                                                ..(j * k + c + 1) * ds];
+                            for (g, &d) in gw.iter_mut().zip(dbv) {
+                                *g += pv * d;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let dlogits = softmax_t_backward(&p, &dp, nb * m, k, tau);
+        // logits = −‖h_m − c_mk‖² ⇒ ∂/∂h = −2(h − c), ∂/∂c = 2(h − c)
+        {
+            let code = &self.codebooks;
+            let gcode = &mut self.gcode;
+            for b in 0..nb {
+                for j in 0..m {
+                    let hv_lo = b * dc + j * ds;
+                    for c in 0..k {
+                        let dl = dlogits[(b * m + j) * k + c];
+                        if dl == 0.0 {
+                            continue;
+                        }
+                        let cw_lo = (j * k + c) * ds;
+                        for t in 0..ds {
+                            let diff = h[hv_lo + t] - code[cw_lo + t];
+                            dh[hv_lo + t] -= 2.0 * dl * diff;
+                            gcode[cw_lo + t] += 2.0 * dl * diff;
+                        }
+                    }
+                }
+            }
+        }
+        let _dx = self.enc.backward(&enc_cache, &dh, nb);
+        (l_rec, l_cons)
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.enc.zero_grad();
+        self.dec.zero_grad();
+        self.gcode.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// One Adam update over every parameter tensor (call after
+    /// `opt.begin_step()`).
+    pub fn adam_step(&mut self, opt: &mut Adam) {
+        let mut slot = 0usize;
+        self.enc.adam_step(opt, &mut slot);
+        self.dec.adam_step(opt, &mut slot);
+        opt.update(slot, &mut self.codebooks, &self.gcode);
+    }
+
+    /// The encoder map `net(x)` for one vector (eval mode).
+    pub fn net(&self, x: &[f32]) -> Vec<f32> {
+        self.enc.infer(x, 1)
+    }
+
+    #[inline]
+    fn codeword(&self, j: usize, c: usize) -> &[f32] {
+        let lo = (j * self.k + c) * self.ds;
+        &self.codebooks[lo..lo + self.ds]
+    }
+
+    /// Hard assignment of one encoded vector: per-book nearest codeword
+    /// in code space (ties → smallest id, matching the engine's
+    /// deterministic tie rule).
+    fn assign(&self, h: &[f32], out: &mut [u8]) {
+        let ds = self.ds;
+        for j in 0..self.m {
+            let hv = &h[j * ds..(j + 1) * ds];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..self.k {
+                let d = crate::linalg::sq_l2(hv, self.codeword(j, c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            out[j] = best as u8;
+        }
+    }
+
+    /// Concatenated selected codewords of one code (the decoder input).
+    fn gather_codewords(&self, code: &[u8], out: &mut [f32]) {
+        let ds = self.ds;
+        for (j, &c) in code.iter().enumerate() {
+            out[j * ds..(j + 1) * ds]
+                .copy_from_slice(self.codeword(j, c as usize));
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.enc.param_count() + self.dec.param_count()
+            + self.codebooks.len()
+    }
+
+    pub fn save(&self, store: &mut Store, prefix: &str) {
+        self.enc.save(store, &format!("{prefix}nenc_"));
+        self.dec.save(store, &format!("{prefix}ndec_"));
+        store.put_f32(&format!("{prefix}ncodebooks"),
+                      &[self.m, self.k, self.ds], self.codebooks.clone());
+        store.put_meta(&format!("{prefix}unq_native"),
+                       &format!("{},{},{},{}", self.dim, self.m, self.k,
+                                self.ds));
+    }
+
+    pub fn load(store: &Store, prefix: &str) -> Result<NativeUnq> {
+        let meta = store
+            .get_meta(&format!("{prefix}unq_native"))
+            .ok_or_else(|| anyhow::anyhow!("missing unq_native meta"))?;
+        let parts: Vec<usize> =
+            meta.split(',').map(|p| p.parse().unwrap_or(0)).collect();
+        anyhow::ensure!(parts.len() == 4 && parts.iter().all(|&v| v > 0),
+                        "bad unq_native meta {meta:?}");
+        let (dim, m, k, ds) = (parts[0], parts[1], parts[2], parts[3]);
+        let (_, cb) = store
+            .get_f32(&format!("{prefix}ncodebooks"))
+            .ok_or_else(|| anyhow::anyhow!("missing native codebooks"))?;
+        anyhow::ensure!(cb.len() == m * k * ds, "codebook shape mismatch");
+        Ok(NativeUnq {
+            dim,
+            m,
+            k,
+            ds,
+            enc: Mlp::load(store, &format!("{prefix}nenc_"))?,
+            dec: Mlp::load(store, &format!("{prefix}ndec_"))?,
+            codebooks: cb.to_vec(),
+            gcode: vec![0.0; m * k * ds],
+            history: Vec::new(),
+        })
+    }
+}
+
+impl Quantizer for NativeUnq {
+    fn name(&self) -> String {
+        "UNQ-native".into()
+    }
+
+    fn code_bytes(&self) -> usize {
+        self.m
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn encode_one(&self, x: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(x.len(), self.dim);
+        let h = self.enc.infer(x, 1);
+        self.assign(&h, out);
+    }
+
+    fn encode_batch(&self, data: &[f32]) -> Vec<u8> {
+        // chunked: one `infer` over the whole base set would materialize
+        // every intermediate activation at dataset scale (gigabytes at
+        // n = 1M); fixed-size chunks bound the transient footprint with
+        // identical output (inference is row-independent)
+        const CHUNK: usize = 4096;
+        let n = data.len() / self.dim;
+        let dc = self.m * self.ds;
+        let mut out = vec![0u8; n * self.m];
+        for lo in (0..n).step_by(CHUNK) {
+            let hi = (lo + CHUNK).min(n);
+            let h = self.enc.infer(&data[lo * self.dim..hi * self.dim],
+                                   hi - lo);
+            for i in lo..hi {
+                self.assign(&h[(i - lo) * dc..(i - lo + 1) * dc],
+                            &mut out[i * self.m..(i + 1) * self.m]);
+            }
+        }
+        out
+    }
+
+    /// `d2` as position-major ADC tables: entry `(j, c)` is
+    /// `‖c_jc‖² − 2⟨net(q)_j, c_jc⟩`, bias `‖net(q)‖²`, so the scanned
+    /// score equals `‖net(q) − ĉ(code)‖²` exactly (eq. 8; the negated
+    /// dots of the AOT convention plus the codeword-norm completion).
+    fn lut(&self, q: &[f32]) -> Lut {
+        let h = self.enc.infer(q, 1);
+        self.lut_from_net(&h)
+    }
+
+    fn lut_batch(&self, queries: &[&[f32]]) -> Vec<Lut> {
+        let dim = self.dim;
+        let dc = self.m * self.ds;
+        let mut flat = Vec::with_capacity(queries.len() * dim);
+        for q in queries {
+            flat.extend_from_slice(q);
+        }
+        let h = self.enc.infer(&flat, queries.len());
+        (0..queries.len())
+            .map(|i| self.lut_from_net(&h[i * dc..(i + 1) * dc]))
+            .collect()
+    }
+
+    fn reconstruct(&self, code: &[u8], out: &mut [f32]) -> bool {
+        let dc = self.m * self.ds;
+        let mut bvec = vec![0.0f32; dc];
+        self.gather_codewords(code, &mut bvec);
+        let rec = self.dec.infer(&bvec, 1);
+        if rec.len() != out.len() {
+            return false;
+        }
+        out.copy_from_slice(&rec);
+        true
+    }
+
+    fn reconstruct_batch(&self, codes: &[u8], out: &mut [f32]) -> bool {
+        let rows = codes.len() / self.m;
+        let dc = self.m * self.ds;
+        if out.len() != rows * self.dim {
+            return false;
+        }
+        let mut bvec = vec![0.0f32; rows * dc];
+        for i in 0..rows {
+            self.gather_codewords(&codes[i * self.m..(i + 1) * self.m],
+                                  &mut bvec[i * dc..(i + 1) * dc]);
+        }
+        let rec = self.dec.infer(&bvec, rows);
+        out.copy_from_slice(&rec);
+        true
+    }
+}
+
+impl NativeUnq {
+    /// Build the `d2` LUT from an already-encoded query `net(q)`.
+    fn lut_from_net(&self, h: &[f32]) -> Lut {
+        let (m, k, ds) = (self.m, self.k, self.ds);
+        let mut tables = vec![0.0f32; m * k];
+        for j in 0..m {
+            let hv = &h[j * ds..(j + 1) * ds];
+            for c in 0..k {
+                let cw = self.codeword(j, c);
+                tables[j * k + c] = dot(cw, cw) - 2.0 * dot(hv, cw);
+            }
+        }
+        Lut::Tables { m, k, tables, bias: dot(h, h) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SearchConfig;
+    use crate::data::Dataset;
+    use crate::index::{CompressedIndex, SearchEngine};
+    use crate::linalg::sq_l2;
+    use crate::nn::grads_close;
+    use crate::quant::pq::Pq;
+    use crate::quant::reconstruction_mse;
+    use crate::util::{prop, TempDir};
+
+    /// Correlated random rows (dim 8): a planted 2-cluster mixture so
+    /// quantizers have structure to learn.
+    fn toy(n: usize, seed: u64) -> Dataset {
+        let dim = 8;
+        let mut rng = SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(n * dim);
+        for i in 0..n {
+            let center = if i % 2 == 0 { 1.5 } else { -1.5 };
+            for j in 0..dim {
+                let coupled = if j % 2 == 0 { center } else { -center };
+                data.push(coupled + rng.normal() * 0.7);
+            }
+        }
+        Dataset::new(dim, data)
+    }
+
+    fn tiny_cfg() -> UnqNativeConfig {
+        UnqNativeConfig {
+            hidden: 6,
+            epochs: 2,
+            batch: 32,
+            kmeans_iters: 5,
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn untrained_model_is_exactly_pq() {
+        // identity skip + zero correction + k-means init in the (then
+        // identity) encoder space ⇒ codes, ADC scores and
+        // reconstructions all coincide with PQ trained the same way
+        let d = toy(300, 1);
+        let cfg = tiny_cfg();
+        let model = NativeUnq::init(&d.data, d.dim, 2, 4, &cfg);
+        let pq = Pq::train(&d.data, d.dim, 2, 4, cfg.seed, cfg.kmeans_iters);
+        let codes_n = model.encode_batch(&d.data);
+        let codes_p = pq.encode_batch(&d.data);
+        assert_eq!(codes_n, codes_p, "init codes must equal PQ");
+        let q = d.row(7);
+        let lut_n = model.lut(q);
+        let lut_p = pq.lut(q);
+        for code in codes_n.chunks(2).take(40) {
+            let sn = lut_n.score(code);
+            let sp = lut_p.score(code);
+            assert!((sn - sp).abs() <= 1e-3 * sp.abs().max(1.0),
+                    "ADC scores diverge at init: {sn} vs {sp}");
+        }
+        let mut rn = vec![0.0f32; d.dim];
+        let mut rp = vec![0.0f32; d.dim];
+        assert!(model.reconstruct(&codes_n[..2], &mut rn));
+        pq.reconstruct(&codes_p[..2], &mut rp);
+        for (a, b) in rn.iter().zip(&rp) {
+            assert!((a - b).abs() < 1e-5, "init reconstructions diverge");
+        }
+    }
+
+    #[test]
+    fn full_stack_grads_match_finite_differences() {
+        // soft (differentiable) mode, frozen norm stats, no noise: the
+        // analytic gradient of rec + λ·cons through encoder → softmax
+        // assignment → codebooks → decoder must match central differences
+        let d = toy(64, 2);
+        let cfg = tiny_cfg();
+        let mut model = NativeUnq::init(&d.data, d.dim, 2, 4, &cfg);
+        // move off the all-zero correction branch so every tensor has
+        // signal, and perturb bn stats away from the trivial point
+        let mut rng = SplitMix64::new(17);
+        for v in model.enc.l2.w.iter_mut() {
+            *v = rng.normal() * 0.1;
+        }
+        for v in model.dec.l2.w.iter_mut() {
+            *v = rng.normal() * 0.1;
+        }
+        for f in 0..model.enc.bn.dim {
+            model.enc.bn.running_mean[f] = rng.normal() * 0.2;
+            model.enc.bn.running_var[f] = 0.5 + rng.next_f32();
+        }
+        let nb = 6usize;
+        let xb = d.data[..nb * d.dim].to_vec();
+        let (tau, lambda) = (0.7f32, 0.3f32);
+        let loss = |model: &mut NativeUnq| -> f64 {
+            let (r, c) = model.step(&xb, nb, tau, lambda, false, false,
+                                    None);
+            r + lambda as f64 * c
+        };
+        model.zero_grad();
+        let base = loss(&mut model);
+        assert!(base.is_finite());
+        // grads were accumulated by the base call — snapshot them
+        model.zero_grad();
+        model.step(&xb, nb, tau, lambda, false, false, None);
+        let g_enc_l1 = model.enc.l1.gw.clone();
+        let g_enc_skip = model.enc.skip.gw.clone();
+        let g_enc_gamma = model.enc.bn.ggamma.clone();
+        let g_dec_l2 = model.dec.l2.gw.clone();
+        let g_dec_skip = model.dec.skip.gw.clone();
+        let g_code = model.gcode.clone();
+        let eps = 1e-2f32;
+        let tol = 0.05f32;
+        macro_rules! fd_tensor {
+            ($name:expr, $field:expr, $grad:expr, $stride:expr) => {
+                for idx in (0..$grad.len()).step_by($stride) {
+                    let old = $field[idx];
+                    $field[idx] = old + eps;
+                    let lp = loss(&mut model);
+                    $field[idx] = old - eps;
+                    let lm = loss(&mut model);
+                    $field[idx] = old;
+                    let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                    assert!(grads_close($grad[idx], fd, tol),
+                            "{}[{idx}]: analytic {} vs fd {fd}", $name,
+                            $grad[idx]);
+                }
+            };
+        }
+        fd_tensor!("enc.l1.w", model.enc.l1.w, g_enc_l1, 3);
+        fd_tensor!("enc.skip.w", model.enc.skip.w, g_enc_skip, 3);
+        fd_tensor!("enc.bn.gamma", model.enc.bn.gamma, g_enc_gamma, 1);
+        fd_tensor!("dec.l2.w", model.dec.l2.w, g_dec_l2, 3);
+        fd_tensor!("dec.skip.w", model.dec.skip.w, g_dec_skip, 3);
+        fd_tensor!("codebooks", model.codebooks, g_code, 1);
+    }
+
+    #[test]
+    fn training_is_seed_deterministic() {
+        let d = toy(200, 5);
+        let cfg = tiny_cfg();
+        let a = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg);
+        let b = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg);
+        assert_eq!(a.codebooks, b.codebooks, "same seed, same codebooks");
+        assert_eq!(a.enc.l1.w, b.enc.l1.w);
+        assert_eq!(a.encode_batch(&d.data), b.encode_batch(&d.data));
+        assert_eq!(a.history.len(), cfg.epochs);
+        assert_eq!(a.history[0].rec_loss, b.history[0].rec_loss);
+        let mut cfg2 = cfg;
+        cfg2.seed = 99;
+        let c = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg2);
+        assert_ne!(a.codebooks, c.codebooks, "different seed must differ");
+    }
+
+    #[test]
+    fn prop_lut_scan_score_equals_explicit_d2() {
+        let d = toy(200, 7);
+        let cfg = tiny_cfg();
+        let model = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg);
+        prop::forall_ok(
+            31,
+            40,
+            |r: &mut SplitMix64| {
+                let q = prop::vec_f32(r, 8, 3.0);
+                let code: Vec<u8> =
+                    (0..2).map(|_| r.below(4) as u8).collect();
+                (q, code)
+            },
+            |(q, code)| {
+                let lut = model.lut(q);
+                let h = model.net(q);
+                let mut cw = vec![0.0f32; 8];
+                model.gather_codewords(code, &mut cw);
+                let d2 = sq_l2(&h, &cw);
+                let scanned = lut.score(code);
+                if (scanned - d2).abs() <= 1e-3 * d2.abs().max(1.0) {
+                    Ok(())
+                } else {
+                    Err(format!("scan {scanned} != d2 {d2}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn decoder_rerank_equals_d1_and_batch_matches_rows() {
+        let d = toy(240, 9);
+        let cfg = tiny_cfg();
+        let model = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg);
+        let index = CompressedIndex::build(&model, &d);
+        // batch reconstruction ≡ row-by-row reconstruction
+        let mut batch = vec![0.0f32; index.n * d.dim];
+        assert!(model.reconstruct_batch(&index.codes, &mut batch));
+        let mut row = vec![0.0f32; d.dim];
+        for i in (0..index.n).step_by(17) {
+            assert!(model.reconstruct(index.code(i), &mut row));
+            assert_eq!(&batch[i * d.dim..(i + 1) * d.dim], &row[..]);
+        }
+        // the engine's exhaustive rerank must order by exactly
+        // d1(q, i) = ‖q − reconstruct(i)‖²
+        let search = SearchConfig { rerank_l: 10, k: 10,
+                                    exhaustive_rerank: true,
+                                    ..Default::default() };
+        let engine = SearchEngine::new(&model, &index, search);
+        for qi in [0usize, 11, 42] {
+            let q = d.row(qi);
+            let got = engine.search(q);
+            let mut want: Vec<(f32, u32)> = (0..index.n)
+                .map(|i| {
+                    (sq_l2(q, &batch[i * d.dim..(i + 1) * d.dim]), i as u32)
+                })
+                .collect();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want_scores: Vec<f32> =
+                want[..10].iter().map(|&(s, _)| s).collect();
+            let got_scores: Vec<f32> = got
+                .iter()
+                .map(|&id| {
+                    sq_l2(q, &batch[id as usize * d.dim
+                                    ..(id as usize + 1) * d.dim])
+                })
+                .collect();
+            for (g, w) in got_scores.iter().zip(&want_scores) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                        "rerank scores diverge from d1: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_everything() {
+        let d = toy(200, 13);
+        let cfg = tiny_cfg();
+        let model = NativeUnq::train(&d.data, d.dim, 2, 4, &cfg);
+        let mut s = Store::new();
+        model.save(&mut s, "");
+        let dir = TempDir::new("unq-native").unwrap();
+        let p = dir.path().join("native.store");
+        s.save(&p).unwrap();
+        let back = NativeUnq::load(&Store::load(&p).unwrap(), "").unwrap();
+        assert_eq!(back.dim, model.dim);
+        assert_eq!(back.m, model.m);
+        assert_eq!(back.k, model.k);
+        assert_eq!(back.ds, model.ds);
+        assert_eq!(back.codebooks, model.codebooks);
+        assert_eq!(back.encode_batch(&d.data), model.encode_batch(&d.data));
+        let q = d.row(3);
+        let (la, lb) = (model.lut(q), back.lut(q));
+        let code = [1u8, 2u8];
+        assert_eq!(la.score(&code), lb.score(&code));
+        let mut ra = vec![0.0f32; d.dim];
+        let mut rb = vec![0.0f32; d.dim];
+        assert!(model.reconstruct(&code, &mut ra));
+        assert!(back.reconstruct(&code, &mut rb));
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn training_does_not_degrade_reconstruction() {
+        // the PQ-equivalent init is a strong floor; a few epochs of the
+        // unsupervised objective must keep (and typically improve) it
+        let d = toy(400, 21);
+        let cfg = UnqNativeConfig { hidden: 8, epochs: 4, batch: 64,
+                                    kmeans_iters: 8, seed: 5,
+                                    ..Default::default() };
+        let init = NativeUnq::init(&d.data, d.dim, 2, 8, &cfg);
+        let mse_init = reconstruction_mse(&init, &d);
+        let trained = NativeUnq::train(&d.data, d.dim, 2, 8, &cfg);
+        let mse_trained = reconstruction_mse(&trained, &d);
+        assert!(mse_trained.is_finite() && mse_init.is_finite());
+        assert!(mse_trained <= mse_init * 1.05,
+                "training degraded reconstruction: {mse_trained} vs \
+                 init {mse_init}");
+    }
+
+    #[test]
+    fn reconstruct_rejects_wrong_output_length() {
+        let d = toy(120, 23);
+        let model = NativeUnq::init(&d.data, d.dim, 2, 4, &tiny_cfg());
+        let code = [0u8, 0u8];
+        let mut short = vec![0.0f32; d.dim - 1];
+        assert!(!model.reconstruct(&code, &mut short));
+        let mut bad = vec![0.0f32; 3];
+        assert!(!model.reconstruct_batch(&code, &mut bad));
+    }
+}
