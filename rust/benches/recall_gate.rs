@@ -1,5 +1,5 @@
 //! CI recall gate: run the harness at smoke sizes across
-//! {f32, u16, u8} × {flat, ivf} (+ the streaming write path, + the
+//! {f32, u16, u8, u4} × {flat, ivf} (+ the streaming write path, + the
 //! natively trained UNQ across {flat, ivf}), write the measured
 //! recall@10 to `BENCH_recall.smoke.json`, and FAIL (non-zero exit) when
 //!
@@ -65,7 +65,9 @@ fn main() {
 
     let mut cells: Vec<Cell> = Vec::new();
 
-    // flat × {f32, u16, u8}
+    // flat × {f32, u16, u8, u4} — at 64 codewords u4 exercises the
+    // wide-codebook fallback (scores through the exact f32 kernel), so
+    // its cell doubles as a fallback-correctness gate
     let flat_pts =
         exp.run_precision_sweep(search, ScanPrecision::all());
     for pt in &flat_pts {
@@ -73,6 +75,7 @@ fn main() {
             ScanPrecision::F32 => "flat_f32",
             ScanPrecision::U16 => "flat_u16",
             ScanPrecision::U8 => "flat_u8",
+            ScanPrecision::U4 => "flat_u4",
         };
         cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
     }
@@ -98,6 +101,7 @@ fn main() {
             ScanPrecision::F32 => "ivf_f32",
             ScanPrecision::U16 => "ivf_u16",
             ScanPrecision::U8 => "ivf_u8",
+            ScanPrecision::U4 => "ivf_u4",
         };
         cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
     }
@@ -276,8 +280,10 @@ fn main() {
     for (int_key, base_key, slack) in [
         ("flat_u16", "flat_f32", tolerance),
         ("flat_u8", "flat_f32", 2.0 * tolerance),
+        ("flat_u4", "flat_f32", 2.0 * tolerance),
         ("ivf_u16", "ivf_f32", tolerance),
         ("ivf_u8", "ivf_f32", 2.0 * tolerance),
+        ("ivf_u4", "ivf_f32", 2.0 * tolerance),
     ] {
         let (got, base) = (get(int_key), get(base_key));
         if got + slack < base {

@@ -1,11 +1,12 @@
 //! Bench: the paper's §4.4 timing study (encode / LUT scan / rerank) plus
 //! Table 1's measured train/encode complexity, the serving-loop
 //! throughput of the coordinator, the batch executor's scan throughput
-//! at 1/2/4/8 threads, the scan-precision (f32/u16/u8) sweep (both
+//! at 1/2/4/8 threads, the scan-precision (f32/u16/u8 at 256 codewords,
+//! u4 at 16) sweep with per-precision scalar-vs-SIMD columns (all
 //! written to `BENCH_scan.json`), and the IVF nprobe throughput/recall
 //! sweep (written to `BENCH_ivf.json`).  Trajectory files land at the
 //! *repository root* regardless of CWD so the numbers accumulate across
-//! PRs — see rust/DESIGN.md §2, §5 and §6.
+//! PRs — see rust/DESIGN.md §2, §5, §6 and §9.
 //!
 //! Run: `cargo bench --bench timings`
 //!
@@ -19,7 +20,7 @@ use unq::coordinator::demo::run_serve;
 use unq::data::{synthetic::Generator, Family};
 use unq::eval::tables::{table1_timings, table_timings};
 use unq::exec::Executor;
-use unq::index::{CompressedIndex, SearchEngine};
+use unq::index::{simd, CompressedIndex, SearchEngine};
 use unq::ivf::{CoarseQuantizer, IvfIndex};
 use unq::quant::{pq::Pq, Lut};
 use unq::util::bench::Bench;
@@ -98,11 +99,17 @@ fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
     entries
 }
 
-/// Scan-precision sweep: f32 vs u16 vs u8 kernels over the packed layout
-/// at the ISSUE grid n ∈ {100k, 1M} × m ∈ {8, 16}, recording throughput
-/// and recall@10 against the f32 scan (acceptance: u16 ≥ 2× f32 at
-/// n = 1M, m = 8, or the measured ratio documented in DESIGN.md §6).
-fn scan_precision_sweep(b: &mut Bench) -> Vec<Json> {
+/// Scan-precision sweep over the packed layout at the grid
+/// n ∈ {100k, 1M} × m ∈ {8, 16}: every requested precision runs the
+/// scalar kernel (forced via [`simd::set_force_scalar_for_bench`]) AND
+/// the dispatched SIMD kernel, recording throughput, per-precision
+/// SIMD-vs-scalar speedup, and recall@10 against the f32 scan.  `kw`
+/// sizes the codebooks: 256 exercises f32/u16/u8, 16 the u4 in-register
+/// path (codes stay below 16 so `ensure_packed` also builds the nibble
+/// mirror — DESIGN.md §6, §9).  The f32 kernel has no SIMD variant and
+/// contributes a single scalar row per dataset (the speedup baseline).
+fn scan_precision_sweep(b: &mut Bench, kw: usize,
+                        precisions: &[ScanPrecision]) -> Vec<Json> {
     let sizes: &[(usize, usize)] = if smoke() {
         &[(4_000, 8)]
     } else {
@@ -113,14 +120,14 @@ fn scan_precision_sweep(b: &mut Bench) -> Vec<Json> {
     for &(n, m) in sizes {
         let mut rng = SplitMix64::new(97);
         let codes: Vec<u8> =
-            (0..n * m).map(|_| rng.below(256) as u8).collect();
+            (0..n * m).map(|_| rng.below(kw) as u8).collect();
         let mut index = CompressedIndex::from_codes(n, m, codes);
         index.ensure_packed();
         let luts: Vec<Lut> = (0..nq)
             .map(|_| {
                 let tables: Vec<f32> =
-                    (0..m * 256).map(|_| rng.next_f32()).collect();
-                Lut::Tables { m, k: 256, tables, bias: 0.0 }
+                    (0..m * kw).map(|_| rng.next_f32()).collect();
+                Lut::Tables { m, k: kw, tables, bias: 0.0 }
             })
             .collect();
         let ks = vec![k; nq];
@@ -130,44 +137,75 @@ fn scan_precision_sweep(b: &mut Bench) -> Vec<Json> {
             exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
                                  ScanPrecision::F32);
         let mut f32_secs = f64::NAN;
-        for &prec in ScanPrecision::all() {
-            b.run(
-                &format!("scan {nq}q n={n} m={m} prec={}", prec.name()),
-                vectors_per_iter,
-                || exec.scan_batch_prec(&luts, &index, &ks, shard_rows, prec),
-            );
-            let secs = b.results().last().expect("bench just ran").median();
-            if prec == ScanPrecision::F32 {
-                f32_secs = secs;
+        for &prec in precisions {
+            // f32 ignores dispatch entirely; integer precisions get a
+            // scalar row first (the per-precision baseline), then the
+            // dispatched row
+            let modes: &[bool] = if prec == ScanPrecision::F32 {
+                &[true]
+            } else {
+                &[true, false]
+            };
+            let mut scalar_secs = f64::NAN;
+            for &force_scalar in modes {
+                simd::set_force_scalar_for_bench(force_scalar);
+                let mode = if force_scalar { "scalar" } else { "simd" };
+                let kernel = if force_scalar {
+                    "scalar"
+                } else {
+                    simd::active_name()
+                };
+                b.run(
+                    &format!("scan {nq}q n={n} m={m} kw={kw} prec={} {mode}",
+                             prec.name()),
+                    vectors_per_iter,
+                    || exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
+                                            prec),
+                );
+                let secs =
+                    b.results().last().expect("bench just ran").median();
+                if prec == ScanPrecision::F32 {
+                    f32_secs = secs;
+                }
+                if force_scalar {
+                    scalar_secs = secs;
+                }
+                let got = exec.scan_batch_prec(&luts, &index, &ks,
+                                               shard_rows, prec);
+                let overlap: usize = got
+                    .iter()
+                    .zip(&f32_ref)
+                    .map(|(g, w)| {
+                        g.iter()
+                            .filter(|p| w.iter().any(|q| q.1 == p.1))
+                            .count()
+                    })
+                    .sum();
+                let recall10 = 100.0 * overlap as f64 / (k * nq) as f64;
+                entries.push(Json::obj(vec![
+                    ("precision", Json::Str(prec.name().to_string())),
+                    ("mode", Json::Str(mode.to_string())),
+                    ("kernel", Json::Str(kernel.to_string())),
+                    ("k_codewords", Json::Num(kw as f64)),
+                    ("rows", Json::Num(n as f64)),
+                    ("code_bytes", Json::Num(m as f64)),
+                    ("queries", Json::Num(nq as f64)),
+                    ("k", Json::Num(k as f64)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("shard_rows", Json::Num(shard_rows as f64)),
+                    ("secs_per_batch", Json::Num(secs)),
+                    ("vectors_per_sec",
+                     Json::Num(vectors_per_iter as f64 / secs)),
+                    ("speedup_vs_f32", Json::Num(f32_secs / secs)),
+                    ("simd_speedup_vs_scalar",
+                     Json::Num(scalar_secs / secs)),
+                    ("recall10_vs_f32_pct", Json::Num(recall10)),
+                ]));
             }
-            let got = exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
-                                           prec);
-            let overlap: usize = got
-                .iter()
-                .zip(&f32_ref)
-                .map(|(g, w)| {
-                    g.iter()
-                        .filter(|p| w.iter().any(|q| q.1 == p.1))
-                        .count()
-                })
-                .sum();
-            let recall10 = 100.0 * overlap as f64 / (k * nq) as f64;
-            entries.push(Json::obj(vec![
-                ("precision", Json::Str(prec.name().to_string())),
-                ("rows", Json::Num(n as f64)),
-                ("code_bytes", Json::Num(m as f64)),
-                ("queries", Json::Num(nq as f64)),
-                ("k", Json::Num(k as f64)),
-                ("threads", Json::Num(threads as f64)),
-                ("shard_rows", Json::Num(shard_rows as f64)),
-                ("secs_per_batch", Json::Num(secs)),
-                ("vectors_per_sec",
-                 Json::Num(vectors_per_iter as f64 / secs)),
-                ("speedup_vs_f32", Json::Num(f32_secs / secs)),
-                ("recall10_vs_f32_pct", Json::Num(recall10)),
-            ]));
         }
     }
+    // leave the process on normal dispatch for whatever runs next
+    simd::set_force_scalar_for_bench(false);
     entries
 }
 
@@ -277,13 +315,23 @@ fn main() {
     }
 
     // Batch executor scan throughput at 1/2/4/8 threads, plus the
-    // scan-precision (f32/u16/u8) sweep — one BENCH_scan.json suite.
+    // scan-precision sweeps with scalar-vs-SIMD columns — one
+    // BENCH_scan.json suite.  256-codeword LUTs drive f32/u16/u8; a
+    // separate 16-codeword dataset (with its own f32 reference) drives
+    // the u4 in-register path, so its recall@10 delta vs f32 is
+    // apples-to-apples.
     let thread_entries = scan_thread_sweep(&mut b);
-    let precision_entries = scan_precision_sweep(&mut b);
+    let precision_entries = scan_precision_sweep(
+        &mut b, 256,
+        &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8]);
+    let u4_entries = scan_precision_sweep(
+        &mut b, 16, &[ScanPrecision::F32, ScanPrecision::U4]);
     let report = Json::obj(vec![
         ("bench", Json::Str("scan_suite".into())),
+        ("simd_kernel", Json::Str(simd::active_name().to_string())),
         ("thread_sweep", Json::Arr(thread_entries)),
         ("precision_sweep", Json::Arr(precision_entries)),
+        ("u4_sweep", Json::Arr(u4_entries)),
     ]);
     write_report("BENCH_scan.json", &report);
 

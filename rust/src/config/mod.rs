@@ -89,11 +89,17 @@ pub enum ScanPrecision {
     /// 8-bit LUT entries: coarsest, fastest; boundary swaps are bounded
     /// by `stride · step / 2` in score units.
     U8,
+    /// 4-bit codes against 16-entry 8-bit LUT rows gathered in-register
+    /// (PSHUFB/TBL — the FAISS fast-scan idiom, rust/DESIGN.md §9).
+    /// Applies when the quantizer uses ≤ 16 codewords per position;
+    /// wider codebooks fall back to the exact f32 kernel.
+    U4,
 }
 
 impl ScanPrecision {
     pub fn all() -> &'static [ScanPrecision] {
-        &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8]
+        &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8,
+          ScanPrecision::U4]
     }
 
     pub fn name(&self) -> &'static str {
@@ -101,6 +107,7 @@ impl ScanPrecision {
             ScanPrecision::F32 => "f32",
             ScanPrecision::U16 => "u16",
             ScanPrecision::U8 => "u8",
+            ScanPrecision::U4 => "u4",
         }
     }
 
@@ -109,6 +116,7 @@ impl ScanPrecision {
             "f32" | "fp32" | "float" | "exact" => Some(ScanPrecision::F32),
             "u16" | "uint16" | "16" => Some(ScanPrecision::U16),
             "u8" | "uint8" | "8" => Some(ScanPrecision::U8),
+            "u4" | "uint4" | "4" | "nibble" => Some(ScanPrecision::U4),
             _ => None,
         }
     }
@@ -137,9 +145,20 @@ pub struct SearchConfig {
     /// backend.
     pub nprobe: usize,
     /// ADC scan kernel arithmetic: exact f32 (default) or blocked
-    /// integer fast-scan at u16/u8 LUT entries with exact rescoring
-    /// (rust/DESIGN.md §6; env `UNQ_SCAN_PRECISION`, CLI `--precision`).
+    /// integer fast-scan at u16/u8/u4 LUT entries with exact rescoring
+    /// (rust/DESIGN.md §6/§9; env `UNQ_SCAN_PRECISION`,
+    /// CLI `--precision`).
     pub scan_precision: ScanPrecision,
+    /// 1-bit sign-sketch pre-filter before the scan (rust/DESIGN.md §9):
+    /// prunes to ~`k · prefilter_margin` sketch-nearest candidates by
+    /// XOR+popcount, then scores survivors exactly.  Requires sketches
+    /// on the index (`ensure_sketches`) — silently a no-op where absent
+    /// (env `UNQ_PREFILTER`, CLI `--prefilter`).
+    pub prefilter: bool,
+    /// Over-fetch margin of the pre-filter: candidates kept per scan
+    /// task ≈ `k × this` (env `UNQ_PREFILTER_MARGIN`,
+    /// CLI `--prefilter-margin`).
+    pub prefilter_margin: usize,
 }
 
 impl Default for SearchConfig {
@@ -147,7 +166,8 @@ impl Default for SearchConfig {
         SearchConfig { rerank_l: 500, k: 100, no_rerank: false,
                        exhaustive_rerank: false, num_threads: 1,
                        shard_rows: 0, nprobe: 0,
-                       scan_precision: ScanPrecision::F32 }
+                       scan_precision: ScanPrecision::F32,
+                       prefilter: false, prefilter_margin: 4 }
     }
 }
 
@@ -351,6 +371,9 @@ impl AppConfig {
                 ("nprobe", Json::Num(self.search.nprobe as f64)),
                 ("scan_precision",
                  Json::Str(self.search.scan_precision.name().to_string())),
+                ("prefilter", Json::Bool(self.search.prefilter)),
+                ("prefilter_margin",
+                 Json::Num(self.search.prefilter_margin as f64)),
             ])),
             ("ivf", Json::obj(vec![
                 ("backend", Json::Str(self.ivf.backend.name().to_string())),
@@ -431,6 +454,13 @@ impl AppConfig {
             if let Some(v) = s.get("scan_precision").and_then(Json::as_str) {
                 cfg.search.scan_precision = ScanPrecision::parse(v)
                     .with_context(|| format!("unknown scan precision {v:?}"))?;
+            }
+            if let Some(v) = s.get("prefilter").and_then(Json::as_bool) {
+                cfg.search.prefilter = v;
+            }
+            if let Some(v) = s.get("prefilter_margin").and_then(Json::as_usize)
+            {
+                cfg.search.prefilter_margin = v;
             }
         }
         if let Some(s) = j.get("ivf") {
@@ -624,6 +654,20 @@ impl AppConfig {
         if let Ok(s) = std::env::var("UNQ_SCAN_PRECISION") {
             if let Some(p) = ScanPrecision::parse(&s) {
                 self.search.scan_precision = p;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_PREFILTER") {
+            match s.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.search.prefilter = true,
+                "0" | "false" | "no" => self.search.prefilter = false,
+                _ => {}
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_PREFILTER_MARGIN") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.search.prefilter_margin = v;
+                }
             }
         }
         if let Ok(s) = std::env::var("UNQ_LISTS") {
@@ -822,9 +866,34 @@ mod tests {
         assert_eq!(ScanPrecision::parse("exact"), Some(ScanPrecision::F32));
         assert_eq!(ScanPrecision::parse("uint16"), Some(ScanPrecision::U16));
         assert_eq!(ScanPrecision::parse("8"), Some(ScanPrecision::U8));
+        assert_eq!(ScanPrecision::parse("u4"), Some(ScanPrecision::U4));
+        assert_eq!(ScanPrecision::parse("nibble"), Some(ScanPrecision::U4));
         assert_eq!(ScanPrecision::parse("i4"), None);
         assert_eq!(ScanPrecision::U16.name(), "u16");
-        assert_eq!(ScanPrecision::all().len(), 3);
+        assert_eq!(ScanPrecision::U4.name(), "u4");
+        assert_eq!(ScanPrecision::all().len(), 4);
+    }
+
+    #[test]
+    fn prefilter_roundtrip_defaults_and_parses() {
+        let c = AppConfig::default();
+        assert!(!c.search.prefilter, "pre-filter must default off");
+        assert_eq!(c.search.prefilter_margin, 4);
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("pre.json");
+        let mut c = AppConfig::default();
+        c.search.prefilter = true;
+        c.search.prefilter_margin = 9;
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert!(back.search.prefilter);
+        assert_eq!(back.search.prefilter_margin, 9);
+        let j = Json::parse(
+            r#"{"search": {"prefilter": true, "prefilter_margin": 2}}"#)
+            .unwrap();
+        let cfg = AppConfig::from_json(&j).unwrap();
+        assert!(cfg.search.prefilter);
+        assert_eq!(cfg.search.prefilter_margin, 2);
     }
 
     #[test]

@@ -243,6 +243,11 @@ pub fn build_or_load_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
     if cfg.search.scan_precision != ScanPrecision::F32 {
         ivf.ensure_packed();
     }
+    // the 1-bit pre-filter reads row sketches; build them once up front
+    // (non-residual only — residual search keeps the plan off)
+    if cfg.search.prefilter && !cfg.ivf.residual {
+        ivf.ensure_sketches(quant);
+    }
     Ok(ivf)
 }
 
@@ -431,6 +436,13 @@ pub fn prepare(cfg: &AppConfig, variant: &str) -> Result<Experiment> {
         && cfg.ivf.backend == crate::config::IndexBackendKind::Flat
     {
         index.ensure_packed();
+    }
+    // likewise the 1-bit pre-filter's row sketches (quantizers without a
+    // decoder return false and the search silently skips pruning)
+    if cfg.search.prefilter
+        && cfg.ivf.backend == crate::config::IndexBackendKind::Flat
+    {
+        index.ensure_sketches(quant.as_ref());
     }
 
     Ok(Experiment {

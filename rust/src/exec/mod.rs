@@ -32,5 +32,5 @@ pub mod plan;
 pub mod pool;
 
 pub use plan::{rerank_batch, shard_ranges, shard_ranges_in, Executor,
-               IndexedScanTask, ScanTask};
+               IndexedScanTask, PrefilterPlan, ScanTask};
 pub use pool::WorkerPool;

@@ -21,7 +21,8 @@
 use std::sync::mpsc;
 
 use crate::config::ScanPrecision;
-use crate::index::scan::{merge_topk, scan_range_topk_prec};
+use crate::index::scan::{merge_topk, scan_range_topk_prec,
+                         scan_range_topk_prefiltered};
 use crate::index::CompressedIndex;
 use crate::linalg::{sq_l2, TopK};
 use crate::quant::{Lut, Quantizer, QuantizedLut};
@@ -31,13 +32,43 @@ use super::pool::WorkerPool;
 /// Quantize the batch's LUTs once per plan (not per task): `None` marks
 /// a LUT that scans through the exact f32 kernel — every LUT at
 /// `ScanPrecision::F32`, and direct-scored (lattice) LUTs at any
-/// precision, which have no table decomposition to quantize.
+/// precision, which have no table decomposition to quantize.  `U4`
+/// additionally quantizes only when the codebook fits a 16-entry
+/// register row (`k ≤ 16` codewords, `m ≤ 256`) — wider LUTs fall back
+/// to the exact kernel through the same `None` machinery.
 fn quantize_luts(luts: &[Lut], precision: ScanPrecision)
                  -> Vec<Option<QuantizedLut>> {
     match precision {
         ScanPrecision::F32 => vec![None; luts.len()],
         ScanPrecision::U16 => luts.iter().map(QuantizedLut::u16_from).collect(),
         ScanPrecision::U8 => luts.iter().map(QuantizedLut::u8_from).collect(),
+        ScanPrecision::U4 => luts.iter().map(QuantizedLut::u4_from).collect(),
+    }
+}
+
+/// The optional 1-bit pre-filter stage of a scan plan (DESIGN.md §9):
+/// one query sketch per plan LUT (`None` entries never prune — residual
+/// IVF LUTs, direct-scored LUTs) and the over-fetch margin.  A task
+/// pre-filters only when its LUT has a sketch AND its index carries row
+/// sketches; everything else falls through to the precision scan, so
+/// threading a plan through sketchless indexes (streaming segments) is
+/// always safe.
+pub struct PrefilterPlan {
+    /// Indexed like the plan's `luts`.
+    pub qsketches: Vec<Option<u64>>,
+    /// Candidates kept per task ≈ `k · margin` (floor `k`).
+    pub margin: usize,
+}
+
+/// One task's scan: the pre-filtered exact path when the plan resolved
+/// row sketches + a query sketch for it, the precision kernel otherwise.
+fn scan_task_part(lut: &Lut, qlut: Option<&QuantizedLut>,
+                  ix: &CompressedIndex, lo: usize, hi: usize, k: usize,
+                  pf: Option<(&[u64], u64, usize)>) -> Vec<(f32, u32)> {
+    match pf {
+        Some((sketches, qsketch, margin)) => scan_range_topk_prefiltered(
+            lut, ix, sketches, qsketch, lo, hi, k, margin),
+        None => scan_range_topk_prec(lut, qlut, ix, lo, hi, k),
     }
 }
 
@@ -101,6 +132,17 @@ impl Executor {
                            ks: &[usize], shard_rows: usize,
                            precision: ScanPrecision)
                            -> Vec<Vec<(f32, u32)>> {
+        self.scan_batch_pre(luts, index, ks, shard_rows, precision, None)
+    }
+
+    /// [`Self::scan_batch_prec`] with an optional 1-bit pre-filter
+    /// stage: tasks whose LUT has a query sketch prune candidates by
+    /// sketch Hamming distance before exact scoring (DESIGN.md §9).
+    pub fn scan_batch_pre(&self, luts: &[Lut], index: &CompressedIndex,
+                          ks: &[usize], shard_rows: usize,
+                          precision: ScanPrecision,
+                          pre: Option<&PrefilterPlan>)
+                          -> Vec<Vec<(f32, u32)>> {
         assert_eq!(luts.len(), ks.len(), "one k per query LUT");
         if luts.is_empty() {
             return Vec::new();
@@ -110,10 +152,13 @@ impl Executor {
         let mut tasks = Vec::with_capacity(luts.len() * shards.len());
         for qi in 0..luts.len() {
             for &(lo, hi) in &shards {
-                tasks.push(ScanTask { slot: qi, lut: qi, lo, hi });
+                tasks.push(IndexedScanTask {
+                    index: 0, slot: qi, lut: qi, lo, hi,
+                });
             }
         }
-        self.run_scan_tasks_prec(luts, index, ks, &tasks, precision)
+        self.run_scan_tasks_multi_pre(luts, &[index], ks, &tasks, precision,
+                                      pre)
     }
 
     /// Execute an arbitrary [`ScanTask`] plan: for every slot `s`, the
@@ -167,7 +212,32 @@ impl Executor {
                                      tasks: &[IndexedScanTask],
                                      precision: ScanPrecision)
                                      -> Vec<Vec<(f32, u32)>> {
+        self.run_scan_tasks_multi_pre(luts, indexes, ks, tasks, precision,
+                                      None)
+    }
+
+    /// [`Self::run_scan_tasks_multi_prec`] with the optional 1-bit
+    /// pre-filter stage: per task, the plan resolves a `(row sketches,
+    /// query sketch, margin)` triple — present only when BOTH the
+    /// task's LUT has a query sketch and its index carries row sketches
+    /// — and such tasks prune by Hamming distance then score survivors
+    /// exactly in f32; all other tasks run the precision kernel.  The
+    /// per-slot merge compares exact f32 scores either way, so the two
+    /// task flavors mix freely within one slot.
+    pub fn run_scan_tasks_multi_pre(&self, luts: &[Lut],
+                                    indexes: &[&CompressedIndex],
+                                    ks: &[usize],
+                                    tasks: &[IndexedScanTask],
+                                    precision: ScanPrecision,
+                                    pre: Option<&PrefilterPlan>)
+                                    -> Vec<Vec<(f32, u32)>> {
         let qluts = quantize_luts(luts, precision);
+        let task_pf = |t: &IndexedScanTask| -> Option<(&[u64], u64, usize)> {
+            let p = pre?;
+            let qs = p.qsketches[t.lut]?;
+            let sk = indexes[t.index].sketches.as_deref()?;
+            Some((sk, qs, p.margin))
+        };
         let nslots = ks.len();
         // per-slot ordinal of each task: its merge position within the slot
         let mut counts = vec![0usize; nslots];
@@ -184,9 +254,10 @@ impl Executor {
                 let mut parts: Vec<Vec<Vec<(f32, u32)>>> =
                     counts.iter().map(|&c| Vec::with_capacity(c)).collect();
                 for t in tasks {
-                    parts[t.slot].push(scan_range_topk_prec(
+                    parts[t.slot].push(scan_task_part(
                         &luts[t.lut], qluts[t.lut].as_ref(),
-                        indexes[t.index], t.lo, t.hi, ks[t.slot]));
+                        indexes[t.index], t.lo, t.hi, ks[t.slot],
+                        task_pf(t)));
                 }
                 parts
                     .into_iter()
@@ -207,9 +278,10 @@ impl Executor {
                     let k = ks[t.slot];
                     let (slot, ord) = (t.slot, ords[ti]);
                     let (lo, hi) = (t.lo, t.hi);
+                    let pf = task_pf(t);
                     jobs.push(Box::new(move || {
-                        let part = scan_range_topk_prec(lut, qlut, ix,
-                                                        lo, hi, k);
+                        let part = scan_task_part(lut, qlut, ix, lo, hi, k,
+                                                  pf);
                         let _ = tx.send((slot, ord, part));
                     }));
                 }
@@ -351,6 +423,22 @@ mod tests {
         Lut::Tables { m: stride, k: 256, tables, bias: 0.5 }
     }
 
+    /// 16-codeword twin of `mk_index`/`mk_lut`: codes < 16 and 16-wide
+    /// tables, so `ScanPrecision::U4` quantizes instead of falling back.
+    fn mk_index16(n: usize, stride: usize, seed: u64) -> CompressedIndex {
+        let mut rng = SplitMix64::new(seed);
+        let codes: Vec<u8> =
+            (0..n * stride).map(|_| rng.below(16) as u8).collect();
+        CompressedIndex::from_codes(n, stride, codes)
+    }
+
+    fn mk_lut16(stride: usize, seed: u64) -> Lut {
+        let mut rng = SplitMix64::new(seed);
+        let tables: Vec<f32> =
+            (0..stride * 16).map(|_| rng.next_f32() * 10.0).collect();
+        Lut::Tables { m: stride, k: 16, tables, bias: 0.5 }
+    }
+
     #[test]
     fn shard_ranges_cover_exactly_once() {
         assert_eq!(shard_ranges(10, 0), vec![(0, 10)]);
@@ -429,16 +517,29 @@ mod tests {
                 let shard_rows = [0usize, 1, 13, 64, 300][r.below(5)];
                 let k = 1 + r.below(30);
                 let prec = [ScanPrecision::F32, ScanPrecision::U16,
-                            ScanPrecision::U8][r.below(3)];
+                            ScanPrecision::U8, ScanPrecision::U4]
+                    [r.below(4)];
                 (n, stride, threads, shard_rows, k, prec, r.next_u64())
             },
             |&(n, stride, threads, shard_rows, k, prec, seed)| {
-                let mut idx = mk_index(n, stride, seed);
+                // U4 gets 16-codeword data so it exercises the real 4-bit
+                // kernel rather than the wide-codebook f32 fallback
+                let u4 = prec == ScanPrecision::U4;
+                let mut idx = if u4 {
+                    mk_index16(n, stride, seed)
+                } else {
+                    mk_index(n, stride, seed)
+                };
                 if seed % 2 == 0 {
                     idx.ensure_packed();
                 }
-                let luts: Vec<Lut> =
-                    (0..3).map(|i| mk_lut(stride, seed ^ (i + 9))).collect();
+                let luts: Vec<Lut> = (0..3)
+                    .map(|i| if u4 {
+                        mk_lut16(stride, seed ^ (i + 9))
+                    } else {
+                        mk_lut(stride, seed ^ (i + 9))
+                    })
+                    .collect();
                 let ks = vec![k; luts.len()];
                 let pool = Executor::new(threads);
                 // same explicit shard size on both sides: auto-sizing
@@ -491,6 +592,42 @@ mod tests {
                 &luts[1], &ix1, 40, 160, 6);
             assert_eq!(got[1], want1, "threads={threads} slot 1");
         }
+    }
+
+    #[test]
+    fn prefiltered_batch_matches_plain_scan_at_full_keep_on_any_executor() {
+        // keep ≥ every shard ⇒ the pre-filter stage must be a no-op, on
+        // the inline executor and on pools alike; sketch content is
+        // irrelevant at full keep so zeros suffice
+        let mut idx = mk_index(400, 6, 77);
+        idx.sketches = Some(vec![0u64; 400]);
+        let luts: Vec<Lut> = (0..3).map(|i| mk_lut(6, 80 + i)).collect();
+        let ks = vec![9usize; luts.len()];
+        let pre = PrefilterPlan {
+            qsketches: luts.iter().map(|_| Some(0u64)).collect(),
+            margin: 10_000,
+        };
+        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 128);
+        for threads in [1usize, 3] {
+            let got = Executor::new(threads).scan_batch_pre(
+                &luts, &idx, &ks, 128, ScanPrecision::F32, Some(&pre));
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn prefilter_skips_tasks_without_sketches() {
+        // a plan with a PrefilterPlan but a sketchless index must fall
+        // through to the precision scan on every task (the streaming
+        // segment guarantee)
+        let idx = mk_index(300, 5, 91);
+        let luts = vec![mk_lut(5, 92)];
+        let ks = [11usize];
+        let pre = PrefilterPlan { qsketches: vec![Some(7)], margin: 2 };
+        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 64);
+        let got = Executor::new(1).scan_batch_pre(
+            &luts, &idx, &ks, 64, ScanPrecision::F32, Some(&pre));
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -23,15 +23,16 @@
 pub mod packed;
 pub mod scan;
 pub mod segment;
+pub mod simd;
 
 use crate::config::SearchConfig;
 use crate::data::Dataset;
 use crate::exec::{plan, Executor};
-use crate::quant::{Lut, Quantizer};
+use crate::quant::{Lut, Quantizer, SketchPlanes};
 
 pub use packed::{PackedIndex, BLOCK};
-pub use scan::{scan_lut_topk, scan_lut_topk_u16, scan_lut_topk_u8,
-               scan_topk};
+pub use scan::{scan_lut_topk, scan_lut_topk_u16, scan_lut_topk_u4,
+               scan_lut_topk_u8, scan_topk};
 pub use segment::{Routing, StreamStats, StreamingIndex};
 
 /// Flat compressed database.
@@ -45,6 +46,11 @@ pub struct CompressedIndex {
     /// (identical results, more memory traffic); [`Self::ensure_packed`]
     /// builds it once for hot read paths.
     pub packed: Option<PackedIndex>,
+    /// Optional per-row 1-bit sign sketches of the *reconstructions*
+    /// (the vectors ADC scores against) for the scan pre-filter
+    /// (DESIGN.md §9); [`Self::ensure_sketches`] builds them once.  One
+    /// u64 per row.
+    pub sketches: Option<Vec<u64>>,
 }
 
 impl CompressedIndex {
@@ -56,12 +62,13 @@ impl CompressedIndex {
             stride: q.code_bytes(),
             codes,
             packed: None,
+            sketches: None,
         }
     }
 
     pub fn from_codes(n: usize, stride: usize, codes: Vec<u8>) -> Self {
         assert_eq!(codes.len(), n * stride);
-        CompressedIndex { n, stride, codes, packed: None }
+        CompressedIndex { n, stride, codes, packed: None, sketches: None }
     }
 
     /// Build the blocked fast-scan mirror if it doesn't exist yet (cheap:
@@ -76,6 +83,19 @@ impl CompressedIndex {
     #[inline]
     pub fn is_packed(&self) -> bool {
         self.packed.is_some()
+    }
+
+    /// Build the 1-bit pre-filter sketches if they don't exist yet (one
+    /// decode pass over the codes; 8 B per row while held).  Returns
+    /// whether sketches are available afterwards — `false` when the
+    /// quantizer has no meaningful decoder, in which case searches with
+    /// `cfg.prefilter` simply never prune on this index.
+    pub fn ensure_sketches(&mut self, quant: &dyn Quantizer) -> bool {
+        if self.sketches.is_none() {
+            self.sketches =
+                crate::quant::sketch_codes(quant, &self.codes, self.stride);
+        }
+        self.sketches.is_some()
     }
 
     #[inline]
@@ -172,11 +192,12 @@ impl<'a> SearchEngine<'a> {
         let ids = |pairs: Vec<(f32, u32)>| -> Vec<u32> {
             pairs.into_iter().map(|(_, id)| id).collect()
         };
+        let pre = self.prefilter_plan(queries);
         let do_rerank = !self.cfg.no_rerank && self.quant.supports_rerank();
         if !do_rerank {
             return exec
-                .scan_batch_prec(luts, self.index, ks, self.cfg.shard_rows,
-                                 self.cfg.scan_precision)
+                .scan_batch_pre(luts, self.index, ks, self.cfg.shard_rows,
+                                self.cfg.scan_precision, pre.as_ref())
                 .into_iter()
                 .map(ids)
                 .collect();
@@ -201,12 +222,28 @@ impl<'a> SearchEngine<'a> {
         let ls: Vec<usize> =
             ks.iter().map(|&k| self.cfg.rerank_l.max(k)).collect();
         let candidates: Vec<Vec<u32>> =
-            exec.scan_batch_prec(luts, self.index, &ls, self.cfg.shard_rows,
-                                 self.cfg.scan_precision)
+            exec.scan_batch_pre(luts, self.index, &ls, self.cfg.shard_rows,
+                                self.cfg.scan_precision, pre.as_ref())
                 .into_iter()
                 .map(ids)
                 .collect();
         plan::rerank_batch(self.quant, self.index, queries, &candidates, ks)
+    }
+
+    /// Resolve the 1-bit pre-filter stage for a query batch: engaged
+    /// only when configured AND the index carries row sketches
+    /// ([`CompressedIndex::ensure_sketches`]); the query side re-derives
+    /// the same hyperplanes from the dimensionality (DESIGN.md §9).
+    fn prefilter_plan(&self, queries: &[&[f32]])
+                      -> Option<plan::PrefilterPlan> {
+        if !self.cfg.prefilter || self.index.sketches.is_none() {
+            return None;
+        }
+        let planes = SketchPlanes::for_dim(self.quant.dim());
+        Some(plan::PrefilterPlan {
+            qsketches: queries.iter().map(|q| Some(planes.sketch(q))).collect(),
+            margin: self.cfg.prefilter_margin,
+        })
     }
 
     /// Stage 2: decode candidates and rank by exact `d1` (eq. 7) — a
@@ -361,7 +398,11 @@ mod tests {
         let base = SearchConfig { rerank_l: idx.n, k: 10,
                                   ..Default::default() };
         let want = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
-        for precision in [ScanPrecision::U16, ScanPrecision::U8] {
+        // U4 exercises the wide-codebook fallback here: PQ carries 32
+        // codewords, so u4_from declines and the f32 path must kick in.
+        for precision in
+            [ScanPrecision::U16, ScanPrecision::U8, ScanPrecision::U4]
+        {
             for ix in [&idx, &packed_idx] {
                 let cfg = SearchConfig { scan_precision: precision, ..base };
                 let got = SearchEngine::new(&pq, ix, cfg).search_batch(&qrefs);
@@ -415,5 +456,78 @@ mod tests {
                 eng.scan(&lut, 7).into_iter().map(|p| p.1).collect();
             assert_eq!(got[qi], want, "query {qi}");
         }
+    }
+
+    #[test]
+    fn prefilter_with_full_keep_is_bit_identical_to_plain_engine() {
+        // keep = k·margin ≥ n makes the pre-filter admit every row, and
+        // the pruned scan delegates to the plain one — so results must
+        // match bit for bit, with and without rerank
+        let (d, pq) = setup();
+        let mut idx = CompressedIndex::build(&pq, &d);
+        assert!(idx.ensure_sketches(&pq), "PQ decodes, sketches must build");
+        assert_eq!(idx.sketches.as_ref().map(Vec::len), Some(idx.n));
+        let queries = Generator::new(Family::SiftLike, 21).generate(6, 5);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        for no_rerank in [true, false] {
+            let base = SearchConfig { rerank_l: 60, k: 9, no_rerank,
+                                      ..Default::default() };
+            let plain = SearchEngine::new(&pq, &idx, base)
+                .search_batch(&qrefs);
+            let cfg = SearchConfig { prefilter: true,
+                                     prefilter_margin: 10_000, ..base };
+            let pre = SearchEngine::new(&pq, &idx, cfg).search_batch(&qrefs);
+            assert_eq!(pre, plain, "no_rerank={no_rerank}");
+        }
+    }
+
+    #[test]
+    fn prefilter_without_sketches_is_a_no_op() {
+        // prefilter: true on an index that never built sketches must
+        // resolve to the plain scan (the plan needs both sides)
+        let (d, pq) = setup();
+        let idx = CompressedIndex::build(&pq, &d);
+        assert!(idx.sketches.is_none());
+        let queries = Generator::new(Family::SiftLike, 21).generate(6, 4);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let base = SearchConfig { rerank_l: 50, k: 10,
+                                  ..Default::default() };
+        let plain = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
+        let cfg = SearchConfig { prefilter: true, prefilter_margin: 2,
+                                 ..base };
+        let got = SearchEngine::new(&pq, &idx, cfg).search_batch(&qrefs);
+        assert_eq!(got, plain);
+    }
+
+    #[test]
+    fn prefilter_recall_stays_high_under_real_pruning() {
+        // margin 40 admits ~20% of the 2000 rows per query (keep = 400),
+        // so the prune genuinely engages; sign sketches of the PQ
+        // reconstructions must still retain the bulk of the f32 top-10
+        let (d, pq) = setup();
+        let mut idx = CompressedIndex::build(&pq, &d);
+        assert!(idx.ensure_sketches(&pq));
+        let queries = Generator::new(Family::SiftLike, 21).generate(7, 20);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let base = SearchConfig { rerank_l: 10, k: 10, no_rerank: true,
+                                  ..Default::default() };
+        let full = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
+        let cfg = SearchConfig { prefilter: true, prefilter_margin: 40,
+                                 ..base };
+        // non-vacuity: keep = 10·40 = 400 < n = 2000, so every query
+        // is scored on a strict subset of the index
+        assert!(base.k * cfg.prefilter_margin < idx.n);
+        let pruned = SearchEngine::new(&pq, &idx, cfg).search_batch(&qrefs);
+        let overlap: usize = full
+            .iter()
+            .zip(&pruned)
+            .map(|(a, b)| a.iter().filter(|&id| b.contains(id)).count())
+            .sum();
+        let total = 10 * qrefs.len();
+        assert!(overlap * 2 >= total,
+                "prefilter overlap {overlap}/{total} collapsed");
     }
 }

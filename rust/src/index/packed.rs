@@ -21,6 +21,12 @@
 //! access pattern is shared by the whole block.  The tail block pads
 //! missing lanes with byte 0 (a valid codeword id; padded lanes are
 //! computed but never emitted).  See rust/DESIGN.md §6.
+//!
+//! When every code byte is below 16 the pack additionally builds a
+//! half-width *nibble mirror* for the 4-bit fast-scan kernels
+//! (DESIGN.md §9): each 32-lane position row is squeezed into 16 bytes,
+//! lane `i` in the low nibble and lane `i + 16` in the high nibble, so
+//! one 128-bit load feeds a PSHUFB/TBL table gather directly.
 
 use super::CompressedIndex;
 
@@ -36,6 +42,11 @@ pub struct PackedIndex {
     pub stride: usize,
     /// `ceil(n / 32) · stride · 32` bytes, laid out as documented above.
     pub data: Vec<u8>,
+    /// Half-width mirror of `data` for 4-bit codes — present iff every
+    /// code byte is `< 16`.  `nibbles[(b·stride + j)·16 + i]` packs lane
+    /// `i` (low nibble) with lane `i + 16` (high nibble) of position `j`
+    /// in block `b`.
+    pub nibbles: Option<Vec<u8>>,
 }
 
 impl PackedIndex {
@@ -53,7 +64,18 @@ impl PackedIndex {
                 data[base + j * BLOCK + r] = c;
             }
         }
-        PackedIndex { n, stride, data }
+        let nibbles = if codes.iter().all(|&c| c < 16) {
+            let mut nib = vec![0u8; nb * stride * (BLOCK / 2)];
+            for (pos, half) in nib.iter_mut().enumerate() {
+                let row = pos / (BLOCK / 2) * BLOCK;
+                let lane = pos % (BLOCK / 2);
+                *half = data[row + lane] | (data[row + lane + BLOCK / 2] << 4);
+            }
+            Some(nib)
+        } else {
+            None
+        };
+        PackedIndex { n, stride, data, nibbles }
     }
 
     /// Pack an existing flat index.
@@ -72,6 +94,14 @@ impl PackedIndex {
     pub fn block(&self, b: usize) -> &[u8] {
         let span = self.stride * BLOCK;
         &self.data[b * span..(b + 1) * span]
+    }
+
+    /// The `stride × 16` nibble slab of block `b`, when the mirror
+    /// exists (all codes `< 16`).
+    #[inline]
+    pub fn nibble_block(&self, b: usize) -> Option<&[u8]> {
+        let span = self.stride * (BLOCK / 2);
+        self.nibbles.as_ref().map(|nib| &nib[b * span..(b + 1) * span])
     }
 
     /// Read one logical row back out of the blocked layout (test and
@@ -132,6 +162,38 @@ mod tests {
                            "pad lane j={j} r={r} must be zero");
             }
         }
+    }
+
+    #[test]
+    fn nibble_mirror_matches_byte_layout_for_small_codes() {
+        let mut rng = SplitMix64::new(21);
+        for n in [1usize, 31, 32, 33, 100] {
+            for stride in [1usize, 3, 8] {
+                let codes: Vec<u8> =
+                    (0..n * stride).map(|_| rng.below(16) as u8).collect();
+                let p = PackedIndex::pack(n, stride, &codes);
+                for b in 0..p.num_blocks() {
+                    let bytes = p.block(b);
+                    let nib = p.nibble_block(b)
+                               .expect("codes < 16 must build the mirror");
+                    for j in 0..stride {
+                        for i in 0..BLOCK / 2 {
+                            let half = nib[j * (BLOCK / 2) + i];
+                            assert_eq!(half & 0x0F, bytes[j * BLOCK + i]);
+                            assert_eq!(half >> 4,
+                                       bytes[j * BLOCK + i + BLOCK / 2]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_mirror_absent_for_wide_codes() {
+        let p = PackedIndex::pack(2, 2, &[1, 2, 16, 3]);
+        assert!(p.nibbles.is_none());
+        assert!(p.nibble_block(0).is_none());
     }
 
     #[test]

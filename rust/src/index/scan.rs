@@ -2,11 +2,20 @@
 //!
 //! `scan_lut_topk` is the specialized f32 LUT loop (the overwhelmingly
 //! common case: PQ/OPQ/RVQ/LSQ/UNQ all scan through `Lut::Tables`);
-//! `scan_lut_topk_u16` / `scan_lut_topk_u8` are the blocked integer
-//! fast-scan kernels (select with quantized-LUT integer scores over the
-//! [`super::packed`] layout, then exactly re-score the survivors in
-//! f32 — rust/DESIGN.md §6); `scan_topk` dispatches, falling back to the
-//! generic `Lut::score` for the lattice's direct dot scoring.
+//! `scan_lut_topk_u16` / `scan_lut_topk_u8` / `scan_lut_topk_u4` are the
+//! blocked integer fast-scan kernels (select with quantized-LUT integer
+//! scores over the [`super::packed`] layout, then exactly re-score the
+//! survivors in f32 — rust/DESIGN.md §6); `scan_topk` dispatches,
+//! falling back to the generic `Lut::score` for the lattice's direct
+//! dot scoring.
+//!
+//! Each integer kernel exists twice: the scalar loop below (the
+//! property-test oracle, kept verbatim, pinned by `UNQ_FORCE_SCALAR=1`)
+//! and a [`super::simd`] block accumulator selected by a cached runtime
+//! CPU probe (rust/DESIGN.md §9).  Both produce bit-identical integer
+//! lane sums, so dispatch can never change a result.  The optional
+//! 1-bit sketch pre-filter ([`scan_range_topk_prefiltered`]) prunes by
+//! Hamming distance before exact scoring.
 //!
 //! Performance notes (see `rust/DESIGN.md` §2/§6 for measurements):
 //! * the per-row loop over `stride` table lookups is unrolled by the
@@ -22,9 +31,10 @@
 //!   and re-score the surviving candidate set exactly.
 
 use crate::linalg::TopK;
-use crate::quant::{Lut, QuantizedLut};
+use crate::quant::{Lut, QuantizedLut, U4_ROW};
 
 use super::packed::BLOCK;
+use super::simd;
 use super::CompressedIndex;
 
 /// Scan the whole index with a table LUT, returning the k smallest
@@ -46,7 +56,7 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
         let base0 = qi * 4 * stride;
         let (mut a0, mut a1, mut a2, mut a3) = (bias, bias, bias, bias);
         for j in 0..stride {
-            // safety: tables is (stride, k_width); code bytes < k_width by
+            // SAFETY: tables is (stride, k_width); code bytes < k_width by
             // construction (encoders emit ids < K)
             unsafe {
                 let t = tables.as_ptr().add(j * k_width);
@@ -78,6 +88,8 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
         let code = &codes[row * stride..(row + 1) * stride];
         let mut acc = bias;
         for (j, &c) in code.iter().enumerate() {
+            // SAFETY: tables is (stride, k_width); code bytes < k_width
+            // by construction (encoders emit ids < K)
             acc += unsafe { *tables.get_unchecked(j * k_width + c as usize) };
         }
         if acc < worst {
@@ -100,13 +112,26 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
 pub fn scan_lut_topk_u16(qlut: &QuantizedLut, lut: &Lut,
                          index: &CompressedIndex, lo: usize, hi: usize,
                          k: usize) -> Vec<(f32, u32)> {
+    scan_lut_topk_u16_forced(qlut, lut, index, lo, hi, k,
+                             simd::scalar_forced())
+}
+
+/// [`scan_lut_topk_u16`] with dispatch pinned by the caller: tests pass
+/// explicit `force_scalar` values so SIMD-vs-oracle comparisons don't
+/// depend on process-wide environment state.
+pub fn scan_lut_topk_u16_forced(qlut: &QuantizedLut, lut: &Lut,
+                                index: &CompressedIndex, lo: usize,
+                                hi: usize, k: usize, force_scalar: bool)
+                                -> Vec<(f32, u32)> {
     match qlut {
         QuantizedLut::U16 { m, k: kw, tables, .. } => {
-            scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+            if force_scalar || !simd::int_kernel_active() {
+                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+            } else {
+                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
+            }
         }
-        QuantizedLut::U8 { .. } => {
-            panic!("scan_lut_topk_u16 requires a u16-quantized LUT")
-        }
+        _ => panic!("scan_lut_topk_u16 requires a u16-quantized LUT"),
     }
 }
 
@@ -115,13 +140,55 @@ pub fn scan_lut_topk_u16(qlut: &QuantizedLut, lut: &Lut,
 pub fn scan_lut_topk_u8(qlut: &QuantizedLut, lut: &Lut,
                         index: &CompressedIndex, lo: usize, hi: usize,
                         k: usize) -> Vec<(f32, u32)> {
+    scan_lut_topk_u8_forced(qlut, lut, index, lo, hi, k,
+                            simd::scalar_forced())
+}
+
+/// [`scan_lut_topk_u8`] with caller-pinned dispatch (see
+/// [`scan_lut_topk_u16_forced`]).
+pub fn scan_lut_topk_u8_forced(qlut: &QuantizedLut, lut: &Lut,
+                               index: &CompressedIndex, lo: usize,
+                               hi: usize, k: usize, force_scalar: bool)
+                               -> Vec<(f32, u32)> {
     match qlut {
         QuantizedLut::U8 { m, k: kw, tables, .. } => {
-            scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+            if force_scalar || !simd::int_kernel_active() {
+                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+            } else {
+                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
+            }
         }
-        QuantizedLut::U16 { .. } => {
-            panic!("scan_lut_topk_u8 requires a u8-quantized LUT")
+        _ => panic!("scan_lut_topk_u8 requires a u8-quantized LUT"),
+    }
+}
+
+/// Blocked 4-bit fast-scan over `[lo, hi)` — same contract as
+/// [`scan_lut_topk_u16`].  Table rows are a fixed [`U4_ROW`] = 16
+/// entries wide (one vector register), so the scalar oracle is the
+/// shared blocked kernel at `kw = 16` and the SIMD path gathers
+/// in-register with PSHUFB/TBL.
+pub fn scan_lut_topk_u4(qlut: &QuantizedLut, lut: &Lut,
+                        index: &CompressedIndex, lo: usize, hi: usize,
+                        k: usize) -> Vec<(f32, u32)> {
+    scan_lut_topk_u4_forced(qlut, lut, index, lo, hi, k,
+                            simd::scalar_forced())
+}
+
+/// [`scan_lut_topk_u4`] with caller-pinned dispatch (see
+/// [`scan_lut_topk_u16_forced`]).
+pub fn scan_lut_topk_u4_forced(qlut: &QuantizedLut, lut: &Lut,
+                               index: &CompressedIndex, lo: usize,
+                               hi: usize, k: usize, force_scalar: bool)
+                               -> Vec<(f32, u32)> {
+    match qlut {
+        QuantizedLut::U4 { m, tables, .. } => {
+            if force_scalar || !simd::u4_kernel_active() {
+                scan_blocked_int(tables, *m, U4_ROW, lut, index, lo, hi, k)
+            } else {
+                scan_blocked_u4_simd(tables, *m, lut, index, lo, hi, k)
+            }
         }
+        _ => panic!("scan_lut_topk_u4 requires a u4-quantized LUT"),
     }
 }
 
@@ -179,7 +246,7 @@ fn scan_blocked_int<T: Copy + Into<u32>>(
         };
         let mut acc = [0u32; BLOCK];
         for j in 0..stride {
-            // safety: qtables is (stride, k_width); code bytes < k_width
+            // SAFETY: qtables is (stride, k_width); code bytes < k_width
             // by construction (encoders emit ids < K, pad lanes are 0)
             unsafe {
                 let t = qtables.as_ptr().add(j * kw);
@@ -214,6 +281,145 @@ fn scan_blocked_int<T: Copy + Into<u32>>(
             .then(a.1.cmp(&b.1))
     });
     out
+}
+
+/// On-the-fly position-major transpose of one 32-row block for indexes
+/// without a packed mirror (shared by the SIMD drivers; the scalar
+/// kernel keeps its own inline copy verbatim).  Pads missing lanes with
+/// byte 0 — a valid codeword id, computed but never emitted.
+fn gather_block(index: &CompressedIndex, row0: usize,
+                scratch: &mut Vec<u8>) {
+    let stride = index.stride;
+    if scratch.is_empty() {
+        scratch.resize(stride * BLOCK, 0u8);
+    }
+    let rows = (index.n - row0).min(BLOCK);
+    for j in 0..stride {
+        for r in 0..rows {
+            scratch[j * BLOCK + r] = index.codes[(row0 + r) * stride + j];
+        }
+        for r in rows..BLOCK {
+            scratch[j * BLOCK + r] = 0;
+        }
+    }
+}
+
+/// Push one block's accumulator lanes into the running top-k (rows
+/// `[rlo, rhi)` of the block are live; `<=` admits k-th-boundary score
+/// ties so the lexicographic heap keeps the smaller id).
+#[inline]
+fn emit_block(acc: &[u32; BLOCK], row0: usize, rlo: usize, rhi: usize,
+              top: &mut TopK, worst: &mut f32) {
+    for (r, &a) in acc.iter().enumerate().take(rhi).skip(rlo) {
+        let s = a as f32;
+        if s <= *worst {
+            top.push(s, (row0 + r) as u32);
+            *worst = top.worst();
+        }
+    }
+}
+
+/// Exact re-score of an integer-selected candidate set: replace integer
+/// scores with the f32 LUT scores and re-rank under `(score, id)`.
+fn rescore_exact(top: TopK, lut: &Lut, index: &CompressedIndex)
+                 -> Vec<(f32, u32)> {
+    let mut out: Vec<(f32, u32)> = top
+        .into_sorted()
+        .into_iter()
+        .map(|(_, id)| (lut.score(index.code(id as usize)), id))
+        .collect();
+    out.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0).expect("ADC scores are not NaN")
+            .then(a.1.cmp(&b.1))
+    });
+    out
+}
+
+/// SIMD twin of [`scan_blocked_int`]: identical block walk, emit, and
+/// exact re-score; only the 32-lane accumulation is replaced by the
+/// hardware-gather kernel.  The quantized tables are widened to u32
+/// once per scan call (≤ 17 rows × 256 × 4 B, L1-resident) so one
+/// gather shape serves both entry widths.  Integer lane sums are
+/// bit-identical to the scalar kernel (u32 adds reassociate freely),
+/// so results match the oracle exactly — the property tests pin this.
+fn scan_blocked_int_simd<T: Copy + Into<u32>>(
+    qtables: &[T], m: usize, kw: usize, lut: &Lut, index: &CompressedIndex,
+    lo: usize, hi: usize, k: usize) -> Vec<(f32, u32)> {
+    let hi = hi.min(index.n);
+    if lo >= hi {
+        return Vec::new();
+    }
+    let stride = index.stride;
+    debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
+    let widened: Vec<u32> = qtables.iter().map(|&t| t.into()).collect();
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    let mut scratch = Vec::new();
+    let b0 = lo / BLOCK;
+    let b1 = hi.div_ceil(BLOCK);
+    for b in b0..b1 {
+        let row0 = b * BLOCK;
+        let blk: &[u8] = match &index.packed {
+            Some(p) => {
+                debug_assert_eq!(p.n, index.n);
+                p.block(b)
+            }
+            None => {
+                gather_block(index, row0, &mut scratch);
+                &scratch[..]
+            }
+        };
+        let mut acc = [0u32; BLOCK];
+        simd::accumulate_widened(&widened, kw, stride, blk, &mut acc);
+        let rlo = lo.max(row0) - row0;
+        let rhi = hi.min(row0 + BLOCK) - row0;
+        emit_block(&acc, row0, rlo, rhi, &mut top, &mut worst);
+    }
+    rescore_exact(top, lut, index)
+}
+
+/// SIMD 4-bit driver: in-register PSHUFB/TBL gather against the fixed
+/// 16-entry table rows, preferring the packed nibble mirror (half the
+/// code-stream traffic) and falling back to byte-per-code blocks.
+fn scan_blocked_u4_simd(tables: &[u8], m: usize, lut: &Lut,
+                        index: &CompressedIndex, lo: usize, hi: usize,
+                        k: usize) -> Vec<(f32, u32)> {
+    let hi = hi.min(index.n);
+    if lo >= hi {
+        return Vec::new();
+    }
+    let stride = index.stride;
+    debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
+    debug_assert_eq!(tables.len(), m * U4_ROW);
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    let mut scratch = Vec::new();
+    let b0 = lo / BLOCK;
+    let b1 = hi.div_ceil(BLOCK);
+    for b in b0..b1 {
+        let row0 = b * BLOCK;
+        let mut acc = [0u32; BLOCK];
+        match &index.packed {
+            Some(p) => {
+                debug_assert_eq!(p.n, index.n);
+                match p.nibble_block(b) {
+                    Some(nib) => simd::accumulate_u4_nibbles(
+                        tables, stride, nib, &mut acc),
+                    None => simd::accumulate_u4_bytes(
+                        tables, stride, p.block(b), &mut acc),
+                }
+            }
+            None => {
+                gather_block(index, row0, &mut scratch);
+                simd::accumulate_u4_bytes(tables, stride, &scratch,
+                                          &mut acc);
+            }
+        }
+        let rlo = lo.max(row0) - row0;
+        let rhi = hi.min(row0 + BLOCK) - row0;
+        emit_block(&acc, row0, rlo, rhi, &mut top, &mut worst);
+    }
+    rescore_exact(top, lut, index)
 }
 
 /// Generic scan via `Lut::score` (used by the lattice direct path).
@@ -259,15 +465,95 @@ pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
 pub fn scan_range_topk_prec(lut: &Lut, qlut: Option<&QuantizedLut>,
                             index: &CompressedIndex, lo: usize, hi: usize,
                             k: usize) -> Vec<(f32, u32)> {
+    scan_range_topk_prec_forced(lut, qlut, index, lo, hi, k,
+                                simd::scalar_forced())
+}
+
+/// [`scan_range_topk_prec`] with dispatch pinned by the caller (test
+/// and bench entry: compare SIMD and the scalar oracle in one process
+/// without touching environment state).
+pub fn scan_range_topk_prec_forced(lut: &Lut, qlut: Option<&QuantizedLut>,
+                                   index: &CompressedIndex, lo: usize,
+                                   hi: usize, k: usize, force_scalar: bool)
+                                   -> Vec<(f32, u32)> {
     match qlut {
         Some(q @ QuantizedLut::U16 { .. }) => {
-            scan_lut_topk_u16(q, lut, index, lo, hi, k)
+            scan_lut_topk_u16_forced(q, lut, index, lo, hi, k, force_scalar)
         }
         Some(q @ QuantizedLut::U8 { .. }) => {
-            scan_lut_topk_u8(q, lut, index, lo, hi, k)
+            scan_lut_topk_u8_forced(q, lut, index, lo, hi, k, force_scalar)
+        }
+        Some(q @ QuantizedLut::U4 { .. }) => {
+            scan_lut_topk_u4_forced(q, lut, index, lo, hi, k, force_scalar)
         }
         None => scan_range_topk(lut, index, lo, hi, k),
     }
+}
+
+/// Hamming-prune `[lo, hi)` against a query sketch, keeping (at least)
+/// the `keep` rows nearest in sketch space: a histogram over the 65
+/// possible distances picks the smallest threshold whose cumulative
+/// count reaches `keep`, then every row at or under it survives.
+/// Returned ids are ascending.  The threshold is per-range, so ties at
+/// the boundary over-admit rather than under-admit — pruning never cuts
+/// below `keep` survivors (unless the range itself is smaller).
+pub fn prefilter_survivors(sketches: &[u64], qsketch: u64, lo: usize,
+                           hi: usize, keep: usize) -> Vec<u32> {
+    let window = &sketches[lo..hi];
+    let mut hist = [0u32; 65];
+    for &s in window {
+        hist[(s ^ qsketch).count_ones() as usize] += 1;
+    }
+    let mut cum = 0usize;
+    let mut thresh = 64usize;
+    for (d, &c) in hist.iter().enumerate() {
+        cum += c as usize;
+        if cum >= keep {
+            thresh = d;
+            break;
+        }
+    }
+    let mut out = Vec::with_capacity(cum);
+    for (i, &s) in window.iter().enumerate() {
+        if (s ^ qsketch).count_ones() as usize <= thresh {
+            out.push((lo + i) as u32);
+        }
+    }
+    out
+}
+
+/// Pre-filtered range scan (rust/DESIGN.md §9): prune `[lo, hi)` to
+/// `max(k · margin, k)` sketch-nearest survivors by XOR+popcount, then
+/// score only the survivors **exactly in f32**.  Whenever the true
+/// top-k all survive the prune — guaranteed when `keep ≥ hi − lo`, and
+/// what the over-fetch margin buys statistically otherwise — the result
+/// is bit-identical to [`scan_range_topk`]; survivors are never scored
+/// approximately, so the pre-filter composes with the rerank contract
+/// unchanged.
+pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
+                                   sketches: &[u64], qsketch: u64,
+                                   lo: usize, hi: usize, k: usize,
+                                   margin: usize) -> Vec<(f32, u32)> {
+    let hi = hi.min(index.n);
+    if lo >= hi {
+        return Vec::new();
+    }
+    debug_assert_eq!(sketches.len(), index.n);
+    let keep = k.saturating_mul(margin).max(k);
+    if keep >= hi - lo {
+        return scan_range_topk(lut, index, lo, hi, k);
+    }
+    let survivors = prefilter_survivors(sketches, qsketch, lo, hi, keep);
+    let mut top = TopK::new(k);
+    let mut worst = f32::INFINITY;
+    for id in survivors {
+        let s = lut.score(index.code(id as usize));
+        if s < worst {
+            top.push(s, id);
+            worst = top.worst();
+        }
+    }
+    top.into_sorted()
 }
 
 /// Merge several per-shard top-k lists into a global top-k.
@@ -377,8 +663,25 @@ mod tests {
         match bits {
             16 => QuantizedLut::u16_from(lut).expect("tables quantize"),
             8 => QuantizedLut::u8_from(lut).expect("tables quantize"),
+            4 => QuantizedLut::u4_from(lut).expect("tables quantize"),
             _ => unreachable!(),
         }
+    }
+
+    /// 4-bit-friendly index: every code `< 16` (so the packed nibble
+    /// mirror exists and `u4_from` LUTs apply).
+    fn mk_index16(n: usize, stride: usize, seed: u64) -> CompressedIndex {
+        let mut rng = SplitMix64::new(seed);
+        let codes: Vec<u8> =
+            (0..n * stride).map(|_| rng.below(16) as u8).collect();
+        CompressedIndex::from_codes(n, stride, codes)
+    }
+
+    fn mk_lut16(stride: usize, seed: u64) -> Lut {
+        let mut rng = SplitMix64::new(seed);
+        let tables: Vec<f32> =
+            (0..stride * 16).map(|_| rng.next_f32() * 10.0).collect();
+        Lut::Tables { m: stride, k: 16, tables, bias: 1.5 }
     }
 
     #[test]
@@ -481,6 +784,100 @@ mod tests {
     }
 
     #[test]
+    fn prop_simd_scan_matches_scalar_oracle_over_ragged_grid() {
+        // the tentpole contract: for every vectorized path (u16/u8
+        // gather, u4 byte and nibble PSHUFB/TBL) the SIMD kernel's final
+        // top-k equals the verbatim scalar oracle bit-for-bit, across
+        // ragged tails, n < BLOCK, empty subranges, strides, k, widths,
+        // and both packed/unpacked layouts.  On hosts without the
+        // vector ISA both sides run scalar and the property is trivially
+        // (but harmlessly) true — CI runs on AVX2-capable runners.
+        prop::forall_ok(
+            7777,
+            60,
+            |r: &mut SplitMix64| {
+                let n = match r.below(4) {
+                    0 => 1 + r.below(31),            // n < BLOCK
+                    1 => 32 * (1 + r.below(8)),      // exact blocks
+                    _ => 1 + r.below(400),           // ragged
+                };
+                let stride = 1 + r.below(16);
+                let k = 1 + r.below(25);
+                let bits = [16u32, 8, 4][r.below(3)];
+                let packed = r.below(2) == 0;
+                let lo = r.below(n + 1);
+                let hi = lo + r.below(n + 1 - lo);
+                (n, stride, k, bits, packed, lo, hi, r.next_u64())
+            },
+            |&(n, stride, k, bits, packed, lo, hi, seed)| {
+                let (mut idx, lut) = if bits == 4 {
+                    (mk_index16(n, stride, seed), mk_lut16(stride, seed ^ 9))
+                } else {
+                    let (idx, (_, lut)) =
+                        (mk_index(n, stride, seed), mk_lut(stride, seed ^ 9));
+                    (idx, lut)
+                };
+                if packed {
+                    idx.ensure_packed();
+                }
+                let q = quantize(&lut, bits);
+                let scalar = scan_range_topk_prec_forced(
+                    &lut, Some(&q), &idx, lo, hi, k, true);
+                let simd = scan_range_topk_prec_forced(
+                    &lut, Some(&q), &idx, lo, hi, k, false);
+                if scalar == simd {
+                    Ok(())
+                } else {
+                    Err(format!("bits={bits} packed={packed} \
+                                 simd {simd:?} != scalar {scalar:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn dispatch_entry_matches_both_forced_paths() {
+        // whatever UNQ_FORCE_SCALAR / the CPU probe resolve to, the
+        // undecorated entry must agree with BOTH pinned paths — i.e.
+        // dispatch can never change a result (this is what makes the
+        // env knob safe to flip in CI without a baseline change)
+        let mut idx = mk_index16(300, 8, 51);
+        idx.ensure_packed();
+        let lut = mk_lut16(8, 52);
+        for bits in [16u32, 8, 4] {
+            let q = quantize(&lut, bits);
+            let via_env = scan_range_topk_prec(&lut, Some(&q), &idx,
+                                               0, 300, 12);
+            for force in [true, false] {
+                let pinned = scan_range_topk_prec_forced(
+                    &lut, Some(&q), &idx, 0, 300, 12, force);
+                assert_eq!(via_env, pinned, "bits={bits} force={force}");
+            }
+        }
+    }
+
+    #[test]
+    fn u4_scan_prefers_nibble_mirror_and_matches_byte_path() {
+        // packed (nibble mirror) vs unpacked (byte scratch) vs scalar:
+        // all three u4 encodings of the same data must agree exactly
+        let flat = mk_index16(200, 5, 61);
+        let mut packed = mk_index16(200, 5, 61);
+        packed.ensure_packed();
+        assert!(packed.packed.as_ref().unwrap().nibbles.is_some(),
+                "codes < 16 must carry the nibble mirror");
+        let lut = mk_lut16(5, 62);
+        let q = quantize(&lut, 4);
+        let a = scan_range_topk_prec_forced(&lut, Some(&q), &packed,
+                                            0, 200, 9, false);
+        let b = scan_range_topk_prec_forced(&lut, Some(&q), &flat,
+                                            0, 200, 9, false);
+        let c = scan_range_topk_prec_forced(&lut, Some(&q), &packed,
+                                            0, 200, 9, true);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
     fn int_scan_exact_ties_keep_smallest_ids() {
         // duplicate rows: every copy scores identically in both domains;
         // the k smallest ids must win in scan output
@@ -524,5 +921,113 @@ mod tests {
             let merged = merge_topk(parts, 25);
             assert_eq!(merged, full_f32, "bits={bits}");
         }
+    }
+
+    #[test]
+    fn u4_scan_exact_ties_keep_smallest_ids() {
+        // duplicate rows under a u4 LUT: the k smallest ids must win in
+        // both the scalar oracle and the SIMD path
+        let stride = 6;
+        let row: Vec<u8> = (0..stride as u8).collect();
+        let codes: Vec<u8> = row.iter().copied().cycle().take(stride * 50)
+            .collect();
+        let mut idx = CompressedIndex::from_codes(50, stride, codes);
+        idx.ensure_packed();
+        let lut = mk_lut16(stride, 13);
+        let q = quantize(&lut, 4);
+        for force in [true, false] {
+            let got = scan_range_topk_prec_forced(&lut, Some(&q), &idx,
+                                                  0, 50, 7, force);
+            let ids: Vec<u32> = got.iter().map(|p| p.1).collect();
+            assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6], "force={force}");
+        }
+    }
+
+    #[test]
+    fn sharded_u4_scan_merge_equals_full_scan_on_exact_tables() {
+        // tables[c] = c·17 quantizes exactly at 8-bit entries, so u4
+        // integer selection is lossless and the sharded u4 scan must
+        // merge to exactly the full f32 scan (ragged shard boundaries
+        // straddling 32-row blocks included)
+        let mut rng = SplitMix64::new(37);
+        let codes: Vec<u8> = (0..180).map(|_| rng.below(16) as u8).collect();
+        let mut idx = CompressedIndex::from_codes(180, 1, codes);
+        idx.ensure_packed();
+        let tables: Vec<f32> = (0..16).map(|c| (c * 17) as f32).collect();
+        let lut = Lut::Tables { m: 1, k: 16, tables, bias: 0.5 };
+        let full_f32 = scan_topk(&lut, &idx, 20);
+        let q = quantize(&lut, 4);
+        for force in [true, false] {
+            let parts = vec![
+                scan_range_topk_prec_forced(&lut, Some(&q), &idx,
+                                            0, 41, 20, force),
+                scan_range_topk_prec_forced(&lut, Some(&q), &idx,
+                                            41, 150, 20, force),
+                scan_range_topk_prec_forced(&lut, Some(&q), &idx,
+                                            150, 180, 20, force),
+            ];
+            let merged = merge_topk(parts, 20);
+            assert_eq!(merged, full_f32, "force={force}");
+        }
+    }
+
+    #[test]
+    fn prefilter_survivors_threshold_semantics() {
+        // sketches at Hamming distances 0, 1, 1, 2, 3 from the query:
+        // keep = 2 admits the distance-1 tie (3 survivors — over-admit,
+        // never under-admit), keep = 4 reaches distance 2
+        let sk = [0u64, 1, 2, 3, 7];
+        let got = prefilter_survivors(&sk, 0, 0, 5, 2);
+        assert_eq!(got, vec![0, 1, 2]);
+        let got = prefilter_survivors(&sk, 0, 0, 5, 4);
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // keep beyond the range admits everything
+        let got = prefilter_survivors(&sk, 0, 0, 5, 99);
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        // subrange offsets are preserved in the returned ids
+        let got = prefilter_survivors(&sk, 0, 2, 5, 1);
+        assert_eq!(got, vec![2]);
+    }
+
+    #[test]
+    fn prefiltered_scan_with_full_keep_is_bit_identical() {
+        // keep ≥ range: the pre-filter must get out of the way entirely
+        let idx = mk_index(300, 7, 71);
+        let (_, lut) = mk_lut(7, 72);
+        let sketches = vec![0u64; 300]; // content irrelevant at full keep
+        let want = scan_range_topk(&lut, &idx, 20, 260, 10);
+        let got = scan_range_topk_prefiltered(&lut, &idx, &sketches, 0,
+                                              20, 260, 10, 9999);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn prefiltered_scan_with_informative_sketches_recovers_f32_topk() {
+        // deterministic recall-safety: give row of f32-rank r a sketch
+        // with ⌊r·64/n⌋ set bits (qsketch = 0), so sketch distance
+        // orders exactly like the f32 score — the pruned scan must then
+        // return the f32 top-k bit-identically while genuinely pruning
+        // (non-vacuity: keep < range)
+        let n = 320;
+        let idx = mk_index(n, 6, 81);
+        let (_, lut) = mk_lut(6, 82);
+        let mut ranked: Vec<(f32, u32)> = (0..n)
+            .map(|i| (lut.score(idx.code(i)), i as u32))
+            .collect();
+        ranked.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let mut sketches = vec![0u64; n];
+        for (rank, &(_, id)) in ranked.iter().enumerate() {
+            let bits = rank * 64 / n;
+            sketches[id as usize] = (1u64 << bits).wrapping_sub(1);
+        }
+        let k = 10;
+        let margin = 4;
+        assert!(k * margin < n, "prune must actually engage");
+        let want = scan_range_topk(&lut, &idx, 0, n, k);
+        let got = scan_range_topk_prefiltered(&lut, &idx, &sketches, 0,
+                                              0, n, k, margin);
+        assert_eq!(got, want);
     }
 }

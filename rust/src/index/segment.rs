@@ -54,12 +54,13 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{ensure, Context};
 
 use crate::config::{SearchConfig, StreamConfig};
-use crate::exec::{shard_ranges_in, Executor, IndexedScanTask};
+use crate::exec::{shard_ranges_in, Executor, IndexedScanTask,
+                  PrefilterPlan};
 use crate::index::scan::merge_topk;
 use crate::index::CompressedIndex;
 use crate::ivf::CoarseQuantizer;
 use crate::linalg::{sq_l2, TopK};
-use crate::quant::{Lut, Quantizer};
+use crate::quant::{Lut, Quantizer, SketchPlanes};
 use crate::store::wal::{replay, Wal, WalRecord};
 use crate::store::{atomic_write, Store};
 use crate::util::json::Json;
@@ -1079,8 +1080,28 @@ impl StreamingIndex {
         }
         let indexes: Vec<&CompressedIndex> =
             segs.iter().map(|s| s.codes()).collect();
-        let parts = exec.run_scan_tasks_multi_prec(
-            &luts, &indexes, &slot_ks, &tasks, cfg.scan_precision);
+        // the 1-bit pre-filter plan is threaded through like the frozen
+        // paths (query sketches per LUT, non-residual only), but segment
+        // code matrices never build row sketches — mutation would
+        // invalidate them — so today the per-task triple resolution
+        // falls back to the plain precision scan on every task
+        // (DESIGN.md §9; sketch maintenance under mutation is future
+        // work)
+        let pre = if cfg.prefilter && !residual {
+            let planes = SketchPlanes::for_dim(quant.dim());
+            Some(PrefilterPlan {
+                qsketches: queries
+                    .iter()
+                    .map(|q| Some(planes.sketch(q)))
+                    .collect(),
+                margin: cfg.prefilter_margin,
+            })
+        } else {
+            None
+        };
+        let parts = exec.run_scan_tasks_multi_pre(
+            &luts, &indexes, &slot_ks, &tasks, cfg.scan_precision,
+            pre.as_ref());
 
         // per-query reduce: drop tombstones, remap rows to external ids,
         // fold through the lexicographic merge (decomposition-invariant)
@@ -1425,8 +1446,10 @@ mod tests {
                         "f32 diverged (threads={threads}, \
                          segment_rows={segment_rows})"));
                 }
-                // integer precisions under full rerank
-                for precision in [ScanPrecision::U16, ScanPrecision::U8] {
+                // integer precisions under full rerank (U4 exercises the
+                // wide-codebook fallback: PQ carries 32 codewords)
+                for precision in [ScanPrecision::U16, ScanPrecision::U8,
+                                  ScanPrecision::U4] {
                     let cfg = SearchConfig {
                         rerank_l: flat.n, scan_precision: precision,
                         ..f32_cfg
@@ -1444,6 +1467,29 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prefilter_cfg_is_inert_on_streaming_segments() {
+        // segment code matrices never build row sketches, so a prefilter
+        // plan's per-task triple resolution must fall back on every task
+        // — results identical to the plain scan even at an aggressive
+        // margin, across segment boundaries and tombstones
+        let (_, base, queries, pq) = setup(1200);
+        let ix = StreamingIndex::new(8, None, scfg(250));
+        let ids = ix.insert_batch(&pq, &base.data).unwrap();
+        let victims: Vec<u32> = ids.iter().copied().step_by(7).collect();
+        ix.delete_batch(&victims).unwrap();
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let base_cfg = SearchConfig { rerank_l: 50, k: 10,
+                                      ..Default::default() };
+        let want = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks,
+                                      &base_cfg);
+        let cfg = SearchConfig { prefilter: true, prefilter_margin: 1,
+                                 ..base_cfg };
+        let got = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks, &cfg);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Runtime-dispatched SIMD accumulators for the blocked fast-scan
+//! kernels (rust/DESIGN.md §9).
+//!
+//! The scalar kernels in [`super::scan`] stay the semantic oracle; this
+//! module only replaces the *inner accumulation loop* over one 32-row
+//! block with vector code, selected once per process:
+//!
+//! * x86_64 + AVX2 — u8/u16 table rows are widened to u32 once per scan
+//!   call and gathered with `VPGATHERDD`; 4-bit rows (16 × u8, one
+//!   `__m128i`) are gathered in-register with `PSHUFB`.
+//! * aarch64 — NEON is mandatory, so the 4-bit `TBL` kernel is always
+//!   available; u8/u16 stay scalar (NEON has no gather instruction, and
+//!   the scalar 32-lane loop already autovectorizes respectably).
+//! * anything else, or `UNQ_FORCE_SCALAR=1` — scalar fallback.
+//!
+//! Every wrapper here is safe: the feature probe is checked before any
+//! `#[target_feature]` function is entered, and slice geometry is
+//! asserted at the boundary.  Accumulation is bit-identical to the
+//! scalar kernels by construction (integer adds reassociate freely),
+//! which the scan property tests pin down.
+
+// Inner unsafe blocks stay mandatory (and SAFETY-commented) even inside
+// the `unsafe fn` kernels below.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::packed::BLOCK;
+
+/// `UNQ_FORCE_SCALAR` override state: 0 = follow the environment,
+/// 1 = force scalar, 2 = force dispatch (bench baseline toggling).
+static FORCE_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// The environment probe, read once (scans are hot; re-reading the
+/// environment per block would dwarf the kernel).
+static ENV_FORCE: OnceLock<bool> = OnceLock::new();
+
+/// True when the scalar fallback is pinned — by `UNQ_FORCE_SCALAR`
+/// (`1`/`true`/`yes`) or by [`set_force_scalar_for_bench`].
+pub fn scalar_forced() -> bool {
+    match FORCE_OVERRIDE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => *ENV_FORCE.get_or_init(|| {
+            matches!(std::env::var("UNQ_FORCE_SCALAR").ok().as_deref(),
+                     Some("1") | Some("true") | Some("yes"))
+        }),
+    }
+}
+
+/// Process-wide dispatch override for the bench binaries, which time
+/// scalar and SIMD variants in one process.  Tests must NOT use this
+/// (the test harness is parallel); they pass explicit `force_scalar`
+/// arguments to the `_forced` scan entries instead.
+pub fn set_force_scalar_for_bench(force: bool) {
+    FORCE_OVERRIDE.store(if force { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+/// Whether the widened-gather integer kernel (u8/u16 entries) runs in
+/// vector code under current dispatch.
+pub fn int_kernel_active() -> bool {
+    if scalar_forced() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        have_avx2()
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Whether the 4-bit in-register LUT kernel runs in vector code under
+/// current dispatch.
+pub fn u4_kernel_active() -> bool {
+    if scalar_forced() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        have_avx2()
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true // NEON is architecturally mandatory on aarch64
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Human-readable name of the active instruction set (bench/CLI
+/// reporting).
+pub fn active_name() -> &'static str {
+    if scalar_forced() {
+        return "scalar (forced)";
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if have_avx2() { "avx2" } else { "scalar" }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "scalar"
+    }
+}
+
+/// Accumulate one block with u32-widened tables via hardware gather.
+/// Caller must have checked [`int_kernel_active`]; every code byte in
+/// `blk` must be `< kw` (the packed-layout contract — pad lanes are 0).
+pub fn accumulate_widened(widened: &[u32], kw: usize, stride: usize,
+                          blk: &[u8], acc: &mut [u32; BLOCK]) {
+    assert_eq!(widened.len(), stride * kw);
+    assert_eq!(blk.len(), stride * BLOCK);
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: int_kernel_active() gates entry on the runtime AVX2 probe;
+    // slice geometry is asserted above, and code bytes index within each
+    // kw-wide table row by the packed-layout contract.
+    unsafe {
+        avx2::accumulate_widened(widened, kw, stride, blk, acc)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (widened, kw, stride, blk, acc);
+        unreachable!("no widened-gather kernel on this architecture");
+    }
+}
+
+/// Accumulate one block of byte-per-code 4-bit data (each code `< 16`)
+/// against 16-wide u8 table rows.  Caller must have checked
+/// [`u4_kernel_active`]; `stride ≤ 256` (the `u4_from` bound) keeps the
+/// internal 16-bit lanes from overflowing (`256 · 255 < 2¹⁶`).
+pub fn accumulate_u4_bytes(tables: &[u8], stride: usize, blk: &[u8],
+                           acc: &mut [u32; BLOCK]) {
+    assert_eq!(tables.len(), stride * crate::quant::U4_ROW);
+    assert_eq!(blk.len(), stride * BLOCK);
+    assert!(stride <= 256, "u4 rows are bounded by the u4_from ceiling");
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: u4_kernel_active() gates entry on the runtime AVX2 probe;
+    // slice geometry is asserted above and codes are < 16 by contract.
+    unsafe {
+        avx2::accumulate_u4(tables, stride, avx2::U4Source::Bytes(blk), acc)
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is architecturally mandatory on aarch64; slice
+    // geometry is asserted above.
+    unsafe {
+        neon::accumulate_u4(tables, stride, neon::U4Source::Bytes(blk), acc)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (tables, stride, blk, acc);
+        unreachable!("no u4 kernel on this architecture");
+    }
+}
+
+/// Accumulate one block from the packed nibble mirror (16 bytes per
+/// position: lane `i` low nibble, lane `i + 16` high nibble).  Same
+/// contract as [`accumulate_u4_bytes`].
+pub fn accumulate_u4_nibbles(tables: &[u8], stride: usize, nib: &[u8],
+                             acc: &mut [u32; BLOCK]) {
+    assert_eq!(tables.len(), stride * crate::quant::U4_ROW);
+    assert_eq!(nib.len(), stride * (BLOCK / 2));
+    assert!(stride <= 256, "u4 rows are bounded by the u4_from ceiling");
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: u4_kernel_active() gates entry on the runtime AVX2 probe;
+    // slice geometry is asserted above and nibbles are < 16 by layout.
+    unsafe {
+        avx2::accumulate_u4(tables, stride, avx2::U4Source::Nibbles(nib),
+                            acc)
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is architecturally mandatory on aarch64; slice
+    // geometry is asserted above.
+    unsafe {
+        neon::accumulate_u4(tables, stride, neon::U4Source::Nibbles(nib),
+                            acc)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = (tables, stride, nib, acc);
+        unreachable!("no u4 kernel on this architecture");
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::BLOCK;
+    use std::arch::x86_64::*;
+
+    /// One table row per step, 32 lanes as 4 × 8 u32 gathers held in
+    /// registers across the whole position loop.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate_widened(widened: &[u32], kw: usize,
+                                     stride: usize, blk: &[u8],
+                                     acc: &mut [u32; BLOCK]) {
+        // SAFETY: (whole body) caller asserts `widened` is stride × kw
+        // and `blk` is stride × 32; code bytes are < kw so every gather
+        // offset lands inside its table row; loads/stores are unaligned
+        // intrinsics, so no alignment requirement.
+        unsafe {
+            let mut a0 = _mm256_setzero_si256();
+            let mut a1 = _mm256_setzero_si256();
+            let mut a2 = _mm256_setzero_si256();
+            let mut a3 = _mm256_setzero_si256();
+            for j in 0..stride {
+                let t = widened.as_ptr().add(j * kw) as *const i32;
+                let lane = blk.as_ptr().add(j * BLOCK);
+                let i0 = _mm256_cvtepu8_epi32(
+                    _mm_loadl_epi64(lane as *const __m128i));
+                let i1 = _mm256_cvtepu8_epi32(
+                    _mm_loadl_epi64(lane.add(8) as *const __m128i));
+                let i2 = _mm256_cvtepu8_epi32(
+                    _mm_loadl_epi64(lane.add(16) as *const __m128i));
+                let i3 = _mm256_cvtepu8_epi32(
+                    _mm_loadl_epi64(lane.add(24) as *const __m128i));
+                a0 = _mm256_add_epi32(a0, _mm256_i32gather_epi32::<4>(t, i0));
+                a1 = _mm256_add_epi32(a1, _mm256_i32gather_epi32::<4>(t, i1));
+                a2 = _mm256_add_epi32(a2, _mm256_i32gather_epi32::<4>(t, i2));
+                a3 = _mm256_add_epi32(a3, _mm256_i32gather_epi32::<4>(t, i3));
+            }
+            let p = acc.as_mut_ptr();
+            _mm256_storeu_si256(p as *mut __m256i, a0);
+            _mm256_storeu_si256(p.add(8) as *mut __m256i, a1);
+            _mm256_storeu_si256(p.add(16) as *mut __m256i, a2);
+            _mm256_storeu_si256(p.add(24) as *mut __m256i, a3);
+        }
+    }
+
+    /// Where one position's 32 code nibbles come from: a 32-byte
+    /// position row (one code per byte) or its 16-byte nibble mirror.
+    /// A plain enum rather than a generic closure keeps the kernel
+    /// non-generic (a `#[target_feature]` requirement on older rustc).
+    #[derive(Clone, Copy)]
+    pub enum U4Source<'a> {
+        Bytes(&'a [u8]),
+        Nibbles(&'a [u8]),
+    }
+
+    /// Gather 32 u8 entries from one 16-entry row with PSHUFB (the row
+    /// broadcast to both 128-bit lanes), accumulating in u16 lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate_u4(tables: &[u8], stride: usize,
+                                src: U4Source<'_>,
+                                acc: &mut [u32; BLOCK]) {
+        // SAFETY: (whole body) caller asserts `tables` is stride × 16
+        // rows and the source slab is stride × 32 (bytes) or stride × 16
+        // (nibbles), so every load is in bounds; codes are < 16 by
+        // contract, so PSHUFB (which indexes each 128-bit lane by the
+        // low nibble and zeroes on a set high bit) selects real entries;
+        // stride ≤ 256 bounds every u16 lane by 256 · 255 < 2¹⁶ — no
+        // wrap.  Nibble decode: low nibbles are lanes 0..16 and high
+        // nibbles lanes 16..32 by the mirror layout (the 16-bit shift
+        // bleeds bits across byte pairs, masked off by 0x0F).
+        unsafe {
+            let mask = _mm_set1_epi8(0x0F);
+            let mut a0 = _mm256_setzero_si256(); // rows 0..16, u16 lanes
+            let mut a1 = _mm256_setzero_si256(); // rows 16..32
+            for j in 0..stride {
+                let codes = match src {
+                    U4Source::Bytes(blk) => _mm256_loadu_si256(
+                        blk.as_ptr().add(j * BLOCK) as *const __m256i),
+                    U4Source::Nibbles(nib) => {
+                        let packed = _mm_loadu_si128(
+                            nib.as_ptr().add(j * (BLOCK / 2))
+                                as *const __m128i);
+                        let lo = _mm_and_si128(packed, mask);
+                        let hi = _mm_and_si128(_mm_srli_epi16::<4>(packed),
+                                               mask);
+                        _mm256_set_m128i(hi, lo)
+                    }
+                };
+                let row = _mm_loadu_si128(
+                    tables.as_ptr().add(j * 16) as *const __m128i);
+                let row2 = _mm256_broadcastsi128_si256(row);
+                let vals = _mm256_shuffle_epi8(row2, codes);
+                a0 = _mm256_add_epi16(a0, _mm256_cvtepu8_epi16(
+                    _mm256_castsi256_si128(vals)));
+                a1 = _mm256_add_epi16(a1, _mm256_cvtepu8_epi16(
+                    _mm256_extracti128_si256::<1>(vals)));
+            }
+            let p = acc.as_mut_ptr();
+            for (i, a) in [a0, a1].into_iter().enumerate() {
+                let lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(a));
+                let hi = _mm256_cvtepu16_epi32(
+                    _mm256_extracti128_si256::<1>(a));
+                _mm256_storeu_si256(p.add(i * 16) as *mut __m256i, lo);
+                _mm256_storeu_si256(p.add(i * 16 + 8) as *mut __m256i, hi);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::BLOCK;
+    use std::arch::aarch64::*;
+
+    /// Byte-row vs nibble-mirror source, mirroring the AVX2 enum.
+    #[derive(Clone, Copy)]
+    pub enum U4Source<'a> {
+        Bytes(&'a [u8]),
+        Nibbles(&'a [u8]),
+    }
+
+    /// TBL-gather 32 u8 entries per position from one 16-entry row,
+    /// accumulating in u16 lanes (stride ≤ 256 keeps them exact).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accumulate_u4(tables: &[u8], stride: usize,
+                                src: U4Source<'_>,
+                                acc: &mut [u32; BLOCK]) {
+        // SAFETY: (whole body) caller asserts `tables` is stride × 16
+        // rows and the source slab is stride × 32 (bytes) or stride × 16
+        // (nibbles), so every load is in bounds; codes are < 16 by
+        // contract, so TBL (which zeroes out-of-range indices) selects
+        // real entries; stride ≤ 256 bounds every u16 lane by
+        // 256 · 255 < 2¹⁶.  Nibble decode: low nibbles are lanes 0..16
+        // and high nibbles lanes 16..32 by the mirror layout.
+        unsafe {
+            let mut a0 = vdupq_n_u16(0); // rows 0..8
+            let mut a1 = vdupq_n_u16(0); // rows 8..16
+            let mut a2 = vdupq_n_u16(0); // rows 16..24
+            let mut a3 = vdupq_n_u16(0); // rows 24..32
+            for j in 0..stride {
+                let (c0, c1) = match src {
+                    U4Source::Bytes(blk) => {
+                        (vld1q_u8(blk.as_ptr().add(j * BLOCK)),
+                         vld1q_u8(blk.as_ptr().add(j * BLOCK + 16)))
+                    }
+                    U4Source::Nibbles(nib) => {
+                        let packed =
+                            vld1q_u8(nib.as_ptr().add(j * (BLOCK / 2)));
+                        (vandq_u8(packed, vdupq_n_u8(0x0F)),
+                         vshrq_n_u8::<4>(packed))
+                    }
+                };
+                let row = vld1q_u8(tables.as_ptr().add(j * 16));
+                let v0 = vqtbl1q_u8(row, c0);
+                let v1 = vqtbl1q_u8(row, c1);
+                a0 = vaddw_u8(a0, vget_low_u8(v0));
+                a1 = vaddw_u8(a1, vget_high_u8(v0));
+                a2 = vaddw_u8(a2, vget_low_u8(v1));
+                a3 = vaddw_u8(a3, vget_high_u8(v1));
+            }
+            let p = acc.as_mut_ptr();
+            for (i, a) in [a0, a1, a2, a3].into_iter().enumerate() {
+                vst1q_u32(p.add(i * 8), vmovl_u16(vget_low_u16(a)));
+                vst1q_u32(p.add(i * 8 + 4), vmovl_u16(vget_high_u16(a)));
+            }
+        }
+    }
+}

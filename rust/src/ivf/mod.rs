@@ -147,6 +147,16 @@ impl IvfIndex {
     pub fn ensure_packed(&mut self) {
         self.codes.ensure_packed();
     }
+
+    /// Build the 1-bit sign sketches of the per-list code rows for the
+    /// pre-filter stage (DESIGN.md §9).  Sketches live on the shared
+    /// [`CompressedIndex`], so per-list scans prune by the same Hamming
+    /// triple resolution as the flat path.  Returns `false` when the
+    /// quantizer cannot decode (no sketches — searches fall back to the
+    /// plain precision scan).
+    pub fn ensure_sketches(&mut self, quant: &dyn Quantizer) -> bool {
+        self.codes.ensure_sketches(quant)
+    }
 }
 
 /// The serving coordinator's index dispatch: one enum, three index

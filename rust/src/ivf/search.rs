@@ -25,15 +25,20 @@
 //! per-list exactly as on the flat path: residual LUTs quantize
 //! identically (one `QuantizedLut` per slot LUT), integer selection runs
 //! over the shared per-list blocked layout, and survivors are re-scored
-//! in exact f32 before the cross-list merge (rust/DESIGN.md §6).
+//! in exact f32 before the cross-list merge (rust/DESIGN.md §6).  The
+//! 1-bit pre-filter (`SearchConfig::prefilter`, DESIGN.md §9) engages
+//! for non-residual indexes with sketches built
+//! ([`IvfIndex::ensure_sketches`]); residual deployments keep it off —
+//! stored sketches cover raw reconstructions, not residual space.
 
 use std::collections::HashMap;
 
 use crate::config::SearchConfig;
-use crate::exec::{shard_ranges_in, Executor, ScanTask};
+use crate::exec::{shard_ranges_in, Executor, IndexedScanTask, PrefilterPlan,
+                  ScanTask};
 use crate::index::scan::merge_topk;
 use crate::linalg::{sq_l2, TopK};
-use crate::quant::{Lut, Quantizer};
+use crate::quant::{Lut, Quantizer, SketchPlanes};
 
 use super::IvfIndex;
 
@@ -130,8 +135,39 @@ impl IvfIndex {
                 tasks.push(ScanTask { slot, lut: slot_lut[slot], lo, hi });
             }
         }
-        let parts = exec.run_scan_tasks_prec(&luts, &self.codes, &slot_ks,
-                                             &tasks, cfg.scan_precision);
+        // optional 1-bit pre-filter (DESIGN.md §9): non-residual only —
+        // stored sketches cover raw reconstructions, so a residual LUT's
+        // query lives in a different space and the plan stays off.  With
+        // non-residual codes slot LUTs are per query, so query sketches
+        // index by the same `lut` the tasks carry.
+        let pre = if cfg.prefilter && !self.residual
+            && self.codes.sketches.is_some()
+        {
+            let planes = SketchPlanes::for_dim(quant.dim());
+            Some(PrefilterPlan {
+                qsketches: queries
+                    .iter()
+                    .map(|q| Some(planes.sketch(q)))
+                    .collect(),
+                margin: cfg.prefilter_margin,
+            })
+        } else {
+            None
+        };
+        let parts = if pre.is_some() {
+            let mapped: Vec<IndexedScanTask> = tasks
+                .iter()
+                .map(|t| IndexedScanTask {
+                    index: 0, slot: t.slot, lut: t.lut, lo: t.lo, hi: t.hi,
+                })
+                .collect();
+            exec.run_scan_tasks_multi_pre(&luts, &[&self.codes], &slot_ks,
+                                          &mapped, cfg.scan_precision,
+                                          pre.as_ref())
+        } else {
+            exec.run_scan_tasks_prec(&luts, &self.codes, &slot_ks, &tasks,
+                                     cfg.scan_precision)
+        };
 
         // cross-list reduce per query: remap each slot's winners to
         // original ids and fold the per-slot lists through the shared
@@ -389,6 +425,53 @@ mod tests {
             .sum();
         assert!(overlap * 10 >= 10 * qs.len() * 9,
                 "u16 IVF overlap collapsed: {overlap}/{}", 10 * qs.len());
+    }
+
+    #[test]
+    fn prefilter_full_keep_is_bit_identical_on_ivf() {
+        // keep = k·margin covers every probed list outright, so the
+        // pruned per-list scans delegate to the plain kernels and the
+        // whole search must match bit for bit on any executor
+        let (train, base, pq) = setup(2000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 10, 3, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        assert!(ivf.ensure_sketches(&pq), "PQ decodes, sketches must build");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 5);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let base_cfg = SearchConfig { rerank_l: 50, k: 10, nprobe: 4,
+                                      ..Default::default() };
+        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                       &base_cfg);
+        let cfg = SearchConfig { prefilter: true, prefilter_margin: 10_000,
+                                 ..base_cfg };
+        for exec in [Executor::Inline, Executor::new(3)] {
+            let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn prefilter_is_inert_on_residual_ivf() {
+        // stored sketches cover raw reconstructions while residual LUT
+        // queries live in centroid-relative space, so the plan must stay
+        // off for residual indexes even with sketches built — results
+        // identical to the unfiltered search at any margin
+        let (train, base, pq) = setup(1500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 3, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, true);
+        assert!(ivf.ensure_sketches(&pq));
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 4);
+        let qs = qrefs(&queries);
+        let ks = vec![8usize; qs.len()];
+        let base_cfg = SearchConfig { rerank_l: 40, k: 8, nprobe: 3,
+                                      ..Default::default() };
+        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                       &base_cfg);
+        let cfg = SearchConfig { prefilter: true, prefilter_margin: 1,
+                                 ..base_cfg };
+        let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        assert_eq!(got, want);
     }
 
     #[test]

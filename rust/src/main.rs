@@ -135,7 +135,15 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
     if let Some(p) = f.get("precision") {
         cfg.search.scan_precision = ScanPrecision::parse(p)
             .with_context(|| format!("unknown scan precision {p:?} \
-                                      (f32|u16|u8)"))?;
+                                      (f32|u16|u8|u4)"))?;
+    }
+    if f.has("prefilter") {
+        cfg.search.prefilter = true;
+    }
+    if let Some(m) = f.get("prefilter-margin") {
+        let m: usize = m.parse().context("--prefilter-margin")?;
+        anyhow::ensure!(m > 0, "--prefilter-margin must be positive");
+        cfg.search.prefilter_margin = m;
     }
     if f.has("residual") {
         cfg.ivf.residual = true;
@@ -178,7 +186,7 @@ USAGE:
   unq train     --quantizer Q --dataset D [--bytes B]
   unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
   unq ivf-sweep --quantizer Q --dataset D [--nprobes 1,4,16] [--lists N]
-  unq precision-sweep --quantizer Q --dataset D [--precisions f32,u16,u8]
+  unq precision-sweep --quantizer Q --dataset D [--precisions f32,u16,u8,u4]
   unq ingest    --quantizer Q --dataset D [--batch N] [--delete-pct F]
                 [--resume]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
@@ -187,9 +195,15 @@ USAGE:
 
 Execution:  [--threads N] [--shard-rows R] size the batch scan executor
             (also via UNQ_THREADS / UNQ_SHARD_ROWS; defaults: inline);
-            [--precision f32|u16|u8] picks the ADC scan kernel (env
+            [--precision f32|u16|u8|u4] picks the ADC scan kernel (env
             UNQ_SCAN_PRECISION; u16/u8 = blocked integer fast-scan with
-            exact f32 rescore, rust/DESIGN.md §6; default f32)
+            exact f32 rescore, rust/DESIGN.md §6; u4 = in-register
+            16-entry LUT gather for ≤16-codeword quantizers, §9; SIMD
+            kernels auto-dispatch, UNQ_FORCE_SCALAR=1 pins scalar);
+            [--prefilter] [--prefilter-margin N] enable the 1-bit sketch
+            pre-filter that prunes to k·N candidates by Hamming distance
+            before exact scoring (env UNQ_PREFILTER /
+            UNQ_PREFILTER_MARGIN; recall-safe over-fetch, §9)
 Index:      [--backend flat|ivf] [--lists N] [--nprobe P] [--residual]
             pick the index organization for eval/serve (env UNQ_BACKEND /
             UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe 0 = all lists;

@@ -97,13 +97,26 @@ impl Lut {
 /// `m · step / 2`.
 #[derive(Clone, Debug)]
 pub enum QuantizedLut {
-    /// 16-bit entries: integer scores ≤ `m · 65535` (< 2²⁴ for every
-    /// stride we store, so they are also exactly representable as f32).
+    /// 16-bit entries: integer scores ≤ `m · 65535`, and the constructor
+    /// rejects any `m` that could push a score to 2²⁴ or beyond (see
+    /// [`Self::quantize`]), so every integer score is exactly
+    /// representable as f32.
     U16 { m: usize, k: usize, tables: Vec<u16>, step: f32, bias: f32 },
     /// 8-bit entries: coarser (bigger `step`), faster (quarter the table
     /// bytes of f32, denser in L1).
     U8 { m: usize, k: usize, tables: Vec<u8>, step: f32, bias: f32 },
+    /// 4-bit codes with 8-bit entries (the fast-scan layout): only built
+    /// when the source LUT has `k ≤ 16` codewords, so a whole table row
+    /// fits one 16-byte register and the SIMD kernels gather it in-place
+    /// with PSHUFB/TBL (rust/DESIGN.md §9).  `tables` is padded to a
+    /// fixed 16 entries per position (`tables[j·16 + c]`); `k` keeps the
+    /// logical codeword count.  `m ≤ 256` is enforced so 32-lane u16
+    /// accumulators cannot overflow (`256 · 255 < 2¹⁶`).
+    U4 { m: usize, k: usize, tables: Vec<u8>, step: f32, bias: f32 },
 }
+
+/// Fixed row width of the [`QuantizedLut::U4`] tables: one SIMD register.
+pub const U4_ROW: usize = 16;
 
 impl QuantizedLut {
     /// Quantize a [`Lut::Tables`] to u16 entries (`None` for the
@@ -121,12 +134,44 @@ impl QuantizedLut {
         Some(QuantizedLut::U8 { m, k, tables, step, bias })
     }
 
-    /// The width-independent core shared by both constructors: derive
+    /// Quantize a [`Lut::Tables`] to the 4-bit fast-scan layout: u8
+    /// entries laid out in fixed [`U4_ROW`]-wide rows.  `None` when the
+    /// LUT has more than 16 codewords per position (codes would not fit a
+    /// nibble), when `m > 256` (u16 SIMD accumulator lanes could wrap),
+    /// or for direct-scored LUTs — callers fall back to the exact f32
+    /// kernel exactly as for the other widths.
+    pub fn u4_from(lut: &Lut) -> Option<QuantizedLut> {
+        if let Lut::Tables { m, k, .. } = lut {
+            if *k > U4_ROW || *m > 256 {
+                return None;
+            }
+        }
+        let (m, k, vals, step, bias) = Self::quantize(lut, 8)?;
+        let mut tables = vec![0u8; m * U4_ROW];
+        for j in 0..m {
+            for c in 0..k {
+                tables[j * U4_ROW + c] = vals[j * k + c] as u8;
+            }
+        }
+        Some(QuantizedLut::U4 { m, k, tables, step, bias })
+    }
+
+    /// The width-independent core shared by the constructors: derive
     /// the affine map (per-position minima, one step over the widest
     /// range, bias absorbing the minima) and quantize every entry into
     /// `[0, 2^bits − 1]` — the clamp saturates the tails against
     /// rounding fuzz.  Entries come back as u32 and are narrowed by the
     /// callers (every value fits their width by construction).
+    ///
+    /// Rejects (returns `None`) any `(m, bits)` whose worst-case integer
+    /// score `m · (2^bits − 1)` reaches 2²⁴: past that, sums are no
+    /// longer exactly representable as f32, so the blocked kernels'
+    /// lexicographic `(score, id)` selection could silently merge
+    /// distinct integer scores — and at `m ≥ 65536` the u16 kernel's u32
+    /// accumulator lanes would overflow outright.  Rejected LUTs fall
+    /// back to the exact f32 scan through the usual `Option` machinery
+    /// (a wider `step` could not help: the score ceiling is width-driven,
+    /// not range-driven).
     fn quantize(lut: &Lut, bits: u32)
                 -> Option<(usize, usize, Vec<u32>, f32, f32)> {
         let (m, k, tables, bias) = match lut {
@@ -134,6 +179,9 @@ impl QuantizedLut {
             Lut::Direct { .. } => return None,
         };
         let max_code = (1u32 << bits) - 1;
+        if (m as u64) * max_code as u64 >= 1 << 24 {
+            return None;
+        }
         let mut lows = Vec::with_capacity(m);
         let mut step = 0.0f32;
         for j in 0..m {
@@ -171,7 +219,9 @@ impl QuantizedLut {
     #[inline]
     pub fn m(&self) -> usize {
         match self {
-            QuantizedLut::U16 { m, .. } | QuantizedLut::U8 { m, .. } => *m,
+            QuantizedLut::U16 { m, .. }
+            | QuantizedLut::U8 { m, .. }
+            | QuantizedLut::U4 { m, .. } => *m,
         }
     }
 
@@ -180,7 +230,8 @@ impl QuantizedLut {
     pub fn step(&self) -> f32 {
         match self {
             QuantizedLut::U16 { step, .. }
-            | QuantizedLut::U8 { step, .. } => *step,
+            | QuantizedLut::U8 { step, .. }
+            | QuantizedLut::U4 { step, .. } => *step,
         }
     }
 
@@ -211,6 +262,11 @@ impl QuantizedLut {
                 debug_assert_eq!(code.len(), *m);
                 sum_entries(tables, *k, code)
             }
+            QuantizedLut::U4 { m, tables, .. } => {
+                // rows are padded to the fixed U4_ROW width
+                debug_assert_eq!(code.len(), *m);
+                sum_entries(tables, U4_ROW, code)
+            }
         }
     }
 
@@ -219,9 +275,87 @@ impl QuantizedLut {
     pub fn approx(&self, score: u32) -> f32 {
         match self {
             QuantizedLut::U16 { step, bias, .. }
-            | QuantizedLut::U8 { step, bias, .. } => bias + step * score as f32,
+            | QuantizedLut::U8 { step, bias, .. }
+            | QuantizedLut::U4 { step, bias, .. } => {
+                bias + step * score as f32
+            }
         }
     }
+}
+
+/// Bits per 1-bit sketch — one machine word per row.
+pub const SKETCH_BITS: usize = 64;
+
+/// Fixed seed for [`SketchPlanes::for_dim`]: query-side and row-side
+/// sketches must come from the *same* hyperplanes, and deriving them
+/// deterministically from the dimensionality avoids plumbing plane
+/// state through every search path.
+const SKETCH_SEED: u64 = 0x1b17_5eed;
+
+/// The 1-bit sign quantizer behind the scan pre-filter (DESIGN.md §9):
+/// [`SKETCH_BITS`] random hyperplanes; a vector's sketch sets bit `b`
+/// when it lies on the positive side of plane `b`.  The Hamming distance
+/// between two sketches estimates the angle between the vectors (the
+/// classic sign-random-projection bound), which tracks the ADC score
+/// well enough to prune scan candidates under an over-fetch margin.
+pub struct SketchPlanes {
+    pub dim: usize,
+    /// `SKETCH_BITS × dim`, row-major.
+    planes: Vec<f32>,
+}
+
+impl SketchPlanes {
+    /// The canonical planes for a dimensionality (deterministic: every
+    /// caller that agrees on `dim` agrees on the sketch function).
+    pub fn for_dim(dim: usize) -> SketchPlanes {
+        let mut rng = crate::util::rng::SplitMix64::new(SKETCH_SEED);
+        let planes = (0..SKETCH_BITS * dim).map(|_| rng.normal()).collect();
+        SketchPlanes { dim, planes }
+    }
+
+    /// Sign-sketch one vector.
+    pub fn sketch(&self, v: &[f32]) -> u64 {
+        debug_assert_eq!(v.len(), self.dim);
+        let mut bits = 0u64;
+        for b in 0..SKETCH_BITS {
+            let row = &self.planes[b * self.dim..(b + 1) * self.dim];
+            let dot: f32 = row.iter().zip(v).map(|(p, x)| p * x).sum();
+            if dot >= 0.0 {
+                bits |= 1 << b;
+            }
+        }
+        bits
+    }
+}
+
+/// Sign-sketch every row of a code matrix through the quantizer's
+/// decoder: sketches are taken over the *reconstructions*, the same
+/// vectors the ADC scan scores against, so Hamming(q, row) tracks the
+/// scan score.  `None` when the quantizer has no meaningful decoder
+/// (the lattice) — those indexes simply never pre-filter.
+pub fn sketch_codes(quant: &dyn Quantizer, codes: &[u8], stride: usize)
+                    -> Option<Vec<u64>> {
+    assert_eq!(codes.len() % stride.max(1), 0, "codes must be n × stride");
+    let dim = quant.dim();
+    let planes = SketchPlanes::for_dim(dim);
+    let n = codes.len() / stride.max(1);
+    let chunk = 1024usize;
+    let mut out = Vec::with_capacity(n);
+    let mut recons = vec![0.0f32; chunk * dim];
+    let mut lo = 0usize;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let rows = hi - lo;
+        if !quant.reconstruct_batch(&codes[lo * stride..hi * stride],
+                                    &mut recons[..rows * dim]) {
+            return None;
+        }
+        for r in 0..rows {
+            out.push(planes.sketch(&recons[r * dim..(r + 1) * dim]));
+        }
+        lo = hi;
+    }
+    Some(out)
 }
 
 /// A trained quantizer: encoder + distance function (paper §3.1).
@@ -404,6 +538,67 @@ mod tests {
         let lut = Lut::Direct { q: vec![1.0, 0.0], bias: 0.0 };
         assert!(QuantizedLut::u16_from(&lut).is_none());
         assert!(QuantizedLut::u8_from(&lut).is_none());
+        assert!(QuantizedLut::u4_from(&lut).is_none());
+    }
+
+    #[test]
+    fn quantized_lut_u4_error_within_bound() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(11);
+        let (m, k) = (8usize, 16usize);
+        let tables: Vec<f32> =
+            (0..m * k).map(|_| rng.next_f32() * 7.0 - 2.0).collect();
+        let lut = Lut::Tables { m, k, tables, bias: 1.5 };
+        let q = QuantizedLut::u4_from(&lut).unwrap();
+        let bound = q.max_score_error() + 1e-4;
+        for _ in 0..200 {
+            let code: Vec<u8> = (0..m).map(|_| rng.below(k) as u8).collect();
+            let exact = lut.score(&code);
+            let approx = q.approx(q.score_int(&code));
+            assert!((approx - exact).abs() <= bound,
+                    "|{approx} - {exact}| > {bound}");
+        }
+    }
+
+    #[test]
+    fn quantized_lut_u4_rejects_wide_codebooks_and_strides() {
+        let mk = |m: usize, k: usize| Lut::Tables {
+            m, k, tables: vec![1.0; m * k], bias: 0.0,
+        };
+        // k = 17 codewords cannot fit a 16-entry register row
+        assert!(QuantizedLut::u4_from(&mk(4, 17)).is_none());
+        // m = 257 positions would overflow the 16-bit SIMD lane bound
+        assert!(QuantizedLut::u4_from(&mk(257, 2)).is_none());
+        // both at their ceilings: fine
+        assert!(QuantizedLut::u4_from(&mk(256, 16)).is_some());
+    }
+
+    // Satellite regression: integer scores must stay inside the 2^24
+    // exact-f32 window.  u16 entries reach 65535, so the ceiling binds
+    // at m = 257 (257 · 65535 ≥ 2^24) while m = 256 still fits; u8
+    // entries only hit the window at m ≥ 65794, far past any real m.
+    #[test]
+    fn quantized_lut_rejects_scores_past_exact_f32_window() {
+        let mk = |m: usize| Lut::Tables {
+            m, k: 2, tables: vec![1.0; m * 2], bias: 0.0,
+        };
+        assert!(QuantizedLut::u16_from(&mk(256)).is_some());
+        assert!(QuantizedLut::u16_from(&mk(257)).is_none());
+        assert!(QuantizedLut::u8_from(&mk(257)).is_some());
+    }
+
+    #[test]
+    fn sketch_planes_deterministic_and_discriminative() {
+        let p = SketchPlanes::for_dim(8);
+        let v = [1.0, -2.0, 0.5, 3.0, -1.0, 0.25, -0.75, 2.0];
+        let w: Vec<f32> = v.iter().map(|x| -x).collect();
+        let sv = p.sketch(&v);
+        // deterministic: a fresh instance agrees bit-for-bit
+        assert_eq!(sv, SketchPlanes::for_dim(8).sketch(&v));
+        // a vector and its negation disagree on every plane
+        assert_eq!(sv ^ p.sketch(&w), u64::MAX);
+        // self-distance is zero
+        assert_eq!((sv ^ p.sketch(&v)).count_ones(), 0);
     }
 
     #[test]
