@@ -38,6 +38,10 @@ struct Cell {
 }
 
 fn main() {
+    // bracket the whole gate with registry snapshots: the delta rides in
+    // the smoke report so CI artifacts carry rows-scanned / dispatch /
+    // training counters next to the recall numbers (rust/DESIGN.md §10)
+    let obs0 = unq::obs::global().snapshot();
     let mut cfg = AppConfig::default();
     cfg.dataset = "sift1m".into();
     cfg.quantizer = QuantizerKind::Pq;
@@ -193,6 +197,7 @@ fn main() {
                 .map(|c| (c.key.to_string(), Json::Num(c.recall_at10)))
                 .collect(),
         )),
+        ("obs", unq::obs::global().snapshot().delta(&obs0).to_json()),
     ]);
     let out = repo_root("BENCH_recall.smoke.json");
     match std::fs::write(&out, report.render_pretty()) {

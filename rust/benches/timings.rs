@@ -22,6 +22,7 @@ use unq::eval::tables::{table1_timings, table_timings};
 use unq::exec::Executor;
 use unq::index::{simd, CompressedIndex, SearchEngine};
 use unq::ivf::{CoarseQuantizer, IvfIndex};
+use unq::obs;
 use unq::quant::{pq::Pq, Lut};
 use unq::util::bench::Bench;
 use unq::util::json::Json;
@@ -320,26 +321,34 @@ fn main() {
     // separate 16-codeword dataset (with its own f32 reference) drives
     // the u4 in-register path, so its recall@10 delta vs f32 is
     // apples-to-apples.
+    let obs0 = obs::global().snapshot();
     let thread_entries = scan_thread_sweep(&mut b);
     let precision_entries = scan_precision_sweep(
         &mut b, 256,
         &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8]);
     let u4_entries = scan_precision_sweep(
         &mut b, 16, &[ScanPrecision::F32, ScanPrecision::U4]);
+    // the metrics-registry delta over the whole suite rides in the
+    // report: rows scanned per precision, dispatch counts, exec task
+    // latencies (rust/DESIGN.md §10)
+    let obs_scan = obs::global().snapshot().delta(&obs0);
     let report = Json::obj(vec![
         ("bench", Json::Str("scan_suite".into())),
         ("simd_kernel", Json::Str(simd::active_name().to_string())),
         ("thread_sweep", Json::Arr(thread_entries)),
         ("precision_sweep", Json::Arr(precision_entries)),
         ("u4_sweep", Json::Arr(u4_entries)),
+        ("obs", obs_scan.to_json()),
     ]);
     write_report("BENCH_scan.json", &report);
 
     // IVF nprobe throughput/recall sweep on the synthetic set.
+    let obs1 = obs::global().snapshot();
     let entries = ivf_nprobe_sweep(&mut b);
     let report = Json::obj(vec![
         ("bench", Json::Str("ivf_nprobe_sweep".into())),
         ("results", Json::Arr(entries)),
+        ("obs", obs::global().snapshot().delta(&obs1).to_json()),
     ]);
     write_report("BENCH_ivf.json", &report);
 

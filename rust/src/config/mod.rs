@@ -159,6 +159,11 @@ pub struct SearchConfig {
     /// task ≈ `k × this` (env `UNQ_PREFILTER_MARGIN`,
     /// CLI `--prefilter-margin`).
     pub prefilter_margin: usize,
+    /// Per-query span tracing (rust/DESIGN.md §10): when on, searches
+    /// build a span tree (route → scan → rerank …) rendered as EXPLAIN
+    /// by `unq search --explain` and attached to coordinator responses.
+    /// Off = one relaxed atomic load per span site (env `UNQ_TRACE`).
+    pub trace: bool,
 }
 
 impl Default for SearchConfig {
@@ -167,7 +172,8 @@ impl Default for SearchConfig {
                        exhaustive_rerank: false, num_threads: 1,
                        shard_rows: 0, nprobe: 0,
                        scan_precision: ScanPrecision::F32,
-                       prefilter: false, prefilter_margin: 4 }
+                       prefilter: false, prefilter_margin: 4,
+                       trace: false }
     }
 }
 
@@ -374,6 +380,7 @@ impl AppConfig {
                 ("prefilter", Json::Bool(self.search.prefilter)),
                 ("prefilter_margin",
                  Json::Num(self.search.prefilter_margin as f64)),
+                ("trace", Json::Bool(self.search.trace)),
             ])),
             ("ivf", Json::obj(vec![
                 ("backend", Json::Str(self.ivf.backend.name().to_string())),
@@ -461,6 +468,9 @@ impl AppConfig {
             if let Some(v) = s.get("prefilter_margin").and_then(Json::as_usize)
             {
                 cfg.search.prefilter_margin = v;
+            }
+            if let Some(v) = s.get("trace").and_then(Json::as_bool) {
+                cfg.search.trace = v;
             }
         }
         if let Some(s) = j.get("ivf") {
@@ -668,6 +678,13 @@ impl AppConfig {
                 if v > 0 {
                     self.search.prefilter_margin = v;
                 }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_TRACE") {
+            match s.to_ascii_lowercase().as_str() {
+                "1" | "true" | "yes" => self.search.trace = true,
+                "0" | "false" | "no" => self.search.trace = false,
+                _ => {}
             }
         }
         if let Ok(s) = std::env::var("UNQ_LISTS") {
@@ -894,6 +911,19 @@ mod tests {
         let cfg = AppConfig::from_json(&j).unwrap();
         assert!(cfg.search.prefilter);
         assert_eq!(cfg.search.prefilter_margin, 2);
+    }
+
+    #[test]
+    fn trace_roundtrip_defaults_off() {
+        assert!(!AppConfig::default().search.trace, "trace must default off");
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("trace.json");
+        let mut c = AppConfig::default();
+        c.search.trace = true;
+        c.save(&p).unwrap();
+        assert!(AppConfig::from_file(&p).unwrap().search.trace);
+        let j = Json::parse(r#"{"search": {"trace": true}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).unwrap().search.trace);
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct SearchResponse {
     pub neighbors: Vec<u32>,
     /// end-to-end latency observed inside the server
     pub latency_us: u64,
+    /// rendered EXPLAIN span tree for the flushed batch this response
+    /// rode in (rust/DESIGN.md §10); `Some` only when the server's
+    /// `SearchConfig::trace` is on
+    pub trace: Option<String>,
 }
 
 /// An encode request: compress `vectors` (flat rows) into codes.

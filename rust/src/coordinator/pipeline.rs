@@ -307,8 +307,21 @@ fn process_search_batch(state: &ServerState, exec: &Executor,
     let mut cfg = state.search_cfg;
     cfg.shard_rows = state.serve_cfg.shard_rows;
     let ks: Vec<usize> = batch.iter().map(|r| r.k).collect();
-    let results = state.backend.search_batch_on(
-        state.quant.as_ref(), exec, &queries, &ks, &cfg);
+    // one span tree per flushed batch (a batch of one ⇒ per query):
+    // the root opens on this worker thread, the plan's task spans cross
+    // the exec pool through TraceHandle, and the rendered tree rides
+    // back on every response in the batch
+    let (results, rendered) = if cfg.trace {
+        let (trace, root) = crate::obs::Trace::begin("search_batch");
+        let results = state.backend.search_batch_on(
+            state.quant.as_ref(), exec, &queries, &ks, &cfg);
+        drop(root);
+        (results, Some(trace.render()))
+    } else {
+        let results = state.backend.search_batch_on(
+            state.quant.as_ref(), exec, &queries, &ks, &cfg);
+        (results, None)
+    };
     drop(queries);
 
     for (req, neighbors) in batch.into_iter().zip(results) {
@@ -317,6 +330,7 @@ fn process_search_batch(state: &ServerState, exec: &Executor,
         m.completed.fetch_add(1, Ordering::Relaxed);
         let _ = req.resp.send(SearchResponse {
             id: req.id, neighbors, latency_us,
+            trace: rendered.clone(),
         });
     }
 }

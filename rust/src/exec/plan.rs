@@ -25,6 +25,8 @@ use crate::index::scan::{merge_topk, scan_range_topk_prec,
                          scan_range_topk_prefiltered};
 use crate::index::CompressedIndex;
 use crate::linalg::{sq_l2, TopK};
+use crate::obs;
+use crate::obs::span::Trace;
 use crate::quant::{Lut, Quantizer, QuantizedLut};
 
 use super::pool::WorkerPool;
@@ -62,9 +64,28 @@ pub struct PrefilterPlan {
 
 /// One task's scan: the pre-filtered exact path when the plan resolved
 /// row sketches + a query sketch for it, the precision kernel otherwise.
+///
+/// Also the per-task instrumentation point (rust/DESIGN.md §10): rows
+/// are credited to the kernel that actually scans them — the exact f32
+/// kernel for pre-filtered tasks and `None` qluts, the integer kernels
+/// otherwise — in one bulk `fetch_add` per task, and the task gets a
+/// `scan_task` span carrying its row count when a trace is live.
 fn scan_task_part(lut: &Lut, qlut: Option<&QuantizedLut>,
                   ix: &CompressedIndex, lo: usize, hi: usize, k: usize,
                   pf: Option<(&[u64], u64, usize)>) -> Vec<(f32, u32)> {
+    let reg = obs::global();
+    let rows = (hi - lo) as u64;
+    reg.scan_tasks.inc();
+    match (pf.is_some(), qlut) {
+        (true, _) | (false, None) => reg.scan_rows_f32.add(rows),
+        (false, Some(QuantizedLut::U16 { .. })) => {
+            reg.scan_rows_u16.add(rows)
+        }
+        (false, Some(QuantizedLut::U8 { .. })) => reg.scan_rows_u8.add(rows),
+        (false, Some(QuantizedLut::U4 { .. })) => reg.scan_rows_u4.add(rows),
+    }
+    let mut span = crate::span!("scan_task");
+    span.add_rows(rows);
     match pf {
         Some((sketches, qsketch, margin)) => scan_range_topk_prefiltered(
             lut, ix, sketches, qsketch, lo, hi, k, margin),
@@ -253,12 +274,16 @@ impl Executor {
             Executor::Inline => {
                 let mut parts: Vec<Vec<Vec<(f32, u32)>>> =
                     counts.iter().map(|&c| Vec::with_capacity(c)).collect();
-                for t in tasks {
-                    parts[t.slot].push(scan_task_part(
-                        &luts[t.lut], qluts[t.lut].as_ref(),
-                        indexes[t.index], t.lo, t.hi, ks[t.slot],
-                        task_pf(t)));
+                {
+                    let _scan_span = crate::span!("scan");
+                    for t in tasks {
+                        parts[t.slot].push(scan_task_part(
+                            &luts[t.lut], qluts[t.lut].as_ref(),
+                            indexes[t.index], t.lo, t.hi, ks[t.slot],
+                            task_pf(t)));
+                    }
                 }
+                let _merge_span = crate::span!("merge");
                 parts
                     .into_iter()
                     .zip(ks)
@@ -268,6 +293,11 @@ impl Executor {
             Executor::Pool(pool) => {
                 // full-capacity result channel: task sends never block
                 let (tx, rx) = mpsc::sync_channel(tasks.len().max(1));
+                let scan_span = crate::span!("scan");
+                // captured under the open "scan" span so task spans on
+                // worker threads parent to THIS plan's tree (and to no
+                // concurrent plan's) — None when tracing is off
+                let handle = Trace::current_handle();
                 let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                     Vec::with_capacity(tasks.len());
                 for (ti, t) in tasks.iter().enumerate() {
@@ -279,7 +309,9 @@ impl Executor {
                     let (slot, ord) = (t.slot, ords[ti]);
                     let (lo, hi) = (t.lo, t.hi);
                     let pf = task_pf(t);
+                    let handle = handle.clone();
                     jobs.push(Box::new(move || {
+                        let _install = handle.as_ref().map(|h| h.install());
                         let part = scan_task_part(lut, qlut, ix, lo, hi, k,
                                                   pf);
                         let _ = tx.send((slot, ord, part));
@@ -287,6 +319,8 @@ impl Executor {
                 }
                 drop(tx);
                 pool.run_scoped(jobs);
+                drop(scan_span);
+                let _merge_span = crate::span!("merge");
                 // reassemble the grid so each slot merges its parts in
                 // submission order — the determinism requirement
                 let mut grid: Vec<Vec<Option<Vec<(f32, u32)>>>> = counts
@@ -373,6 +407,8 @@ pub fn rerank_batch(quant: &dyn Quantizer, index: &CompressedIndex,
     let dim = quant.dim();
     let cb = index.stride;
     let total: usize = candidates.iter().map(|c| c.len()).sum();
+    let mut span = crate::span!("rerank");
+    span.add_rows(total as u64);
     let mut codes = Vec::with_capacity(total * cb);
     for cands in candidates {
         for &id in cands {
@@ -559,6 +595,105 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn prop_results_bit_identical_with_tracing_on_at_every_precision() {
+        // the observability overhead contract (rust/DESIGN.md §10):
+        // tracing is a read-only side channel, so enabling it changes
+        // NOTHING about results — same ids, same scores, bit for bit —
+        // at every precision, executor, and shard decomposition.  The
+        // collected trace must also account for every scanned row
+        // exactly: tasks cover each of the batch's luts.len() queries
+        // over all n rows once.
+        prop::forall_ok(
+            7207,
+            10,
+            |r: &mut SplitMix64| {
+                let n = 50 + r.below(600);
+                let stride = 1 + r.below(8);
+                let threads = 1 + r.below(4);
+                let shard_rows = [1usize, 13, 64, 300][r.below(4)];
+                let k = 1 + r.below(25);
+                let prec = [ScanPrecision::F32, ScanPrecision::U16,
+                            ScanPrecision::U8, ScanPrecision::U4]
+                    [r.below(4)];
+                (n, stride, threads, shard_rows, k, prec, r.next_u64())
+            },
+            |&(n, stride, threads, shard_rows, k, prec, seed)| {
+                let u4 = prec == ScanPrecision::U4;
+                let idx = if u4 {
+                    mk_index16(n, stride, seed)
+                } else {
+                    mk_index(n, stride, seed)
+                };
+                let luts: Vec<Lut> = (0..3)
+                    .map(|i| if u4 {
+                        mk_lut16(stride, seed ^ (i + 3))
+                    } else {
+                        mk_lut(stride, seed ^ (i + 3))
+                    })
+                    .collect();
+                let ks = vec![k; luts.len()];
+                let exec = Executor::new(threads);
+                let want =
+                    exec.scan_batch_prec(&luts, &idx, &ks, shard_rows, prec);
+                let (trace, root) = crate::obs::Trace::begin("query");
+                let got =
+                    exec.scan_batch_prec(&luts, &idx, &ks, shard_rows, prec);
+                drop(root);
+                if got != want {
+                    return Err(format!(
+                        "{prec:?} threads={threads} shard_rows={shard_rows} \
+                         results changed under tracing"
+                    ));
+                }
+                let scanned = trace.rows("scan_task");
+                let expect = (luts.len() * n) as u64;
+                if scanned != expect {
+                    return Err(format!(
+                        "trace accounted {scanned} rows, scanned {expect}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_traces_on_shared_pool_do_not_cross_leak() {
+        // two queries tracing simultaneously over ONE worker pool: each
+        // trace must account exactly its own workload's rows (leakage
+        // across the shared workers would over-count one side and
+        // under-count the other).  The per-job TraceHandle install is
+        // what this pins — workers interleave jobs from both traces.
+        let exec = Executor::new(3);
+        let idx_a = mk_index(400, 4, 91);
+        let idx_b = mk_index(250, 4, 92);
+        std::thread::scope(|s| {
+            let ha = s.spawn(|| {
+                let luts = vec![mk_lut(4, 7)];
+                let ks = [9usize];
+                let (trace, root) = crate::obs::Trace::begin("qa");
+                for _ in 0..8 {
+                    let _ = exec.scan_batch(&luts, &idx_a, &ks, 32);
+                }
+                drop(root);
+                trace.rows("scan_task")
+            });
+            let hb = s.spawn(|| {
+                let luts = vec![mk_lut(4, 8)];
+                let ks = [9usize];
+                let (trace, root) = crate::obs::Trace::begin("qb");
+                for _ in 0..8 {
+                    let _ = exec.scan_batch(&luts, &idx_b, &ks, 32);
+                }
+                drop(root);
+                trace.rows("scan_task")
+            });
+            assert_eq!(ha.join().unwrap(), 8 * 400);
+            assert_eq!(hb.join().unwrap(), 8 * 250);
+        });
     }
 
     #[test]

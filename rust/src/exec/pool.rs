@@ -18,6 +18,9 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::obs;
 
 /// A unit of work executed on a pool thread.
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -59,6 +62,8 @@ impl WorkerPool {
 
     /// Submit one `'static` job; blocks when the bounded queue is full.
     pub fn spawn(&self, job: Job) {
+        // queue depth = jobs submitted but not yet picked up by a worker
+        obs::global().exec_queue_depth.inc();
         self.tx
             .as_ref()
             .expect("pool is shut down")
@@ -132,7 +137,12 @@ fn worker_main(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
             // submitting scope observes the failure through its completion
             // channel; the pool thread lives on to serve later batches.
             Ok(job) => {
+                let reg = obs::global();
+                reg.exec_queue_depth.dec();
+                let t0 = Instant::now();
                 let _ = catch_unwind(AssertUnwindSafe(job));
+                reg.exec_tasks.inc();
+                reg.exec_task_us.record(t0.elapsed().as_micros() as u64);
             }
             Err(_) => break, // queue closed: graceful shutdown
         }

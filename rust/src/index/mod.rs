@@ -176,7 +176,11 @@ impl<'a> SearchEngine<'a> {
         if queries.is_empty() {
             return Vec::new();
         }
-        let luts = self.quant.lut_batch(queries);
+        let luts = {
+            let mut span = crate::span!("lut_build");
+            span.add_rows(queries.len() as u64);
+            self.quant.lut_batch(queries)
+        };
         let ks = vec![self.cfg.k; queries.len()];
         self.search_batch_with_luts_on(exec, queries, &luts, &ks)
     }

@@ -31,6 +31,7 @@
 //!   and re-score the surviving candidate set exactly.
 
 use crate::linalg::TopK;
+use crate::obs;
 use crate::quant::{Lut, QuantizedLut, U4_ROW};
 
 use super::packed::BLOCK;
@@ -126,8 +127,10 @@ pub fn scan_lut_topk_u16_forced(qlut: &QuantizedLut, lut: &Lut,
     match qlut {
         QuantizedLut::U16 { m, k: kw, tables, .. } => {
             if force_scalar || !simd::int_kernel_active() {
+                obs::global().simd_dispatch_scalar.inc();
                 scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
             } else {
+                obs::global().simd_dispatch_simd.inc();
                 scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
             }
         }
@@ -153,8 +156,10 @@ pub fn scan_lut_topk_u8_forced(qlut: &QuantizedLut, lut: &Lut,
     match qlut {
         QuantizedLut::U8 { m, k: kw, tables, .. } => {
             if force_scalar || !simd::int_kernel_active() {
+                obs::global().simd_dispatch_scalar.inc();
                 scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
             } else {
+                obs::global().simd_dispatch_simd.inc();
                 scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
             }
         }
@@ -183,8 +188,10 @@ pub fn scan_lut_topk_u4_forced(qlut: &QuantizedLut, lut: &Lut,
     match qlut {
         QuantizedLut::U4 { m, tables, .. } => {
             if force_scalar || !simd::u4_kernel_active() {
+                obs::global().simd_dispatch_scalar.inc();
                 scan_blocked_int(tables, *m, U4_ROW, lut, index, lo, hi, k)
             } else {
+                obs::global().simd_dispatch_simd.inc();
                 scan_blocked_u4_simd(tables, *m, lut, index, lo, hi, k)
             }
         }
@@ -543,7 +550,19 @@ pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
     if keep >= hi - lo {
         return scan_range_topk(lut, index, lo, hi, k);
     }
-    let survivors = prefilter_survivors(sketches, qsketch, lo, hi, keep);
+    let survivors = {
+        let mut span = crate::span!("prefilter");
+        let survivors =
+            prefilter_survivors(sketches, qsketch, lo, hi, keep);
+        let reg = obs::global();
+        reg.prefilter_admitted.add(survivors.len() as u64);
+        reg.prefilter_rejected
+            .add(((hi - lo) - survivors.len()) as u64);
+        span.add_rows(survivors.len() as u64);
+        survivors
+    };
+    let mut span = crate::span!("rescore");
+    span.add_rows(survivors.len() as u64);
     let mut top = TopK::new(k);
     let mut worst = f32::INFINITY;
     for id in survivors {

@@ -743,6 +743,7 @@ impl StreamingIndex {
     }
 
     fn compact_locked(&self, w: &mut Writer) -> Result<bool> {
+        let t0 = std::time::Instant::now();
         let snap = self.snapshot();
         let sealed_dead: usize =
             snap.sealed.iter().map(|s| s.n_dead).sum();
@@ -809,6 +810,9 @@ impl StreamingIndex {
         if w.durable.is_some() {
             self.checkpoint(w, &self.snapshot())?;
         }
+        let reg = crate::obs::global();
+        reg.compaction_runs.inc();
+        reg.compaction_us.record(t0.elapsed().as_micros() as u64);
         Ok(true)
     }
 
@@ -1049,6 +1053,7 @@ impl StreamingIndex {
         let mut slot_seg: Vec<usize> = Vec::new();
         let mut slot_ks: Vec<usize> = Vec::new();
         let mut tasks: Vec<IndexedScanTask> = Vec::new();
+        let mut overfetch = 0u64;
         for (qi, probe) in probes.iter().enumerate() {
             for (pi, &l) in probe.iter().enumerate() {
                 for (si, seg) in segs.iter().enumerate() {
@@ -1065,7 +1070,9 @@ impl StreamingIndex {
                     // tombstones, so this over-fetch stays lossless while
                     // bounding heap work when lists are much smaller than
                     // the segment's total dead count
-                    slot_ks.push(ls[qi] + seg.n_dead.min(hi - lo));
+                    let extra = seg.n_dead.min(hi - lo);
+                    overfetch += extra as u64;
+                    slot_ks.push(ls[qi] + extra);
                     for (a, b) in shard_ranges_in(lo, hi, es) {
                         tasks.push(IndexedScanTask {
                             index: si,
@@ -1078,6 +1085,12 @@ impl StreamingIndex {
                 }
             }
         }
+        // segment fan-out evidence: one "segment scanned" per
+        // (query, probed list, segment) slot, plus the tombstone
+        // over-fetch this batch paid across all slots
+        let reg = crate::obs::global();
+        reg.stream_segments_scanned.add(slot_ks.len() as u64);
+        reg.stream_overfetch_rows.add(overfetch);
         let indexes: Vec<&CompressedIndex> =
             segs.iter().map(|s| s.codes()).collect();
         // the 1-bit pre-filter plan is threaded through like the frozen

@@ -38,6 +38,7 @@ use crate::exec::{shard_ranges_in, Executor, IndexedScanTask, PrefilterPlan,
                   ScanTask};
 use crate::index::scan::merge_topk;
 use crate::linalg::{sq_l2, TopK};
+use crate::obs;
 use crate::quant::{Lut, Quantizer, SketchPlanes};
 
 use super::IvfIndex;
@@ -83,10 +84,17 @@ impl IvfIndex {
             .collect();
 
         // coarse selection
-        let probes: Vec<Vec<u32>> = queries
-            .iter()
-            .map(|q| self.coarse.nearest_lists(q, nprobe))
-            .collect();
+        let probes: Vec<Vec<u32>> = {
+            let mut span = crate::span!("route");
+            let probes: Vec<Vec<u32>> = queries
+                .iter()
+                .map(|q| self.coarse.nearest_lists(q, nprobe))
+                .collect();
+            let probed: usize = probes.iter().map(Vec::len).sum();
+            obs::global().ivf_lists_probed.add(probed as u64);
+            span.add_rows(probed as u64);
+            probes
+        };
 
         // one slot per non-empty (query, probed list); LUTs are shared
         // per query (non-residual) or built per slot from the residual
@@ -115,12 +123,19 @@ impl IvfIndex {
                 slot_ks.push(ls[qi]);
             }
         }
-        let luts: Vec<Lut> = if self.residual {
-            let refs: Vec<&[f32]> =
-                residual_qs.iter().map(|v| v.as_slice()).collect();
-            quant.lut_batch(&refs)
-        } else {
-            quant.lut_batch(queries)
+        let luts: Vec<Lut> = {
+            let mut span = crate::span!("lut_build");
+            let luts = if self.residual {
+                obs::global().ivf_residual_luts
+                    .add(residual_qs.len() as u64);
+                let refs: Vec<&[f32]> =
+                    residual_qs.iter().map(|v| v.as_slice()).collect();
+                quant.lut_batch(&refs)
+            } else {
+                quant.lut_batch(queries)
+            };
+            span.add_rows(luts.len() as u64);
+            luts
         };
 
         // shard each slot's list range; shard size derives from the whole
@@ -228,6 +243,8 @@ impl IvfIndex {
         let dim = quant.dim();
         let cb = self.codes.stride;
         let total: usize = cands.iter().map(|c| c.len()).sum();
+        let mut span = crate::span!("rerank");
+        span.add_rows(total as u64);
         let mut codes = Vec::with_capacity(total * cb);
         for c in cands {
             for &(_, _, row, _) in c {
@@ -370,6 +387,38 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn tracing_is_inert_on_ivf_results_and_accounts_spans() {
+        // observability on the IVF path (rust/DESIGN.md §10): a live
+        // trace changes nothing about results, and the collected tree
+        // names every stage with routing fan-out carried in `rows`
+        let (train, base, pq) = setup(1500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 3, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 6);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 60, k: 10, nprobe: 3,
+                                 num_threads: 2, shard_rows: 128,
+                                 ..Default::default() };
+        let exec = Executor::new(2);
+        let want = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        let (trace, root) = crate::obs::Trace::begin("query");
+        let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        drop(root);
+        assert_eq!(got, want, "tracing changed IVF results");
+        let probed = trace.rows("route");
+        assert!(probed >= qs.len() as u64
+                    && probed <= (3 * qs.len()) as u64,
+                "lists probed {probed} outside [{}, {}]", qs.len(),
+                3 * qs.len());
+        assert!(trace.rows("scan_task") > 0, "tasks must account rows");
+        let txt = trace.render();
+        for stage in ["route", "lut_build", "scan", "rerank"] {
+            assert!(txt.contains(stage), "missing {stage} in:\n{txt}");
+        }
     }
 
     #[test]

@@ -83,6 +83,11 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
     if let Some(b) = f.get("bytes") {
         cfg.bytes_per_vector = b.parse().context("--bytes")?;
     }
+    if let Some(kc) = f.get("codewords") {
+        let kc: usize = kc.parse().context("--codewords")?;
+        anyhow::ensure!(kc > 0, "--codewords must be positive");
+        cfg.k_codewords = kc;
+    }
     if let Some(s) = f.get("scale") {
         cfg.scale = s.parse().context("--scale")?;
     }
@@ -158,7 +163,7 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
 
 fn run(args: &[String]) -> Result<()> {
     let f = Flags::parse(args)?;
-    match f.cmd.as_str() {
+    let res = match f.cmd.as_str() {
         "gen-data" => cmd_gen_data(&f),
         "gt" => cmd_gt(&f),
         "train" => cmd_train(&f),
@@ -166,6 +171,8 @@ fn run(args: &[String]) -> Result<()> {
         "ivf-sweep" => cmd_ivf_sweep(&f),
         "precision-sweep" => cmd_precision_sweep(&f),
         "ingest" => cmd_ingest(&f),
+        "search" => cmd_search(&f),
+        "stats" => cmd_stats(&f),
         "tables" => tables::cmd_tables(&f),
         "serve" => cmd_serve(&f),
         "artifacts" => cmd_artifacts(&f),
@@ -174,7 +181,29 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown subcommand {other:?} (try `unq help`)"),
+    };
+    // Work-doing verbs leave their metrics snapshot behind for a later
+    // `unq stats` (a fresh process cannot see this one's counters).
+    const WORK_VERBS: [&str; 7] = ["train", "eval", "ivf-sweep",
+                                   "precision-sweep", "ingest", "search",
+                                   "serve"];
+    if res.is_ok() && WORK_VERBS.contains(&f.cmd.as_str()) {
+        if let Ok(cfg) = base_config(&f) {
+            write_obs_stats(&cfg)?;
+        }
     }
+    res
+}
+
+/// Persist the global metrics snapshot to `<runs_dir>/obs_stats.json`
+/// (rust/DESIGN.md §10) so `unq stats` can inspect the last run.
+fn write_obs_stats(cfg: &AppConfig) -> Result<()> {
+    let snap = unq::obs::global().snapshot();
+    std::fs::create_dir_all(&cfg.runs_dir)?;
+    let path = cfg.runs_dir.join("obs_stats.json");
+    std::fs::write(&path, snap.to_json().render_pretty())
+        .with_context(|| format!("write {path:?}"))?;
+    Ok(())
 }
 
 const HELP: &str = "\
@@ -189,6 +218,9 @@ USAGE:
   unq precision-sweep --quantizer Q --dataset D [--precisions f32,u16,u8,u4]
   unq ingest    --quantizer Q --dataset D [--batch N] [--delete-pct F]
                 [--resume]
+  unq search    --quantizer Q --dataset D [--query I] [--queries N] [--k K]
+                [--explain]
+  unq stats     [--json] [--schema FILE]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
   unq serve     --dataset D [--quantizer Q] [--queries N]
   unq artifacts
@@ -220,7 +252,15 @@ Quantizers: pq opq rvq lsq lsq+rerank catalyst-lattice catalyst-opq unq
             knobs: [--native-epochs N] [--native-hidden H]
             [--native-seed S], env UNQ_NATIVE_EPOCHS / UNQ_NATIVE_HIDDEN
             / UNQ_NATIVE_BATCH / UNQ_NATIVE_LR / UNQ_NATIVE_SEED, or the
-            `unq_native` config section; rust/DESIGN.md §8)
+            `unq_native` config section; rust/DESIGN.md §8).
+            [--codewords K] overrides the paper's 256-entry codebooks —
+            mostly for tiny smoke runs where 256 exceeds the train split
+Observability: `unq search --explain` prints the per-query span tree
+            (route → scan → rerank …, self-times and rows; DESIGN.md
+            §10); every work-doing verb writes its metrics snapshot to
+            runs/obs_stats.json, which `unq stats` renders ([--json] for
+            the raw snapshot, [--schema FILE] to validate it; env
+            UNQ_TRACE=1 turns span tracing on everywhere)
 Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see
             rust/DESIGN.md)
 ";
@@ -418,6 +458,17 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
     use unq::ivf::CoarseQuantizer;
 
     let cfg = base_config(f)?;
+    // bracket the run with metrics snapshots: everything below reports
+    // through the obs registry delta instead of ad-hoc stopwatches
+    // (rust/DESIGN.md §10)
+    let obs0 = unq::obs::global().snapshot();
+    let obs_summary = |label: &str| {
+        let d = unq::obs::global().snapshot().delta(&obs0);
+        println!("[ingest] observability ({label}):");
+        for line in d.render_human().lines() {
+            println!("  {line}");
+        }
+    };
     let batch: usize =
         f.get("batch").map(|v| v.parse()).transpose()?.unwrap_or(1024);
     let delete_pct: f64 = f
@@ -477,6 +528,17 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
         ids.len(), ins_secs, ids.len() as f64 / ins_secs.max(1e-9),
         cfg.stream.wal_sync
     );
+    {
+        let d = unq::obs::global().snapshot().delta(&obs0);
+        println!(
+            "[ingest] wal: {} appends, {} commits, fsync p50 {}µs \
+             p99 {}µs max {}µs",
+            d.counter("wal.appends"), d.counter("wal.commits"),
+            d.hist("wal.fsync_us").map_or(0, |h| h.quantile_us(0.50)),
+            d.hist("wal.fsync_us").map_or(0, |h| h.quantile_us(0.99)),
+            d.hist("wal.fsync_us").map_or(0, |h| h.max_us)
+        );
+    }
 
     // tombstone an evenly-spaced delete_pct fraction, then compact
     // (fractional accumulator, exact for any percentage — a rounded
@@ -490,17 +552,18 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
             victims.push(id);
         }
     }
-    let t1 = std::time::Instant::now();
     let removed = if victims.is_empty() { 0 }
                   else { ix.delete_batch(&victims)? };
     let compacted = ix.compact()?;
     let st = ix.stats();
+    let comp = unq::obs::global().snapshot().delta(&obs0);
     println!(
-        "[ingest] deleted {removed}, compact(merged={compacted}) in \
-         {:.2}s → {} live / {} total rows, {} sealed segment(s), \
+        "[ingest] deleted {removed}, compact(merged={compacted}, {} run(s), \
+         {}µs max) → {} live / {} total rows, {} sealed segment(s), \
          generation {}",
-        t1.elapsed().as_secs_f64(), st.live_rows, st.total_rows,
-        st.sealed_segments, st.generation
+        comp.counter("compaction.runs"),
+        comp.hist("compaction.duration_us").map_or(0, |h| h.max_us),
+        st.live_rows, st.total_rows, st.sealed_segments, st.generation
     );
 
     // read-path verification vs a flat rebuild of the survivors (exact
@@ -514,6 +577,7 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
              live rows before this run) — live-vs-rebuild verification \
              skipped (external ids no longer map to base rows)"
         );
+        obs_summary("write path");
         return Ok(());
     }
     let survivors: Vec<u32> = ids
@@ -557,6 +621,121 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
          vs flat rebuild: {same}/{nq} identical, overlap {overlap}/{total}",
         1e3 * q_secs, 1e3 * q_secs / nq.max(1) as f64
     );
+    obs_summary("write + read path");
+    Ok(())
+}
+
+/// `unq search` — ad-hoc queries through the batch engine; `--explain`
+/// prints the per-query span tree (rust/DESIGN.md §10) next to the
+/// neighbor ids.
+fn cmd_search(f: &Flags) -> Result<()> {
+    use unq::exec::Executor;
+
+    let cfg = base_config(f)?;
+    let variant = f.get("variant").unwrap_or("");
+    let mut exp = harness::prepare(&cfg, variant)?;
+    let mut search = harness::paper_search_config(cfg.quantizer, &cfg.dataset,
+                                                  cfg.search.k);
+    search.no_rerank |= cfg.search.no_rerank;
+    search.exhaustive_rerank = cfg.search.exhaustive_rerank;
+    search.num_threads = cfg.search.num_threads;
+    search.shard_rows = cfg.search.shard_rows;
+    search.nprobe = cfg.search.nprobe;
+    search.scan_precision = cfg.search.scan_precision;
+    if let Some(k) = f.get("k") {
+        search.k = k.parse().context("--k")?;
+    }
+    let explain = f.has("explain") || cfg.search.trace;
+    search.trace = explain;
+
+    let qi: usize =
+        f.get("query").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let nq: usize =
+        f.get("queries").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let total = exp.splits.query.len();
+    anyhow::ensure!(nq > 0, "--queries must be positive");
+    anyhow::ensure!(qi + nq <= total,
+                    "query range {qi}..{} exceeds the {total}-query set",
+                    qi + nq);
+    let queries: Vec<&[f32]> =
+        (qi..qi + nq).map(|i| exp.splits.query.row(i)).collect();
+
+    if search.scan_precision != ScanPrecision::F32 {
+        exp.index.ensure_packed();
+    }
+    let exec = Executor::new(search.num_threads);
+    let run = |exp: &harness::Experiment| -> Result<Vec<Vec<u32>>> {
+        if cfg.ivf.backend == IndexBackendKind::Ivf {
+            let ivf = harness::build_or_load_ivf(
+                &cfg, exp.quant.as_ref(), &exp.splits.train,
+                &exp.splits.base, variant)?;
+            let ks = vec![search.k; queries.len()];
+            Ok(ivf.search_batch_on(exp.quant.as_ref(), &exec, &queries, &ks,
+                                   &search))
+        } else {
+            let engine = unq::index::SearchEngine::new(exp.quant.as_ref(),
+                                                       &exp.index, search);
+            Ok(engine.search_batch_on(&exec, &queries))
+        }
+    };
+
+    let t0 = std::time::Instant::now();
+    let (results, trace) = if explain {
+        let (trace, root) = unq::obs::Trace::begin("search");
+        let r = run(&exp)?;
+        drop(root);
+        (r, Some(trace))
+    } else {
+        (run(&exp)?, None)
+    };
+    let secs = t0.elapsed().as_secs_f64();
+
+    for (i, ids) in results.iter().enumerate() {
+        println!("[search] query {}: top-{} {:?}", qi + i, search.k, ids);
+    }
+    println!("[search] {} quer{} in {:.2} ms ({:.3} ms/query)",
+             nq, if nq == 1 { "y" } else { "ies" }, 1e3 * secs,
+             1e3 * secs / nq as f64);
+    if let Some(trace) = trace {
+        println!("[search] EXPLAIN ({} spans):", trace.len());
+        print!("{}", trace.render());
+    }
+    Ok(())
+}
+
+/// `unq stats` — render the metrics snapshot the last work-doing verb
+/// left at `<runs_dir>/obs_stats.json` (rust/DESIGN.md §10).
+fn cmd_stats(f: &Flags) -> Result<()> {
+    use unq::util::json::Json;
+
+    let cfg = base_config(f)?;
+    let path = cfg.runs_dir.join("obs_stats.json");
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!("read {path:?} — run a work-doing verb \
+                 (eval/ingest/search/...) first")
+    })?;
+    let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+    let snap = unq::obs::MetricsSnapshot::from_json(&j)
+        .with_context(|| format!("decode snapshot {path:?}"))?;
+    if let Some(sp) = f.get("schema") {
+        let sj = Json::parse(
+            &std::fs::read_to_string(sp).with_context(|| format!("read {sp}"))?,
+        )
+        .with_context(|| format!("parse schema {sp}"))?;
+        let violations = snap.check_schema(&sj);
+        if !violations.is_empty() {
+            for v in &violations {
+                eprintln!("[stats] schema violation: {v}");
+            }
+            bail!("{} schema violation(s) against {sp}", violations.len());
+        }
+        println!("[stats] snapshot satisfies schema {sp}");
+    }
+    if f.has("json") {
+        println!("{}", snap.to_json().render_pretty());
+    } else {
+        print!("{}", snap.render_human());
+    }
     Ok(())
 }
 

@@ -1,0 +1,314 @@
+//! Log-bucketed latency histogram: the crate-wide timing substrate
+//! (generalized out of `coordinator/metrics.rs`, which now re-exports
+//! it — rust/DESIGN.md §10).
+//!
+//! 64 buckets at true √2 spacing cover 1 µs … 2³² µs (~71 min);
+//! recording is a single relaxed `fetch_add` per field, safe from any
+//! thread.  Bucket `i` holds values in `[lower(i), lower(i+1))` with
+//! `lower(2·k) = 2^k` and `lower(2·k + 1) = ⌈√2·2^k⌉` — the half-bucket
+//! boundary is exact (`us ≥ √2·2^k  ⇔  us² ≥ 2^(2k+1)`, compared in
+//! u128), fixing the old `coordinator/metrics.rs` condition that tested
+//! the top bit of `us` (vacuously true) and placed the boundary at
+//! `1.5·2^k`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: two per power of two over 32 octaves.
+pub const BUCKETS: usize = 64;
+
+/// Log-bucketed latency histogram over microseconds.
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Smallest value of bucket `i` (the bucket covers
+/// `[lower(i), lower(i+1))`; the last bucket is open-ended).
+#[inline]
+pub(crate) fn bucket_lower(i: usize) -> u64 {
+    let log2 = i / 2;
+    if i % 2 == 0 {
+        1u64 << log2
+    } else {
+        // ⌈√2 · 2^log2⌉ = ⌊√(2^(2·log2+1))⌋ + 1: 2^(odd) is never a
+        // perfect square, so floor + 1 is exactly the ceiling
+        (1u128 << (2 * log2 + 1)).isqrt() as u64 + 1
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a microsecond value: `2·⌊log2 us⌋`, plus one when
+    /// the value reaches the √2 midpoint of its octave.  The midpoint
+    /// test squares into u128, so it is exact for the full u64 range.
+    #[inline]
+    pub(crate) fn bucket_of(us: u64) -> usize {
+        let us = us.max(1);
+        let log2 = 63 - us.leading_zeros() as usize;
+        let half =
+            ((us as u128) * (us as u128) >= 1u128 << (2 * log2 + 1)) as usize;
+        (2 * log2 + half).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, us: u64) {
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile: the **upper bound** of the bucket containing
+    /// the q-th ranked sample (the last bucket reports the observed max),
+    /// so the true quantile is always ≤ the reported value and within
+    /// one √2 bucket of it.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let snap = self.snapshot();
+        snap.quantile_us(q)
+    }
+
+    /// A point-in-time copy of every bucket (relaxed loads; concurrent
+    /// recording may tear *across* fields, never within one).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].load(Ordering::Relaxed)
+            }),
+            count: self.count(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us(),
+        }
+    }
+}
+
+/// Plain-data histogram snapshot: what [`LatencyHistogram::snapshot`]
+/// returns, what `MetricsSnapshot` serializes, and what bench brackets
+/// subtract ([`HistSnapshot::delta`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnapshot {
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot { buckets: [0; BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Same quantile rule as the live histogram, computed from the
+    /// snapshot's buckets.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                if i + 1 >= BUCKETS {
+                    break;
+                }
+                // upper bound of bucket i, capped by the observed max
+                return (bucket_lower(i + 1) - 1).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64
+    }
+
+    /// Counts recorded since `earlier` (bucket-wise saturating
+    /// subtraction; `max_us` keeps the later value — a maximum cannot be
+    /// un-observed, so deltas report the lifetime max).
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::SplitMix64};
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::new();
+        for us in [10, 20, 30, 40] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_us() - 25.0).abs() < 1e-9);
+        assert_eq!(h.max_us(), 40);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_exact_sqrt2() {
+        // exhaustive boundary check over every octave that fits u64
+        // arithmetic cleanly: for each k, 2^k opens bucket 2k, and the
+        // first integer ≥ √2·2^k opens bucket 2k+1 (the value one below
+        // it still lands in bucket 2k)
+        for k in 0..31usize {
+            let base = 1u64 << k;
+            assert_eq!(LatencyHistogram::bucket_of(base), 2 * k,
+                       "2^{k} must open its octave");
+            assert_eq!(LatencyHistogram::bucket_of(2 * base - 1), 2 * k + 1,
+                       "top of octave {k}");
+            let mid = bucket_lower(2 * k + 1);
+            assert_eq!(LatencyHistogram::bucket_of(mid), 2 * k + 1,
+                       "⌈√2·2^{k}⌉ = {mid} must open the half bucket");
+            if mid > base {
+                assert_eq!(LatencyHistogram::bucket_of(mid - 1), 2 * k,
+                           "{} must stay in the low half of octave {k}",
+                           mid - 1);
+            }
+            // the midpoint really is the √2 boundary: mid² ≥ 2^(2k+1)
+            // and (mid−1)² < 2^(2k+1)
+            let sq = 1u128 << (2 * k + 1);
+            assert!((mid as u128) * (mid as u128) >= sq);
+            assert!(((mid - 1) as u128) * ((mid - 1) as u128) < sq);
+        }
+        // the specific values the old half-bucket condition mis-bucketed
+        assert_eq!(LatencyHistogram::bucket_of(2), 2);
+        assert_eq!(LatencyHistogram::bucket_of(3), 3);
+        // saturation: everything ≥ 2^32 shares the last bucket
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_of(1 << 40), BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_of_is_monotone() {
+        let mut last = 0;
+        for us in [1u64, 2, 3, 5, 9, 17, 100, 1000, 10_000, 1 << 40] {
+            let b = LatencyHistogram::bucket_of(us);
+            assert!(b >= last, "bucket({us}) = {b} < {last}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let h = LatencyHistogram::new();
+        for us in 1..=1000u64 {
+            h.record(us);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // bucketed approximation: p50 of uniform 1..1000 is within [256,1024]
+        assert!((256..=1024).contains(&p50), "p50 = {p50}");
+    }
+
+    #[test]
+    fn prop_quantile_within_one_bucket_of_exact() {
+        // the percentile-bound contract: for random samples and random
+        // q, the reported quantile's bucket is within one √2 bucket of
+        // the exact sample quantile's bucket (and never below it —
+        // the upper-bound rule over-reports, never under-reports)
+        prop::forall_ok(
+            20_26,
+            40,
+            |r: &mut SplitMix64| {
+                let n = 1 + r.below(400);
+                let q = [0.5, 0.9, 0.95, 0.99, 1.0][r.below(5)];
+                (n, q, r.next_u64())
+            },
+            |&(n, q, seed)| {
+                let mut r = SplitMix64::new(seed);
+                let h = LatencyHistogram::new();
+                let mut vals = Vec::with_capacity(n);
+                for _ in 0..n {
+                    // spread over many octaves, including sub-µs clamps
+                    let v = r.next_u64() >> (r.below(60) as u32);
+                    h.record(v);
+                    vals.push(v.max(1));
+                }
+                vals.sort_unstable();
+                let rank = ((q * n as f64).ceil().max(1.0) as usize).min(n);
+                let exact = vals[rank - 1];
+                let got = h.quantile_us(q);
+                let (be, bg) = (LatencyHistogram::bucket_of(exact),
+                                LatencyHistogram::bucket_of(got));
+                if bg >= be && bg <= be + 1 && got >= exact {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "q={q} exact={exact} (bucket {be}) \
+                         got={got} (bucket {bg})"
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn snapshot_delta_subtracts_bucketwise() {
+        let h = LatencyHistogram::new();
+        h.record(10);
+        h.record(100);
+        let before = h.snapshot();
+        h.record(10);
+        h.record(1000);
+        let d = h.snapshot().delta(&before);
+        assert_eq!(d.count, 2);
+        assert_eq!(d.sum_us, 1010);
+        assert_eq!(d.buckets[LatencyHistogram::bucket_of(10)], 1);
+        assert_eq!(d.buckets[LatencyHistogram::bucket_of(1000)], 1);
+        assert_eq!(d.buckets[LatencyHistogram::bucket_of(100)], 0);
+        assert_eq!(d.max_us, 1000);
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.snapshot(), HistSnapshot::empty());
+    }
+}

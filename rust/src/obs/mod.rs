@@ -1,0 +1,542 @@
+//! Crate-wide observability: a global metrics registry, hierarchical
+//! span tracing, and snapshot/export plumbing (rust/DESIGN.md §10).
+//!
+//! Three pieces:
+//!
+//! * [`hist`] — the √2-bucketed [`LatencyHistogram`], generalized out of
+//!   `coordinator/metrics.rs` (which now re-exports it).
+//! * [`span`] — per-query span trees behind the `crate::span!` macro:
+//!   a single relaxed load + branch when no trace is live, a full
+//!   route→probe→scan→…→rerank EXPLAIN tree when one is
+//!   (`unq search --explain`, coordinator `trace` payloads).
+//! * this module — the [`Registry`] of named counter/gauge/histogram
+//!   families, its process-wide instance ([`global`]), and
+//!   [`MetricsSnapshot`] (JSON round-trip + delta subtraction so
+//!   benches bracket a run and attach counter evidence).
+//!
+//! Metric recording is always on: every probe is a relaxed atomic on a
+//! `&'static` field — no locks, no allocation, no feature flags — and
+//! instrumentation is amortized per *task* (rows added in bulk, kernel
+//! dispatch counted once per scan call), so the steady-state cost is a
+//! handful of `fetch_add`s per scan task.  Tracing, which does
+//! allocate, is off unless a query asks for it (`UNQ_TRACE=1` /
+//! `SearchConfig::trace` / `--explain`).
+//!
+//! Adding a metric family is a three-line change here: add the field,
+//! name it in [`Registry::snapshot`], done — every consumer
+//! (`unq stats`, bench brackets, the ingest summary) picks it up from
+//! the snapshot automatically.
+
+pub mod hist;
+pub mod span;
+
+pub use hist::{HistSnapshot, LatencyHistogram};
+pub use span::{SpanGuard, Trace, TraceHandle};
+// the `span!` macro exports at crate root (macro_rules); re-export it
+// here so call sites can write `obs::span!("scan")` as well — macros
+// and the `span` module live in different namespaces, like `std::vec`
+pub use crate::span;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// A monotone event counter (relaxed atomics; safe from any thread).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// An up/down level (pool queue depth); snapshots report the current
+/// value, not a delta.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-written float (training loss); stored as bits in an atomic.
+pub struct FloatGauge(AtomicU64);
+
+impl Default for FloatGauge {
+    fn default() -> Self {
+        FloatGauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl FloatGauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Every metric family in the crate, as plain named fields — the whole
+/// registry is static data, so probes compile to a `fetch_add` on a
+/// fixed address.  Family and field names (the `family.field` strings
+/// in snapshots) are assigned in [`Registry::snapshot`].
+#[derive(Default)]
+pub struct Registry {
+    // scan kernels (exec/plan.rs): rows scanned per LUT precision, and
+    // scan tasks executed
+    pub scan_rows_f32: Counter,
+    pub scan_rows_u16: Counter,
+    pub scan_rows_u8: Counter,
+    pub scan_rows_u4: Counter,
+    pub scan_tasks: Counter,
+    // SIMD dispatch (index/scan.rs): which kernel a scan call chose
+    pub simd_dispatch_simd: Counter,
+    pub simd_dispatch_scalar: Counter,
+    // 1-bit sketch prefilter (index/scan.rs)
+    pub prefilter_admitted: Counter,
+    pub prefilter_rejected: Counter,
+    // IVF routing (ivf/search.rs)
+    pub ivf_lists_probed: Counter,
+    pub ivf_residual_luts: Counter,
+    // WAL (store/wal.rs)
+    pub wal_appends: Counter,
+    pub wal_commits: Counter,
+    pub wal_fsync_us: LatencyHistogram,
+    // compaction (index/segment.rs)
+    pub compaction_runs: Counter,
+    pub compaction_us: LatencyHistogram,
+    // streaming reads (index/segment.rs): tombstone over-fetch and
+    // segment fan-out
+    pub stream_overfetch_rows: Counter,
+    pub stream_segments_scanned: Counter,
+    // worker pool (exec/pool.rs)
+    pub exec_tasks: Counter,
+    pub exec_queue_depth: Gauge,
+    pub exec_task_us: LatencyHistogram,
+    // training (quant/unq_native.rs)
+    pub train_epochs: Counter,
+    pub train_last_loss: FloatGauge,
+    pub train_epoch_us: LatencyHistogram,
+}
+
+impl Registry {
+    /// Point-in-time copy of every family, under its `family.field`
+    /// name.  This list is the single source of metric names.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let c = |c: &Counter| c.get();
+        MetricsSnapshot {
+            counters: vec![
+                ("scan.rows_f32".into(), c(&self.scan_rows_f32)),
+                ("scan.rows_u16".into(), c(&self.scan_rows_u16)),
+                ("scan.rows_u8".into(), c(&self.scan_rows_u8)),
+                ("scan.rows_u4".into(), c(&self.scan_rows_u4)),
+                ("scan.tasks".into(), c(&self.scan_tasks)),
+                ("simd.dispatch_simd".into(), c(&self.simd_dispatch_simd)),
+                ("simd.dispatch_scalar".into(),
+                 c(&self.simd_dispatch_scalar)),
+                ("prefilter.admitted".into(), c(&self.prefilter_admitted)),
+                ("prefilter.rejected".into(), c(&self.prefilter_rejected)),
+                ("ivf.lists_probed".into(), c(&self.ivf_lists_probed)),
+                ("ivf.residual_luts".into(), c(&self.ivf_residual_luts)),
+                ("wal.appends".into(), c(&self.wal_appends)),
+                ("wal.commits".into(), c(&self.wal_commits)),
+                ("compaction.runs".into(), c(&self.compaction_runs)),
+                ("stream.overfetch_rows".into(),
+                 c(&self.stream_overfetch_rows)),
+                ("stream.segments_scanned".into(),
+                 c(&self.stream_segments_scanned)),
+                ("exec.tasks".into(), c(&self.exec_tasks)),
+                ("train.epochs".into(), c(&self.train_epochs)),
+            ],
+            gauges: vec![
+                ("exec.queue_depth".into(),
+                 self.exec_queue_depth.get() as f64),
+                ("train.last_loss".into(), self.train_last_loss.get()),
+            ],
+            hists: vec![
+                ("wal.fsync_us".into(), self.wal_fsync_us.snapshot()),
+                ("compaction.duration_us".into(),
+                 self.compaction_us.snapshot()),
+                ("exec.task_us".into(), self.exec_task_us.snapshot()),
+                ("train.epoch_us".into(), self.train_epoch_us.snapshot()),
+            ],
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every instrumentation site records into.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::default)
+}
+
+/// A named, plain-data copy of the registry: what `unq stats` prints,
+/// what benches bracket ([`MetricsSnapshot::delta`]), and what rides
+/// in BENCH_*.json rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value by name (0 when absent — a snapshot from an older
+    /// binary simply reads as zero).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0, |(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map_or(0.0, |(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Everything recorded since `earlier`: counters and histogram
+    /// buckets subtract (saturating); gauges keep the later value
+    /// (levels, not rates).  The bench brackets: snapshot → run →
+    /// snapshot → `delta`.
+    pub fn delta(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(n, v)| {
+                    (n.clone(), v.saturating_sub(earlier.counter(n)))
+                })
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(n, h)| {
+                    let e = earlier.hist(n).cloned()
+                        .unwrap_or_else(HistSnapshot::empty);
+                    (n.clone(), h.delta(&e))
+                })
+                .collect(),
+        }
+    }
+
+    /// JSON export.  Histograms carry their raw fields plus derived
+    /// p50/p95/p99 for human readers; [`MetricsSnapshot::from_json`]
+    /// ignores the derived keys, so the struct round-trips exactly
+    /// (counters are u64 but serialize through f64 — exact below 2⁵³,
+    /// far beyond any real count here).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("counters",
+             Json::Obj(self.counters.iter()
+                 .map(|(n, v)| (n.clone(), Json::Num(*v as f64)))
+                 .collect())),
+            ("gauges",
+             Json::Obj(self.gauges.iter()
+                 .map(|(n, v)| (n.clone(), Json::Num(*v)))
+                 .collect())),
+            ("hists",
+             Json::Obj(self.hists.iter()
+                 .map(|(n, h)| {
+                     (n.clone(), Json::obj(vec![
+                         ("count", Json::Num(h.count as f64)),
+                         ("sum_us", Json::Num(h.sum_us as f64)),
+                         ("max_us", Json::Num(h.max_us as f64)),
+                         ("p50_us", Json::Num(h.quantile_us(0.5) as f64)),
+                         ("p95_us", Json::Num(h.quantile_us(0.95) as f64)),
+                         ("p99_us", Json::Num(h.quantile_us(0.99) as f64)),
+                         ("buckets", Json::Arr(
+                             h.buckets.iter()
+                                 .map(|&b| Json::Num(b as f64))
+                                 .collect())),
+                     ]))
+                 })
+                 .collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsSnapshot> {
+        let obj_pairs = |key: &str| -> Result<Vec<(String, Json)>> {
+            match j.get(key) {
+                Some(Json::Obj(pairs)) => Ok(pairs.clone()),
+                _ => bail!("snapshot missing object field {key:?}"),
+            }
+        };
+        let counters = obj_pairs("counters")?
+            .into_iter()
+            .map(|(n, v)| match v.as_f64() {
+                Some(f) => Ok((n, f as u64)),
+                None => bail!("counter {n:?} is not a number"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let gauges = obj_pairs("gauges")?
+            .into_iter()
+            .map(|(n, v)| match v.as_f64() {
+                Some(f) => Ok((n, f)),
+                None => bail!("gauge {n:?} is not a number"),
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let hists = obj_pairs("hists")?
+            .into_iter()
+            .map(|(n, v)| {
+                let mut h = HistSnapshot::empty();
+                let bs = v.get("buckets").and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("hist {n:?} missing buckets")
+                    })?;
+                if bs.len() != hist::BUCKETS {
+                    bail!("hist {n:?} has {} buckets, want {}",
+                          bs.len(), hist::BUCKETS);
+                }
+                for (i, b) in bs.iter().enumerate() {
+                    h.buckets[i] = b.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("hist {n:?} bucket {i} not a number")
+                    })? as u64;
+                }
+                h.count = v.req_usize("count")? as u64;
+                h.sum_us = v.req_usize("sum_us")? as u64;
+                h.max_us = v.req_usize("max_us")? as u64;
+                Ok((n, h))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(MetricsSnapshot { counters, gauges, hists })
+    }
+
+    /// Check this snapshot against a committed schema
+    /// (`BENCH_obs.schema.json`): every listed counter/gauge/hist name
+    /// must be present; names listed under `"nonzero"` must also have a
+    /// count > 0.  Returns every violation, so CI prints the full list.
+    pub fn check_schema(&self, schema: &Json) -> Vec<String> {
+        let mut errs = Vec::new();
+        let names = |key: &str| -> Vec<String> {
+            schema.get(key).and_then(Json::as_arr).map_or(Vec::new(), |a| {
+                a.iter()
+                    .filter_map(|v| v.as_str().map(str::to_string))
+                    .collect()
+            })
+        };
+        for n in names("counters") {
+            if !self.counters.iter().any(|(c, _)| *c == n) {
+                errs.push(format!("missing counter {n:?}"));
+            }
+        }
+        for n in names("gauges") {
+            if !self.gauges.iter().any(|(g, _)| *g == n) {
+                errs.push(format!("missing gauge {n:?}"));
+            }
+        }
+        for n in names("hists") {
+            if self.hist(&n).is_none() {
+                errs.push(format!("missing hist {n:?}"));
+            }
+        }
+        for n in names("nonzero") {
+            let ok = self.counters.iter().any(|(c, v)| *c == n && *v > 0)
+                || self.hist(&n).is_some_and(|h| h.count > 0);
+            if !ok {
+                errs.push(format!("{n:?} must be non-zero"));
+            }
+        }
+        errs
+    }
+
+    /// The human summary `unq stats` and the `unq ingest` footer print:
+    /// one line per non-zero family member.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for (n, v) in &self.counters {
+            if *v > 0 {
+                out.push_str(&format!("{n:<26} {v}\n"));
+            }
+        }
+        for (n, v) in &self.gauges {
+            if *v != 0.0 {
+                out.push_str(&format!("{n:<26} {v:.4}\n"));
+            }
+        }
+        for (n, h) in &self.hists {
+            if h.count > 0 {
+                out.push_str(&format!(
+                    "{n:<26} n={} mean={:.1}µs p50={}µs p99={}µs max={}µs\n",
+                    h.count,
+                    h.mean_us(),
+                    h.quantile_us(0.5),
+                    h.quantile_us(0.99),
+                    h.max_us
+                ));
+            }
+        }
+        if out.is_empty() {
+            out.push_str("(no metrics recorded)\n");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: tests touching `global()` share it with every other test in
+    // the binary (cargo test is multi-threaded), so they assert
+    // monotone / ≥ facts only; exact-value assertions use local
+    // registries or per-trace counters.
+
+    #[test]
+    fn counter_gauge_float_gauge_basics() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        let f = FloatGauge::default();
+        assert_eq!(f.get(), 0.0);
+        f.set(1.25);
+        assert_eq!(f.get(), 1.25);
+    }
+
+    #[test]
+    fn global_registry_is_shared_and_monotone() {
+        let before = global().scan_tasks.get();
+        global().scan_tasks.inc();
+        assert!(global().scan_tasks.get() >= before + 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let reg = Registry::default();
+        reg.scan_rows_u8.add(12345);
+        reg.prefilter_admitted.add(40);
+        reg.prefilter_rejected.add(60);
+        reg.exec_queue_depth.set(3);
+        reg.train_last_loss.set(0.125);
+        reg.wal_fsync_us.record(180);
+        reg.wal_fsync_us.record(2500);
+        let snap = reg.snapshot();
+        let text = snap.to_json().render_pretty();
+        let back = MetricsSnapshot::from_json(
+            &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.counter("scan.rows_u8"), 12345);
+        assert_eq!(back.gauge("train.last_loss"), 0.125);
+        assert_eq!(back.hist("wal.fsync_us").unwrap().count, 2);
+    }
+
+    #[test]
+    fn delta_subtracts_counters_and_hists() {
+        let reg = Registry::default();
+        reg.ivf_lists_probed.add(10);
+        reg.exec_task_us.record(50);
+        let before = reg.snapshot();
+        reg.ivf_lists_probed.add(7);
+        reg.exec_task_us.record(90);
+        reg.exec_queue_depth.set(2);
+        let d = reg.snapshot().delta(&before);
+        assert_eq!(d.counter("ivf.lists_probed"), 7);
+        assert_eq!(d.hist("exec.task_us").unwrap().count, 1);
+        // gauges are levels: delta reports the later value
+        assert_eq!(d.gauge("exec.queue_depth"), 2.0);
+        // untouched families are all-zero in the delta
+        assert_eq!(d.counter("wal.appends"), 0);
+    }
+
+    #[test]
+    fn schema_check_reports_missing_and_zero() {
+        let reg = Registry::default();
+        reg.scan_rows_f32.add(1);
+        let snap = reg.snapshot();
+        let schema = Json::parse(
+            r#"{"counters": ["scan.rows_f32", "no.such"],
+                "hists": ["wal.fsync_us"],
+                "nonzero": ["scan.rows_f32", "wal.appends"]}"#,
+        )
+        .unwrap();
+        let errs = snap.check_schema(&schema);
+        assert_eq!(errs.len(), 2, "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("no.such")));
+        assert!(errs.iter().any(|e| e.contains("wal.appends")));
+        // and a clean schema passes
+        let ok = Json::parse(
+            r#"{"counters": ["scan.rows_f32"],
+                "nonzero": ["scan.rows_f32"]}"#,
+        )
+        .unwrap();
+        assert!(snap.check_schema(&ok).is_empty());
+    }
+
+    #[test]
+    fn render_human_lists_only_nonzero() {
+        let reg = Registry::default();
+        let empty = reg.snapshot().render_human();
+        assert!(empty.contains("no metrics recorded"));
+        reg.wal_appends.add(3);
+        reg.compaction_us.record(1500);
+        let text = reg.snapshot().render_human();
+        assert!(text.contains("wal.appends"));
+        assert!(text.contains("compaction.duration_us"));
+        assert!(!text.contains("scan.rows_f32"));
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(MetricsSnapshot::from_json(&Json::Null).is_err());
+        let bad = Json::parse(
+            r#"{"counters": {"a": "x"}, "gauges": {}, "hists": {}}"#,
+        )
+        .unwrap();
+        assert!(MetricsSnapshot::from_json(&bad).is_err());
+        let bad_hist = Json::parse(
+            r#"{"counters": {}, "gauges": {},
+                "hists": {"h": {"count": 1, "sum_us": 1, "max_us": 1,
+                                "buckets": [1, 2]}}}"#,
+        )
+        .unwrap();
+        assert!(MetricsSnapshot::from_json(&bad_hist).is_err());
+    }
+}

@@ -1,0 +1,578 @@
+//! Hierarchical span tracing: per-query (per-batch) span trees that
+//! render as the `unq search --explain` report (rust/DESIGN.md §10).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero perturbation** — tracing is a read-only side channel.  It
+//!    never changes task order, shard decomposition, or scores, so
+//!    results are bit-identical with tracing on or off (property-pinned
+//!    in `exec::plan`).
+//! 2. **Single branch when disabled** — [`enter`] first loads one global
+//!    relaxed atomic (the count of live [`Trace`] collectors); when zero
+//!    it returns an inert guard without touching the thread-local stack,
+//!    allocating, or reading the clock.  `tests/obs_overhead.rs` pins
+//!    the no-allocation half of that contract with a counting allocator.
+//! 3. **Pool-correct parenting** — spans cross `exec` worker threads via
+//!    an explicit [`TraceHandle`]: the planner captures the current
+//!    (trace, span) pair once per plan and each pool job installs it for
+//!    the job's duration, so concurrent traces on one shared pool never
+//!    leak spans into each other.  Guards close on unwind (`Drop`), so a
+//!    panicking task still records its span.
+//!
+//! Lifecycle: [`Trace::begin`] creates the collector plus the root span
+//! and installs it on the calling thread; [`enter`] (or the
+//! `crate::span!` macro) opens a child of the innermost open span on
+//! this thread; dropping the root guard closes the tree, after which
+//! [`Trace::render`] / [`Trace::to_json`] produce the EXPLAIN report.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Count of live [`Trace`] collectors — the global master gate every
+/// [`enter`] checks first.  Zero (the overwhelmingly common case) makes
+/// span guards a load + branch.
+static LIVE_TRACES: AtomicU64 = AtomicU64::new(0);
+
+/// Is any trace alive anywhere in the process?  (The cheap pre-check;
+/// a true result still requires a trace installed on *this* thread for
+/// spans to attach.)
+#[inline]
+pub fn tracing_active() -> bool {
+    LIVE_TRACES.load(Ordering::Relaxed) != 0
+}
+
+thread_local! {
+    /// Innermost open span per thread: (collector, span id) pairs pushed
+    /// by span guards and [`TraceHandle::install`], popped strictly LIFO
+    /// on drop (unwind included).  Const-init: no allocation until a
+    /// trace actually reaches this thread.
+    static STACK: RefCell<Vec<(Arc<TraceInner>, u32)>> =
+        const { RefCell::new(Vec::new()) };
+}
+
+/// One closed span, as collected.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub id: u32,
+    /// Parent span id (the root's parent is itself).
+    pub parent: u32,
+    pub label: &'static str,
+    /// Wall time between guard creation and drop.
+    pub dur_ns: u64,
+    /// Additive per-span payload (rows scanned, lists probed, …).
+    pub rows: u64,
+}
+
+struct TraceInner {
+    epoch: Instant,
+    next_id: AtomicU32,
+    /// Closed spans, pushed on guard drop (a short lock only while
+    /// tracing is on; the disabled path never reaches here).
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl TraceInner {
+    fn close(&self, rec: SpanRecord) {
+        self.spans.lock().expect("span sink poisoned").push(rec);
+    }
+}
+
+/// A span-tree collector for one query (or one flushed batch).
+pub struct Trace {
+    inner: Arc<TraceInner>,
+}
+
+impl Drop for Trace {
+    fn drop(&mut self) {
+        LIVE_TRACES.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Trace {
+    /// Create a collector, open its root span, and install both on the
+    /// calling thread.  Drop the guard to close the tree, then render.
+    pub fn begin(label: &'static str) -> (Trace, SpanGuard) {
+        LIVE_TRACES.fetch_add(1, Ordering::Relaxed);
+        let inner = Arc::new(TraceInner {
+            epoch: Instant::now(),
+            next_id: AtomicU32::new(1),
+            spans: Mutex::new(Vec::new()),
+        });
+        let trace = Trace { inner: inner.clone() };
+        STACK.with(|s| s.borrow_mut().push((inner.clone(), 0)));
+        let guard = SpanGuard {
+            live: Some(LiveSpan {
+                trace: inner,
+                id: 0,
+                parent: 0,
+                label,
+                start: Instant::now(),
+                rows: 0,
+            }),
+        };
+        (trace, guard)
+    }
+
+    /// A sendable (trace, span) pair for parenting spans opened on other
+    /// threads under the *current* innermost span of this thread.
+    /// `None` when this thread has no open span (tracing off, or the
+    /// calling code isn't under a trace) — plan code forwards the
+    /// `None` for free.
+    pub fn current_handle() -> Option<TraceHandle> {
+        if !tracing_active() {
+            return None;
+        }
+        STACK.with(|s| {
+            s.borrow().last().map(|(t, id)| TraceHandle {
+                trace: t.clone(),
+                span: *id,
+            })
+        })
+    }
+
+    /// Number of closed spans so far (tests).
+    pub fn len(&self) -> usize {
+        self.inner.spans.lock().expect("span sink poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Closed spans, in close order (tests + custom reports).
+    pub fn records(&self) -> Vec<SpanRecord> {
+        self.inner.spans.lock().expect("span sink poisoned").clone()
+    }
+
+    /// Sum of `rows` over closed spans with this label (tests pin scan
+    /// row accounting through this).
+    pub fn rows(&self, label: &str) -> u64 {
+        self.records()
+            .iter()
+            .filter(|r| r.label == label)
+            .map(|r| r.rows)
+            .sum()
+    }
+
+    /// The EXPLAIN tree: one line per (parent-path, label) group, with
+    /// call count, summed wall time, summed **self** time (wall minus
+    /// child spans — self times over the whole tree sum exactly to the
+    /// root's wall time), and summed rows.  Spans sharing a label under
+    /// one parent aggregate into a single line (a 16-task scan prints
+    /// once), keeping the report readable at any fan-out.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for line in self.explain_lines() {
+            let indent = "  ".repeat(line.depth);
+            let mut s = format!(
+                "{indent}{} ({}x) total {} self {}",
+                line.label,
+                line.calls,
+                fmt_ns(line.dur_ns),
+                fmt_ns(line.self_ns)
+            );
+            if line.rows > 0 {
+                s.push_str(&format!(" rows {}", line.rows));
+            }
+            out.push_str(&s);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// The EXPLAIN tree as JSON (the coordinator's `trace` payload and
+    /// the CLI's `--json` shape): an array of
+    /// `{label, depth, calls, dur_us, self_us, rows}` rows in tree
+    /// order.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.explain_lines()
+                .into_iter()
+                .map(|l| {
+                    Json::obj(vec![
+                        ("label", Json::Str(l.label.to_string())),
+                        ("depth", Json::Num(l.depth as f64)),
+                        ("calls", Json::Num(l.calls as f64)),
+                        ("dur_us", Json::Num(l.dur_ns as f64 / 1000.0)),
+                        ("self_us", Json::Num(l.self_ns as f64 / 1000.0)),
+                        ("rows", Json::Num(l.rows as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Aggregate the raw span list into depth-first display lines.
+    fn explain_lines(&self) -> Vec<ExplainLine> {
+        let records = self.records();
+        // children's wall time per parent id, for self-time subtraction
+        let mut child_ns: Vec<u64> = vec![0; records.len().max(1)];
+        let mut by_id: Vec<Option<&SpanRecord>> =
+            vec![None; records.len().max(1)];
+        for r in &records {
+            if (r.id as usize) < by_id.len() {
+                by_id[r.id as usize] = Some(r);
+            }
+        }
+        for r in &records {
+            if r.id != r.parent && (r.parent as usize) < child_ns.len() {
+                child_ns[r.parent as usize] += r.dur_ns;
+            }
+        }
+        // group by (parent, label), keyed for stable tree placement
+        let mut lines: Vec<ExplainLine> = Vec::new();
+        fn walk(parent: u32, depth: usize, records: &[SpanRecord],
+                child_ns: &[u64], lines: &mut Vec<ExplainLine>) {
+            let mut seen: Vec<&'static str> = Vec::new();
+            for r in records {
+                if r.parent != parent || r.id == r.parent {
+                    continue;
+                }
+                if seen.contains(&r.label) {
+                    continue;
+                }
+                seen.push(r.label);
+                let group: Vec<&SpanRecord> = records
+                    .iter()
+                    .filter(|c| {
+                        c.parent == parent && c.id != c.parent
+                            && c.label == r.label
+                    })
+                    .collect();
+                let dur: u64 = group.iter().map(|c| c.dur_ns).sum();
+                let selfd: u64 = group
+                    .iter()
+                    .map(|c| {
+                        c.dur_ns.saturating_sub(
+                            child_ns.get(c.id as usize).copied().unwrap_or(0))
+                    })
+                    .sum();
+                lines.push(ExplainLine {
+                    label: r.label,
+                    depth,
+                    calls: group.len(),
+                    dur_ns: dur,
+                    self_ns: selfd,
+                    rows: group.iter().map(|c| c.rows).sum(),
+                });
+                for c in group {
+                    walk(c.id, depth + 1, records, child_ns, lines);
+                }
+            }
+        }
+        if let Some(root) =
+            records.iter().find(|r| r.id == r.parent)
+        {
+            lines.push(ExplainLine {
+                label: root.label,
+                depth: 0,
+                calls: 1,
+                dur_ns: root.dur_ns,
+                self_ns: root.dur_ns.saturating_sub(
+                    child_ns.get(0).copied().unwrap_or(0)),
+                rows: root.rows,
+            });
+            walk(root.id, 1, &records, &child_ns, &mut lines);
+        }
+        lines
+    }
+}
+
+/// One aggregated EXPLAIN display line.
+pub struct ExplainLine {
+    pub label: &'static str,
+    pub depth: usize,
+    pub calls: usize,
+    pub dur_ns: u64,
+    pub self_ns: u64,
+    pub rows: u64,
+}
+
+fn fmt_ns(ns: u64) -> String {
+    format!("{:.1}µs", ns as f64 / 1000.0)
+}
+
+/// A sendable (trace, parent span) pair: what plan code captures once
+/// and clones into each pool job.
+#[derive(Clone)]
+pub struct TraceHandle {
+    trace: Arc<TraceInner>,
+    span: u32,
+}
+
+impl TraceHandle {
+    /// Make this handle the innermost open span of the current thread
+    /// until the returned guard drops (strict LIFO, unwind-safe).
+    pub fn install(&self) -> InstallGuard {
+        STACK.with(|s| {
+            s.borrow_mut().push((self.trace.clone(), self.span))
+        });
+        InstallGuard
+    }
+}
+
+/// Pops the thread's span stack on drop (see [`TraceHandle::install`]).
+pub struct InstallGuard;
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+    }
+}
+
+struct LiveSpan {
+    trace: Arc<TraceInner>,
+    id: u32,
+    parent: u32,
+    label: &'static str,
+    start: Instant,
+    rows: u64,
+}
+
+/// RAII span: records `(label, wall time, rows)` under the innermost
+/// open span on drop.  Inert (`live: None`) when tracing is off — the
+/// single-branch disabled path.
+pub struct SpanGuard {
+    live: Option<LiveSpan>,
+}
+
+impl SpanGuard {
+    /// Is this guard actually recording?  (Tests.)
+    pub fn is_active(&self) -> bool {
+        self.live.is_some()
+    }
+
+    /// Add to the span's additive payload (rows scanned, lists probed —
+    /// whatever the stage counts).  Free when inert.
+    #[inline]
+    pub fn add_rows(&mut self, n: u64) {
+        if let Some(l) = &mut self.live {
+            l.rows += n;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else { return };
+        let dur_ns = live.start.elapsed().as_nanos() as u64;
+        // pop this span off the thread stack (strict LIFO: nested guards
+        // drop before their parents, unwind included)
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let _ = live.trace.epoch; // reserved for future absolute timestamps
+        live.trace.close(SpanRecord {
+            id: live.id,
+            parent: live.parent,
+            label: live.label,
+            dur_ns,
+            rows: live.rows,
+        });
+    }
+}
+
+/// Open a span under the innermost open span of this thread.  One
+/// relaxed load + branch when no trace is live anywhere; inert (but
+/// still cheap) when traces exist only on other threads.
+#[inline]
+pub fn enter(label: &'static str) -> SpanGuard {
+    if !tracing_active() {
+        return SpanGuard { live: None };
+    }
+    enter_slow(label)
+}
+
+#[inline(never)]
+fn enter_slow(label: &'static str) -> SpanGuard {
+    STACK.with(|s| {
+        let mut stack = s.borrow_mut();
+        let Some((trace, parent)) = stack.last().cloned() else {
+            return SpanGuard { live: None };
+        };
+        let id = trace.next_id.fetch_add(1, Ordering::Relaxed);
+        stack.push((trace.clone(), id));
+        SpanGuard {
+            live: Some(LiveSpan {
+                trace,
+                id,
+                parent,
+                label,
+                start: Instant::now(),
+                rows: 0,
+            }),
+        }
+    })
+}
+
+/// Open a named span under the innermost open span of the current
+/// thread — see [`crate::obs::span::enter`].  Expands to a single
+/// function call so the disabled path stays one load + branch.
+#[macro_export]
+macro_rules! span {
+    ($label:expr) => {
+        $crate::obs::span::enter($label)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // no trace on this thread (other tests' traces may exist on
+        // their own threads — the guard must still be inert here
+        // because nothing is installed on THIS thread's stack)
+        let g = enter("nothing");
+        assert!(!g.is_active());
+        drop(g);
+    }
+
+    #[test]
+    fn nested_spans_parent_correctly() {
+        let (trace, root) = Trace::begin("root");
+        {
+            let mut a = enter("a");
+            a.add_rows(10);
+            {
+                let b = enter("b");
+                assert!(b.is_active());
+            }
+        }
+        {
+            let mut a2 = enter("a");
+            a2.add_rows(5);
+        }
+        drop(root);
+        let recs = trace.records();
+        assert_eq!(recs.len(), 4, "b, a, a(2nd), root");
+        let root_rec = recs.iter().find(|r| r.label == "root").unwrap();
+        assert_eq!(root_rec.id, root_rec.parent, "root parents itself");
+        for a in recs.iter().filter(|r| r.label == "a") {
+            assert_eq!(a.parent, root_rec.id, "a under root");
+        }
+        let b = recs.iter().find(|r| r.label == "b").unwrap();
+        let a_ids: Vec<u32> = recs
+            .iter()
+            .filter(|r| r.label == "a")
+            .map(|r| r.id)
+            .collect();
+        assert!(a_ids.contains(&b.parent), "b under an a span");
+        assert_eq!(trace.rows("a"), 15);
+    }
+
+    #[test]
+    fn handle_reparents_across_threads() {
+        let (trace, mut root) = Trace::begin("root");
+        root.add_rows(1);
+        let handle = {
+            let _scan = enter("scan");
+            Trace::current_handle().expect("under a trace")
+        };
+        // "scan" is closed; spans opened through the handle must still
+        // parent to it, from another thread
+        let t = std::thread::spawn(move || {
+            let _install = handle.install();
+            let mut task = enter("task");
+            task.add_rows(42);
+        });
+        t.join().unwrap();
+        drop(root);
+        let recs = trace.records();
+        let scan = recs.iter().find(|r| r.label == "scan").unwrap();
+        let task = recs.iter().find(|r| r.label == "task").unwrap();
+        assert_eq!(task.parent, scan.id);
+        assert_eq!(trace.rows("task"), 42);
+    }
+
+    #[test]
+    fn concurrent_traces_do_not_cross_leak() {
+        // two traces on two threads, spans interleaved: every span must
+        // land in its own thread's trace
+        let mk = || {
+            std::thread::spawn(|| {
+                let (trace, root) = Trace::begin("root");
+                for _ in 0..50 {
+                    let mut s = enter("work");
+                    s.add_rows(1);
+                }
+                drop(root);
+                trace.rows("work")
+            })
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.join().unwrap(), 50);
+        assert_eq!(b.join().unwrap(), 50);
+    }
+
+    #[test]
+    fn self_times_sum_to_root_duration() {
+        let (trace, root) = Trace::begin("root");
+        {
+            let _a = enter("a");
+            let _b = enter("b");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        {
+            let _c = enter("c");
+        }
+        drop(root);
+        let lines = trace.explain_lines();
+        let root_dur = lines[0].dur_ns;
+        let self_sum: u64 = lines.iter().map(|l| l.self_ns).sum();
+        // exact by construction (telescoping sum), ±1% per acceptance
+        let tol = root_dur / 100 + 1;
+        assert!(self_sum.abs_diff(root_dur) <= tol,
+                "self {self_sum} vs root {root_dur}");
+        let rendered = trace.render();
+        assert!(rendered.contains("root"));
+        assert!(rendered.contains("a"));
+    }
+
+    #[test]
+    fn panic_on_worker_still_closes_span() {
+        let (trace, root) = Trace::begin("root");
+        let handle = Trace::current_handle().unwrap();
+        let t = std::thread::spawn(move || {
+            let _install = handle.install();
+            let _span = enter("doomed");
+            panic!("task boom");
+        });
+        assert!(t.join().is_err(), "the task panicked");
+        drop(root);
+        let recs = trace.records();
+        assert!(recs.iter().any(|r| r.label == "doomed"),
+                "unwind must close the span");
+    }
+
+    #[test]
+    fn render_and_json_shapes() {
+        let (trace, root) = Trace::begin("search");
+        {
+            let mut s = enter("scan");
+            s.add_rows(1000);
+        }
+        {
+            let mut s = enter("scan");
+            s.add_rows(500);
+        }
+        drop(root);
+        let txt = trace.render();
+        assert!(txt.contains("scan (2x)"), "aggregated line: {txt}");
+        assert!(txt.contains("rows 1500"), "summed rows: {txt}");
+        let j = trace.to_json();
+        let arr = j.as_arr().expect("array of lines");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("label").and_then(|l| l.as_str()),
+                   Some("search"));
+        assert_eq!(arr[1].get("rows").and_then(|r| r.as_f64()),
+                   Some(1500.0));
+    }
+}

@@ -160,6 +160,7 @@ impl NativeUnq {
         let mut perm: Vec<usize> = (0..n).collect();
         let mut xb: Vec<f32> = Vec::new();
         for epoch in 0..cfg.epochs {
+            let t_epoch = std::time::Instant::now();
             let tau = if cfg.epochs <= 1 {
                 cfg.tau0
             } else {
@@ -203,6 +204,11 @@ impl NativeUnq {
                 "[unq-native] epoch {:>3}/{} tau {:.3} rec {:.5} cons {:.5}",
                 epoch + 1, cfg.epochs, tau, stats.rec_loss, stats.cons_loss
             );
+            let reg = crate::obs::global();
+            reg.train_epochs.inc();
+            reg.train_last_loss
+                .set(stats.rec_loss + cfg.lambda_cons as f64 * stats.cons_loss);
+            reg.train_epoch_us.record(t_epoch.elapsed().as_micros() as u64);
             self.history.push(stats);
         }
     }

@@ -207,6 +207,7 @@ impl Wal {
                     "insert code length {} != wal stride {}",
                     code.len(), self.stride);
         }
+        crate::obs::global().wal_appends.inc();
         let payload = rec.payload();
         self.buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         self.buf.extend_from_slice(&crc32(&payload).to_le_bytes());
@@ -227,10 +228,14 @@ impl Wal {
         if self.buf.is_empty() {
             return Ok(());
         }
+        let t0 = std::time::Instant::now();
         let res = self
             .file
             .write_all(&self.buf)
             .and_then(|()| self.file.sync_data());
+        let reg = crate::obs::global();
+        reg.wal_commits.inc();
+        reg.wal_fsync_us.record(t0.elapsed().as_micros() as u64);
         match res {
             Ok(()) => {
                 self.synced_len += self.buf.len() as u64;

@@ -1,0 +1,107 @@
+//! Overhead contract of the observability layer (rust/DESIGN.md §10):
+//! with no live trace, span guards must cost one relaxed atomic load and
+//! a branch — in particular they must never allocate — and metric
+//! updates must be allocation-free always.
+//!
+//! Allocation counting is per-thread (a `thread_local` bumped by a
+//! wrapping global allocator), so concurrently running tests in this
+//! binary cannot pollute each other's counts.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+// SAFETY: delegates verbatim to `System`; the only addition is a
+// thread-local counter bump, which neither allocates nor unwinds
+// (`try_with` covers TLS teardown).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+        // SAFETY: caller upholds the `GlobalAlloc::alloc` contract.
+        unsafe { System.alloc(l) }
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        // SAFETY: `p`/`l` came from a matching `alloc` on `System`.
+        unsafe { System.dealloc(p, l) }
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_here() -> u64 {
+    TL_ALLOCS.with(|c| c.get())
+}
+
+#[test]
+fn disabled_span_guards_allocate_nothing() {
+    // warm up every lazily-initialised piece the fast path can touch
+    // (global registry, the thread-local span stack)
+    {
+        let mut g = unq::obs::span::enter("warmup");
+        g.add_rows(1);
+        assert!(!g.is_active(), "no trace is live in this test");
+    }
+    let before = allocs_here();
+    for i in 0..10_000u64 {
+        let mut g = unq::obs::span::enter("scan_task");
+        g.add_rows(i);
+    }
+    let after = allocs_here();
+    assert_eq!(after - before, 0,
+               "disabled span guards must not allocate (got {} allocations \
+                over 10k guards)", after - before);
+}
+
+#[test]
+fn metric_updates_allocate_nothing() {
+    let reg = unq::obs::global();
+    reg.scan_tasks.inc(); // force one-time registry init outside the window
+    let before = allocs_here();
+    for i in 0..10_000u64 {
+        reg.scan_rows_f32.add(64);
+        reg.scan_tasks.inc();
+        reg.exec_queue_depth.inc();
+        reg.exec_queue_depth.dec();
+        reg.wal_fsync_us.record(i % 4096);
+        reg.train_last_loss.set(0.25);
+    }
+    let after = allocs_here();
+    assert_eq!(after - before, 0,
+               "metric updates must be allocation-free (got {})",
+               after - before);
+}
+
+#[test]
+fn enabled_tracing_does_not_perturb_disabled_cost_after_drop() {
+    // begin + drop a trace, then re-check the disabled path is inert
+    // again: the global live-trace gate must fall back to zero
+    {
+        let (trace, root) = unq::obs::Trace::begin("query");
+        {
+            let mut g = unq::obs::span::enter("scan");
+            g.add_rows(3);
+            assert!(g.is_active());
+        }
+        drop(root);
+        assert_eq!(trace.rows("scan"), 3);
+    }
+    let mut g = unq::obs::span::enter("scan");
+    g.add_rows(1);
+    // NOTE: other tests in this *binary* never begin traces concurrently
+    // with this check except the block above, which has fully dropped
+    assert!(!g.is_active(),
+            "dropping the last trace must restore the inert fast path");
+    drop(g);
+    let before = allocs_here();
+    for _ in 0..1000 {
+        let _g = unq::obs::span::enter("scan_task");
+    }
+    assert_eq!(allocs_here() - before, 0);
+}

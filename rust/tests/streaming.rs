@@ -187,6 +187,73 @@ fn crash_recovery_mid_delete_record_keeps_the_row_alive() {
 }
 
 #[test]
+fn e2e_obs_families_move_on_the_write_and_read_path() {
+    // the observability acceptance path (rust/DESIGN.md §10): drive the
+    // full streaming write path (WAL appends + fsync, compaction) and the
+    // batched read path (pool scan with live tombstones), then check every
+    // touched metric family moved.  The registry is process-global and
+    // other tests run concurrently, so all assertions are on deltas and
+    // `>=` — never exact equality.
+    let (_, base, queries, pq) = setup(900);
+    let reg = unq::obs::global();
+    let before = reg.snapshot();
+
+    let dir = TempDir::new("stream").unwrap();
+    let root = dir.path().join("ix");
+    let ix = StreamingIndex::open(
+        &root, 8, None,
+        StreamConfig { segment_rows: 200, compact_segments: 2, wal_sync: 1 },
+    )
+    .unwrap();
+    let mut ids = Vec::new();
+    for lo in (0..800).step_by(200) {
+        ids.extend(ix.insert_batch(&pq, base.rows(lo, lo + 200)).unwrap());
+    }
+    let victims: Vec<u32> = ids.iter().copied().step_by(5).collect();
+    ix.delete_batch(&victims).unwrap();
+    assert!(ix.compact().unwrap(), "sealed segments must merge");
+    // tombstone a few rows AFTER compaction so the read path sees dead
+    // rows and must over-fetch (stream.overfetch_rows)
+    ix.delete_batch(&ids[1..4]).unwrap();
+
+    let exec = unq::exec::Executor::new(2);
+    let cfg = SearchConfig { rerank_l: 50, k: 10, num_threads: 2,
+                             shard_rows: 64, ..Default::default() };
+    let qs: Vec<&[f32]> =
+        (0..queries.len()).map(|qi| queries.row(qi)).collect();
+    let ks = vec![cfg.k; qs.len()];
+    // observability must be a read-only side channel: the same batch
+    // with and without a live trace returns bit-identical ids
+    let want = ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+    let (trace, root_span) = unq::obs::Trace::begin("query");
+    let got = ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+    drop(root_span);
+    assert_eq!(got, want, "tracing changed streaming search results");
+
+    // the span tree saw the scan fan-out and its rendering names it
+    assert!(trace.rows("scan_task") > 0, "scan_task spans must carry rows");
+    let explain = trace.render();
+    assert!(explain.contains("scan"), "EXPLAIN must show the scan stage:\
+                                       \n{explain}");
+
+    let d = reg.snapshot().delta(&before);
+    for family in [
+        "wal.appends", "wal.commits", "compaction.runs",
+        "stream.segments_scanned", "stream.overfetch_rows",
+        "scan.rows_f32", "scan.tasks", "exec.tasks",
+    ] {
+        assert!(d.counter(family) > 0, "family {family} must move: {d:?}");
+    }
+    // each query scans every sealed segment plus the active one
+    assert!(d.counter("stream.segments_scanned") >= qs.len() as u64);
+    for h in ["wal.fsync_us", "exec.task_us"] {
+        assert!(d.hist(h).is_some_and(|h| h.count > 0),
+                "histogram {h} must record: {d:?}");
+    }
+    assert!(d.hist("compaction.duration_us").is_some_and(|h| h.count > 0));
+}
+
+#[test]
 fn routed_durable_recovery_preserves_results() {
     let (train, base, queries, _) = setup(900);
     let coarse = CoarseQuantizer::train(&train.data, train.dim, 6, 2, 6);
