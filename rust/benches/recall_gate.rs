@@ -1,7 +1,12 @@
 //! CI recall gate: run the harness at smoke sizes across
-//! {f32, u16, u8, u4} × {flat, ivf} (+ the streaming write path, + the
-//! natively trained UNQ across {flat, ivf}), write the measured
-//! recall@10 to `BENCH_recall.smoke.json`, and FAIL (non-zero exit) when
+//! {f32, u16, u8} × {flat, ivf} at 64 codewords, u4 × {flat, ivf} on a
+//! dedicated 16-codeword config (the only regime where the real 4-bit
+//! nibble kernel runs — at 64 codewords u4 silently falls back to the
+//! f32 path, so gating it there never exercised the kernel), the disk
+//! IVF tier under a deliberately thrashing cache budget (+ the
+//! streaming write path, + the natively trained UNQ across
+//! {flat, ivf}), write the measured recall@10 to
+//! `BENCH_recall.smoke.json`, and FAIL (non-zero exit) when
 //!
 //! * a combination drops more than `tolerance_pct` below the floor
 //!   committed in `BENCH_baseline.json` (null floors are skipped with a
@@ -11,10 +16,14 @@
 //!   every merge from the first CI run:
 //!     - IVF at `nprobe = all` (non-residual) must equal the flat
 //!       engine's recall exactly at f32 (bit-identical results);
+//!     - the disk IVF tier must equal the RAM IVF backend exactly at
+//!       every measured precision, even with a cache budget far below
+//!       the probed working set (rust/DESIGN.md §11);
 //!     - the streaming index over freshly inserted rows must equal the
 //!       flat engine's recall exactly at f32 (same codes, same ids);
-//!     - u16/u8 must stay within the tolerance of their f32 siblings
-//!       (integer selection feeds the same exact d1 rerank).
+//!     - u16/u8/u4 must stay within the tolerance of their same-config
+//!       f32 siblings (integer selection feeds the same exact d1
+//!       rerank).
 //!
 //! Run: `cargo bench --bench recall_gate` (tiny fixed sizes; caches
 //! land under `target/ci-gate/` so reruns are warm).
@@ -69,17 +78,17 @@ fn main() {
 
     let mut cells: Vec<Cell> = Vec::new();
 
-    // flat × {f32, u16, u8, u4} — at 64 codewords u4 exercises the
-    // wide-codebook fallback (scores through the exact f32 kernel), so
-    // its cell doubles as a fallback-correctness gate
-    let flat_pts =
-        exp.run_precision_sweep(search, ScanPrecision::all());
+    // flat × {f32, u16, u8} at 64 codewords; u4 moved to the dedicated
+    // 16-codeword config below where the real nibble kernel runs
+    let flat_pts = exp.run_precision_sweep(
+        search,
+        &[ScanPrecision::F32, ScanPrecision::U16, ScanPrecision::U8]);
     for pt in &flat_pts {
         let key = match pt.precision {
             ScanPrecision::F32 => "flat_f32",
             ScanPrecision::U16 => "flat_u16",
             ScanPrecision::U8 => "flat_u8",
-            ScanPrecision::U4 => "flat_u4",
+            ScanPrecision::U4 => unreachable!("u4 gated at 16 codewords"),
         };
         cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
     }
@@ -96,17 +105,13 @@ fn main() {
         }
     };
     ivf.ensure_packed();
-    for &prec in ScanPrecision::all() {
+    for (prec, key) in [(ScanPrecision::F32, "ivf_f32"),
+                        (ScanPrecision::U16, "ivf_u16"),
+                        (ScanPrecision::U8, "ivf_u8")] {
         let mut s = search;
         s.scan_precision = prec;
         s.nprobe = nprobe_real;
         let pt = exp.sweep_point(&ivf, s);
-        let key = match prec {
-            ScanPrecision::F32 => "ivf_f32",
-            ScanPrecision::U16 => "ivf_u16",
-            ScanPrecision::U8 => "ivf_u8",
-            ScanPrecision::U4 => "ivf_u4",
-        };
         cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
     }
     let ivf_all = {
@@ -114,6 +119,84 @@ fn main() {
         s.nprobe = 0; // all lists: bit-identical to flat (non-residual)
         exp.sweep_point(&ivf, s).recall.at10 as f64
     };
+
+    // disk IVF tier (rust/DESIGN.md §11): the same coarse partition
+    // served from the block archive through a deliberately thrashing
+    // 1MB hot-list cache — every probed list pages through block I/O,
+    // and the recall must still equal the RAM backend exactly
+    let mut dcfg = cfg.clone();
+    dcfg.ivf.cache_mb = 1;
+    let disk = match harness::build_or_load_disk_ivf(
+        &dcfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base, "")
+    {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("[recall-gate] disk ivf build failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    for (prec, key) in [(ScanPrecision::F32, "disk_ivf_f32"),
+                        (ScanPrecision::U8, "disk_ivf_u8")] {
+        let mut s = search;
+        s.scan_precision = prec;
+        s.nprobe = nprobe_real;
+        match exp.sweep_point_disk(&disk, s) {
+            Ok(pt) => cells.push(Cell {
+                key,
+                recall_at10: pt.recall.at10 as f64,
+            }),
+            Err(e) => {
+                eprintln!("[recall-gate] disk sweep ({key}) failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+
+    // ≤16-codeword config: the only regime where the u4 scan runs its
+    // real packed-nibble kernel (wider codebooks fall back to f32, see
+    // rust/DESIGN.md §9).  Separate runs dir — the model cache path
+    // does not encode k_codewords, and a 64-codeword model must not be
+    // served to this config.  Same-config f32 cells ride along as the
+    // u4 cells' sibling baselines.
+    let mut cfg16 = cfg.clone();
+    cfg16.k_codewords = 16;
+    cfg16.runs_dir = "target/ci-gate/runs-k16".into();
+    let mut exp16 = match harness::prepare(&cfg16, "") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[recall-gate] k16 harness prepare failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let pts16 = exp16.run_precision_sweep(
+        search, &[ScanPrecision::F32, ScanPrecision::U4]);
+    for pt in &pts16 {
+        let key = match pt.precision {
+            ScanPrecision::F32 => "flat_f32_k16",
+            ScanPrecision::U4 => "flat_u4",
+            _ => unreachable!("k16 sweep is f32 + u4 only"),
+        };
+        cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
+    }
+    let mut ivf16 = match harness::build_or_load_ivf(
+        &cfg16, exp16.quant.as_ref(), &exp16.splits.train,
+        &exp16.splits.base, "")
+    {
+        Ok(ivf) => ivf,
+        Err(e) => {
+            eprintln!("[recall-gate] k16 ivf build failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    ivf16.ensure_packed();
+    for (prec, key) in [(ScanPrecision::F32, "ivf_f32_k16"),
+                        (ScanPrecision::U4, "ivf_u4")] {
+        let mut s = search;
+        s.scan_precision = prec;
+        s.nprobe = nprobe_real;
+        let pt = exp16.sweep_point(&ivf16, s);
+        cells.push(Cell { key, recall_at10: pt.recall.at10 as f64 });
+    }
 
     // streaming write path: fresh inserts must serve flat-identical
     // results (ids 0..n in row order — recall needs no remap)
@@ -272,6 +355,17 @@ fn main() {
             "streaming f32 recall {stream_f32:.4} != flat {flat_f32:.4} \
              (fresh inserts must be flat-identical)"));
     }
+    // the disk tier's bit-identity contract: same results as the RAM
+    // IVF backend at every precision, regardless of cache budget
+    for (disk_key, ram_key) in [("disk_ivf_f32", "ivf_f32"),
+                                ("disk_ivf_u8", "ivf_u8")] {
+        let (d, r) = (get(disk_key), get(ram_key));
+        if (d - r).abs() > 1e-6 {
+            failures.push(format!(
+                "{disk_key}: recall@10 {d:.4} != {ram_key} {r:.4} \
+                 (disk tier must be bit-identical to RAM)"));
+        }
+    }
     // native UNQ sanity (baseline-free until its floors are measured):
     // both cells must sit far above chance (random R@10 ≈ 0.5 here)
     for key in ["unq_native_flat", "unq_native_ivf"] {
@@ -285,10 +379,10 @@ fn main() {
     for (int_key, base_key, slack) in [
         ("flat_u16", "flat_f32", tolerance),
         ("flat_u8", "flat_f32", 2.0 * tolerance),
-        ("flat_u4", "flat_f32", 2.0 * tolerance),
+        ("flat_u4", "flat_f32_k16", 2.0 * tolerance),
         ("ivf_u16", "ivf_f32", tolerance),
         ("ivf_u8", "ivf_f32", 2.0 * tolerance),
-        ("ivf_u4", "ivf_f32", 2.0 * tolerance),
+        ("ivf_u4", "ivf_f32_k16", 2.0 * tolerance),
     ] {
         let (got, base) = (get(int_key), get(base_key));
         if got + slack < base {

@@ -185,6 +185,11 @@ pub enum IndexBackendKind {
     /// IVF: coarse k-means partition, scan only the `nprobe` nearest
     /// inverted lists per query.
     Ivf,
+    /// Disk-resident IVF: routing state in RAM, per-list code blocks
+    /// paged from an offset-addressable archive through a byte-budgeted
+    /// hot-list cache (rust/DESIGN.md §11).  Bit-identical results to
+    /// `Ivf` at every precision/nprobe — only residency differs.
+    DiskIvf,
 }
 
 impl IndexBackendKind {
@@ -192,6 +197,7 @@ impl IndexBackendKind {
         match self {
             IndexBackendKind::Flat => "flat",
             IndexBackendKind::Ivf => "ivf",
+            IndexBackendKind::DiskIvf => "disk-ivf",
         }
     }
 
@@ -199,6 +205,9 @@ impl IndexBackendKind {
         match s.to_ascii_lowercase().as_str() {
             "flat" => Some(IndexBackendKind::Flat),
             "ivf" => Some(IndexBackendKind::Ivf),
+            "disk-ivf" | "disk_ivf" | "diskivf" | "disk" => {
+                Some(IndexBackendKind::DiskIvf)
+            }
             _ => None,
         }
     }
@@ -218,12 +227,16 @@ pub struct IvfConfig {
     /// codes only pay off with a residual-trained quantizer
     /// (rust/DESIGN.md §5) — opt in via `--residual` / `UNQ_RESIDUAL=1`.
     pub residual: bool,
+    /// Hot-list cache byte budget for the disk-resident backend, in
+    /// MiB (env `UNQ_CACHE_MB`, CLI `--cache-mb`).  Ignored by the
+    /// RAM backends.
+    pub cache_mb: usize,
 }
 
 impl Default for IvfConfig {
     fn default() -> Self {
         IvfConfig { backend: IndexBackendKind::Flat, num_lists: 64,
-                    residual: false }
+                    residual: false, cache_mb: 64 }
     }
 }
 
@@ -386,6 +399,7 @@ impl AppConfig {
                 ("backend", Json::Str(self.ivf.backend.name().to_string())),
                 ("num_lists", Json::Num(self.ivf.num_lists as f64)),
                 ("residual", Json::Bool(self.ivf.residual)),
+                ("cache_mb", Json::Num(self.ivf.cache_mb as f64)),
             ])),
             ("stream", Json::obj(vec![
                 ("segment_rows", Json::Num(self.stream.segment_rows as f64)),
@@ -484,6 +498,9 @@ impl AppConfig {
             if let Some(v) = s.get("residual").and_then(Json::as_bool) {
                 cfg.ivf.residual = v;
             }
+            if let Some(v) = s.get("cache_mb").and_then(Json::as_usize) {
+                cfg.ivf.cache_mb = v;
+            }
         }
         if let Some(s) = j.get("stream") {
             if let Some(v) = s.get("segment_rows").and_then(Json::as_usize) {
@@ -572,6 +589,9 @@ impl AppConfig {
         }
         if cfg.ivf.num_lists == 0 {
             bail!("ivf.num_lists must be positive");
+        }
+        if cfg.ivf.cache_mb == 0 {
+            bail!("ivf.cache_mb must be positive");
         }
         if cfg.stream.segment_rows == 0 || cfg.stream.compact_segments == 0 {
             bail!("stream.segment_rows and stream.compact_segments must \
@@ -694,6 +714,13 @@ impl AppConfig {
                 }
             }
         }
+        if let Ok(s) = std::env::var("UNQ_CACHE_MB") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.ivf.cache_mb = v;
+                }
+            }
+        }
         if let Ok(s) = std::env::var("UNQ_RESIDUAL") {
             match s.to_ascii_lowercase().as_str() {
                 "1" | "true" | "yes" => self.ivf.residual = true,
@@ -804,18 +831,21 @@ mod tests {
         let mut c = AppConfig::default();
         assert_eq!(c.ivf.backend, IndexBackendKind::Flat);
         assert!(!c.ivf.residual, "residual is opt-in");
+        assert_eq!(c.ivf.cache_mb, 64);
         assert_eq!(c.search.nprobe, 0);
-        c.ivf.backend = IndexBackendKind::Ivf;
+        c.ivf.backend = IndexBackendKind::DiskIvf;
         c.ivf.num_lists = 128;
         c.ivf.residual = true;
+        c.ivf.cache_mb = 7;
         c.search.nprobe = 9;
         let dir = TempDir::new("cfg").unwrap();
         let p = dir.path().join("ivf.json");
         c.save(&p).unwrap();
         let back = AppConfig::from_file(&p).unwrap();
-        assert_eq!(back.ivf.backend, IndexBackendKind::Ivf);
+        assert_eq!(back.ivf.backend, IndexBackendKind::DiskIvf);
         assert_eq!(back.ivf.num_lists, 128);
         assert!(back.ivf.residual);
+        assert_eq!(back.ivf.cache_mb, 7);
         assert_eq!(back.search.nprobe, 9);
     }
 
@@ -846,6 +876,8 @@ mod tests {
         assert!(AppConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"ivf": {"num_lists": 0}}"#).unwrap();
         assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"ivf": {"cache_mb": 0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
     }
 
     #[test]
@@ -853,8 +885,15 @@ mod tests {
         assert_eq!(IndexBackendKind::parse("IVF"), Some(IndexBackendKind::Ivf));
         assert_eq!(IndexBackendKind::parse("flat"),
                    Some(IndexBackendKind::Flat));
+        assert_eq!(IndexBackendKind::parse("disk-ivf"),
+                   Some(IndexBackendKind::DiskIvf));
+        assert_eq!(IndexBackendKind::parse("DISK_IVF"),
+                   Some(IndexBackendKind::DiskIvf));
+        assert_eq!(IndexBackendKind::parse("disk"),
+                   Some(IndexBackendKind::DiskIvf));
         assert_eq!(IndexBackendKind::parse("hnsw"), None);
         assert_eq!(IndexBackendKind::Ivf.name(), "ivf");
+        assert_eq!(IndexBackendKind::DiskIvf.name(), "disk-ivf");
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub fn run_serve(cfg: &AppConfig, total_queries: usize) -> Result<ServeReport> {
                 cfg, quant.as_ref(), &splits.train, &splits.base, "")?;
             IndexBackend::Ivf(Arc::new(ivf))
         }
+        IndexBackendKind::DiskIvf => {
+            let disk = harness::build_or_load_disk_ivf(
+                cfg, quant.as_ref(), &splits.train, &splits.base, "")?;
+            IndexBackend::DiskIvf(Arc::new(disk))
+        }
     };
     let quant: Arc<dyn crate::quant::Quantizer> = Arc::from(quant);
     let server = Arc::new(

@@ -17,6 +17,7 @@ use crate::data::{self, Dataset};
 use crate::exec::Executor;
 use crate::gt::GroundTruth;
 use crate::index::{CompressedIndex, SearchEngine};
+use crate::ivf::disk::DiskIvfIndex;
 use crate::ivf::{CoarseQuantizer, IvfIndex};
 use crate::quant::{additive::Additive, lattice, lsq, opq::Opq, pq::Pq,
                    unq::UnqQuantizer, unq_native::NativeUnq, Quantizer};
@@ -84,6 +85,32 @@ impl Experiment {
             recall: recall(&results, &self.gt),
             secs_per_query: secs / queries.len().max(1) as f64,
         }
+    }
+
+    /// [`Experiment::sweep_point`] on the disk tier: same measurement,
+    /// plus error surfacing from the lazy block fetches (cache state
+    /// carries across calls, so repeated points measure a warming
+    /// cache — exactly what the tier serves in practice).
+    pub fn sweep_point_disk(&self, disk: &DiskIvfIndex,
+                            search: SearchConfig) -> Result<NprobePoint> {
+        let exec = Executor::new(search.num_threads);
+        let queries: Vec<&[f32]> = (0..self.splits.query.len())
+            .map(|qi| self.splits.query.row(qi))
+            .collect();
+        let mut results = Vec::with_capacity(queries.len());
+        let t0 = Instant::now();
+        for chunk in queries.chunks(EVAL_BATCH) {
+            let ks = vec![search.k; chunk.len()];
+            results.extend(disk.search_batch_on(
+                self.quant.as_ref(), &exec, chunk, &ks, &search)?);
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        Ok(NprobePoint {
+            nprobe: if search.nprobe == 0 { disk.num_lists() }
+                    else { search.nprobe.min(disk.num_lists()) },
+            recall: recall(&results, &self.gt),
+            secs_per_query: secs / queries.len().max(1) as f64,
+        })
     }
 
     /// The recall@R-vs-nprobe sweep: run the full query set through the
@@ -249,6 +276,27 @@ pub fn build_or_load_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
         ivf.ensure_sketches(quant);
     }
     Ok(ivf)
+}
+
+/// Build (or reuse) the disk-tier block archive for a prepared
+/// experiment and open it for lazy serving under the configured
+/// hot-list cache budget (`cfg.ivf.cache_mb`).  The archive derives
+/// from the RAM index ([`build_or_load_ivf`]), so both tiers always
+/// serve exactly the same layout; a sketch-bearing archive gets its
+/// own cache file because the per-list payloads differ.
+pub fn build_or_load_disk_ivf(cfg: &AppConfig, quant: &dyn Quantizer,
+                              train: &Dataset, base: &Dataset,
+                              variant: &str) -> Result<DiskIvfIndex> {
+    let ivf = build_or_load_ivf(cfg, quant, train, base, variant)?;
+    let stem = ivf_cache_path(cfg, cfg.quantizer, base.len(), variant);
+    let suffix =
+        if ivf.codes.sketches.is_some() { ".pf.blocks" } else { ".blocks" };
+    let path = PathBuf::from(format!("{}{}", stem.display(), suffix));
+    if !path.exists() {
+        eprintln!("[harness] writing disk-ivf archive {}", path.display());
+        DiskIvfIndex::save_archive(&ivf, &path)?;
+    }
+    DiskIvfIndex::open(&path, cfg.ivf.cache_mb.saturating_mul(1 << 20))
 }
 
 /// Build an in-memory streaming index by inserting `base` in fixed-size
@@ -539,6 +587,35 @@ mod tests {
                                       "").unwrap();
         assert_eq!(again.remap, ivf.remap);
         assert_eq!(again.codes.codes, ivf.codes.codes);
+    }
+
+    #[test]
+    fn disk_tier_sweep_matches_ram_and_reuses_archive() {
+        let dir = TempDir::new("harness").unwrap();
+        let mut cfg = tiny_cfg(dir.path(), QuantizerKind::Pq);
+        cfg.ivf.num_lists = 8;
+        cfg.ivf.cache_mb = 1;
+        let exp = prepare(&cfg, "").unwrap();
+        let ivf = build_or_load_ivf(&cfg, exp.quant.as_ref(),
+                                    &exp.splits.train, &exp.splits.base, "")
+            .unwrap();
+        let disk = build_or_load_disk_ivf(
+            &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
+            "").unwrap();
+        assert_eq!(disk.n(), ivf.n());
+        let search = SearchConfig { rerank_l: 100, k: 100, nprobe: 3,
+                                    ..Default::default() };
+        let ram = exp.sweep_point(&ivf, search);
+        let dsk = exp.sweep_point_disk(&disk, search).unwrap();
+        assert_eq!(dsk.recall, ram.recall,
+                   "disk tier must be recall-identical to RAM");
+        assert_eq!(dsk.nprobe, ram.nprobe);
+        // second build reuses the archive file (and still matches)
+        let again = build_or_load_disk_ivf(
+            &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
+            "").unwrap();
+        let pt = exp.sweep_point_disk(&again, search).unwrap();
+        assert_eq!(pt.recall, ram.recall);
     }
 
     #[test]

@@ -1,0 +1,819 @@
+//! Disk-resident IVF tier (rust/DESIGN.md §11): coarse routing in RAM,
+//! per-list code blocks on disk, a byte-budgeted hot-list cache between
+//! them.
+//!
+//! A [`DiskIvfIndex`] is the SPANN-style sibling of the RAM
+//! [`IvfIndex`]: the coarse codebook, list offsets, and id remap stay
+//! resident (a few MB even at billion scale), while the per-list code
+//! matrices live in a [`crate::store::blocks`] archive — one block per
+//! inverted list — and page in on demand through a
+//! [`crate::store::cache::ListCache`].  A fetched list rebuilds its
+//! full scan surface (flat codes, blocked [`PackedIndex`] mirror with
+//! the U4 nibble twin when codes allow, per-row sketches), so every
+//! `ScanPrecision` and the 1-bit pre-filter run against a cached list
+//! exactly as they would against the RAM index.
+//!
+//! **Bit-identity contract.**  Search here must return exactly what
+//! [`IvfIndex::search_batch_on`] returns, at every precision, nprobe,
+//! executor shape, and cache budget — including budgets smaller than a
+//! single list, where every batch re-reads its lists from disk.  The
+//! argument:
+//!
+//! * Per-list scan tasks shard `[0, len)` with the same `shard_rows`
+//!   the RAM planner derives from the *total* index size, and
+//!   [`shard_ranges_in`] steps from the range start — so the relative
+//!   decomposition of every list is identical to the RAM plan's
+//!   `[offsets[l], offsets[l+1])` sharding.
+//! * Local row `r` of list `l` is global row `offsets[l] + r`, so the
+//!   remap to original ids is the same function.
+//! * Per-slot partials merge in task-submission order, and each slot's
+//!   tasks are emitted in ascending row order, so the `(score, id)`
+//!   lexicographic reduction is decomposition-invariant exactly as on
+//!   the RAM path.
+//! * Residency planning reorders only *whole slots* (resident lists'
+//!   tasks are enqueued ahead of freshly-fetched ones so warm data
+//!   scans first); slot indices, not queue positions, address the
+//!   result grid, so the reorder cannot change any result.
+//!
+//! **Arc-pinning.**  Every list a plan scans is held as an
+//! `Arc<CompressedIndex>` for the whole search, so a concurrent search
+//! thrashing the cache can evict the entry without ever invalidating
+//! in-flight scans — eviction drops the cache's reference, never the
+//! data.
+//!
+//! Fetch misses are batched per search: distinct missing lists are
+//! read in ascending block order (one forward sweep of the archive)
+//! under a `blockio` span, CRC-verified per block, and offered to the
+//! cache (admission on second touch — see `store::cache`).  A CRC
+//! mismatch or I/O failure surfaces as a typed error from search, not
+//! a panic.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context};
+
+use crate::config::SearchConfig;
+use crate::exec::{shard_ranges_in, Executor, IndexedScanTask, PrefilterPlan};
+use crate::index::scan::merge_topk;
+use crate::index::CompressedIndex;
+use crate::linalg::{sq_l2, TopK};
+use crate::obs;
+use crate::quant::{Lut, Quantizer, SketchPlanes};
+use crate::store::blocks::{write_archive, BlockReader};
+use crate::store::cache::ListCache;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::search::d1_residual;
+use super::IvfIndex;
+
+/// One stage-1 candidate: `(ADC score, original id, local row, list)`.
+type Candidate = (f32, u32, u32, u32);
+
+/// Cache stripes: enough to keep concurrent searches off each other's
+/// locks without fragmenting tiny budgets into uselessly small shards.
+const CACHE_SHARDS: usize = 8;
+
+/// The disk-resident IVF backend: RAM routing state + a lazily-read
+/// block archive + the hot-list cache.
+pub struct DiskIvfIndex {
+    pub coarse: super::CoarseQuantizer,
+    pub residual: bool,
+    /// List `l`'s rows are archive block `l + 1`, global rows
+    /// `[offsets[l], offsets[l + 1])`.
+    pub offsets: Vec<usize>,
+    /// `remap[global_row]` = original database id.
+    pub remap: Vec<u32>,
+    n: usize,
+    stride: usize,
+    has_sketches: bool,
+    reader: BlockReader,
+    cache: ListCache<CompressedIndex>,
+}
+
+impl DiskIvfIndex {
+    /// Serialize a built RAM [`IvfIndex`] into a block archive:
+    /// block 0 = routing state (centroids ‖ remap ‖ offsets), block
+    /// `l + 1` = list `l`'s codes (‖ its row sketches when built).
+    /// Sketches present at save time ride along so the pre-filter
+    /// works identically after a reload; the packed mirrors are
+    /// *rebuilt* per list on fetch (they are derived data).
+    pub fn save_archive(ivf: &IvfIndex, path: &Path) -> Result<()> {
+        let nl = ivf.num_lists();
+        let dim = ivf.coarse.dim;
+        let n = ivf.n();
+        let stride = ivf.codes.stride;
+        let has_sketches = ivf.codes.sketches.is_some();
+
+        let mut b0 =
+            Vec::with_capacity(nl * dim * 4 + n * 4 + (nl + 1) * 8);
+        for &c in &ivf.coarse.centroids {
+            b0.extend_from_slice(&c.to_le_bytes());
+        }
+        for &id in &ivf.remap {
+            b0.extend_from_slice(&id.to_le_bytes());
+        }
+        for &o in &ivf.offsets {
+            b0.extend_from_slice(&(o as u64).to_le_bytes());
+        }
+
+        let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(nl + 1);
+        payloads.push(b0);
+        for l in 0..nl {
+            let (lo, hi) = (ivf.offsets[l], ivf.offsets[l + 1]);
+            let mut b = Vec::with_capacity(
+                (hi - lo) * (stride + if has_sketches { 8 } else { 0 }));
+            b.extend_from_slice(&ivf.codes.codes[lo * stride..hi * stride]);
+            if let Some(sk) = &ivf.codes.sketches {
+                for &s in &sk[lo..hi] {
+                    b.extend_from_slice(&s.to_le_bytes());
+                }
+            }
+            payloads.push(b);
+        }
+
+        let meta = Json::obj(vec![
+            ("kind", Json::Str("disk_ivf".into())),
+            ("residual", Json::Bool(ivf.residual)),
+            ("num_lists", Json::Num(nl as f64)),
+            ("dim", Json::Num(dim as f64)),
+            ("n", Json::Num(n as f64)),
+            ("stride", Json::Num(stride as f64)),
+            ("has_sketches", Json::Bool(has_sketches)),
+        ]);
+        let blocks: Vec<(&[u8], u64)> = payloads
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let rows = if i == 0 {
+                    0
+                } else {
+                    (ivf.offsets[i] - ivf.offsets[i - 1]) as u64
+                };
+                (p.as_slice(), rows)
+            })
+            .collect();
+        write_archive(path, &meta, &blocks)
+    }
+
+    /// Open an archive for lazy serving with a `cache_bytes` hot-list
+    /// budget.  Block 0 (routing state) loads eagerly and every
+    /// directory entry is cross-checked against the metadata, so a
+    /// truncated or mislabeled archive fails here, not mid-query.
+    pub fn open(path: &Path, cache_bytes: usize) -> Result<DiskIvfIndex> {
+        let reader = BlockReader::open(path)?;
+        let m = &reader.meta;
+        ensure!(m.get("kind").and_then(Json::as_str) == Some("disk_ivf"),
+                "not a disk_ivf archive: {path:?}");
+        let field = |k: &str| {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta field {k:?} in {path:?}"))
+        };
+        let nl = field("num_lists")?;
+        let dim = field("dim")?;
+        let n = field("n")?;
+        let stride = field("stride")?;
+        let residual = m.get("residual").and_then(Json::as_bool)
+            .with_context(|| format!("meta field \"residual\" in {path:?}"))?;
+        let has_sketches = m.get("has_sketches").and_then(Json::as_bool)
+            .unwrap_or(false);
+        ensure!(nl > 0 && dim > 0 && stride > 0,
+                "degenerate disk_ivf meta in {path:?}");
+        ensure!(reader.num_blocks() == nl + 1,
+                "{path:?} has {} blocks, expected {} (1 routing + {nl} \
+                 lists)", reader.num_blocks(), nl + 1);
+
+        let b0 = reader.read_block(0)?;
+        let want0 = nl * dim * 4 + n * 4 + (nl + 1) * 8;
+        ensure!(b0.len() == want0,
+                "routing block is {}B, expected {want0}B in {path:?}",
+                b0.len());
+        let mut centroids = Vec::with_capacity(nl * dim);
+        let mut at = 0usize;
+        for _ in 0..nl * dim {
+            centroids.push(f32::from_le_bytes(
+                b0[at..at + 4].try_into().unwrap()));
+            at += 4;
+        }
+        let mut remap = Vec::with_capacity(n);
+        for _ in 0..n {
+            remap.push(u32::from_le_bytes(b0[at..at + 4].try_into().unwrap()));
+            at += 4;
+        }
+        let mut offsets = Vec::with_capacity(nl + 1);
+        for _ in 0..nl + 1 {
+            let o = u64::from_le_bytes(b0[at..at + 8].try_into().unwrap());
+            offsets.push(o as usize);
+            at += 8;
+        }
+        ensure!(offsets.first() == Some(&0) && offsets.last() == Some(&n),
+                "offsets must span [0, {n}] in {path:?}");
+        ensure!(offsets.windows(2).all(|w| w[0] <= w[1]),
+                "offsets must be non-decreasing in {path:?}");
+        ensure!(remap.iter().all(|&id| (id as usize) < n),
+                "remap ids must be < {n} in {path:?}");
+        let row_bytes = stride + if has_sketches { 8 } else { 0 };
+        for l in 0..nl {
+            let len = offsets[l + 1] - offsets[l];
+            let e = reader.entry(l + 1);
+            ensure!(e.rows == len as u64
+                        && e.len == (len * row_bytes) as u64,
+                    "list {l} block is {}B/{} rows, expected {}B/{len} \
+                     rows in {path:?}", e.len, e.rows, len * row_bytes);
+        }
+        Ok(DiskIvfIndex {
+            coarse: super::CoarseQuantizer::from_centroids(dim, centroids),
+            residual,
+            offsets,
+            remap,
+            n,
+            stride,
+            has_sketches,
+            reader,
+            cache: ListCache::new(cache_bytes, CACHE_SHARDS),
+        })
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn num_lists(&self) -> usize {
+        self.coarse.num_lists()
+    }
+
+    #[inline]
+    pub fn list_len(&self, l: usize) -> usize {
+        self.offsets[l + 1] - self.offsets[l]
+    }
+
+    /// Code storage bytes (archive payload accounting, flat-equivalent).
+    pub fn storage_bytes(&self) -> usize {
+        self.n * self.stride
+    }
+
+    /// Resident hot-cache bytes right now (diagnostics).
+    pub fn cache_bytes_resident(&self) -> usize {
+        self.cache.bytes_resident()
+    }
+
+    /// Read list `l` from disk and rebuild its full scan surface:
+    /// flat codes, packed fast-scan mirror (U4 nibble twin included
+    /// when all codes fit), and row sketches when archived.  Returns
+    /// the value plus its resident-byte estimate for cache accounting.
+    fn load_list(&self, l: usize) -> Result<(Arc<CompressedIndex>, usize)> {
+        let len = self.list_len(l);
+        let bytes = self.reader.read_block(l + 1)?;
+        let code_bytes = len * self.stride;
+        let mut ix = CompressedIndex::from_codes(
+            len, self.stride, bytes[..code_bytes].to_vec());
+        if self.has_sketches {
+            let mut sk = Vec::with_capacity(len);
+            for r in 0..len {
+                let at = code_bytes + r * 8;
+                sk.push(u64::from_le_bytes(
+                    bytes[at..at + 8].try_into().unwrap()));
+            }
+            ix.sketches = Some(sk);
+        }
+        ix.ensure_packed();
+        let resident = ix.codes.len()
+            + ix.packed.as_ref().map_or(0, |p| {
+                p.data.len() + p.nibbles.as_ref().map_or(0, Vec::len)
+            })
+            + ix.sketches.as_ref().map_or(0, |s| s.len() * 8);
+        Ok((Arc::new(ix), resident))
+    }
+
+    /// Resolve every distinct probed list to an `Arc`'d scan surface:
+    /// cache hits immediately, misses in one ascending-offset batched
+    /// read pass (then offered to the cache).  The returned map pins
+    /// every list for the caller's plan lifetime.
+    fn fetch_lists(&self, probed: &[usize])
+                   -> Result<HashMap<usize, (Arc<CompressedIndex>, bool)>> {
+        let mut out: HashMap<usize, (Arc<CompressedIndex>, bool)> =
+            HashMap::new();
+        let mut misses: Vec<usize> = Vec::new();
+        for &l in probed {
+            if out.contains_key(&l) || misses.contains(&l) {
+                continue;
+            }
+            match self.cache.get(l) {
+                Some(arc) => {
+                    out.insert(l, (arc, true));
+                }
+                None => misses.push(l),
+            }
+        }
+        if !misses.is_empty() {
+            // ascending list id == ascending file offset: the batched
+            // miss I/O is one forward sweep of the archive
+            misses.sort_unstable();
+            let mut span = crate::span!("blockio");
+            let mut bytes = 0u64;
+            for &l in &misses {
+                let (arc, resident) = self.load_list(l)?;
+                bytes += self.reader.entry(l + 1).len;
+                self.cache.insert(l, Arc::clone(&arc), resident);
+                out.insert(l, (arc, false));
+            }
+            span.add_rows(bytes);
+        }
+        Ok(out)
+    }
+
+    /// Single-query convenience: a batch of one on the inline executor.
+    pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
+                  cfg: &SearchConfig) -> Result<Vec<u32>> {
+        Ok(self
+            .search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)?
+            .pop()
+            .expect("one query in, one result out"))
+    }
+
+    /// Batched two-stage `nprobe` search, bit-identical to
+    /// [`IvfIndex::search_batch_on`] (see the module docs for the
+    /// argument).  Errors surface I/O and CRC failures from the lazy
+    /// block fetches; the RAM path has no failing stage.
+    pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
+                           queries: &[&[f32]], ks: &[usize],
+                           cfg: &SearchConfig) -> Result<Vec<Vec<u32>>> {
+        assert_eq!(queries.len(), ks.len(), "one k per query");
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let nl = self.num_lists();
+        let nprobe = if cfg.nprobe == 0 { nl } else { cfg.nprobe.min(nl) };
+        let do_rerank = !cfg.no_rerank && quant.supports_rerank();
+        let ls: Vec<usize> = ks
+            .iter()
+            .map(|&k| {
+                let l = if do_rerank { cfg.rerank_l.max(k) } else { k };
+                l.max(1)
+            })
+            .collect();
+
+        // coarse selection — identical to the RAM path
+        let probes: Vec<Vec<u32>> = {
+            let mut span = crate::span!("route");
+            let probes: Vec<Vec<u32>> = queries
+                .iter()
+                .map(|q| self.coarse.nearest_lists(q, nprobe))
+                .collect();
+            let probed: usize = probes.iter().map(Vec::len).sum();
+            obs::global().ivf_lists_probed.add(probed as u64);
+            span.add_rows(probed as u64);
+            probes
+        };
+
+        // one slot per non-empty (query, probed list), exactly the RAM
+        // slot layout (residual LUTs per slot, shared per query else)
+        let mut slot_query: Vec<usize> = Vec::new();
+        let mut slot_list: Vec<usize> = Vec::new();
+        let mut slot_ks: Vec<usize> = Vec::new();
+        let mut slot_lut: Vec<usize> = Vec::new();
+        let mut residual_qs: Vec<Vec<f32>> = Vec::new();
+        for (qi, probe) in probes.iter().enumerate() {
+            for &l in probe {
+                let l = l as usize;
+                if self.list_len(l) == 0 {
+                    continue;
+                }
+                slot_lut.push(if self.residual {
+                    let c = self.coarse.centroid(l);
+                    residual_qs.push(
+                        queries[qi].iter().zip(c).map(|(a, b)| a - b).collect());
+                    residual_qs.len() - 1
+                } else {
+                    qi
+                });
+                slot_query.push(qi);
+                slot_list.push(l);
+                slot_ks.push(ls[qi]);
+            }
+        }
+        let luts: Vec<Lut> = {
+            let mut span = crate::span!("lut_build");
+            let luts = if self.residual {
+                obs::global().ivf_residual_luts
+                    .add(residual_qs.len() as u64);
+                let refs: Vec<&[f32]> =
+                    residual_qs.iter().map(|v| v.as_slice()).collect();
+                quant.lut_batch(&refs)
+            } else {
+                quant.lut_batch(queries)
+            };
+            span.add_rows(luts.len() as u64);
+            luts
+        };
+
+        // residency: pin every probed list (cache hit or batched read)
+        let fetched = self.fetch_lists(&slot_list)?;
+        // index slab for the multi-index plan, resident lists first so
+        // warm data is at the front of the pool queue
+        let mut index_refs: Vec<&CompressedIndex> = Vec::new();
+        let mut index_of: HashMap<usize, usize> = HashMap::new();
+        for want_resident in [true, false] {
+            for &l in &slot_list {
+                if index_of.contains_key(&l) {
+                    continue;
+                }
+                let (arc, resident) = &fetched[&l];
+                if *resident == want_resident {
+                    index_of.insert(l, index_refs.len());
+                    index_refs.push(arc.as_ref());
+                }
+            }
+        }
+
+        // shard size derives from the WHOLE index, exactly like the
+        // RAM planner, so each list's relative decomposition matches
+        let es = exec.effective_shard_rows(self.n.max(1), cfg.shard_rows);
+        // tasks: resident slots first, then miss slots; within a slot,
+        // ascending row ranges (the determinism requirement)
+        let mut tasks: Vec<IndexedScanTask> = Vec::new();
+        for want_resident in [true, false] {
+            for (slot, &l) in slot_list.iter().enumerate() {
+                if fetched[&l].1 != want_resident {
+                    continue;
+                }
+                for (lo, hi) in shard_ranges_in(0, self.list_len(l), es) {
+                    tasks.push(IndexedScanTask {
+                        index: index_of[&l], slot, lut: slot_lut[slot],
+                        lo, hi,
+                    });
+                }
+            }
+        }
+        // 1-bit pre-filter under the same engagement rule as RAM:
+        // non-residual codes with archived sketches only
+        let pre = if cfg.prefilter && !self.residual && self.has_sketches {
+            let planes = SketchPlanes::for_dim(quant.dim());
+            Some(PrefilterPlan {
+                qsketches: queries
+                    .iter()
+                    .map(|q| Some(planes.sketch(q)))
+                    .collect(),
+                margin: cfg.prefilter_margin,
+            })
+        } else {
+            None
+        };
+        let parts = exec.run_scan_tasks_multi_pre(
+            &luts, &index_refs, &slot_ks, &tasks, cfg.scan_precision,
+            pre.as_ref());
+
+        // cross-list reduce: local rows lift to global through the
+        // list base offset, then remap to original ids — the same
+        // function of (list, row) the RAM reduce computes
+        let mut parts_by_q: Vec<Vec<Vec<(f32, u32)>>> =
+            (0..queries.len()).map(|_| Vec::new()).collect();
+        let mut aux: Vec<HashMap<u32, (u32, u32)>> =
+            (0..queries.len()).map(|_| HashMap::new()).collect();
+        for (slot, part) in parts.into_iter().enumerate() {
+            let (qi, l) = (slot_query[slot], slot_list[slot]);
+            let base = self.offsets[l];
+            let mapped: Vec<(f32, u32)> = part
+                .into_iter()
+                .map(|(score, row)| {
+                    let id = self.remap[base + row as usize];
+                    aux[qi].insert(id, (row, l as u32));
+                    (score, id)
+                })
+                .collect();
+            parts_by_q[qi].push(mapped);
+        }
+        let cands: Vec<Vec<Candidate>> = parts_by_q
+            .into_iter()
+            .enumerate()
+            .map(|(qi, q_parts)| {
+                merge_topk(q_parts, ls[qi])
+                    .into_iter()
+                    .map(|(score, id)| {
+                        let (row, l) = aux[qi][&id];
+                        (score, id, row, l)
+                    })
+                    .collect()
+            })
+            .collect();
+
+        if !do_rerank {
+            return Ok(cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect());
+        }
+        Ok(self.rerank_batch(quant, queries, &cands, ks, &fetched))
+    }
+
+    /// Stage 2 over the pinned lists: gather candidate codes from each
+    /// candidate's (still-`Arc`-pinned) list, decode with a single
+    /// `reconstruct_batch` call, rank by exact `d1` — the RAM
+    /// [`IvfIndex::search_batch_on`] rerank with local-row gathers.
+    fn rerank_batch(&self, quant: &dyn Quantizer, queries: &[&[f32]],
+                    cands: &[Vec<Candidate>], ks: &[usize],
+                    fetched: &HashMap<usize, (Arc<CompressedIndex>, bool)>)
+                    -> Vec<Vec<u32>> {
+        let dim = quant.dim();
+        let cb = self.stride;
+        let total: usize = cands.iter().map(|c| c.len()).sum();
+        let mut span = crate::span!("rerank");
+        span.add_rows(total as u64);
+        let mut codes = Vec::with_capacity(total * cb);
+        for c in cands {
+            for &(_, _, row, l) in c {
+                codes.extend_from_slice(
+                    fetched[&(l as usize)].0.code(row as usize));
+            }
+        }
+        let mut recons = vec![0.0f32; total * dim];
+        if !quant.reconstruct_batch(&codes, &mut recons) {
+            // no decoder: keep scan order
+            return cands
+                .iter()
+                .zip(ks)
+                .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
+                .collect();
+        }
+        let mut out = Vec::with_capacity(queries.len());
+        let mut off = 0usize;
+        for ((&q, c), &k) in queries.iter().zip(cands).zip(ks) {
+            if c.is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            let mut top = TopK::new(k.min(c.len()));
+            for (ci, &(_, id, _, l)) in c.iter().enumerate() {
+                let rec = &recons[(off + ci) * dim..(off + ci + 1) * dim];
+                let d = if self.residual {
+                    d1_residual(q, rec, self.coarse.centroid(l as usize))
+                } else {
+                    sq_l2(q, rec)
+                };
+                top.push(d, id);
+            }
+            off += c.len();
+            out.push(top.into_sorted().into_iter().map(|(_, id)| id).collect());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ScanPrecision, SearchConfig};
+    use crate::data::{synthetic::Generator, Dataset, Family};
+    use crate::ivf::CoarseQuantizer;
+    use crate::quant::pq::Pq;
+    use crate::util::{prop, rng::SplitMix64, TempDir};
+
+    /// 16-codeword PQ so `ScanPrecision::U4` exercises the real 4-bit
+    /// kernel (nibble mirrors build: all codes < 16).
+    fn setup16(n_base: usize) -> (Dataset, Dataset, Pq) {
+        let gen = Generator::new(Family::SiftLike, 55);
+        let train = gen.generate(0, 1200);
+        let base = gen.generate(1, n_base);
+        let pq = Pq::train(&train.data, train.dim, 8, 16, 0, 8);
+        (train, base, pq)
+    }
+
+    fn qrefs(d: &Dataset) -> Vec<&[f32]> {
+        (0..d.len()).map(|qi| d.row(qi)).collect()
+    }
+
+    fn save_ram(ivf: &IvfIndex, dir: &TempDir, name: &str)
+                -> std::path::PathBuf {
+        let path = dir.path().join(name);
+        DiskIvfIndex::save_archive(ivf, &path).unwrap();
+        path
+    }
+
+    #[test]
+    fn archive_roundtrips_routing_state() {
+        let (train, base, pq) = setup16(2000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 10, 1, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let dir = TempDir::new("diskivf").unwrap();
+        let disk =
+            DiskIvfIndex::open(&save_ram(&ivf, &dir, "a.blocks"), 1 << 20)
+                .unwrap();
+        assert_eq!(disk.n(), ivf.n());
+        assert_eq!(disk.num_lists(), ivf.num_lists());
+        assert_eq!(disk.offsets, ivf.offsets);
+        assert_eq!(disk.remap, ivf.remap);
+        assert_eq!(disk.coarse.centroids, ivf.coarse.centroids);
+        assert!(!disk.residual);
+        // per-list payloads reproduce the RAM code rows exactly
+        for l in 0..disk.num_lists() {
+            let (arc, _) = disk.load_list(l).unwrap();
+            for r in 0..disk.list_len(l) {
+                assert_eq!(arc.code(r),
+                           ivf.codes.code(ivf.offsets[l] + r),
+                           "list {l} row {r}");
+            }
+            assert!(arc.is_packed(), "fetched lists carry packed mirrors");
+        }
+    }
+
+    #[test]
+    fn prop_disk_bit_identical_to_ram_across_precision_nprobe_budget() {
+        // THE acceptance property: at every (precision, nprobe, cache
+        // budget, executor shape) — including budgets smaller than one
+        // list — DiskIvfIndex returns exactly the RAM IvfIndex results.
+        // Two searches per case: the second runs against whatever the
+        // first left resident, so hits, misses, and evictions all mix.
+        let (train, base, pq) = setup16(2500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 12, 2, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        ivf.ensure_packed();
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "p.blocks");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 6);
+        let qs = qrefs(&queries);
+        prop::forall_ok(
+            4242,
+            12,
+            |r: &mut SplitMix64| {
+                let threads = 1 + r.below(3);
+                let shard_rows = [0usize, 1, 37, 500][r.below(4)];
+                let nprobe = [1usize, 3, 12, 0][r.below(4)];
+                let prec = [ScanPrecision::F32, ScanPrecision::U16,
+                            ScanPrecision::U8, ScanPrecision::U4]
+                    [r.below(4)];
+                // 64B: smaller than any list → pure-miss thrash path
+                let budget = [64usize, 20 << 10, 4 << 20][r.below(3)];
+                (threads, shard_rows, nprobe, prec, budget)
+            },
+            |&(threads, shard_rows, nprobe, prec, budget)| {
+                let cfg = SearchConfig {
+                    rerank_l: 40, k: 10, num_threads: threads, shard_rows,
+                    nprobe, scan_precision: prec, ..Default::default()
+                };
+                let exec = Executor::new(threads);
+                let ks = vec![cfg.k; qs.len()];
+                let want = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                let disk = DiskIvfIndex::open(&path, budget).unwrap();
+                for round in 0..2 {
+                    let got = disk
+                        .search_batch_on(&pq, &exec, &qs, &ks, &cfg)
+                        .map_err(|e| format!("search failed: {e:#}"))?;
+                    if got != want {
+                        return Err(format!(
+                            "round {round} threads={threads} \
+                             shard_rows={shard_rows} nprobe={nprobe} \
+                             {prec:?} budget={budget} diverged from RAM"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn residual_disk_matches_residual_ram() {
+        let (train, base, pq) = setup16(1500);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 8, 3, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, true);
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "r.blocks");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 5);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        for nprobe in [2usize, 0] {
+            let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe,
+                                     ..Default::default() };
+            let want =
+                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
+            let got = disk
+                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
+                .unwrap();
+            assert_eq!(got, want, "nprobe={nprobe}");
+        }
+    }
+
+    #[test]
+    fn prefilter_engages_identically_through_archived_sketches() {
+        let (train, base, pq) = setup16(1800);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 9, 4, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        assert!(ivf.ensure_sketches(&pq), "PQ decodes, sketches must build");
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "s.blocks");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 4);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        for margin in [2usize, 10_000] {
+            let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 4,
+                                     prefilter: true,
+                                     prefilter_margin: margin,
+                                     ..Default::default() };
+            let want =
+                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
+            let got = disk
+                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
+                .unwrap();
+            assert_eq!(got, want, "margin={margin}");
+        }
+    }
+
+    #[test]
+    fn corrupt_list_block_is_typed_search_error_not_panic() {
+        let (train, base, pq) = setup16(1200);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 6, 5, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "c.blocks");
+        // flip a bit in the last list's payload (the file tail)
+        let mut bytes = std::fs::read(&path).unwrap();
+        let at = bytes.len() - 3;
+        bytes[at] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 3);
+        let qs = qrefs(&queries);
+        let ks = vec![5usize; qs.len()];
+        // probing every list must hit the corrupted block
+        let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
+                                 ..Default::default() };
+        let err = disk
+            .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("crc mismatch"),
+                "want a crc error, got: {err:#}");
+    }
+
+    #[test]
+    fn concurrent_searches_under_eviction_stay_equal() {
+        // several threads share ONE DiskIvfIndex whose budget holds
+        // only a couple of lists: constant admission/eviction churn
+        // while scans are in flight.  Arc-pinning must keep every
+        // thread's results bit-identical to RAM throughout.
+        let (train, base, pq) = setup16(2400);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 10, 6, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "e.blocks");
+        // ~2 lists' worth of budget (each list ≈ 240 rows × 8B codes,
+        // doubled by the packed mirror and nibble twin)
+        let disk = DiskIvfIndex::open(&path, 8 << 10).unwrap();
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 6);
+        let qs = qrefs(&queries);
+        let ks = vec![8usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 30, k: 8, nprobe: 3,
+                                 ..Default::default() };
+        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                       &cfg);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let (disk, want, qs, ks, cfg, pq) =
+                    (&disk, &want, &qs, &ks, &cfg, &pq);
+                s.spawn(move || {
+                    let exec = Executor::Inline;
+                    for round in 0..6 {
+                        let got = disk
+                            .search_batch_on(pq, &exec, qs, ks, cfg)
+                            .unwrap();
+                        assert_eq!(&got, want,
+                                   "thread {t} round {round} diverged");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn tiny_budget_never_caches_but_still_answers() {
+        let (train, base, pq) = setup16(1000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 5, 7, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "t.blocks");
+        let disk = DiskIvfIndex::open(&path, 1).unwrap();
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 3);
+        let qs = qrefs(&queries);
+        let ks = vec![5usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
+                                 ..Default::default() };
+        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
+                                       &cfg);
+        for _ in 0..3 {
+            let got = disk
+                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
+                .unwrap();
+            assert_eq!(got, want);
+            assert_eq!(disk.cache_bytes_resident(), 0,
+                       "1-byte budget must never admit a list");
+        }
+    }
+}

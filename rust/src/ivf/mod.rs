@@ -36,6 +36,7 @@
 //!   residual LUTs quantize per probed slot like any other LUT.
 
 pub mod coarse;
+pub mod disk;
 pub mod persist;
 pub mod search;
 
@@ -166,6 +167,10 @@ pub enum IndexBackend {
     Flat(Arc<CompressedIndex>),
     /// Coarse-partitioned `nprobe` search.
     Ivf(Arc<IvfIndex>),
+    /// Disk-resident `nprobe` search: routing in RAM, per-list blocks
+    /// paged from a block archive through the hot-list cache
+    /// ([`disk::DiskIvfIndex`], rust/DESIGN.md §11).
+    DiskIvf(Arc<disk::DiskIvfIndex>),
     /// Mutable streaming index (WAL-backed segments): the only backend
     /// the coordinator's insert/delete ops accept.
     Streaming(Arc<crate::index::StreamingIndex>),
@@ -176,6 +181,7 @@ impl IndexBackend {
         match self {
             IndexBackend::Flat(ix) => ix.n,
             IndexBackend::Ivf(ix) => ix.n(),
+            IndexBackend::DiskIvf(ix) => ix.n(),
             IndexBackend::Streaming(ix) => ix.len(),
         }
     }
@@ -184,6 +190,7 @@ impl IndexBackend {
         match self {
             IndexBackend::Flat(_) => "flat",
             IndexBackend::Ivf(_) => "ivf",
+            IndexBackend::DiskIvf(_) => "disk-ivf",
             IndexBackend::Streaming(_) => "stream",
         }
     }
@@ -205,6 +212,11 @@ impl IndexBackend {
             IndexBackend::Ivf(ix) => {
                 ix.search_batch_on(quant, exec, queries, ks, cfg)
             }
+            // the enum's search contract is infallible; a disk-tier
+            // I/O or CRC failure is unrecoverable mid-request here
+            IndexBackend::DiskIvf(ix) => ix
+                .search_batch_on(quant, exec, queries, ks, cfg)
+                .expect("disk-ivf block fetch failed"),
             IndexBackend::Streaming(ix) => {
                 ix.search_batch_on(quant, exec, queries, ks, cfg)
             }

@@ -284,9 +284,10 @@ impl IvfIndex {
     }
 }
 
-/// `‖q − (centroid + recon)‖²` without materializing the sum.
+/// `‖q − (centroid + recon)‖²` without materializing the sum (shared
+/// with the disk tier's rerank — [`super::disk`]).
 #[inline]
-fn d1_residual(q: &[f32], recon: &[f32], centroid: &[f32]) -> f32 {
+pub(crate) fn d1_residual(q: &[f32], recon: &[f32], centroid: &[f32]) -> f32 {
     let mut acc = 0.0f32;
     for ((&qv, &rv), &cv) in q.iter().zip(recon).zip(centroid) {
         let d = qv - (rv + cv);

@@ -116,6 +116,11 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
     if let Some(n) = f.get("nprobe") {
         cfg.search.nprobe = n.parse().context("--nprobe")?;
     }
+    if let Some(c) = f.get("cache-mb") {
+        let c: usize = c.parse().context("--cache-mb")?;
+        anyhow::ensure!(c > 0, "--cache-mb must be positive");
+        cfg.ivf.cache_mb = c;
+    }
     if let Some(s) = f.get("segment-rows") {
         let s: usize = s.parse().context("--segment-rows")?;
         anyhow::ensure!(s > 0, "--segment-rows must be positive");
@@ -236,10 +241,14 @@ Execution:  [--threads N] [--shard-rows R] size the batch scan executor
             pre-filter that prunes to k·N candidates by Hamming distance
             before exact scoring (env UNQ_PREFILTER /
             UNQ_PREFILTER_MARGIN; recall-safe over-fetch, §9)
-Index:      [--backend flat|ivf] [--lists N] [--nprobe P] [--residual]
-            pick the index organization for eval/serve (env UNQ_BACKEND /
-            UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe 0 = all lists;
-            residual wants a residual-trained quantizer, DESIGN.md §5)
+Index:      [--backend flat|ivf|disk-ivf] [--lists N] [--nprobe P]
+            [--residual] pick the index organization for eval/serve (env
+            UNQ_BACKEND / UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe
+            0 = all lists; residual wants a residual-trained quantizer,
+            DESIGN.md §5).  disk-ivf keeps routing in RAM and pages
+            per-list code blocks from a block archive through a
+            [--cache-mb M] hot-list cache (env UNQ_CACHE_MB; default 64;
+            bit-identical results to ivf at any budget, DESIGN.md §11)
 Streaming:  [--segment-rows R] [--compact-segments S] size the mutable
             index's active segment and compaction trigger for `unq
             ingest` (env UNQ_SEGMENT_ROWS / UNQ_COMPACT_SEGMENTS /
@@ -343,6 +352,31 @@ fn cmd_eval(f: &Flags) -> Result<()> {
             if ivf.residual { " res" } else { "" },
             pt.recall.at1, pt.recall.at10, pt.recall.at100,
             1e3 * pt.secs_per_query
+        );
+        return Ok(());
+    }
+    if cfg.ivf.backend == IndexBackendKind::DiskIvf {
+        let disk = harness::build_or_load_disk_ivf(
+            &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
+            variant)?;
+        let obs0 = unq::obs::global().snapshot();
+        let pt = exp.sweep_point_disk(&disk, search)?;
+        let d = unq::obs::global().snapshot().delta(&obs0);
+        let (h, m) = (d.counter("cache.hits"), d.counter("cache.misses"));
+        println!(
+            "[eval] {} on {} ({}B, n={}, disk-ivf L={} nprobe={} \
+             cache {}MB): R@1 {:.1}  R@10 {:.1}  R@100 {:.1}  \
+             ({:.2} ms/query)",
+            exp.quant.name(), cfg.dataset, cfg.bytes_per_vector, disk.n(),
+            disk.num_lists(), pt.nprobe, cfg.ivf.cache_mb,
+            pt.recall.at1, pt.recall.at10, pt.recall.at100,
+            1e3 * pt.secs_per_query
+        );
+        println!(
+            "[eval] cache: hit-rate {:.1}% ({h}/{}), {} eviction(s), \
+             {} resident bytes",
+            100.0 * h as f64 / (h + m).max(1) as f64, h + m,
+            d.counter("cache.evictions"), disk.cache_bytes_resident()
         );
         return Ok(());
     }
@@ -672,6 +706,13 @@ fn cmd_search(f: &Flags) -> Result<()> {
             let ks = vec![search.k; queries.len()];
             Ok(ivf.search_batch_on(exp.quant.as_ref(), &exec, &queries, &ks,
                                    &search))
+        } else if cfg.ivf.backend == IndexBackendKind::DiskIvf {
+            let disk = harness::build_or_load_disk_ivf(
+                &cfg, exp.quant.as_ref(), &exp.splits.train,
+                &exp.splits.base, variant)?;
+            let ks = vec![search.k; queries.len()];
+            disk.search_batch_on(exp.quant.as_ref(), &exec, &queries, &ks,
+                                 &search)
         } else {
             let engine = unq::index::SearchEngine::new(exp.quant.as_ref(),
                                                        &exp.index, search);

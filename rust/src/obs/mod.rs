@@ -80,6 +80,28 @@ impl Gauge {
         self.0.fetch_sub(1, Ordering::Relaxed);
     }
 
+    /// Raise the level by `n` (byte-accounted gauges like
+    /// `cache.bytes_resident`).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Lower the level by `n` (saturating: a racy double-subtract must
+    /// not wrap a byte gauge to 2⁶⁴).
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.0.compare_exchange_weak(
+                cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     pub fn set(&self, v: u64) {
         self.0.store(v, Ordering::Relaxed);
     }
@@ -141,6 +163,13 @@ pub struct Registry {
     // segment fan-out
     pub stream_overfetch_rows: Counter,
     pub stream_segments_scanned: Counter,
+    // hot-list cache (store/cache.rs) + block archive I/O
+    // (store/blocks.rs) for the disk IVF tier (DESIGN.md §11)
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub cache_evictions: Counter,
+    pub cache_bytes_resident: Gauge,
+    pub blockio_read_us: LatencyHistogram,
     // worker pool (exec/pool.rs)
     pub exec_tasks: Counter,
     pub exec_queue_depth: Gauge,
@@ -177,10 +206,15 @@ impl Registry {
                  c(&self.stream_overfetch_rows)),
                 ("stream.segments_scanned".into(),
                  c(&self.stream_segments_scanned)),
+                ("cache.hits".into(), c(&self.cache_hits)),
+                ("cache.misses".into(), c(&self.cache_misses)),
+                ("cache.evictions".into(), c(&self.cache_evictions)),
                 ("exec.tasks".into(), c(&self.exec_tasks)),
                 ("train.epochs".into(), c(&self.train_epochs)),
             ],
             gauges: vec![
+                ("cache.bytes_resident".into(),
+                 self.cache_bytes_resident.get() as f64),
                 ("exec.queue_depth".into(),
                  self.exec_queue_depth.get() as f64),
                 ("train.last_loss".into(), self.train_last_loss.get()),
@@ -189,6 +223,8 @@ impl Registry {
                 ("wal.fsync_us".into(), self.wal_fsync_us.snapshot()),
                 ("compaction.duration_us".into(),
                  self.compaction_us.snapshot()),
+                ("blockio.read_us".into(),
+                 self.blockio_read_us.snapshot()),
                 ("exec.task_us".into(), self.exec_task_us.snapshot()),
                 ("train.epoch_us".into(), self.train_epoch_us.snapshot()),
             ],
@@ -389,6 +425,18 @@ impl MetricsSnapshot {
                 out.push_str(&format!("{n:<26} {v}\n"));
             }
         }
+        // derived: hot-list cache hit rate, the one ratio the disk tier
+        // is tuned by (DESIGN.md §11)
+        let (h, m) = (self.counter("cache.hits"),
+                      self.counter("cache.misses"));
+        if h + m > 0 {
+            out.push_str(&format!(
+                "{:<26} {:.1}% ({h}/{})\n",
+                "cache.hit_rate",
+                100.0 * h as f64 / (h + m) as f64,
+                h + m
+            ));
+        }
         for (n, v) in &self.gauges {
             if *v != 0.0 {
                 out.push_str(&format!("{n:<26} {v:.4}\n"));
@@ -521,6 +569,35 @@ mod tests {
         assert!(text.contains("wal.appends"));
         assert!(text.contains("compaction.duration_us"));
         assert!(!text.contains("scan.rows_f32"));
+    }
+
+    #[test]
+    fn gauge_add_sub_saturates_at_zero() {
+        let g = Gauge::default();
+        g.add(100);
+        g.sub(30);
+        assert_eq!(g.get(), 70);
+        // never wraps: subtracting past zero clamps
+        g.sub(1000);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn render_human_derives_cache_hit_rate() {
+        let reg = Registry::default();
+        // no cache traffic → no hit-rate line
+        assert!(!reg.snapshot().render_human()
+            .contains("cache.hit_rate"));
+        reg.cache_hits.add(3);
+        reg.cache_misses.add(1);
+        reg.cache_bytes_resident.add(4096);
+        reg.blockio_read_us.record(120);
+        let text = reg.snapshot().render_human();
+        assert!(text.contains("cache.hits"));
+        assert!(text.contains("cache.hit_rate"));
+        assert!(text.contains("75.0% (3/4)"), "{text}");
+        assert!(text.contains("cache.bytes_resident"));
+        assert!(text.contains("blockio.read_us"));
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Offset-addressable block archive (rust/DESIGN.md §11).
+//!
+//! A single segment file whose header carries a per-block directory of
+//! `(offset, len, rows, crc)` entries, so a reader can fetch exactly
+//! the blocks it needs without loading the whole file:
+//!
+//! ```text
+//! ┌──────────┬──────────┬───────────┬───────────┬────────────┬────┐
+//! │ magic 8B │ meta_len │ dir_count │ meta JSON │ directory  │ …  │
+//! │ UNQBLKS1 │ u64 LE   │ u64 LE    │ bytes     │ 32B/entry  │data│
+//! └──────────┴──────────┴───────────┴───────────┴────────────┴────┘
+//! directory entry: offset u64 · len u64 · rows u64 · crc32 u64
+//! ```
+//!
+//! Offsets are absolute file positions; blocks are laid out
+//! back-to-back after the directory in entry order.  Writes go through
+//! the same tmp + rename + fsync path as [`super::Store::save`], so a
+//! crash mid-write never leaves a torn archive at the destination.
+//! Reads come in two flavors: [`BlockReader::read_all`] (wholesale,
+//! today's behavior — kept as the oracle) and [`BlockReader::read_block`]
+//! (a positioned `pread` of one block).  We use `pread` rather than
+//! mmap: it needs no `unsafe`, the access pattern is whole-block (no
+//! sub-page random touch for the page cache to win on), and the kernel
+//! page cache already keeps hot blocks resident across calls.
+//!
+//! Every block is CRC32-checksummed (IEEE polynomial); a mismatch on
+//! read is a typed error, never a panic, so a corrupted list degrades
+//! to a failed query instead of a crashed server.
+
+use std::fs::File;
+use std::io::{BufWriter, Read, Write};
+use std::os::unix::fs::FileExt;
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Archive magic — distinct from the tensor store's `UNQSTOR1`.
+const MAGIC: &[u8; 8] = b"UNQBLKS1";
+
+/// Bytes per directory entry: offset, len, rows, crc (each u64 LE).
+const DIR_ENTRY_BYTES: usize = 32;
+
+// ---------------------------------------------------------------- crc32
+
+/// IEEE CRC32 table (polynomial 0xEDB88320), built at compile time —
+/// the crate vendors no checksum dependency.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE) of `data`.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ------------------------------------------------------------- directory
+
+/// One directory entry: where a block lives and how to verify it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockEntry {
+    /// Absolute file offset of the block payload.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// Logical row count (caller-defined; 0 for non-tabular blocks).
+    pub rows: u64,
+    /// CRC32 of the payload.
+    pub crc: u32,
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Write a block archive atomically: tmp sibling → buffered write →
+/// flush → fsync → rename → parent-dir fsync (the [`super::Store`]
+/// crash contract).  `blocks` are `(payload, rows)` pairs laid out in
+/// order; `meta` is an arbitrary JSON object the reader hands back.
+pub fn write_archive(path: &Path, meta: &Json,
+                     blocks: &[(&[u8], u64)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)
+            .with_context(|| format!("create dir {parent:?}"))?;
+    }
+    let meta_bytes = meta.render().into_bytes();
+    let header_len = MAGIC.len() + 16 + meta_bytes.len()
+        + blocks.len() * DIR_ENTRY_BYTES;
+
+    // directory first, so offsets are known before any payload is out
+    let mut dir = Vec::with_capacity(blocks.len());
+    let mut offset = header_len as u64;
+    for (payload, rows) in blocks {
+        dir.push(BlockEntry {
+            offset,
+            len: payload.len() as u64,
+            rows: *rows,
+            crc: crc32(payload),
+        });
+        offset += payload.len() as u64;
+    }
+
+    let tmp = super::tmp_sibling(path);
+    let f = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(meta_bytes.len() as u64).to_le_bytes())?;
+    w.write_all(&(blocks.len() as u64).to_le_bytes())?;
+    w.write_all(&meta_bytes)?;
+    for e in &dir {
+        w.write_all(&e.offset.to_le_bytes())?;
+        w.write_all(&e.len.to_le_bytes())?;
+        w.write_all(&e.rows.to_le_bytes())?;
+        w.write_all(&(e.crc as u64).to_le_bytes())?;
+    }
+    for (payload, _) in blocks {
+        w.write_all(payload)?;
+    }
+    w.flush()?;
+    w.into_inner()
+        .map_err(|e| anyhow::anyhow!("flush {tmp:?}: {e}"))?
+        .sync_all()
+        .with_context(|| format!("fsync {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {tmp:?} → {path:?}"))?;
+    super::sync_parent_dir(path)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Lazy reader over a block archive: the header and directory are
+/// parsed once at open; block payloads are `pread` on demand and
+/// CRC-verified on every read.  `&self` reads are positioned
+/// (`read_exact_at`), so one reader is safely shared across threads.
+pub struct BlockReader {
+    file: File,
+    /// Archive metadata JSON, as written.
+    pub meta: Json,
+    dir: Vec<BlockEntry>,
+}
+
+impl BlockReader {
+    /// Open and validate an archive: magic, header layout, and every
+    /// directory entry bounds-checked against the file length.
+    pub fn open(path: &Path) -> Result<BlockReader> {
+        let mut file =
+            File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata()?.len();
+        let mut fixed = [0u8; 24];
+        file.read_exact(&mut fixed)
+            .with_context(|| format!("short header in {path:?}"))?;
+        ensure!(&fixed[..8] == MAGIC, "bad block-archive magic in {path:?}");
+        let meta_len = u64::from_le_bytes(fixed[8..16].try_into().unwrap());
+        let dir_count = u64::from_le_bytes(fixed[16..24].try_into().unwrap());
+        let header_len = 24u64
+            .checked_add(meta_len)
+            .and_then(|v| v.checked_add(
+                dir_count.checked_mul(DIR_ENTRY_BYTES as u64)?))
+            .filter(|&v| v <= file_len);
+        let Some(header_len) = header_len else {
+            bail!("block-archive header overruns file in {path:?} \
+                   (meta {meta_len}B, {dir_count} entries, file {file_len}B)");
+        };
+        let mut rest = vec![0u8; (header_len - 24) as usize];
+        file.read_exact(&mut rest)
+            .with_context(|| format!("short directory in {path:?}"))?;
+        let meta_str = std::str::from_utf8(&rest[..meta_len as usize])
+            .with_context(|| format!("non-utf8 meta in {path:?}"))?;
+        let meta = Json::parse(meta_str)
+            .with_context(|| format!("parse meta in {path:?}"))?;
+        let mut dir = Vec::with_capacity(dir_count as usize);
+        let mut cursor = meta_len as usize;
+        for i in 0..dir_count {
+            let e = &rest[cursor..cursor + DIR_ENTRY_BYTES];
+            cursor += DIR_ENTRY_BYTES;
+            let word = |j: usize| {
+                u64::from_le_bytes(e[8 * j..8 * j + 8].try_into().unwrap())
+            };
+            let (offset, len, rows, crc) =
+                (word(0), word(1), word(2), word(3));
+            ensure!(
+                offset >= header_len
+                    && offset.checked_add(len).is_some_and(|e| e <= file_len),
+                "block {i} spans {offset}..{} outside archive {path:?} \
+                 ({file_len}B)",
+                offset.saturating_add(len)
+            );
+            ensure!(crc <= u32::MAX as u64,
+                    "block {i} crc field overflows u32 in {path:?}");
+            dir.push(BlockEntry { offset, len, rows, crc: crc as u32 });
+        }
+        Ok(BlockReader { file, meta, dir })
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.dir.len()
+    }
+
+    /// Directory entry for block `i` (offset/len/rows/crc).
+    pub fn entry(&self, i: usize) -> &BlockEntry {
+        &self.dir[i]
+    }
+
+    /// `pread` one block and verify its CRC.  A mismatch (bit rot,
+    /// torn write surviving a crash) is a typed error, not a panic.
+    pub fn read_block(&self, i: usize) -> Result<Vec<u8>> {
+        let e = *self.entry(i);
+        let t0 = std::time::Instant::now();
+        let mut buf = vec![0u8; e.len as usize];
+        self.file
+            .read_exact_at(&mut buf, e.offset)
+            .with_context(|| format!("pread block {i} ({}B @ {})",
+                                     e.len, e.offset))?;
+        crate::obs::global()
+            .blockio_read_us
+            .record(t0.elapsed().as_micros() as u64);
+        let got = crc32(&buf);
+        if got != e.crc {
+            bail!("block {i} crc mismatch: stored {:#010x}, computed \
+                   {:#010x} ({}B @ {})", e.crc, got, e.len, e.offset);
+        }
+        Ok(buf)
+    }
+
+    /// Wholesale read of every block, in directory order — the oracle
+    /// path equivalent to loading the whole file up front.
+    pub fn read_all(&self) -> Result<Vec<Vec<u8>>> {
+        (0..self.num_blocks()).map(|i| self.read_block(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::TempDir;
+
+    fn blocks_of(parts: &[Vec<u8>]) -> Vec<(&[u8], u64)> {
+        parts.iter().map(|p| (p.as_slice(), p.len() as u64)).collect()
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // canonical IEEE CRC32 test vector
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_blocks_and_meta() {
+        let dir = TempDir::new("blocks").unwrap();
+        let path = dir.path().join("a.blocks");
+        let parts = vec![vec![1u8, 2, 3], Vec::new(), vec![9u8; 4096]];
+        let meta = Json::obj(vec![("kind", Json::Str("test".into()))]);
+        write_archive(&path, &meta, &blocks_of(&parts)).unwrap();
+
+        let r = BlockReader::open(&path).unwrap();
+        assert_eq!(r.num_blocks(), 3);
+        assert_eq!(r.meta.get("kind").and_then(Json::as_str), Some("test"));
+        assert_eq!(r.entry(1).rows, 0);
+        assert_eq!(r.entry(2).rows, 4096);
+        for (i, want) in parts.iter().enumerate() {
+            assert_eq!(&r.read_block(i).unwrap(), want, "block {i}");
+        }
+        assert_eq!(r.read_all().unwrap(), parts);
+    }
+
+    #[test]
+    fn corrupted_block_is_typed_error() {
+        let dir = TempDir::new("blocks").unwrap();
+        let path = dir.path().join("a.blocks");
+        let parts = vec![vec![7u8; 100], vec![8u8; 100]];
+        write_archive(&path, &Json::Null, &blocks_of(&parts)).unwrap();
+
+        // flip one payload bit of block 1 in place
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 50] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let r = BlockReader::open(&path).unwrap();
+        assert!(r.read_block(0).is_ok(), "untouched block still reads");
+        let err = r.read_block(1).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "typed error, got: {err}");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_rejected() {
+        let dir = TempDir::new("blocks").unwrap();
+        let path = dir.path().join("a.blocks");
+        write_archive(&path, &Json::Null,
+                      &blocks_of(&[vec![1u8; 64]])).unwrap();
+
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff;
+        let bad = dir.path().join("bad.blocks");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(BlockReader::open(&bad).unwrap_err()
+                    .to_string().contains("magic"));
+
+        // truncate into the payload: open succeeds only if the
+        // directory still fits, and then bounds-checking must fire
+        let whole = std::fs::read(&path).unwrap();
+        let cut = dir.path().join("cut.blocks");
+        std::fs::write(&cut, &whole[..whole.len() - 32]).unwrap();
+        assert!(BlockReader::open(&cut).is_err());
+    }
+
+    #[test]
+    fn write_is_atomic_no_tmp_left_and_overwrite_safe() {
+        let dir = TempDir::new("blocks").unwrap();
+        let path = dir.path().join("a.blocks");
+        write_archive(&path, &Json::Null,
+                      &blocks_of(&[vec![1u8; 16]])).unwrap();
+        write_archive(&path, &Json::Null,
+                      &blocks_of(&[vec![2u8; 16], vec![3u8; 16]])).unwrap();
+        let r = BlockReader::open(&path).unwrap();
+        assert_eq!(r.num_blocks(), 2);
+        assert_eq!(r.read_block(0).unwrap(), vec![2u8; 16]);
+        let leftovers: Vec<_> = std::fs::read_dir(dir.path())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.path().extension().is_some_and(|x| x == "tmp")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "tmp sibling left behind");
+    }
+}

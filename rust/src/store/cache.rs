@@ -1,0 +1,261 @@
+//! Sharded hot-list cache with a byte budget (rust/DESIGN.md §11).
+//!
+//! Keeps recently-probed inverted lists resident in RAM in front of
+//! the block archive ([`super::blocks`]).  Three policies, all chosen
+//! for lock-cheapness over precision:
+//!
+//! * **Sharding** — keys hash (modulo) to independent `Mutex` shards,
+//!   each owning `budget / shards` bytes, so concurrent searches over
+//!   different lists rarely contend on one lock.
+//! * **Admission on second touch** — the first miss of a key only
+//!   records it in a bounded ghost set; the value is admitted when the
+//!   key misses again.  One-shot scans (a full-index sweep at
+//!   nprobe=all) therefore cannot wipe the genuinely hot lists.
+//! * **CLOCK eviction** — a second-chance ring instead of strict LRU:
+//!   hits set a referenced bit without touching any list order, and
+//!   the eviction hand clears bits until it finds an unreferenced
+//!   victim.
+//!
+//! Values are handed out as `Arc<T>` clones, so an in-flight scan that
+//! holds a list pins it alive even if the cache evicts the entry
+//! mid-scan — eviction drops the cache's reference, never the data
+//! (the Arc-pinning correctness argument of DESIGN.md §11).  Misses
+//! are the caller's problem: build the value, keep your own `Arc`, and
+//! offer it back via [`ListCache::insert`]; whether the cache admits
+//! it does not affect the caller's copy.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use crate::obs;
+
+/// Ghost-set size bound per shard; beyond this the set is cleared
+/// (losing some admission history, never correctness).
+const GHOST_CAP: usize = 4096;
+
+struct Entry<T> {
+    value: Arc<T>,
+    bytes: usize,
+    referenced: bool,
+}
+
+struct Shard<T> {
+    entries: HashMap<usize, Entry<T>>,
+    /// CLOCK ring of resident keys; `hand` indexes the next victim
+    /// candidate.  Evicted keys are swap-removed, so the ring is
+    /// unordered but always exactly the resident key set.
+    ring: Vec<usize>,
+    hand: usize,
+    /// Ghost set: keys offered once but not yet admitted.
+    seen: HashSet<usize>,
+    bytes: usize,
+    budget: usize,
+}
+
+impl<T> Shard<T> {
+    /// CLOCK sweep until the shard fits its budget again.
+    fn evict_to_budget(&mut self) {
+        let o = obs::global();
+        while self.bytes > self.budget && !self.ring.is_empty() {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let key = self.ring[self.hand];
+            let e = self.entries.get_mut(&key).expect("ring/entries agree");
+            if e.referenced {
+                // second chance: clear the bit, advance the hand
+                e.referenced = false;
+                self.hand += 1;
+                continue;
+            }
+            let victim = self.entries.remove(&key).expect("resident");
+            self.ring.swap_remove(self.hand);
+            self.bytes -= victim.bytes;
+            o.cache_evictions.inc();
+            o.cache_bytes_resident.sub(victim.bytes as u64);
+            // the swapped-in key now sits under the hand; do not
+            // advance, it deserves its own inspection next iteration
+        }
+    }
+}
+
+/// A byte-budgeted, sharded cache of `Arc`'d values keyed by `usize`
+/// (list id).  All metrics flow to the global [`obs`] registry:
+/// `cache.{hits,misses,evictions}` counters and the
+/// `cache.bytes_resident` gauge.
+pub struct ListCache<T> {
+    shards: Vec<Mutex<Shard<T>>>,
+}
+
+impl<T> ListCache<T> {
+    /// `budget_bytes` total across `shards` stripes (each gets an
+    /// equal slice, at least 1 byte so tiny budgets still evict
+    /// rather than divide by zero).
+    pub fn new(budget_bytes: usize, shards: usize) -> ListCache<T> {
+        let shards = shards.max(1);
+        let per = (budget_bytes / shards).max(1);
+        ListCache {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        entries: HashMap::new(),
+                        ring: Vec::new(),
+                        hand: 0,
+                        seen: HashSet::new(),
+                        bytes: 0,
+                        budget: per,
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    fn shard(&self, key: usize) -> &Mutex<Shard<T>> {
+        &self.shards[key % self.shards.len()]
+    }
+
+    /// Look up `key`.  A hit clones the `Arc` (pinning the value for
+    /// the caller) and sets the CLOCK referenced bit; a miss only
+    /// counts.
+    pub fn get(&self, key: usize) -> Option<Arc<T>> {
+        let mut s = self.shard(key).lock().expect("cache shard poisoned");
+        match s.entries.get_mut(&key) {
+            Some(e) => {
+                e.referenced = true;
+                let v = Arc::clone(&e.value);
+                obs::global().cache_hits.inc();
+                Some(v)
+            }
+            None => {
+                obs::global().cache_misses.inc();
+                None
+            }
+        }
+    }
+
+    /// Offer a freshly-built value.  First offer of a key goes to the
+    /// ghost set only; the second offer admits (evicting via CLOCK to
+    /// stay within budget).  Values larger than a whole shard budget
+    /// are never admitted.  Returns whether the value is now resident.
+    /// The caller's `Arc` is valid either way.
+    pub fn insert(&self, key: usize, value: Arc<T>, bytes: usize) -> bool {
+        let mut s = self.shard(key).lock().expect("cache shard poisoned");
+        if let Some(e) = s.entries.get_mut(&key) {
+            // already resident (raced with another thread): refresh
+            e.referenced = true;
+            return true;
+        }
+        if bytes > s.budget {
+            return false;
+        }
+        if !s.seen.remove(&key) {
+            // first touch: remember, do not admit
+            if s.seen.len() >= GHOST_CAP {
+                s.seen.clear();
+            }
+            s.seen.insert(key);
+            return false;
+        }
+        s.entries.insert(key, Entry { value, bytes, referenced: true });
+        s.ring.push(key);
+        s.bytes += bytes;
+        obs::global().cache_bytes_resident.add(bytes as u64);
+        s.evict_to_budget();
+        // under thrash the brand-new entry itself may be the only
+        // evictable one; report residency as it actually stands
+        s.entries.contains_key(&key)
+    }
+
+    /// Resident bytes across all shards (tests/diagnostics).
+    pub fn bytes_resident(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").bytes)
+            .sum()
+    }
+
+    /// Resident entry count across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").entries.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // admit `key` for real: first offer seeds the ghost set, second
+    // offer admits
+    fn admit(c: &ListCache<Vec<u8>>, key: usize, bytes: usize) -> bool {
+        let v = Arc::new(vec![0u8; bytes]);
+        c.insert(key, Arc::clone(&v), bytes);
+        c.insert(key, v, bytes)
+    }
+
+    #[test]
+    fn second_touch_admission() {
+        let c: ListCache<Vec<u8>> = ListCache::new(1 << 20, 1);
+        let v = Arc::new(vec![1u8; 100]);
+        assert!(!c.insert(7, Arc::clone(&v), 100), "first offer: ghost only");
+        assert!(c.get(7).is_none());
+        assert!(c.insert(7, v, 100), "second offer admits");
+        assert_eq!(c.get(7).as_deref().map(|v| v.len()), Some(100));
+        assert_eq!(c.bytes_resident(), 100);
+    }
+
+    #[test]
+    fn clock_evicts_to_budget_and_hits_survive() {
+        let c: ListCache<Vec<u8>> = ListCache::new(300, 1);
+        assert!(admit(&c, 1, 100));
+        assert!(admit(&c, 2, 100));
+        assert!(admit(&c, 3, 100));
+        assert_eq!(c.len(), 3);
+        // keep 2 hot so the clock's second chance protects it
+        assert!(c.get(2).is_some());
+        assert!(admit(&c, 4, 100));
+        assert!(c.bytes_resident() <= 300, "budget enforced");
+        assert!(c.get(2).is_some(), "referenced entry survived the sweep");
+    }
+
+    #[test]
+    fn oversized_value_never_admitted_but_caller_arc_survives() {
+        let c: ListCache<Vec<u8>> = ListCache::new(64, 1);
+        let big = Arc::new(vec![0u8; 1000]);
+        assert!(!c.insert(1, Arc::clone(&big), 1000));
+        assert!(!c.insert(1, Arc::clone(&big), 1000));
+        assert!(c.is_empty());
+        assert_eq!(big.len(), 1000, "caller copy untouched");
+    }
+
+    #[test]
+    fn eviction_does_not_invalidate_outstanding_arcs() {
+        let c: ListCache<Vec<u8>> = ListCache::new(150, 1);
+        assert!(admit(&c, 1, 100));
+        let pinned = c.get(1).unwrap();
+        // force 1 out: admit a second entry that busts the budget
+        // (sweep clears 1's referenced bit, then evicts it)
+        assert!(admit(&c, 2, 100));
+        assert!(c.bytes_resident() <= 150);
+        // the cache may have dropped its reference; ours still works
+        assert_eq!(pinned.len(), 100);
+    }
+
+    #[test]
+    fn shards_partition_keys() {
+        let c: ListCache<Vec<u8>> = ListCache::new(1 << 20, 4);
+        for k in 0..16 {
+            admit(&c, k, 10);
+        }
+        assert_eq!(c.len(), 16);
+        for k in 0..16 {
+            assert!(c.get(k).is_some(), "key {k}");
+        }
+    }
+}

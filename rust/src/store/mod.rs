@@ -4,7 +4,13 @@
 //! dtype, byte offset, rendered by [`crate::util::json`]) followed by raw
 //! little-endian payloads.  Used to cache trained quantizer codebooks and
 //! encoded databases under `runs/` so benches re-run instantly.
+//!
+//! Siblings: [`blocks`] is the offset-addressable block archive the
+//! disk IVF tier pages lists from, [`cache`] the byte-budgeted
+//! hot-list cache in front of it (rust/DESIGN.md §11).
 
+pub mod blocks;
+pub mod cache;
 pub mod wal;
 
 use std::collections::BTreeMap;
