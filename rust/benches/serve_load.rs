@@ -1,0 +1,171 @@
+//! Bench: the network front door under load (rust/DESIGN.md §12).
+//!
+//! Spawns the full serving stack in-process — PQ over a streaming
+//! backend, coordinator, TCP reactor on a loopback port — then drives
+//! it with the in-tree load generator in both modes: a closed loop
+//! (latency below saturation) and an open loop at a fixed arrival rate
+//! (latency including queueing, measured from the scheduled departure
+//! so coordinated omission is charged to the server).  Traffic is
+//! mixed search + single-row insert, exercising admission, pipelined
+//! out-of-order completion, and the ingest path end to end.
+//!
+//! Writes `BENCH_serve.json` at the repo root (QPS + p50/p99/p999 per
+//! mode, plus the `net.*` counter delta).
+//!
+//! Run: `cargo bench --bench serve_load`
+//!
+//! `UNQ_BENCH_SMOKE=1` caps sizes to seconds and writes
+//! `BENCH_serve.smoke.json` instead (never clobbering measured
+//! numbers).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use unq::config::{NetConfig, SearchConfig, ServeConfig, StreamConfig};
+use unq::coordinator::pipeline::Server;
+use unq::data::{synthetic::Generator, Family};
+use unq::index::StreamingIndex;
+use unq::ivf::IndexBackend;
+use unq::net::loadgen::{self, LoadMode, LoadgenConfig};
+use unq::net::NetServer;
+use unq::obs;
+use unq::quant::pq::Pq;
+use unq::util::json::Json;
+
+fn smoke() -> bool {
+    std::env::var("UNQ_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty())
+        .unwrap_or(false)
+}
+
+fn repo_root_path(name: &str) -> PathBuf {
+    let name = if smoke() {
+        name.replace(".json", ".smoke.json")
+    } else {
+        name.to_string()
+    };
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name)
+}
+
+fn main() {
+    let (n, n_train, clients, secs, open_rate) = if smoke() {
+        (6_000usize, 2_000usize, 2usize, 2u64, 150.0f64)
+    } else {
+        (100_000, 20_000, 8, 10, 2_000.0)
+    };
+    let k = 10u32;
+    let insert_pct = 10u32;
+
+    // serving stack: PQ over a streaming backend (accepts the load
+    // generator's insert mix), coordinator, TCP reactor on port 0
+    let gen = Generator::new(Family::SiftLike, 907);
+    let train = gen.generate(0, n_train);
+    let base = gen.generate(1, n);
+    let pq = Pq::train(&train.data, train.dim, 8, 64, 0, 8);
+    let ix = Arc::new(StreamingIndex::new(
+        8, None, StreamConfig { segment_rows: 8_192, ..Default::default() }));
+    for lo in (0..base.len()).step_by(8_192) {
+        let hi = (lo + 8_192).min(base.len());
+        ix.insert_batch(&pq, base.rows(lo, hi)).expect("seed insert");
+    }
+    let search = SearchConfig { rerank_l: 64, k: 10, ..Default::default() };
+    let serve = ServeConfig {
+        max_batch: 16, max_delay_us: 200, queue_depth: 256,
+        num_threads: 2, shard_rows: 4_096,
+    };
+    let server = Arc::new(Server::start_with_backend(
+        Arc::new(pq), IndexBackend::Streaming(ix), search, serve));
+    let net_cfg = NetConfig {
+        listen: "127.0.0.1:0".into(),
+        io_threads: 2,
+        ..Default::default()
+    };
+    let net = NetServer::start(server.clone(), net_cfg)
+        .expect("bind loopback");
+    let addr = net.local_addr().to_string();
+    println!("[serve-load] serving {n} rows (dim {}) at {addr}", base.dim);
+
+    let obs0 = obs::global().snapshot();
+    let mut runs = Vec::new();
+
+    // closed loop: throughput self-limits to the server's pace
+    let closed = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        duration: Duration::from_secs(secs),
+        mode: LoadMode::Closed,
+        insert_pct,
+        k,
+        family: Family::SiftLike,
+        seed: 4_201,
+        ..Default::default()
+    })
+    .expect("closed-loop run");
+    closed.print();
+    assert!(closed.ok > 0, "closed loop completed nothing");
+    assert_eq!(closed.errors, 0, "closed loop saw hard errors");
+    runs.push(closed.to_json());
+
+    // open loop: fixed arrival rate, latency from scheduled departure
+    let open = loadgen::run(&LoadgenConfig {
+        addr: addr.clone(),
+        clients,
+        duration: Duration::from_secs(secs),
+        mode: LoadMode::Open { rate_qps: open_rate },
+        insert_pct,
+        k,
+        family: Family::SiftLike,
+        seed: 4_202,
+        ..Default::default()
+    })
+    .expect("open-loop run");
+    open.print();
+    assert!(open.ok > 0, "open loop completed nothing");
+    let mut open_json = open.to_json();
+    if let Json::Obj(kv) = &mut open_json {
+        kv.push(("rate_qps".to_string(), Json::Num(open_rate)));
+    }
+    runs.push(open_json);
+
+    let d = obs::global().snapshot().delta(&obs0);
+    let hist_q = |q: f64| {
+        d.hist("net.request_us").map_or(0, |h| h.quantile_us(q))
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve_load".into())),
+        ("status", Json::Str("measured".into())),
+        ("dataset", Json::Str("synthetic-sift-like".into())),
+        ("rows", Json::Num(n as f64)),
+        ("dim", Json::Num(base.dim as f64)),
+        ("k", Json::Num(k as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("duration_secs", Json::Num(secs as f64)),
+        ("insert_pct", Json::Num(insert_pct as f64)),
+        ("runs", Json::Arr(runs)),
+        ("net", Json::obj(vec![
+            ("connections", Json::Num(d.counter("net.connections") as f64)),
+            ("requests", Json::Num(d.counter("net.requests") as f64)),
+            ("responses", Json::Num(d.counter("net.responses") as f64)),
+            ("overloaded", Json::Num(d.counter("net.overloaded") as f64)),
+            ("quota_rejected",
+             Json::Num(d.counter("net.quota_rejected") as f64)),
+            ("frame_errors",
+             Json::Num(d.counter("net.frame_errors") as f64)),
+            ("bytes_in", Json::Num(d.counter("net.bytes_in") as f64)),
+            ("bytes_out", Json::Num(d.counter("net.bytes_out") as f64)),
+            ("request_p50_us", Json::Num(hist_q(0.50) as f64)),
+            ("request_p99_us", Json::Num(hist_q(0.99) as f64)),
+        ])),
+    ]);
+    let out = repo_root_path("BENCH_serve.json");
+    match std::fs::write(&out, report.render_pretty()) {
+        Ok(()) => println!("[serve-load] wrote {}", out.display()),
+        Err(e) => eprintln!("[serve-load] {} not written: {e}",
+                            out.display()),
+    }
+
+    net.shutdown();
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+}

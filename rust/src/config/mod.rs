@@ -329,6 +329,88 @@ impl Default for ServeConfig {
     }
 }
 
+/// One tenant's admission-control budget on the network front door
+/// (rust/DESIGN.md §12, rust/SERVING.md).  A tenant is a quota
+/// namespace: requests carry a tenant name and are admitted against
+/// that tenant's token bucket and insert-byte budget before they reach
+/// the coordinator queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TenantQuota {
+    pub name: String,
+    /// Sustained search/insert/delete requests per second (token
+    /// bucket with a 1-second burst capacity); 0 = unlimited.
+    pub max_qps: u64,
+    /// Lifetime insert-payload budget in bytes (vector data only);
+    /// 0 = unlimited.  Exceeding it answers `QuotaExceeded`.
+    pub max_insert_bytes: u64,
+}
+
+impl TenantQuota {
+    /// An unlimited tenant (the implicit `"default"` namespace).
+    pub fn unlimited(name: &str) -> Self {
+        TenantQuota { name: name.to_string(), max_qps: 0,
+                      max_insert_bytes: 0 }
+    }
+
+    /// Parse one `name:max_qps:max_insert_bytes` spec (the `UNQ_TENANTS`
+    /// / `--tenants` wire format; both numbers optional).
+    pub fn parse_spec(spec: &str) -> Option<Self> {
+        let mut parts = spec.split(':');
+        let name = parts.next()?.trim();
+        if name.is_empty() {
+            return None;
+        }
+        let num = |p: Option<&str>| -> Option<u64> {
+            match p {
+                None | Some("") => Some(0),
+                Some(s) => s.trim().parse().ok(),
+            }
+        };
+        let max_qps = num(parts.next())?;
+        let max_insert_bytes = num(parts.next())?;
+        if parts.next().is_some() {
+            return None;
+        }
+        Some(TenantQuota { name: name.to_string(), max_qps,
+                           max_insert_bytes })
+    }
+}
+
+/// Network front door (rust/src/net/, rust/PROTOCOL.md): the TCP
+/// listener, per-connection pipelining depth, and tenant quotas.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetConfig {
+    /// Listen address for `unq serve --listen` (port 0 = ephemeral).
+    pub listen: String,
+    /// Acceptor threads; 0 = one per available core (thread-per-core).
+    pub io_threads: usize,
+    /// Concurrent connections admitted; the next one is answered
+    /// `Overloaded` and closed.
+    pub max_conns: usize,
+    /// Pipelined requests in flight per connection before the server
+    /// answers `Overloaded` instead of queueing (admission control —
+    /// never queue-blocking; rust/DESIGN.md §12).
+    pub max_inflight: usize,
+    /// Largest accepted frame payload in bytes; larger frames are
+    /// answered `FrameTooLarge` and the connection is closed.
+    pub max_frame: usize,
+    /// Per-write timeout on response frames in ms: a reader stalled
+    /// longer than this is disconnected rather than allowed to pin
+    /// server memory (slow-reader backpressure).
+    pub write_timeout_ms: u64,
+    /// Tenant quota table; empty = one unlimited `"default"` tenant.
+    pub tenants: Vec<TenantQuota>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { listen: "127.0.0.1:7009".into(), io_threads: 0,
+                    max_conns: 256, max_inflight: 64,
+                    max_frame: 1 << 24, write_timeout_ms: 5000,
+                    tenants: Vec::new() }
+    }
+}
+
 /// Root configuration.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -342,6 +424,7 @@ pub struct AppConfig {
     pub k_codewords: usize,
     pub search: SearchConfig,
     pub serve: ServeConfig,
+    pub net: NetConfig,
     pub ivf: IvfConfig,
     pub stream: StreamConfig,
     pub unq_native: UnqNativeConfig,
@@ -362,6 +445,7 @@ impl Default for AppConfig {
             k_codewords: 256,
             search: SearchConfig::default(),
             serve: ServeConfig::default(),
+            net: NetConfig::default(),
             ivf: IvfConfig::default(),
             stream: StreamConfig::default(),
             unq_native: UnqNativeConfig::default(),
@@ -427,6 +511,24 @@ impl AppConfig {
                 ("queue_depth", Json::Num(self.serve.queue_depth as f64)),
                 ("num_threads", Json::Num(self.serve.num_threads as f64)),
                 ("shard_rows", Json::Num(self.serve.shard_rows as f64)),
+            ])),
+            ("net", Json::obj(vec![
+                ("listen", Json::Str(self.net.listen.clone())),
+                ("io_threads", Json::Num(self.net.io_threads as f64)),
+                ("max_conns", Json::Num(self.net.max_conns as f64)),
+                ("max_inflight", Json::Num(self.net.max_inflight as f64)),
+                ("max_frame", Json::Num(self.net.max_frame as f64)),
+                ("write_timeout_ms",
+                 Json::Num(self.net.write_timeout_ms as f64)),
+                ("tenants", Json::Arr(
+                    self.net.tenants.iter()
+                        .map(|t| Json::obj(vec![
+                            ("name", Json::Str(t.name.clone())),
+                            ("max_qps", Json::Num(t.max_qps as f64)),
+                            ("max_insert_bytes",
+                             Json::Num(t.max_insert_bytes as f64)),
+                        ]))
+                        .collect())),
             ])),
             ("data_dir", Json::Str(self.data_dir.display().to_string())),
             ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
@@ -572,6 +674,45 @@ impl AppConfig {
                 cfg.serve.shard_rows = v;
             }
         }
+        if let Some(s) = j.get("net") {
+            if let Some(v) = s.get("listen").and_then(Json::as_str) {
+                cfg.net.listen = v.to_string();
+            }
+            if let Some(v) = s.get("io_threads").and_then(Json::as_usize) {
+                cfg.net.io_threads = v;
+            }
+            if let Some(v) = s.get("max_conns").and_then(Json::as_usize) {
+                cfg.net.max_conns = v;
+            }
+            if let Some(v) = s.get("max_inflight").and_then(Json::as_usize) {
+                cfg.net.max_inflight = v;
+            }
+            if let Some(v) = s.get("max_frame").and_then(Json::as_usize) {
+                cfg.net.max_frame = v;
+            }
+            if let Some(v) =
+                s.get("write_timeout_ms").and_then(Json::as_usize)
+            {
+                cfg.net.write_timeout_ms = v as u64;
+            }
+            if let Some(arr) = s.get("tenants").and_then(Json::as_arr) {
+                cfg.net.tenants.clear();
+                for t in arr {
+                    let name = t.get("name").and_then(Json::as_str)
+                        .context("net.tenants entries need a \"name\"")?
+                        .to_string();
+                    let max_qps = t.get("max_qps")
+                        .and_then(Json::as_usize).unwrap_or(0)
+                        as u64;
+                    let max_insert_bytes = t.get("max_insert_bytes")
+                        .and_then(Json::as_usize).unwrap_or(0)
+                        as u64;
+                    cfg.net.tenants.push(TenantQuota {
+                        name, max_qps, max_insert_bytes,
+                    });
+                }
+            }
+        }
         if let Some(v) = j.get("data_dir").and_then(Json::as_str) {
             cfg.data_dir = v.into();
         }
@@ -609,6 +750,21 @@ impl AppConfig {
         if cfg.unq_native.lambda_cons < 0.0 || cfg.unq_native.gumbel < 0.0 {
             bail!("unq_native.lambda_cons and unq_native.gumbel must be \
                    non-negative");
+        }
+        if cfg.net.max_conns == 0 || cfg.net.max_inflight == 0 {
+            bail!("net.max_conns and net.max_inflight must be positive");
+        }
+        if cfg.net.max_frame < 4096 {
+            bail!("net.max_frame must be at least 4096 bytes (one \
+                   modest query frame)");
+        }
+        for (i, t) in cfg.net.tenants.iter().enumerate() {
+            if t.name.is_empty() {
+                bail!("net.tenants[{i}] has an empty name");
+            }
+            if cfg.net.tenants[..i].iter().any(|o| o.name == t.name) {
+                bail!("net.tenants has duplicate name {:?}", t.name);
+            }
         }
         Ok(cfg)
     }
@@ -752,6 +908,55 @@ impl AppConfig {
         if let Ok(s) = std::env::var("UNQ_BACKEND") {
             if let Some(b) = IndexBackendKind::parse(&s) {
                 self.ivf.backend = b;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_LISTEN") {
+            if !s.is_empty() {
+                self.net.listen = s;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_NET_THREADS") {
+            if let Ok(v) = s.parse::<usize>() {
+                self.net.io_threads = v;
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_MAX_CONNS") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.net.max_conns = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_MAX_INFLIGHT") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v > 0 {
+                    self.net.max_inflight = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_MAX_FRAME") {
+            if let Ok(v) = s.parse::<usize>() {
+                if v >= 4096 {
+                    self.net.max_frame = v;
+                }
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_WRITE_TIMEOUT_MS") {
+            if let Ok(v) = s.parse::<u64>() {
+                if v > 0 {
+                    self.net.write_timeout_ms = v;
+                }
+            }
+        }
+        // UNQ_TENANTS="alice:100:1000000,bob:10:0" — name:qps:bytes specs
+        if let Ok(s) = std::env::var("UNQ_TENANTS") {
+            let parsed: Vec<TenantQuota> = s
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .filter_map(TenantQuota::parse_spec)
+                .collect();
+            if !parsed.is_empty() {
+                self.net.tenants = parsed;
             }
         }
         if let Ok(s) = std::env::var("UNQ_DATA_DIR") {
@@ -1008,6 +1213,61 @@ mod tests {
                    Some(QuantizerKind::UnqNative));
         assert_eq!(QuantizerKind::UnqNative.name(), "UNQ-native");
         assert!(QuantizerKind::all().contains(&QuantizerKind::UnqNative));
+    }
+
+    #[test]
+    fn net_section_roundtrip_defaults_and_rejects() {
+        let c = AppConfig::default();
+        assert_eq!(c.net, NetConfig::default());
+        assert_eq!(c.net.listen, "127.0.0.1:7009");
+        assert_eq!(c.net.io_threads, 0, "0 = thread per core");
+        assert_eq!(c.net.max_inflight, 64);
+        assert!(c.net.tenants.is_empty(),
+                "empty table = one unlimited default tenant");
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("net.json");
+        let mut c = AppConfig::default();
+        c.net.listen = "0.0.0.0:9000".into();
+        c.net.io_threads = 4;
+        c.net.max_conns = 12;
+        c.net.max_inflight = 8;
+        c.net.max_frame = 65536;
+        c.net.write_timeout_ms = 250;
+        c.net.tenants = vec![
+            TenantQuota { name: "alice".into(), max_qps: 100,
+                          max_insert_bytes: 1 << 20 },
+            TenantQuota::unlimited("default"),
+        ];
+        c.save(&p).unwrap();
+        let back = AppConfig::from_file(&p).unwrap();
+        assert_eq!(back.net, c.net);
+        let j = Json::parse(r#"{"net": {"max_inflight": 0}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"net": {"max_frame": 100}}"#).unwrap();
+        assert!(AppConfig::from_json(&j).is_err());
+        let j = Json::parse(
+            r#"{"net": {"tenants": [{"name": "a"}, {"name": "a"}]}}"#)
+            .unwrap();
+        assert!(AppConfig::from_json(&j).is_err(), "duplicate tenant");
+        let j = Json::parse(r#"{"net": {"tenants": [{"max_qps": 5}]}}"#)
+            .unwrap();
+        assert!(AppConfig::from_json(&j).is_err(), "nameless tenant");
+    }
+
+    #[test]
+    fn tenant_spec_parses() {
+        assert_eq!(TenantQuota::parse_spec("alice:100:1000000"),
+                   Some(TenantQuota { name: "alice".into(), max_qps: 100,
+                                      max_insert_bytes: 1_000_000 }));
+        assert_eq!(TenantQuota::parse_spec("bob"),
+                   Some(TenantQuota::unlimited("bob")));
+        assert_eq!(TenantQuota::parse_spec("carol:7"),
+                   Some(TenantQuota { name: "carol".into(), max_qps: 7,
+                                      max_insert_bytes: 0 }));
+        assert_eq!(TenantQuota::parse_spec(""), None);
+        assert_eq!(TenantQuota::parse_spec(":5"), None);
+        assert_eq!(TenantQuota::parse_spec("d:x"), None);
+        assert_eq!(TenantQuota::parse_spec("e:1:2:3"), None);
     }
 
     #[test]

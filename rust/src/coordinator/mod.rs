@@ -22,16 +22,22 @@
 //!
 //! * [`batch::BatchPolicy`] — the pure flush-decision core (proptested);
 //! * [`pipeline`] — the worker threads and wiring;
-//! * [`metrics`] — lock-free counters + latency histogram;
+//! * [`Metrics`] — the lock-free serving aggregate (histograms live in
+//!   [`crate::obs::hist`]);
 //! * [`demo`] — the `unq serve` closed-loop load generator.
+//!
+//! The TCP front door over this coordinator lives in [`crate::net`]
+//! (rust/PROTOCOL.md, rust/DESIGN.md §12).
 
 pub mod batch;
 pub mod demo;
-pub mod metrics;
 pub mod pipeline;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::time::Instant;
+
+use crate::obs::hist::LatencyHistogram;
 
 /// Client-visible request ids (unique per server lifetime).
 pub type RequestId = u64;
@@ -136,4 +142,82 @@ pub enum SubmitError {
     Overloaded,
     /// server is shutting down
     Closed,
+}
+
+/// Aggregate serving metrics.  (Lived in a `coordinator/metrics.rs`
+/// shim after the histogram moved to `obs::hist`; the shim is gone and
+/// the aggregate lives with the request types it counts.)
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_items: AtomicU64,
+    pub search_latency: LatencyHistogram,
+    pub encode_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { search_latency: LatencyHistogram::new(),
+                  encode_latency: LatencyHistogram::new(),
+                  ..Default::default() }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_items.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "submitted {}  rejected {}  completed {}  batches {} \
+             (mean size {:.1})\nsearch latency: mean {:.1} µs  p50 {} µs  \
+             p95 {} µs  p99 {} µs  max {} µs",
+            self.submitted.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.search_latency.mean_us(),
+            self.search_latency.quantile_us(0.5),
+            self.search_latency.quantile_us(0.95),
+            self.search_latency.quantile_us(0.99),
+            self.search_latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // histogram behavior is tested where it lives (obs::hist); these
+    // cover the coordinator aggregate only
+
+    #[test]
+    fn metrics_batch_accounting() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batch_items.fetch_add(24, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 12.0).abs() < 1e-9);
+        assert!(m.report().contains("mean size 12.0"));
+    }
+
+    #[test]
+    fn histogram_is_the_obs_one() {
+        // spot-check the corrected √2 half-bucket semantics through the
+        // coordinator path (the old in-module histogram placed the
+        // boundary wrong; obs::hist is the single implementation now)
+        let m = Metrics::new();
+        for us in 1..=1000u64 {
+            m.search_latency.record(us);
+        }
+        let p50 = m.search_latency.quantile_us(0.5);
+        assert!((256..=1024).contains(&p50), "p50 = {p50}");
+    }
 }

@@ -25,9 +25,8 @@ use crate::ivf::IndexBackend;
 use crate::quant::Quantizer;
 
 use super::batch::BatchPolicy;
-use super::metrics::Metrics;
 use super::{DeleteRequest, DeleteResponse, EncodeRequest, EncodeResponse,
-            InsertRequest, InsertResponse, Request, SearchRequest,
+            InsertRequest, InsertResponse, Metrics, Request, SearchRequest,
             SearchResponse, SubmitError};
 
 /// One item in the ingest worker's batcher: inserts and deletes share a
@@ -53,6 +52,7 @@ pub struct Server {
     ingress: mpsc::SyncSender<Request>,
     pub metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
+    dim: usize,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -71,6 +71,7 @@ impl Server {
                               search_cfg: SearchConfig,
                               serve_cfg: ServeConfig) -> Server {
         let metrics = Arc::new(Metrics::new());
+        let dim = quant.dim();
         let state = Arc::new(ServerState {
             quant, backend, search_cfg, serve_cfg,
             metrics: metrics.clone(),
@@ -130,12 +131,20 @@ impl Server {
             ingress: ingress_tx,
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
+            dim,
             threads,
         }
     }
 
     pub fn next_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Vector dimensionality the quantizer behind this server expects —
+    /// the shape contract the network front door validates against
+    /// before admitting a request (rust/DESIGN.md §12).
+    pub fn dim(&self) -> usize {
+        self.dim
     }
 
     /// Non-blocking submit with backpressure.

@@ -33,6 +33,7 @@
 //! | [`exec`] | batch executor: worker pool + generic scan-task plans |
 //! | [`runtime`] | PJRT engine: load + execute the AOT HLO artifacts |
 //! | [`coordinator`] | async serving: router, batcher, pipeline, metrics |
+//! | [`net`] | TCP front door: wire protocol, reactor, admission control, load generator |
 //! | [`obs`] | observability: metrics registry, span tracing, EXPLAIN |
 //! | [`eval`] | Recall@k harness + paper-table formatting |
 //! | [`store`] | tiny binary tensor store for trained baseline models; write-ahead log ([`store::wal`]) |
@@ -55,6 +56,7 @@ pub mod index;
 pub mod ivf;
 pub mod kmeans;
 pub mod linalg;
+pub mod net;
 pub mod nn;
 pub mod obs;
 pub mod quant;

@@ -9,6 +9,8 @@
 //! unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
 //! unq tables    [--table 1|2|3|4|5|mem|timings|all]    regenerate paper tables
 //! unq serve     --dataset D [--quantizer Q] [--queries N]  run the coordinator
+//!               [--listen ADDR] serve it over TCP instead (rust/SERVING.md)
+//! unq loadgen   --addr ADDR [--mode closed|open] drive a serving endpoint
 //! unq artifacts                                    list AOT bundles
 //! ```
 
@@ -180,6 +182,7 @@ fn run(args: &[String]) -> Result<()> {
         "stats" => cmd_stats(&f),
         "tables" => tables::cmd_tables(&f),
         "serve" => cmd_serve(&f),
+        "loadgen" => cmd_loadgen(&f),
         "artifacts" => cmd_artifacts(&f),
         "help" | "--help" => {
             print!("{HELP}");
@@ -189,6 +192,9 @@ fn run(args: &[String]) -> Result<()> {
     };
     // Work-doing verbs leave their metrics snapshot behind for a later
     // `unq stats` (a fresh process cannot see this one's counters).
+    // `loadgen` is deliberately absent: it runs in a separate process
+    // from the server it drives, and writing its (client-side, mostly
+    // empty) snapshot would clobber the serve run's net.* families.
     const WORK_VERBS: [&str; 7] = ["train", "eval", "ivf-sweep",
                                    "precision-sweep", "ingest", "search",
                                    "serve"];
@@ -228,6 +234,12 @@ USAGE:
   unq stats     [--json] [--schema FILE]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
   unq serve     --dataset D [--quantizer Q] [--queries N]
+                [--listen ADDR] [--duration-secs N] [--max-conns N]
+                [--max-inflight N] [--io-threads N] [--tenants SPECS]
+  unq loadgen   --addr ADDR [--clients N] [--duration-secs N]
+                [--mode closed|open] [--rate QPS] [--insert-pct P]
+                [--k K] [--tenant T] [--seed S] [--connect-retries N]
+                [--report FILE]
   unq artifacts
 
 Execution:  [--threads N] [--shard-rows R] size the batch scan executor
@@ -270,6 +282,15 @@ Observability: `unq search --explain` prints the per-query span tree
             runs/obs_stats.json, which `unq stats` renders ([--json] for
             the raw snapshot, [--schema FILE] to validate it; env
             UNQ_TRACE=1 turns span tracing on everywhere)
+Serving:    `unq serve --listen HOST:PORT` exposes the coordinator over
+            the in-tree TCP protocol (rust/PROTOCOL.md) with pipelined
+            requests, per-tenant quotas and typed overload errors; env
+            UNQ_LISTEN / UNQ_NET_THREADS / UNQ_MAX_CONNS /
+            UNQ_MAX_INFLIGHT / UNQ_MAX_FRAME / UNQ_WRITE_TIMEOUT_MS /
+            UNQ_TENANTS.  --tenants takes `name[:qps[:bytes]]` specs,
+            comma-separated (0 = unlimited).  `unq loadgen` drives a
+            running endpoint closed- or open-loop and reports QPS +
+            p50/p99/p999 latency (operator runbook: rust/SERVING.md)
 Datasets:   deep1m sift1m deep10m sift10m deep1b sift1b (simulated; see
             rust/DESIGN.md)
 ";
@@ -781,10 +802,109 @@ fn cmd_stats(f: &Flags) -> Result<()> {
 }
 
 fn cmd_serve(f: &Flags) -> Result<()> {
+    let mut cfg = base_config(f)?;
+    // --listen switches serve from the in-process closed-loop demo to
+    // the TCP front door (rust/SERVING.md); the demo path is unchanged
+    let Some(addr) = f.get("listen") else {
+        let queries: usize =
+            f.get("queries").map(|v| v.parse()).transpose()?.unwrap_or(1000);
+        return coordinator::demo::run_demo(&cfg, queries);
+    };
+    cfg.net.listen = addr.to_string();
+    if let Some(c) = f.get("max-conns") {
+        let c: usize = c.parse().context("--max-conns")?;
+        anyhow::ensure!(c > 0, "--max-conns must be positive");
+        cfg.net.max_conns = c;
+    }
+    if let Some(c) = f.get("max-inflight") {
+        let c: usize = c.parse().context("--max-inflight")?;
+        anyhow::ensure!(c > 0, "--max-inflight must be positive");
+        cfg.net.max_inflight = c;
+    }
+    if let Some(t) = f.get("io-threads") {
+        cfg.net.io_threads = t.parse().context("--io-threads")?;
+    }
+    if let Some(specs) = f.get("tenants") {
+        cfg.net.tenants = specs
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                unq::config::TenantQuota::parse_spec(s.trim())
+                    .with_context(|| format!("bad tenant spec {s:?} \
+                                              (name[:qps[:bytes]])"))
+            })
+            .collect::<Result<_>>()?;
+    }
+    let duration: Option<u64> = f
+        .get("duration-secs")
+        .map(|v| v.parse())
+        .transpose()
+        .context("--duration-secs")?;
+    unq::net::run_listen(&cfg, duration)
+}
+
+/// `unq loadgen` — drive a running `unq serve --listen` endpoint with
+/// closed- or open-loop mixed traffic and print/write the QPS +
+/// latency-percentile report (rust/SERVING.md).
+fn cmd_loadgen(f: &Flags) -> Result<()> {
+    use unq::net::loadgen::{self, LoadMode, LoadgenConfig};
+
     let cfg = base_config(f)?;
-    let queries: usize =
-        f.get("queries").map(|v| v.parse()).transpose()?.unwrap_or(1000);
-    coordinator::demo::run_demo(&cfg, queries)
+    let addr = f.get("addr").context(
+        "--addr is required (host:port of a running `unq serve --listen`)")?;
+    // queries must match the served index's dimensionality, which the
+    // dataset family fixes
+    let spec = data::spec_by_name(&cfg.dataset, cfg.scale)
+        .with_context(|| format!("unknown dataset {:?}", cfg.dataset))?;
+    let mut lg = LoadgenConfig {
+        addr: addr.to_string(),
+        family: spec.family,
+        ..Default::default()
+    };
+    if let Some(c) = f.get("clients") {
+        let c: usize = c.parse().context("--clients")?;
+        anyhow::ensure!(c > 0, "--clients must be positive");
+        lg.clients = c;
+    }
+    if let Some(d) = f.get("duration-secs") {
+        lg.duration = std::time::Duration::from_secs(
+            d.parse().context("--duration-secs")?);
+    }
+    match f.get("mode").unwrap_or("closed") {
+        "closed" => lg.mode = LoadMode::Closed,
+        "open" => {
+            let rate: f64 = f
+                .get("rate")
+                .context("--mode open requires --rate QPS")?
+                .parse()
+                .context("--rate")?;
+            lg.mode = LoadMode::Open { rate_qps: rate };
+        }
+        other => bail!("unknown mode {other:?} (closed|open)"),
+    }
+    if let Some(p) = f.get("insert-pct") {
+        lg.insert_pct = p.parse().context("--insert-pct")?;
+    }
+    if let Some(k) = f.get("k") {
+        lg.k = k.parse().context("--k")?;
+    }
+    if let Some(t) = f.get("tenant") {
+        lg.tenant = t.to_string();
+    }
+    if let Some(s) = f.get("seed") {
+        lg.seed = s.parse().context("--seed")?;
+    }
+    if let Some(r) = f.get("connect-retries") {
+        lg.connect_retries = r.parse().context("--connect-retries")?;
+    }
+    let report = loadgen::run(&lg)?;
+    report.print();
+    if let Some(path) = f.get("report") {
+        std::fs::write(path, report.to_json().render_pretty())
+            .with_context(|| format!("write {path}"))?;
+        println!("[loadgen] report written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(f: &Flags) -> Result<()> {

@@ -1,0 +1,143 @@
+//! Minimal blocking client for the wire protocol — the in-tree
+//! counterpart of `net/server.rs`, used by `unq loadgen`, the serving
+//! bench, and the protocol tests.
+//!
+//! The client supports pipelining: [`Client::send`] queues a request
+//! without waiting, [`Client::recv`] pulls whichever response arrives
+//! next (the server completes out of order; match on
+//! [`NetResponse::id`]).  The `search`/`insert`/`delete`/`stats`/
+//! `ping` helpers are strict one-at-a-time round-trips over an
+//! otherwise idle connection.
+
+use std::io::{BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::proto::{decode_response, encode_request, read_frame,
+                   NetRequest, NetResponse, RequestBody, ResponseBody};
+
+pub struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+    next_id: u64,
+    max_frame: usize,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let w = TcpStream::connect(addr).context("connect")?;
+        let _ = w.set_nodelay(true);
+        let r = BufReader::new(w.try_clone().context("clone stream")?);
+        Ok(Client { w, r, next_id: 1, max_frame: 1 << 24 })
+    }
+
+    /// Connect with retries — for harnesses racing a just-spawned
+    /// server process.
+    pub fn connect_retry<A: ToSocketAddrs + Copy>(
+        addr: A, attempts: usize, delay: Duration) -> Result<Client> {
+        let mut last = None;
+        for _ in 0..attempts.max(1) {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(delay);
+        }
+        Err(last.expect("at least one attempt"))
+    }
+
+    /// Bound how long [`Client::recv`] blocks (`None` = forever).
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        self.r.get_ref().set_read_timeout(t).context("read timeout")?;
+        Ok(())
+    }
+
+    /// Queue one request (pipelined; does not wait).  Returns the
+    /// request id to match the eventual response against.
+    pub fn send(&mut self, body: RequestBody) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame = encode_request(&NetRequest { id, body });
+        self.w.write_all(&frame).context("send frame")?;
+        Ok(id)
+    }
+
+    /// Pull the next response; `None` means the server closed cleanly
+    /// at a frame boundary.
+    pub fn recv(&mut self) -> Result<Option<NetResponse>> {
+        let Some(payload) = read_frame(&mut self.r, self.max_frame)
+            .context("read frame")?
+        else {
+            return Ok(None);
+        };
+        Ok(Some(decode_response(&payload).context("decode response")?))
+    }
+
+    fn round_trip(&mut self, body: RequestBody) -> Result<NetResponse> {
+        let id = self.send(body)?;
+        let resp = self.recv()?.context("connection closed mid-request")?;
+        if resp.id != id {
+            bail!("response id {} for request {id} on an idle \
+                   connection", resp.id);
+        }
+        Ok(resp)
+    }
+
+    /// One blocking search round-trip; the response body may be a
+    /// typed error (overload, quota, …) — see [`Client::search_ids`]
+    /// for the bail-on-error convenience.
+    pub fn search(&mut self, tenant: &str, query: &[f32], k: u32)
+                  -> Result<NetResponse> {
+        self.round_trip(RequestBody::Search {
+            tenant: tenant.to_string(), k, query: query.to_vec(),
+        })
+    }
+
+    pub fn search_ids(&mut self, tenant: &str, query: &[f32], k: u32)
+                      -> Result<Vec<u32>> {
+        match self.search(tenant, query, k)?.body {
+            ResponseBody::SearchOk { neighbors } => Ok(neighbors),
+            ResponseBody::Error { code, msg } => {
+                bail!("search failed: {} ({msg})", code.name())
+            }
+            other => bail!("unexpected search response: {other:?}"),
+        }
+    }
+
+    pub fn insert(&mut self, tenant: &str, vectors: &[f32], rows: u32,
+                  dim: u32) -> Result<NetResponse> {
+        self.round_trip(RequestBody::Insert {
+            tenant: tenant.to_string(), rows, dim,
+            vectors: vectors.to_vec(),
+        })
+    }
+
+    pub fn delete(&mut self, tenant: &str, ids: &[u32])
+                  -> Result<NetResponse> {
+        self.round_trip(RequestBody::Delete {
+            tenant: tenant.to_string(), ids: ids.to_vec(),
+        })
+    }
+
+    /// Tenant accounting snapshot as a JSON string.
+    pub fn stats(&mut self, tenant: &str) -> Result<String> {
+        match self.round_trip(RequestBody::Stats {
+            tenant: tenant.to_string(),
+        })?.body {
+            ResponseBody::StatsOk { json } => Ok(json),
+            ResponseBody::Error { code, msg } => {
+                bail!("stats failed: {} ({msg})", code.name())
+            }
+            other => bail!("unexpected stats response: {other:?}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.round_trip(RequestBody::Ping)?.body {
+            ResponseBody::Pong => Ok(()),
+            other => bail!("unexpected ping response: {other:?}"),
+        }
+    }
+}

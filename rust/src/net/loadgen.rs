@@ -1,0 +1,460 @@
+//! Closed- and open-loop load generation against a serving front door
+//! (`unq loadgen`, `benches/serve_load.rs`).
+//!
+//! * **closed loop** — `clients` connections each running send→wait→
+//!   send: throughput self-limits to the server's pace, so latency
+//!   numbers describe the server *below* saturation.
+//! * **open loop** — requests depart on a fixed schedule regardless of
+//!   completions (one writer + one reader thread per connection, ids
+//!   matched through a shared map).  Latency is measured from the
+//!   *scheduled* departure, so queueing delay from a stalled server is
+//!   charged to the server, not silently absorbed by the generator
+//!   (the coordinated-omission trap).
+//!
+//! Queries come from the synthetic query split (split 2) of the
+//! configured dataset family — same distribution the recall benches
+//! use, cycled through a fixed pool.  Everything is seeded; two runs
+//! with one config issue the identical request sequence per worker.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::synthetic::Generator;
+use crate::data::{Dataset, Family};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+use super::client::Client;
+use super::proto::{decode_response, encode_request, read_frame,
+                   ErrorCode, NetRequest, RequestBody, ResponseBody};
+
+/// Queries cycle through a pool of this many rows.
+const QUERY_POOL: usize = 256;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadMode {
+    Closed,
+    /// Fixed aggregate arrival rate, split evenly across clients.
+    Open { rate_qps: f64 },
+}
+
+impl LoadMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LoadMode::Closed => "closed",
+            LoadMode::Open { .. } => "open",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub clients: usize,
+    pub duration: Duration,
+    pub mode: LoadMode,
+    /// percentage of requests that are single-row inserts (0–100);
+    /// the rest are searches
+    pub insert_pct: u32,
+    pub k: u32,
+    /// descriptor family to draw queries from — fixes the vector
+    /// dimensionality, which must match the served index
+    pub family: Family,
+    pub tenant: String,
+    pub seed: u64,
+    pub connect_retries: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7009".into(),
+            clients: 4,
+            duration: Duration::from_secs(5),
+            mode: LoadMode::Closed,
+            insert_pct: 0,
+            k: 10,
+            family: Family::SiftLike,
+            tenant: String::new(),
+            seed: 42,
+            connect_retries: 25,
+        }
+    }
+}
+
+/// Aggregated outcome of one run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub mode: String,
+    pub clients: usize,
+    pub wall_secs: f64,
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub overloaded: u64,
+    pub qps: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(self.mode.clone())),
+            ("clients", Json::Num(self.clients as f64)),
+            ("wall_secs", Json::Num(self.wall_secs)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("overloaded", Json::Num(self.overloaded as f64)),
+            ("qps", Json::Num(self.qps)),
+            ("p50_us", Json::Num(self.p50_us as f64)),
+            ("p99_us", Json::Num(self.p99_us as f64)),
+            ("p999_us", Json::Num(self.p999_us as f64)),
+            ("max_us", Json::Num(self.max_us as f64)),
+            ("mean_us", Json::Num(self.mean_us)),
+        ])
+    }
+
+    /// The two summary lines CI greps for (`p50` / `p99`).
+    pub fn print(&self) {
+        println!(
+            "[loadgen] mode {}  clients {}  wall {:.1} s  sent {}  \
+             ok {}  overloaded {}  errors {}",
+            self.mode, self.clients, self.wall_secs, self.sent,
+            self.ok, self.overloaded, self.errors);
+        println!(
+            "[loadgen] qps {:.1}  p50 {} us  p99 {} us  p999 {} us  \
+             max {} us  mean {:.1} us",
+            self.qps, self.p50_us, self.p99_us, self.p999_us,
+            self.max_us, self.mean_us);
+    }
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    sent: u64,
+    ok: u64,
+    errors: u64,
+    overloaded: u64,
+    lats: Vec<u64>,
+}
+
+/// Tally one response; true iff it should contribute a latency sample.
+fn classify(out: &mut WorkerOut, body: &ResponseBody) -> bool {
+    match body {
+        ResponseBody::Error { code: ErrorCode::Overloaded, .. } => {
+            out.overloaded += 1;
+            false
+        }
+        ResponseBody::Error { .. } => {
+            out.errors += 1;
+            false
+        }
+        _ => {
+            out.ok += 1;
+            true
+        }
+    }
+}
+
+/// Exact percentile over a sorted sample (nearest-rank on the rounded
+/// index; 0 on an empty sample).
+fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Drive one full load run and aggregate the per-worker tallies.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.insert_pct > 100 {
+        bail!("insert_pct must be 0–100");
+    }
+    if let LoadMode::Open { rate_qps } = cfg.mode {
+        if rate_qps <= 0.0 {
+            bail!("open-loop rate must be positive");
+        }
+    }
+    let clients = cfg.clients.max(1);
+    let pool = Generator::new(cfg.family, cfg.seed).generate(2, QUERY_POOL);
+    let start = Instant::now();
+    let outs: Vec<Result<WorkerOut>> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(clients);
+        for tid in 0..clients {
+            let pool = &pool;
+            handles.push(s.spawn(move || match cfg.mode {
+                LoadMode::Closed => closed_worker(cfg, tid as u64, pool),
+                LoadMode::Open { rate_qps } => open_worker(
+                    cfg, tid as u64, rate_qps / clients as f64, pool),
+            }));
+        }
+        handles.into_iter()
+            .map(|h| h.join().expect("loadgen worker panicked"))
+            .collect()
+    });
+    let wall_secs = start.elapsed().as_secs_f64().max(1e-9);
+
+    let mut agg = WorkerOut::default();
+    for out in outs {
+        let out = out?;
+        agg.sent += out.sent;
+        agg.ok += out.ok;
+        agg.errors += out.errors;
+        agg.overloaded += out.overloaded;
+        agg.lats.extend(out.lats);
+    }
+    agg.lats.sort_unstable();
+    let mean_us = if agg.lats.is_empty() {
+        0.0
+    } else {
+        agg.lats.iter().sum::<u64>() as f64 / agg.lats.len() as f64
+    };
+    Ok(LoadReport {
+        mode: cfg.mode.name().to_string(),
+        clients,
+        wall_secs,
+        sent: agg.sent,
+        ok: agg.ok,
+        errors: agg.errors,
+        overloaded: agg.overloaded,
+        qps: agg.ok as f64 / wall_secs,
+        p50_us: percentile(&agg.lats, 0.50),
+        p99_us: percentile(&agg.lats, 0.99),
+        p999_us: percentile(&agg.lats, 0.999),
+        max_us: agg.lats.last().copied().unwrap_or(0),
+        mean_us,
+    })
+}
+
+fn pick_body(cfg: &LoadgenConfig, rng: &mut SplitMix64, pool: &Dataset)
+             -> RequestBody {
+    let qi = rng.below(pool.len());
+    if cfg.insert_pct > 0 && rng.below(100) < cfg.insert_pct as usize {
+        RequestBody::Insert {
+            tenant: cfg.tenant.clone(),
+            rows: 1,
+            dim: pool.dim as u32,
+            vectors: pool.row(qi).to_vec(),
+        }
+    } else {
+        RequestBody::Search {
+            tenant: cfg.tenant.clone(),
+            k: cfg.k,
+            query: pool.row(qi).to_vec(),
+        }
+    }
+}
+
+fn closed_worker(cfg: &LoadgenConfig, tid: u64, pool: &Dataset)
+                 -> Result<WorkerOut> {
+    let mut c = Client::connect_retry(cfg.addr.as_str(),
+                                      cfg.connect_retries,
+                                      Duration::from_millis(200))
+        .with_context(|| format!("worker {tid} connect {}", cfg.addr))?;
+    let mut rng = SplitMix64::from_key(&[cfg.seed, tid, 0xC105ED]);
+    let mut out = WorkerOut::default();
+    let deadline = Instant::now() + cfg.duration;
+    while Instant::now() < deadline {
+        let body = pick_body(cfg, &mut rng, pool);
+        let t0 = Instant::now();
+        out.sent += 1;
+        let id = match c.send(body) {
+            Ok(id) => id,
+            Err(_) => {
+                out.errors += 1;
+                break;
+            }
+        };
+        match c.recv() {
+            Ok(Some(resp)) => {
+                if resp.id == id && classify(&mut out, &resp.body) {
+                    out.lats.push(t0.elapsed().as_micros() as u64);
+                }
+            }
+            Ok(None) | Err(_) => {
+                out.errors += 1;
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn connect_retry_raw(addr: &str, attempts: usize) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..attempts.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                return Ok(s);
+            }
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    Err(last.expect("at least one attempt"))
+        .with_context(|| format!("connect {addr}"))
+}
+
+fn open_worker(cfg: &LoadgenConfig, tid: u64, rate: f64, pool: &Dataset)
+               -> Result<WorkerOut> {
+    let mut w = connect_retry_raw(&cfg.addr, cfg.connect_retries)
+        .with_context(|| format!("worker {tid}"))?;
+    let read_half = w.try_clone().context("clone stream")?;
+    let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::default();
+    let writer_done = Arc::new(AtomicBool::new(false));
+
+    let reader = {
+        let pending = pending.clone();
+        let writer_done = writer_done.clone();
+        std::thread::spawn(move || {
+            let mut out = WorkerOut::default();
+            let mut r = BufReader::new(read_half);
+            // backstop: never hang past shutdown even if responses
+            // stop arriving (FrameError::Io covers the timeout)
+            let _ = r.get_ref()
+                .set_read_timeout(Some(Duration::from_secs(2)));
+            loop {
+                match read_frame(&mut r, 1 << 24) {
+                    Ok(Some(payload)) => {
+                        let Ok(resp) = decode_response(&payload) else {
+                            out.errors += 1;
+                            break;
+                        };
+                        let sched = pending.lock()
+                            .expect("pending map poisoned")
+                            .remove(&resp.id);
+                        if classify(&mut out, &resp.body) {
+                            if let Some(s) = sched {
+                                out.lats.push(
+                                    s.elapsed().as_micros() as u64);
+                            }
+                        }
+                        if writer_done.load(Ordering::SeqCst)
+                            && pending.lock()
+                                .expect("pending map poisoned")
+                                .is_empty()
+                        {
+                            break;
+                        }
+                    }
+                    Ok(None) => break,
+                    Err(_) => break, // torn stream or drain backstop
+                }
+            }
+            out
+        })
+    };
+
+    let mut rng = SplitMix64::from_key(&[cfg.seed, tid, 0x09E7]);
+    let interval = Duration::from_secs_f64(1.0 / rate);
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+    let mut next = start;
+    let mut next_id = 1u64;
+    let mut sent = 0u64;
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        let body = pick_body(cfg, &mut rng, pool);
+        let frame = encode_request(&NetRequest { id: next_id, body });
+        pending.lock().expect("pending map poisoned")
+            .insert(next_id, next);
+        if w.write_all(&frame).is_err() {
+            pending.lock().expect("pending map poisoned")
+                .remove(&next_id);
+            break;
+        }
+        sent += 1;
+        next_id += 1;
+        next += interval;
+    }
+    writer_done.store(true, Ordering::SeqCst);
+    let mut out = reader.join().expect("open-loop reader panicked");
+    out.sent = sent;
+    // requests the server never answered within the drain window
+    out.errors += pending.lock().expect("pending map poisoned")
+        .len() as u64;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // socket-level runs are exercised by benches/serve_load.rs and the
+    // CI smoke; these pin the pure aggregation math
+
+    #[test]
+    fn percentiles_are_exact_on_sorted_samples() {
+        let xs: Vec<u64> = (1..=1000).collect();
+        assert_eq!(percentile(&xs, 0.0), 1);
+        assert_eq!(percentile(&xs, 0.5), 500);
+        assert_eq!(percentile(&xs, 0.99), 990);
+        assert_eq!(percentile(&xs, 1.0), 1000);
+        assert_eq!(percentile(&[], 0.5), 0);
+        assert_eq!(percentile(&[7], 0.999), 7);
+    }
+
+    #[test]
+    fn classify_buckets_by_error_code() {
+        let mut out = WorkerOut::default();
+        assert!(classify(&mut out, &ResponseBody::SearchOk {
+            neighbors: vec![1],
+        }));
+        assert!(!classify(&mut out, &ResponseBody::Error {
+            code: ErrorCode::Overloaded, msg: String::new(),
+        }));
+        assert!(!classify(&mut out, &ResponseBody::Error {
+            code: ErrorCode::QuotaExceeded, msg: String::new(),
+        }));
+        assert_eq!((out.ok, out.overloaded, out.errors), (1, 1, 1));
+    }
+
+    #[test]
+    fn report_json_carries_the_bench_fields() {
+        let r = LoadReport {
+            mode: "closed".into(), clients: 4, wall_secs: 5.0,
+            sent: 100, ok: 98, errors: 0, overloaded: 2, qps: 19.6,
+            p50_us: 800, p99_us: 2200, p999_us: 4000, max_us: 5000,
+            mean_us: 900.5,
+        };
+        let j = r.to_json();
+        for key in ["mode", "clients", "wall_secs", "sent", "ok",
+                    "errors", "overloaded", "qps", "p50_us", "p99_us",
+                    "p999_us", "max_us", "mean_us"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.get("p999_us").and_then(Json::as_f64), Some(4000.0));
+    }
+
+    #[test]
+    fn seeded_request_streams_are_reproducible() {
+        let cfg = LoadgenConfig { insert_pct: 30, ..Default::default() };
+        let pool = Generator::new(cfg.family, cfg.seed)
+            .generate(2, QUERY_POOL);
+        let mut a = SplitMix64::from_key(&[cfg.seed, 3, 0xC105ED]);
+        let mut b = SplitMix64::from_key(&[cfg.seed, 3, 0xC105ED]);
+        for _ in 0..50 {
+            assert_eq!(pick_body(&cfg, &mut a, &pool),
+                       pick_body(&cfg, &mut b, &pool));
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The network front door: a TCP serving layer over the coordinator
+//! (rust/DESIGN.md §12).
+//!
+//! * [`proto`] — the wire codec.  Length-prefixed CRC-framed records
+//!   (the WAL's framing discipline) carrying search / insert / delete
+//!   / stats / ping ops; normative spec in `rust/PROTOCOL.md`.
+//! * [`server`] — acceptors + per-connection reader/writer/pump
+//!   threads, pipelined out-of-order completion, and admission control
+//!   (per-tenant QPS + insert-byte quotas, in-flight window,
+//!   connection cap) that sheds load as typed errors instead of
+//!   queueing.
+//! * [`client`] — the minimal blocking client (pipelining-capable).
+//! * [`loadgen`] — closed- and open-loop load generation
+//!   (`unq loadgen`, `benches/serve_load.rs`).
+//!
+//! Operator runbook: `rust/SERVING.md`.  Everything is std-only — no
+//! async runtime exists on this testbed, and a thread per connection
+//! over bounded channels is the honest design at testbed scale.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::Client;
+pub use server::NetServer;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{AppConfig, IndexBackendKind};
+use crate::coordinator::pipeline::Server;
+use crate::eval::harness;
+use crate::ivf::IndexBackend;
+use crate::Result;
+
+/// `unq serve --listen` — boot the configured stack (same preparation
+/// path as the closed-loop demo) and serve it over TCP until
+/// `duration_secs` elapses (`None` = forever).
+pub fn run_listen(cfg: &AppConfig, duration_secs: Option<u64>)
+                  -> Result<()> {
+    let exp = harness::prepare(cfg, "")?;
+    let mut search =
+        harness::paper_search_config(cfg.quantizer, &cfg.dataset, 100);
+    search.nprobe = cfg.search.nprobe;
+    search.scan_precision = cfg.search.scan_precision;
+
+    let harness::Experiment { quant, index, splits, runtime, .. } = exp;
+    let backend = match cfg.ivf.backend {
+        IndexBackendKind::Flat => IndexBackend::Flat(Arc::new(index)),
+        IndexBackendKind::Ivf => {
+            let ivf = harness::build_or_load_ivf(
+                cfg, quant.as_ref(), &splits.train, &splits.base, "")?;
+            IndexBackend::Ivf(Arc::new(ivf))
+        }
+        IndexBackendKind::DiskIvf => {
+            let disk = harness::build_or_load_disk_ivf(
+                cfg, quant.as_ref(), &splits.train, &splits.base, "")?;
+            IndexBackend::DiskIvf(Arc::new(disk))
+        }
+    };
+    let quant: Arc<dyn crate::quant::Quantizer> = Arc::from(quant);
+    let server = Arc::new(
+        Server::start_with_backend(quant, backend, search, cfg.serve));
+    let net = NetServer::start(server.clone(), cfg.net.clone())
+        .map_err(|e| anyhow::anyhow!("bind {}: {e}", cfg.net.listen))?;
+    println!("[serve] listening on {} ({} on {}, backend {:?}, \
+              max_conns {}, max_inflight {})",
+             net.local_addr(), cfg.quantizer.name(), cfg.dataset,
+             cfg.ivf.backend, cfg.net.max_conns, cfg.net.max_inflight);
+
+    match duration_secs {
+        Some(s) => std::thread::sleep(Duration::from_secs(s)),
+        None => loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        },
+    }
+    println!("[serve] duration elapsed; shutting down");
+    net.shutdown();
+    // live connections keep their threads (and the coordinator Arc)
+    // until their clients hang up; only a fully-quiesced server can be
+    // drained gracefully — otherwise process exit reaps the threads
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
+    drop(runtime); // stop the PJRT thread last
+    Ok(())
+}

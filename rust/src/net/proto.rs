@@ -1,0 +1,743 @@
+//! Wire codec for the TCP front door.  `rust/PROTOCOL.md` is the
+//! normative spec; this module is its executable twin, and the
+//! doc-sync test in `tests/net.rs` pins the two together (every
+//! opcode/error code in the spec table must match a variant here).
+//!
+//! Framing reuses the WAL's record discipline (rust/DESIGN.md §7):
+//!
+//! ```text
+//! frame   := len:u32le  crc32:u32le  payload[len]
+//! payload := opcode:u8  version:u8  request_id:u64le  body
+//! ```
+//!
+//! The CRC covers the payload only.  A frame that fails length or CRC
+//! checks is a *framing* error ([`FrameError`]) and closes the
+//! connection; a well-framed payload that fails to parse is a
+//! *protocol* error ([`ProtoError`]) answered with a typed `ERROR`
+//! response while the connection stays open.
+
+use std::io::Read;
+
+use crate::store::wal::crc32;
+
+/// Protocol version carried in every payload.  Bump on any
+/// layout-incompatible change; see PROTOCOL.md §"Versioning".
+pub const PROTO_VERSION: u8 = 1;
+
+/// Frame header bytes (`len` + `crc32`).
+pub const FRAME_HEADER: usize = 8;
+
+/// Payload prelude bytes (`opcode` + `version` + `request_id`).
+pub const PAYLOAD_PRELUDE: usize = 10;
+
+/// Every opcode on the wire.  Requests have the top bit clear,
+/// responses have it set; `0xFF` is the one error shape shared by all
+/// ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Opcode {
+    Search,
+    Insert,
+    Delete,
+    Stats,
+    Ping,
+    SearchOk,
+    InsertOk,
+    DeleteOk,
+    StatsOk,
+    Pong,
+    Error,
+}
+
+impl Opcode {
+    pub fn all() -> &'static [Opcode] {
+        use Opcode::*;
+        &[Search, Insert, Delete, Stats, Ping, SearchOk, InsertOk,
+          DeleteOk, StatsOk, Pong, Error]
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            Opcode::Search => 0x01,
+            Opcode::Insert => 0x02,
+            Opcode::Delete => 0x03,
+            Opcode::Stats => 0x04,
+            Opcode::Ping => 0x05,
+            Opcode::SearchOk => 0x81,
+            Opcode::InsertOk => 0x82,
+            Opcode::DeleteOk => 0x83,
+            Opcode::StatsOk => 0x84,
+            Opcode::Pong => 0x85,
+            Opcode::Error => 0xFF,
+        }
+    }
+
+    /// Spec-table name (PROTOCOL.md §"Opcodes").
+    pub fn name(&self) -> &'static str {
+        match self {
+            Opcode::Search => "SEARCH",
+            Opcode::Insert => "INSERT",
+            Opcode::Delete => "DELETE",
+            Opcode::Stats => "STATS",
+            Opcode::Ping => "PING",
+            Opcode::SearchOk => "SEARCH_OK",
+            Opcode::InsertOk => "INSERT_OK",
+            Opcode::DeleteOk => "DELETE_OK",
+            Opcode::StatsOk => "STATS_OK",
+            Opcode::Pong => "PONG",
+            Opcode::Error => "ERROR",
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Opcode> {
+        Opcode::all().iter().copied().find(|o| o.code() == c)
+    }
+}
+
+/// Typed error codes carried in `ERROR` responses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Admission control shed the request (queue/connection/in-flight
+    /// limits) — retry with backoff; never means a hung server.
+    Overloaded,
+    /// The tenant's QPS or insert-byte budget is exhausted.
+    QuotaExceeded,
+    /// Well-framed but unparseable or shape-invalid request.
+    BadRequest,
+    /// Tenant name not in the server's quota table.
+    UnknownTenant,
+    /// Payload `version` differs from the server's [`PROTO_VERSION`].
+    BadVersion,
+    /// Frame payload exceeds the server's `net.max_frame`.
+    FrameTooLarge,
+    /// Server-side failure unrelated to the request shape.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn all() -> &'static [ErrorCode] {
+        use ErrorCode::*;
+        &[Overloaded, QuotaExceeded, BadRequest, UnknownTenant,
+          BadVersion, FrameTooLarge, Internal]
+    }
+
+    pub fn code(&self) -> u8 {
+        match self {
+            ErrorCode::Overloaded => 0x01,
+            ErrorCode::QuotaExceeded => 0x02,
+            ErrorCode::BadRequest => 0x03,
+            ErrorCode::UnknownTenant => 0x04,
+            ErrorCode::BadVersion => 0x05,
+            ErrorCode::FrameTooLarge => 0x06,
+            ErrorCode::Internal => 0x07,
+        }
+    }
+
+    /// Spec-table name (PROTOCOL.md §"Error codes").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorCode::Overloaded => "OVERLOADED",
+            ErrorCode::QuotaExceeded => "QUOTA_EXCEEDED",
+            ErrorCode::BadRequest => "BAD_REQUEST",
+            ErrorCode::UnknownTenant => "UNKNOWN_TENANT",
+            ErrorCode::BadVersion => "BAD_VERSION",
+            ErrorCode::FrameTooLarge => "FRAME_TOO_LARGE",
+            ErrorCode::Internal => "INTERNAL",
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<ErrorCode> {
+        ErrorCode::all().iter().copied().find(|e| e.code() == c)
+    }
+}
+
+/// Decoded request payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestBody {
+    /// Top-k neighbor search; `query.len()` must equal the serving
+    /// quantizer's dimensionality.
+    Search { tenant: String, k: u32, query: Vec<f32> },
+    /// Row-major vectors to encode-and-insert (streaming backends).
+    Insert { tenant: String, rows: u32, dim: u32, vectors: Vec<f32> },
+    /// External ids to tombstone.
+    Delete { tenant: String, ids: Vec<u32> },
+    /// Per-tenant accounting snapshot as JSON.
+    Stats { tenant: String },
+    /// Liveness probe; bypasses admission control.
+    Ping,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetRequest {
+    pub id: u64,
+    pub body: RequestBody,
+}
+
+/// Decoded response payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResponseBody {
+    SearchOk { neighbors: Vec<u32> },
+    InsertOk { accepted: bool, ids: Vec<u32> },
+    DeleteOk { accepted: bool, removed: u64 },
+    StatsOk { json: String },
+    Pong,
+    Error { code: ErrorCode, msg: String },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetResponse {
+    pub id: u64,
+    pub body: ResponseBody,
+}
+
+/// Frame-level failures: the connection cannot carry further requests
+/// and is closed (PROTOCOL.md §"Framing").
+#[derive(Debug)]
+pub enum FrameError {
+    /// EOF in the middle of a frame (peer vanished mid-write).
+    Torn,
+    /// Header CRC does not match the payload.
+    BadCrc,
+    /// Declared payload length exceeds the configured cap.
+    TooLarge(usize),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Torn => write!(f, "torn frame (EOF mid-frame)"),
+            FrameError::BadCrc => write!(f, "frame CRC mismatch"),
+            FrameError::TooLarge(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the cap")
+            }
+            FrameError::Io(e) => write!(f, "frame I/O: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Payload-level failures: answered with a typed `ERROR` response.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ProtoError {
+    BadVersion(u8),
+    UnknownOpcode(u8),
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadVersion(v) => {
+                write!(f, "protocol version {v} (speaking {PROTO_VERSION})")
+            }
+            ProtoError::UnknownOpcode(c) => {
+                write!(f, "unknown opcode 0x{c:02X}")
+            }
+            ProtoError::Malformed(what) => write!(f, "malformed {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+// ---------------------------------------------------------------- frames
+
+/// Wrap a payload into a full frame (header + payload).
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Read one frame's payload off the wire.  `Ok(None)` is a clean close
+/// (EOF exactly at a frame boundary); every other short read is a
+/// [`FrameError::Torn`].
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize)
+                           -> Result<Option<Vec<u8>>, FrameError> {
+    let mut header = [0u8; FRAME_HEADER];
+    match read_full(r, &mut header) {
+        Ok(true) => {}
+        Ok(false) => return Ok(None),
+        Err(FullReadError::Torn) => return Err(FrameError::Torn),
+        Err(FullReadError::Io(e)) => return Err(FrameError::Io(e)),
+    }
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    let want_crc = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    if len > max_frame {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    match read_full(r, &mut payload) {
+        Ok(true) => {}
+        // EOF after a header is mid-frame by definition (len may be 0,
+        // in which case the empty read trivially succeeds)
+        Ok(false) if len > 0 => return Err(FrameError::Torn),
+        Ok(false) => {}
+        Err(FullReadError::Torn) => return Err(FrameError::Torn),
+        Err(FullReadError::Io(e)) => return Err(FrameError::Io(e)),
+    }
+    if crc32(&payload) != want_crc {
+        return Err(FrameError::BadCrc);
+    }
+    Ok(Some(payload))
+}
+
+enum FullReadError {
+    Torn,
+    Io(std::io::Error),
+}
+
+/// Fill `buf` completely.  `Ok(false)` = EOF before the first byte;
+/// EOF after at least one byte is [`FullReadError::Torn`].
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8])
+                      -> Result<bool, FullReadError> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) if got == 0 => return Ok(false),
+            Ok(0) => return Err(FullReadError::Torn),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FullReadError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+// -------------------------------------------------------------- encoding
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn payload_prelude(op: Opcode, id: u64) -> Vec<u8> {
+    let mut p = Vec::with_capacity(PAYLOAD_PRELUDE);
+    p.push(op.code());
+    p.push(PROTO_VERSION);
+    p.extend_from_slice(&id.to_le_bytes());
+    p
+}
+
+/// Encode a request into a full frame.
+pub fn encode_request(req: &NetRequest) -> Vec<u8> {
+    let mut p;
+    match &req.body {
+        RequestBody::Search { tenant, k, query } => {
+            p = payload_prelude(Opcode::Search, req.id);
+            put_str(&mut p, tenant);
+            p.extend_from_slice(&k.to_le_bytes());
+            p.extend_from_slice(&(query.len() as u32).to_le_bytes());
+            for v in query {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        RequestBody::Insert { tenant, rows, dim, vectors } => {
+            p = payload_prelude(Opcode::Insert, req.id);
+            put_str(&mut p, tenant);
+            p.extend_from_slice(&rows.to_le_bytes());
+            p.extend_from_slice(&dim.to_le_bytes());
+            for v in vectors {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        RequestBody::Delete { tenant, ids } => {
+            p = payload_prelude(Opcode::Delete, req.id);
+            put_str(&mut p, tenant);
+            p.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for id in ids {
+                p.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        RequestBody::Stats { tenant } => {
+            p = payload_prelude(Opcode::Stats, req.id);
+            put_str(&mut p, tenant);
+        }
+        RequestBody::Ping => {
+            p = payload_prelude(Opcode::Ping, req.id);
+        }
+    }
+    encode_frame(&p)
+}
+
+/// Encode a response into a full frame.  Response payloads are fully
+/// deterministic functions of the result — no timestamps — which is
+/// what lets the bit-identity property compare whole frames.
+pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
+    let mut p;
+    match &resp.body {
+        ResponseBody::SearchOk { neighbors } => {
+            p = payload_prelude(Opcode::SearchOk, resp.id);
+            p.extend_from_slice(&(neighbors.len() as u32).to_le_bytes());
+            for id in neighbors {
+                p.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        ResponseBody::InsertOk { accepted, ids } => {
+            p = payload_prelude(Opcode::InsertOk, resp.id);
+            p.push(*accepted as u8);
+            p.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for id in ids {
+                p.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        ResponseBody::DeleteOk { accepted, removed } => {
+            p = payload_prelude(Opcode::DeleteOk, resp.id);
+            p.push(*accepted as u8);
+            p.extend_from_slice(&removed.to_le_bytes());
+        }
+        ResponseBody::StatsOk { json } => {
+            p = payload_prelude(Opcode::StatsOk, resp.id);
+            p.extend_from_slice(&(json.len() as u32).to_le_bytes());
+            p.extend_from_slice(json.as_bytes());
+        }
+        ResponseBody::Pong => {
+            p = payload_prelude(Opcode::Pong, resp.id);
+        }
+        ResponseBody::Error { code, msg } => {
+            p = payload_prelude(Opcode::Error, resp.id);
+            p.push(code.code());
+            let msg = &msg[..msg.len().min(u16::MAX as usize)];
+            put_str(&mut p, msg);
+        }
+    }
+    encode_frame(&p)
+}
+
+// -------------------------------------------------------------- decoding
+
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &'static str)
+            -> Result<&'a [u8], ProtoError> {
+        if self.p + n > self.b.len() {
+            return Err(ProtoError::Malformed(what));
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, ProtoError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self, what: &'static str) -> Result<String, ProtoError> {
+        let n = self.u16(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| ProtoError::Malformed(what))
+    }
+
+    /// `n` little-endian f32s, length-checked before allocating.
+    fn f32s(&mut self, n: usize, what: &'static str)
+            -> Result<Vec<f32>, ProtoError> {
+        let bytes = self.take(n.checked_mul(4)
+                                  .ok_or(ProtoError::Malformed(what))?,
+                              what)?;
+        Ok(bytes.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self, n: usize, what: &'static str)
+            -> Result<Vec<u32>, ProtoError> {
+        let bytes = self.take(n.checked_mul(4)
+                                  .ok_or(ProtoError::Malformed(what))?,
+                              what)?;
+        Ok(bytes.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self, what: &'static str) -> Result<(), ProtoError> {
+        if self.p != self.b.len() {
+            return Err(ProtoError::Malformed(what));
+        }
+        Ok(())
+    }
+}
+
+fn prelude(payload: &[u8])
+           -> Result<(Opcode, u64, Cur<'_>), ProtoError> {
+    let mut c = Cur { b: payload, p: 0 };
+    let op_code = c.u8("opcode")?;
+    let version = c.u8("version")?;
+    let id = c.u64("request id")?;
+    if version != PROTO_VERSION {
+        return Err(ProtoError::BadVersion(version));
+    }
+    let op = Opcode::from_code(op_code)
+        .ok_or(ProtoError::UnknownOpcode(op_code))?;
+    Ok((op, id, c))
+}
+
+/// Best-effort request id for error replies when the payload fails to
+/// decode: the id sits at a fixed offset, readable even when the
+/// version or opcode is unacceptable.  0 when the payload is too short
+/// to carry one.
+pub fn peek_request_id(payload: &[u8]) -> u64 {
+    if payload.len() < PAYLOAD_PRELUDE {
+        return 0;
+    }
+    u64::from_le_bytes(payload[2..10].try_into().unwrap())
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<NetRequest, ProtoError> {
+    let (op, id, mut c) = prelude(payload)?;
+    let body = match op {
+        Opcode::Search => {
+            let tenant = c.str16("search tenant")?;
+            let k = c.u32("search k")?;
+            let dim = c.u32("search dim")? as usize;
+            let query = c.f32s(dim, "search query")?;
+            RequestBody::Search { tenant, k, query }
+        }
+        Opcode::Insert => {
+            let tenant = c.str16("insert tenant")?;
+            let rows = c.u32("insert rows")?;
+            let dim = c.u32("insert dim")?;
+            let n = (rows as usize).checked_mul(dim as usize)
+                .ok_or(ProtoError::Malformed("insert shape"))?;
+            let vectors = c.f32s(n, "insert vectors")?;
+            RequestBody::Insert { tenant, rows, dim, vectors }
+        }
+        Opcode::Delete => {
+            let tenant = c.str16("delete tenant")?;
+            let n = c.u32("delete count")? as usize;
+            let ids = c.u32s(n, "delete ids")?;
+            RequestBody::Delete { tenant, ids }
+        }
+        Opcode::Stats => {
+            RequestBody::Stats { tenant: c.str16("stats tenant")? }
+        }
+        Opcode::Ping => RequestBody::Ping,
+        _ => return Err(ProtoError::Malformed("response opcode in request")),
+    };
+    c.done("request trailer")?;
+    Ok(NetRequest { id, body })
+}
+
+pub fn decode_response(payload: &[u8]) -> Result<NetResponse, ProtoError> {
+    let (op, id, mut c) = prelude(payload)?;
+    let body = match op {
+        Opcode::SearchOk => {
+            let n = c.u32("search_ok count")? as usize;
+            ResponseBody::SearchOk {
+                neighbors: c.u32s(n, "search_ok ids")?,
+            }
+        }
+        Opcode::InsertOk => {
+            let accepted = c.u8("insert_ok accepted")? != 0;
+            let n = c.u32("insert_ok count")? as usize;
+            ResponseBody::InsertOk {
+                accepted,
+                ids: c.u32s(n, "insert_ok ids")?,
+            }
+        }
+        Opcode::DeleteOk => ResponseBody::DeleteOk {
+            accepted: c.u8("delete_ok accepted")? != 0,
+            removed: c.u64("delete_ok removed")?,
+        },
+        Opcode::StatsOk => {
+            let n = c.u32("stats_ok length")? as usize;
+            let bytes = c.take(n, "stats_ok json")?;
+            ResponseBody::StatsOk {
+                json: String::from_utf8(bytes.to_vec())
+                    .map_err(|_| ProtoError::Malformed("stats_ok json"))?,
+            }
+        }
+        Opcode::Pong => ResponseBody::Pong,
+        Opcode::Error => {
+            let code_byte = c.u8("error code")?;
+            let code = ErrorCode::from_code(code_byte)
+                .ok_or(ProtoError::Malformed("error code"))?;
+            ResponseBody::Error { code, msg: c.str16("error message")? }
+        }
+        _ => return Err(ProtoError::Malformed("request opcode in response")),
+    };
+    c.done("response trailer")?;
+    Ok(NetResponse { id, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strip_frame(frame: &[u8]) -> &[u8] {
+        &frame[FRAME_HEADER..]
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let reqs = vec![
+            NetRequest { id: 7, body: RequestBody::Search {
+                tenant: "default".into(), k: 10,
+                query: vec![1.0, -2.5, 0.0] } },
+            NetRequest { id: 8, body: RequestBody::Insert {
+                tenant: "alice".into(), rows: 2, dim: 3,
+                vectors: vec![0.5; 6] } },
+            NetRequest { id: 9, body: RequestBody::Delete {
+                tenant: String::new(), ids: vec![3, 1, 4] } },
+            NetRequest { id: 10, body: RequestBody::Stats {
+                tenant: "bob".into() } },
+            NetRequest { id: u64::MAX, body: RequestBody::Ping },
+        ];
+        for req in reqs {
+            let frame = encode_request(&req);
+            let payload = strip_frame(&frame);
+            assert_eq!(peek_request_id(payload), req.id);
+            assert_eq!(decode_request(payload).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resps = vec![
+            NetResponse { id: 1, body: ResponseBody::SearchOk {
+                neighbors: vec![5, 2, 9] } },
+            NetResponse { id: 2, body: ResponseBody::InsertOk {
+                accepted: true, ids: vec![100, 101] } },
+            NetResponse { id: 3, body: ResponseBody::DeleteOk {
+                accepted: false, removed: 0 } },
+            NetResponse { id: 4, body: ResponseBody::StatsOk {
+                json: "{\"requests\": 3}".into() } },
+            NetResponse { id: 5, body: ResponseBody::Pong },
+            NetResponse { id: 6, body: ResponseBody::Error {
+                code: ErrorCode::Overloaded, msg: "shed".into() } },
+        ];
+        for resp in resps {
+            let frame = encode_response(&resp);
+            assert_eq!(decode_response(strip_frame(&frame)).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn frame_reader_roundtrips_and_detects_clean_eof() {
+        let a = encode_frame(b"hello");
+        let b = encode_frame(b"");
+        let stream: Vec<u8> = [a, b].concat();
+        let mut r = &stream[..];
+        assert_eq!(read_frame(&mut r, 1 << 20).unwrap().unwrap(),
+                   b"hello");
+        assert_eq!(read_frame(&mut r, 1 << 20).unwrap().unwrap(),
+                   Vec::<u8>::new());
+        assert!(read_frame(&mut r, 1 << 20).unwrap().is_none());
+    }
+
+    #[test]
+    fn torn_frames_are_typed_errors() {
+        let frame = encode_frame(b"payload bytes");
+        // every strictly-short prefix that still has ≥1 byte is torn
+        for cut in 1..frame.len() {
+            let mut r = &frame[..cut];
+            assert!(matches!(read_frame(&mut r, 1 << 20),
+                             Err(FrameError::Torn)),
+                    "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_crc_is_a_typed_error() {
+        let mut frame = encode_frame(b"payload bytes");
+        let last = frame.len() - 1;
+        frame[last] ^= 0x40;
+        let mut r = &frame[..];
+        assert!(matches!(read_frame(&mut r, 1 << 20),
+                         Err(FrameError::BadCrc)));
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_by_length_alone() {
+        // header claims 2 MB; reader must refuse before buffering it
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&(2u32 << 20).to_le_bytes());
+        frame.extend_from_slice(&0u32.to_le_bytes());
+        let mut r = &frame[..];
+        match read_frame(&mut r, 1 << 20) {
+            Err(FrameError::TooLarge(n)) => assert_eq!(n, 2 << 20),
+            other => panic!("want TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn version_and_opcode_mismatches_are_typed() {
+        let req = NetRequest { id: 3, body: RequestBody::Ping };
+        let frame = encode_request(&req);
+        let mut payload = strip_frame(&frame).to_vec();
+        payload[1] = 9; // future version
+        assert_eq!(decode_request(&payload), Err(ProtoError::BadVersion(9)));
+        // id is still recoverable for the error reply
+        assert_eq!(peek_request_id(&payload), 3);
+        let mut payload = strip_frame(&frame).to_vec();
+        payload[0] = 0x7C;
+        assert_eq!(decode_request(&payload),
+                   Err(ProtoError::UnknownOpcode(0x7C)));
+    }
+
+    #[test]
+    fn truncated_and_padded_payloads_are_malformed() {
+        let req = NetRequest { id: 1, body: RequestBody::Search {
+            tenant: "t".into(), k: 5, query: vec![1.0, 2.0] } };
+        let frame = encode_request(&req);
+        let payload = strip_frame(&frame);
+        for cut in PAYLOAD_PRELUDE..payload.len() {
+            assert!(decode_request(&payload[..cut]).is_err(),
+                    "cut at {cut}");
+        }
+        let mut padded = payload.to_vec();
+        padded.push(0);
+        assert_eq!(decode_request(&padded),
+                   Err(ProtoError::Malformed("request trailer")));
+    }
+
+    #[test]
+    fn hostile_counts_cannot_force_allocation() {
+        // a delete claiming u32::MAX ids in a 30-byte payload must fail
+        // on the length check, not attempt a 16 GB allocation
+        let mut p = payload_prelude(Opcode::Delete, 1);
+        put_str(&mut p, "t");
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_request(&p).is_err());
+        let mut p = payload_prelude(Opcode::Search, 1);
+        put_str(&mut p, "t");
+        p.extend_from_slice(&10u32.to_le_bytes());
+        p.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_request(&p).is_err());
+    }
+
+    #[test]
+    fn opcode_and_error_code_tables_are_bijective() {
+        for op in Opcode::all() {
+            assert_eq!(Opcode::from_code(op.code()), Some(*op));
+        }
+        let mut codes: Vec<u8> =
+            Opcode::all().iter().map(|o| o.code()).collect();
+        codes.dedup();
+        assert_eq!(codes.len(), Opcode::all().len());
+        for ec in ErrorCode::all() {
+            assert_eq!(ErrorCode::from_code(ec.code()), Some(*ec));
+        }
+        assert_eq!(Opcode::from_code(0x42), None);
+        assert_eq!(ErrorCode::from_code(0xEE), None);
+    }
+}

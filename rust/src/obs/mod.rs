@@ -4,7 +4,8 @@
 //! Three pieces:
 //!
 //! * [`hist`] — the √2-bucketed [`LatencyHistogram`], generalized out of
-//!   `coordinator/metrics.rs` (which now re-exports it).
+//!   the coordinator (whose aggregate [`crate::coordinator::Metrics`]
+//!   uses it directly).
 //! * [`span`] — per-query span trees behind the `crate::span!` macro:
 //!   a single relaxed load + branch when no trace is live, a full
 //!   route→probe→scan→…→rerank EXPLAIN tree when one is
@@ -178,6 +179,20 @@ pub struct Registry {
     pub train_epochs: Counter,
     pub train_last_loss: FloatGauge,
     pub train_epoch_us: LatencyHistogram,
+    // network front door (net/server.rs, rust/DESIGN.md §12):
+    // connection lifecycle, request/response traffic, admission-control
+    // rejections, framing failures, and wire bytes in each direction
+    pub net_connections: Counter,
+    pub net_requests: Counter,
+    pub net_responses: Counter,
+    pub net_errors: Counter,
+    pub net_overloaded: Counter,
+    pub net_quota_rejected: Counter,
+    pub net_frame_errors: Counter,
+    pub net_bytes_in: Counter,
+    pub net_bytes_out: Counter,
+    pub net_conns_open: Gauge,
+    pub net_request_us: LatencyHistogram,
 }
 
 impl Registry {
@@ -211,6 +226,16 @@ impl Registry {
                 ("cache.evictions".into(), c(&self.cache_evictions)),
                 ("exec.tasks".into(), c(&self.exec_tasks)),
                 ("train.epochs".into(), c(&self.train_epochs)),
+                ("net.connections".into(), c(&self.net_connections)),
+                ("net.requests".into(), c(&self.net_requests)),
+                ("net.responses".into(), c(&self.net_responses)),
+                ("net.errors".into(), c(&self.net_errors)),
+                ("net.overloaded".into(), c(&self.net_overloaded)),
+                ("net.quota_rejected".into(),
+                 c(&self.net_quota_rejected)),
+                ("net.frame_errors".into(), c(&self.net_frame_errors)),
+                ("net.bytes_in".into(), c(&self.net_bytes_in)),
+                ("net.bytes_out".into(), c(&self.net_bytes_out)),
             ],
             gauges: vec![
                 ("cache.bytes_resident".into(),
@@ -218,6 +243,8 @@ impl Registry {
                 ("exec.queue_depth".into(),
                  self.exec_queue_depth.get() as f64),
                 ("train.last_loss".into(), self.train_last_loss.get()),
+                ("net.conns_open".into(),
+                 self.net_conns_open.get() as f64),
             ],
             hists: vec![
                 ("wal.fsync_us".into(), self.wal_fsync_us.snapshot()),
@@ -227,6 +254,7 @@ impl Registry {
                  self.blockio_read_us.snapshot()),
                 ("exec.task_us".into(), self.exec_task_us.snapshot()),
                 ("train.epoch_us".into(), self.train_epoch_us.snapshot()),
+                ("net.request_us".into(), self.net_request_us.snapshot()),
             ],
         }
     }

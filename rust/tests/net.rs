@@ -1,0 +1,584 @@
+//! End-to-end tests for the TCP front door (rust/DESIGN.md §12,
+//! rust/PROTOCOL.md): the bit-identity property (TCP responses equal
+//! in-process coordinator results at every backend and scan
+//! precision, including pipelined out-of-order completion), typed
+//! overload under saturation, wire-level robustness (torn / corrupt /
+//! oversized frames, mid-pipeline disconnects, slow readers — always
+//! a typed error or a clean close, never a hang), tenant quotas, and
+//! the doc-sync check pinning PROTOCOL.md's opcode/error tables to
+//! the `net::proto` enums.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use unq::config::{NetConfig, ScanPrecision, SearchConfig, ServeConfig,
+                  StreamConfig, TenantQuota};
+use unq::coordinator::pipeline::Server;
+use unq::data::{synthetic::Generator, Dataset, Family};
+use unq::index::{CompressedIndex, StreamingIndex};
+use unq::ivf::disk::DiskIvfIndex;
+use unq::ivf::{CoarseQuantizer, IndexBackend, IvfIndex};
+use unq::net::proto::{encode_frame, encode_request, read_frame, ErrorCode,
+                      NetRequest, Opcode, RequestBody, ResponseBody,
+                      FRAME_HEADER};
+use unq::net::{Client, NetServer};
+use unq::quant::pq::Pq;
+use unq::util::TempDir;
+
+const READ_DEADLINE: Duration = Duration::from_secs(30);
+
+struct Corpus {
+    train: Dataset,
+    base: Dataset,
+    query: Dataset,
+}
+
+fn corpus(n_base: usize, nq: usize) -> Corpus {
+    let gen = Generator::new(Family::SiftLike, 55);
+    Corpus {
+        train: gen.generate(0, 800),
+        base: gen.generate(1, n_base),
+        query: gen.generate(2, nq),
+    }
+}
+
+fn train_pq(c: &Corpus) -> Pq {
+    Pq::train(&c.train.data, c.train.dim, 8, 32, 0, 5)
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig { max_batch: 4, max_delay_us: 300, queue_depth: 64,
+                  num_threads: 2, shard_rows: 256 }
+}
+
+fn net_cfg() -> NetConfig {
+    NetConfig { listen: "127.0.0.1:0".into(), io_threads: 1,
+                ..Default::default() }
+}
+
+struct Stack {
+    net: NetServer,
+    server: Arc<Server>,
+}
+
+fn start(pq: Pq, backend: IndexBackend, search: SearchConfig,
+         serve: ServeConfig, net: NetConfig) -> Stack {
+    let server = Arc::new(Server::start_with_backend(
+        Arc::new(pq), backend, search, serve));
+    let net = NetServer::start(server.clone(), net).expect("bind loopback");
+    Stack { net, server }
+}
+
+fn stop(st: Stack) {
+    st.net.shutdown();
+    // connection threads may still hold the coordinator for a moment;
+    // the process reaps them — only drain when fully quiesced
+    if let Ok(s) = Arc::try_unwrap(st.server) {
+        s.shutdown();
+    }
+}
+
+fn flat_stack(c: &Corpus) -> Stack {
+    let pq = train_pq(c);
+    let index = Arc::new(CompressedIndex::build(&pq, &c.base));
+    let search = SearchConfig { rerank_l: 64, k: 10, ..Default::default() };
+    start(pq, IndexBackend::Flat(index), search, serve_cfg(), net_cfg())
+}
+
+fn streaming_backend(c: &Corpus) -> Arc<StreamingIndex> {
+    let pq = train_pq(c);
+    let ix = Arc::new(StreamingIndex::new(
+        8, None, StreamConfig { segment_rows: 512, ..Default::default() }));
+    ix.insert_batch(&pq, &c.base.data).expect("seed streaming backend");
+    ix
+}
+
+fn client(st: &Stack) -> Client {
+    let c = Client::connect(st.net.local_addr()).expect("connect");
+    c.set_read_timeout(Some(READ_DEADLINE)).expect("read timeout");
+    c
+}
+
+fn raw_conn(st: &Stack) -> TcpStream {
+    let s = TcpStream::connect(st.net.local_addr()).expect("connect raw");
+    s.set_read_timeout(Some(READ_DEADLINE)).expect("read timeout");
+    s
+}
+
+/// Read one response frame off a raw socket; `None` = clean EOF.
+fn raw_recv(s: &mut TcpStream) -> Option<unq::net::proto::NetResponse> {
+    let payload = read_frame(s, 1 << 24).expect("well-formed frame")?;
+    Some(unq::net::proto::decode_response(&payload).expect("decodable"))
+}
+
+// ------------------------------------------------------- bit identity
+
+/// The tentpole property: for every index backend and scan precision,
+/// responses over TCP are bit-identical to what the same in-process
+/// coordinator returns — exercised through a fully pipelined client
+/// whose responses complete out of order and are matched by id.
+/// (Response payloads carry no timestamps, so equal decoded bodies ⇔
+/// equal frames.)
+#[test]
+fn tcp_results_bit_identical_across_backends_and_precisions() {
+    let c = corpus(2500, 8);
+    let pq = train_pq(&c);
+
+    let mut flat = CompressedIndex::build(&pq, &c.base);
+    flat.ensure_packed(); // integer precisions need the packed mirror
+    let flat = Arc::new(flat);
+    let coarse = CoarseQuantizer::train(&c.train.data, c.train.dim, 8, 0, 6);
+    let mut ivf = IvfIndex::build(&pq, &c.base, coarse, true);
+    ivf.ensure_packed();
+    let ivf = Arc::new(ivf);
+    let dir = TempDir::new("netdisk").unwrap();
+    let archive = dir.path().join("ivf.blocks");
+    DiskIvfIndex::save_archive(&ivf, &archive).unwrap();
+    let disk = Arc::new(DiskIvfIndex::open(&archive, 1 << 20).unwrap());
+    let stream = streaming_backend(&c);
+
+    for precision in [ScanPrecision::F32, ScanPrecision::U16,
+                      ScanPrecision::U8] {
+        let grid: Vec<(&str, IndexBackend)> = vec![
+            ("flat", IndexBackend::Flat(flat.clone())),
+            ("ivf", IndexBackend::Ivf(ivf.clone())),
+            ("disk-ivf", IndexBackend::DiskIvf(disk.clone())),
+            ("streaming", IndexBackend::Streaming(stream.clone())),
+        ];
+        for (name, backend) in grid {
+            let search = SearchConfig {
+                rerank_l: 64, k: 10, nprobe: 3,
+                scan_precision: precision, ..Default::default()
+            };
+            let st = start(train_pq(&c), backend, search, serve_cfg(),
+                           net_cfg());
+            let want: Vec<Vec<u32>> = (0..c.query.len())
+                .map(|qi| {
+                    st.server.search_blocking(c.query.row(qi), 10)
+                        .unwrap().neighbors
+                })
+                .collect();
+
+            let mut cl = client(&st);
+            let ids: Vec<u64> = (0..c.query.len())
+                .map(|qi| {
+                    cl.send(RequestBody::Search {
+                        tenant: String::new(), k: 10,
+                        query: c.query.row(qi).to_vec(),
+                    }).expect("pipelined send")
+                })
+                .collect();
+            let mut got: HashMap<u64, Vec<u32>> = HashMap::new();
+            for _ in &ids {
+                let resp = cl.recv().expect("read").expect("open");
+                match resp.body {
+                    ResponseBody::SearchOk { neighbors } => {
+                        assert!(got.insert(resp.id, neighbors).is_none(),
+                                "{name}/{precision:?}: duplicate id");
+                    }
+                    other => panic!("{name}/{precision:?}: {other:?}"),
+                }
+            }
+            for (qi, id) in ids.iter().enumerate() {
+                assert_eq!(got[id], want[qi],
+                           "{name}/{precision:?} query {qi}");
+            }
+            drop(cl);
+            stop(st);
+        }
+    }
+}
+
+// ------------------------------------------------------------ overload
+
+/// A saturated server answers typed `OVERLOADED` within the deadline —
+/// it never hangs — and keeps serving the same connection afterwards.
+#[test]
+fn saturated_server_sheds_typed_overload_and_recovers() {
+    let c = corpus(1500, 1);
+    let pq = train_pq(&c);
+    let index = Arc::new(CompressedIndex::build(&pq, &c.base));
+    // a 20 ms batching deadline holds the first search in flight while
+    // the rest of the burst arrives; max_inflight 1 sheds all of them
+    let serve = ServeConfig { max_batch: 64, max_delay_us: 20_000,
+                              queue_depth: 64, num_threads: 1,
+                              shard_rows: 256 };
+    let net = NetConfig { max_inflight: 1, ..net_cfg() };
+    let st = start(pq, IndexBackend::Flat(index),
+                   SearchConfig { rerank_l: 64, k: 10,
+                                  ..Default::default() },
+                   serve, net);
+
+    let mut cl = client(&st);
+    const BURST: usize = 30;
+    for _ in 0..BURST {
+        cl.send(RequestBody::Search {
+            tenant: String::new(), k: 10,
+            query: c.query.row(0).to_vec(),
+        }).expect("pipelined send");
+    }
+    let (mut ok, mut shed) = (0usize, 0usize);
+    for _ in 0..BURST {
+        // the read deadline is the "within deadline" part of the
+        // property: a hang fails here, not in CI's global timeout
+        match cl.recv().expect("deadline").expect("open").body {
+            ResponseBody::SearchOk { .. } => ok += 1,
+            ResponseBody::Error { code: ErrorCode::Overloaded, .. } => {
+                shed += 1;
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(ok + shed, BURST);
+    assert!(ok >= 1, "at least the first search must land");
+    assert!(shed >= 1, "a 1-deep window must shed a 30-burst");
+
+    // window drained: the same connection serves again
+    let after = cl.search_ids("", c.query.row(0), 10).expect("recovered");
+    assert_eq!(after.len(), 10);
+    drop(cl);
+    stop(st);
+}
+
+// ----------------------------------------------------- wire robustness
+
+#[test]
+fn torn_frame_closes_the_connection_cleanly() {
+    let c = corpus(1200, 1);
+    let st = flat_stack(&c);
+
+    let mut s = raw_conn(&st);
+    let frame = encode_request(&NetRequest {
+        id: 1,
+        body: RequestBody::Search { tenant: String::new(), k: 5,
+                                    query: c.query.row(0).to_vec() },
+    });
+    s.write_all(&frame[..FRAME_HEADER + 4]).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    // no reply owed for a torn frame: just EOF, within the deadline
+    assert!(raw_recv(&mut s).is_none(), "torn frame must close silently");
+
+    // the listener is unaffected
+    let mut cl = client(&st);
+    cl.ping().expect("server still alive");
+    drop(cl);
+    stop(st);
+}
+
+#[test]
+fn corrupt_crc_answers_bad_request_then_closes() {
+    let c = corpus(1200, 1);
+    let st = flat_stack(&c);
+
+    let mut frame = encode_request(&NetRequest {
+        id: 9, body: RequestBody::Ping,
+    });
+    frame[FRAME_HEADER + 2] ^= 0x55; // corrupt the payload, not the header
+    let mut s = raw_conn(&st);
+    s.write_all(&frame).unwrap();
+    let resp = raw_recv(&mut s).expect("typed reply");
+    // the stream cannot be resynchronized past a CRC failure, so the id
+    // is unknowable: the error carries id 0 and the connection closes
+    assert_eq!(resp.id, 0);
+    assert!(matches!(resp.body,
+                     ResponseBody::Error { code: ErrorCode::BadRequest, .. }),
+            "want BAD_REQUEST, got {:?}", resp.body);
+    assert!(raw_recv(&mut s).is_none(), "connection must close");
+    stop(st);
+}
+
+#[test]
+fn oversized_frame_answers_frame_too_large_without_buffering() {
+    let c = corpus(1200, 1);
+    let st = {
+        let pq = train_pq(&c);
+        let index = Arc::new(CompressedIndex::build(&pq, &c.base));
+        start(pq, IndexBackend::Flat(index),
+              SearchConfig { rerank_l: 64, k: 10, ..Default::default() },
+              serve_cfg(),
+              NetConfig { max_frame: 1024, ..net_cfg() })
+    };
+
+    // header alone claims 1 MB; the server must answer on the header
+    // without waiting for (or allocating) the payload
+    let mut s = raw_conn(&st);
+    let mut header = Vec::new();
+    header.extend_from_slice(&(1u32 << 20).to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    s.write_all(&header).unwrap();
+    let resp = raw_recv(&mut s).expect("typed reply");
+    assert_eq!(resp.id, 0);
+    assert!(matches!(
+        resp.body,
+        ResponseBody::Error { code: ErrorCode::FrameTooLarge, .. }),
+            "want FRAME_TOO_LARGE, got {:?}", resp.body);
+    assert!(raw_recv(&mut s).is_none(), "connection must close");
+    stop(st);
+}
+
+#[test]
+fn disconnect_mid_pipeline_leaves_the_server_serving() {
+    let c = corpus(1500, 2);
+    let st = flat_stack(&c);
+    let want = st.server.search_blocking(c.query.row(1), 10)
+        .unwrap().neighbors;
+
+    {
+        let mut cl = client(&st);
+        for _ in 0..10 {
+            cl.send(RequestBody::Search {
+                tenant: String::new(), k: 10,
+                query: c.query.row(0).to_vec(),
+            }).unwrap();
+        }
+        // vanish with ten requests in flight
+    }
+    let mut cl = client(&st);
+    let got = cl.search_ids("", c.query.row(1), 10).expect("still serving");
+    assert_eq!(got, want, "abandoned pipeline must not corrupt serving");
+    drop(cl);
+    stop(st);
+}
+
+/// A reader that never drains its responses is disconnected by the
+/// write timeout instead of pinning server memory; the test itself is
+/// the no-hang assertion (every blocking call has a deadline).
+#[test]
+fn slow_reader_is_disconnected_not_hung() {
+    let c = corpus(1200, 1);
+    let st = {
+        let pq = train_pq(&c);
+        let index = Arc::new(CompressedIndex::build(&pq, &c.base));
+        start(pq, IndexBackend::Flat(index),
+              SearchConfig { rerank_l: 64, k: 10, ..Default::default() },
+              serve_cfg(),
+              NetConfig { write_timeout_ms: 200, max_inflight: 4,
+                          ..net_cfg() })
+    };
+
+    let mut s = raw_conn(&st);
+    s.set_write_timeout(Some(Duration::from_millis(500))).unwrap();
+    let frame = encode_request(&NetRequest { id: 1,
+                                             body: RequestBody::Ping });
+    // never read: pong frames pile up until the server's writer times
+    // out and severs the socket, at which point our writes start failing
+    let mut severed = false;
+    for _ in 0..400_000 {
+        if s.write_all(&frame).is_err() {
+            severed = true;
+            break;
+        }
+    }
+    assert!(severed, "server let a never-reading client pin it");
+
+    let mut cl = client(&st);
+    cl.ping().expect("server healthy after shedding the slow reader");
+    drop(cl);
+    stop(st);
+}
+
+// ------------------------------------------------------------- tenants
+
+#[test]
+fn tenant_quotas_and_unknown_tenants_are_typed() {
+    let c = corpus(1500, 1);
+    let dim = c.base.dim;
+    let stream = streaming_backend(&c);
+    let row_bytes = (dim * 4) as u64;
+    let net = NetConfig {
+        tenants: vec![
+            TenantQuota { name: "alice".into(), max_qps: 3,
+                          max_insert_bytes: 0 },
+            TenantQuota { name: "ingest".into(), max_qps: 0,
+                          max_insert_bytes: 2 * row_bytes },
+        ],
+        ..net_cfg()
+    };
+    let st = start(train_pq(&c), IndexBackend::Streaming(stream),
+                   SearchConfig { rerank_l: 64, k: 10,
+                                  ..Default::default() },
+                   serve_cfg(), net);
+    let mut cl = client(&st);
+
+    // a configured table is closed: unknown names — including the
+    // implicit default — are typed UNKNOWN_TENANT
+    for tenant in ["bob", ""] {
+        let resp = cl.search(tenant, c.query.row(0), 10).unwrap();
+        assert!(matches!(
+            resp.body,
+            ResponseBody::Error { code: ErrorCode::UnknownTenant, .. }),
+                "tenant {tenant:?}: {:?}", resp.body);
+    }
+
+    // QPS bucket: capacity 3, refilled at 3/s — a quick burst of 10
+    // lands ~3 and sheds the rest as QUOTA_EXCEEDED
+    let (mut ok, mut quota) = (0usize, 0usize);
+    for _ in 0..10 {
+        match cl.search("alice", c.query.row(0), 10).unwrap().body {
+            ResponseBody::SearchOk { .. } => ok += 1,
+            ResponseBody::Error {
+                code: ErrorCode::QuotaExceeded, .. } => quota += 1,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(ok >= 3, "the initial bucket holds 3 tokens, served {ok}");
+    assert!(quota >= 5, "burst must exhaust the bucket, shed {quota}");
+
+    // insert-byte budget is lifetime and exact: 2 rows fit, the 3rd is
+    // deterministically rejected
+    for i in 0..2 {
+        let resp = cl.insert("ingest", c.base.row(i), 1, dim as u32)
+            .unwrap();
+        assert!(matches!(resp.body,
+                         ResponseBody::InsertOk { accepted: true, .. }),
+                "row {i}: {:?}", resp.body);
+    }
+    let resp = cl.insert("ingest", c.base.row(2), 1, dim as u32).unwrap();
+    assert!(matches!(
+        resp.body,
+        ResponseBody::Error { code: ErrorCode::QuotaExceeded, .. }),
+            "byte budget must reject the 3rd row: {:?}", resp.body);
+
+    // STATS reports the accounting the quota decisions came from
+    let js = cl.stats("alice").unwrap();
+    let parsed = unq::util::json::Json::parse(&js).unwrap();
+    assert_eq!(parsed.get("tenant").and_then(|j| j.as_str()),
+               Some("alice"));
+    let requests = parsed.get("requests")
+        .and_then(|j| j.as_f64).unwrap() as usize;
+    let rejected = parsed.get("rejected")
+        .and_then(|j| j.as_f64).unwrap() as usize;
+    assert_eq!(requests, ok);
+    assert_eq!(rejected, quota);
+    drop(cl);
+    stop(st);
+}
+
+// ------------------------------------------------- protocol semantics
+
+#[test]
+fn bad_version_is_typed_and_the_connection_survives() {
+    let c = corpus(1200, 1);
+    let st = flat_stack(&c);
+
+    let mut s = raw_conn(&st);
+    let mut payload = vec![Opcode::Ping.code(), 99]; // future version
+    payload.extend_from_slice(&7u64.to_le_bytes());
+    s.write_all(&encode_frame(&payload)).unwrap();
+    let resp = raw_recv(&mut s).expect("typed reply");
+    // the id offset is version-independent, so the reply echoes it
+    assert_eq!(resp.id, 7);
+    assert!(matches!(resp.body,
+                     ResponseBody::Error { code: ErrorCode::BadVersion, .. }),
+            "want BAD_VERSION, got {:?}", resp.body);
+
+    // a decode error is not a framing error: the connection stays open
+    s.write_all(&encode_request(&NetRequest {
+        id: 8, body: RequestBody::Ping,
+    })).unwrap();
+    let pong = raw_recv(&mut s).expect("connection survived");
+    assert_eq!(pong.id, 8);
+    assert!(matches!(pong.body, ResponseBody::Pong));
+    stop(st);
+}
+
+#[test]
+fn mutating_ops_roundtrip_and_frozen_backends_decline() {
+    let c = corpus(1500, 2);
+    let dim = c.base.dim as u32;
+
+    // streaming backend: insert returns the assigned ids, delete
+    // reports how many of them existed
+    let stream = streaming_backend(&c);
+    let st = start(train_pq(&c), IndexBackend::Streaming(stream),
+                   SearchConfig { rerank_l: 64, k: 10,
+                                  ..Default::default() },
+                   serve_cfg(), net_cfg());
+    let mut cl = client(&st);
+    let resp = cl.insert("", c.base.rows(0, 3), 3, dim).unwrap();
+    let ids = match resp.body {
+        ResponseBody::InsertOk { accepted: true, ids } => ids,
+        other => panic!("insert: {other:?}"),
+    };
+    assert_eq!(ids.len(), 3);
+    let resp = cl.delete("", &ids).unwrap();
+    match resp.body {
+        ResponseBody::DeleteOk { accepted: true, removed } => {
+            assert_eq!(removed, 3);
+        }
+        other => panic!("delete: {other:?}"),
+    }
+    cl.ping().unwrap();
+    drop(cl);
+    stop(st);
+
+    // frozen (flat) backend: same wire ops answer accepted = false
+    let st = flat_stack(&c);
+    let mut cl = client(&st);
+    let resp = cl.insert("", c.base.rows(0, 2), 2, dim).unwrap();
+    assert!(matches!(resp.body,
+                     ResponseBody::InsertOk { accepted: false, .. }),
+            "frozen insert: {:?}", resp.body);
+    let resp = cl.delete("", &[1, 2]).unwrap();
+    assert!(matches!(resp.body,
+                     ResponseBody::DeleteOk { accepted: false,
+                                              removed: 0 }),
+            "frozen delete: {:?}", resp.body);
+    // shape violations are BAD_REQUEST before any quota spend
+    let resp = cl.search("", &[0.0f32; 3], 10).unwrap();
+    assert!(matches!(resp.body,
+                     ResponseBody::Error { code: ErrorCode::BadRequest,
+                                           .. }),
+            "dim mismatch: {:?}", resp.body);
+    drop(cl);
+    stop(st);
+}
+
+// -------------------------------------------------------------- doc sync
+
+/// Every opcode and error code in PROTOCOL.md's tables must match a
+/// `net::proto` enum variant — both directions, code and name.  The
+/// spec rows have the exact shape `| `0xNN` | `NAME` | ...`.
+#[test]
+fn protocol_doc_tables_pin_the_wire_enums() {
+    let md = include_str!("../PROTOCOL.md");
+    let mut doc: Vec<(u8, String)> = Vec::new();
+    for line in md.lines() {
+        let cells: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cells.len() < 3 {
+            continue;
+        }
+        let Some(hex) = cells[1].strip_prefix("`0x")
+            .and_then(|s| s.strip_suffix('`'))
+        else {
+            continue;
+        };
+        let Ok(code) = u8::from_str_radix(hex, 16) else { continue };
+        let Some(name) = cells[2].strip_prefix('`')
+            .and_then(|s| s.strip_suffix('`'))
+        else {
+            continue;
+        };
+        if !name.is_empty()
+            && name.chars().all(|ch| ch.is_ascii_uppercase() || ch == '_')
+        {
+            doc.push((code, name.to_string()));
+        }
+    }
+
+    let mut want: Vec<(u8, String)> = Opcode::all().iter()
+        .map(|o| (o.code(), o.name().to_string()))
+        .chain(ErrorCode::all().iter()
+                   .map(|e| (e.code(), e.name().to_string())))
+        .collect();
+    doc.sort();
+    doc.dedup();
+    want.sort();
+    assert!(!doc.is_empty(), "PROTOCOL.md spec tables not found");
+    assert_eq!(doc, want,
+               "PROTOCOL.md tables and net::proto enums diverged — \
+                update them together");
+}
