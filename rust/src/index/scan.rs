@@ -44,7 +44,9 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
                      index: &CompressedIndex, lo: usize, hi: usize,
                      k: usize) -> Vec<(f32, u32)> {
     let stride = index.stride;
-    let mut top = TopK::new(k);
+    // never size the heap past the range: k comes from callers (and
+    // ultimately the wire), the row count is ground truth
+    let mut top = TopK::new(k.min(hi - lo).max(1));
     let mut worst = f32::INFINITY;
     let codes = &index.codes[lo * stride..hi * stride];
     // 4-row software pipeline: the per-row table gathers are independent,
@@ -217,7 +219,7 @@ fn scan_blocked_int<T: Copy + Into<u32>>(
     let stride = index.stride;
     debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
     debug_assert_eq!(qtables.len(), m * kw);
-    let mut top = TopK::new(k);
+    let mut top = TopK::new(k.min(hi - lo).max(1));
     let mut worst = f32::INFINITY;
     // transpose buffer for the unpacked fallback, allocated only when
     // that path actually runs — the packed fast path stays allocation-free
@@ -359,7 +361,7 @@ fn scan_blocked_int_simd<T: Copy + Into<u32>>(
     let stride = index.stride;
     debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
     let widened: Vec<u32> = qtables.iter().map(|&t| t.into()).collect();
-    let mut top = TopK::new(k);
+    let mut top = TopK::new(k.min(hi - lo).max(1));
     let mut worst = f32::INFINITY;
     let mut scratch = Vec::new();
     let b0 = lo / BLOCK;
@@ -398,7 +400,7 @@ fn scan_blocked_u4_simd(tables: &[u8], m: usize, lut: &Lut,
     let stride = index.stride;
     debug_assert_eq!(m, stride, "quantized LUT rows must match index stride");
     debug_assert_eq!(tables.len(), m * U4_ROW);
-    let mut top = TopK::new(k);
+    let mut top = TopK::new(k.min(hi - lo).max(1));
     let mut worst = f32::INFINITY;
     let mut scratch = Vec::new();
     let b0 = lo / BLOCK;
@@ -432,7 +434,7 @@ fn scan_blocked_u4_simd(tables: &[u8], m: usize, lut: &Lut,
 /// Generic scan via `Lut::score` (used by the lattice direct path).
 pub fn scan_generic_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
                          hi: usize, k: usize) -> Vec<(f32, u32)> {
-    let mut top = TopK::new(k);
+    let mut top = TopK::new(k.min(hi.saturating_sub(lo)).max(1));
     let mut worst = f32::INFINITY;
     for i in lo..hi {
         let s = lut.score(index.code(i));
@@ -563,7 +565,7 @@ pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
     };
     let mut span = crate::span!("rescore");
     span.add_rows(survivors.len() as u64);
-    let mut top = TopK::new(k);
+    let mut top = TopK::new(k.min(survivors.len()).max(1));
     let mut worst = f32::INFINITY;
     for id in survivors {
         let s = lut.score(index.code(id as usize));
@@ -577,7 +579,8 @@ pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
 
 /// Merge several per-shard top-k lists into a global top-k.
 pub fn merge_topk(mut parts: Vec<Vec<(f32, u32)>>, k: usize) -> Vec<(f32, u32)> {
-    let mut top = TopK::new(k);
+    let total: usize = parts.iter().map(Vec::len).sum();
+    let mut top = TopK::new(k.min(total).max(1));
     for part in parts.drain(..) {
         for (s, id) in part {
             top.push(s, id);

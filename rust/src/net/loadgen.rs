@@ -32,7 +32,8 @@ use crate::util::rng::SplitMix64;
 
 use super::client::Client;
 use super::proto::{decode_response, encode_request, read_frame,
-                   ErrorCode, NetRequest, RequestBody, ResponseBody};
+                   ErrorCode, FrameError, NetRequest, RequestBody,
+                   ResponseBody};
 
 /// Queries cycle through a pool of this many rows.
 const QUERY_POOL: usize = 256;
@@ -323,7 +324,11 @@ fn open_worker(cfg: &LoadgenConfig, tid: u64, rate: f64, pool: &Dataset)
             let mut out = WorkerOut::default();
             let mut r = BufReader::new(read_half);
             // backstop: never hang past shutdown even if responses
-            // stop arriving (FrameError::Io covers the timeout)
+            // stop arriving (FrameError::Io covers the timeout).
+            // Mid-run, a timeout is just an overloaded server pausing
+            // >2 s between responses — exactly the regime open-loop
+            // measures — so it only turns terminal once the writer is
+            // done and this read is the post-shutdown drain.
             let _ = r.get_ref()
                 .set_read_timeout(Some(Duration::from_secs(2)));
             loop {
@@ -351,6 +356,14 @@ fn open_worker(cfg: &LoadgenConfig, tid: u64, rate: f64, pool: &Dataset)
                         }
                     }
                     Ok(None) => break,
+                    Err(FrameError::Io(e))
+                        if matches!(e.kind(),
+                                    std::io::ErrorKind::WouldBlock
+                                    | std::io::ErrorKind::TimedOut)
+                            && !writer_done.load(Ordering::SeqCst) =>
+                    {
+                        continue; // in-run lull, keep listening
+                    }
                     Err(_) => break, // torn stream or drain backstop
                 }
             }

@@ -27,6 +27,13 @@ pub const PROTO_VERSION: u8 = 1;
 /// Frame header bytes (`len` + `crc32`).
 pub const FRAME_HEADER: usize = 8;
 
+/// Largest `k` a SEARCH request may carry (PROTOCOL.md §"Opcodes").
+/// The server sizes per-query top-k heaps from `k`, so it must be
+/// bounds-checked at admission — a wire `k` of `u32::MAX` would
+/// otherwise request a multi-gigabyte allocation per query.  Zero and
+/// anything above this cap are answered `BAD_REQUEST`.
+pub const MAX_SEARCH_K: u32 = 1 << 16;
+
 /// Payload prelude bytes (`opcode` + `version` + `request_id`).
 pub const PAYLOAD_PRELUDE: usize = 10;
 
@@ -400,8 +407,13 @@ pub fn encode_response(resp: &NetResponse) -> Vec<u8> {
         ResponseBody::Error { code, msg } => {
             p = payload_prelude(Opcode::Error, resp.id);
             p.push(code.code());
-            let msg = &msg[..msg.len().min(u16::MAX as usize)];
-            put_str(&mut p, msg);
+            // truncate on a char boundary: a byte-offset slice panics
+            // when byte 65535 lands inside a multi-byte UTF-8 char
+            let mut cut = msg.len().min(u16::MAX as usize);
+            while !msg.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            put_str(&mut p, &msg[..cut]);
         }
     }
     encode_frame(&p)

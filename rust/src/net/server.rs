@@ -41,7 +41,8 @@ use crate::util::json::Json;
 
 use super::proto::{decode_request, encode_response, peek_request_id,
                    read_frame, ErrorCode, FrameError, NetResponse,
-                   ProtoError, RequestBody, ResponseBody, FRAME_HEADER};
+                   ProtoError, RequestBody, ResponseBody, FRAME_HEADER,
+                   MAX_SEARCH_K};
 
 /// Per-tenant accounting: a QPS token bucket plus a lifetime insert
 /// byte budget (0 = unlimited for either knob).
@@ -250,6 +251,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                 if shared.stop.load(Ordering::SeqCst) {
                     return;
                 }
+                // accept() can fail persistently (e.g. EMFILE while the
+                // connection cap is under pressure); back off instead of
+                // spinning the acceptor at 100% CPU
+                std::thread::sleep(Duration::from_millis(50));
                 continue;
             }
         };
@@ -527,11 +532,17 @@ fn dispatch(shared: &Shared, wtx: &SyncSender<Vec<u8>>,
 
     // shape gates before spending a quota token
     let (tenant, insert_bytes) = match &req.body {
-        RequestBody::Search { tenant, query, .. } => {
+        RequestBody::Search { tenant, k, query, .. } => {
             if query.len() != shared.dim {
                 return reject(ErrorCode::BadRequest,
                               &format!("query dim {} (index dim {})",
                                        query.len(), shared.dim));
+            }
+            // k sizes per-query top-k heaps downstream — gate it here
+            // so a hostile k can never reach an allocation
+            if *k == 0 || *k > MAX_SEARCH_K {
+                return reject(ErrorCode::BadRequest,
+                              &format!("k {k} outside [1, {MAX_SEARCH_K}]"));
             }
             (tenant.clone(), 0u64)
         }

@@ -485,6 +485,32 @@ fn bad_version_is_typed_and_the_connection_survives() {
     stop(st);
 }
 
+/// A hostile `k` (0 or u32::MAX) must die at the shape gate as
+/// BAD_REQUEST — never reach the scan path, where it would size a
+/// ~k-element heap allocation per query and abort the process.
+#[test]
+fn search_k_is_bounds_checked_before_any_allocation() {
+    let c = corpus(1200, 1);
+    let st = flat_stack(&c);
+    let mut cl = client(&st);
+    let q = c.query.row(0).to_vec();
+
+    for k in [0u32, unq::net::proto::MAX_SEARCH_K + 1, u32::MAX] {
+        let resp = cl.search("", &q, k).unwrap();
+        assert!(matches!(resp.body,
+                         ResponseBody::Error { code: ErrorCode::BadRequest,
+                                               .. }),
+                "k = {k}: {:?}", resp.body);
+    }
+    // the gate is per-request: the connection keeps serving, and an
+    // in-range k (the cap itself) still answers normally
+    let resp = cl.search("", &q, unq::net::proto::MAX_SEARCH_K).unwrap();
+    assert!(matches!(resp.body, ResponseBody::SearchOk { .. }),
+            "k at cap: {:?}", resp.body);
+    drop(cl);
+    stop(st);
+}
+
 #[test]
 fn mutating_ops_roundtrip_and_frozen_backends_decline() {
     let c = corpus(1500, 2);
