@@ -34,6 +34,7 @@ use unq::config::{AppConfig, QuantizerKind, ScanPrecision, SearchConfig,
                   StreamConfig};
 use unq::eval::{harness, recall};
 use unq::exec::Executor;
+use unq::index::{Filter, SearchEngine};
 use unq::util::json::Json;
 
 fn repo_root(name: &str) -> PathBuf {
@@ -216,12 +217,64 @@ fn main() {
         .collect();
     let mut results = Vec::with_capacity(queries.len());
     for chunk in queries.chunks(128) {
-        let ks = vec![search.k; chunk.len()];
+        let req = unq::index::SearchRequest::from_config(
+            &search, vec![search.k; chunk.len()]);
         results.extend(stream.search_batch_on(
-            exp.quant.as_ref(), &exec, chunk, &ks, &search));
+            exp.quant.as_ref(), &exec, chunk, &req));
     }
     let stream_f32 = recall(&results, &exp.gt).at10 as f64;
     cells.push(Cell { key: "stream_f32", recall_at10: stream_f32 });
+
+    // filtered search (rust/DESIGN.md §13): tag rows id % 2 and search
+    // under tag=0.  The filtered true NN is the first *admitted*
+    // committed neighbor, and it must surface in the filtered top-10;
+    // the in-scan filter must never leak an inadmissible row (that one
+    // is an exactness invariant, asserted inline).
+    let tags: Vec<u64> = (0..exp.index.n as u64).map(|i| i % 2).collect();
+    exp.index.set_tags(tags.clone());
+    ivf.set_tags(tags);
+    let mut fcfg = search;
+    fcfg.filter = Some(Filter::TagEq(0));
+    let filtered_recall10 =
+        |results: &[Vec<u32>], gt: &unq::gt::GroundTruth| -> f64 {
+            let mut hits = 0usize;
+            for (qi, got) in results.iter().enumerate() {
+                for &id in got {
+                    assert_eq!(id % 2, 0,
+                               "query {qi}: filtered search leaked \
+                                inadmissible id {id}");
+                }
+                let Some(&nn) =
+                    gt.neighbors[qi].iter().find(|&&id| id % 2 == 0)
+                else {
+                    continue;
+                };
+                hits += usize::from(
+                    got.iter().take(10).any(|&id| id == nn as u32));
+            }
+            100.0 * hits as f64 / results.len().max(1) as f64
+        };
+    let flat_filtered = {
+        let engine =
+            SearchEngine::new(exp.quant.as_ref(), &exp.index, fcfg);
+        let mut results = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(128) {
+            results.extend(engine.search_batch_on(&exec, chunk));
+        }
+        filtered_recall10(&results, &exp.gt)
+    };
+    cells.push(Cell { key: "flat_filtered", recall_at10: flat_filtered });
+    let ivf_filtered = {
+        let mut s = fcfg;
+        s.nprobe = nprobe_real;
+        let req = unq::index::SearchRequest::from_config(
+            &s, vec![s.k; queries.len()]);
+        let results = ivf
+            .search_batch_on(exp.quant.as_ref(), &exec, &queries, &req)
+            .expect("ivf filtered plan");
+        filtered_recall10(&results, &exp.gt)
+    };
+    cells.push(Cell { key: "ivf_filtered", recall_at10: ivf_filtered });
 
     // native UNQ (pure-Rust trained, quant::unq_native): flat + ivf
     // recall@10 at the same smoke sizes, with a tiny training budget.

@@ -82,13 +82,15 @@ fn main() {
     };
     let exec = Executor::new(cfg.num_threads);
     let qs: Vec<&[f32]> = (0..nq).map(|qi| queries.row(qi)).collect();
-    let ks = vec![cfg.k; nq];
+    let req = unq::index::SearchRequest::from_config(&cfg,
+                                                     vec![cfg.k; nq]);
 
     // the bit-identity contract at bench scale: one full batch on each
     // tier must agree exactly
-    let want = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+    let want = ivf.search_batch_on(&pq, &exec, &qs, &req)
+        .expect("ram search");
     let got = disk
-        .search_batch_on(&pq, &exec, &qs, &ks, &cfg)
+        .search_batch_on(&pq, &exec, &qs, &req)
         .expect("disk search");
     let ram_equal = got == want;
     assert!(ram_equal, "disk tier diverged from the RAM IvfIndex");
@@ -104,7 +106,7 @@ fn main() {
                       cache={}KB round={round}", cache_bytes >> 10),
             nq as u64,
             || {
-                disk.search_batch_on(&pq, &exec, &qs, &ks, &cfg)
+                disk.search_batch_on(&pq, &exec, &qs, &req)
                     .expect("disk search")
             },
         );

@@ -19,7 +19,7 @@ use unq::config::{AppConfig, QuantizerKind, ScanPrecision, SearchConfig};
 use unq::coordinator::demo::run_serve;
 use unq::data::{synthetic::Generator, Family};
 use unq::eval::tables::{table1_timings, table_timings};
-use unq::exec::Executor;
+use unq::exec::{Executor, ScanSpec};
 use unq::index::{simd, CompressedIndex, SearchEngine};
 use unq::ivf::{CoarseQuantizer, IvfIndex};
 use unq::obs;
@@ -83,7 +83,8 @@ fn scan_thread_sweep(b: &mut Bench) -> Vec<Json> {
         b.run(
             &format!("scan_batch {nq}q n={n} m={m} threads={threads}"),
             vectors_per_iter,
-            || exec.scan_batch(&luts, &index, &ks, 16_384),
+            || exec.scan_batch(&luts, &index, &ks, 16_384,
+                               &ScanSpec::default()),
         );
         let s = b.results().last().expect("bench just ran");
         let med = s.median();
@@ -135,8 +136,8 @@ fn scan_precision_sweep(b: &mut Bench, kw: usize,
         let exec = Executor::new(threads);
         let vectors_per_iter = (n * nq) as u64;
         let f32_ref =
-            exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
-                                 ScanPrecision::F32);
+            exec.scan_batch(&luts, &index, &ks, shard_rows,
+                            &ScanSpec::default());
         let mut f32_secs = f64::NAN;
         for &prec in precisions {
             // f32 ignores dispatch entirely; integer precisions get a
@@ -160,8 +161,9 @@ fn scan_precision_sweep(b: &mut Bench, kw: usize,
                     &format!("scan {nq}q n={n} m={m} kw={kw} prec={} {mode}",
                              prec.name()),
                     vectors_per_iter,
-                    || exec.scan_batch_prec(&luts, &index, &ks, shard_rows,
-                                            prec),
+                    || exec.scan_batch(
+                        &luts, &index, &ks, shard_rows,
+                        &ScanSpec { precision: prec, ..Default::default() }),
                 );
                 let secs =
                     b.results().last().expect("bench just ran").median();
@@ -171,8 +173,9 @@ fn scan_precision_sweep(b: &mut Bench, kw: usize,
                 if force_scalar {
                     scalar_secs = secs;
                 }
-                let got = exec.scan_batch_prec(&luts, &index, &ks,
-                                               shard_rows, prec);
+                let got = exec.scan_batch(
+                    &luts, &index, &ks, shard_rows,
+                    &ScanSpec { precision: prec, ..Default::default() });
                 let overlap: usize = got
                     .iter()
                     .zip(&f32_ref)
@@ -252,13 +255,16 @@ fn ivf_nprobe_sweep(b: &mut Bench) -> Vec<Json> {
     nprobes.dedup();
     for nprobe in nprobes {
         cfg.nprobe = nprobe;
+        let req = unq::index::SearchRequest::from_config(&cfg, ks.clone());
         b.run(
             &format!("ivf scan {nq}q n={n} L={num_lists} nprobe={nprobe}"),
             (n * nq) as u64 * nprobe as u64 / num_lists as u64,
-            || ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg),
+            || ivf.search_batch_on(&pq, &exec, &qs, &req)
+                .expect("ivf batch plan"),
         );
         let secs = b.results().last().expect("bench just ran").median();
-        let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        let got = ivf.search_batch_on(&pq, &exec, &qs, &req)
+            .expect("ivf batch plan");
         let overlap: usize = got
             .iter()
             .zip(&flat_results)

@@ -159,6 +159,13 @@ pub struct SearchConfig {
     /// task ≈ `k × this` (env `UNQ_PREFILTER_MARGIN`,
     /// CLI `--prefilter-margin`).
     pub prefilter_margin: usize,
+    /// Metadata predicate over the row attribute column
+    /// (rust/DESIGN.md §13): only rows whose tag satisfies the filter
+    /// are eligible — pruned *inside* the scan's selection loop, at
+    /// every backend and precision.  Strict semantics: filtering an
+    /// index with no attribute column matches nothing (env
+    /// `UNQ_FILTER=tag=V`, CLI `--filter tag=V`).
+    pub filter: Option<crate::index::Filter>,
     /// Per-query span tracing (rust/DESIGN.md §10): when on, searches
     /// build a span tree (route → scan → rerank …) rendered as EXPLAIN
     /// by `unq search --explain` and attached to coordinator responses.
@@ -173,7 +180,7 @@ impl Default for SearchConfig {
                        shard_rows: 0, nprobe: 0,
                        scan_precision: ScanPrecision::F32,
                        prefilter: false, prefilter_margin: 4,
-                       trace: false }
+                       filter: None, trace: false }
     }
 }
 
@@ -477,6 +484,10 @@ impl AppConfig {
                 ("prefilter", Json::Bool(self.search.prefilter)),
                 ("prefilter_margin",
                  Json::Num(self.search.prefilter_margin as f64)),
+                ("filter", match self.search.filter {
+                    Some(f) => Json::Str(f.to_string()),
+                    None => Json::Null,
+                }),
                 ("trace", Json::Bool(self.search.trace)),
             ])),
             ("ivf", Json::obj(vec![
@@ -584,6 +595,12 @@ impl AppConfig {
             if let Some(v) = s.get("prefilter_margin").and_then(Json::as_usize)
             {
                 cfg.search.prefilter_margin = v;
+            }
+            if let Some(v) = s.get("filter").and_then(Json::as_str) {
+                cfg.search.filter =
+                    Some(crate::index::Filter::parse(v).map_err(|e| {
+                        anyhow::anyhow!("search.filter: {e}")
+                    })?);
             }
             if let Some(v) = s.get("trace").and_then(Json::as_bool) {
                 cfg.search.trace = v;
@@ -847,6 +864,13 @@ impl AppConfig {
                 "1" | "true" | "yes" => self.search.prefilter = true,
                 "0" | "false" | "no" => self.search.prefilter = false,
                 _ => {}
+            }
+        }
+        if let Ok(s) = std::env::var("UNQ_FILTER") {
+            if s.is_empty() {
+                self.search.filter = None;
+            } else if let Ok(f) = crate::index::Filter::parse(&s) {
+                self.search.filter = Some(f);
             }
         }
         if let Ok(s) = std::env::var("UNQ_PREFILTER_MARGIN") {
@@ -1155,6 +1179,26 @@ mod tests {
         let cfg = AppConfig::from_json(&j).unwrap();
         assert!(cfg.search.prefilter);
         assert_eq!(cfg.search.prefilter_margin, 2);
+    }
+
+    #[test]
+    fn filter_roundtrip_defaults_off_and_rejects_malformed() {
+        use crate::index::Filter;
+        let c = AppConfig::default();
+        assert!(c.search.filter.is_none(), "filter must default off");
+        let dir = TempDir::new("cfg").unwrap();
+        let p = dir.path().join("filter.json");
+        let mut c = AppConfig::default();
+        c.search.filter = Some(Filter::TagEq(7));
+        c.save(&p).unwrap();
+        assert_eq!(AppConfig::from_file(&p).unwrap().search.filter,
+                   Some(Filter::TagEq(7)));
+        let j = Json::parse(r#"{"search": {"filter": "tag=3"}}"#).unwrap();
+        assert_eq!(AppConfig::from_json(&j).unwrap().search.filter,
+                   Some(Filter::TagEq(3)));
+        let bad =
+            Json::parse(r#"{"search": {"filter": "color=red"}}"#).unwrap();
+        assert!(AppConfig::from_json(&bad).is_err());
     }
 
     #[test]

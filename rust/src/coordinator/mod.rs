@@ -43,10 +43,19 @@ use crate::obs::hist::LatencyHistogram;
 pub type RequestId = u64;
 
 /// A search request: find the top-k neighbors of `query`.
+///
+/// (This is the *coordinator's* queued-request envelope; the index
+/// layer's batch-plan shape is [`crate::index::SearchRequest`] — the
+/// pipeline builds one of those per flushed batch group.)
 pub struct SearchRequest {
     pub id: RequestId,
     pub query: Vec<f32>,
     pub k: usize,
+    /// per-request metadata predicate; `None` scans everything
+    /// (rust/DESIGN.md §13).  Requests with different predicates never
+    /// share an index batch plan — the batcher may still flush them
+    /// together, the pipeline groups by predicate before planning.
+    pub filter: Option<crate::index::Filter>,
     pub submitted: Instant,
     pub resp: mpsc::SyncSender<SearchResponse>,
 }

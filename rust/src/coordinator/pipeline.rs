@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{SearchConfig, ServeConfig};
 use crate::exec::Executor;
-use crate::index::CompressedIndex;
+use crate::index::{CompressedIndex, Filter};
 use crate::ivf::IndexBackend;
 use crate::quant::Quantizer;
 
@@ -166,14 +166,24 @@ impl Server {
         self.ingress.send(req).map_err(|_| SubmitError::Closed)
     }
 
-    /// Convenience: blocking round-trip search.
+    /// Convenience: blocking round-trip search (no predicate).
     pub fn search_blocking(&self, query: &[f32], k: usize)
                            -> Result<SearchResponse, SubmitError> {
+        self.search_blocking_filtered(query, k, None)
+    }
+
+    /// Blocking round-trip search under an optional metadata predicate
+    /// (rust/DESIGN.md §13) — what the TCP front door calls when a
+    /// SEARCH frame carries a filter TLV.
+    pub fn search_blocking_filtered(&self, query: &[f32], k: usize,
+                                    filter: Option<Filter>)
+                                    -> Result<SearchResponse, SubmitError> {
         let (tx, rx) = mpsc::sync_channel(1);
         let req = SearchRequest {
             id: self.next_id(),
             query: query.to_vec(),
             k,
+            filter,
             submitted: Instant::now(),
             resp: tx,
         };
@@ -305,33 +315,57 @@ fn process_search_batch(state: &ServerState, exec: &Executor,
     m.batches.fetch_add(1, Ordering::Relaxed);
     m.batch_items.fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-    // The whole flushed batch goes to the backend as one plan: the flat
-    // arm builds all LUTs in one call (one PJRT batch for UNQ) and runs
-    // the QueryBatch × IndexShard plan; the IVF arm plans one slot per
-    // (query, probed list) through the same executor.  (Pool size is
-    // fixed by the Executor built at worker startup; only the
+    // The flushed batch goes to the backend grouped by predicate: a
+    // scan plan compiles one filter-bitmap set, so requests with
+    // different predicates cannot share a plan.  The common case —
+    // every request unfiltered — stays a single whole-batch plan: the
+    // flat arm builds all LUTs in one call (one PJRT batch for UNQ)
+    // and runs the QueryBatch × IndexShard plan; the IVF arm plans one
+    // slot per (query, probed list) through the same executor.  (Pool
+    // size is fixed by the Executor built at worker startup; only the
     // serve-level shard knob flows through the search config.)
-    let queries: Vec<&[f32]> =
-        batch.iter().map(|r| r.query.as_slice()).collect();
     let mut cfg = state.search_cfg;
     cfg.shard_rows = state.serve_cfg.shard_rows;
-    let ks: Vec<usize> = batch.iter().map(|r| r.k).collect();
+    // per-request predicate wins; the server-level config filter is
+    // the default for requests that carry none
+    let mut groups: Vec<(Option<Filter>, Vec<usize>)> = Vec::new();
+    for (i, r) in batch.iter().enumerate() {
+        let f = r.filter.or(cfg.filter);
+        match groups.iter_mut().find(|(gf, _)| *gf == f) {
+            Some((_, members)) => members.push(i),
+            None => groups.push((f, vec![i])),
+        }
+    }
+    let run_groups = |cfg: &SearchConfig| -> Vec<Vec<u32>> {
+        let mut results: Vec<Vec<u32>> = vec![Vec::new(); batch.len()];
+        for (f, members) in &groups {
+            let queries: Vec<&[f32]> = members
+                .iter()
+                .map(|&i| batch[i].query.as_slice())
+                .collect();
+            let ks: Vec<usize> = members.iter().map(|&i| batch[i].k).collect();
+            let gcfg = SearchConfig { filter: *f, ..*cfg };
+            let req = crate::index::SearchRequest::from_config(&gcfg, ks);
+            let out = state.backend.search_batch_on(
+                state.quant.as_ref(), exec, &queries, &req);
+            for (&i, r) in members.iter().zip(out) {
+                results[i] = r;
+            }
+        }
+        results
+    };
     // one span tree per flushed batch (a batch of one ⇒ per query):
     // the root opens on this worker thread, the plan's task spans cross
     // the exec pool through TraceHandle, and the rendered tree rides
     // back on every response in the batch
     let (results, rendered) = if cfg.trace {
         let (trace, root) = crate::obs::Trace::begin("search_batch");
-        let results = state.backend.search_batch_on(
-            state.quant.as_ref(), exec, &queries, &ks, &cfg);
+        let results = run_groups(&cfg);
         drop(root);
         (results, Some(trace.render()))
     } else {
-        let results = state.backend.search_batch_on(
-            state.quant.as_ref(), exec, &queries, &ks, &cfg);
-        (results, None)
+        (run_groups(&cfg), None)
     };
-    drop(queries);
 
     for (req, neighbors) in batch.into_iter().zip(results) {
         let latency_us = req.submitted.elapsed().as_micros() as u64;
@@ -631,6 +665,7 @@ mod tests {
             id: 1,
             query: base.row(0).to_vec(),
             k: 3,
+            filter: None,
             submitted: Instant::now(),
             resp: tx,
         })).unwrap();
@@ -750,6 +785,75 @@ mod tests {
         let after = server.search_blocking(queries.row(0), 10).unwrap();
         assert!(!after.neighbors.contains(&victim));
         server.shutdown();
+    }
+
+    #[test]
+    fn filtered_and_unfiltered_requests_share_one_flush_correctly() {
+        // a flushed batch mixing predicates splits into per-predicate
+        // plans; each response must equal the direct engine under the
+        // same predicate, and unfiltered requests must be untouched
+        let train = Generator::new(Family::SiftLike, 31).generate(0, 600);
+        let base = Generator::new(Family::SiftLike, 31).generate(1, 1500);
+        let pq = Pq::train(&train.data, train.dim, 8, 32, 0, 6);
+        let mut index = CompressedIndex::build(&pq, &base);
+        index.set_tags((0..base.len() as u64).map(|i| i % 3).collect());
+        let cfg = SearchConfig { rerank_l: 64, k: 10, ..Default::default() };
+        let server = Server::start(
+            Arc::new(Pq::train(&train.data, train.dim, 8, 32, 0, 6)),
+            Arc::new({
+                let mut ix = CompressedIndex::build(&pq, &base);
+                ix.set_tags((0..base.len() as u64).map(|i| i % 3).collect());
+                ix
+            }),
+            cfg,
+            ServeConfig { max_batch: 8, max_delay_us: 500, queue_depth: 64,
+                          num_threads: 2, shard_rows: 512 },
+        );
+        let queries = Generator::new(Family::SiftLike, 31).generate(2, 6);
+        let mut fcfg = cfg;
+        fcfg.shard_rows = 512;
+        fcfg.filter = Some(Filter::TagEq(1));
+        let f_engine = SearchEngine::new(&pq, &index, fcfg);
+        let mut ucfg = fcfg;
+        ucfg.filter = None;
+        let u_engine = SearchEngine::new(&pq, &index, ucfg);
+        // fire filtered and unfiltered requests concurrently so flushes
+        // mix predicates
+        let server = Arc::new(server);
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let (server, queries, f_engine, u_engine) =
+                    (&server, &queries, &f_engine, &u_engine);
+                s.spawn(move || {
+                    for qi in 0..queries.len() {
+                        let q = queries.row(qi);
+                        if t == 0 {
+                            let r = server
+                                .search_blocking_filtered(
+                                    q, 10, Some(Filter::TagEq(1)))
+                                .unwrap();
+                            assert_eq!(r.neighbors, f_engine.search(q),
+                                       "filtered query {qi}");
+                            assert!(r.neighbors
+                                        .iter()
+                                        .all(|id| id % 3 == 1),
+                                    "inadmissible id served");
+                        } else {
+                            let r = server.search_blocking(q, 10).unwrap();
+                            assert_eq!(r.neighbors, u_engine.search(q),
+                                       "unfiltered query {qi}");
+                        }
+                    }
+                });
+            }
+        });
+        // selectivity 0 through the full pipeline: empty, not a panic
+        let r = server
+            .search_blocking_filtered(queries.row(0), 10,
+                                      Some(Filter::TagEq(77)))
+            .unwrap();
+        assert!(r.neighbors.is_empty());
+        Arc::try_unwrap(server).ok().map(|s| s.shutdown());
     }
 
     #[test]

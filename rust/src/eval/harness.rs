@@ -74,9 +74,11 @@ impl Experiment {
         let mut results = Vec::with_capacity(queries.len());
         let t0 = Instant::now();
         for chunk in queries.chunks(EVAL_BATCH) {
-            let ks = vec![search.k; chunk.len()];
+            let req = crate::index::SearchRequest::from_config(
+                &search, vec![search.k; chunk.len()]);
             results.extend(ivf.search_batch_on(
-                self.quant.as_ref(), &exec, chunk, &ks, &search));
+                self.quant.as_ref(), &exec, chunk, &req)
+                .expect("ivf batch plan"));
         }
         let secs = t0.elapsed().as_secs_f64();
         NprobePoint {
@@ -100,9 +102,10 @@ impl Experiment {
         let mut results = Vec::with_capacity(queries.len());
         let t0 = Instant::now();
         for chunk in queries.chunks(EVAL_BATCH) {
-            let ks = vec![search.k; chunk.len()];
+            let req = crate::index::SearchRequest::from_config(
+                &search, vec![search.k; chunk.len()]);
             results.extend(disk.search_batch_on(
-                self.quant.as_ref(), &exec, chunk, &ks, &search)?);
+                self.quant.as_ref(), &exec, chunk, &req)?);
         }
         let secs = t0.elapsed().as_secs_f64();
         Ok(NprobePoint {
@@ -171,6 +174,56 @@ impl Experiment {
             .collect()
     }
 
+    /// The filtered-search selectivity curve (`unq eval
+    /// --filter-selectivity`): for each modulus `m`, tag the flat
+    /// index `id % m` and run the query set under the predicate
+    /// `tag=0` — admitting ~`1/m` of the rows inside the scan kernels
+    /// (rust/DESIGN.md §13).  Reports per-query latency next to the
+    /// `filter.*` pruning counters, and asserts the in-scan filter
+    /// never leaks an inadmissible row.
+    pub fn run_filter_selectivity(&mut self, search: SearchConfig,
+                                  moduli: &[u64]) -> Vec<FilterPoint> {
+        let n = self.index.n as u64;
+        let queries: Vec<&[f32]> = (0..self.splits.query.len())
+            .map(|qi| self.splits.query.row(qi))
+            .collect();
+        let exec = Executor::new(search.num_threads);
+        let mut out = Vec::with_capacity(moduli.len());
+        for &m in moduli {
+            assert!(m > 0, "selectivity modulus must be positive");
+            self.index.set_tags((0..n).map(|i| i % m).collect());
+            let mut s = search;
+            s.filter = Some(crate::index::Filter::TagEq(0));
+            let engine =
+                SearchEngine::new(self.quant.as_ref(), &self.index, s);
+            let obs0 = crate::obs::global().snapshot();
+            let t0 = Instant::now();
+            let mut results = Vec::with_capacity(queries.len());
+            for chunk in queries.chunks(EVAL_BATCH) {
+                results.extend(engine.search_batch_on(&exec, chunk));
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let d = crate::obs::global().snapshot().delta(&obs0);
+            for (qi, ids) in results.iter().enumerate() {
+                for &id in ids {
+                    assert_eq!(
+                        u64::from(id) % m, 0,
+                        "query {qi}: filtered search leaked id {id} \
+                         under tag = id % {m}"
+                    );
+                }
+            }
+            out.push(FilterPoint {
+                modulus: m,
+                selectivity: 1.0 / m as f64,
+                rows_pruned: d.counter("filter.rows_pruned"),
+                bitmaps_built: d.counter("filter.bitmaps_built"),
+                secs_per_query: secs / queries.len().max(1) as f64,
+            });
+        }
+        out
+    }
+
     /// Per-query mean latency of the two-stage batch search, in seconds.
     pub fn measure_latency(&self, search: SearchConfig, queries: usize) -> f64 {
         let engine = SearchEngine::new(self.quant.as_ref(), &self.index, search);
@@ -199,6 +252,20 @@ pub struct NprobePoint {
 pub struct PrecisionPoint {
     pub precision: ScanPrecision,
     pub recall: Recall,
+    pub secs_per_query: f64,
+}
+
+/// One measured point of the filtered-search selectivity curve.
+#[derive(Clone, Copy, Debug)]
+pub struct FilterPoint {
+    /// rows are tagged `id % modulus`; the predicate admits `tag=0`
+    pub modulus: u64,
+    /// admitted fraction of the base set (`1/modulus`)
+    pub selectivity: f64,
+    /// `filter.rows_pruned` delta over the sweep point
+    pub rows_pruned: u64,
+    /// `filter.bitmaps_built` delta over the sweep point
+    pub bitmaps_built: u64,
     pub secs_per_query: f64,
 }
 
@@ -691,9 +758,10 @@ mod tests {
             .collect();
         let mut results = Vec::with_capacity(queries.len());
         for chunk in queries.chunks(128) {
-            let ks = vec![search.k; chunk.len()];
+            let req = crate::index::SearchRequest::from_config(
+                &search, vec![search.k; chunk.len()]);
             results.extend(stream.search_batch_on(
-                exp.quant.as_ref(), &exec, chunk, &ks, &search));
+                exp.quant.as_ref(), &exec, chunk, &req));
         }
         assert_eq!(super::recall(&results, &exp.gt), r,
                    "streaming must equal flat for fresh inserts");

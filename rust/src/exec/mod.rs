@@ -13,12 +13,18 @@
 //!   ([`crate::ivf`]) plans per-(query, probed-list) tasks through the
 //!   same executor so mixed-list batches fill the pool.
 //!
+//! Both entrypoints ([`Executor::scan_batch`] and
+//! [`Executor::run_scan_tasks`]) take a per-plan [`plan::ScanSpec`]
+//! carrying every scan axis — kernel precision, the 1-bit pre-filter,
+//! the metadata predicate filter — so new axes become fields, not new
+//! entrypoint suffixes.
+//!
 //! The execution contract is strict determinism: at the default
 //! `ScanPrecision::F32`, for any `(num_threads, shard_rows)` the results
 //! are bit-identical to the single-threaded, single-shard scan —
 //! parallelism changes wall-clock, never answers.  The integer scan
 //! precisions (`U16`/`U8`, selected per plan via
-//! `Executor::scan_batch_prec` / `run_scan_tasks_prec`) are
+//! [`plan::ScanSpec::precision`]) are
 //! deterministic **per shard decomposition**: results are identical
 //! across executors for a fixed `shard_rows`, but per-shard integer
 //! selection can swap candidates inside the LUT quantization margin
@@ -32,5 +38,5 @@ pub mod plan;
 pub mod pool;
 
 pub use plan::{rerank_batch, shard_ranges, shard_ranges_in, Executor,
-               IndexedScanTask, PrefilterPlan, ScanTask};
+               PrefilterPlan, ScanSpec, ScanTask};
 pub use pool::WorkerPool;

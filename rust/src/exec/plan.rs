@@ -2,12 +2,18 @@
 //! both the flat `QueryBatch × IndexShard` plan and the IVF per-list
 //! plans) and the batched gather → decode rerank reduction.
 //!
+//! The API is two entrypoints and one options struct: the flat planner
+//! [`Executor::scan_batch`], the general [`Executor::run_scan_tasks`],
+//! and a per-plan [`ScanSpec`] carrying every scan axis (kernel
+//! precision, the 1-bit pre-filter, the metadata predicate filter) —
+//! new axes land as `ScanSpec` fields, not as new entrypoint suffixes.
+//!
 //! The general unit is a [`ScanTask`]: score a contiguous row range of
-//! one index with one LUT and merge the partial top-k into an output
-//! *slot*.  The flat plan emits one task per `(query, shard)` pair with
-//! slot = query; the IVF plan (`crate::ivf`) emits one slot per
-//! `(query, probed list)` pair so a small batch probing many lists still
-//! fills the worker pool.  Per slot, partial results are reduced with
+//! one named index with one LUT and merge the partial top-k into an
+//! output *slot*.  The flat plan emits one task per `(query, shard)`
+//! pair with slot = query; the IVF plan (`crate::ivf`) emits one slot
+//! per `(query, probed list)` pair so a small batch probing many lists
+//! still fills the worker pool.  Per slot, partial results are reduced with
 //! [`merge_topk`] **in task-submission order**, which for the flat plan
 //! means ascending shard order — bit-identical to a sequential
 //! full-index scan regardless of thread count or shard size (the
@@ -21,6 +27,7 @@
 use std::sync::mpsc;
 
 use crate::config::ScanPrecision;
+use crate::index::filter::{FilterBitmap, FilterPlan};
 use crate::index::scan::{merge_topk, scan_range_topk_prec,
                          scan_range_topk_prefiltered};
 use crate::index::CompressedIndex;
@@ -63,19 +70,31 @@ pub struct PrefilterPlan {
 }
 
 /// One task's scan: the pre-filtered exact path when the plan resolved
-/// row sketches + a query sketch for it, the precision kernel otherwise.
+/// row sketches + a query sketch for it, the precision kernel otherwise
+/// — either way threading the task's predicate bitmap into selection.
 ///
 /// Also the per-task instrumentation point (rust/DESIGN.md §10): rows
 /// are credited to the kernel that actually scans them — the exact f32
 /// kernel for pre-filtered tasks and `None` qluts, the integer kernels
 /// otherwise — in one bulk `fetch_add` per task, and the task gets a
 /// `scan_task` span carrying its row count when a trace is live.
+/// Predicate pruning charges `filter.rows_pruned` with the range's
+/// filtered-out count, and a range with nothing admitted skips its
+/// kernel entirely (an empty part merges as a no-op).
 fn scan_task_part(lut: &Lut, qlut: Option<&QuantizedLut>,
                   ix: &CompressedIndex, lo: usize, hi: usize, k: usize,
-                  pf: Option<(&[u64], u64, usize)>) -> Vec<(f32, u32)> {
+                  pf: Option<(&[u64], u64, usize)>,
+                  filter: Option<&FilterBitmap>) -> Vec<(f32, u32)> {
     let reg = obs::global();
     let rows = (hi - lo) as u64;
     reg.scan_tasks.inc();
+    if let Some(f) = filter {
+        let admitted = f.admitted_in(lo, hi) as u64;
+        reg.filter_rows_pruned.add(rows - admitted);
+        if admitted == 0 {
+            return Vec::new();
+        }
+    }
     match (pf.is_some(), qlut) {
         (true, _) | (false, None) => reg.scan_rows_f32.add(rows),
         (false, Some(QuantizedLut::U16 { .. })) => {
@@ -88,8 +107,8 @@ fn scan_task_part(lut: &Lut, qlut: Option<&QuantizedLut>,
     span.add_rows(rows);
     match pf {
         Some((sketches, qsketch, margin)) => scan_range_topk_prefiltered(
-            lut, ix, sketches, qsketch, lo, hi, k, margin),
-        None => scan_range_topk_prec(lut, qlut, ix, lo, hi, k),
+            lut, ix, sketches, qsketch, lo, hi, k, margin, filter),
+        None => scan_range_topk_prec(lut, qlut, ix, lo, hi, k, filter),
     }
 }
 
@@ -134,36 +153,15 @@ impl Executor {
         }
     }
 
-    /// Execute a `QueryBatch × IndexShard` scan plan: for every query `i`
-    /// the global top-`ks[i]` `(score, id)` pairs sorted ascending,
-    /// bit-identical to `scan_topk` over the full index.  (A thin planner
-    /// over [`Self::run_scan_tasks`]: slot = query, tasks in ascending
-    /// shard order.)
+    /// Execute a `QueryBatch × IndexShard` scan plan under `spec`: for
+    /// every query `i` the global top-`ks[i]` `(score, id)` pairs sorted
+    /// ascending — at [`ScanSpec::default`], bit-identical to
+    /// `scan_topk` over the full index.  (A thin planner over
+    /// [`Self::run_scan_tasks`]: slot = query, index 0, tasks in
+    /// ascending shard order.)
     pub fn scan_batch(&self, luts: &[Lut], index: &CompressedIndex,
-                      ks: &[usize], shard_rows: usize)
+                      ks: &[usize], shard_rows: usize, spec: &ScanSpec)
                       -> Vec<Vec<(f32, u32)>> {
-        self.scan_batch_prec(luts, index, ks, shard_rows, ScanPrecision::F32)
-    }
-
-    /// [`Self::scan_batch`] with a scan-precision knob: `F32` runs the
-    /// exact kernel; `U16`/`U8` quantize each LUT once and run the
-    /// blocked integer kernels with exact f32 re-scoring per shard
-    /// (DESIGN.md §6).
-    pub fn scan_batch_prec(&self, luts: &[Lut], index: &CompressedIndex,
-                           ks: &[usize], shard_rows: usize,
-                           precision: ScanPrecision)
-                           -> Vec<Vec<(f32, u32)>> {
-        self.scan_batch_pre(luts, index, ks, shard_rows, precision, None)
-    }
-
-    /// [`Self::scan_batch_prec`] with an optional 1-bit pre-filter
-    /// stage: tasks whose LUT has a query sketch prune candidates by
-    /// sketch Hamming distance before exact scoring (DESIGN.md §9).
-    pub fn scan_batch_pre(&self, luts: &[Lut], index: &CompressedIndex,
-                          ks: &[usize], shard_rows: usize,
-                          precision: ScanPrecision,
-                          pre: Option<&PrefilterPlan>)
-                          -> Vec<Vec<(f32, u32)>> {
         assert_eq!(luts.len(), ks.len(), "one k per query LUT");
         if luts.is_empty() {
             return Vec::new();
@@ -173,91 +171,54 @@ impl Executor {
         let mut tasks = Vec::with_capacity(luts.len() * shards.len());
         for qi in 0..luts.len() {
             for &(lo, hi) in &shards {
-                tasks.push(IndexedScanTask {
-                    index: 0, slot: qi, lut: qi, lo, hi,
-                });
+                tasks.push(ScanTask { index: 0, slot: qi, lut: qi, lo, hi });
             }
         }
-        self.run_scan_tasks_multi_pre(luts, &[index], ks, &tasks, precision,
-                                      pre)
+        self.run_scan_tasks(luts, &[index], ks, &tasks, spec)
     }
 
-    /// Execute an arbitrary [`ScanTask`] plan: for every slot `s`, the
-    /// merged top-`ks[s]` `(score, id)` pairs over that slot's tasks,
-    /// sorted ascending.
+    /// Execute an arbitrary [`ScanTask`] plan under `spec`: for every
+    /// slot `s`, the merged top-`ks[s]` `(score, id)` pairs over that
+    /// slot's tasks, sorted ascending.  Every task names the index it
+    /// scans, so one plan can fan out over several code matrices at
+    /// once — the streaming path plans `(query, segment[, list])` slots
+    /// across all sealed segments plus the active tail in a single
+    /// submission (`index::segment`), keeping the worker pool full even
+    /// when the row count is spread over many small segments.  Returned
+    /// row ids are **local to each task's index**; keep slots
+    /// index-pure if the caller needs to map them back (the streaming
+    /// reduce does).  Slots with no tasks yield empty results.
     ///
     /// Determinism contract: per slot, partial results merge in
     /// task-submission order on every executor, so a plan whose tasks
     /// cover ascending row ranges reproduces the sequential scan's
-    /// tie-breaking exactly.  Slots with no tasks yield empty results.
-    pub fn run_scan_tasks(&self, luts: &[Lut], index: &CompressedIndex,
-                          ks: &[usize], tasks: &[ScanTask])
+    /// tie-breaking exactly.  Quantized LUTs are built **once per plan**
+    /// (per-query for the flat plan, per probed-list slot for IVF
+    /// residual plans) and shared by every task referencing that LUT;
+    /// each task selects with integer scores and re-scores its
+    /// survivors exactly, so the per-slot merge always compares exact
+    /// f32 scores under the `(score, id)` total order.  Pre-filtered
+    /// tasks (resolved per task — needs BOTH a query sketch for the
+    /// LUT and row sketches on the index) and plain-kernel tasks mix
+    /// freely within one slot for the same reason.
+    ///
+    /// Plans are validated at submission: a task naming an out-of-range
+    /// slot/LUT/index/row panics here with the offending task named,
+    /// not with a bare index-out-of-bounds inside a worker thread.
+    pub fn run_scan_tasks(&self, luts: &[Lut],
+                          indexes: &[&CompressedIndex], ks: &[usize],
+                          tasks: &[ScanTask], spec: &ScanSpec)
                           -> Vec<Vec<(f32, u32)>> {
-        self.run_scan_tasks_prec(luts, index, ks, tasks, ScanPrecision::F32)
-    }
-
-    /// [`Self::run_scan_tasks`] with a scan-precision knob.  LUTs are
-    /// quantized **once per plan** (per-query for the flat plan, per
-    /// probed-list slot for IVF residual plans) and shared by every task
-    /// referencing that LUT; each task selects with integer scores and
-    /// re-scores its survivors exactly, so the per-slot merge still
-    /// compares exact f32 scores under the `(score, id)` total order.
-    /// (A single-index plan over [`Self::run_scan_tasks_multi_prec`].)
-    pub fn run_scan_tasks_prec(&self, luts: &[Lut], index: &CompressedIndex,
-                               ks: &[usize], tasks: &[ScanTask],
-                               precision: ScanPrecision)
-                               -> Vec<Vec<(f32, u32)>> {
-        let mapped: Vec<IndexedScanTask> = tasks
-            .iter()
-            .map(|t| IndexedScanTask {
-                index: 0, slot: t.slot, lut: t.lut, lo: t.lo, hi: t.hi,
-            })
-            .collect();
-        self.run_scan_tasks_multi_prec(luts, &[index], ks, &mapped, precision)
-    }
-
-    /// The most general plan: every task names the index it scans, so one
-    /// plan can fan out over several code matrices at once — the
-    /// streaming path plans `(query, segment[, list])` slots across all
-    /// sealed segments plus the active tail in a single submission
-    /// (`index::segment`), keeping the worker pool full even when the
-    /// row count is spread over many small segments.  Returned row ids
-    /// are **local to each task's index**; keep slots index-pure if the
-    /// caller needs to map them back (the streaming reduce does).
-    /// Same determinism contract as [`Self::run_scan_tasks`]: per slot,
-    /// parts merge in task-submission order, and quantized LUTs are
-    /// built once per plan and shared across all indexes.
-    pub fn run_scan_tasks_multi_prec(&self, luts: &[Lut],
-                                     indexes: &[&CompressedIndex],
-                                     ks: &[usize],
-                                     tasks: &[IndexedScanTask],
-                                     precision: ScanPrecision)
-                                     -> Vec<Vec<(f32, u32)>> {
-        self.run_scan_tasks_multi_pre(luts, indexes, ks, tasks, precision,
-                                      None)
-    }
-
-    /// [`Self::run_scan_tasks_multi_prec`] with the optional 1-bit
-    /// pre-filter stage: per task, the plan resolves a `(row sketches,
-    /// query sketch, margin)` triple — present only when BOTH the
-    /// task's LUT has a query sketch and its index carries row sketches
-    /// — and such tasks prune by Hamming distance then score survivors
-    /// exactly in f32; all other tasks run the precision kernel.  The
-    /// per-slot merge compares exact f32 scores either way, so the two
-    /// task flavors mix freely within one slot.
-    pub fn run_scan_tasks_multi_pre(&self, luts: &[Lut],
-                                    indexes: &[&CompressedIndex],
-                                    ks: &[usize],
-                                    tasks: &[IndexedScanTask],
-                                    precision: ScanPrecision,
-                                    pre: Option<&PrefilterPlan>)
-                                    -> Vec<Vec<(f32, u32)>> {
-        let qluts = quantize_luts(luts, precision);
-        let task_pf = |t: &IndexedScanTask| -> Option<(&[u64], u64, usize)> {
-            let p = pre?;
+        validate_plan(luts, indexes, ks, tasks, spec);
+        let qluts = quantize_luts(luts, spec.precision);
+        let task_pf = |t: &ScanTask| -> Option<(&[u64], u64, usize)> {
+            let p = spec.prefilter?;
             let qs = p.qsketches[t.lut]?;
             let sk = indexes[t.index].sketches.as_deref()?;
             Some((sk, qs, p.margin))
+        };
+        let task_filter = |t: &ScanTask| -> Option<&FilterBitmap> {
+            spec.filter.map(|fp| fp.bitmap(t.index))
         };
         let nslots = ks.len();
         // per-slot ordinal of each task: its merge position within the slot
@@ -280,7 +241,7 @@ impl Executor {
                         parts[t.slot].push(scan_task_part(
                             &luts[t.lut], qluts[t.lut].as_ref(),
                             indexes[t.index], t.lo, t.hi, ks[t.slot],
-                            task_pf(t)));
+                            task_pf(t), task_filter(t)));
                     }
                 }
                 let _merge_span = crate::span!("merge");
@@ -309,11 +270,12 @@ impl Executor {
                     let (slot, ord) = (t.slot, ords[ti]);
                     let (lo, hi) = (t.lo, t.hi);
                     let pf = task_pf(t);
+                    let fb = task_filter(t);
                     let handle = handle.clone();
                     jobs.push(Box::new(move || {
                         let _install = handle.as_ref().map(|h| h.install());
                         let part = scan_task_part(lut, qlut, ix, lo, hi, k,
-                                                  pf);
+                                                  pf, fb);
                         let _ = tx.send((slot, ord, part));
                     }));
                 }
@@ -345,27 +307,79 @@ impl Executor {
     }
 }
 
-/// One unit of scan work: score rows `[lo, hi)` of the plan's index with
-/// `luts[lut]`, keep the top `ks[slot]`, and merge into output slot
-/// `slot` (merge order across a slot's tasks = submission order).
+/// Per-plan scan options, consumed by both executor entrypoints
+/// ([`Executor::scan_batch`] and [`Executor::run_scan_tasks`]).  Each
+/// prior scan axis minted a new positional entrypoint suffix
+/// (`_prec`, `_pre`, …); they all live here now, and new axes land as
+/// fields.  [`ScanSpec::default`] is the classic exact scan: f32
+/// kernel, no pre-filter, no predicate.
+#[derive(Clone, Copy, Default)]
+pub struct ScanSpec<'a> {
+    /// Scan kernel precision (DESIGN.md §6): `F32` runs the exact
+    /// kernel; `U16`/`U8`/`U4` quantize each LUT once per plan and run
+    /// the blocked integer kernels with exact f32 survivor re-scoring.
+    pub precision: ScanPrecision,
+    /// Optional 1-bit sketch pre-filter stage (DESIGN.md §9): tasks
+    /// whose LUT has a query sketch AND whose index carries row
+    /// sketches prune by Hamming distance before exact scoring.
+    pub prefilter: Option<&'a PrefilterPlan>,
+    /// Optional metadata predicate (DESIGN.md §13), compiled to one row
+    /// bitmap per plan index: tasks consult their index's bitmap
+    /// *inside* the selection loop, so filtered rows never enter the
+    /// top-k heap and filtered search equals the search over the
+    /// admitted subset exactly — at every precision.
+    pub filter: Option<&'a FilterPlan>,
+}
+
+/// One unit of scan work: score rows `[lo, hi)` of `indexes[index]`
+/// with `luts[lut]`, keep the top `ks[slot]`, and merge into output
+/// slot `slot` (merge order across a slot's tasks = submission order;
+/// row ids in a slot's results are local to that task's index).
 #[derive(Clone, Copy, Debug)]
 pub struct ScanTask {
+    pub index: usize,
     pub slot: usize,
     pub lut: usize,
     pub lo: usize,
     pub hi: usize,
 }
 
-/// One unit of scan work in a multi-index plan: score rows `[lo, hi)` of
-/// `indexes[index]` with `luts[lut]` and merge into slot `slot` (row ids
-/// in the slot's results are local to that index).
-#[derive(Clone, Copy, Debug)]
-pub struct IndexedScanTask {
-    pub index: usize,
-    pub slot: usize,
-    pub lut: usize,
-    pub lo: usize,
-    pub hi: usize,
+/// Submission-time plan validation.  A malformed task used to surface
+/// as a bare index-out-of-bounds panic deep inside a worker thread;
+/// every cross-reference is checked up front instead, with a message
+/// naming the offending task.
+fn validate_plan(luts: &[Lut], indexes: &[&CompressedIndex], ks: &[usize],
+                 tasks: &[ScanTask], spec: &ScanSpec) {
+    if let Some(p) = spec.prefilter {
+        assert_eq!(p.qsketches.len(), luts.len(),
+                   "prefilter plan carries {} query sketches for {} LUTs",
+                   p.qsketches.len(), luts.len());
+    }
+    if let Some(fp) = spec.filter {
+        assert_eq!(fp.bitmaps.len(), indexes.len(),
+                   "filter plan carries {} bitmaps for {} indexes",
+                   fp.bitmaps.len(), indexes.len());
+        for (i, (bm, ix)) in fp.bitmaps.iter().zip(indexes).enumerate() {
+            assert_eq!(bm.len(), ix.n,
+                       "filter bitmap {i} covers {} rows of a {}-row index",
+                       bm.len(), ix.n);
+        }
+    }
+    for (ti, t) in tasks.iter().enumerate() {
+        assert!(t.index < indexes.len(),
+                "scan task {ti} names index {} of a {}-index plan",
+                t.index, indexes.len());
+        assert!(t.slot < ks.len(),
+                "scan task {ti} names slot {} of a {}-slot plan",
+                t.slot, ks.len());
+        assert!(t.lut < luts.len(),
+                "scan task {ti} names LUT {} of a {}-LUT plan",
+                t.lut, luts.len());
+        let n = indexes[t.index].n;
+        assert!(t.lo <= t.hi && t.hi <= n,
+                "scan task {ti} scans rows [{}, {}) of a {n}-row index",
+                t.lo, t.hi);
+    }
 }
 
 /// Partition `[0, n)` into contiguous shards of at most `shard_rows` rows
@@ -492,7 +506,7 @@ mod tests {
         let luts: Vec<Lut> = (0..3).map(|i| mk_lut(8, 10 + i)).collect();
         let ks = [7usize, 20, 100];
         let exec = Executor::new(1);
-        let got = exec.scan_batch(&luts, &idx, &ks, 50);
+        let got = exec.scan_batch(&luts, &idx, &ks, 50, &ScanSpec::default());
         for (qi, lut) in luts.iter().enumerate() {
             assert_eq!(got[qi], scan_topk(lut, &idx, ks[qi]), "query {qi}");
         }
@@ -519,8 +533,10 @@ mod tests {
                     (0..4).map(|i| mk_lut(stride, seed ^ (i + 1))).collect();
                 let ks = vec![k; luts.len()];
                 let pool = Executor::new(threads);
-                let got = pool.scan_batch(&luts, &idx, &ks, shard_rows);
-                let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 0);
+                let spec = ScanSpec::default();
+                let got = pool.scan_batch(&luts, &idx, &ks, shard_rows, &spec);
+                let want =
+                    Executor::new(1).scan_batch(&luts, &idx, &ks, 0, &spec);
                 if got == want {
                     Ok(())
                 } else {
@@ -581,10 +597,10 @@ mod tests {
                 // same explicit shard size on both sides: auto-sizing
                 // differs between pool and inline by design
                 let rows = if shard_rows == 0 { n } else { shard_rows };
-                let got = pool.scan_batch_prec(&luts, &idx, &ks, rows, prec);
+                let spec = ScanSpec { precision: prec, ..Default::default() };
+                let got = pool.scan_batch(&luts, &idx, &ks, rows, &spec);
                 let want =
-                    Executor::new(1).scan_batch_prec(&luts, &idx, &ks, rows,
-                                                     prec);
+                    Executor::new(1).scan_batch(&luts, &idx, &ks, rows, &spec);
                 if got == want {
                     Ok(())
                 } else {
@@ -636,11 +652,12 @@ mod tests {
                     .collect();
                 let ks = vec![k; luts.len()];
                 let exec = Executor::new(threads);
+                let spec = ScanSpec { precision: prec, ..Default::default() };
                 let want =
-                    exec.scan_batch_prec(&luts, &idx, &ks, shard_rows, prec);
+                    exec.scan_batch(&luts, &idx, &ks, shard_rows, &spec);
                 let (trace, root) = crate::obs::Trace::begin("query");
                 let got =
-                    exec.scan_batch_prec(&luts, &idx, &ks, shard_rows, prec);
+                    exec.scan_batch(&luts, &idx, &ks, shard_rows, &spec);
                 drop(root);
                 if got != want {
                     return Err(format!(
@@ -676,7 +693,8 @@ mod tests {
                 let ks = [9usize];
                 let (trace, root) = crate::obs::Trace::begin("qa");
                 for _ in 0..8 {
-                    let _ = exec.scan_batch(&luts, &idx_a, &ks, 32);
+                    let _ = exec.scan_batch(&luts, &idx_a, &ks, 32,
+                                            &ScanSpec::default());
                 }
                 drop(root);
                 trace.rows("scan_task")
@@ -686,7 +704,8 @@ mod tests {
                 let ks = [9usize];
                 let (trace, root) = crate::obs::Trace::begin("qb");
                 for _ in 0..8 {
-                    let _ = exec.scan_batch(&luts, &idx_b, &ks, 32);
+                    let _ = exec.scan_batch(&luts, &idx_b, &ks, 32,
+                                            &ScanSpec::default());
                 }
                 drop(root);
                 trace.rows("scan_task")
@@ -703,20 +722,19 @@ mod tests {
         // by design — the caller keeps slots index-pure when it needs to
         // map rows back; here we only check the merged score multiset),
         // slot 1 covers index 1 only with lut 1
-        use crate::config::ScanPrecision;
         let ix0 = mk_index(300, 5, 21);
         let ix1 = mk_index(170, 5, 22);
         let luts: Vec<Lut> = (0..2).map(|i| mk_lut(5, 60 + i)).collect();
         let tasks = vec![
-            IndexedScanTask { index: 0, slot: 0, lut: 0, lo: 0, hi: 300 },
-            IndexedScanTask { index: 1, slot: 0, lut: 0, lo: 0, hi: 170 },
-            IndexedScanTask { index: 1, slot: 1, lut: 1, lo: 40, hi: 160 },
+            ScanTask { index: 0, slot: 0, lut: 0, lo: 0, hi: 300 },
+            ScanTask { index: 1, slot: 0, lut: 0, lo: 0, hi: 170 },
+            ScanTask { index: 1, slot: 1, lut: 1, lo: 40, hi: 160 },
         ];
         let ks = [12usize, 6];
         for threads in [1usize, 3] {
             let exec = Executor::new(threads);
-            let got = exec.run_scan_tasks_multi_prec(
-                &luts, &[&ix0, &ix1], &ks, &tasks, ScanPrecision::F32);
+            let got = exec.run_scan_tasks(&luts, &[&ix0, &ix1], &ks, &tasks,
+                                          &ScanSpec::default());
             // slot 0: merge of both full scans under (score, id)
             let want0 = merge_topk(vec![
                 scan_topk(&luts[0], &ix0, 12),
@@ -724,7 +742,7 @@ mod tests {
             ], 12);
             assert_eq!(got[0], want0, "threads={threads} slot 0");
             let want1 = crate::index::scan::scan_range_topk(
-                &luts[1], &ix1, 40, 160, 6);
+                &luts[1], &ix1, 40, 160, 6, None);
             assert_eq!(got[1], want1, "threads={threads} slot 1");
         }
     }
@@ -742,10 +760,13 @@ mod tests {
             qsketches: luts.iter().map(|_| Some(0u64)).collect(),
             margin: 10_000,
         };
-        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 128);
+        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 128,
+                                               &ScanSpec::default());
         for threads in [1usize, 3] {
-            let got = Executor::new(threads).scan_batch_pre(
-                &luts, &idx, &ks, 128, ScanPrecision::F32, Some(&pre));
+            let spec = ScanSpec { prefilter: Some(&pre),
+                                  ..Default::default() };
+            let got = Executor::new(threads)
+                .scan_batch(&luts, &idx, &ks, 128, &spec);
             assert_eq!(got, want, "threads={threads}");
         }
     }
@@ -759,9 +780,10 @@ mod tests {
         let luts = vec![mk_lut(5, 92)];
         let ks = [11usize];
         let pre = PrefilterPlan { qsketches: vec![Some(7)], margin: 2 };
-        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 64);
-        let got = Executor::new(1).scan_batch_pre(
-            &luts, &idx, &ks, 64, ScanPrecision::F32, Some(&pre));
+        let want = Executor::new(1).scan_batch(&luts, &idx, &ks, 64,
+                                               &ScanSpec::default());
+        let spec = ScanSpec { prefilter: Some(&pre), ..Default::default() };
+        let got = Executor::new(1).scan_batch(&luts, &idx, &ks, 64, &spec);
         assert_eq!(got, want);
     }
 
@@ -769,7 +791,8 @@ mod tests {
     fn empty_batch_is_empty() {
         let idx = mk_index(10, 4, 3);
         let exec = Executor::new(2);
-        assert!(exec.scan_batch(&[], &idx, &[], 0).is_empty());
+        assert!(exec.scan_batch(&[], &idx, &[], 0, &ScanSpec::default())
+                    .is_empty());
     }
 
     #[test]
@@ -788,21 +811,90 @@ mod tests {
         let idx = mk_index(500, 6, 9);
         let luts: Vec<Lut> = (0..2).map(|i| mk_lut(6, 40 + i)).collect();
         let tasks = vec![
-            ScanTask { slot: 0, lut: 0, lo: 0, hi: 300 },
-            ScanTask { slot: 1, lut: 1, lo: 100, hi: 400 },
-            ScanTask { slot: 0, lut: 0, lo: 300, hi: 500 },
+            ScanTask { index: 0, slot: 0, lut: 0, lo: 0, hi: 300 },
+            ScanTask { index: 0, slot: 1, lut: 1, lo: 100, hi: 400 },
+            ScanTask { index: 0, slot: 0, lut: 0, lo: 300, hi: 500 },
         ];
         let ks = [9usize, 14, 5];
         for threads in [1usize, 3] {
             let exec = Executor::new(threads);
-            let got = exec.run_scan_tasks(&luts, &idx, &ks, &tasks);
+            let got = exec.run_scan_tasks(&luts, &[&idx], &ks, &tasks,
+                                          &ScanSpec::default());
             assert_eq!(got[0], scan_topk(&luts[0], &idx, 9),
                        "threads={threads} slot 0");
             assert_eq!(got[1],
                        crate::index::scan::scan_range_topk(
-                           &luts[1], &idx, 100, 400, 14),
+                           &luts[1], &idx, 100, 400, 14, None),
                        "threads={threads} slot 1");
             assert!(got[2].is_empty(), "threads={threads} empty slot");
         }
+    }
+
+    #[test]
+    fn malformed_plans_panic_at_submission_with_context() {
+        // the PR-10 bugfix: a task referencing a nonexistent
+        // slot/LUT/index/row must be rejected at submission with the
+        // offending task named, not explode inside a worker thread
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let idx = mk_index(100, 4, 44);
+        let luts = vec![mk_lut(4, 45)];
+        let ks = [5usize];
+        let msg = |t: ScanTask| -> String {
+            let err = catch_unwind(AssertUnwindSafe(|| {
+                Executor::new(1).run_scan_tasks(&luts, &[&idx], &ks, &[t],
+                                                &ScanSpec::default())
+            }))
+            .expect_err("malformed plan must panic");
+            err.downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default()
+        };
+        let ok = ScanTask { index: 0, slot: 0, lut: 0, lo: 0, hi: 100 };
+        assert!(msg(ScanTask { slot: 3, ..ok }).contains("slot 3"));
+        assert!(msg(ScanTask { lut: 2, ..ok }).contains("LUT 2"));
+        assert!(msg(ScanTask { index: 1, ..ok }).contains("index 1"));
+        assert!(msg(ScanTask { lo: 50, hi: 200, ..ok }).contains("200"));
+        // and the well-formed task still runs
+        let got = Executor::new(1).run_scan_tasks(&luts, &[&idx], &ks, &[ok],
+                                                  &ScanSpec::default());
+        assert_eq!(got[0], scan_topk(&luts[0], &idx, 5));
+    }
+
+    #[test]
+    fn filtered_scan_batch_matches_kernel_on_any_executor() {
+        use crate::index::filter::{Filter, FilterBitmap, FilterPlan};
+        let mut idx = mk_index(500, 6, 71);
+        idx.set_tags((0..500).map(|i| (i % 2) as u64).collect());
+        let luts: Vec<Lut> = (0..2).map(|i| mk_lut(6, 72 + i)).collect();
+        let ks = vec![11usize; luts.len()];
+        let plan = FilterPlan::compile(&Filter::TagEq(1), &[&idx]);
+        let spec = ScanSpec { filter: Some(&plan), ..Default::default() };
+        let bm = FilterBitmap::build(&Filter::TagEq(1), &idx);
+        for threads in [1usize, 3] {
+            let got = Executor::new(threads)
+                .scan_batch(&luts, &idx, &ks, 64, &spec);
+            for (qi, lut) in luts.iter().enumerate() {
+                let want = crate::index::scan::scan_range_topk(
+                    lut, &idx, 0, 500, ks[qi], Some(&bm));
+                assert_eq!(got[qi], want, "threads={threads} query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_selectivity_filter_yields_empty_results_and_counts_pruned() {
+        use crate::index::filter::{Filter, FilterPlan};
+        let mut idx = mk_index(300, 5, 81);
+        idx.set_tags(vec![7u64; 300]);
+        let luts = vec![mk_lut(5, 82)];
+        let ks = [9usize];
+        let plan = FilterPlan::compile(&Filter::TagEq(8), &[&idx]);
+        let spec = ScanSpec { filter: Some(&plan), ..Default::default() };
+        let before = obs::global().filter_rows_pruned.get();
+        let got = Executor::new(1).scan_batch(&luts, &idx, &ks, 0, &spec);
+        assert_eq!(got, vec![Vec::<(f32, u32)>::new()]);
+        let pruned = obs::global().filter_rows_pruned.get() - before;
+        assert!(pruned >= 300, "pruned only {pruned} rows");
     }
 }

@@ -1,0 +1,219 @@
+//! Metadata predicate filtering pushed *into* the LUT scan
+//! (rust/DESIGN.md §13).
+//!
+//! The paper's premise is that distances are computed in the compressed
+//! domain, so a metadata predicate must prune rows *before* top-k
+//! selection — post-filtering decoded results either starves top-k or
+//! forces decode-side work the architecture exists to avoid.  The
+//! pieces:
+//!
+//! * an **attribute column**: one `u64` tag per row, stored alongside
+//!   the codes on [`CompressedIndex`] (and mirrored through segments
+//!   and the disk tier's block archive);
+//! * a per-query [`Filter`] predicate, compiled once per search into a
+//!   [`FilterPlan`] — one row [`FilterBitmap`] per scanned index;
+//! * scan kernels that consult the bitmap *inside* the selection loop
+//!   ([`crate::index::scan`]), so filtered rows never enter the top-k
+//!   heap and filtered search is exactly the search over the admitted
+//!   subset — a strictly stronger guarantee than tombstone-style
+//!   over-fetch, with the same can't-starve consequence.
+//!
+//! **Strict semantics:** filtering an index that has no attribute
+//! column admits *no* rows (a predicate over a column that does not
+//! exist matches nothing).  This keeps "filtered ≡ post-filtered
+//! oracle" honest instead of silently degrading to an unfiltered scan.
+
+use crate::index::CompressedIndex;
+use crate::obs;
+
+/// A per-query metadata predicate over the row attribute column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Filter {
+    /// Admit exactly the rows whose tag equals the value.
+    TagEq(u64),
+}
+
+impl Filter {
+    /// Parse the CLI/config surface syntax (`tag=V`).
+    pub fn parse(s: &str) -> Result<Filter, String> {
+        let Some(v) = s.strip_prefix("tag=") else {
+            return Err(format!("bad filter {s:?}: expected tag=<u64>"));
+        };
+        v.trim().parse::<u64>()
+            .map(Filter::TagEq)
+            .map_err(|_| format!("bad filter value {v:?}: expected u64"))
+    }
+
+    /// Does `tag` satisfy the predicate?
+    #[inline]
+    pub fn admits(&self, tag: u64) -> bool {
+        match self {
+            Filter::TagEq(v) => tag == *v,
+        }
+    }
+}
+
+impl std::fmt::Display for Filter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Filter::TagEq(v) => write!(f, "tag={v}"),
+        }
+    }
+}
+
+/// A row-admission bitmap for one index: bit `i` set ⇔ stored row `i`
+/// satisfies the predicate.
+pub struct FilterBitmap {
+    words: Vec<u64>,
+    n: usize,
+}
+
+impl FilterBitmap {
+    /// Compile a predicate against an index's attribute column.  An
+    /// index without tags yields an all-zero bitmap (strict semantics —
+    /// see the module docs).
+    pub fn build(filter: &Filter, index: &CompressedIndex) -> FilterBitmap {
+        let n = index.n;
+        let mut words = vec![0u64; n.div_ceil(64)];
+        if let Some(tags) = &index.tags {
+            for (i, &t) in tags.iter().enumerate() {
+                if filter.admits(t) {
+                    words[i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        FilterBitmap { words, n }
+    }
+
+    /// Number of rows the bitmap covers.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Is stored row `row` admitted by the predicate?
+    #[inline]
+    pub fn is_admitted(&self, row: usize) -> bool {
+        debug_assert!(row < self.n, "row {row} out of bitmap range {}", self.n);
+        (self.words[row / 64] >> (row % 64)) & 1 == 1
+    }
+
+    /// Admitted rows in `[lo, hi)` — the fast-path/pruning accounting
+    /// the executor charges `filter.rows_pruned` from.
+    pub fn admitted_in(&self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi && hi <= self.n);
+        let mut count = 0usize;
+        let (w0, w1) = (lo / 64, hi.div_ceil(64));
+        for w in w0..w1 {
+            let mut word = self.words[w];
+            let base = w * 64;
+            if base < lo {
+                word &= !0u64 << (lo - base);
+            }
+            if base + 64 > hi {
+                word &= !0u64 >> (base + 64 - hi);
+            }
+            count += word.count_ones() as usize;
+        }
+        count
+    }
+}
+
+/// A compiled filter for one scan plan: bitmap `i` covers the plan's
+/// index `i` (the `indexes` slice handed to
+/// [`crate::exec::Executor::run_scan_tasks`]).
+pub struct FilterPlan {
+    pub bitmaps: Vec<FilterBitmap>,
+}
+
+impl FilterPlan {
+    /// Compile `filter` against every index a plan will scan.
+    pub fn compile(filter: &Filter, indexes: &[&CompressedIndex])
+                   -> FilterPlan {
+        let bitmaps: Vec<FilterBitmap> = indexes
+            .iter()
+            .map(|ix| FilterBitmap::build(filter, ix))
+            .collect();
+        obs::global().filter_bitmaps_built.add(bitmaps.len() as u64);
+        FilterPlan { bitmaps }
+    }
+
+    /// The bitmap for plan index `index`.
+    #[inline]
+    pub fn bitmap(&self, index: usize) -> &FilterBitmap {
+        &self.bitmaps[index]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ix_with_tags(tags: Vec<u64>) -> CompressedIndex {
+        let n = tags.len();
+        let mut ix = CompressedIndex::from_codes(n, 1, vec![0u8; n]);
+        ix.set_tags(tags);
+        ix
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        let f = Filter::parse("tag=42").unwrap();
+        assert_eq!(f, Filter::TagEq(42));
+        assert_eq!(f.to_string(), "tag=42");
+        assert!(Filter::parse("tag=").is_err());
+        assert!(Filter::parse("color=red").is_err());
+        assert!(Filter::parse("tag=-1").is_err());
+    }
+
+    #[test]
+    fn bitmap_matches_scalar_predicate() {
+        let tags: Vec<u64> = (0..131).map(|i| i % 3).collect();
+        let ix = ix_with_tags(tags.clone());
+        let bm = FilterBitmap::build(&Filter::TagEq(1), &ix);
+        assert_eq!(bm.len(), 131);
+        for (i, &t) in tags.iter().enumerate() {
+            assert_eq!(bm.is_admitted(i), t == 1, "row {i}");
+        }
+    }
+
+    #[test]
+    fn admitted_in_counts_every_subrange() {
+        let tags: Vec<u64> = (0..200).map(|i| (i * 7 + 3) % 5).collect();
+        let ix = ix_with_tags(tags.clone());
+        let bm = FilterBitmap::build(&Filter::TagEq(2), &ix);
+        for lo in (0..200).step_by(13) {
+            for hi in (lo..=200).step_by(17) {
+                let want = tags[lo..hi].iter().filter(|&&t| t == 2).count();
+                assert_eq!(bm.admitted_in(lo, hi), want, "[{lo}, {hi})");
+            }
+        }
+        assert_eq!(bm.admitted_in(64, 64), 0);
+    }
+
+    #[test]
+    fn untagged_index_admits_no_rows() {
+        let ix = CompressedIndex::from_codes(70, 1, vec![0u8; 70]);
+        let bm = FilterBitmap::build(&Filter::TagEq(0), &ix);
+        for row in 0..70 {
+            assert!(!bm.is_admitted(row));
+        }
+        assert_eq!(bm.admitted_in(0, 70), 0);
+    }
+
+    #[test]
+    fn plan_compiles_one_bitmap_per_index() {
+        let a = ix_with_tags(vec![1, 2, 1]);
+        let b = CompressedIndex::from_codes(2, 1, vec![0u8; 2]);
+        let plan = FilterPlan::compile(&Filter::TagEq(1), &[&a, &b]);
+        assert_eq!(plan.bitmaps.len(), 2);
+        assert!(plan.bitmap(0).is_admitted(0));
+        assert!(!plan.bitmap(0).is_admitted(1));
+        assert!(!plan.bitmap(1).is_admitted(0));
+    }
+}

@@ -20,16 +20,20 @@
 //! layout and exactly re-score the survivors in f32, trading a bounded
 //! boundary error for scan throughput.
 
+pub mod filter;
 pub mod packed;
 pub mod scan;
 pub mod segment;
 pub mod simd;
 
-use crate::config::SearchConfig;
+use anyhow::Result;
+
+use crate::config::{ScanPrecision, SearchConfig};
 use crate::data::Dataset;
 use crate::exec::{plan, Executor};
 use crate::quant::{Lut, Quantizer, SketchPlanes};
 
+pub use filter::{Filter, FilterBitmap, FilterPlan};
 pub use packed::{PackedIndex, BLOCK};
 pub use scan::{scan_lut_topk, scan_lut_topk_u16, scan_lut_topk_u4,
                scan_lut_topk_u8, scan_topk};
@@ -51,6 +55,11 @@ pub struct CompressedIndex {
     /// (DESIGN.md §9); [`Self::ensure_sketches`] builds them once.  One
     /// u64 per row.
     pub sketches: Option<Vec<u64>>,
+    /// Optional row attribute column for metadata predicate filtering
+    /// (DESIGN.md §13): one u64 tag per row, row-aligned with `codes`.
+    /// `None` means "no attribute column" — a [`Filter`] over such an
+    /// index admits no rows (strict semantics, see [`filter`]).
+    pub tags: Option<Vec<u64>>,
 }
 
 impl CompressedIndex {
@@ -63,12 +72,22 @@ impl CompressedIndex {
             codes,
             packed: None,
             sketches: None,
+            tags: None,
         }
     }
 
     pub fn from_codes(n: usize, stride: usize, codes: Vec<u8>) -> Self {
         assert_eq!(codes.len(), n * stride);
-        CompressedIndex { n, stride, codes, packed: None, sketches: None }
+        CompressedIndex {
+            n, stride, codes, packed: None, sketches: None, tags: None,
+        }
+    }
+
+    /// Attach the row attribute column (one tag per row, row-aligned
+    /// with the codes — see DESIGN.md §13).
+    pub fn set_tags(&mut self, tags: Vec<u64>) {
+        assert_eq!(tags.len(), self.n, "one tag per row");
+        self.tags = Some(tags);
     }
 
     /// Build the blocked fast-scan mirror if it doesn't exist yet (cheap:
@@ -119,6 +138,101 @@ pub struct IndexShard<'a> {
     pub index: &'a CompressedIndex,
     pub lo: usize,
     pub hi: usize,
+}
+
+/// Per-query scan options shared by every backend: the precision axis
+/// (DESIGN.md §6), the 1-bit pre-filter (§9), and the metadata
+/// predicate (§13).  The request-level mirror of
+/// [`crate::exec::ScanSpec`] — that one holds compiled, borrowed plans;
+/// this one holds the plain options each backend compiles them from.
+#[derive(Clone, Copy, Debug)]
+pub struct QuerySpec {
+    pub precision: ScanPrecision,
+    pub prefilter: bool,
+    pub prefilter_margin: usize,
+    pub filter: Option<Filter>,
+}
+
+/// One batch search, in the single shape every backend accepts:
+/// `CompressedIndex`, `IvfIndex`, `DiskIvfIndex`, and `StreamingIndex`
+/// all expose `search_batch_on(quant, exec, queries, &req)` over this
+/// struct (and [`crate::ivf::IndexBackend`] dispatches it).  Replaces
+/// the four divergent positional signatures that grew one parameter per
+/// feature; the coordinator and the TCP front door build one request
+/// object from config + wire frame.
+#[derive(Clone, Debug)]
+pub struct SearchRequest {
+    /// Top-k per query — one entry per query in the batch.
+    pub ks: Vec<usize>,
+    /// IVF lists probed per query (ignored by the flat backend).
+    pub nprobe: usize,
+    /// Stage-1 candidate depth, floored at each query's `k`.
+    pub rerank_l: usize,
+    pub no_rerank: bool,
+    pub exhaustive_rerank: bool,
+    pub shard_rows: usize,
+    pub spec: QuerySpec,
+}
+
+impl SearchRequest {
+    /// The standard construction: every knob from the config, plus the
+    /// per-query result sizes.
+    pub fn from_config(cfg: &SearchConfig, ks: Vec<usize>) -> SearchRequest {
+        SearchRequest {
+            ks,
+            nprobe: cfg.nprobe,
+            rerank_l: cfg.rerank_l,
+            no_rerank: cfg.no_rerank,
+            exhaustive_rerank: cfg.exhaustive_rerank,
+            shard_rows: cfg.shard_rows,
+            spec: QuerySpec {
+                precision: cfg.scan_precision,
+                prefilter: cfg.prefilter,
+                prefilter_margin: cfg.prefilter_margin,
+                filter: cfg.filter,
+            },
+        }
+    }
+
+    /// Bridge to the config struct the backend internals consume
+    /// (request-less callers construct a [`SearchConfig`] directly; the
+    /// unified entry points go the other way).
+    pub(crate) fn to_search_config(&self) -> SearchConfig {
+        SearchConfig {
+            nprobe: self.nprobe,
+            rerank_l: self.rerank_l,
+            no_rerank: self.no_rerank,
+            exhaustive_rerank: self.exhaustive_rerank,
+            shard_rows: self.shard_rows,
+            scan_precision: self.spec.precision,
+            prefilter: self.spec.prefilter,
+            prefilter_margin: self.spec.prefilter_margin,
+            filter: self.spec.filter,
+            ..Default::default()
+        }
+    }
+}
+
+impl CompressedIndex {
+    /// The unified batch entry point (one shape across all backends —
+    /// see [`SearchRequest`]): the paper's two-stage scan → rerank
+    /// pipeline over this flat index.  Infallible in practice; the
+    /// `Result` matches the disk-backed implementations.
+    pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
+                           queries: &[&[f32]], req: &SearchRequest)
+                           -> Result<Vec<Vec<u32>>> {
+        assert_eq!(queries.len(), req.ks.len(), "one k per query");
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let luts = {
+            let mut span = crate::span!("lut_build");
+            span.add_rows(queries.len() as u64);
+            quant.lut_batch(queries)
+        };
+        let eng = SearchEngine::new(quant, self, req.to_search_config());
+        Ok(eng.search_batch_with_luts_on(exec, queries, &luts, &req.ks))
+    }
 }
 
 /// The paper's full search pipeline over one index.
@@ -197,11 +311,17 @@ impl<'a> SearchEngine<'a> {
             pairs.into_iter().map(|(_, id)| id).collect()
         };
         let pre = self.prefilter_plan(queries);
+        let fplan = self.cfg.filter
+            .map(|f| FilterPlan::compile(&f, &[self.index]));
+        let spec = plan::ScanSpec {
+            precision: self.cfg.scan_precision,
+            prefilter: pre.as_ref(),
+            filter: fplan.as_ref(),
+        };
         let do_rerank = !self.cfg.no_rerank && self.quant.supports_rerank();
         if !do_rerank {
             return exec
-                .scan_batch_pre(luts, self.index, ks, self.cfg.shard_rows,
-                                self.cfg.scan_precision, pre.as_ref())
+                .scan_batch(luts, self.index, ks, self.cfg.shard_rows, &spec)
                 .into_iter()
                 .map(ids)
                 .collect();
@@ -210,8 +330,16 @@ impl<'a> SearchEngine<'a> {
             // exhaustive d1 decodes the WHOLE index per query (~n×dim
             // floats each) — batching those reconstructions across
             // queries would multiply that working set by the batch size,
-            // so this path stays one query at a time
-            let all = vec![(0..self.index.n as u32).collect::<Vec<u32>>()];
+            // so this path stays one query at a time.  Under a filter
+            // "the whole index" is the admitted subset: exhaustive
+            // filtered search IS the post-filter oracle.
+            let all: Vec<u32> = match &fplan {
+                Some(fp) => (0..self.index.n as u32)
+                    .filter(|&id| fp.bitmap(0).is_admitted(id as usize))
+                    .collect(),
+                None => (0..self.index.n as u32).collect(),
+            };
+            let all = vec![all];
             return queries
                 .iter()
                 .zip(ks)
@@ -226,8 +354,8 @@ impl<'a> SearchEngine<'a> {
         let ls: Vec<usize> =
             ks.iter().map(|&k| self.cfg.rerank_l.max(k)).collect();
         let candidates: Vec<Vec<u32>> =
-            exec.scan_batch_pre(luts, self.index, &ls, self.cfg.shard_rows,
-                                self.cfg.scan_precision, pre.as_ref())
+            exec.scan_batch(luts, self.index, &ls, self.cfg.shard_rows,
+                            &spec)
                 .into_iter()
                 .map(ids)
                 .collect();
@@ -460,6 +588,62 @@ mod tests {
                 eng.scan(&lut, 7).into_iter().map(|p| p.1).collect();
             assert_eq!(got[qi], want, "query {qi}");
         }
+    }
+
+    #[test]
+    fn filtered_flat_search_matches_post_filter_oracle_at_all_precisions() {
+        // the tentpole contract on the flat backend: filtered search
+        // through the unified request equals the unfiltered search
+        // post-filtered to the admitted rows — at every precision, plus
+        // the selectivity-0 (empty, no panic) and selectivity-1
+        // (identical to unfiltered) endpoints
+        let (d, pq) = setup();
+        let mut idx = CompressedIndex::build(&pq, &d);
+        idx.set_tags((0..idx.n).map(|i| (i % 2) as u64).collect());
+        let queries = Generator::new(Family::SiftLike, 21).generate(8, 5);
+        let qrefs: Vec<&[f32]> =
+            (0..queries.len()).map(|qi| queries.row(qi)).collect();
+        let exec = Executor::Inline;
+        let base = SearchConfig { rerank_l: idx.n, k: idx.n,
+                                  ..Default::default() };
+        let full = SearchEngine::new(&pq, &idx, base).search_batch(&qrefs);
+        let oracle: Vec<Vec<u32>> = full
+            .iter()
+            .map(|ids| ids.iter().copied()
+                .filter(|&id| id % 2 == 1)
+                .take(10)
+                .collect())
+            .collect();
+        for precision in [ScanPrecision::F32, ScanPrecision::U16,
+                          ScanPrecision::U8, ScanPrecision::U4]
+        {
+            let cfg = SearchConfig { rerank_l: idx.n, k: 10,
+                                     scan_precision: precision,
+                                     filter: Some(Filter::TagEq(1)),
+                                     ..Default::default() };
+            let req =
+                SearchRequest::from_config(&cfg, vec![10; qrefs.len()]);
+            let got =
+                idx.search_batch_on(&pq, &exec, &qrefs, &req).unwrap();
+            assert_eq!(got, oracle, "{precision:?}");
+        }
+        // selectivity 0: empty results, not a panic
+        let cfg = SearchConfig { rerank_l: idx.n, k: 10,
+                                 filter: Some(Filter::TagEq(9)),
+                                 ..Default::default() };
+        let req = SearchRequest::from_config(&cfg, vec![10; qrefs.len()]);
+        let got = idx.search_batch_on(&pq, &exec, &qrefs, &req).unwrap();
+        assert!(got.iter().all(Vec::is_empty));
+        // selectivity 1: bit-identical to the unfiltered engine
+        idx.set_tags(vec![5u64; idx.n]);
+        let base10 = SearchConfig { rerank_l: 50, k: 10,
+                                    ..Default::default() };
+        let want =
+            SearchEngine::new(&pq, &idx, base10).search_batch(&qrefs);
+        let cfg = SearchConfig { filter: Some(Filter::TagEq(5)), ..base10 };
+        let req = SearchRequest::from_config(&cfg, vec![10; qrefs.len()]);
+        let got = idx.search_batch_on(&pq, &exec, &qrefs, &req).unwrap();
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -34,21 +34,50 @@ use crate::linalg::TopK;
 use crate::obs;
 use crate::quant::{Lut, QuantizedLut, U4_ROW};
 
+use super::filter::FilterBitmap;
 use super::packed::BLOCK;
 use super::simd;
 use super::CompressedIndex;
 
 /// Scan the whole index with a table LUT, returning the k smallest
-/// `(score, id)` pairs sorted ascending.
+/// `(score, id)` pairs sorted ascending.  A `filter` bitmap prunes rows
+/// *inside* selection: non-admitted rows are never scored into the
+/// heap, so the result is exactly the scan of the admitted subset
+/// (rust/DESIGN.md §13).
 pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
                      index: &CompressedIndex, lo: usize, hi: usize,
-                     k: usize) -> Vec<(f32, u32)> {
+                     k: usize, filter: Option<&FilterBitmap>)
+                     -> Vec<(f32, u32)> {
     let stride = index.stride;
     // never size the heap past the range: k comes from callers (and
     // ultimately the wire), the row count is ground truth
     let mut top = TopK::new(k.min(hi - lo).max(1));
     let mut worst = f32::INFINITY;
     let codes = &index.codes[lo * stride..hi * stride];
+    if let Some(f) = filter {
+        // filtered path: a plain per-row loop (each quad lane below
+        // accumulates its row independently and in the same position
+        // order, so per-row sums are bit-identical between the paths)
+        for row in 0..hi - lo {
+            if !f.is_admitted(lo + row) {
+                continue;
+            }
+            let code = &codes[row * stride..(row + 1) * stride];
+            let mut acc = bias;
+            for (j, &c) in code.iter().enumerate() {
+                // SAFETY: tables is (stride, k_width); code bytes <
+                // k_width by construction (encoders emit ids < K)
+                acc += unsafe {
+                    *tables.get_unchecked(j * k_width + c as usize)
+                };
+            }
+            if acc < worst {
+                top.push(acc, (lo + row) as u32);
+                worst = top.worst();
+            }
+        }
+        return top.into_sorted();
+    }
     // 4-row software pipeline: the per-row table gathers are independent,
     // so interleaving four rows gives the core 4× the memory-level
     // parallelism on the (L2-missing) code stream — see rust/DESIGN.md §2
@@ -114,8 +143,9 @@ pub fn scan_lut_topk(tables: &[f32], k_width: usize, bias: f32,
 /// the integer selection may swap boundary candidates.
 pub fn scan_lut_topk_u16(qlut: &QuantizedLut, lut: &Lut,
                          index: &CompressedIndex, lo: usize, hi: usize,
-                         k: usize) -> Vec<(f32, u32)> {
-    scan_lut_topk_u16_forced(qlut, lut, index, lo, hi, k,
+                         k: usize, filter: Option<&FilterBitmap>)
+                         -> Vec<(f32, u32)> {
+    scan_lut_topk_u16_forced(qlut, lut, index, lo, hi, k, filter,
                              simd::scalar_forced())
 }
 
@@ -124,16 +154,20 @@ pub fn scan_lut_topk_u16(qlut: &QuantizedLut, lut: &Lut,
 /// depend on process-wide environment state.
 pub fn scan_lut_topk_u16_forced(qlut: &QuantizedLut, lut: &Lut,
                                 index: &CompressedIndex, lo: usize,
-                                hi: usize, k: usize, force_scalar: bool)
+                                hi: usize, k: usize,
+                                filter: Option<&FilterBitmap>,
+                                force_scalar: bool)
                                 -> Vec<(f32, u32)> {
     match qlut {
         QuantizedLut::U16 { m, k: kw, tables, .. } => {
             if force_scalar || !simd::int_kernel_active() {
                 obs::global().simd_dispatch_scalar.inc();
-                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k,
+                                 filter)
             } else {
                 obs::global().simd_dispatch_simd.inc();
-                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
+                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi,
+                                      k, filter)
             }
         }
         _ => panic!("scan_lut_topk_u16 requires a u16-quantized LUT"),
@@ -144,8 +178,9 @@ pub fn scan_lut_topk_u16_forced(qlut: &QuantizedLut, lut: &Lut,
 /// [`scan_lut_topk_u16`] with a coarser (one-byte) entry width.
 pub fn scan_lut_topk_u8(qlut: &QuantizedLut, lut: &Lut,
                         index: &CompressedIndex, lo: usize, hi: usize,
-                        k: usize) -> Vec<(f32, u32)> {
-    scan_lut_topk_u8_forced(qlut, lut, index, lo, hi, k,
+                        k: usize, filter: Option<&FilterBitmap>)
+                        -> Vec<(f32, u32)> {
+    scan_lut_topk_u8_forced(qlut, lut, index, lo, hi, k, filter,
                             simd::scalar_forced())
 }
 
@@ -153,16 +188,20 @@ pub fn scan_lut_topk_u8(qlut: &QuantizedLut, lut: &Lut,
 /// [`scan_lut_topk_u16_forced`]).
 pub fn scan_lut_topk_u8_forced(qlut: &QuantizedLut, lut: &Lut,
                                index: &CompressedIndex, lo: usize,
-                               hi: usize, k: usize, force_scalar: bool)
+                               hi: usize, k: usize,
+                               filter: Option<&FilterBitmap>,
+                               force_scalar: bool)
                                -> Vec<(f32, u32)> {
     match qlut {
         QuantizedLut::U8 { m, k: kw, tables, .. } => {
             if force_scalar || !simd::int_kernel_active() {
                 obs::global().simd_dispatch_scalar.inc();
-                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k)
+                scan_blocked_int(tables, *m, *kw, lut, index, lo, hi, k,
+                                 filter)
             } else {
                 obs::global().simd_dispatch_simd.inc();
-                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi, k)
+                scan_blocked_int_simd(tables, *m, *kw, lut, index, lo, hi,
+                                      k, filter)
             }
         }
         _ => panic!("scan_lut_topk_u8 requires a u8-quantized LUT"),
@@ -176,8 +215,9 @@ pub fn scan_lut_topk_u8_forced(qlut: &QuantizedLut, lut: &Lut,
 /// in-register with PSHUFB/TBL.
 pub fn scan_lut_topk_u4(qlut: &QuantizedLut, lut: &Lut,
                         index: &CompressedIndex, lo: usize, hi: usize,
-                        k: usize) -> Vec<(f32, u32)> {
-    scan_lut_topk_u4_forced(qlut, lut, index, lo, hi, k,
+                        k: usize, filter: Option<&FilterBitmap>)
+                        -> Vec<(f32, u32)> {
+    scan_lut_topk_u4_forced(qlut, lut, index, lo, hi, k, filter,
                             simd::scalar_forced())
 }
 
@@ -185,16 +225,20 @@ pub fn scan_lut_topk_u4(qlut: &QuantizedLut, lut: &Lut,
 /// [`scan_lut_topk_u16_forced`]).
 pub fn scan_lut_topk_u4_forced(qlut: &QuantizedLut, lut: &Lut,
                                index: &CompressedIndex, lo: usize,
-                               hi: usize, k: usize, force_scalar: bool)
+                               hi: usize, k: usize,
+                               filter: Option<&FilterBitmap>,
+                               force_scalar: bool)
                                -> Vec<(f32, u32)> {
     match qlut {
         QuantizedLut::U4 { m, tables, .. } => {
             if force_scalar || !simd::u4_kernel_active() {
                 obs::global().simd_dispatch_scalar.inc();
-                scan_blocked_int(tables, *m, U4_ROW, lut, index, lo, hi, k)
+                scan_blocked_int(tables, *m, U4_ROW, lut, index, lo, hi, k,
+                                 filter)
             } else {
                 obs::global().simd_dispatch_simd.inc();
-                scan_blocked_u4_simd(tables, *m, lut, index, lo, hi, k)
+                scan_blocked_u4_simd(tables, *m, lut, index, lo, hi, k,
+                                     filter)
             }
         }
         _ => panic!("scan_lut_topk_u4 requires a u4-quantized LUT"),
@@ -211,7 +255,8 @@ pub fn scan_lut_topk_u4_forced(qlut: &QuantizedLut, lut: &Lut,
 /// packed mirror (identical results, more memory traffic).
 fn scan_blocked_int<T: Copy + Into<u32>>(
     qtables: &[T], m: usize, kw: usize, lut: &Lut, index: &CompressedIndex,
-    lo: usize, hi: usize, k: usize) -> Vec<(f32, u32)> {
+    lo: usize, hi: usize, k: usize, filter: Option<&FilterBitmap>)
+    -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);
     if lo >= hi {
         return Vec::new();
@@ -269,6 +314,13 @@ fn scan_blocked_int<T: Copy + Into<u32>>(
         let rlo = lo.max(row0) - row0;
         let rhi = hi.min(row0 + BLOCK) - row0;
         for (r, &a) in acc.iter().enumerate().take(rhi).skip(rlo) {
+            // filtered rows never enter integer selection, so the
+            // survivor set equals the admitted-subset scan's exactly
+            if let Some(f) = filter {
+                if !f.is_admitted(row0 + r) {
+                    continue;
+                }
+            }
             let s = a as f32;
             // <= admits k-th-boundary score ties so the lexicographic
             // heap can keep the smaller id deterministically
@@ -318,8 +370,14 @@ fn gather_block(index: &CompressedIndex, row0: usize,
 /// ties so the lexicographic heap keeps the smaller id).
 #[inline]
 fn emit_block(acc: &[u32; BLOCK], row0: usize, rlo: usize, rhi: usize,
-              top: &mut TopK, worst: &mut f32) {
+              filter: Option<&FilterBitmap>, top: &mut TopK,
+              worst: &mut f32) {
     for (r, &a) in acc.iter().enumerate().take(rhi).skip(rlo) {
+        if let Some(f) = filter {
+            if !f.is_admitted(row0 + r) {
+                continue;
+            }
+        }
         let s = a as f32;
         if s <= *worst {
             top.push(s, (row0 + r) as u32);
@@ -353,7 +411,8 @@ fn rescore_exact(top: TopK, lut: &Lut, index: &CompressedIndex)
 /// so results match the oracle exactly — the property tests pin this.
 fn scan_blocked_int_simd<T: Copy + Into<u32>>(
     qtables: &[T], m: usize, kw: usize, lut: &Lut, index: &CompressedIndex,
-    lo: usize, hi: usize, k: usize) -> Vec<(f32, u32)> {
+    lo: usize, hi: usize, k: usize, filter: Option<&FilterBitmap>)
+    -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);
     if lo >= hi {
         return Vec::new();
@@ -382,7 +441,7 @@ fn scan_blocked_int_simd<T: Copy + Into<u32>>(
         simd::accumulate_widened(&widened, kw, stride, blk, &mut acc);
         let rlo = lo.max(row0) - row0;
         let rhi = hi.min(row0 + BLOCK) - row0;
-        emit_block(&acc, row0, rlo, rhi, &mut top, &mut worst);
+        emit_block(&acc, row0, rlo, rhi, filter, &mut top, &mut worst);
     }
     rescore_exact(top, lut, index)
 }
@@ -392,7 +451,8 @@ fn scan_blocked_int_simd<T: Copy + Into<u32>>(
 /// code-stream traffic) and falling back to byte-per-code blocks.
 fn scan_blocked_u4_simd(tables: &[u8], m: usize, lut: &Lut,
                         index: &CompressedIndex, lo: usize, hi: usize,
-                        k: usize) -> Vec<(f32, u32)> {
+                        k: usize, filter: Option<&FilterBitmap>)
+                        -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);
     if lo >= hi {
         return Vec::new();
@@ -426,17 +486,23 @@ fn scan_blocked_u4_simd(tables: &[u8], m: usize, lut: &Lut,
         }
         let rlo = lo.max(row0) - row0;
         let rhi = hi.min(row0 + BLOCK) - row0;
-        emit_block(&acc, row0, rlo, rhi, &mut top, &mut worst);
+        emit_block(&acc, row0, rlo, rhi, filter, &mut top, &mut worst);
     }
     rescore_exact(top, lut, index)
 }
 
 /// Generic scan via `Lut::score` (used by the lattice direct path).
 pub fn scan_generic_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
-                         hi: usize, k: usize) -> Vec<(f32, u32)> {
+                         hi: usize, k: usize,
+                         filter: Option<&FilterBitmap>) -> Vec<(f32, u32)> {
     let mut top = TopK::new(k.min(hi.saturating_sub(lo)).max(1));
     let mut worst = f32::INFINITY;
     for i in lo..hi {
+        if let Some(f) = filter {
+            if !f.is_admitted(i) {
+                continue;
+            }
+        }
         let s = lut.score(index.code(i));
         if s < worst {
             top.push(s, i as u32);
@@ -449,21 +515,24 @@ pub fn scan_generic_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
 /// Dispatching scan over the full index.
 pub fn scan_topk(lut: &Lut, index: &CompressedIndex, k: usize)
                  -> Vec<(f32, u32)> {
-    scan_range_topk(lut, index, 0, index.n, k)
+    scan_range_topk(lut, index, 0, index.n, k, None)
 }
 
 /// Dispatching scan over `[lo, hi)` — the shard work unit the batch
 /// executor (`exec::plan`) fans out as one task per `(query, shard)`.
 pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
-                       hi: usize, k: usize) -> Vec<(f32, u32)> {
+                       hi: usize, k: usize,
+                       filter: Option<&FilterBitmap>) -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);
     match lut {
         Lut::Tables { m, k: kw, tables, bias } => {
             debug_assert_eq!(*m, index.stride,
                              "LUT rows must match index stride");
-            scan_lut_topk(tables, *kw, *bias, index, lo, hi, k)
+            scan_lut_topk(tables, *kw, *bias, index, lo, hi, k, filter)
         }
-        Lut::Direct { .. } => scan_generic_topk(lut, index, lo, hi, k),
+        Lut::Direct { .. } => {
+            scan_generic_topk(lut, index, lo, hi, k, filter)
+        }
     }
 }
 
@@ -473,8 +542,9 @@ pub fn scan_range_topk(lut: &Lut, index: &CompressedIndex, lo: usize,
 /// LUTs, which fall back to the exact f32 path).
 pub fn scan_range_topk_prec(lut: &Lut, qlut: Option<&QuantizedLut>,
                             index: &CompressedIndex, lo: usize, hi: usize,
-                            k: usize) -> Vec<(f32, u32)> {
-    scan_range_topk_prec_forced(lut, qlut, index, lo, hi, k,
+                            k: usize, filter: Option<&FilterBitmap>)
+                            -> Vec<(f32, u32)> {
+    scan_range_topk_prec_forced(lut, qlut, index, lo, hi, k, filter,
                                 simd::scalar_forced())
 }
 
@@ -483,19 +553,24 @@ pub fn scan_range_topk_prec(lut: &Lut, qlut: Option<&QuantizedLut>,
 /// without touching environment state).
 pub fn scan_range_topk_prec_forced(lut: &Lut, qlut: Option<&QuantizedLut>,
                                    index: &CompressedIndex, lo: usize,
-                                   hi: usize, k: usize, force_scalar: bool)
+                                   hi: usize, k: usize,
+                                   filter: Option<&FilterBitmap>,
+                                   force_scalar: bool)
                                    -> Vec<(f32, u32)> {
     match qlut {
         Some(q @ QuantizedLut::U16 { .. }) => {
-            scan_lut_topk_u16_forced(q, lut, index, lo, hi, k, force_scalar)
+            scan_lut_topk_u16_forced(q, lut, index, lo, hi, k, filter,
+                                     force_scalar)
         }
         Some(q @ QuantizedLut::U8 { .. }) => {
-            scan_lut_topk_u8_forced(q, lut, index, lo, hi, k, force_scalar)
+            scan_lut_topk_u8_forced(q, lut, index, lo, hi, k, filter,
+                                    force_scalar)
         }
         Some(q @ QuantizedLut::U4 { .. }) => {
-            scan_lut_topk_u4_forced(q, lut, index, lo, hi, k, force_scalar)
+            scan_lut_topk_u4_forced(q, lut, index, lo, hi, k, filter,
+                                    force_scalar)
         }
-        None => scan_range_topk(lut, index, lo, hi, k),
+        None => scan_range_topk(lut, index, lo, hi, k, filter),
     }
 }
 
@@ -542,7 +617,9 @@ pub fn prefilter_survivors(sketches: &[u64], qsketch: u64, lo: usize,
 pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
                                    sketches: &[u64], qsketch: u64,
                                    lo: usize, hi: usize, k: usize,
-                                   margin: usize) -> Vec<(f32, u32)> {
+                                   margin: usize,
+                                   filter: Option<&FilterBitmap>)
+                                   -> Vec<(f32, u32)> {
     let hi = hi.min(index.n);
     if lo >= hi {
         return Vec::new();
@@ -550,7 +627,7 @@ pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
     debug_assert_eq!(sketches.len(), index.n);
     let keep = k.saturating_mul(margin).max(k);
     if keep >= hi - lo {
-        return scan_range_topk(lut, index, lo, hi, k);
+        return scan_range_topk(lut, index, lo, hi, k, filter);
     }
     let survivors = {
         let mut span = crate::span!("prefilter");
@@ -568,6 +645,13 @@ pub fn scan_range_topk_prefiltered(lut: &Lut, index: &CompressedIndex,
     let mut top = TopK::new(k.min(survivors.len()).max(1));
     let mut worst = f32::INFINITY;
     for id in survivors {
+        // the metadata filter composes after the sketch prune: only
+        // admitted survivors are scored into the heap
+        if let Some(f) = filter {
+            if !f.is_admitted(id as usize) {
+                continue;
+            }
+        }
         let s = lut.score(index.code(id as usize));
         if s < worst {
             top.push(s, id);
@@ -630,9 +714,9 @@ mod tests {
         let (_, lut) = mk_lut(9, 4);
         let full = scan_topk(&lut, &idx, 25);
         let parts = vec![
-            scan_range_topk(&lut, &idx, 0, 400, 25),
-            scan_range_topk(&lut, &idx, 400, 700, 25),
-            scan_range_topk(&lut, &idx, 700, 1000, 25),
+            scan_range_topk(&lut, &idx, 0, 400, 25, None),
+            scan_range_topk(&lut, &idx, 400, 700, 25, None),
+            scan_range_topk(&lut, &idx, 700, 1000, 25, None),
         ];
         let merged = merge_topk(parts, 25);
         assert_eq!(full.iter().map(|p| p.1).collect::<Vec<_>>(),
@@ -734,9 +818,10 @@ mod tests {
                 packed.ensure_packed();
                 let (_, lut) = mk_lut(stride, seed ^ 3);
                 let q = quantize(&lut, bits);
-                let a = scan_range_topk_prec(&lut, Some(&q), &flat, lo, hi, k);
+                let a = scan_range_topk_prec(&lut, Some(&q), &flat, lo, hi,
+                                             k, None);
                 let b = scan_range_topk_prec(&lut, Some(&q), &packed, lo,
-                                             hi, k);
+                                             hi, k, None);
                 if a == b {
                     Ok(())
                 } else {
@@ -789,7 +874,8 @@ mod tests {
                     return Ok(()); // inside the quantization margin
                 }
                 gated += 1;
-                let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, n, k);
+                let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, n,
+                                               k, None);
                 let want = &all[..k];
                 if got.iter().map(|p| p.1).eq(want.iter().map(|p| p.1)) {
                     Ok(())
@@ -844,9 +930,9 @@ mod tests {
                 }
                 let q = quantize(&lut, bits);
                 let scalar = scan_range_topk_prec_forced(
-                    &lut, Some(&q), &idx, lo, hi, k, true);
+                    &lut, Some(&q), &idx, lo, hi, k, None, true);
                 let simd = scan_range_topk_prec_forced(
-                    &lut, Some(&q), &idx, lo, hi, k, false);
+                    &lut, Some(&q), &idx, lo, hi, k, None, false);
                 if scalar == simd {
                     Ok(())
                 } else {
@@ -869,10 +955,10 @@ mod tests {
         for bits in [16u32, 8, 4] {
             let q = quantize(&lut, bits);
             let via_env = scan_range_topk_prec(&lut, Some(&q), &idx,
-                                               0, 300, 12);
+                                               0, 300, 12, None);
             for force in [true, false] {
                 let pinned = scan_range_topk_prec_forced(
-                    &lut, Some(&q), &idx, 0, 300, 12, force);
+                    &lut, Some(&q), &idx, 0, 300, 12, None, force);
                 assert_eq!(via_env, pinned, "bits={bits} force={force}");
             }
         }
@@ -890,11 +976,11 @@ mod tests {
         let lut = mk_lut16(5, 62);
         let q = quantize(&lut, 4);
         let a = scan_range_topk_prec_forced(&lut, Some(&q), &packed,
-                                            0, 200, 9, false);
+                                            0, 200, 9, None, false);
         let b = scan_range_topk_prec_forced(&lut, Some(&q), &flat,
-                                            0, 200, 9, false);
+                                            0, 200, 9, None, false);
         let c = scan_range_topk_prec_forced(&lut, Some(&q), &packed,
-                                            0, 200, 9, true);
+                                            0, 200, 9, None, true);
         assert_eq!(a, b);
         assert_eq!(a, c);
     }
@@ -911,7 +997,8 @@ mod tests {
         let (_, lut) = mk_lut(stride, 11);
         for bits in [16u32, 8] {
             let q = quantize(&lut, bits);
-            let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, 50, 7);
+            let got = scan_range_topk_prec(&lut, Some(&q), &idx, 0, 50, 7,
+                                           None);
             let ids: Vec<u32> = got.iter().map(|p| p.1).collect();
             assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6], "bits={bits}");
         }
@@ -936,9 +1023,11 @@ mod tests {
         for bits in [16u32, 8] {
             let q = quantize(&lut, bits);
             let parts = vec![
-                scan_range_topk_prec(&lut, Some(&q), &idx, 0, 37, 25),
-                scan_range_topk_prec(&lut, Some(&q), &idx, 37, 150, 25),
-                scan_range_topk_prec(&lut, Some(&q), &idx, 150, 256, 25),
+                scan_range_topk_prec(&lut, Some(&q), &idx, 0, 37, 25, None),
+                scan_range_topk_prec(&lut, Some(&q), &idx, 37, 150, 25,
+                                     None),
+                scan_range_topk_prec(&lut, Some(&q), &idx, 150, 256, 25,
+                                     None),
             ];
             let merged = merge_topk(parts, 25);
             assert_eq!(merged, full_f32, "bits={bits}");
@@ -959,7 +1048,7 @@ mod tests {
         let q = quantize(&lut, 4);
         for force in [true, false] {
             let got = scan_range_topk_prec_forced(&lut, Some(&q), &idx,
-                                                  0, 50, 7, force);
+                                                  0, 50, 7, None, force);
             let ids: Vec<u32> = got.iter().map(|p| p.1).collect();
             assert_eq!(ids, vec![0, 1, 2, 3, 4, 5, 6], "force={force}");
         }
@@ -982,14 +1071,136 @@ mod tests {
         for force in [true, false] {
             let parts = vec![
                 scan_range_topk_prec_forced(&lut, Some(&q), &idx,
-                                            0, 41, 20, force),
+                                            0, 41, 20, None, force),
                 scan_range_topk_prec_forced(&lut, Some(&q), &idx,
-                                            41, 150, 20, force),
+                                            41, 150, 20, None, force),
                 scan_range_topk_prec_forced(&lut, Some(&q), &idx,
-                                            150, 180, 20, force),
+                                            150, 180, 20, None, force),
             ];
             let merged = merge_topk(parts, 20);
             assert_eq!(merged, full_f32, "force={force}");
+        }
+    }
+
+    /// Rebuild an index from the admitted rows only, returning the
+    /// compacted index plus the compact-row → original-id map — the
+    /// honest oracle for in-selection filtering at every precision.
+    fn admitted_subset(idx: &CompressedIndex, bm: &super::super::filter::FilterBitmap)
+                       -> (CompressedIndex, Vec<u32>) {
+        let stride = idx.stride;
+        let mut codes = Vec::new();
+        let mut to_orig = Vec::new();
+        for i in 0..idx.n {
+            if bm.is_admitted(i) {
+                codes.extend_from_slice(idx.code(i));
+                to_orig.push(i as u32);
+            }
+        }
+        (CompressedIndex::from_codes(to_orig.len(), stride, codes), to_orig)
+    }
+
+    #[test]
+    fn prop_filtered_scan_equals_admitted_subset_scan_at_all_precisions() {
+        // the tentpole contract at the kernel level: a filtered scan is
+        // exactly the scan of the admitted subset — at f32, u16, u8, u4,
+        // SIMD and scalar, packed and unpacked, across selectivities
+        // including 0 (empty, no panic) and 1 (bit-identical to plain)
+        use crate::index::filter::{Filter, FilterBitmap};
+        prop::forall_ok(
+            6161,
+            40,
+            |r: &mut SplitMix64| {
+                let n = 1 + r.below(300);
+                let stride = 1 + r.below(12);
+                let k = 1 + r.below(20);
+                let bits = [0u32, 16, 8, 4][r.below(4)]; // 0 = f32
+                let packed = r.below(2) == 0;
+                let force = r.below(2) == 0;
+                // selectivity grid: none / half-ish / all
+                let modulus = [0usize, 2, 1][r.below(3)];
+                (n, stride, k, bits, packed, force, modulus, r.next_u64())
+            },
+            |&(n, stride, k, bits, packed, force, modulus, seed)| {
+                let (mut idx, lut) = if bits == 4 {
+                    (mk_index16(n, stride, seed), mk_lut16(stride, seed ^ 7))
+                } else {
+                    let (idx, (_, lut)) =
+                        (mk_index(n, stride, seed), mk_lut(stride, seed ^ 7));
+                    (idx, lut)
+                };
+                // modulus 0 ⇒ admit nothing; else admit i % modulus == 0
+                let tags: Vec<u64> = (0..n)
+                    .map(|i| u64::from(modulus != 0 && i % modulus.max(1) == 0))
+                    .collect();
+                idx.set_tags(tags);
+                if packed {
+                    idx.ensure_packed();
+                }
+                let q = (bits != 0).then(|| quantize(&lut, bits));
+                let bm = FilterBitmap::build(&Filter::TagEq(1), &idx);
+                let got = scan_range_topk_prec_forced(
+                    &lut, q.as_ref(), &idx, 0, n, k, Some(&bm), force);
+                let (sub, to_orig) = admitted_subset(&idx, &bm);
+                if sub.n == 0 {
+                    return if got.is_empty() {
+                        Ok(())
+                    } else {
+                        Err(format!("selectivity 0 returned {got:?}"))
+                    };
+                }
+                let mut sub2 = sub;
+                if packed {
+                    sub2.ensure_packed();
+                }
+                let want: Vec<(f32, u32)> = scan_range_topk_prec_forced(
+                    &lut, q.as_ref(), &sub2, 0, sub2.n, k, None, force)
+                    .into_iter()
+                    .map(|(s, id)| (s, to_orig[id as usize]))
+                    .collect();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("bits={bits} modulus={modulus} \
+                                 filtered {got:?} != subset {want:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn full_selectivity_filter_is_bit_identical_to_plain_scan() {
+        use crate::index::filter::{Filter, FilterBitmap};
+        let mut idx = mk_index(260, 6, 91);
+        idx.set_tags(vec![3; 260]);
+        idx.ensure_packed();
+        let (_, lut) = mk_lut(6, 92);
+        let bm = FilterBitmap::build(&Filter::TagEq(3), &idx);
+        for bits in [0u32, 16, 8] {
+            let q = (bits != 0).then(|| quantize(&lut, bits));
+            let plain = scan_range_topk_prec(&lut, q.as_ref(), &idx,
+                                             0, 260, 11, None);
+            let filtered = scan_range_topk_prec(&lut, q.as_ref(), &idx,
+                                                0, 260, 11, Some(&bm));
+            assert_eq!(plain, filtered, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn filtered_prefiltered_scan_scores_only_admitted_survivors() {
+        use crate::index::filter::{Filter, FilterBitmap};
+        // full keep: the prefiltered path must reduce to the filtered
+        // plain scan exactly
+        let mut idx = mk_index(300, 7, 73);
+        idx.set_tags((0..300).map(|i| (i % 2) as u64).collect());
+        let (_, lut) = mk_lut(7, 74);
+        let sketches = vec![0u64; 300];
+        let bm = FilterBitmap::build(&Filter::TagEq(0), &idx);
+        let want = scan_range_topk(&lut, &idx, 10, 280, 9, Some(&bm));
+        let got = scan_range_topk_prefiltered(&lut, &idx, &sketches, 0,
+                                              10, 280, 9, 9999, Some(&bm));
+        assert_eq!(got, want);
+        for (_, id) in got {
+            assert_eq!(id % 2, 0, "non-admitted row leaked through");
         }
     }
 
@@ -1017,9 +1228,9 @@ mod tests {
         let idx = mk_index(300, 7, 71);
         let (_, lut) = mk_lut(7, 72);
         let sketches = vec![0u64; 300]; // content irrelevant at full keep
-        let want = scan_range_topk(&lut, &idx, 20, 260, 10);
+        let want = scan_range_topk(&lut, &idx, 20, 260, 10, None);
         let got = scan_range_topk_prefiltered(&lut, &idx, &sketches, 0,
-                                              20, 260, 10, 9999);
+                                              20, 260, 10, 9999, None);
         assert_eq!(got, want);
     }
 
@@ -1047,9 +1258,9 @@ mod tests {
         let k = 10;
         let margin = 4;
         assert!(k * margin < n, "prune must actually engage");
-        let want = scan_range_topk(&lut, &idx, 0, n, k);
+        let want = scan_range_topk(&lut, &idx, 0, n, k, None);
         let got = scan_range_topk_prefiltered(&lut, &idx, &sketches, 0,
-                                              0, n, k, margin);
+                                              0, n, k, margin, None);
         assert_eq!(got, want);
     }
 }

@@ -24,11 +24,15 @@
 //!   flat (its blocked scan transposes on the fly — identical results).
 //!   With a [`Routing`], rows are grouped per coarse list inside every
 //!   segment (the IVF write path: inserts route through the coarse
-//!   quantizer, optionally encoding residuals).
+//!   quantizer, optionally encoding residuals).  Every segment also
+//!   carries a row-aligned metadata tag column (u64 per row, default 0
+//!   for untagged inserts — [`StreamingIndex::insert_batch_tagged`]):
+//!   tags ride the WAL insert records, survive seal/compact/checkpoint,
+//!   and back the per-query predicate filter (rust/DESIGN.md §13).
 //! * **Epoch guard** — readers take an [`Arc`] snapshot of the whole
 //!   [`SegmentSet`]; every mutation builds a *new* set (sharing
 //!   untouched segments) and swaps it in under a short write lock,
-//!   bumping `generation`.  In-flight `run_scan_tasks_multi_prec` plans
+//!   bumping `generation`.  In-flight `run_scan_tasks` plans
 //!   keep their snapshot alive, so a concurrent seal/compact can never
 //!   tear an index out from under a scan.
 //! * **Durability** — when opened on a directory, every mutation is
@@ -43,7 +47,10 @@
 //!   to external ids, tombstones filtered (each slot over-fetches by its
 //!   segment's dead count so filtering can never starve the top-k), and
 //!   the lexicographic `merge_topk` reduce plus the batched decode
-//!   rerank finish per query.  With no deletes pending the results are
+//!   rerank finish per query.  A metadata predicate compiles to one
+//!   bitmap per segment and prunes inside the scan kernels — in-kernel
+//!   skipping needs no extra over-fetch, filtered rows never enter the
+//!   per-slot heaps at all.  With no deletes pending the results are
 //!   bit-identical to a flat [`super::SearchEngine`] over the same rows
 //!   — pinned by the equivalence property tests below.
 
@@ -54,10 +61,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use anyhow::{ensure, Context};
 
 use crate::config::{SearchConfig, StreamConfig};
-use crate::exec::{shard_ranges_in, Executor, IndexedScanTask,
-                  PrefilterPlan};
+use crate::exec::{shard_ranges_in, Executor, PrefilterPlan, ScanSpec,
+                  ScanTask};
 use crate::index::scan::merge_topk;
-use crate::index::CompressedIndex;
+use crate::index::{CompressedIndex, FilterPlan, SearchRequest};
 use crate::ivf::CoarseQuantizer;
 use crate::linalg::{sq_l2, TopK};
 use crate::quant::{Lut, Quantizer, SketchPlanes};
@@ -100,10 +107,12 @@ pub struct Segment {
 
 impl Segment {
     fn empty(seg_id: u64, stride: usize, num_lists: usize) -> Segment {
+        let mut codes = CompressedIndex::from_codes(0, stride, Vec::new());
+        codes.set_tags(Vec::new());
         Segment {
             seg_id,
             body: Arc::new(SegmentBody {
-                codes: CompressedIndex::from_codes(0, stride, Vec::new()),
+                codes,
                 ids: Vec::new(),
                 offsets: vec![0; num_lists + 1],
             }),
@@ -135,6 +144,13 @@ impl Segment {
     #[inline]
     pub fn offsets(&self) -> &[usize] {
         &self.body.offsets
+    }
+
+    /// The row-aligned metadata tag column (every segment carries one;
+    /// untagged inserts hold the default tag 0).
+    #[inline]
+    fn tags(&self) -> &[u64] {
+        self.body.codes.tags.as_deref().expect("segment tag column")
     }
 
     #[inline]
@@ -170,6 +186,12 @@ impl Segment {
         let stride = self.body.codes.stride;
         store.put_u8("seg_codes", &[n, stride], self.body.codes.codes.clone());
         store.put_u32("seg_ids", &[n], self.body.ids.clone());
+        let tag_bytes: Vec<u8> = self
+            .tags()
+            .iter()
+            .flat_map(|t| t.to_le_bytes())
+            .collect();
+        store.put_u8("seg_tags", &[n, 8], tag_bytes);
         let offs: Vec<u32> =
             self.body.offsets.iter().map(|&o| o as u32).collect();
         store.put_u32("seg_offsets", &[offs.len()], offs);
@@ -201,6 +223,13 @@ impl Segment {
         ensure!(cshape == [n, stride], "seg_codes shape {cshape:?}");
         let (_, ids) = store.get_u32("seg_ids").context("missing seg_ids")?;
         ensure!(ids.len() == n, "seg_ids length {}", ids.len());
+        let (tshape, tag_bytes) =
+            store.get_u8("seg_tags").context("missing seg_tags")?;
+        ensure!(tshape == [n, 8], "seg_tags shape {tshape:?}");
+        let tags: Vec<u64> = tag_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect();
         let (_, offs) =
             store.get_u32("seg_offsets").context("missing seg_offsets")?;
         ensure!(offs.len() == num_lists + 1,
@@ -215,6 +244,7 @@ impl Segment {
                 "seg_dead has out-of-range rows");
         let mut codes_ix =
             CompressedIndex::from_codes(n, stride, codes.to_vec());
+        codes_ix.set_tags(tags);
         codes_ix.ensure_packed();
         let seg = Segment {
             seg_id,
@@ -459,9 +489,21 @@ impl StreamingIndex {
     /// `rows × dim`), route + encode them in one `encode_batch` call,
     /// log + fsync, then publish a new snapshot.  Seals the active
     /// segment at `segment_rows` and compacts when enough sealed
-    /// segments accumulate.  Returns the assigned ids.
+    /// segments accumulate.  Returns the assigned ids.  Rows carry the
+    /// default metadata tag 0 — use [`Self::insert_batch_tagged`] to
+    /// attach per-row predicate tags.
     pub fn insert_batch(&self, quant: &dyn Quantizer, vectors: &[f32])
                         -> Result<Vec<u32>> {
+        self.insert_batch_tagged(quant, vectors, None)
+    }
+
+    /// [`Self::insert_batch`] with an optional per-row metadata tag
+    /// column (`tags.len()` must equal the batch's row count).  Tags are
+    /// WAL-logged with their rows and served by the predicate filter
+    /// (`SearchConfig::filter`, rust/DESIGN.md §13).
+    pub fn insert_batch_tagged(&self, quant: &dyn Quantizer,
+                               vectors: &[f32], tags: Option<&[u64]>)
+                               -> Result<Vec<u32>> {
         let dim = quant.dim();
         ensure!(quant.code_bytes() == self.stride,
                 "quantizer code_bytes {} != index stride {}",
@@ -469,9 +511,15 @@ impl StreamingIndex {
         ensure!(dim > 0 && vectors.len() % dim == 0,
                 "vectors must be rows × dim = {dim}");
         let rows = vectors.len() / dim;
+        ensure!(tags.map_or(true, |t| t.len() == rows),
+                "one tag per inserted row");
         if rows == 0 {
             return Ok(Vec::new());
         }
+        let row_tags: Vec<u64> = match tags {
+            Some(t) => t.to_vec(),
+            None => vec![0; rows],
+        };
         let mut w = self.writer.lock().expect("writer lock");
         ensure!(
             (w.next_id as u64) + (rows as u64) < u32::MAX as u64,
@@ -515,6 +563,7 @@ impl StreamingIndex {
                 let rec = WalRecord::Insert {
                     id: ids[i],
                     list: lists[i],
+                    tag: row_tags[i],
                     code: codes[i * self.stride..(i + 1) * self.stride]
                         .to_vec(),
                 };
@@ -531,7 +580,7 @@ impl StreamingIndex {
                 return Err(e);
             }
         }
-        self.apply_insert(&mut w, &ids, &lists, &codes)?;
+        self.apply_insert(&mut w, &ids, &lists, &row_tags, &codes)?;
 
         if self.snapshot().active.n() >= self.cfg.segment_rows {
             self.seal(&mut w)?;
@@ -603,11 +652,12 @@ impl StreamingIndex {
     // and WAL replay calls them directly — recovery is the same code.
 
     fn apply_insert(&self, w: &mut Writer, ids: &[u32], lists: &[u32],
-                    codes: &[u8]) -> Result<()> {
+                    tags: &[u64], codes: &[u8]) -> Result<()> {
         let nl = self.num_lists();
         let stride = self.stride;
         let rows = ids.len();
-        ensure!(lists.len() == rows && codes.len() == rows * stride,
+        ensure!(lists.len() == rows && tags.len() == rows
+                    && codes.len() == rows * stride,
                 "insert batch shape mismatch");
         let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nl];
         for (i, &l) in lists.iter().enumerate() {
@@ -620,6 +670,7 @@ impl StreamingIndex {
         let n = act.n() + rows;
         let mut codes_out = Vec::with_capacity(n * stride);
         let mut ids_out: Vec<u32> = Vec::with_capacity(n);
+        let mut tags_out: Vec<u64> = Vec::with_capacity(n);
         let mut offsets = Vec::with_capacity(nl + 1);
         offsets.push(0usize);
         let mut dead = vec![0u64; n.div_ceil(64)];
@@ -631,12 +682,14 @@ impl StreamingIndex {
             // rebuild of the whole active segment
             codes_out.extend_from_slice(&act.codes().codes);
             ids_out.extend_from_slice(act.row_ids());
+            tags_out.extend_from_slice(act.tags());
             dead[..act.dead.len()].copy_from_slice(&act.dead);
             for (i, &id) in ids.iter().enumerate() {
                 w.locate.insert(id, (act.seg_id, (act.n() + i) as u32));
                 ids_out.push(id);
             }
             codes_out.extend_from_slice(codes);
+            tags_out.extend_from_slice(tags);
             offsets.push(n);
         } else {
             n_dead = 0;
@@ -651,12 +704,14 @@ impl StreamingIndex {
                         w.locate.insert(id, (act.seg_id, new_row as u32));
                     }
                     ids_out.push(id);
+                    tags_out.push(act.tags()[row]);
                     codes_out.extend_from_slice(act.codes().code(row));
                 }
                 for &i in &buckets[l] {
                     let new_row = ids_out.len();
                     w.locate.insert(ids[i], (act.seg_id, new_row as u32));
                     ids_out.push(ids[i]);
+                    tags_out.push(tags[i]);
                     codes_out.extend_from_slice(
                         &codes[i * stride..(i + 1) * stride]);
                 }
@@ -666,13 +721,15 @@ impl StreamingIndex {
         let max_id = *ids.iter().max().expect("rows > 0");
         w.next_id = w.next_id.max(max_id + 1);
 
+        let mut codes_ix = CompressedIndex::from_codes(n, stride, codes_out);
+        codes_ix.set_tags(tags_out);
         self.install(SegmentSet {
             generation: snap.generation + 1,
             sealed: snap.sealed.clone(),
             active: Arc::new(Segment {
                 seg_id: act.seg_id,
                 body: Arc::new(SegmentBody {
-                    codes: CompressedIndex::from_codes(n, stride, codes_out),
+                    codes: codes_ix,
                     ids: ids_out,
                     offsets,
                 }),
@@ -719,6 +776,7 @@ impl StreamingIndex {
         }
         let mut codes_ix = CompressedIndex::from_codes(
             act.n(), self.stride, act.codes().codes.clone());
+        codes_ix.set_tags(act.tags().to_vec());
         codes_ix.ensure_packed();
         let mut sealed = snap.sealed.clone();
         sealed.push(Arc::new(Segment {
@@ -763,6 +821,7 @@ impl StreamingIndex {
         let live: usize = snap.sealed.iter().map(|s| s.live()).sum();
         let mut codes_out = Vec::with_capacity(live * stride);
         let mut ids_out: Vec<u32> = Vec::with_capacity(live);
+        let mut tags_out: Vec<u64> = Vec::with_capacity(live);
         let mut offsets = Vec::with_capacity(nl + 1);
         offsets.push(0usize);
         for l in 0..nl {
@@ -774,6 +833,7 @@ impl StreamingIndex {
                         continue;
                     }
                     ids_out.push(seg.row_ids()[row]);
+                    tags_out.push(seg.tags()[row]);
                     codes_out.extend_from_slice(seg.codes().code(row));
                 }
             }
@@ -790,6 +850,7 @@ impl StreamingIndex {
             }
             let mut codes_ix =
                 CompressedIndex::from_codes(ids_out.len(), stride, codes_out);
+            codes_ix.set_tags(tags_out);
             codes_ix.ensure_packed();
             vec![Arc::new(Segment {
                 seg_id,
@@ -840,6 +901,7 @@ impl StreamingIndex {
             wal.append(&WalRecord::Insert {
                 id: act.row_ids()[row],
                 list: act.list_of(row),
+                tag: act.tags()[row],
                 code: act.codes().code(row).to_vec(),
             })?;
         }
@@ -914,16 +976,19 @@ impl StreamingIndex {
                 WalRecord::Insert { .. } => {
                     let mut ids = Vec::new();
                     let mut lists = Vec::new();
+                    let mut tags = Vec::new();
                     let mut codes = Vec::new();
-                    while let Some(WalRecord::Insert { id, list, code }) =
-                        records.get(i)
+                    while let Some(WalRecord::Insert {
+                        id, list, tag, code,
+                    }) = records.get(i)
                     {
                         ids.push(*id);
                         lists.push(*list);
+                        tags.push(*tag);
                         codes.extend_from_slice(code);
                         i += 1;
                     }
-                    self.apply_insert(w, &ids, &lists, &codes)?;
+                    self.apply_insert(w, &ids, &lists, &tags, &codes)?;
                 }
                 WalRecord::Delete { .. } => {
                     let mut hits: HashMap<u64, Vec<u32>> = HashMap::new();
@@ -965,18 +1030,23 @@ impl StreamingIndex {
     /// [`super::SearchEngine::search`]).
     pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
                   cfg: &SearchConfig) -> Vec<u32> {
-        self.search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)
+        let req = SearchRequest::from_config(cfg, vec![cfg.k]);
+        self.search_batch_on(quant, &Executor::Inline, &[q], &req)
             .pop()
             .expect("one query in, one result out")
     }
 
     /// Batched two-stage search over the current snapshot, returning
-    /// external ids.  `cfg.nprobe` applies when routed (0 = all lists);
-    /// `cfg.scan_precision` selects the per-segment kernel exactly as on
-    /// the frozen paths.
+    /// external ids.  `req.nprobe` applies when routed (0 = all lists);
+    /// `QuerySpec::precision` selects the per-segment kernel exactly as
+    /// on the frozen paths, and `QuerySpec::filter` compiles to one
+    /// bitmap per segment pruned inside the kernels (tombstones compose
+    /// on top — rust/DESIGN.md §13).
     pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
-                           queries: &[&[f32]], ks: &[usize],
-                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+                           queries: &[&[f32]], req: &SearchRequest)
+                           -> Vec<Vec<u32>> {
+        let cfg = req.to_search_config();
+        let ks: &[usize] = &req.ks;
         assert_eq!(queries.len(), ks.len(), "one k per query");
         if queries.is_empty() {
             return Vec::new();
@@ -1052,7 +1122,7 @@ impl StreamingIndex {
         let mut slot_list: Vec<u32> = Vec::new();
         let mut slot_seg: Vec<usize> = Vec::new();
         let mut slot_ks: Vec<usize> = Vec::new();
-        let mut tasks: Vec<IndexedScanTask> = Vec::new();
+        let mut tasks: Vec<ScanTask> = Vec::new();
         let mut overfetch = 0u64;
         for (qi, probe) in probes.iter().enumerate() {
             for (pi, &l) in probe.iter().enumerate() {
@@ -1074,7 +1144,7 @@ impl StreamingIndex {
                     overfetch += extra as u64;
                     slot_ks.push(ls[qi] + extra);
                     for (a, b) in shard_ranges_in(lo, hi, es) {
-                        tasks.push(IndexedScanTask {
+                        tasks.push(ScanTask {
                             index: si,
                             slot,
                             lut: lut_of[qi][pi],
@@ -1112,9 +1182,18 @@ impl StreamingIndex {
         } else {
             None
         };
-        let parts = exec.run_scan_tasks_multi_pre(
-            &luts, &indexes, &slot_ks, &tasks, cfg.scan_precision,
-            pre.as_ref());
+        // predicate filter: one bitmap per segment, pruned in-kernel —
+        // no extra over-fetch needed (filtered rows never enter the
+        // per-slot heaps, unlike tombstones which are dropped after)
+        let fplan = cfg.filter
+            .map(|f| FilterPlan::compile(&f, &indexes));
+        let spec = ScanSpec {
+            precision: cfg.scan_precision,
+            prefilter: pre.as_ref(),
+            filter: fplan.as_ref(),
+        };
+        let parts =
+            exec.run_scan_tasks(&luts, &indexes, &slot_ks, &tasks, &spec);
 
         // per-query reduce: drop tombstones, remap rows to external ids,
         // fold through the lexicographic merge (decomposition-invariant)
@@ -1246,6 +1325,14 @@ mod tests {
         StreamConfig { segment_rows, compact_segments: 1000, wal_sync: 8 }
     }
 
+    /// Positional shim over the request API for the grids below.
+    fn batch(ix: &StreamingIndex, quant: &dyn Quantizer, exec: &Executor,
+             qs: &[&[f32]], ks: &[usize], cfg: &SearchConfig)
+             -> Vec<Vec<u32>> {
+        let req = SearchRequest::from_config(cfg, ks.to_vec());
+        ix.search_batch_on(quant, exec, qs, &req)
+    }
+
     /// Flat rebuild of the surviving rows, ordered by ascending external
     /// id, plus the row → external-id map.
     fn rebuild(pq: &Pq, base: &Dataset, survivors: &[u32])
@@ -1288,8 +1375,7 @@ mod tests {
                                      ..Default::default() };
             let want =
                 SearchEngine::new(&pq, &flat, cfg).search_batch(&qs);
-            let got = ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                         &cfg);
+            let got = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
             assert_eq!(got, want, "no_rerank={no_rerank}");
         }
     }
@@ -1301,14 +1387,12 @@ mod tests {
         let qs = qrefs(&queries);
         let ks = vec![5usize; qs.len()];
         let cfg = SearchConfig { rerank_l: 20, k: 5, ..Default::default() };
-        let empty =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let empty = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert!(empty.iter().all(|r| r.is_empty()));
         let ids = ix.insert_batch(&pq, &base.data).unwrap();
         assert_eq!(ix.delete_batch(&ids).unwrap(), 300);
         assert_eq!(ix.len(), 0);
-        let gone =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let gone = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert!(gone.iter().all(|r| r.is_empty()));
         // compaction drops every sealed tombstone
         assert!(ix.compact().unwrap());
@@ -1355,8 +1439,7 @@ mod tests {
         let qs = qrefs(&queries);
         let ks = vec![10usize; qs.len()];
         let cfg = SearchConfig { rerank_l: 40, k: 10, ..Default::default() };
-        let before =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let before = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
         let st = ix.stats();
         assert!(st.sealed_segments > 1);
         assert!(ix.compact().unwrap());
@@ -1365,8 +1448,7 @@ mod tests {
         assert_eq!(st2.sealed_segments, 1, "merged into one segment");
         assert!(st2.total_rows < st.total_rows, "tombstones dropped");
         assert_eq!(st2.live_rows, st.live_rows, "no live row lost");
-        let after =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let after = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert_eq!(after, before, "compaction must not change results");
         // the merged segment is packed for the integer kernels
         assert!(ix.snapshot().sealed[0].codes().is_packed());
@@ -1453,7 +1535,7 @@ mod tests {
                     SearchEngine::new(&pq, &flat, f32_cfg)
                         .search_batch_on(&exec, &qs),
                     &to_ext);
-                let got = ix.search_batch_on(&pq, &exec, &qs, &ks, &f32_cfg);
+                let got = batch(&ix, &pq, &exec, &qs, &ks, &f32_cfg);
                 if got != want {
                     return Err(format!(
                         "f32 diverged (threads={threads}, \
@@ -1471,8 +1553,7 @@ mod tests {
                         SearchEngine::new(&pq, &flat, cfg)
                             .search_batch_on(&exec, &qs),
                         &to_ext);
-                    let got =
-                        ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                    let got = batch(&ix, &pq, &exec, &qs, &ks, &cfg);
                     if got != want {
                         return Err(format!("{precision:?} diverged"));
                     }
@@ -1497,11 +1578,10 @@ mod tests {
         let ks = vec![10usize; qs.len()];
         let base_cfg = SearchConfig { rerank_l: 50, k: 10,
                                       ..Default::default() };
-        let want = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks,
-                                      &base_cfg);
+        let want = batch(&ix, &pq, &Executor::new(2), &qs, &ks, &base_cfg);
         let cfg = SearchConfig { prefilter: true, prefilter_margin: 1,
                                  ..base_cfg };
-        let got = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks, &cfg);
+        let got = batch(&ix, &pq, &Executor::new(2), &qs, &ks, &cfg);
         assert_eq!(got, want);
     }
 
@@ -1527,13 +1607,12 @@ mod tests {
                                  ..Default::default() };
         let want = map_rows(
             SearchEngine::new(&pq, &flat, cfg).search_batch(&qs), &to_ext);
-        let got = ix.search_batch_on(&pq, &Executor::new(2), &qs, &ks, &cfg);
+        let got = batch(&ix, &pq, &Executor::new(2), &qs, &ks, &cfg);
         assert_eq!(got, want, "nprobe=all must equal the flat rebuild");
         // sub-linear probing stays in the same league (overlap, not
         // equality: fewer lists genuinely prune candidates)
         let cfg4 = SearchConfig { nprobe: 4, ..cfg };
-        let got4 =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg4);
+        let got4 = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg4);
         let overlap: usize = got4
             .iter()
             .zip(&want)
@@ -1585,11 +1664,12 @@ mod tests {
         let ks = vec![10usize; qs.len()];
         let cfg = SearchConfig { rerank_l: 60, k: 10, nprobe: 0,
                                  ..Default::default() };
+        let ivf_req = SearchRequest::from_config(&cfg, ks.clone());
         let want = map_rows(
-            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg),
+            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ivf_req)
+                .unwrap(),
             &survivors);
-        let got =
-            ix.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let got = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert_eq!(got, want);
     }
 
@@ -1617,5 +1697,93 @@ mod tests {
             assert!(ids[..300].binary_search(&id).is_err(),
                     "deleted id {id} served after compaction");
         }
+    }
+
+    #[test]
+    fn filtered_streaming_search_composes_with_tombstones() {
+        // the filtered-search contract under mutation (rust/DESIGN.md
+        // §13): tags ride WAL inserts and survive seal + compaction, the
+        // predicate composes with tombstones, and filtered search equals
+        // the flat rebuild of the ADMITTED survivors — exactly at f32,
+        // and at the integer precisions under a full rerank (same
+        // pinning as the unfiltered interleaved property)
+        use crate::index::Filter;
+        let (_, base, queries, pq) = setup(1500);
+        let ix = StreamingIndex::new(8, None, scfg(250));
+        let mut ids = Vec::new();
+        for lo in (0..base.len()).step_by(260) {
+            let hi = (lo + 260).min(base.len());
+            // fresh inserts assign ids in dataset order, so id i carries
+            // tag i % 2
+            let tags: Vec<u64> = (lo..hi).map(|i| (i % 2) as u64).collect();
+            ids.extend(
+                ix.insert_batch_tagged(&pq, base.rows(lo, hi), Some(&tags))
+                    .unwrap());
+        }
+        let victims: Vec<u32> = ids.iter().copied().step_by(7).collect();
+        ix.delete_batch(&victims).unwrap();
+        assert!(ix.compact().unwrap(), "tags must survive the merge");
+        let admitted: Vec<u32> = ids
+            .iter()
+            .copied()
+            .filter(|id| id % 2 == 1
+                    && victims.binary_search(id).is_err())
+            .collect();
+        let (flat, to_ext) = rebuild(&pq, &base, &admitted);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+        let f32_cfg = SearchConfig { rerank_l: 50, k: 10,
+                                     filter: Some(Filter::TagEq(1)),
+                                     ..Default::default() };
+        let want = map_rows(
+            SearchEngine::new(&pq, &flat,
+                              SearchConfig { filter: None, ..f32_cfg })
+                .search_batch(&qs),
+            &to_ext);
+        let got = batch(&ix, &pq, &Executor::new(2), &qs, &ks, &f32_cfg);
+        assert_eq!(got, want, "filtered f32 diverged from admitted rebuild");
+        for precision in [ScanPrecision::U16, ScanPrecision::U8,
+                          ScanPrecision::U4] {
+            let cfg = SearchConfig { rerank_l: flat.n,
+                                     scan_precision: precision, ..f32_cfg };
+            let want = map_rows(
+                SearchEngine::new(&pq, &flat,
+                                  SearchConfig { filter: None, ..cfg })
+                    .search_batch(&qs),
+                &to_ext);
+            let got = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &cfg);
+            assert_eq!(got, want, "filtered {precision:?} diverged");
+        }
+        // mutation after the filtered search keeps composing: delete the
+        // current filtered winners and they vanish from the next search
+        let q0 = queries.row(0);
+        let one_cfg = SearchConfig { rerank_l: 50, k: 5,
+                                     filter: Some(Filter::TagEq(1)),
+                                     ..Default::default() };
+        let winners = ix.search(&pq, q0, &one_cfg);
+        assert!(!winners.is_empty());
+        ix.delete_batch(&winners).unwrap();
+        let next = ix.search(&pq, q0, &one_cfg);
+        for id in &winners {
+            assert!(!next.contains(id),
+                    "tombstoned id {id} served through the filter");
+        }
+        // selectivity 0: no admitted rows means empty results, no panic
+        let none_cfg = SearchConfig { rerank_l: 50, k: 5,
+                                      filter: Some(Filter::TagEq(9)),
+                                      ..Default::default() };
+        let none = batch(&ix, &pq, &Executor::Inline, &qs, &ks, &none_cfg);
+        assert!(none.iter().all(Vec::is_empty), "tag 9 admits nothing");
+        // untagged inserts carry the default tag 0: TagEq(0) over a
+        // plain insert_batch index equals the unfiltered search
+        let ix0 = StreamingIndex::new(8, None, scfg(300));
+        ix0.insert_batch(&pq, base.rows(0, 600)).unwrap();
+        let plain = SearchConfig { rerank_l: 40, k: 10,
+                                   ..Default::default() };
+        let zero = SearchConfig { filter: Some(Filter::TagEq(0)), ..plain };
+        assert_eq!(
+            batch(&ix0, &pq, &Executor::Inline, &qs, &ks, &zero),
+            batch(&ix0, &pq, &Executor::Inline, &qs, &ks, &plain),
+            "default tag 0 must admit every untagged row");
     }
 }

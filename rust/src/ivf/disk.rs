@@ -55,9 +55,10 @@ use std::sync::Arc;
 use anyhow::{ensure, Context};
 
 use crate::config::SearchConfig;
-use crate::exec::{shard_ranges_in, Executor, IndexedScanTask, PrefilterPlan};
+use crate::exec::{shard_ranges_in, Executor, PrefilterPlan, ScanSpec,
+                  ScanTask};
 use crate::index::scan::merge_topk;
-use crate::index::CompressedIndex;
+use crate::index::{CompressedIndex, FilterPlan, SearchRequest};
 use crate::linalg::{sq_l2, TopK};
 use crate::obs;
 use crate::quant::{Lut, Quantizer, SketchPlanes};
@@ -89,6 +90,7 @@ pub struct DiskIvfIndex {
     n: usize,
     stride: usize,
     has_sketches: bool,
+    has_tags: bool,
     reader: BlockReader,
     cache: ListCache<CompressedIndex>,
 }
@@ -96,16 +98,19 @@ pub struct DiskIvfIndex {
 impl DiskIvfIndex {
     /// Serialize a built RAM [`IvfIndex`] into a block archive:
     /// block 0 = routing state (centroids ‖ remap ‖ offsets), block
-    /// `l + 1` = list `l`'s codes (‖ its row sketches when built).
-    /// Sketches present at save time ride along so the pre-filter
-    /// works identically after a reload; the packed mirrors are
-    /// *rebuilt* per list on fetch (they are derived data).
+    /// `l + 1` = list `l`'s codes (‖ its row sketches when built,
+    /// ‖ its u64 metadata tags when attached).  Sketches and tags
+    /// present at save time ride along so the pre-filter and metadata
+    /// predicate filters work identically after a reload; the packed
+    /// mirrors are *rebuilt* per list on fetch (they are derived
+    /// data).
     pub fn save_archive(ivf: &IvfIndex, path: &Path) -> Result<()> {
         let nl = ivf.num_lists();
         let dim = ivf.coarse.dim;
         let n = ivf.n();
         let stride = ivf.codes.stride;
         let has_sketches = ivf.codes.sketches.is_some();
+        let has_tags = ivf.codes.tags.is_some();
 
         let mut b0 =
             Vec::with_capacity(nl * dim * 4 + n * 4 + (nl + 1) * 8);
@@ -123,12 +128,19 @@ impl DiskIvfIndex {
         payloads.push(b0);
         for l in 0..nl {
             let (lo, hi) = (ivf.offsets[l], ivf.offsets[l + 1]);
-            let mut b = Vec::with_capacity(
-                (hi - lo) * (stride + if has_sketches { 8 } else { 0 }));
+            let per_row = stride
+                + if has_sketches { 8 } else { 0 }
+                + if has_tags { 8 } else { 0 };
+            let mut b = Vec::with_capacity((hi - lo) * per_row);
             b.extend_from_slice(&ivf.codes.codes[lo * stride..hi * stride]);
             if let Some(sk) = &ivf.codes.sketches {
                 for &s in &sk[lo..hi] {
                     b.extend_from_slice(&s.to_le_bytes());
+                }
+            }
+            if let Some(tags) = &ivf.codes.tags {
+                for &t in &tags[lo..hi] {
+                    b.extend_from_slice(&t.to_le_bytes());
                 }
             }
             payloads.push(b);
@@ -142,6 +154,7 @@ impl DiskIvfIndex {
             ("n", Json::Num(n as f64)),
             ("stride", Json::Num(stride as f64)),
             ("has_sketches", Json::Bool(has_sketches)),
+            ("has_tags", Json::Bool(has_tags)),
         ]);
         let blocks: Vec<(&[u8], u64)> = payloads
             .iter()
@@ -180,6 +193,9 @@ impl DiskIvfIndex {
             .with_context(|| format!("meta field \"residual\" in {path:?}"))?;
         let has_sketches = m.get("has_sketches").and_then(Json::as_bool)
             .unwrap_or(false);
+        // absent in pre-tag archives: those simply carry no tag column
+        let has_tags = m.get("has_tags").and_then(Json::as_bool)
+            .unwrap_or(false);
         ensure!(nl > 0 && dim > 0 && stride > 0,
                 "degenerate disk_ivf meta in {path:?}");
         ensure!(reader.num_blocks() == nl + 1,
@@ -215,7 +231,9 @@ impl DiskIvfIndex {
                 "offsets must be non-decreasing in {path:?}");
         ensure!(remap.iter().all(|&id| (id as usize) < n),
                 "remap ids must be < {n} in {path:?}");
-        let row_bytes = stride + if has_sketches { 8 } else { 0 };
+        let row_bytes = stride
+            + if has_sketches { 8 } else { 0 }
+            + if has_tags { 8 } else { 0 };
         for l in 0..nl {
             let len = offsets[l + 1] - offsets[l];
             let e = reader.entry(l + 1);
@@ -232,6 +250,7 @@ impl DiskIvfIndex {
             n,
             stride,
             has_sketches,
+            has_tags,
             reader,
             cache: ListCache::new(cache_bytes, CACHE_SHARDS),
         })
@@ -264,8 +283,9 @@ impl DiskIvfIndex {
 
     /// Read list `l` from disk and rebuild its full scan surface:
     /// flat codes, packed fast-scan mirror (U4 nibble twin included
-    /// when all codes fit), and row sketches when archived.  Returns
-    /// the value plus its resident-byte estimate for cache accounting.
+    /// when all codes fit), row sketches and metadata tags when
+    /// archived.  Returns the value plus its resident-byte estimate
+    /// for cache accounting.
     fn load_list(&self, l: usize) -> Result<(Arc<CompressedIndex>, usize)> {
         let len = self.list_len(l);
         let bytes = self.reader.read_block(l + 1)?;
@@ -281,12 +301,24 @@ impl DiskIvfIndex {
             }
             ix.sketches = Some(sk);
         }
+        if self.has_tags {
+            let base =
+                code_bytes + if self.has_sketches { len * 8 } else { 0 };
+            let mut tags = Vec::with_capacity(len);
+            for r in 0..len {
+                let at = base + r * 8;
+                tags.push(u64::from_le_bytes(
+                    bytes[at..at + 8].try_into().unwrap()));
+            }
+            ix.set_tags(tags);
+        }
         ix.ensure_packed();
         let resident = ix.codes.len()
             + ix.packed.as_ref().map_or(0, |p| {
                 p.data.len() + p.nibbles.as_ref().map_or(0, Vec::len)
             })
-            + ix.sketches.as_ref().map_or(0, |s| s.len() * 8);
+            + ix.sketches.as_ref().map_or(0, |s| s.len() * 8)
+            + ix.tags.as_ref().map_or(0, |t| t.len() * 8);
         Ok((Arc::new(ix), resident))
     }
 
@@ -330,8 +362,9 @@ impl DiskIvfIndex {
     /// Single-query convenience: a batch of one on the inline executor.
     pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
                   cfg: &SearchConfig) -> Result<Vec<u32>> {
+        let req = SearchRequest::from_config(cfg, vec![cfg.k]);
         Ok(self
-            .search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)?
+            .search_batch_on(quant, &Executor::Inline, &[q], &req)?
             .pop()
             .expect("one query in, one result out"))
     }
@@ -341,8 +374,10 @@ impl DiskIvfIndex {
     /// argument).  Errors surface I/O and CRC failures from the lazy
     /// block fetches; the RAM path has no failing stage.
     pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
-                           queries: &[&[f32]], ks: &[usize],
-                           cfg: &SearchConfig) -> Result<Vec<Vec<u32>>> {
+                           queries: &[&[f32]], req: &SearchRequest)
+                           -> Result<Vec<Vec<u32>>> {
+        let cfg = req.to_search_config();
+        let ks: &[usize] = &req.ks;
         assert_eq!(queries.len(), ks.len(), "one k per query");
         if queries.is_empty() {
             return Ok(Vec::new());
@@ -436,14 +471,14 @@ impl DiskIvfIndex {
         let es = exec.effective_shard_rows(self.n.max(1), cfg.shard_rows);
         // tasks: resident slots first, then miss slots; within a slot,
         // ascending row ranges (the determinism requirement)
-        let mut tasks: Vec<IndexedScanTask> = Vec::new();
+        let mut tasks: Vec<ScanTask> = Vec::new();
         for want_resident in [true, false] {
             for (slot, &l) in slot_list.iter().enumerate() {
                 if fetched[&l].1 != want_resident {
                     continue;
                 }
                 for (lo, hi) in shard_ranges_in(0, self.list_len(l), es) {
-                    tasks.push(IndexedScanTask {
+                    tasks.push(ScanTask {
                         index: index_of[&l], slot, lut: slot_lut[slot],
                         lo, hi,
                     });
@@ -464,9 +499,20 @@ impl DiskIvfIndex {
         } else {
             None
         };
-        let parts = exec.run_scan_tasks_multi_pre(
-            &luts, &index_refs, &slot_ks, &tasks, cfg.scan_precision,
-            pre.as_ref());
+        // predicate bitmaps are compiled against the per-list slab in
+        // `index_refs` order, so `ScanTask::index` addresses the right
+        // bitmap; each fetched list carries its own tag column (strict
+        // semantics: a tag-less archive admits no rows, like any other
+        // frozen index — rust/DESIGN.md §13)
+        let fplan =
+            cfg.filter.map(|f| FilterPlan::compile(&f, &index_refs));
+        let spec = ScanSpec {
+            precision: cfg.scan_precision,
+            prefilter: pre.as_ref(),
+            filter: fplan.as_ref(),
+        };
+        let parts =
+            exec.run_scan_tasks(&luts, &index_refs, &slot_ks, &tasks, &spec);
 
         // cross-list reduce: local rows lift to global through the
         // list base offset, then remap to original ids — the same
@@ -588,6 +634,20 @@ mod tests {
         (0..d.len()).map(|qi| d.row(qi)).collect()
     }
 
+    /// RAM-side reference search through the request API.
+    fn ram(ivf: &IvfIndex, pq: &Pq, exec: &Executor, qs: &[&[f32]],
+           ks: &[usize], cfg: &SearchConfig) -> Vec<Vec<u32>> {
+        let req = SearchRequest::from_config(cfg, ks.to_vec());
+        ivf.search_batch_on(pq, exec, qs, &req).unwrap()
+    }
+
+    /// Disk-side search through the request API (fallible: block I/O).
+    fn dsk(disk: &DiskIvfIndex, pq: &Pq, exec: &Executor, qs: &[&[f32]],
+           ks: &[usize], cfg: &SearchConfig) -> Result<Vec<Vec<u32>>> {
+        let req = SearchRequest::from_config(cfg, ks.to_vec());
+        disk.search_batch_on(pq, exec, qs, &req)
+    }
+
     fn save_ram(ivf: &IvfIndex, dir: &TempDir, name: &str)
                 -> std::path::PathBuf {
         let path = dir.path().join(name);
@@ -658,11 +718,10 @@ mod tests {
                 };
                 let exec = Executor::new(threads);
                 let ks = vec![cfg.k; qs.len()];
-                let want = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                let want = ram(&ivf, &pq, &exec, &qs, &ks, &cfg);
                 let disk = DiskIvfIndex::open(&path, budget).unwrap();
                 for round in 0..2 {
-                    let got = disk
-                        .search_batch_on(&pq, &exec, &qs, &ks, &cfg)
+                    let got = dsk(&disk, &pq, &exec, &qs, &ks, &cfg)
                         .map_err(|e| format!("search failed: {e:#}"))?;
                     if got != want {
                         return Err(format!(
@@ -690,12 +749,10 @@ mod tests {
         for nprobe in [2usize, 0] {
             let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe,
                                      ..Default::default() };
-            let want =
-                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let want = ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
             let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
-            let got = disk
-                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
-                .unwrap();
+            let got =
+                dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
             assert_eq!(got, want, "nprobe={nprobe}");
         }
     }
@@ -716,12 +773,10 @@ mod tests {
                                      prefilter: true,
                                      prefilter_margin: margin,
                                      ..Default::default() };
-            let want =
-                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let want = ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
             let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
-            let got = disk
-                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
-                .unwrap();
+            let got =
+                dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
             assert_eq!(got, want, "margin={margin}");
         }
     }
@@ -746,9 +801,8 @@ mod tests {
         // probing every list must hit the corrupted block
         let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
                                  ..Default::default() };
-        let err = disk
-            .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
-            .unwrap_err();
+        let err =
+            dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap_err();
         assert!(format!("{err:#}").contains("crc mismatch"),
                 "want a crc error, got: {err:#}");
     }
@@ -772,8 +826,7 @@ mod tests {
         let ks = vec![8usize; qs.len()];
         let cfg = SearchConfig { rerank_l: 30, k: 8, nprobe: 3,
                                  ..Default::default() };
-        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                       &cfg);
+        let want = ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
         std::thread::scope(|s| {
             for t in 0..4 {
                 let (disk, want, qs, ks, cfg, pq) =
@@ -781,15 +834,115 @@ mod tests {
                 s.spawn(move || {
                     let exec = Executor::Inline;
                     for round in 0..6 {
-                        let got = disk
-                            .search_batch_on(pq, &exec, qs, ks, cfg)
-                            .unwrap();
+                        let got =
+                            dsk(disk, pq, &exec, qs, ks, cfg).unwrap();
                         assert_eq!(&got, want,
                                    "thread {t} round {round} diverged");
                     }
                 });
             }
         });
+    }
+
+    #[test]
+    fn filtered_disk_search_matches_filtered_ram_and_oracle() {
+        use crate::index::Filter;
+        // Tags ride the archive: filtered disk search must equal the
+        // filtered RAM search bit-for-bit AND, at full probe + full
+        // rerank, the unfiltered full ranking post-filtered to the
+        // admitted ids — at every scan precision.
+        let (train, base, pq) = setup16(2000);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 10, 8, 8);
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let n = ivf.n();
+        ivf.set_tags((0..n as u64).map(|i| i % 2).collect());
+        ivf.ensure_packed();
+        let dir = TempDir::new("diskivf").unwrap();
+        let path = save_ram(&ivf, &dir, "f.blocks");
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 5);
+        let qs = qrefs(&queries);
+        let ks = vec![10usize; qs.len()];
+
+        for prec in [ScanPrecision::F32, ScanPrecision::U16,
+                     ScanPrecision::U8, ScanPrecision::U4] {
+            let cfg = SearchConfig { rerank_l: n, k: 10, nprobe: 0,
+                                     scan_precision: prec,
+                                     filter: Some(Filter::TagEq(1)),
+                                     ..Default::default() };
+            let oracle_cfg = SearchConfig { filter: None, ..cfg };
+            let full = ram(&ivf, &pq, &Executor::Inline, &qs,
+                           &vec![n; qs.len()], &oracle_cfg);
+            let filtered_ram =
+                ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
+            // small budget: the second round mixes cache hits, misses
+            // and evictions under the same predicate
+            let disk = DiskIvfIndex::open(&path, 16 << 10).unwrap();
+            for round in 0..2 {
+                let filtered_disk =
+                    dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg)
+                        .unwrap();
+                assert_eq!(filtered_disk, filtered_ram,
+                           "{prec:?} round {round}: disk != RAM");
+            }
+            for (qi, got) in filtered_ram.iter().enumerate() {
+                let want: Vec<u32> = full[qi]
+                    .iter()
+                    .copied()
+                    .filter(|id| id % 2 == 1)
+                    .take(10)
+                    .collect();
+                assert_eq!(got, &want, "{prec:?} query {qi}: != oracle");
+            }
+        }
+
+        // partial probe: still bit-identical to filtered RAM, every
+        // hit admitted
+        let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 3,
+                                 filter: Some(Filter::TagEq(1)),
+                                 ..Default::default() };
+        let disk = DiskIvfIndex::open(&path, 1 << 20).unwrap();
+        let got = dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
+        assert_eq!(got, ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg));
+        for r in &got {
+            assert!(!r.is_empty(), "partial probe still finds odd rows");
+            assert!(r.iter().all(|id| id % 2 == 1), "inadmissible id");
+        }
+
+        // selectivity 0: empty results, never a panic
+        let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 0,
+                                 filter: Some(Filter::TagEq(9)),
+                                 ..Default::default() };
+        let got = dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
+        assert!(got.iter().all(Vec::is_empty), "tag 9 admits nothing");
+    }
+
+    #[test]
+    fn untagged_archive_admits_nothing_under_a_filter() {
+        use crate::index::Filter;
+        // Strict frozen-index semantics survive the disk round-trip: an
+        // archive written without a tag column (has_tags absent/false)
+        // admits no rows under any predicate, including TagEq(0).
+        let (train, base, pq) = setup16(900);
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 5, 9, 8);
+        let ivf = IvfIndex::build(&pq, &base, coarse, false);
+        let dir = TempDir::new("diskivf").unwrap();
+        let disk =
+            DiskIvfIndex::open(&save_ram(&ivf, &dir, "u.blocks"), 1 << 20)
+                .unwrap();
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 3);
+        let qs = qrefs(&queries);
+        let ks = vec![5usize; qs.len()];
+        let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
+                                 filter: Some(Filter::TagEq(0)),
+                                 ..Default::default() };
+        let got = dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
+        assert!(got.iter().all(Vec::is_empty),
+                "no tag column ⇒ no admitted rows");
+        // and without a predicate the same archive serves normally
+        let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
+                                 ..Default::default() };
+        let got = dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
+        assert!(got.iter().all(|r| r.len() == 5));
     }
 
     #[test]
@@ -805,12 +958,10 @@ mod tests {
         let ks = vec![5usize; qs.len()];
         let cfg = SearchConfig { rerank_l: 20, k: 5, nprobe: 0,
                                  ..Default::default() };
-        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                       &cfg);
+        let want = ram(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
         for _ in 0..3 {
-            let got = disk
-                .search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg)
-                .unwrap();
+            let got =
+                dsk(&disk, &pq, &Executor::Inline, &qs, &ks, &cfg).unwrap();
             assert_eq!(got, want);
             assert_eq!(disk.cache_bytes_resident(), 0,
                        "1-byte budget must never admit a list");

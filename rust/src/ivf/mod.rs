@@ -42,10 +42,9 @@ pub mod search;
 
 use std::sync::Arc;
 
-use crate::config::SearchConfig;
 use crate::data::Dataset;
 use crate::exec::Executor;
-use crate::index::{CompressedIndex, SearchEngine};
+use crate::index::{CompressedIndex, SearchRequest};
 use crate::quant::Quantizer;
 
 pub use coarse::CoarseQuantizer;
@@ -158,6 +157,21 @@ impl IvfIndex {
     pub fn ensure_sketches(&mut self, quant: &dyn Quantizer) -> bool {
         self.codes.ensure_sketches(quant)
     }
+
+    /// Attach the metadata tag column, given in **original-id order**
+    /// (`tags_by_id[id]` tags database row `id`).  Tags are permuted
+    /// through `remap` into the stored per-list row order so the filter
+    /// bitmap lines up with the code matrix the scans walk
+    /// (rust/DESIGN.md §13).
+    pub fn set_tags(&mut self, tags_by_id: Vec<u64>) {
+        assert_eq!(tags_by_id.len(), self.codes.n, "one tag per row");
+        let row_tags: Vec<u64> = self
+            .remap
+            .iter()
+            .map(|&id| tags_by_id[id as usize])
+            .collect();
+        self.codes.set_tags(row_tags);
+    }
 }
 
 /// The serving coordinator's index dispatch: one enum, three index
@@ -195,30 +209,29 @@ impl IndexBackend {
         }
     }
 
-    /// Backend-agnostic batched two-stage search with a per-query `k` —
-    /// the coordinator's entry point.  The flat arm reproduces the
-    /// classic `SearchEngine` path (one `lut_batch`, one
-    /// `QueryBatch × IndexShard` plan); the IVF arm plans per-probed-list
+    /// Backend-agnostic batched two-stage search on one
+    /// [`SearchRequest`] — the coordinator's entry point.  Every arm
+    /// consumes the same request shape (per-query `k`s plus the
+    /// [`crate::index::QuerySpec`] scan axes); the flat arm reproduces
+    /// the classic `SearchEngine` path, the IVF arms plan per-probed-list
     /// tasks through the same executor.
     pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
-                           queries: &[&[f32]], ks: &[usize],
-                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+                           queries: &[&[f32]], req: &SearchRequest)
+                           -> Vec<Vec<u32>> {
         match self {
-            IndexBackend::Flat(ix) => {
-                let luts = quant.lut_batch(queries);
-                SearchEngine::new(quant, ix, *cfg)
-                    .search_batch_with_luts_on(exec, queries, &luts, ks)
-            }
-            IndexBackend::Ivf(ix) => {
-                ix.search_batch_on(quant, exec, queries, ks, cfg)
-            }
+            IndexBackend::Flat(ix) => ix
+                .search_batch_on(quant, exec, queries, req)
+                .expect("in-memory flat search cannot fail"),
+            IndexBackend::Ivf(ix) => ix
+                .search_batch_on(quant, exec, queries, req)
+                .expect("in-memory IVF search cannot fail"),
             // the enum's search contract is infallible; a disk-tier
             // I/O or CRC failure is unrecoverable mid-request here
             IndexBackend::DiskIvf(ix) => ix
-                .search_batch_on(quant, exec, queries, ks, cfg)
+                .search_batch_on(quant, exec, queries, req)
                 .expect("disk-ivf block fetch failed"),
             IndexBackend::Streaming(ix) => {
-                ix.search_batch_on(quant, exec, queries, ks, cfg)
+                ix.search_batch_on(quant, exec, queries, req)
             }
         }
     }

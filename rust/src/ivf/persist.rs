@@ -127,10 +127,13 @@ mod tests {
             (0..queries.len()).map(|qi| queries.row(qi)).collect();
         let cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 3,
                                  ..Default::default() };
-        let a = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
-                                    &[10; 5], &cfg);
-        let b = back.search_batch_on(&pq, &Executor::Inline, &qs,
-                                     &[10; 5], &cfg);
+        let req = crate::index::SearchRequest::from_config(&cfg, vec![10; 5]);
+        let a = ivf
+            .search_batch_on(&pq, &Executor::Inline, &qs, &req)
+            .unwrap();
+        let b = back
+            .search_batch_on(&pq, &Executor::Inline, &qs, &req)
+            .unwrap();
         assert_eq!(a, b, "loaded index must search identically");
     }
 

@@ -33,10 +33,13 @@
 
 use std::collections::HashMap;
 
+use anyhow::Result;
+
 use crate::config::SearchConfig;
-use crate::exec::{shard_ranges_in, Executor, IndexedScanTask, PrefilterPlan,
+use crate::exec::{shard_ranges_in, Executor, PrefilterPlan, ScanSpec,
                   ScanTask};
 use crate::index::scan::merge_topk;
+use crate::index::{FilterPlan, SearchRequest};
 use crate::linalg::{sq_l2, TopK};
 use crate::obs;
 use crate::quant::{Lut, Quantizer, SketchPlanes};
@@ -51,24 +54,32 @@ impl IvfIndex {
     /// (mirrors `SearchEngine::search`).
     pub fn search(&self, quant: &dyn Quantizer, q: &[f32],
                   cfg: &SearchConfig) -> Vec<u32> {
-        self.search_batch_on(quant, &Executor::Inline, &[q], &[cfg.k], cfg)
+        let req = SearchRequest::from_config(cfg, vec![cfg.k]);
+        self.search_batch_on(quant, &Executor::Inline, &[q], &req)
+            .expect("in-memory IVF search cannot fail")
             .pop()
             .expect("one query in, one result out")
     }
 
     /// Batched two-stage `nprobe` search with per-query `k`.
     ///
-    /// `cfg.nprobe == 0` (or ≥ `num_lists`) probes every list — the
-    /// flat-equivalent degenerate case.  `cfg.exhaustive_rerank` is a
+    /// `req.nprobe == 0` (or ≥ `num_lists`) probes every list — the
+    /// flat-equivalent degenerate case.  `exhaustive_rerank` is a
     /// flat-index diagnostic and is treated as the normal two-stage path
     /// here (reranking rows outside the probed lists would defeat the
-    /// point of probing).
+    /// point of probing).  A metadata predicate
+    /// (`QuerySpec::filter`) compiles to one row bitmap over the stored
+    /// (list-contiguous) layout and is applied inside the per-list scan
+    /// kernels, so only admitted rows reach the cross-list merge and
+    /// rerank.
     pub fn search_batch_on(&self, quant: &dyn Quantizer, exec: &Executor,
-                           queries: &[&[f32]], ks: &[usize],
-                           cfg: &SearchConfig) -> Vec<Vec<u32>> {
+                           queries: &[&[f32]], req: &SearchRequest)
+                           -> Result<Vec<Vec<u32>>> {
+        let cfg = req.to_search_config();
+        let ks: &[usize] = &req.ks;
         assert_eq!(queries.len(), ks.len(), "one k per query");
         if queries.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let nl = self.num_lists();
         let nprobe = if cfg.nprobe == 0 { nl } else { cfg.nprobe.min(nl) };
@@ -147,7 +158,9 @@ impl IvfIndex {
             for (lo, hi) in
                 shard_ranges_in(self.offsets[l], self.offsets[l + 1], es)
             {
-                tasks.push(ScanTask { slot, lut: slot_lut[slot], lo, hi });
+                tasks.push(ScanTask {
+                    index: 0, slot, lut: slot_lut[slot], lo, hi,
+                });
             }
         }
         // optional 1-bit pre-filter (DESIGN.md §9): non-residual only —
@@ -169,20 +182,16 @@ impl IvfIndex {
         } else {
             None
         };
-        let parts = if pre.is_some() {
-            let mapped: Vec<IndexedScanTask> = tasks
-                .iter()
-                .map(|t| IndexedScanTask {
-                    index: 0, slot: t.slot, lut: t.lut, lo: t.lo, hi: t.hi,
-                })
-                .collect();
-            exec.run_scan_tasks_multi_pre(&luts, &[&self.codes], &slot_ks,
-                                          &mapped, cfg.scan_precision,
-                                          pre.as_ref())
-        } else {
-            exec.run_scan_tasks_prec(&luts, &self.codes, &slot_ks, &tasks,
-                                     cfg.scan_precision)
+        // metadata predicate → one bitmap over the stored row layout
+        let fplan = cfg.filter
+            .map(|f| FilterPlan::compile(&f, &[&self.codes]));
+        let spec = ScanSpec {
+            precision: cfg.scan_precision,
+            prefilter: pre.as_ref(),
+            filter: fplan.as_ref(),
         };
+        let parts = exec.run_scan_tasks(&luts, &[&self.codes], &slot_ks,
+                                        &tasks, &spec);
 
         // cross-list reduce per query: remap each slot's winners to
         // original ids and fold the per-slot lists through the shared
@@ -223,13 +232,13 @@ impl IvfIndex {
             .collect();
 
         if !do_rerank {
-            return cands
+            return Ok(cands
                 .iter()
                 .zip(ks)
                 .map(|(c, &k)| c.iter().take(k).map(|p| p.1).collect())
-                .collect();
+                .collect());
         }
-        self.rerank_batch(quant, queries, &cands, ks)
+        Ok(self.rerank_batch(quant, queries, &cands, ks))
     }
 
     /// Stage 2: gather every query's candidate codes into one contiguous
@@ -318,6 +327,15 @@ mod tests {
         (0..d.len()).map(|qi| d.row(qi)).collect()
     }
 
+    /// Positional shim over the request API so the property grids below
+    /// stay readable.
+    fn batch(ivf: &IvfIndex, quant: &dyn Quantizer, exec: &Executor,
+             qs: &[&[f32]], ks: &[usize], cfg: &SearchConfig)
+             -> Vec<Vec<u32>> {
+        let req = SearchRequest::from_config(cfg, ks.to_vec());
+        ivf.search_batch_on(quant, exec, qs, &req).unwrap()
+    }
+
     #[test]
     fn partition_layout_invariants() {
         let (train, base, pq) = setup(3000);
@@ -377,7 +395,7 @@ mod tests {
                 let want = SearchEngine::new(&pq, &flat, cfg)
                     .search_batch_on(&exec, &qs);
                 let ks = vec![cfg.k; qs.len()];
-                let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+                let got = batch(&ivf, &pq, &exec, &qs, &ks, &cfg);
                 if got == want {
                     Ok(())
                 } else {
@@ -405,9 +423,9 @@ mod tests {
                                  num_threads: 2, shard_rows: 128,
                                  ..Default::default() };
         let exec = Executor::new(2);
-        let want = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        let want = batch(&ivf, &pq, &exec, &qs, &ks, &cfg);
         let (trace, root) = crate::obs::Trace::begin("query");
-        let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+        let got = batch(&ivf, &pq, &exec, &qs, &ks, &cfg);
         drop(root);
         assert_eq!(got, want, "tracing changed IVF results");
         let probed = trace.rows("route");
@@ -437,13 +455,11 @@ mod tests {
         let ks = vec![10usize; qs.len()];
         let base_cfg = SearchConfig { rerank_l: 1500, k: 10, nprobe: 0,
                                       ..Default::default() };
-        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                       &base_cfg);
+        let want = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &base_cfg);
         ivf.ensure_packed();
         for precision in [ScanPrecision::U16, ScanPrecision::U8] {
             let cfg = SearchConfig { scan_precision: precision, ..base_cfg };
-            let got = ivf.search_batch_on(&pq, &Executor::new(2), &qs, &ks,
-                                          &cfg);
+            let got = batch(&ivf, &pq, &Executor::new(2), &qs, &ks, &cfg);
             assert_eq!(got, want, "{precision:?}");
         }
     }
@@ -464,10 +480,8 @@ mod tests {
                                      ..Default::default() };
         let u16_cfg = SearchConfig { scan_precision: ScanPrecision::U16,
                                      ..f32_cfg };
-        let a = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                    &f32_cfg);
-        let b = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                    &u16_cfg);
+        let a = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &f32_cfg);
+        let b = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &u16_cfg);
         let overlap: usize = a
             .iter()
             .zip(&b)
@@ -491,12 +505,11 @@ mod tests {
         let ks = vec![10usize; qs.len()];
         let base_cfg = SearchConfig { rerank_l: 50, k: 10, nprobe: 4,
                                       ..Default::default() };
-        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                       &base_cfg);
+        let want = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &base_cfg);
         let cfg = SearchConfig { prefilter: true, prefilter_margin: 10_000,
                                  ..base_cfg };
         for exec in [Executor::Inline, Executor::new(3)] {
-            let got = ivf.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+            let got = batch(&ivf, &pq, &exec, &qs, &ks, &cfg);
             assert_eq!(got, want);
         }
     }
@@ -516,11 +529,10 @@ mod tests {
         let ks = vec![8usize; qs.len()];
         let base_cfg = SearchConfig { rerank_l: 40, k: 8, nprobe: 3,
                                       ..Default::default() };
-        let want = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks,
-                                       &base_cfg);
+        let want = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &base_cfg);
         let cfg = SearchConfig { prefilter: true, prefilter_margin: 1,
                                  ..base_cfg };
-        let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let got = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert_eq!(got, want);
     }
 
@@ -535,10 +547,9 @@ mod tests {
                                      ..Default::default() };
         let ks = vec![10usize; qs.len()];
         cfg.nprobe = 0;
-        let all = ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let all = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
         cfg.nprobe = ivf.num_lists();
-        let explicit =
-            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+        let explicit = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
         assert_eq!(all, explicit);
     }
 
@@ -601,8 +612,7 @@ mod tests {
         let mut prev_overlap = 0usize;
         for nprobe in [1usize, 4, 16] {
             cfg.nprobe = nprobe;
-            let got =
-                ivf.search_batch_on(&pq, &Executor::Inline, &qs, &ks, &cfg);
+            let got = batch(&ivf, &pq, &Executor::Inline, &qs, &ks, &cfg);
             let overlap: usize = got
                 .iter()
                 .zip(&want)
@@ -637,8 +647,7 @@ mod tests {
         let qs = qrefs(&queries);
         let cfg = SearchConfig { rerank_l: 30, k: 5, nprobe: 4,
                                  ..Default::default() };
-        let got = ivf.search_batch_on(&pq, &Executor::new(2), &qs,
-                                      &[5, 5, 5], &cfg);
+        let got = batch(&ivf, &pq, &Executor::new(2), &qs, &[5, 5, 5], &cfg);
         for r in &got {
             assert_eq!(r.len(), 5);
         }
@@ -656,8 +665,7 @@ mod tests {
         for nprobe in [1usize, 5, 32] {
             let cfg = SearchConfig { rerank_l: 10, k: 3, nprobe,
                                      ..Default::default() };
-            let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
-                                          &[3, 3], &cfg);
+            let got = batch(&ivf, &pq, &Executor::Inline, &qs, &[3, 3], &cfg);
             for r in &got {
                 assert!(r.len() <= 3);
                 for &id in r {
@@ -681,9 +689,8 @@ mod tests {
                                  num_threads: 3, shard_rows: 64,
                                  ..Default::default() };
         let pool = Executor::new(3);
-        let got = ivf.search_batch_on(&pq, &pool, &qs, &[8; 6], &cfg);
-        let want =
-            ivf.search_batch_on(&pq, &Executor::Inline, &qs, &[8; 6], &cfg);
+        let got = batch(&ivf, &pq, &pool, &qs, &[8; 6], &cfg);
+        let want = batch(&ivf, &pq, &Executor::Inline, &qs, &[8; 6], &cfg);
         assert_eq!(got, want, "pool and inline must agree");
         for r in &got[1..] {
             assert_eq!(r, &got[0], "identical queries, identical results");
@@ -700,8 +707,7 @@ mod tests {
         let qs = qrefs(&queries);
         let cfg = SearchConfig { rerank_l: 500, k: 100, nprobe: 0,
                                  ..Default::default() };
-        let got = ivf.search_batch_on(&pq, &Executor::Inline, &qs,
-                                      &[100, 100], &cfg);
+        let got = batch(&ivf, &pq, &Executor::Inline, &qs, &[100, 100], &cfg);
         for r in &got {
             assert_eq!(r.len(), 12, "k > n returns all rows");
             let mut ids = r.clone();
@@ -709,5 +715,88 @@ mod tests {
             ids.dedup();
             assert_eq!(ids.len(), 12, "no duplicate ids");
         }
+    }
+
+    #[test]
+    fn filtered_ivf_search_matches_post_filter_oracle() {
+        // the filtered-search contract on IVF (rust/DESIGN.md §13): at
+        // nprobe = all with full rerank, filtered search must equal the
+        // unfiltered full ranking post-filtered to admitted ids — per
+        // scan precision, and through the residual path (tags ride the
+        // remap permutation, so the bitmap must line up with stored rows)
+        use crate::config::ScanPrecision;
+        use crate::index::Filter;
+        let (train, base, pq) = setup(2000);
+        let n = 2000usize;
+        let coarse = CoarseQuantizer::train(&train.data, train.dim, 10, 3, 8);
+        let queries = Generator::new(Family::SiftLike, 55).generate(2, 4);
+        let qs = qrefs(&queries);
+        for residual in [false, true] {
+            let mut ivf =
+                IvfIndex::build(&pq, &base, coarse.clone(), residual);
+            ivf.set_tags((0..n as u64).map(|i| i % 2).collect());
+            ivf.ensure_packed();
+            // oracle: unfiltered full ranking, post-filtered to odd ids
+            let full_cfg = SearchConfig { rerank_l: n, k: n, nprobe: 0,
+                                          ..Default::default() };
+            let full = batch(&ivf, &pq, &Executor::Inline, &qs,
+                             &vec![n; qs.len()], &full_cfg);
+            let oracle: Vec<Vec<u32>> = full
+                .iter()
+                .map(|r| {
+                    r.iter().copied().filter(|id| id % 2 == 1).take(10)
+                        .collect()
+                })
+                .collect();
+            let precisions: &[ScanPrecision] = if residual {
+                &[ScanPrecision::F32, ScanPrecision::U16]
+            } else {
+                &[ScanPrecision::F32, ScanPrecision::U16,
+                  ScanPrecision::U8, ScanPrecision::U4]
+            };
+            for &precision in precisions {
+                let cfg = SearchConfig {
+                    rerank_l: n, k: 10, nprobe: 0,
+                    scan_precision: precision,
+                    filter: Some(Filter::TagEq(1)),
+                    ..Default::default()
+                };
+                let got = batch(&ivf, &pq, &Executor::new(2), &qs,
+                                &vec![10; qs.len()], &cfg);
+                assert_eq!(got, oracle,
+                           "residual={residual} {precision:?}");
+            }
+            // partial probing keeps the predicate: every id admitted
+            let part_cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 3,
+                                          filter: Some(Filter::TagEq(1)),
+                                          ..Default::default() };
+            let part = batch(&ivf, &pq, &Executor::Inline, &qs,
+                             &vec![10; qs.len()], &part_cfg);
+            for r in &part {
+                assert!(!r.is_empty(), "half the rows are admitted");
+                assert!(r.iter().all(|id| id % 2 == 1),
+                        "filtered result leaked an even id: {r:?}");
+            }
+            // selectivity 0: empty results, not a panic
+            let none_cfg = SearchConfig { rerank_l: 40, k: 10, nprobe: 0,
+                                          filter: Some(Filter::TagEq(9)),
+                                          ..Default::default() };
+            let none = batch(&ivf, &pq, &Executor::Inline, &qs,
+                             &vec![10; qs.len()], &none_cfg);
+            assert!(none.iter().all(Vec::is_empty), "tag 9 admits nothing");
+        }
+        // selectivity 1: a uniform tag column is bit-identical to the
+        // unfiltered search
+        let mut ivf = IvfIndex::build(&pq, &base, coarse, false);
+        ivf.set_tags(vec![5u64; n]);
+        let plain_cfg = SearchConfig { rerank_l: 50, k: 10, nprobe: 4,
+                                       ..Default::default() };
+        let want = batch(&ivf, &pq, &Executor::Inline, &qs,
+                         &vec![10; qs.len()], &plain_cfg);
+        let all_cfg = SearchConfig { filter: Some(Filter::TagEq(5)),
+                                     ..plain_cfg };
+        let got = batch(&ivf, &pq, &Executor::Inline, &qs,
+                        &vec![10; qs.len()], &all_cfg);
+        assert_eq!(got, want, "full-selectivity filter must be inert");
     }
 }

@@ -157,6 +157,10 @@ pub fn base_config(f: &Flags) -> Result<AppConfig> {
         anyhow::ensure!(m > 0, "--prefilter-margin must be positive");
         cfg.search.prefilter_margin = m;
     }
+    if let Some(spec) = f.get("filter") {
+        cfg.search.filter = Some(unq::index::Filter::parse(spec)
+            .map_err(|e| anyhow::anyhow!("--filter: {e}"))?);
+    }
     if f.has("residual") {
         cfg.ivf.residual = true;
     }
@@ -225,12 +229,13 @@ USAGE:
   unq gt        [--datasets a,b] [--r N]
   unq train     --quantizer Q --dataset D [--bytes B]
   unq eval      --quantizer Q --dataset D [--bytes B] [--no-rerank] [--exhaustive]
+                [--filter-selectivity]
   unq ivf-sweep --quantizer Q --dataset D [--nprobes 1,4,16] [--lists N]
   unq precision-sweep --quantizer Q --dataset D [--precisions f32,u16,u8,u4]
   unq ingest    --quantizer Q --dataset D [--batch N] [--delete-pct F]
                 [--resume]
   unq search    --quantizer Q --dataset D [--query I] [--queries N] [--k K]
-                [--explain]
+                [--explain] [--filter tag=V]
   unq stats     [--json] [--schema FILE]
   unq tables    [--table 1|2|3|4|5|mem|timings|all]
   unq serve     --dataset D [--quantizer Q] [--queries N]
@@ -239,7 +244,7 @@ USAGE:
   unq loadgen   --addr ADDR [--clients N] [--duration-secs N]
                 [--mode closed|open] [--rate QPS] [--insert-pct P]
                 [--k K] [--tenant T] [--seed S] [--connect-retries N]
-                [--report FILE]
+                [--report FILE] [--filter tag=V]
   unq artifacts
 
 Execution:  [--threads N] [--shard-rows R] size the batch scan executor
@@ -252,7 +257,14 @@ Execution:  [--threads N] [--shard-rows R] size the batch scan executor
             [--prefilter] [--prefilter-margin N] enable the 1-bit sketch
             pre-filter that prunes to k·N candidates by Hamming distance
             before exact scoring (env UNQ_PREFILTER /
-            UNQ_PREFILTER_MARGIN; recall-safe over-fetch, §9)
+            UNQ_PREFILTER_MARGIN; recall-safe over-fetch, §9);
+            [--filter tag=V] restricts search to rows whose metadata tag
+            equals V, pruned inside the scan kernels before selection
+            (env UNQ_FILTER; strict semantics: indexes without a tag
+            column admit no rows, streaming inserts default to tag 0 —
+            rust/DESIGN.md §13).  `unq eval --filter-selectivity` sweeps
+            the filtered-search overhead at 100/50/10/1% admitted rows
+            and reports the filter.* pruning counters
 Index:      [--backend flat|ivf|disk-ivf] [--lists N] [--nprobe P]
             [--residual] pick the index organization for eval/serve (env
             UNQ_BACKEND / UNQ_LISTS / UNQ_NPROBE / UNQ_RESIDUAL; nprobe
@@ -360,6 +372,23 @@ fn cmd_eval(f: &Flags) -> Result<()> {
     search.shard_rows = cfg.search.shard_rows;
     search.nprobe = cfg.search.nprobe;
     search.scan_precision = cfg.search.scan_precision;
+    search.filter = cfg.search.filter;
+    if f.has("filter-selectivity") {
+        let mut exp = exp;
+        println!(
+            "[eval] filtered-search selectivity sweep: {} on {} \
+             (flat, n={}, tags id % m, predicate tag=0)",
+            exp.quant.name(), cfg.dataset, exp.index.n
+        );
+        println!("{:>8} {:>12} {:>14} {:>14} {:>12}",
+                 "m", "admitted", "rows_pruned", "bitmaps", "ms/query");
+        for pt in exp.run_filter_selectivity(search, &[1, 2, 10, 100]) {
+            println!("{:>8} {:>11.1}% {:>14} {:>14} {:>12.3}",
+                     pt.modulus, 100.0 * pt.selectivity, pt.rows_pruned,
+                     pt.bitmaps_built, 1e3 * pt.secs_per_query);
+        }
+        return Ok(());
+    }
     if cfg.ivf.backend == IndexBackendKind::Ivf {
         let ivf = harness::build_or_load_ivf(
             &cfg, exp.quant.as_ref(), &exp.splits.train, &exp.splits.base,
@@ -656,8 +685,9 @@ fn cmd_ingest(f: &Flags) -> Result<()> {
     let qs: Vec<&[f32]> = (0..nq).map(|qi| splits.query.row(qi)).collect();
     let ks = vec![search.k; nq];
     let exec = unq::exec::Executor::new(search.num_threads);
+    let req = unq::index::SearchRequest::from_config(&search, ks);
     let t2 = std::time::Instant::now();
-    let got = ix.search_batch_on(quant.as_ref(), &exec, &qs, &ks, &search);
+    let got = ix.search_batch_on(quant.as_ref(), &exec, &qs, &req);
     let q_secs = t2.elapsed().as_secs_f64();
     let want =
         SearchEngine::new(quant.as_ref(), &flat, search).search_batch(&qs);
@@ -697,11 +727,16 @@ fn cmd_search(f: &Flags) -> Result<()> {
     search.shard_rows = cfg.search.shard_rows;
     search.nprobe = cfg.search.nprobe;
     search.scan_precision = cfg.search.scan_precision;
+    search.filter = cfg.search.filter;
     if let Some(k) = f.get("k") {
         search.k = k.parse().context("--k")?;
     }
     let explain = f.has("explain") || cfg.search.trace;
     search.trace = explain;
+    if let Some(fl) = search.filter {
+        println!("[search] filter: {fl} (strict — indexes without a \
+                  tag column admit no rows)");
+    }
 
     let qi: usize =
         f.get("query").map(|v| v.parse()).transpose()?.unwrap_or(0);
@@ -724,16 +759,16 @@ fn cmd_search(f: &Flags) -> Result<()> {
             let ivf = harness::build_or_load_ivf(
                 &cfg, exp.quant.as_ref(), &exp.splits.train,
                 &exp.splits.base, variant)?;
-            let ks = vec![search.k; queries.len()];
-            Ok(ivf.search_batch_on(exp.quant.as_ref(), &exec, &queries, &ks,
-                                   &search))
+            let req = unq::index::SearchRequest::from_config(
+                &search, vec![search.k; queries.len()]);
+            ivf.search_batch_on(exp.quant.as_ref(), &exec, &queries, &req)
         } else if cfg.ivf.backend == IndexBackendKind::DiskIvf {
             let disk = harness::build_or_load_disk_ivf(
                 &cfg, exp.quant.as_ref(), &exp.splits.train,
                 &exp.splits.base, variant)?;
-            let ks = vec![search.k; queries.len()];
-            disk.search_batch_on(exp.quant.as_ref(), &exec, &queries, &ks,
-                                 &search)
+            let req = unq::index::SearchRequest::from_config(
+                &search, vec![search.k; queries.len()]);
+            disk.search_batch_on(exp.quant.as_ref(), &exec, &queries, &req)
         } else {
             let engine = unq::index::SearchEngine::new(exp.quant.as_ref(),
                                                        &exp.index, search);
@@ -897,6 +932,8 @@ fn cmd_loadgen(f: &Flags) -> Result<()> {
     if let Some(r) = f.get("connect-retries") {
         lg.connect_retries = r.parse().context("--connect-retries")?;
     }
+    // --filter rides every generated SEARCH as the wire predicate TLV
+    lg.filter = cfg.search.filter;
     let report = loadgen::run(&lg)?;
     report.print();
     if let Some(path) = f.get("report") {

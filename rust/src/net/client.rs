@@ -90,8 +90,18 @@ impl Client {
     /// for the bail-on-error convenience.
     pub fn search(&mut self, tenant: &str, query: &[f32], k: u32)
                   -> Result<NetResponse> {
+        self.search_filtered(tenant, query, k, None)
+    }
+
+    /// Search under an optional metadata predicate: `Some(filter)`
+    /// rides the SEARCH frame as the trailing filter TLV, `None`
+    /// produces the exact pre-predicate frame bytes.
+    pub fn search_filtered(&mut self, tenant: &str, query: &[f32],
+                           k: u32,
+                           filter: Option<crate::index::Filter>)
+                           -> Result<NetResponse> {
         self.round_trip(RequestBody::Search {
-            tenant: tenant.to_string(), k, query: query.to_vec(),
+            tenant: tenant.to_string(), k, query: query.to_vec(), filter,
         })
     }
 

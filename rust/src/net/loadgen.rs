@@ -68,6 +68,9 @@ pub struct LoadgenConfig {
     /// dimensionality, which must match the served index
     pub family: Family,
     pub tenant: String,
+    /// optional metadata predicate attached to every generated SEARCH
+    /// (inserts are unaffected); `None` = plain pre-predicate frames
+    pub filter: Option<crate::index::Filter>,
     pub seed: u64,
     pub connect_retries: usize,
 }
@@ -83,6 +86,7 @@ impl Default for LoadgenConfig {
             k: 10,
             family: Family::SiftLike,
             tenant: String::new(),
+            filter: None,
             seed: 42,
             connect_retries: 25,
         }
@@ -254,6 +258,7 @@ fn pick_body(cfg: &LoadgenConfig, rng: &mut SplitMix64, pool: &Dataset)
             tenant: cfg.tenant.clone(),
             k: cfg.k,
             query: pool.row(qi).to_vec(),
+            filter: cfg.filter,
         }
     }
 }

@@ -18,6 +18,7 @@
 
 use std::io::Read;
 
+use crate::index::Filter;
 use crate::store::wal::crc32;
 
 /// Protocol version carried in every payload.  Bump on any
@@ -36,6 +37,12 @@ pub const MAX_SEARCH_K: u32 = 1 << 16;
 
 /// Payload prelude bytes (`opcode` + `version` + `request_id`).
 pub const PAYLOAD_PRELUDE: usize = 10;
+
+/// SEARCH trailing-TLV tag: a `tag = value` metadata predicate,
+/// `value:u64le` (PROTOCOL.md §"Opcodes").  The TLV is optional and
+/// trailing — a SEARCH body without it is byte-identical to the
+/// pre-predicate protocol, so old clients keep working unchanged.
+pub const FILTER_TAG_EQ: u8 = 0x01;
 
 /// Every opcode on the wire.  Requests have the top bit clear,
 /// responses have it set; `0xFF` is the one error shape shared by all
@@ -161,8 +168,11 @@ impl ErrorCode {
 #[derive(Clone, Debug, PartialEq)]
 pub enum RequestBody {
     /// Top-k neighbor search; `query.len()` must equal the serving
-    /// quantizer's dimensionality.
-    Search { tenant: String, k: u32, query: Vec<f32> },
+    /// quantizer's dimensionality.  `filter` is the optional metadata
+    /// predicate carried as a trailing TLV (absent on the wire ⇒
+    /// `None` ⇒ scan everything).
+    Search { tenant: String, k: u32, query: Vec<f32>,
+             filter: Option<Filter> },
     /// Row-major vectors to encode-and-insert (streaming backends).
     Insert { tenant: String, rows: u32, dim: u32, vectors: Vec<f32> },
     /// External ids to tombstone.
@@ -333,12 +343,18 @@ fn payload_prelude(op: Opcode, id: u64) -> Vec<u8> {
 pub fn encode_request(req: &NetRequest) -> Vec<u8> {
     let mut p;
     match &req.body {
-        RequestBody::Search { tenant, k, query } => {
+        RequestBody::Search { tenant, k, query, filter } => {
             p = payload_prelude(Opcode::Search, req.id);
             put_str(&mut p, tenant);
             p.extend_from_slice(&k.to_le_bytes());
             p.extend_from_slice(&(query.len() as u32).to_le_bytes());
             for v in query {
+                p.extend_from_slice(&v.to_le_bytes());
+            }
+            // optional trailing TLV: absent = the exact pre-predicate
+            // byte layout (the compatibility pin in tests below)
+            if let Some(Filter::TagEq(v)) = filter {
+                p.push(FILTER_TAG_EQ);
                 p.extend_from_slice(&v.to_le_bytes());
             }
         }
@@ -522,7 +538,19 @@ pub fn decode_request(payload: &[u8]) -> Result<NetRequest, ProtoError> {
             let k = c.u32("search k")?;
             let dim = c.u32("search dim")? as usize;
             let query = c.f32s(dim, "search query")?;
-            RequestBody::Search { tenant, k, query }
+            let filter = if c.p < c.b.len() {
+                match c.u8("search filter tag")? {
+                    FILTER_TAG_EQ => Some(Filter::TagEq(
+                        c.u64("search filter value")?)),
+                    _ => {
+                        return Err(ProtoError::Malformed(
+                            "search filter tag"))
+                    }
+                }
+            } else {
+                None
+            };
+            RequestBody::Search { tenant, k, query, filter }
         }
         Opcode::Insert => {
             let tenant = c.str16("insert tenant")?;
@@ -604,7 +632,11 @@ mod tests {
         let reqs = vec![
             NetRequest { id: 7, body: RequestBody::Search {
                 tenant: "default".into(), k: 10,
-                query: vec![1.0, -2.5, 0.0] } },
+                query: vec![1.0, -2.5, 0.0], filter: None } },
+            NetRequest { id: 11, body: RequestBody::Search {
+                tenant: "default".into(), k: 3,
+                query: vec![0.25, 4.0],
+                filter: Some(Filter::TagEq(u64::MAX)) } },
             NetRequest { id: 8, body: RequestBody::Insert {
                 tenant: "alice".into(), rows: 2, dim: 3,
                 vectors: vec![0.5; 6] } },
@@ -709,17 +741,55 @@ mod tests {
     #[test]
     fn truncated_and_padded_payloads_are_malformed() {
         let req = NetRequest { id: 1, body: RequestBody::Search {
-            tenant: "t".into(), k: 5, query: vec![1.0, 2.0] } };
+            tenant: "t".into(), k: 5, query: vec![1.0, 2.0],
+            filter: Some(Filter::TagEq(7)) } };
         let frame = encode_request(&req);
         let payload = strip_frame(&frame);
         for cut in PAYLOAD_PRELUDE..payload.len() {
             assert!(decode_request(&payload[..cut]).is_err(),
                     "cut at {cut}");
         }
+        // bytes after a complete TLV are still a trailer error
         let mut padded = payload.to_vec();
         padded.push(0);
         assert_eq!(decode_request(&padded),
                    Err(ProtoError::Malformed("request trailer")));
+        // a stray byte after a filterless body lands in TLV position:
+        // 0x00 is no known TLV tag, so it is malformed there instead
+        let req = NetRequest { id: 1, body: RequestBody::Search {
+            tenant: "t".into(), k: 5, query: vec![1.0, 2.0],
+            filter: None } };
+        let frame = encode_request(&req);
+        let mut padded = strip_frame(&frame).to_vec();
+        padded.push(0);
+        assert_eq!(decode_request(&padded),
+                   Err(ProtoError::Malformed("search filter tag")));
+        // non-search bodies keep the plain trailer check
+        let req = NetRequest { id: 2, body: RequestBody::Delete {
+            tenant: "t".into(), ids: vec![4] } };
+        let mut padded = strip_frame(&encode_request(&req)).to_vec();
+        padded.push(0);
+        assert_eq!(decode_request(&padded),
+                   Err(ProtoError::Malformed("request trailer")));
+    }
+
+    #[test]
+    fn absent_filter_tlv_reproduces_the_pre_predicate_bytes() {
+        // compatibility pin: a filterless SEARCH body must end exactly
+        // after the query floats — the predicate feature adds zero
+        // bytes unless used
+        let req = NetRequest { id: 9, body: RequestBody::Search {
+            tenant: "abc".into(), k: 5, query: vec![1.0, 2.0],
+            filter: None } };
+        let payload_len = strip_frame(&encode_request(&req)).len();
+        assert_eq!(payload_len,
+                   PAYLOAD_PRELUDE + 2 + 3 + 4 + 4 + 2 * 4);
+        // and the TLV costs exactly 9 bytes when present
+        let req = NetRequest { id: 9, body: RequestBody::Search {
+            tenant: "abc".into(), k: 5, query: vec![1.0, 2.0],
+            filter: Some(Filter::TagEq(0)) } };
+        assert_eq!(strip_frame(&encode_request(&req)).len(),
+                   payload_len + 9);
     }
 
     #[test]

@@ -579,11 +579,12 @@ fn dispatch(shared: &Shared, wtx: &SyncSender<Vec<u8>>,
     inflight.fetch_add(1, Ordering::SeqCst);
 
     let request = match req.body {
-        RequestBody::Search { k, query, .. } => {
+        RequestBody::Search { k, query, filter, .. } => {
             Request::Search(SearchRequest {
                 id,
                 query,
                 k: k as usize,
+                filter,
                 submitted: Instant::now(),
                 resp: search_tx.clone(),
             })

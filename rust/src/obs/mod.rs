@@ -150,6 +150,10 @@ pub struct Registry {
     // 1-bit sketch prefilter (index/scan.rs)
     pub prefilter_admitted: Counter,
     pub prefilter_rejected: Counter,
+    // metadata predicate filter (index/filter.rs, exec/plan.rs): rows
+    // skipped before selection, and bitmaps compiled per plan
+    pub filter_rows_pruned: Counter,
+    pub filter_bitmaps_built: Counter,
     // IVF routing (ivf/search.rs)
     pub ivf_lists_probed: Counter,
     pub ivf_residual_luts: Counter,
@@ -212,6 +216,9 @@ impl Registry {
                  c(&self.simd_dispatch_scalar)),
                 ("prefilter.admitted".into(), c(&self.prefilter_admitted)),
                 ("prefilter.rejected".into(), c(&self.prefilter_rejected)),
+                ("filter.rows_pruned".into(), c(&self.filter_rows_pruned)),
+                ("filter.bitmaps_built".into(),
+                 c(&self.filter_bitmaps_built)),
                 ("ivf.lists_probed".into(), c(&self.ivf_lists_probed)),
                 ("ivf.residual_luts".into(), c(&self.ivf_residual_luts)),
                 ("wal.appends".into(), c(&self.wal_appends)),

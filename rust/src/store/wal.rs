@@ -7,9 +7,9 @@
 //! file   := header record*
 //! header := "UNQWAL01" stride:u32le flags:u32le          (16 bytes)
 //! record := len:u32le crc32:u32le payload[len]
-//! payload:= 0x01 id:u32le list:u32le code[stride]        insert
-//!         | 0x02 id:u32le                                delete
-//!         | 0x03 seg_id:u64le                            seal
+//! payload:= 0x01 id:u32le list:u32le tag:u64le code[stride]   insert
+//!         | 0x02 id:u32le                                     delete
+//!         | 0x03 seg_id:u64le                                 seal
 //! ```
 //!
 //! Appends are buffered and fsync'd in batches: [`Wal::append`] syncs
@@ -37,7 +37,7 @@ const MAGIC: &[u8; 8] = b"UNQWAL01";
 /// Header length: magic + stride + flags.
 pub const HEADER_LEN: u64 = 16;
 /// Upper bound on one record's payload — far above any real record
-/// (1 + 8 + stride bytes), so a corrupt length field can't trigger a
+/// (1 + 16 + stride bytes), so a corrupt length field can't trigger a
 /// giant allocation during replay.
 const MAX_RECORD: usize = 1 << 20;
 
@@ -49,9 +49,10 @@ const KIND_SEAL: u8 = 3;
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WalRecord {
     /// A row was appended to the active segment: external id, routed
-    /// list (0 for unrouted indexes), and its encoded code bytes —
+    /// list (0 for unrouted indexes), its metadata tag (0 for untagged
+    /// inserts — rust/DESIGN.md §13), and its encoded code bytes —
     /// replay never re-encodes, so recovery needs no quantizer.
-    Insert { id: u32, list: u32, code: Vec<u8> },
+    Insert { id: u32, list: u32, tag: u64, code: Vec<u8> },
     /// An external id was tombstoned.
     Delete { id: u32 },
     /// The active segment was sealed as `seg_id`; replay seals at the
@@ -62,11 +63,12 @@ pub enum WalRecord {
 impl WalRecord {
     fn payload(&self) -> Vec<u8> {
         match self {
-            WalRecord::Insert { id, list, code } => {
-                let mut p = Vec::with_capacity(9 + code.len());
+            WalRecord::Insert { id, list, tag, code } => {
+                let mut p = Vec::with_capacity(17 + code.len());
                 p.push(KIND_INSERT);
                 p.extend_from_slice(&id.to_le_bytes());
                 p.extend_from_slice(&list.to_le_bytes());
+                p.extend_from_slice(&tag.to_le_bytes());
                 p.extend_from_slice(code);
                 p
             }
@@ -89,11 +91,12 @@ impl WalRecord {
     /// size that doesn't match it), which replay treats as a tear.
     fn parse(payload: &[u8], stride: usize) -> Option<WalRecord> {
         match payload.first()? {
-            &KIND_INSERT if payload.len() == 9 + stride => {
+            &KIND_INSERT if payload.len() == 17 + stride => {
                 Some(WalRecord::Insert {
                     id: u32::from_le_bytes(payload[1..5].try_into().ok()?),
                     list: u32::from_le_bytes(payload[5..9].try_into().ok()?),
-                    code: payload[9..].to_vec(),
+                    tag: u64::from_le_bytes(payload[9..17].try_into().ok()?),
+                    code: payload[17..].to_vec(),
                 })
             }
             &KIND_DELETE if payload.len() == 5 => {
@@ -334,11 +337,13 @@ mod tests {
             WalRecord::Insert {
                 id: 0,
                 list: 0,
+                tag: 0,
                 code: (0..stride as u8).collect(),
             },
             WalRecord::Insert {
                 id: 1,
                 list: 3,
+                tag: u64::MAX,
                 code: vec![0xAB; stride],
             },
             WalRecord::Delete { id: 0 },
@@ -346,6 +351,7 @@ mod tests {
             WalRecord::Insert {
                 id: 2,
                 list: u32::MAX,
+                tag: 0xDEAD_BEEF,
                 code: vec![0x11; stride],
             },
         ]

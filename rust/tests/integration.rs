@@ -194,6 +194,7 @@ fn backpressure_rejects_when_overloaded() {
                 id: server.next_id(),
                 query: c.query.row(0).to_vec(),
                 k: 5,
+                filter: None,
                 submitted: std::time::Instant::now(),
                 resp: tx,
             });

@@ -18,7 +18,7 @@ use unq::config::{NetConfig, ScanPrecision, SearchConfig, ServeConfig,
                   StreamConfig, TenantQuota};
 use unq::coordinator::pipeline::Server;
 use unq::data::{synthetic::Generator, Dataset, Family};
-use unq::index::{CompressedIndex, StreamingIndex};
+use unq::index::{CompressedIndex, Filter, StreamingIndex};
 use unq::ivf::disk::DiskIvfIndex;
 use unq::ivf::{CoarseQuantizer, IndexBackend, IvfIndex};
 use unq::net::proto::{encode_frame, encode_request, read_frame, ErrorCode,
@@ -167,7 +167,7 @@ fn tcp_results_bit_identical_across_backends_and_precisions() {
                 .map(|qi| {
                     cl.send(RequestBody::Search {
                         tenant: String::new(), k: 10,
-                        query: c.query.row(qi).to_vec(),
+                        query: c.query.row(qi).to_vec(), filter: None,
                     }).expect("pipelined send")
                 })
                 .collect();
@@ -217,7 +217,7 @@ fn saturated_server_sheds_typed_overload_and_recovers() {
     for _ in 0..BURST {
         cl.send(RequestBody::Search {
             tenant: String::new(), k: 10,
-            query: c.query.row(0).to_vec(),
+            query: c.query.row(0).to_vec(), filter: None,
         }).expect("pipelined send");
     }
     let (mut ok, mut shed) = (0usize, 0usize);
@@ -254,7 +254,8 @@ fn torn_frame_closes_the_connection_cleanly() {
     let frame = encode_request(&NetRequest {
         id: 1,
         body: RequestBody::Search { tenant: String::new(), k: 5,
-                                    query: c.query.row(0).to_vec() },
+                                    query: c.query.row(0).to_vec(),
+                                    filter: None },
     });
     s.write_all(&frame[..FRAME_HEADER + 4]).unwrap();
     s.shutdown(Shutdown::Write).unwrap();
@@ -331,7 +332,7 @@ fn disconnect_mid_pipeline_leaves_the_server_serving() {
         for _ in 0..10 {
             cl.send(RequestBody::Search {
                 tenant: String::new(), k: 10,
-                query: c.query.row(0).to_vec(),
+                query: c.query.row(0).to_vec(), filter: None,
             }).unwrap();
         }
         // vanish with ten requests in flight
@@ -563,6 +564,56 @@ fn mutating_ops_roundtrip_and_frozen_backends_decline() {
     stop(st);
 }
 
+// ------------------------------------------------------------- filtering
+
+/// The SEARCH filter TLV is honored end to end: a tagged backend
+/// serves only admitted ids over TCP, bit-identical to the in-process
+/// filtered result, while the filterless frame keeps serving the
+/// unfiltered ranking on the same connection.
+#[test]
+fn filter_tlv_is_honored_end_to_end_over_tcp() {
+    let c = corpus(1500, 4);
+    let pq = train_pq(&c);
+    let mut index = CompressedIndex::build(&pq, &c.base);
+    index.set_tags((0..c.base.len() as u64).map(|i| i % 2).collect());
+    let st = start(pq, IndexBackend::Flat(Arc::new(index)),
+                   SearchConfig { rerank_l: 64, k: 10,
+                                  ..Default::default() },
+                   serve_cfg(), net_cfg());
+    let mut cl = client(&st);
+    for qi in 0..c.query.len() {
+        let q = c.query.row(qi);
+        let want = st.server
+            .search_blocking_filtered(q, 10, Some(Filter::TagEq(1)))
+            .unwrap().neighbors;
+        let got = match cl
+            .search_filtered("", q, 10, Some(Filter::TagEq(1)))
+            .unwrap().body
+        {
+            ResponseBody::SearchOk { neighbors } => neighbors,
+            other => panic!("query {qi}: {other:?}"),
+        };
+        assert_eq!(got, want, "query {qi}: TCP vs in-process");
+        assert!(!got.is_empty() && got.iter().all(|id| id % 2 == 1),
+                "query {qi}: only odd-tagged rows admitted: {got:?}");
+        // the filterless frame on the same connection is unaffected
+        let plain = cl.search_ids("", q, 10).unwrap();
+        let unfiltered =
+            st.server.search_blocking(q, 10).unwrap().neighbors;
+        assert_eq!(plain, unfiltered, "query {qi}: filterless frame");
+    }
+    // a predicate admitting no rows answers empty, not an error
+    match cl.search_filtered("", c.query.row(0), 10,
+                             Some(Filter::TagEq(42))).unwrap().body {
+        ResponseBody::SearchOk { neighbors } => {
+            assert!(neighbors.is_empty(), "selectivity 0: {neighbors:?}");
+        }
+        other => panic!("selectivity 0: {other:?}"),
+    }
+    drop(cl);
+    stop(st);
+}
+
 // -------------------------------------------------------------- doc sync
 
 /// Every opcode and error code in PROTOCOL.md's tables must match a
@@ -607,4 +658,11 @@ fn protocol_doc_tables_pin_the_wire_enums() {
     assert_eq!(doc, want,
                "PROTOCOL.md tables and net::proto enums diverged — \
                 update them together");
+
+    // the SEARCH filter TLV is spec'd in prose rather than a code
+    // table; pin its tag byte to the doc the same way
+    let tlv = format!("`0x{:02x}` (`FILTER_TAG_EQ`)",
+                      unq::net::proto::FILTER_TAG_EQ);
+    assert!(md.contains(&tlv),
+            "PROTOCOL.md must spec the filter TLV tag as {tlv}");
 }

@@ -221,12 +221,13 @@ fn e2e_obs_families_move_on_the_write_and_read_path() {
                              shard_rows: 64, ..Default::default() };
     let qs: Vec<&[f32]> =
         (0..queries.len()).map(|qi| queries.row(qi)).collect();
-    let ks = vec![cfg.k; qs.len()];
+    let req = unq::index::SearchRequest::from_config(
+        &cfg, vec![cfg.k; qs.len()]);
     // observability must be a read-only side channel: the same batch
     // with and without a live trace returns bit-identical ids
-    let want = ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+    let want = ix.search_batch_on(&pq, &exec, &qs, &req);
     let (trace, root_span) = unq::obs::Trace::begin("query");
-    let got = ix.search_batch_on(&pq, &exec, &qs, &ks, &cfg);
+    let got = ix.search_batch_on(&pq, &exec, &qs, &req);
     drop(root_span);
     assert_eq!(got, want, "tracing changed streaming search results");
 
